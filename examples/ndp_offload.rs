@@ -1,0 +1,62 @@
+//! GPU-NDP deployment scenario (paper §4.3 case study 2).
+//!
+//! Serves the same workload on the GPU-NDP testbed under MoNDE (fp16
+//! near-data experts) and BEAM (low-bit near-data + router-guided top-n
+//! compensation on the GPU), then prints where the bytes and the time went
+//! on each device — making the paper's "hybrid execution with lower
+//! bandwidth demand" claim inspectable.
+//!
+//! ```sh
+//! cargo run --release --example ndp_offload [model]
+//! ```
+
+use anyhow::Result;
+use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::ServeEngine;
+use beam_moe::manifest::{Manifest, WeightStore};
+use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model_name = args.get(1).map(|s| s.as_str()).unwrap_or("mixtral-tiny");
+    let engine = Arc::new(Engine::cpu()?);
+    let manifest = Manifest::load(format!("artifacts/{model_name}"))?;
+    let top_n = manifest.model.top_n;
+
+    println!("== GPU-NDP offloading: {model_name} (NDP 512 GB/s, scaled) ==\n");
+    let policies: Vec<(&str, PolicyConfig)> = vec![
+        ("monde(fp16-ndp)", PolicyConfig::new(PolicyKind::Monde, 16, 0)),
+        ("beam(int3)", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
+        ("beam(int2)", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+    ];
+
+    for (name, policy) in policies {
+        let model = StagedModel::load(
+            Arc::clone(&engine),
+            Manifest::load(format!("artifacts/{model_name}"))?,
+        )?;
+        let sys = SystemConfig::scaled_for(&model.manifest.model, true);
+        let mut se = ServeEngine::new(model, policy, sys)?;
+        let eval = WeightStore::load(se.model.manifest.eval_path())?;
+        let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 256, 64), &eval)?;
+        let r = serve(&mut se, requests)?;
+        println!("{name}");
+        println!("  {:.2} tok/s (virtual)", r.tokens_per_second());
+        let b = &r.breakdown;
+        println!(
+            "  time: gpu-experts {:.4}s | ndp-experts {:.4}s | weight-xfer {:.4}s | comp-xfer {:.4}s | act-xfer {:.4}s",
+            b.expert_compute_s, b.ndp_compute_s, b.transfer_weights_s, b.transfer_comp_s, b.transfer_act_s
+        );
+        println!(
+            "  bytes: weights {} | compensators {} | activations {}\n",
+            r.bytes.get("expert_weights").unwrap_or(&0),
+            r.bytes.get("compensator").unwrap_or(&0),
+            r.bytes.get("activations").unwrap_or(&0),
+        );
+    }
+    println!("(paper: BEAM gains 4.75-6.69x over MoNDE by running non-restored experts low-bit near-data)");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Router dynamics inspection (paper Fig. 2 + Fig. 3 live).
+//!
+//! Decodes one sequence with routing tracing enabled and prints the
+//! per-step expert activation heat-map, the expert-set switch rate per
+//! layer (Fig. 2's "irregular activation"), and the calibration-set router
+//! score distribution (Fig. 3) from the artifacts.
+//!
+//! ```sh
+//! cargo run --release --example router_stats [model]
+//! ```
+
+use anyhow::Result;
+use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::ServeEngine;
+use beam_moe::jsonx::Value;
+use beam_moe::manifest::{Manifest, WeightStore};
+use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::workload::{DecodeTrace, WorkloadConfig, WorkloadGen};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model_name = args.get(1).map(|s| s.as_str()).unwrap_or("mixtral-tiny");
+
+    let engine = Arc::new(Engine::cpu()?);
+    let model = StagedModel::load(engine, Manifest::load(format!("artifacts/{model_name}"))?)?;
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let mut se = ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n), sys)?;
+    se.trace = Some(DecodeTrace::default());
+
+    let eval = WeightStore::load(se.model.manifest.eval_path())?;
+    let requests = WorkloadGen::generate(&WorkloadConfig::offline(1, 64, 40), &eval)?;
+    serve(&mut se, requests)?;
+    let trace = se.trace.take().unwrap();
+
+    println!("== expert activation over decode steps (layer 0, '#'=dominant '+'=secondary) ==");
+    for (step, row) in trace.activation_matrix(0, dims.n_experts).iter().enumerate().take(24) {
+        let cells: String = row
+            .iter()
+            .map(|&w| match w {
+                w if w > 0.5 => '#',
+                w if w > 0.25 => '+',
+                w if w > 0.0 => '.',
+                _ => ' ',
+            })
+            .collect();
+        println!("  step {step:>3} |{cells}|");
+    }
+    for l in 0..dims.n_layers {
+        println!("  layer {l}: switch rate {:.2}", trace.switch_rate(l));
+    }
+
+    println!("\n== router score distribution (Fig. 3, from calibration) ==");
+    let raw = std::fs::read_to_string(format!("artifacts/{model_name}/router_stats.json"))?;
+    let stats = Value::parse(&raw)?;
+    let mean = stats.get("mean_over_layers")?.f64_vec()?;
+    for (rank, m) in mean.iter().enumerate().take(dims.top_k.max(4)) {
+        println!("  rank-{rank} mean score: {m:.3}");
+    }
+    let t1 = stats.get("top1_range")?.f64_vec()?;
+    println!("  top-1 share across layers: {:.2}..{:.2}", t1[0], t1[1]);
+    Ok(())
+}

@@ -1,0 +1,571 @@
+"""AOT artifact builder — the single entry point of the python build path.
+
+``python -m compile.aot --out-dir ../artifacts`` produces, per model config:
+
+    artifacts/<model>/
+      weights_fp32.npz     training checkpoint (trained here on first run)
+      weights.beamw        runtime tensors: fp32 stage weights + packed
+                           quantized experts (hqq/gptq × 2/3/4-bit) +
+                           low-rank compensators (default + ablation sweep)
+      eval.beamw           held-out/calibration token sets for rust evals
+      router_stats.json    Fig. 3 data (router score distribution)
+      kurtosis.json        Fig. 4b data (kurtosis vs quant error, ranks)
+      manifest.json        stage/tensor/transfer-byte index for rust
+      <stage>.hlo.txt      one AOT-lowered HLO text per inference stage
+
+HLO *text* is the interchange format (NOT serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Python never runs at serve time: the rust binary consumes these files only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import beamw
+from .compensate import (
+    Compensator,
+    allocate_ranks,
+    allocate_uniform,
+    build_compensator_from_svd,
+    kurtosis,
+)
+from .corpus import CALIB_SEQS, CALIB_START, SyntheticCorpus, VAL_SEQS, VAL_START
+from .model import (
+    CONFIGS,
+    ModelConfig,
+    forward_train,
+    stage_attn_decode,
+    stage_attn_prefill,
+    stage_embed,
+    stage_expert_fp16,
+    stage_expert_quant,
+    stage_expert_quant_comp,
+    stage_head,
+    stage_router,
+    rmsnorm,
+    router_probs,
+)
+from .quant import quantize_gptq, quantize_hqq
+from .quant.packing import container_bits, packed_nbytes, to_container
+from .quant.uniform import QuantParams, dequantize, relative_residual_fro
+from .train import load_or_train
+
+PROJS = ("w1", "w2", "w3")
+QUANT_BITS = (2, 3, 4)
+COMP_BITS = (2, 3)
+ABLATION_BUDGETS = (4, 8, 16, 32)
+CALIB_TOKENS_GPTQ = 4096
+V_GROUP = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Calibration
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=0)
+def _forward_collect_xn(cfg: ModelConfig, params, tokens):
+    """Forward pass capturing the MoE input (xn) per layer.
+
+    Duplicates only the attention wiring of `forward_train` (pinned against
+    it by python/tests/test_model.py::test_collect_matches_train).
+    """
+    b, t = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]
+    pos = jnp.arange(t)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    xns = []
+    for layer in params["layers"]:
+        xn = rmsnorm(x, layer["ln1"])
+        from .model import rope  # local import to keep module top tidy
+
+        q = rope((xn @ layer["wq"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        k = rope((xn @ layer["wk"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        v = (xn @ layer["wv"]).reshape(b, t, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, axis=-1), v)
+        x = x + attn.reshape(b, t, d) @ layer["wo"]
+
+        xn = rmsnorm(x, layer["ln2"])
+        xns.append(xn.reshape(-1, d))
+        probs = router_probs(xn, layer["gate"])
+        from .model import topk_mask_renorm
+
+        w = topk_mask_renorm(probs, cfg.top_k)
+        gate_h = jnp.einsum("btd,edf->ebtf", xn, layer["w1"])
+        up_h = jnp.einsum("btd,edf->ebtf", xn, layer["w3"])
+        ey = jnp.einsum("ebtf,efd->ebtd", jax.nn.silu(gate_h) * up_h, layer["w2"])
+        moe = jnp.einsum("bte,ebtd->btd", w, ey)
+        if cfg.n_shared:
+            sg = jnp.einsum("btd,edf->ebtf", xn, layer["sw1"])
+            su = jnp.einsum("btd,edf->ebtf", xn, layer["sw3"])
+            moe = moe + jnp.einsum("ebtf,efd->btd", jax.nn.silu(sg) * su, layer["sw2"])
+        x = x + moe
+    return jnp.stack(xns)  # (L, B*T, d)
+
+
+def collect_calibration(cfg: ModelConfig, params, corpus: SyntheticCorpus, n_tokens: int):
+    """Per-layer MoE-input activations + router probs over the calib split."""
+    per_batch, batch_seqs = 16 * 64, 16
+    xns, probs = [], [[] for _ in range(cfg.n_layers)]
+    start = CALIB_START
+    collected = 0
+    while collected < n_tokens:
+        tokens, _ = corpus.batch(start, batch_seqs)
+        xn = np.asarray(_forward_collect_xn(cfg, params, jnp.asarray(tokens)))
+        xns.append(xn)
+        for li in range(cfg.n_layers):
+            p = np.asarray(router_probs(jnp.asarray(xn[li]), params["layers"][li]["gate"]))
+            probs[li].append(p)
+        start += batch_seqs
+        collected += per_batch
+    xns = np.concatenate(xns, axis=1)[:, :n_tokens]  # (L, n, d)
+    probs = [np.concatenate(p, axis=0)[:n_tokens] for p in probs]  # L × (n, E)
+    return xns, probs
+
+
+def router_statistics(probs_per_layer: list[np.ndarray]) -> dict:
+    """Fig. 3: mean/std routing score by sorted rank position, per layer."""
+    per_layer = []
+    for p in probs_per_layer:
+        s = np.sort(p, axis=-1)[:, ::-1]  # (n, E) descending
+        per_layer.append(
+            {
+                "mean": s.mean(axis=0).tolist(),
+                "std": s.std(axis=0).tolist(),
+                "top1_share": float(s[:, 0].mean()),
+            }
+        )
+    agg = np.stack([np.array(pl["mean"]) for pl in per_layer])
+    return {
+        "layers": per_layer,
+        "mean_over_layers": agg.mean(axis=0).tolist(),
+        "top1_range": [float(min(pl["top1_share"] for pl in per_layer)),
+                       float(max(pl["top1_share"] for pl in per_layer))],
+    }
+
+
+# --------------------------------------------------------------------------
+# Quantization products
+# --------------------------------------------------------------------------
+
+def quantize_model(cfg: ModelConfig, params, xns, quick: bool = False):
+    """HQQ + GPTQ quantize every expert projection; returns nested products.
+
+    products[(l, e, proj)] = {"fp32": W, "hqq2": QuantParams, ..., "gptq2": ...}
+    kurt[(l, e, proj)] = float
+    """
+    g = cfg.group_size
+    products: dict[tuple, dict] = {}
+    kurt: dict[tuple, float] = {}
+    methods = ("hqq",) if quick else ("hqq", "gptq")
+
+    for li, layer in enumerate(params["layers"]):
+        X = np.asarray(xns[li][:CALIB_TOKENS_GPTQ])  # (n, d) MoE input
+        for e in range(cfg.n_experts):
+            w1 = np.asarray(layer["w1"][e])
+            w2 = np.asarray(layer["w2"][e])
+            w3 = np.asarray(layer["w3"][e])
+            # w2's calibration input is this expert's post-SiLU hidden.
+            h = None
+            if "gptq" in methods:
+                xj = jnp.asarray(X[:2048])
+                h = np.asarray(
+                    jax.nn.silu(xj @ jnp.asarray(w1)) * (xj @ jnp.asarray(w3))
+                )
+            for proj, W, Xc in (("w1", w1, X), ("w2", w2, h), ("w3", w3, X)):
+                entry = {"fp32": W}
+                for bits in QUANT_BITS:
+                    entry[f"hqq{bits}"] = quantize_hqq(W, bits, g)
+                    if "gptq" in methods:
+                        entry[f"gptq{bits}"] = quantize_gptq(W, Xc, bits, g)
+                products[(li, e, proj)] = entry
+                kurt[(li, e, proj)] = kurtosis(W)
+    return products, kurt
+
+
+def build_all_compensators(cfg: ModelConfig, products, kurt, quick: bool = False):
+    """Rank allocation + residual SVDs for the default config and ablations.
+
+    Allocation population: every expert projection matrix of the model (the
+    paper's "each projection such as w1/w2/w3" reading); budget is
+    ``R_avg`` per matrix.  Returns comps[tag][bits][(l,e,proj)] and a
+    rank-table dict for the manifest.
+    """
+    keys = sorted(products.keys())
+    kvec = np.array([kurt[k] for k in keys])
+    max_rank = min(cfg.d_model, cfg.d_ff)
+
+    # Precompute residual SVDs once per (matrix, bits).
+    svds: dict[tuple, tuple] = {}
+    for k in keys:
+        for bits in COMP_BITS:
+            W = products[k]["fp32"]
+            E = W - dequantize(products[k][f"hqq{bits}"])
+            svds[(k, bits)] = np.linalg.svd(E.astype(np.float64), full_matrices=False)
+
+    def make(tag: str, bits: int, ranks: np.ndarray):
+        out = {}
+        for k, r in zip(keys, ranks):
+            out[k] = build_compensator_from_svd(
+                svds[(k, bits)], int(r), pad_to=cfg.rank_pad, v_group=V_GROUP
+            )
+        return out
+
+    comps: dict[str, dict[int, dict]] = {}
+    rank_table: dict[str, dict] = {}
+
+    # Default: kurtosis-guided at the model's R_avg, for each comp bit-width.
+    ranks_default = allocate_ranks(kvec, cfg.r_avg, cfg.rank_buckets, max_rank)
+    comps["default"] = {bits: make("default", bits, ranks_default) for bits in COMP_BITS}
+    rank_table["default"] = {"ranks": ranks_default.tolist(), "r_avg": cfg.r_avg}
+
+    if not quick:
+        # Ablation sweep (Fig. 8b): budgets × {kurtosis, uniform}, 2-bit.
+        for budget in ABLATION_BUDGETS:
+            rk = allocate_ranks(kvec, budget, cfg.rank_buckets, max_rank)
+            ru = allocate_uniform(len(keys), budget)
+            comps[f"r{budget}k"] = {2: make(f"r{budget}k", 2, rk)}
+            comps[f"r{budget}u"] = {2: make(f"r{budget}u", 2, ru)}
+            rank_table[f"r{budget}k"] = {"ranks": rk.tolist(), "r_avg": budget}
+            rank_table[f"r{budget}u"] = {"ranks": ru.tolist(), "r_avg": budget}
+
+    return comps, rank_table, keys
+
+
+# --------------------------------------------------------------------------
+# Tensor serialization
+# --------------------------------------------------------------------------
+
+def _quant_tensors(prefix: str, q: QuantParams) -> dict[str, np.ndarray]:
+    return {
+        f"{prefix}.pk": to_container(q.codes, q.bits),
+        f"{prefix}.sc": q.scale,
+        f"{prefix}.zp": q.zero,
+    }
+
+
+def _comp_tensors(prefix: str, c: Compensator) -> dict[str, np.ndarray]:
+    if c.rank == 0:
+        # Rank-0 still ships (exact-zero) padded factors so the comp
+        # executable stays usable; transfer bytes are 0.
+        raise ValueError("rank-0 compensators serialized via zero ranks table")
+    return {
+        f"{prefix}.up": to_container(c.u_q.codes, 3),
+        f"{prefix}.us": c.u_q.scale,
+        f"{prefix}.uz": c.u_q.zero,
+        f"{prefix}.vp": to_container(c.v_q.codes, 3),
+        f"{prefix}.vs": c.v_q.scale,
+        f"{prefix}.vz": c.v_q.zero,
+    }
+
+
+def _zero_comp_tensors(cfg: ModelConfig, prefix: str, proj: str) -> dict[str, np.ndarray]:
+    """Exact-zero padded compensator for rank-0 matrices (codes=0 @ scale 1)."""
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.rank_pad
+    d_in, d_out = (d, f) if proj in ("w1", "w3") else (f, d)
+    gu = d_in // min(64, d_in)
+    gv = r // V_GROUP
+    return {
+        f"{prefix}.up": np.zeros((d_in, r // 2), np.uint8),
+        f"{prefix}.us": np.ones((gu, r), np.float32),
+        f"{prefix}.uz": np.zeros((gu, r), np.float32),
+        f"{prefix}.vp": np.zeros((r, d_out // 2), np.uint8),
+        f"{prefix}.vs": np.ones((gv, d_out), np.float32),
+        f"{prefix}.vz": np.zeros((gv, d_out), np.float32),
+    }
+
+
+def serialize_weights(cfg, params, products, comps) -> dict[str, np.ndarray]:
+    tensors: dict[str, np.ndarray] = {
+        "emb": np.asarray(params["emb"]),
+        "ln_f": np.asarray(params["ln_f"]),
+    }
+    for li, layer in enumerate(params["layers"]):
+        for name in ("ln1", "wq", "wk", "wv", "wo", "ln2", "gate"):
+            tensors[f"layers.{li}.{name}"] = np.asarray(layer[name])
+        for s in range(cfg.n_shared):
+            for proj in PROJS:
+                tensors[f"layers.{li}.shared.{s}.{proj}"] = np.asarray(
+                    layer[f"s{proj}"][s]
+                )
+        for e in range(cfg.n_experts):
+            for proj in PROJS:
+                key = (li, e, proj)
+                base = f"layers.{li}.experts.{e}.{proj}"
+                tensors[f"{base}.fp32"] = products[key]["fp32"]
+                for variant, q in products[key].items():
+                    if variant == "fp32":
+                        continue
+                    tensors.update(_quant_tensors(f"{base}.{variant}", q))
+                for tag, by_bits in comps.items():
+                    for bits, table in by_bits.items():
+                        c = table[key]
+                        prefix = f"{base}.comp{bits}.{tag}"
+                        if c.rank == 0:
+                            tensors.update(_zero_comp_tensors(cfg, prefix, proj))
+                        else:
+                            tensors.update(_comp_tensors(prefix, c))
+    return tensors
+
+
+# --------------------------------------------------------------------------
+# Transfer-byte accounting (consumed by the rust link simulator)
+# --------------------------------------------------------------------------
+
+def transfer_tables(cfg: ModelConfig, products, comps, keys) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    n_params_expert = 3 * d * f
+    q_bytes = {}
+    for bits in QUANT_BITS:
+        q = products[keys[0]][f"hqq{bits}"]
+        meta_per_mat = {
+            "w1": (d // cfg.group_size) * f * 4,
+            "w2": (f // cfg.group_size) * d * 4,
+            "w3": (d // cfg.group_size) * f * 4,
+        }
+        q_bytes[str(bits)] = (
+            packed_nbytes(d * f, bits) * 2
+            + packed_nbytes(f * d, bits)
+            + sum(meta_per_mat.values())
+        )
+    comp_bytes = {}
+    for tag, by_bits in comps.items():
+        comp_bytes[tag] = {}
+        for bits, table in by_bits.items():
+            per_le = np.zeros((cfg.n_layers, cfg.n_experts), dtype=np.int64)
+            for (li, e, proj), c in table.items():
+                per_le[li, e] += c.transfer_nbytes()
+            comp_bytes[tag][str(bits)] = per_le.tolist()
+    return {
+        "fp16_expert_bytes": n_params_expert * 2,
+        "q_expert_bytes": q_bytes,
+        "comp_bytes": comp_bytes,
+    }
+
+
+# --------------------------------------------------------------------------
+# HLO stage export
+# --------------------------------------------------------------------------
+
+def stage_specs(cfg: ModelConfig) -> dict[str, tuple]:
+    """(callable, example-arg specs) per stage; N differs decode vs prefill."""
+    d, fdim, v, e = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_experts
+    h, dh, s, g, r = cfg.n_heads, cfg.d_head, cfg.s_max, cfg.group_size, cfg.rank_pad
+    B, T = cfg.b_max, cfg.t_prefill
+
+    def expert_quant_args(n, bits):
+        cb = container_bits(bits)
+        return (
+            f32(n, d),
+            u8(d, fdim * cb // 8), f32(d // g, fdim), f32(d // g, fdim),
+            u8(fdim, d * cb // 8), f32(fdim // g, d), f32(fdim // g, d),
+            u8(d, fdim * cb // 8), f32(d // g, fdim), f32(d // g, fdim),
+        )
+
+    def comp_args(d_in, d_out):
+        gu = d_in // min(64, d_in)
+        gv = r // V_GROUP
+        return (
+            u8(d_in, r // 2), f32(gu, r), f32(gu, r),
+            u8(r, d_out // 2), f32(gv, d_out), f32(gv, d_out),
+        )
+
+    stages = {
+        "embed_d": (stage_embed, (i32(B), f32(v, d))),
+        "embed_p": (stage_embed, (i32(T), f32(v, d))),
+        "attn_d": (
+            stage_attn_decode(cfg),
+            (f32(B, d), f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+             f32(B, h, s, dh), f32(B, h, s, dh), i32(B)),
+        ),
+        "attn_p": (
+            stage_attn_prefill(cfg),
+            (f32(T, d), f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d)),
+        ),
+        "router_d": (stage_router, (f32(B, d), f32(d), f32(d, e))),
+        "router_p": (stage_router, (f32(T, d), f32(d), f32(d, e))),
+        "head_d": (stage_head, (f32(B, d), f32(d), f32(v, d))),
+        # head over prefill rows: teacher-forced scoring (accuracy harness)
+        "head_p": (stage_head, (f32(T, d), f32(d), f32(v, d))),
+    }
+    for n, suffix in ((B, "d"), (T, "p")):
+        stages[f"expert_fp16_{suffix}"] = (
+            stage_expert_fp16,
+            (f32(n, d), f32(d, fdim), f32(fdim, d), f32(d, fdim)),
+        )
+        for bits in QUANT_BITS:
+            stages[f"expert_q{bits}_{suffix}"] = (
+                stage_expert_quant(cfg, container_bits(bits)),
+                expert_quant_args(n, bits),
+            )
+        for bits in COMP_BITS:
+            stages[f"expert_q{bits}c_{suffix}"] = (
+                stage_expert_quant_comp(cfg, container_bits(bits)),
+                expert_quant_args(n, bits)
+                + comp_args(d, fdim) + comp_args(fdim, d) + comp_args(d, fdim),
+            )
+    return stages
+
+
+def export_stages(cfg: ModelConfig, out: pathlib.Path) -> dict:
+    index = {}
+    for name, (fn, specs) in stage_specs(cfg).items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out / fname).write_text(text)
+        index[name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"  lowered {name:18s} {len(text)//1024:5d} KiB  {time.time()-t0:.1f}s")
+    return index
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, out_root: pathlib.Path, quick: bool = False):
+    out = out_root / cfg.name
+    out.mkdir(parents=True, exist_ok=True)
+    corpus = SyntheticCorpus()
+
+    print(f"[{cfg.name}] loading / training weights …")
+    params = load_or_train(cfg, out_root, steps=120 if quick else 600)
+
+    print(f"[{cfg.name}] calibration forward …")
+    n_calib = 2048 if quick else CALIB_SEQS * 64
+    xns, probs = collect_calibration(cfg, params, corpus, n_calib)
+    stats = router_statistics(probs)
+    (out / "router_stats.json").write_text(json.dumps(stats, indent=1))
+    print(f"  top-1 router share: {stats['top1_range']}")
+
+    print(f"[{cfg.name}] quantizing experts (hqq{'' if quick else '+gptq'} × {QUANT_BITS}) …")
+    products, kurt = quantize_model(cfg, params, xns, quick)
+
+    print(f"[{cfg.name}] building compensators …")
+    comps, rank_table, keys = build_all_compensators(cfg, products, kurt, quick)
+
+    # Fig. 4b data: kurtosis vs relative quant error per matrix.
+    fig4 = [
+        {
+            "key": f"{li}.{e}.{proj}",
+            "kurtosis": kurt[(li, e, proj)],
+            "err": {
+                str(b): relative_residual_fro(
+                    products[(li, e, proj)]["fp32"], products[(li, e, proj)][f"hqq{b}"]
+                )
+                for b in QUANT_BITS
+            },
+        }
+        for (li, e, proj) in keys
+    ]
+    (out / "kurtosis.json").write_text(json.dumps(fig4, indent=1))
+
+    print(f"[{cfg.name}] serializing weights …")
+    tensors = serialize_weights(cfg, params, products, comps)
+    beamw.write(out / "weights.beamw", tensors)
+
+    val_tokens, val_det = corpus.batch(VAL_START, VAL_SEQS)
+    calib_tokens, _ = corpus.batch(CALIB_START, 64)
+    beamw.write(
+        out / "eval.beamw",
+        {
+            "val_tokens": val_tokens.astype(np.int32),
+            "val_det": val_det.astype(np.int8),
+            "calib_tokens": calib_tokens.astype(np.int32),
+        },
+    )
+
+    print(f"[{cfg.name}] lowering stages …")
+    stage_index = export_stages(cfg, out)
+
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+            "n_shared": cfg.n_shared, "s_max": cfg.s_max,
+            "t_prefill": cfg.t_prefill, "b_max": cfg.b_max,
+            "group_size": cfg.group_size, "rank_pad": cfg.rank_pad,
+            "r_avg": cfg.r_avg, "top_n": cfg.top_n,
+        },
+        "stages": stage_index,
+        "quant": {
+            "methods": ["hqq"] if quick else ["hqq", "gptq"],
+            "bits": list(QUANT_BITS),
+            "comp_bits": list(COMP_BITS),
+            "container_bits": {str(b): container_bits(b) for b in QUANT_BITS},
+            "v_group": V_GROUP,
+        },
+        "comp_tags": {tag: sorted(by.keys()) for tag, by in comps.items()},
+        "rank_table": rank_table,
+        "mat_keys": [f"{li}.{e}.{proj}" for (li, e, proj) in keys],
+        "transfer": transfer_tables(cfg, products, comps, keys),
+        "files": {
+            "weights": "weights.beamw",
+            "eval": "eval.beamw",
+            "router_stats": "router_stats.json",
+            "kurtosis": "kurtosis.json",
+        },
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[{cfg.name}] done → {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(CONFIGS))
+    ap.add_argument("--quick", action="store_true",
+                    help="short training, hqq-only, no ablation sweep (CI)")
+    args = ap.parse_args()
+    out_root = pathlib.Path(args.out_dir)
+    for name in args.models:
+        build_model(CONFIGS[name], out_root, quick=args.quick)
+    (out_root / "MANIFEST").write_text(
+        json.dumps({"models": args.models, "quick": args.quick})
+    )
+
+
+if __name__ == "__main__":
+    main()

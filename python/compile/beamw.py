@@ -1,0 +1,80 @@
+"""BEAMW — the trivial binary tensor container shared by python and rust.
+
+Layout (little-endian):
+
+    magic   b"BEAMW001"                       (8 bytes)
+    hlen    u64: byte length of the header    (8 bytes)
+    header  JSON: {"tensors": [{"name", "dtype", "shape", "offset", "nbytes"}]}
+    blob    concatenated raw tensor bytes; offsets are blob-relative
+
+dtypes: "f32", "i32", "u8", "i8".  The rust reader is
+``rust/src/manifest.rs::WeightStore`` — a format change here must bump the
+magic and be mirrored there (pinned by an integration test over a golden
+file).  Chosen over npz to keep the rust side free of zip/ndarray deps.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+MAGIC = b"BEAMW001"
+
+_DTYPES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+    np.dtype(np.uint8): "u8",
+    np.dtype(np.int8): "i8",
+}
+_NP_DTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path: str | pathlib.Path, tensors: dict[str, np.ndarray]) -> None:
+    entries = []
+    offset = 0
+    blobs = []
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in _DTYPES:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.tobytes()
+        entries.append(
+            {
+                "name": name,
+                "dtype": _DTYPES[arr.dtype],
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            }
+        )
+        blobs.append(raw)
+        offset += len(raw)
+
+    header = json.dumps({"tensors": entries}).encode()
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read(path: str | pathlib.Path) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r}")
+        hlen = int.from_bytes(f.read(8), "little")
+        header = json.loads(f.read(hlen))
+        blob = f.read()
+    out = {}
+    for e in header["tensors"]:
+        raw = blob[e["offset"] : e["offset"] + e["nbytes"]]
+        out[e["name"]] = np.frombuffer(raw, dtype=_NP_DTYPES[e["dtype"]]).reshape(
+            e["shape"]
+        ).copy()
+    return out

@@ -1,0 +1,235 @@
+"""Offline low-rank compensation pipeline (paper §3.1).
+
+Step 1 — kurtosis-guided rank allocation: compute the (Pearson) kurtosis of
+every expert weight matrix, sort descending, and greedily hand out the
+largest feasible rank bucket under the global average budget ``R_avg``.
+
+Step 2 — one-time SVD: quantize with HQQ, take the residual
+``E = W − Q⁻¹(Q(W))``, truncated-SVD it at the allocated rank, fold in
+``√S`` on both sides, and 3-bit-quantize the factors (the compensator that
+crosses the link is itself low-bit).
+
+The output of this module (a :class:`Compensator` per weight matrix) is what
+``aot.py`` serializes into ``artifacts/`` for the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .quant.uniform import QuantParams, quantize_uniform, dequantize
+from .quant.packing import packed_nbytes
+
+#: Paper bucket set (§3.1).  Tiny-model builds pass a scaled-down set — the
+#: greedy policy is bucket-set agnostic.
+PAPER_BUCKETS = (0, 16, 32, 128, 256, 512, 1024)
+
+
+def kurtosis(W: np.ndarray) -> float:
+    """Pearson kurtosis over all elements (paper eq. in §3.1; ≈3 for Gaussian)."""
+    W = np.asarray(W, dtype=np.float64).ravel()
+    mu = W.mean()
+    sigma2 = W.var()
+    if sigma2 <= 1e-24:
+        return 0.0
+    return float(np.mean((W - mu) ** 4) / sigma2**2)
+
+
+def allocate_ranks(
+    kurtoses: np.ndarray,
+    r_avg: int,
+    buckets: tuple[int, ...] = PAPER_BUCKETS,
+    max_rank: int | None = None,
+) -> np.ndarray:
+    """Greedy kurtosis-guided bucket assignment (paper §3.1 step 1).
+
+    Sort experts by descending kurtosis; walking the sorted list, give each
+    expert the largest bucket that keeps ``sum(r) <= N * r_avg``.  Experts
+    with equal kurtosis are ordered by index for determinism.
+
+    ``max_rank`` clamps buckets to ``min(m, n)`` of the matrices involved
+    (relevant for the tiny reproduction models).
+    """
+    kurtoses = np.asarray(kurtoses, dtype=np.float64)
+    n = kurtoses.shape[0]
+    budget = int(n * r_avg)
+    feasible = sorted({b for b in buckets if max_rank is None or b <= max_rank})
+    if not feasible or feasible[0] != 0:
+        feasible = [0] + feasible
+
+    order = np.lexsort((np.arange(n), -kurtoses))  # desc kurtosis, asc index
+    ranks = np.zeros(n, dtype=np.int64)
+    spent = 0
+    for idx in order:
+        # Largest bucket that still fits the remaining global budget.
+        for b in reversed(feasible):
+            if spent + b <= budget:
+                ranks[idx] = b
+                spent += b
+                break
+    return ranks
+
+
+def allocate_uniform(n_experts: int, r_avg: int) -> np.ndarray:
+    """Uniform assignment baseline (paper Fig. 8b ablation)."""
+    return np.full(n_experts, r_avg, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class Compensator:
+    """Low-rank residual compensator for one weight matrix.
+
+    ``U`` is (d_in, r), ``V`` is (r, d_out) after the √S reparameterization;
+    both are stored 3-bit quantized (``u_q``/``v_q``) — that is what crosses
+    the PCIe/NDP link at inference time.  ``rank == 0`` is a valid empty
+    compensator (zero bytes, identity restore).
+
+    When ``pad_to`` was given at build time the stored factors are zero-padded
+    to a fixed ``pad_to`` columns/rows so that *one* AOT executable (whose
+    shapes are static) serves every rank bucket; padding columns quantize
+    exactly to zero (they get their own per-column scale/zero) and contribute
+    nothing to ``U@V``.  Bandwidth accounting always uses the *true* rank.
+    """
+
+    rank: int
+    u_q: QuantParams | None
+    v_q: QuantParams | None
+    d_in: int = 0
+    d_out: int = 0
+
+    def factors(self) -> tuple[np.ndarray, np.ndarray]:
+        """Dequantized (U, V) as the runtime reconstructs them."""
+        if self.rank == 0:
+            raise ValueError("rank-0 compensator has no factors")
+        return dequantize(self.u_q), dequantize(self.v_q)
+
+    def delta(self) -> np.ndarray:
+        """The weight-space correction ``U @ V`` this compensator applies."""
+        if self.rank == 0:
+            raise ValueError("rank-0 compensator has no factors")
+        u, v = self.factors()
+        return u @ v
+
+    def transfer_nbytes(self) -> int:
+        """Bytes on the wire: 3-bit packed factors + fp16 scale/zero meta.
+
+        Charged on the *true* rank — padding introduced for executable-shape
+        reuse never crosses the link (the runtime ships true-rank factors and
+        zero-extends on device, a free operation).
+        """
+        if self.rank == 0:
+            return 0
+        n_u = self.d_in * self.rank
+        n_v = self.rank * self.d_out
+        total = packed_nbytes(_pad8(n_u), 3) + packed_nbytes(_pad8(n_v), 3)
+        # fp16 scale+zero for the true-rank factor groups.
+        g_u = self.u_q.scale.shape[0]
+        g_v = max(1, self.rank // max(1, self.v_q.group_size))
+        total += (g_u * self.rank) * 2 * 2 + (g_v * self.d_out) * 2 * 2
+        return total
+
+
+def _pad8(n: int) -> int:
+    """Round code count up to the 8-code chunk of the 3-bit codec."""
+    return (n + 7) // 8 * 8
+
+
+def _factor_group_size(rows: int, preferred: int = 64) -> int:
+    """Largest group size ≤ preferred that divides ``rows`` (ranks can be tiny)."""
+    g = min(preferred, rows)
+    while rows % g != 0:
+        g -= 1
+    return g
+
+
+def build_compensator(
+    W: np.ndarray,
+    q: QuantParams,
+    rank: int,
+    factor_bits: int = 3,
+    factor_group: int = 64,
+    pad_to: int | None = None,
+    v_group: int = 4,
+) -> Compensator:
+    """Truncated-SVD residual compensator (paper §3.1 step 2).
+
+    ``E = W − Q⁻¹(Q(W))``;  ``U, S, Vᵀ = SVD_r(E)``;  ``U ← U√S, V ← √S Vᵀ``;
+    then 3-bit quantize both factors.
+
+    ``pad_to`` zero-pads the float factors to a fixed rank before
+    quantization so all compensators of a model share one executable shape
+    (padded columns/rows quantize exactly to zero — see class docstring).
+    ``v_group`` must divide every rank bucket so padded V rows fall in
+    all-zero groups and stay exact.
+    """
+    E = np.asarray(W, dtype=np.float32) - dequantize(q)
+    svd = np.linalg.svd(E.astype(np.float64), full_matrices=False)
+    return build_compensator_from_svd(
+        svd, rank,
+        factor_bits=factor_bits, factor_group=factor_group,
+        pad_to=pad_to, v_group=v_group,
+    )
+
+
+def build_compensator_from_svd(
+    svd: tuple[np.ndarray, np.ndarray, np.ndarray],
+    rank: int,
+    factor_bits: int = 3,
+    factor_group: int = 64,
+    pad_to: int | None = None,
+    v_group: int = 4,
+) -> Compensator:
+    """Same as :func:`build_compensator` from a precomputed residual SVD.
+
+    ``aot.py`` sweeps many rank budgets over the same residual; the SVD is
+    computed once per (matrix, bit-width) and sliced here per budget.
+    """
+    U, S, Vt = svd
+    d_in, d_out = U.shape[0], Vt.shape[1]
+    rank = int(min(rank, d_in, d_out))
+    if rank == 0:
+        return Compensator(rank=0, u_q=None, v_q=None, d_in=d_in, d_out=d_out)
+
+    U, S, Vt = U[:, :rank], S[:rank], Vt[:rank, :]
+    sqrt_s = np.sqrt(S)
+    Uf = (U * sqrt_s[None, :]).astype(np.float32)  # (d_in, r)
+    Vf = (sqrt_s[:, None] * Vt).astype(np.float32)  # (r, d_out)
+
+    stored_rank = rank
+    if pad_to is not None:
+        if pad_to < rank:
+            raise ValueError(f"pad_to={pad_to} < rank={rank}")
+        if rank % v_group != 0:
+            raise ValueError(f"rank {rank} not a multiple of v_group {v_group}")
+        stored_rank = pad_to
+        Uf = np.pad(Uf, ((0, 0), (0, pad_to - rank)))
+        Vf = np.pad(Vf, ((0, pad_to - rank), (0, 0)))
+
+    u_q = quantize_uniform(Uf, factor_bits, _factor_group_size(Uf.shape[0], factor_group))
+    v_q = quantize_uniform(Vf, factor_bits, min(v_group, stored_rank))
+    return Compensator(rank=rank, u_q=u_q, v_q=v_q, d_in=d_in, d_out=d_out)
+
+
+def compensated_weight(q: QuantParams, comp: Compensator) -> np.ndarray:
+    """Runtime restore: ``Ŵ = Q⁻¹(Q(W)) + U V`` (paper §3.2)."""
+    W = dequantize(q)
+    if comp.rank > 0:
+        W = W + comp.delta()
+    return W
+
+
+def residual_curve(W: np.ndarray, q: QuantParams, ranks: list[int]) -> list[float]:
+    """‖E − UV‖_F/‖W‖_F at each rank — regenerates paper Fig. 4a."""
+    W = np.asarray(W, dtype=np.float32)
+    E = W - dequantize(q)
+    U, S, Vt = np.linalg.svd(E.astype(np.float64), full_matrices=False)
+    wnorm = float(np.linalg.norm(W)) or 1.0
+    out = []
+    for r in ranks:
+        r = int(min(r, S.shape[0]))
+        # ‖E − E_r‖_F² = Σ_{i>r} σ_i²  (Eckart–Young)
+        tail = float(np.sqrt((S[r:] ** 2).sum()))
+        out.append(tail / wnorm)
+    return out

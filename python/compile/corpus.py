@@ -1,0 +1,152 @@
+"""Deterministic synthetic corpus with learnable structure.
+
+Stands in for the paper's natural-language data (C4 calibration, WikiText
+perplexity, commonsense-reasoning suites — DESIGN.md §3 substitutions).  The
+generator produces token sequences from a small probabilistic grammar over a
+{vocab_size}-token vocabulary:
+
+* **templated clauses** — SUBJ VERB OBJ [ADV] with *agreement rules*
+  (each subject class selects a verb class; each verb class selects an
+  object class), so a model must learn long-range conditional structure;
+* **copy/arithmetic motifs** — ``<rep> a b a b``, ``<cnt> k k+1 k+2``
+  patterns with exactly-predictable continuations;
+* **zipfian filler** unigrams, making token frequencies realistic.
+
+Because several token positions are *fully determined* by their prefix, the
+corpus supports a cloze accuracy metric (predict the determined token) that
+degrades smoothly with model quality — our stand-in for the paper's
+zero-shot reasoning accuracy.  Perplexity on held-out sequences stands in
+for WikiText PPL.
+
+Everything is seeded; python (training/eval) and rust (serving workloads,
+accuracy harness) regenerate identical streams from the token dumps written
+by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Special tokens
+PAD, BOS, EOS, SEP, REP, CNT = 0, 1, 2, 3, 4, 5
+N_SPECIAL = 6
+
+# Vocabulary regions (within vocab_size=512)
+N_SUBJ, N_VERB, N_OBJ, N_ADV = 48, 48, 48, 32
+N_CLASSES = 8  # agreement classes
+
+
+@dataclasses.dataclass
+class CorpusConfig:
+    vocab_size: int = 512
+    seq_len: int = 64
+    seed: int = 1234
+    p_clause: float = 0.55
+    p_motif: float = 0.25  # rep/cnt motifs
+    # remainder: zipfian filler
+
+
+class SyntheticCorpus:
+    """Seeded generator; every batch is a pure function of (seed, counter)."""
+
+    def __init__(self, cfg: CorpusConfig | None = None):
+        self.cfg = cfg or CorpusConfig()
+        v = self.cfg.vocab_size
+        base = N_SPECIAL
+        self.subj = np.arange(base, base + N_SUBJ)
+        self.verb = np.arange(base + N_SUBJ, base + N_SUBJ + N_VERB)
+        self.obj = np.arange(base + N_SUBJ + N_VERB, base + N_SUBJ + N_VERB + N_OBJ)
+        self.adv = np.arange(
+            base + N_SUBJ + N_VERB + N_OBJ, base + N_SUBJ + N_VERB + N_OBJ + N_ADV
+        )
+        self.filler = np.arange(base + N_SUBJ + N_VERB + N_OBJ + N_ADV, v)
+        # Zipf weights for filler tokens.
+        ranks = np.arange(1, len(self.filler) + 1, dtype=np.float64)
+        self.filler_p = (1.0 / ranks) / (1.0 / ranks).sum()
+        # Deterministic agreement maps: subj class -> verb class -> obj class.
+        rng = np.random.default_rng(self.cfg.seed * 7 + 3)
+        self.subj_to_verb_class = rng.permutation(N_CLASSES)
+        self.verb_to_obj_class = rng.permutation(N_CLASSES)
+
+    # -- helpers ---------------------------------------------------------
+    def _class_of(self, tok_region: np.ndarray, tok: int) -> int:
+        return int(np.where(tok_region == tok)[0][0]) % N_CLASSES
+
+    def _pick(self, rng, region: np.ndarray, cls: int) -> int:
+        members = region[cls::N_CLASSES]
+        return int(rng.choice(members))
+
+    def _clause(self, rng) -> tuple[list[int], list[int]]:
+        """Returns (tokens, determined_mask) for one agreement clause.
+
+        The object token's *class* is fully determined by the verb; we mark
+        the object position as cloze-predictable (class-level: the eval
+        checks the predicted token falls in the correct class region+class).
+        """
+        s = int(rng.choice(self.subj))
+        s_cls = self._class_of(self.subj, s)
+        v_cls = int(self.subj_to_verb_class[s_cls])
+        v = self._pick(rng, self.verb, v_cls)
+        o_cls = int(self.verb_to_obj_class[v_cls])
+        o = self._pick(rng, self.obj, o_cls)
+        toks, det = [s, v, o], [0, 1, 1]
+        if rng.random() < 0.4:
+            toks.append(int(rng.choice(self.adv)))
+            det.append(0)
+        toks.append(SEP)
+        det.append(0)
+        return toks, det
+
+    def _motif(self, rng) -> tuple[list[int], list[int]]:
+        if rng.random() < 0.5:
+            a, b = rng.choice(self.filler, size=2, replace=False)
+            toks = [REP, int(a), int(b), int(a), int(b), int(a), SEP]
+            det = [0, 0, 0, 1, 1, 1, 0]
+        else:
+            k = int(rng.integers(0, len(self.filler) - 4))
+            f = self.filler
+            toks = [CNT, int(f[k]), int(f[k + 1]), int(f[k + 2]), int(f[k + 3]), SEP]
+            det = [0, 0, 1, 1, 1, 0]
+        return toks, det
+
+    def _filler_run(self, rng) -> tuple[list[int], list[int]]:
+        n = int(rng.integers(2, 6))
+        toks = [int(t) for t in rng.choice(self.filler, size=n, p=self.filler_p)]
+        toks.append(SEP)
+        return toks, [0] * (n + 1)
+
+    # -- public API ------------------------------------------------------
+    def sequence(self, index: int) -> tuple[np.ndarray, np.ndarray]:
+        """Deterministic sequence #index: (tokens[seq_len], determined[seq_len])."""
+        rng = np.random.default_rng((self.cfg.seed, index))
+        toks, det = [BOS], [0]
+        while len(toks) < self.cfg.seq_len:
+            r = rng.random()
+            if r < self.cfg.p_clause:
+                t, d = self._clause(rng)
+            elif r < self.cfg.p_clause + self.cfg.p_motif:
+                t, d = self._motif(rng)
+            else:
+                t, d = self._filler_run(rng)
+            toks.extend(t)
+            det.extend(d)
+        toks = np.array(toks[: self.cfg.seq_len], dtype=np.int32)
+        det = np.array(det[: self.cfg.seq_len], dtype=np.int8)
+        return toks, det
+
+    def batch(self, start: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+        seqs, dets = zip(*(self.sequence(start + i) for i in range(n)))
+        return np.stack(seqs), np.stack(dets)
+
+    def object_class_members(self, tok: int) -> np.ndarray:
+        """All object tokens in the same agreement class as ``tok`` (for cloze)."""
+        cls = self._class_of(self.obj, tok)
+        return self.obj[cls::N_CLASSES]
+
+
+# Canonical dataset splits used across python/rust (index ranges).
+TRAIN_START, TRAIN_SEQS = 0, 4096
+VAL_START, VAL_SEQS = 100_000, 256
+CALIB_START, CALIB_SEQS = 200_000, 1280  # 1280*64 ≈ 80K calibration tokens (Fig. 3)

@@ -1,0 +1,277 @@
+"""Accuracy evaluation of quantization variants (build-time oracle).
+
+Evaluates held-out perplexity and cloze accuracy (DESIGN.md §3: stand-ins
+for WikiText PPL and the commonsense/MMLU suites) for every quantization
+variant the paper's Fig. 6 / Fig. 8 / Table 2 compare:
+
+* ``fp16``            — unquantized experts (upper bound)
+* ``hqq{2,3,4}``      — uniform HQQ, no compensation
+* ``gptq{2,3,4}``     — uniform GPTQ baseline
+* ``ours{2,3}[:tag[:positions]]`` — HQQ + router-guided low-rank restore.
+  ``tag`` picks the compensator set (``default``, ``r8k``, ``r8u`` …);
+  ``positions`` is the restored router-rank set, e.g. ``0`` (top-1), ``0-2``
+  (top-3), ``1`` (ONLY the 2nd-ranked expert — Table 2), ``3-5``.
+
+The "ours" forward computes both the quantized and the compensated output of
+every activated expert and selects per (token, expert) according to the
+router rank — exactly the semantics the rust coordinator implements with
+selective transfers; the two paths are pinned against each other by
+integration tests.  The rust `figure fig6` harness regenerates these numbers
+via staged PJRT execution; this module is the fast full-set oracle.
+
+Usage:  python -m compile.eval mixtral-tiny fp16 hqq2 ours2 …  (from python/)
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import beamw
+from .corpus import SyntheticCorpus
+from .model import CONFIGS, ModelConfig, rmsnorm, rope, router_probs
+from .quant.packing import unpack_codes
+from .train import unflatten_params
+
+V_GROUP = 4
+
+
+# --------------------------------------------------------------------------
+# Variant weight reconstruction from artifacts
+# --------------------------------------------------------------------------
+
+def _dequant_from_store(t, prefix: str, cbits: int, n_out: int, group: int):
+    codes = unpack_codes(t[f"{prefix}.pk"], cbits, n_out)
+    scale, zero = t[f"{prefix}.sc"], t[f"{prefix}.zp"]
+    g = codes.shape[0] // group
+    deq = (codes.astype(np.float32).reshape(g, group, n_out) - zero[:, None, :]) * scale[:, None, :]
+    return deq.reshape(codes.shape)
+
+
+def _comp_delta_from_store(t, prefix: str, rank_pad: int, d_in: int, d_out: int):
+    u = _dequant_from_store_factor(t, prefix, "u", rank_pad, d_in)
+    v = _dequant_from_store_factor(t, prefix, "v", d_out, rank_pad)
+    return u @ v
+
+
+def _dequant_from_store_factor(t, prefix, which, n_out, d_in):
+    codes = unpack_codes(t[f"{prefix}.{which}p"], 4, n_out)
+    scale, zero = t[f"{prefix}.{which}s"], t[f"{prefix}.{which}z"]
+    group = d_in // scale.shape[0]
+    g = scale.shape[0]
+    deq = (codes.astype(np.float32).reshape(g, group, n_out) - zero[:, None, :]) * scale[:, None, :]
+    return deq.reshape(d_in, n_out)
+
+
+def load_variant_weights(
+    cfg: ModelConfig, tensors: dict, manifest: dict, variant: str
+):
+    """Returns (expert_weights, comp_deltas, positions).
+
+    expert_weights: per layer, dict proj -> (E, d_in, d_out) float32.
+    comp_deltas: same shape or None (uniform variants / fp16).
+    positions: sorted router-rank positions to restore, or None.
+    """
+    cb = manifest["quant"]["container_bits"]
+    g = cfg.group_size
+    d, f = cfg.d_model, cfg.d_ff
+    dims = {"w1": (d, f), "w2": (f, d), "w3": (d, f)}
+
+    parts = variant.split(":")
+    name = parts[0]
+    comp_tag, positions = None, None
+    if name == "fp16":
+        method = "fp32"
+    elif name.startswith("ours"):
+        bits = int(name[4:])
+        method = f"hqq{bits}"
+        comp_tag = parts[1] if len(parts) > 1 else "default"
+        pos_spec = parts[2] if len(parts) > 2 else f"0-{cfg.top_n - 1}"
+        if "-" in pos_spec:
+            lo, hi = pos_spec.split("-")
+            positions = list(range(int(lo), int(hi) + 1))
+        else:
+            positions = [int(pos_spec)]
+    else:
+        method = name  # hqq{b} / gptq{b}
+
+    weights, deltas = [], []
+    for li in range(cfg.n_layers):
+        wl, dl = {}, {}
+        for proj, (d_in, d_out) in dims.items():
+            mats, dmats = [], []
+            for e in range(cfg.n_experts):
+                base = f"layers.{li}.experts.{e}.{proj}"
+                if method == "fp32":
+                    mats.append(tensors[f"{base}.fp32"])
+                else:
+                    bits = int(method[-1])
+                    mats.append(
+                        _dequant_from_store(t=tensors, prefix=f"{base}.{method}",
+                                            cbits=cb[str(bits)], n_out=d_out, group=g)
+                    )
+                if comp_tag is not None:
+                    bits = int(method[-1])
+                    dmats.append(
+                        _comp_delta_from_store(
+                            tensors, f"{base}.comp{bits}.{comp_tag}",
+                            cfg.rank_pad, d_in, d_out,
+                        )
+                    )
+            wl[proj] = np.stack(mats)
+            if dmats:
+                dl[proj] = np.stack(dmats)
+        weights.append(wl)
+        deltas.append(dl if dl else None)
+    return weights, (deltas if comp_tag else None), positions
+
+
+# --------------------------------------------------------------------------
+# Variant forward (dense experts + per-token compensation selection)
+# --------------------------------------------------------------------------
+
+def forward_variant(
+    cfg: ModelConfig,
+    params,
+    expert_weights,
+    comp_deltas,
+    positions,
+    tokens: jnp.ndarray,
+):
+    """Teacher-forced forward with substituted expert weights.
+
+    Attention / router / norms run at full precision (only experts are
+    offloaded+quantized in the paper).  When ``comp_deltas`` is given, a
+    (token, expert) pair uses the compensated weights iff the expert's
+    router *rank* for that token is in ``positions``.
+    """
+    b, t = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]
+    pos = jnp.arange(t)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+
+    for li, layer in enumerate(params["layers"]):
+        xn = rmsnorm(x, layer["ln1"])
+        q = rope((xn @ layer["wq"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        k = rope((xn @ layer["wk"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        v = (xn @ layer["wv"]).reshape(b, t, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, axis=-1), v)
+        x = x + attn.reshape(b, t, d) @ layer["wo"]
+
+        xn = rmsnorm(x, layer["ln2"])
+        probs = router_probs(xn, layer["gate"])  # (B,T,E)
+        top_vals = jax.lax.top_k(probs, cfg.top_k)[0]
+        w = jnp.where(probs >= top_vals[..., -1:], probs, 0.0)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+        ew = expert_weights[li]
+
+        def expert_out(w1, w2, w3):
+            gh = jnp.einsum("btd,edf->ebtf", xn, w1)
+            uh = jnp.einsum("btd,edf->ebtf", xn, w3)
+            return jnp.einsum("ebtf,efd->ebtd", jax.nn.silu(gh) * uh, w2)
+
+        y_q = expert_out(
+            jnp.asarray(ew["w1"]), jnp.asarray(ew["w2"]), jnp.asarray(ew["w3"])
+        )
+        if comp_deltas is not None:
+            cd = comp_deltas[li]
+            y_c = expert_out(
+                jnp.asarray(ew["w1"] + cd["w1"]),
+                jnp.asarray(ew["w2"] + cd["w2"]),
+                jnp.asarray(ew["w3"] + cd["w3"]),
+            )
+            # Router rank of each expert per token: rank[b,t,e] ∈ [0, E).
+            order = jnp.argsort(-probs, axis=-1)
+            rank = jnp.argsort(order, axis=-1)
+            restore = jnp.zeros(probs.shape, bool)
+            for p in positions:
+                restore = restore | (rank == p)
+            # Restoration only matters for *activated* experts (w > 0);
+            # non-selected experts contribute nothing either way.
+            y_sel = jnp.where(restore.transpose(2, 0, 1)[..., None], y_c, y_q)
+        else:
+            y_sel = y_q
+        moe = jnp.einsum("bte,ebtd->btd", w, y_sel)
+        if cfg.n_shared:
+            sg = jnp.einsum("btd,edf->ebtf", xn, layer["sw1"])
+            su = jnp.einsum("btd,edf->ebtf", xn, layer["sw3"])
+            moe = moe + jnp.einsum("ebtf,efd->btd", jax.nn.silu(sg) * su, layer["sw2"])
+        x = x + moe
+
+    return rmsnorm(x, params["ln_f"]) @ params["emb"].T
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+
+def evaluate_variant(
+    cfg: ModelConfig,
+    artifacts: pathlib.Path,
+    variant: str,
+    max_seqs: int | None = None,
+) -> dict:
+    tensors = beamw.read(artifacts / cfg.name / "weights.beamw")
+    manifest = json.loads((artifacts / cfg.name / "manifest.json").read_text())
+    evald = beamw.read(artifacts / cfg.name / "eval.beamw")
+    flat = dict(np.load(artifacts / cfg.name / "weights_fp32.npz"))
+    params = unflatten_params(cfg, flat)
+
+    weights, deltas, positions = load_variant_weights(cfg, tensors, manifest, variant)
+    tokens = evald["val_tokens"]
+    det = evald["val_det"]
+    if max_seqs:
+        tokens, det = tokens[:max_seqs], det[:max_seqs]
+
+    fwd = jax.jit(
+        lambda toks: forward_variant(cfg, params, weights, deltas, positions, toks)
+    )
+
+    nll_sum, nll_n, cloze_hit, cloze_n = 0.0, 0, 0, 0
+    bs = 32
+    for i in range(0, tokens.shape[0], bs):
+        tb = jnp.asarray(tokens[i : i + bs])
+        db = det[i : i + bs]
+        logits = np.asarray(fwd(tb))
+        logp = logits - np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1, keepdims=True)) - logits.max(-1, keepdims=True)
+        tgt = tokens[i : i + bs, 1:]
+        lp = np.take_along_axis(logp[:, :-1], tgt[..., None], axis=-1)[..., 0]
+        nll_sum += float(-lp.sum())
+        nll_n += lp.size
+        pred = logits[:, :-1].argmax(-1)
+        mask = db[:, 1:] > 0
+        cloze_hit += int(((pred == tgt) & mask).sum())
+        cloze_n += int(mask.sum())
+
+    return {
+        "model": cfg.name,
+        "variant": variant,
+        "ppl": float(np.exp(nll_sum / nll_n)),
+        "cloze_acc": cloze_hit / max(cloze_n, 1),
+        "n_seqs": int(tokens.shape[0]),
+    }
+
+
+def main():
+    args = sys.argv[1:]
+    model = args[0]
+    variants = args[1:] or ["fp16", "hqq2", "hqq3", "ours2", "ours3"]
+    cfg = CONFIGS[model]
+    artifacts = pathlib.Path("../artifacts")
+    for v in variants:
+        r = evaluate_variant(cfg, artifacts, v)
+        print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""L1 — Pallas kernels for BEAM's compute hot path.
+
+All kernels are built with ``interpret=True`` (DESIGN.md §Hardware-
+Adaptation): real-TPU lowering emits Mosaic custom-calls the CPU PJRT plugin
+cannot execute, so correctness is validated through the interpret path while
+TPU efficiency is *estimated* from BlockSpec VMEM footprints (see
+EXPERIMENTS.md §Perf).
+
+Kernels
+-------
+quant_matmul      packed low-bit dequant-matmul, group-wise (scale, zero)
+lowrank_delta     (x·U)·V low-rank activation-space correction, INT-packed factors
+expert            fused SwiGLU MoE expert (fp16 and quantized variants)
+attention         decode-step attention over a KV cache
+
+``ref.py`` holds the pure-jnp oracles each kernel is pinned against in
+``python/tests/``.
+"""
+
+from .quant_matmul import quant_matmul
+from .lowrank import lowrank_delta
+from .expert import expert_fp16, expert_quant, expert_quant_comp
+from .attention import decode_attention
+
+__all__ = [
+    "quant_matmul",
+    "lowrank_delta",
+    "expert_fp16",
+    "expert_quant",
+    "expert_quant_comp",
+    "decode_attention",
+]

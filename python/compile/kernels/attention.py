@@ -1,0 +1,64 @@
+"""Decode-step attention kernel over a KV cache.
+
+One query token per sequence slot attends to its cache prefix.  Grid is
+``(batch, heads)``; each step stages one head's ``(S, dh)`` K and V panels
+into VMEM, computes masked scores against the single query row, applies a
+numerically-stable softmax, and contracts with V.  ``lengths`` (how much of
+each slot's cache is valid) arrives as a scalar-prefetch-style small operand;
+masking uses an iota comparison so the kernel is shape-static.
+
+The tiny-model caches (S ≤ 320, dh ≤ 64) fit a single VMEM block per head;
+for longer S this kernel would tile over the S axis with an online softmax
+(flash-style) — noted in DESIGN.md §Perf as the TPU scaling path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, s_max, scale):
+    q = q_ref[0, 0, :]  # (dh,)
+    k = k_ref[0, 0, :, :]  # (S, dh)
+    v = v_ref[0, 0, :, :]  # (S, dh)
+    n = len_ref[0, 0]  # valid prefix length for this slot
+
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (S,)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (s_max,), 0)
+    scores = jnp.where(pos < n, scores, -jnp.inf)
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    o_ref[0, 0, :] = jnp.dot(e, v, preferred_element_type=jnp.float32) / jnp.sum(e)
+
+
+def decode_attention(
+    q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray, lengths: jnp.ndarray
+) -> jnp.ndarray:
+    """Single-token attention: ``q`` (B, H, dh), caches (B, H, S, dh), ``lengths`` (B,).
+
+    Returns (B, H, dh).  Cache positions ≥ ``lengths[b]`` are masked out, so
+    slots may carry stale garbage beyond their valid prefix (the rust KV
+    manager relies on this: freed slots are reused without zeroing).
+    """
+    b, h, dh = q.shape
+    s_max = k_cache.shape[2]
+    lens = jnp.broadcast_to(lengths[:, None], (b, h)).astype(jnp.int32)
+
+    kernel = functools.partial(_attn_kernel, s_max=s_max, scale=1.0 / (dh**0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, s_max, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s_max, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, lens)

@@ -1,0 +1,257 @@
+"""Fused SwiGLU MoE expert kernels (fp16 reference and quantized hot path).
+
+An expert is the Mixtral FFN:  ``y = (silu(x·W1) ⊙ (x·W3)) · W2`` with
+``W1, W3 ∈ (d, f)`` and ``W2 ∈ (f, d)``.
+
+Structure (two pallas calls, DESIGN.md §Hardware-Adaptation):
+
+* **up kernel** — grid over ``f`` tiles.  Each step stages the matching W1
+  and W3 tiles (packed, for the quant variant), dequants both in VMEM, and
+  writes ``h_tile = silu(x·W1_t) ⊙ (x·W3_t)``.  Fusing gate and up halves
+  the activation traffic vs two separate matmuls — the moral equivalent of
+  the paper's fused dequant-GEMM CUDA kernel.
+* **down kernel** — ``h·W2``, which is exactly `quant_matmul` (or a plain
+  tiled matmul for fp16); reused rather than re-implemented.
+
+The low-rank compensation delta is *not* fused here: it is a separate
+`lowrank_delta` call so that L3 can decide per token whether to apply it
+(that decision is the paper's contribution and lives in rust).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_matmul import quant_matmul, unpack_container, dequant_block
+
+
+def _up_fp16_kernel(x_ref, w1_ref, w3_ref, h_ref):
+    x = x_ref[...]
+    gate = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    h_ref[...] = jax.nn.silu(gate) * up
+
+
+def _down_fp16_kernel(h_ref, w2_ref, o_ref):
+    o_ref[...] = jnp.dot(h_ref[...], w2_ref[...], preferred_element_type=jnp.float32)
+
+
+def expert_fp16(
+    x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray,
+    *, tile: int | None = None,
+) -> jnp.ndarray:
+    """Full-precision SwiGLU expert (baseline path and training parity check)."""
+    b, d = x.shape
+    f = w1.shape[1]
+    t = tile or min(f, 256)
+    assert f % t == 0
+
+    h = pl.pallas_call(
+        _up_fp16_kernel,
+        grid=(f // t,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, t), lambda i: (0, i)),
+            pl.BlockSpec((d, t), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        interpret=True,
+    )(x, w1, w3)
+
+    td = min(d, 256)
+    return pl.pallas_call(
+        _down_fp16_kernel,
+        grid=(d // td,),
+        in_specs=[
+            pl.BlockSpec((b, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, td), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, td), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(h, w2)
+
+
+def _up_quant_kernel(
+    x_ref, w1_ref, s1_ref, z1_ref, w3_ref, s3_ref, z3_ref, h_ref,
+    *, cbits, group_size, tile,
+):
+    x = x_ref[...]
+    w1 = dequant_block(
+        unpack_container(w1_ref[...], cbits, tile), s1_ref[...], z1_ref[...], group_size
+    )
+    w3 = dequant_block(
+        unpack_container(w3_ref[...], cbits, tile), s3_ref[...], z3_ref[...], group_size
+    )
+    gate = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    h_ref[...] = jax.nn.silu(gate) * up
+
+
+def expert_quant(
+    x: jnp.ndarray,
+    w1_packed, w1_scale, w1_zero,
+    w2_packed, w2_scale, w2_zero,
+    w3_packed, w3_scale, w3_zero,
+    *,
+    cbits: int,
+    group_size: int,
+    d_ff: int,
+    d_out: int,
+    tile: int | None = None,
+) -> jnp.ndarray:
+    """Quantized SwiGLU expert: fused dequant gate/up, then dequant down-proj.
+
+    This is the kernel every *non-compensated* expert executes (on GPU or on
+    the NDP device); compensated experts add a `lowrank_delta` on top.
+    """
+    b, d = x.shape
+    cpb = 8 // cbits
+    t = tile or min(d_ff, 256)
+    assert d_ff % t == 0 and t % cpb == 0
+    g = d // group_size
+
+    kernel = functools.partial(
+        _up_quant_kernel, cbits=cbits, group_size=group_size, tile=t
+    )
+    h = pl.pallas_call(
+        kernel,
+        grid=(d_ff // t,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, t // cpb), lambda i: (0, i)),
+            pl.BlockSpec((g, t), lambda i: (0, i)),
+            pl.BlockSpec((g, t), lambda i: (0, i)),
+            pl.BlockSpec((d, t // cpb), lambda i: (0, i)),
+            pl.BlockSpec((g, t), lambda i: (0, i)),
+            pl.BlockSpec((g, t), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d_ff), jnp.float32),
+        interpret=True,
+    )(x, w1_packed, w1_scale, w1_zero, w3_packed, w3_scale, w3_zero)
+
+    return quant_matmul(
+        h, w2_packed, w2_scale, w2_zero,
+        cbits=cbits, group_size=group_size, d_out=d_out,
+    )
+
+
+FACTOR_CBITS = 4  # compensator factors: INT3 codes in 4-bit containers
+
+
+def _up_quant_comp_kernel(
+    x_ref,
+    w1_ref, s1_ref, z1_ref, u1p_ref, u1s_ref, u1z_ref, v1p_ref, v1s_ref, v1z_ref,
+    w3_ref, s3_ref, z3_ref, u3p_ref, u3s_ref, u3z_ref, v3p_ref, v3s_ref, v3z_ref,
+    h_ref,
+    *, cbits, group_size, tile, rank, u_group, v_group,
+):
+    """Fused gate/up with low-rank restoration on the pre-activations.
+
+    Per output tile t:  ``g_t = x·W1_t + (x·U1)·V1_t`` (same for up/W3).
+    ``U`` (d, r) stays VMEM-resident across the grid; only the ``V`` tile
+    moves.  The correction is applied *before* the SiLU nonlinearity — the
+    activation-space shortcut is only valid for linear maps, so compensation
+    of W1/W3 must happen here rather than on the expert output (DESIGN.md §7).
+    """
+    x = x_ref[...]
+
+    def corrected(w_ref, s_ref, z_ref, up_ref, us_ref, uz_ref, vp_ref, vs_ref, vz_ref):
+        w = dequant_block(
+            unpack_container(w_ref[...], cbits, tile), s_ref[...], z_ref[...], group_size
+        )
+        u = dequant_block(
+            unpack_container(up_ref[...], FACTOR_CBITS, rank),
+            us_ref[...], uz_ref[...], u_group,
+        )
+        v = dequant_block(
+            unpack_container(vp_ref[...], FACTOR_CBITS, tile),
+            vs_ref[...], vz_ref[...], v_group,
+        )
+        base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        xu = jnp.dot(x, u, preferred_element_type=jnp.float32)
+        return base + jnp.dot(xu, v, preferred_element_type=jnp.float32)
+
+    gate = corrected(w1_ref, s1_ref, z1_ref, u1p_ref, u1s_ref, u1z_ref, v1p_ref, v1s_ref, v1z_ref)
+    up = corrected(w3_ref, s3_ref, z3_ref, u3p_ref, u3s_ref, u3z_ref, v3p_ref, v3s_ref, v3z_ref)
+    h_ref[...] = jax.nn.silu(gate) * up
+
+
+def expert_quant_comp(
+    x: jnp.ndarray,
+    w1, w2, w3,  # each: (packed, scale, zero) tuples
+    c1, c2, c3,  # each: (u_packed, u_scale, u_zero, v_packed, v_scale, v_zero)
+    *,
+    cbits: int,
+    group_size: int,
+    d_ff: int,
+    d_out: int,
+    rank: int,
+    v_group: int = 4,
+    tile: int | None = None,
+) -> jnp.ndarray:
+    """Compensated quantized expert:  ``Ŵi = Q⁻¹(Q(Wi)) + Ui·Vi`` for i∈{1,2,3}.
+
+    This is the executable the *top-n* experts run after their compensators
+    are fetched (paper §3.2).  ``rank`` is the padded executable rank
+    (`compensate.build_compensator(pad_to=...)`); true per-matrix ranks are
+    smaller and the padding columns are exact zeros.
+
+    The w2 (down-proj) correction uses the activation-space form
+    ``h·Ŵ2 = quant_matmul(h) + lowrank_delta(h)`` — reusing the two tested
+    kernels instead of a third fused variant.
+    """
+    from .lowrank import lowrank_delta
+
+    b, d = x.shape
+    cpb = 8 // cbits
+    t = tile or min(d_ff, 256)
+    assert d_ff % t == 0 and t % cpb == 0
+    g = d // group_size
+    u_group = min(group_size, d)
+    gu = d // u_group
+    gv = rank // v_group
+
+    kernel = functools.partial(
+        _up_quant_comp_kernel,
+        cbits=cbits, group_size=group_size, tile=t,
+        rank=rank, u_group=u_group, v_group=v_group,
+    )
+    fcpb = 8 // FACTOR_CBITS
+    rpb = rank // fcpb  # packed bytes per U row (4-bit factor container)
+
+    def proj_specs():
+        return [
+            pl.BlockSpec((d, t // cpb), lambda i: (0, i)),   # W packed tile
+            pl.BlockSpec((g, t), lambda i: (0, i)),          # scale
+            pl.BlockSpec((g, t), lambda i: (0, i)),          # zero
+            pl.BlockSpec((d, rpb), lambda i: (0, 0)),        # U packed (resident)
+            pl.BlockSpec((gu, rank), lambda i: (0, 0)),
+            pl.BlockSpec((gu, rank), lambda i: (0, 0)),
+            pl.BlockSpec((rank, t // fcpb), lambda i: (0, i)),  # V packed tile
+            pl.BlockSpec((gv, t), lambda i: (0, i)),
+            pl.BlockSpec((gv, t), lambda i: (0, i)),
+        ]
+
+    h = pl.pallas_call(
+        kernel,
+        grid=(d_ff // t,),
+        in_specs=[pl.BlockSpec((b, d), lambda i: (0, 0))] + proj_specs() + proj_specs(),
+        out_specs=pl.BlockSpec((b, t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d_ff), jnp.float32),
+        interpret=True,
+    )(x, *w1, *c1, *w3, *c3)
+
+    y = quant_matmul(
+        h, *w2, cbits=cbits, group_size=group_size, d_out=d_out
+    )
+    return y + lowrank_delta(
+        h, *c2, rank=rank, d_out=d_out, cbits=FACTOR_CBITS,
+        u_group=min(group_size, d_ff), v_group=v_group,
+    )

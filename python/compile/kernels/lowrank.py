@@ -1,0 +1,91 @@
+"""Low-rank compensation delta kernel: ``Δy = (x · U) · V``.
+
+This is the *runtime* half of the paper's contribution (§3.2).  Because the
+compensated weight ``Ŵ = Q⁻¹(Q(W)) + U V`` enters the layer linearly, the
+restoration can be applied in activation space:
+
+    y_restored = x · Ŵ = x · Q⁻¹(Q(W))  +  (x · U) · V
+                 └── quant_matmul ──┘     └── this kernel ──┘
+
+which avoids materializing Ŵ (an ``m×n`` write + re-read per token batch)
+and costs only ``O(r(m+n))`` — the same reason the compensator is cheap on
+the wire makes it cheap on the MXU.  The ablation bench
+``hotpath_delta_vs_reconstruct`` quantifies this against explicit weight
+reconstruction.
+
+Factors arrive 3-bit quantized in 4-bit containers with their own group-wise
+(scale, zero); both stages dequant in-VMEM.  Ranks are ≤128 for the tiny
+models (≤1024 in the paper), so ``x·U`` stays resident between the two
+matmuls — a single-block kernel with no grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_matmul import unpack_container, dequant_block
+
+
+def _delta_kernel(
+    x_ref, up_ref, us_ref, uz_ref, vp_ref, vs_ref, vz_ref, o_ref,
+    *, cbits, rank, d_out, u_group, v_group,
+):
+    x = x_ref[...]  # (B, d_in)
+    u = dequant_block(
+        unpack_container(up_ref[...], cbits, rank), us_ref[...], uz_ref[...], u_group
+    )  # (d_in, r)
+    v = dequant_block(
+        unpack_container(vp_ref[...], cbits, d_out), vs_ref[...], vz_ref[...], v_group
+    )  # (r, d_out)
+    xu = jnp.dot(x, u, preferred_element_type=jnp.float32)  # (B, r) — VMEM-resident
+    o_ref[...] = jnp.dot(xu, v, preferred_element_type=jnp.float32)
+
+
+def lowrank_delta(
+    x: jnp.ndarray,
+    u_packed: jnp.ndarray,
+    u_scale: jnp.ndarray,
+    u_zero: jnp.ndarray,
+    v_packed: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    v_zero: jnp.ndarray,
+    *,
+    rank: int,
+    d_out: int,
+    cbits: int = 4,
+    u_group: int | None = None,
+    v_group: int | None = None,
+) -> jnp.ndarray:
+    """Compute the activation-space correction ``(x @ U) @ V``.
+
+    Shapes: ``x`` (B, d_in); ``u_packed`` (d_in, rank·cbits/8);
+    ``v_packed`` (rank, d_out·cbits/8); metadata per quant group as in
+    `quant_matmul`.  Group sizes are inferred from the metadata shapes when
+    not given (ranks can be smaller than the default group of 64).
+    """
+    b, d_in = x.shape
+    if u_group is None:
+        u_group = d_in // u_scale.shape[0]
+    if v_group is None:
+        v_group = rank // v_scale.shape[0]
+
+    kernel = functools.partial(
+        _delta_kernel,
+        cbits=cbits, rank=rank, d_out=d_out, u_group=u_group, v_group=v_group,
+    )
+    full = lambda shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            full(x.shape),
+            full(u_packed.shape), full(u_scale.shape), full(u_zero.shape),
+            full(v_packed.shape), full(v_scale.shape), full(v_zero.shape),
+        ],
+        out_specs=full((b, d_out)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+        interpret=True,
+    )(x, u_packed, u_scale, u_zero, v_packed, v_scale, v_zero)

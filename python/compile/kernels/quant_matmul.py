@@ -1,0 +1,104 @@
+"""Packed low-bit dequant-matmul pallas kernel.
+
+Computes ``y = x @ Q⁻¹(W)`` where ``W`` arrives as *packed* integer codes in
+the kernel-container format (``quant.packing.to_container``): ``cbits``-bit
+fields packed little-endian inside each byte along the **output** axis, plus
+group-wise float ``(scale, zero)`` over the contraction axis.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks output tiles;
+per step the BlockSpec stages one ``(d_in, tile/cpb)`` packed byte-block plus
+its ``(G, tile)`` metadata HBM→VMEM, unpacks and dequantizes in-register, and
+feeds the MXU with an ``(B, d_in) × (d_in, tile)`` matmul.  The packed block
+is ``8/cbits×`` smaller than the f32 weights — exactly the bandwidth saving
+the paper buys on the PCIe link, realized here on the HBM↔VMEM path.
+
+Run under ``interpret=True`` everywhere (CPU PJRT cannot execute Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def unpack_container(packed: jnp.ndarray, cbits: int, d_out: int) -> jnp.ndarray:
+    """Unpack ``cbits``-bit fields from bytes along the last axis (jnp, in-kernel).
+
+    Mirrors ``quant.packing.unpack_codes`` for container bit-widths
+    ``{2, 4, 8}`` (3-bit codes ride in a 4-bit container).
+    """
+    if cbits == 8:
+        return packed[..., :d_out]
+    cpb = 8 // cbits
+    mask = (1 << cbits) - 1
+    parts = [(packed >> (cbits * j)) & mask for j in range(cpb)]
+    codes = jnp.stack(parts, axis=-1)  # (..., nbytes, cpb): little-endian fields
+    return codes.reshape(*packed.shape[:-1], packed.shape[-1] * cpb)[..., :d_out]
+
+
+def dequant_block(
+    codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, group_size: int
+) -> jnp.ndarray:
+    """Group-wise dequantize ``(d_in, t)`` codes with ``(G, t)`` metadata."""
+    d_in, t = codes.shape
+    g = d_in // group_size
+    grouped = codes.astype(jnp.float32).reshape(g, group_size, t)
+    deq = (grouped - zero[:, None, :]) * scale[:, None, :]
+    return deq.reshape(d_in, t)
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, z_ref, o_ref, *, cbits, group_size, tile):
+    x = x_ref[...]  # (B, d_in) — resident across all grid steps
+    codes = unpack_container(w_ref[...], cbits, tile)  # (d_in, tile)
+    deq = dequant_block(codes, s_ref[...], z_ref[...], group_size)
+    o_ref[...] = jnp.dot(x, deq, preferred_element_type=jnp.float32)
+
+
+def quant_matmul(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    *,
+    cbits: int,
+    group_size: int,
+    d_out: int,
+    tile: int | None = None,
+) -> jnp.ndarray:
+    """``y = x @ dequant(packed)``.
+
+    Parameters
+    ----------
+    x:  (B, d_in) float32 activations.
+    packed: (d_in, d_out * cbits / 8) uint8 container-packed codes.
+    scale/zero: (d_in // group_size, d_out) float32.
+    cbits: container bit-width (2, 4 or 8; 3-bit codes use cbits=4).
+    tile: output-tile width (defaults to min(d_out, 256); must divide d_out
+          and be a multiple of 8/cbits so byte boundaries align).
+    """
+    b, d_in = x.shape
+    cpb = 8 // cbits
+    if tile is None:
+        tile = min(d_out, 256)
+    assert d_out % tile == 0 and tile % cpb == 0
+    g = d_in // group_size
+
+    kernel = functools.partial(
+        _qmm_kernel, cbits=cbits, group_size=group_size, tile=tile
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(d_out // tile,),
+        in_specs=[
+            pl.BlockSpec((b, d_in), lambda i: (0, 0)),  # x stays resident
+            pl.BlockSpec((d_in, tile // cpb), lambda i: (0, i)),
+            pl.BlockSpec((g, tile), lambda i: (0, i)),
+            pl.BlockSpec((g, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+        interpret=True,
+    )(x, packed, scale, zero)

@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These are deliberately *independent* implementations: straight-line jnp with
+no pallas, no shared tiling code, numpy-style unpacking written from the
+codec spec rather than imported from the kernels.  pytest pins each kernel
+to its oracle across a hypothesis sweep of shapes/bit-widths
+(python/tests/test_kernels.py), and the rust integration tests pin the
+PJRT-executed artifacts to numbers produced through these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_unpack(packed: jnp.ndarray, cbits: int, n: int) -> jnp.ndarray:
+    """Unpack little-endian ``cbits``-bit fields along the last axis."""
+    if cbits == 8:
+        return packed[..., :n]
+    cpb = 8 // cbits
+    mask = (1 << cbits) - 1
+    cols = []
+    for byte_idx in range(packed.shape[-1]):
+        byte = packed[..., byte_idx]
+        for j in range(cpb):
+            cols.append((byte >> (cbits * j)) & mask)
+    codes = jnp.stack(cols, axis=-1)
+    return codes[..., :n]
+
+
+def ref_dequant(codes, scale, zero, group_size: int) -> jnp.ndarray:
+    """Group-wise dequantize codes (d_in, d_out) with (G, d_out) metadata."""
+    d_in, d_out = codes.shape
+    g = d_in // group_size
+    out = codes.astype(jnp.float32).reshape(g, group_size, d_out)
+    out = (out - zero[:, None, :]) * scale[:, None, :]
+    return out.reshape(d_in, d_out)
+
+
+def ref_quant_matmul(x, packed, scale, zero, *, cbits, group_size, d_out):
+    w = ref_dequant(ref_unpack(packed, cbits, d_out), scale, zero, group_size)
+    return x @ w
+
+
+def ref_lowrank_delta(
+    x, u_packed, u_scale, u_zero, v_packed, v_scale, v_zero,
+    *, rank, d_out, cbits=4, u_group=None, v_group=None,
+):
+    d_in = x.shape[1]
+    u_group = u_group or d_in // u_scale.shape[0]
+    v_group = v_group or rank // v_scale.shape[0]
+    u = ref_dequant(ref_unpack(u_packed, cbits, rank), u_scale, u_zero, u_group)
+    v = ref_dequant(ref_unpack(v_packed, cbits, d_out), v_scale, v_zero, v_group)
+    return (x @ u) @ v
+
+
+def ref_expert_fp16(x, w1, w2, w3):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def ref_expert_quant(
+    x,
+    w1_packed, w1_scale, w1_zero,
+    w2_packed, w2_scale, w2_zero,
+    w3_packed, w3_scale, w3_zero,
+    *, cbits, group_size, d_ff, d_out,
+):
+    d = x.shape[1]
+    w1 = ref_dequant(ref_unpack(w1_packed, cbits, d_ff), w1_scale, w1_zero, group_size)
+    w3 = ref_dequant(ref_unpack(w3_packed, cbits, d_ff), w3_scale, w3_zero, group_size)
+    w2 = ref_dequant(ref_unpack(w2_packed, cbits, d_out), w2_scale, w2_zero, group_size)
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def ref_expert_quant_comp(
+    x, w1, w2, w3, c1, c2, c3, *, cbits, group_size, d_ff, d_out, rank, v_group=4
+):
+    """Oracle for the compensated expert: reconstruct Ŵi = deq(Wi) + Ui·Vi
+    explicitly in weight space, then run the plain SwiGLU."""
+    d = x.shape[1]
+
+    def mat(w, n_out, g):
+        packed, scale, zero = w
+        return ref_dequant(ref_unpack(packed, cbits, n_out), scale, zero, g)
+
+    def factor_pair(c, d_in_f, n_out):
+        # Factors are always INT3 codes in 4-bit containers, independent of
+        # the weight container width.
+        up, us, uz, vp, vs, vz = c
+        u = ref_dequant(ref_unpack(up, 4, rank), us, uz, d_in_f // us.shape[0])
+        v = ref_dequant(ref_unpack(vp, 4, n_out), vs, vz, rank // vs.shape[0])
+        return u @ v
+
+    w1m = mat(w1, d_ff, group_size) + factor_pair(c1, d, d_ff)
+    w3m = mat(w3, d_ff, group_size) + factor_pair(c3, d, d_ff)
+    w2m = mat(w2, d_out, group_size) + factor_pair(c2, d_ff, d_out)
+    return (jax.nn.silu(x @ w1m) * (x @ w3m)) @ w2m
+
+
+def ref_decode_attention(q, k_cache, v_cache, lengths):
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / (dh**0.5)
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v_cache)

@@ -1,0 +1,377 @@
+"""L2 — the MoE transformer LM, in JAX, calling the L1 pallas kernels.
+
+Two faces of the same model:
+
+* **training forward** (`forward_train`) — full-sequence, pure-jnp, fp32,
+  dense-expert evaluation with top-k masking + load-balancing aux loss.
+  Used by `train.py` only; nothing here is exported.
+
+* **inference stages** (`stage_*`) — the per-step functions the rust
+  coordinator drives.  Each is shape-static, takes *weights as parameters*
+  (so one compiled executable serves every layer / expert / slot), and is
+  lowered to HLO text by `aot.py`.  The decode/prefill hot spots call the
+  pallas kernels from `kernels/`.
+
+The decomposition boundary is the paper's: the router's scores leave the
+graph and return to rust (L3) where the top-k / top-n *policy* decisions
+live, so changing the compensation policy never re-lowers anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    decode_attention,
+    expert_fp16,
+    expert_quant,
+    expert_quant_comp,
+)
+
+RMS_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (Table 1 analogue, DESIGN.md §3)."""
+
+    name: str
+    vocab: int = 512
+    d_model: int = 128
+    d_ff: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared: int = 0  # DeepSeek-style always-on experts
+    s_max: int = 320  # prefill 256 + decode 64
+    t_prefill: int = 256
+    b_max: int = 8
+    rope_theta: float = 10000.0
+    # Quant/compensation defaults (paper §4.2 configuration paragraph).
+    group_size: int = 64
+    rank_pad: int = 64  # executable rank (pad_to)
+    rank_buckets: tuple = (0, 4, 8, 16, 32, 64)
+    r_avg: int = 8
+    top_n: int = 1  # experts compensated per token
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+MIXTRAL_TINY = ModelConfig(
+    name="mixtral-tiny", n_experts=8, top_k=2, n_shared=0, r_avg=8, top_n=1
+)
+DEEPSEEK_TINY = ModelConfig(
+    name="deepseek-tiny", n_experts=16, top_k=4, n_shared=1, r_avg=16, top_n=3
+)
+CONFIGS = {c.name: c for c in (MIXTRAL_TINY, DEEPSEEK_TINY)}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Initialise fp32 parameters (fan-in-scaled normal).
+
+    Expert weights additionally receive **per-output-channel outlier scales**
+    (log-normal, with per-expert strength): production MoE experts are
+    heavy-tailed with a few dominant channels (paper Fig. 4b; KurTail), and
+    that structure — not trainable into a tiny model in a few hundred steps —
+    is exactly what makes quantization residuals *low-rank* (the error
+    concentrates in the outlier columns, one near-rank-1 component each) and
+    what spreads kurtosis across experts so the paper's rank allocation has
+    signal.  DESIGN.md §3 records this substitution.  Training proceeds on
+    top of the scaled init, so the final weights are still fully trained.
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def dense(key, shape, scale=None):
+        fan_in = shape[-2] if len(shape) > 1 else shape[0]
+        s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        return jax.random.normal(key, shape, dtype=jnp.float32) * s
+
+    def expert_stack(key, n, d_in, d_out):
+        """(n, d_in, d_out) expert weights with per-expert outlier structure.
+
+        Two ingredients, mirroring production-LLM weight statistics:
+        * *entry-level heavy tails* — student-t base noise with per-expert
+          degrees of freedom (df ∈ [4, 40]): low-df experts have high
+          kurtosis and, because single large entries blow up their quant
+          group's dynamic range, high relative quantization error — the
+          Fig. 4b correlation.
+        * *outlier output-channels* — log-normal per-column scales with
+          per-expert strength: the quantization residual's absolute energy
+          concentrates in the scaled columns (one near-rank-1 component
+          each), giving the spiked spectrum low-rank compensation needs.
+        """
+        kw, kdf, ks, kstr = jax.random.split(key, 4)
+        df = jax.random.uniform(kdf, (n, 1, 1), minval=4.0, maxval=40.0)
+        t = jax.random.t(kw, df, (n, d_in, d_out), dtype=jnp.float32)
+        # Normalize t to unit variance (var = df/(df-2)), then fan-in scale.
+        w = t * jnp.sqrt((df - 2.0) / df) / np.sqrt(d_in)
+        strength = jax.random.uniform(kstr, (n, 1, 1), minval=0.05, maxval=1.0)
+        col_scales = jnp.exp(jax.random.normal(ks, (n, 1, d_out)) * strength)
+        return w * col_scales
+
+    keys = iter(jax.random.split(key, 8 + cfg.n_layers * 16))
+    params = {
+        "emb": dense(next(keys), (v, d), scale=0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(keys), (d, d)),
+            "wk": dense(next(keys), (d, d)),
+            "wv": dense(next(keys), (d, d)),
+            "wo": dense(next(keys), (d, d)),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "gate": dense(next(keys), (d, cfg.n_experts)),
+            "w1": expert_stack(next(keys), cfg.n_experts, d, f),
+            "w2": expert_stack(next(keys), cfg.n_experts, f, d),
+            "w3": expert_stack(next(keys), cfg.n_experts, d, f),
+        }
+        if cfg.n_shared:
+            layer["sw1"] = dense(next(keys), (cfg.n_shared, d, f))
+            layer["sw2"] = dense(next(keys), (cfg.n_shared, f, d))
+            layer["sw3"] = dense(next(keys), (cfg.n_shared, d, f))
+        params["layers"].append(layer)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Shared primitives
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x (..., dh) with dh even, pos broadcastable to x[..., 0]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def router_probs(xn: jnp.ndarray, gate: jnp.ndarray) -> jnp.ndarray:
+    """Full softmax over all experts (the paper's w_i = softmax(G(x))).
+
+    Top-k selection and renormalization over the selected set (Mixtral
+    convention) happen in L3 (rust) / in `forward_train` for training.
+    """
+    return jax.nn.softmax(xn @ gate, axis=-1)
+
+
+def topk_mask_renorm(probs: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Zero all but the top-k probs per row, renormalize — the combine weights
+    the rust coordinator reproduces bit-for-bit (pinned by integration tests)."""
+    top_vals = jax.lax.top_k(probs, k)[0]
+    thresh = top_vals[..., -1:]
+    masked = jnp.where(probs >= thresh, probs, 0.0)
+    return masked / jnp.sum(masked, axis=-1, keepdims=True)
+
+
+# --------------------------------------------------------------------------
+# Training forward (full-sequence, dense experts)
+# --------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jnp.ndarray):
+    """Causal LM forward over (B, T) tokens -> (logits, aux_loss).
+
+    Experts are evaluated densely and combined with top-k-masked router
+    weights: numerically identical to the serving path (which simply skips
+    zero-weight experts) and trivially differentiable.  Aux loss is the
+    switch-transformer load-balancing term.
+    """
+    b, t = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]
+    pos = jnp.arange(t)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    aux = 0.0
+
+    for layer in params["layers"]:
+        xn = rmsnorm(x, layer["ln1"])
+        q = rope((xn @ layer["wq"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        k = rope((xn @ layer["wk"]).reshape(b, t, h, dh), pos[None, :, None], cfg.rope_theta)
+        v = (xn @ layer["wv"]).reshape(b, t, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, axis=-1), v)
+        x = x + attn.reshape(b, t, d) @ layer["wo"]
+
+        xn = rmsnorm(x, layer["ln2"])
+        probs = router_probs(xn, layer["gate"])  # (B, T, E)
+        w = topk_mask_renorm(probs, cfg.top_k)
+        gate_h = jnp.einsum("btd,edf->ebtf", xn, layer["w1"])
+        up_h = jnp.einsum("btd,edf->ebtf", xn, layer["w3"])
+        eh = jax.nn.silu(gate_h) * up_h
+        ey = jnp.einsum("ebtf,efd->ebtd", eh, layer["w2"])
+        moe = jnp.einsum("bte,ebtd->btd", w, ey)
+        if cfg.n_shared:
+            sg = jnp.einsum("btd,edf->ebtf", xn, layer["sw1"])
+            su = jnp.einsum("btd,edf->ebtf", xn, layer["sw3"])
+            moe = moe + jnp.einsum("ebtf,efd->btd", jax.nn.silu(sg) * su, layer["sw2"])
+        x = x + moe
+
+        sel = (w > 0).astype(jnp.float32)
+        f_e = jnp.mean(sel, axis=(0, 1)) / cfg.top_k
+        p_e = jnp.mean(probs, axis=(0, 1))
+        aux = aux + cfg.n_experts * jnp.sum(f_e * p_e)
+
+    logits = rmsnorm(x, params["ln_f"]) @ params["emb"].T
+    return logits, aux / cfg.n_layers
+
+
+# --------------------------------------------------------------------------
+# Inference stages (AOT-exported; weights are *arguments*)
+# --------------------------------------------------------------------------
+# Every stage returns a tuple — aot.py lowers with return_tuple=True and the
+# rust runtime unwraps with to_tuple{1,2,3}.
+
+def stage_embed(tokens: jnp.ndarray, emb: jnp.ndarray):
+    """tokens (N,) int32 -> hidden (N, d)."""
+    return (emb[tokens],)
+
+
+def stage_attn_decode(cfg: ModelConfig, use_pallas: bool = False):
+    """Decode attention for B slots: one new token per slot.
+
+    (x, ln1, wq, wk, wv, wo, k_cache, v_cache, pos) ->
+        (x_out, k_cache', v_cache')
+    caches (B, H, S, dh); pos (B,) int32 = write position per slot.
+    Inactive slots must pass pos >= 0; the kernel masks reads past pos.
+    """
+    h, dh, theta = cfg.n_heads, cfg.d_head, cfg.rope_theta
+
+    def fn(x, ln1, wq, wk, wv, wo, k_cache, v_cache, pos):
+        b, d = x.shape
+        xn = rmsnorm(x, ln1)
+        q = rope((xn @ wq).reshape(b, h, dh), pos[:, None], theta)
+        k = rope((xn @ wk).reshape(b, h, dh), pos[:, None], theta)
+        v = (xn @ wv).reshape(b, h, dh)
+
+        def write(cache, val):
+            def one(c, vv, p):  # c (H,S,dh), vv (H,dh)
+                return jax.lax.dynamic_update_slice(c, vv[:, None, :], (0, p, 0))
+
+            return jax.vmap(one)(cache, val, pos)
+
+        k_cache = write(k_cache, k)
+        v_cache = write(v_cache, v)
+        lengths = jnp.maximum(pos + 1, 1)
+        if use_pallas:
+            out = decode_attention(q, k_cache, v_cache, lengths)  # pallas kernel
+        else:
+            # Fused jnp attention — same math as the pallas kernel (pinned by
+            # python/tests/test_kernels.py); the interpret-mode grid loop costs
+            # ~15 ms/call on CPU-PJRT vs ~1 ms for the fused form, so the AOT
+            # decode stage ships this path (EXPERIMENTS.md §Perf, L2 entry).
+            # On real TPU the pallas kernel is the intended lowering.
+            scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / np.sqrt(dh)
+            mask = jnp.arange(k_cache.shape[2])[None, None, :] < lengths[:, None, None]
+            probs = jax.nn.softmax(jnp.where(mask, scores, -jnp.inf), axis=-1)
+            out = jnp.einsum("bhs,bhsd->bhd", probs, v_cache)
+        return (x + out.reshape(b, d) @ wo, k_cache, v_cache)
+
+    return fn
+
+
+def stage_attn_prefill(cfg: ModelConfig):
+    """Full causal attention over one sequence of T tokens (slot prefill).
+
+    (x (T,d), ln1, wq, wk, wv, wo) -> (x_out (T,d), k_cache (H,S,dh), v_cache)
+    Caches come back padded to s_max so rust can install them into the slot.
+    Prompts shorter than T are right-padded by rust; causal masking keeps
+    padding from contaminating the valid prefix.
+    """
+    h, dh, s_max, theta = cfg.n_heads, cfg.d_head, cfg.s_max, cfg.rope_theta
+
+    def fn(x, ln1, wq, wk, wv, wo):
+        t, d = x.shape
+        xn = rmsnorm(x, ln1)
+        pos = jnp.arange(t)
+        q = rope((xn @ wq).reshape(t, h, dh), pos[:, None], theta)
+        k = rope((xn @ wk).reshape(t, h, dh), pos[:, None], theta)
+        v = (xn @ wv).reshape(t, h, dh)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(dh)
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(causal[None], scores, -jnp.inf)
+        attn = jnp.einsum("hqk,khd->qhd", jax.nn.softmax(scores, axis=-1), v)
+        out = x + attn.reshape(t, d) @ wo
+        kc = jnp.zeros((h, s_max, dh), jnp.float32).at[:, :t, :].set(k.transpose(1, 0, 2))
+        vc = jnp.zeros((h, s_max, dh), jnp.float32).at[:, :t, :].set(v.transpose(1, 0, 2))
+        return (out, kc, vc)
+
+    return fn
+
+
+def stage_router(x: jnp.ndarray, ln2: jnp.ndarray, gate: jnp.ndarray):
+    """(x (N,d), ln2, gate) -> (xn (N,d), probs (N,E)).
+
+    xn is returned so expert stages receive the normed input without
+    re-doing the norm; probs feed the L3 top-k/top-n policy.
+    """
+    xn = rmsnorm(x, ln2)
+    return (xn, router_probs(xn, gate))
+
+
+def stage_expert_fp16(xn, w1, w2, w3):
+    """Full-precision expert (FP16-offload baseline + shared experts)."""
+    return (expert_fp16(xn, w1, w2, w3),)
+
+
+def stage_expert_quant(cfg: ModelConfig, cbits: int):
+    def fn(xn, w1p, s1, z1, w2p, s2, z2, w3p, s3, z3):
+        return (
+            expert_quant(
+                xn, w1p, s1, z1, w2p, s2, z2, w3p, s3, z3,
+                cbits=cbits, group_size=cfg.group_size,
+                d_ff=cfg.d_ff, d_out=cfg.d_model,
+            ),
+        )
+
+    return fn
+
+
+def stage_expert_quant_comp(cfg: ModelConfig, cbits: int):
+    """Compensated expert — the paper's top-n restore path (§3.2)."""
+
+    def fn(
+        xn,
+        w1p, s1, z1, w2p, s2, z2, w3p, s3, z3,
+        u1p, u1s, u1z, v1p, v1s, v1z,
+        u2p, u2s, u2z, v2p, v2s, v2z,
+        u3p, u3s, u3z, v3p, v3s, v3z,
+    ):
+        return (
+            expert_quant_comp(
+                xn,
+                (w1p, s1, z1), (w2p, s2, z2), (w3p, s3, z3),
+                (u1p, u1s, u1z, v1p, v1s, v1z),
+                (u2p, u2s, u2z, v2p, v2s, v2z),
+                (u3p, u3s, u3z, v3p, v3s, v3z),
+                cbits=cbits, group_size=cfg.group_size,
+                d_ff=cfg.d_ff, d_out=cfg.d_model, rank=cfg.rank_pad,
+            ),
+        )
+
+    return fn
+
+
+def stage_head(x: jnp.ndarray, ln_f: jnp.ndarray, emb: jnp.ndarray):
+    """(x (N,d), ln_f, emb) -> logits (N, V) with tied embedding head."""
+    return (rmsnorm(x, ln_f) @ emb.T,)

@@ -1,0 +1,31 @@
+"""Offline quantization toolbox for BEAM.
+
+Everything in this package runs at *artifact build time* only (``make
+artifacts``); nothing here is imported on the rust request path.
+
+Modules
+-------
+uniform   group-wise asymmetric round-to-nearest quantization (any bit-width)
+hqq       half-quadratic zero-point optimization (calibration-free), the
+          quantizer BEAM ships with (paper §3.1 step 2)
+gptq      Hessian-guided per-column quantization (accuracy baseline, paper §4.1)
+packing   bit-packing codecs (2/4/8-bit true packing, 3-bit 8->3-byte codec)
+"""
+
+from .uniform import QuantParams, quantize_uniform, dequantize, quantize_with_params
+from .hqq import quantize_hqq
+from .gptq import quantize_gptq
+from .packing import pack_codes, unpack_codes, packed_nbytes, container_bits
+
+__all__ = [
+    "QuantParams",
+    "quantize_uniform",
+    "quantize_with_params",
+    "dequantize",
+    "quantize_hqq",
+    "quantize_gptq",
+    "pack_codes",
+    "unpack_codes",
+    "packed_nbytes",
+    "container_bits",
+]

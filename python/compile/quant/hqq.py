@@ -1,0 +1,74 @@
+"""Half-Quadratic Quantization (HQQ) — calibration-free zero-point optimization.
+
+Reference: Badri & Shaji, "Half-Quadratic Quantization of Large Machine
+Learning Models" (2023).  The paper's method (§3.1 step 2) performs "low-bit
+quantization with HQQ-style weight optimization" before taking the residual
+SVD; we implement the same procedure.
+
+HQQ keeps the RTN scale but optimizes the (continuous) zero-point ``z`` to
+minimize ``‖W − (Q(W) − z)·s‖_p^p`` with ``p < 1`` via half-quadratic
+splitting.  Introducing the auxiliary residual ``e``:
+
+    min_{z, e}  ‖e‖_p^p + (β/2)‖W − (deq(z)) − e‖²
+
+alternates two closed-form steps:
+
+  1. *shrink*: ``e ← generalized_soft_threshold_p(W − deq, β)``
+  2. *zero update*: ``z ← mean_group(Q − (W − e)/s)``
+
+with ``β`` annealed upward by ``kappa`` each iteration.  ~20 iterations
+suffice; the whole thing is vectorized numpy and runs offline only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .uniform import QuantParams, quantize_uniform, quantize_with_params, _group
+
+
+def _shrink_lp(x: np.ndarray, beta: float, p: float) -> np.ndarray:
+    """Generalized soft-thresholding prox for the lp-norm (p < 1).
+
+    prox_{‖·‖_p^p / β}(x) ≈ sign(x) · relu(|x| − |x|^{p−1} · p / β)
+
+    (the standard first-order approximation used by HQQ).
+    """
+    ax = np.abs(x)
+    # |x|^{p-1} explodes at 0; the relu clamps those entries to 0 anyway.
+    with np.errstate(divide="ignore"):
+        thresh = np.where(ax > 1e-8, ax ** (p - 1.0), 0.0) * (p / beta)
+    return np.sign(x) * np.maximum(ax - thresh, 0.0)
+
+
+def quantize_hqq(
+    W: np.ndarray,
+    bits: int,
+    group_size: int = 64,
+    iters: int = 20,
+    p: float = 0.7,
+    beta: float = 10.0,
+    kappa: float = 1.01,
+) -> QuantParams:
+    """HQQ quantization of ``W`` (layout ``(d_in, d_out)``, see uniform.py).
+
+    Returns a :class:`QuantParams` whose ``zero`` has been optimized; ``scale``
+    is the RTN scale (HQQ holds scale fixed — optimizing both is unstable at
+    sub-4-bit, per the HQQ blog post).
+    """
+    W = np.asarray(W, dtype=np.float32)
+    base = quantize_uniform(W, bits, group_size)
+    scale, zero = base.scale.copy(), base.zero.copy()
+    Wg = _group(W, group_size)
+
+    for _ in range(iters):
+        codes = quantize_with_params(W, scale, zero, bits, group_size)
+        Cg = _group(codes.astype(np.float32), group_size)
+        deq = (Cg - zero[:, None, :]) * scale[:, None, :]
+        e = _shrink_lp(Wg - deq, beta, p)
+        # Closed-form zero update given codes and the shrunk residual.
+        zero = np.mean(Cg - (Wg - e) / scale[:, None, :], axis=1).astype(np.float32)
+        beta *= kappa
+
+    codes = quantize_with_params(W, scale, zero, bits, group_size)
+    return QuantParams(codes=codes, scale=scale, zero=zero, bits=bits, group_size=group_size)

@@ -1,0 +1,117 @@
+"""Bit-packing codecs for low-bit weight codes.
+
+Two distinct concerns, kept separate on purpose (DESIGN.md §7):
+
+* **Storage / bandwidth accounting** — what actually crosses PCIe / the NDP
+  link.  2-, 4- and 8-bit pack exactly (4, 2, 1 codes per byte).  3-bit uses
+  the classic 8-codes -> 3-bytes codec, so every bit-width here is *true*
+  packed size; ``packed_nbytes`` is what the rust transfer simulator charges.
+
+* **Kernel container** — what the pallas kernel unpacks in VMEM.  The kernel
+  consumes 4-bit containers for 3-bit codes (byte-aligned shifts only); the
+  repack is a build-time transform (`to_container`).  2/4/8-bit kernels
+  consume the storage format directly.
+
+All functions operate on the flattened last axis; arrays must have a
+multiple-of-``codes_per_chunk`` number of elements along it (weight shapes in
+BEAM are powers of two, so this always holds).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: codes per packed chunk / bytes per packed chunk, per bit-width
+_CHUNK = {2: (4, 1), 3: (8, 3), 4: (2, 1), 8: (1, 1)}
+
+
+def container_bits(bits: int) -> int:
+    """Bit-width of the kernel-side container (3-bit rides in 4-bit)."""
+    return 4 if bits == 3 else bits
+
+
+def packed_nbytes(n_codes: int, bits: int) -> int:
+    """True packed byte count for ``n_codes`` codes at ``bits`` bits."""
+    cpc, bpc = _CHUNK[bits]
+    if n_codes % cpc != 0:
+        raise ValueError(f"{n_codes} codes not a multiple of chunk {cpc} for {bits}-bit")
+    return n_codes // cpc * bpc
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack uint8 codes (< 2^bits) into a uint8 byte stream along the last axis."""
+    codes = np.ascontiguousarray(codes, dtype=np.uint8)
+    if codes.size and int(codes.max()) >= (1 << bits):
+        raise ValueError(f"code out of range for {bits}-bit")
+    *lead, n = codes.shape
+    flat = codes.reshape(-1, n)
+
+    if bits == 8:
+        packed = flat
+    elif bits == 4:
+        pairs = flat.reshape(flat.shape[0], n // 2, 2)
+        packed = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(np.uint8)
+    elif bits == 2:
+        quads = flat.reshape(flat.shape[0], n // 4, 4)
+        packed = (
+            quads[..., 0]
+            | (quads[..., 1] << 2)
+            | (quads[..., 2] << 4)
+            | (quads[..., 3] << 6)
+        ).astype(np.uint8)
+    elif bits == 3:
+        if n % 8 != 0:
+            raise ValueError(f"3-bit packing needs multiple-of-8 axis, got {n}")
+        oct_ = flat.reshape(flat.shape[0], n // 8, 8).astype(np.uint32)
+        # 8 codes -> one 24-bit word, little-endian 3-bit fields.
+        word = np.zeros(oct_.shape[:2], dtype=np.uint32)
+        for j in range(8):
+            word |= oct_[..., j] << (3 * j)
+        packed = np.stack(
+            [(word & 0xFF), (word >> 8) & 0xFF, (word >> 16) & 0xFF], axis=-1
+        ).astype(np.uint8)
+        packed = packed.reshape(packed.shape[0], -1)
+    else:
+        raise ValueError(f"unsupported bit-width {bits}")
+
+    return packed.reshape(*lead, -1)
+
+
+def unpack_codes(packed: np.ndarray, bits: int, n_codes: int) -> np.ndarray:
+    """Inverse of :func:`pack_codes`; ``n_codes`` is the unpacked last-axis length."""
+    packed = np.ascontiguousarray(packed, dtype=np.uint8)
+    *lead, nb = packed.shape
+    flat = packed.reshape(-1, nb)
+
+    if bits == 8:
+        out = flat
+    elif bits == 4:
+        out = np.empty((flat.shape[0], nb * 2), dtype=np.uint8)
+        out[:, 0::2] = flat & 0x0F
+        out[:, 1::2] = flat >> 4
+    elif bits == 2:
+        out = np.empty((flat.shape[0], nb * 4), dtype=np.uint8)
+        for j in range(4):
+            out[:, j::4] = (flat >> (2 * j)) & 0x03
+    elif bits == 3:
+        trip = flat.reshape(flat.shape[0], nb // 3, 3).astype(np.uint32)
+        word = trip[..., 0] | (trip[..., 1] << 8) | (trip[..., 2] << 16)
+        out = np.empty((flat.shape[0], nb // 3, 8), dtype=np.uint8)
+        for j in range(8):
+            out[..., j] = ((word >> (3 * j)) & 0x07).astype(np.uint8)
+        out = out.reshape(flat.shape[0], -1)
+    else:
+        raise ValueError(f"unsupported bit-width {bits}")
+
+    out = out[:, :n_codes]
+    return out.reshape(*lead, n_codes)
+
+
+def to_container(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack codes into the *kernel container* format (see module docstring).
+
+    Returns a uint8 array packed at ``container_bits(bits)`` — identical to
+    :func:`pack_codes` output except for 3-bit, which is widened to the 4-bit
+    container the pallas kernel unpacks with byte-aligned shifts.
+    """
+    return pack_codes(codes, container_bits(bits))

@@ -1,0 +1,107 @@
+"""Group-wise asymmetric uniform quantization.
+
+Weight layout convention used across BEAM: ``W`` has shape ``(d_in, d_out)``
+and the forward pass computes ``y = x @ W``.  Quantization groups run along
+the *contraction* axis (``d_in``): each contiguous group of ``group_size``
+input rows shares one ``(scale, zero)`` pair per output column, i.e.
+
+    codes[g*G + i, o] = clip(round(W[g*G + i, o] / scale[g, o] + zero[g, o]))
+    deq  [g*G + i, o] = (codes[...] - zero[g, o]) * scale[g, o]
+
+This is the format the L1 pallas kernel (`kernels/quant_matmul.py`) consumes
+and the rust reference dequantizer (`rust/src/quant/dequant.rs`) mirrors —
+the three implementations are pinned to each other by tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantParams:
+    """A quantized weight matrix plus the metadata needed to dequantize it.
+
+    Attributes
+    ----------
+    codes:       uint8 ``(d_in, d_out)`` — unpacked integer codes in
+                 ``[0, 2^bits - 1]`` (packing is a separate, lossless step).
+    scale:       float32 ``(d_in // group_size, d_out)``.
+    zero:        float32 ``(d_in // group_size, d_out)`` — *float* zero-point
+                 (HQQ optimizes it continuously; uniform RTN rounds it).
+    bits:        bit-width of the codes (2..8).
+    group_size:  rows per quantization group along ``d_in``.
+    """
+
+    codes: np.ndarray
+    scale: np.ndarray
+    zero: np.ndarray
+    bits: int
+    group_size: int
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.codes.shape
+
+    def dequantize(self) -> np.ndarray:
+        return dequantize(self)
+
+    def ideal_nbits(self) -> int:
+        """Total payload size in *bits* under ideal packing (codes only)."""
+        return self.codes.size * self.bits
+
+    def metadata_nbytes(self) -> int:
+        """scale+zero payload (fp16 on the wire, like HQQ's meta tensors)."""
+        return (self.scale.size + self.zero.size) * 2
+
+
+def _group(W: np.ndarray, group_size: int) -> np.ndarray:
+    d_in, d_out = W.shape
+    if d_in % group_size != 0:
+        raise ValueError(f"d_in={d_in} not divisible by group_size={group_size}")
+    return W.reshape(d_in // group_size, group_size, d_out)
+
+
+def quantize_uniform(W: np.ndarray, bits: int, group_size: int = 64) -> QuantParams:
+    """Round-to-nearest asymmetric quantization (the non-optimized baseline)."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    W = np.asarray(W, dtype=np.float32)
+    grouped = _group(W, group_size)
+    qmax = float(2**bits - 1)
+    wmin = grouped.min(axis=1)
+    wmax = grouped.max(axis=1)
+    scale = (wmax - wmin) / qmax
+    # Degenerate all-equal groups: keep scale positive so dequant is exact.
+    scale = np.where(scale <= 1e-12, 1.0, scale).astype(np.float32)
+    zero = (-wmin / scale).astype(np.float32)
+    codes = quantize_with_params(W, scale, zero, bits, group_size)
+    return QuantParams(codes=codes, scale=scale, zero=zero, bits=bits, group_size=group_size)
+
+
+def quantize_with_params(
+    W: np.ndarray, scale: np.ndarray, zero: np.ndarray, bits: int, group_size: int
+) -> np.ndarray:
+    """Quantize ``W`` to codes given fixed (scale, zero)."""
+    grouped = _group(np.asarray(W, dtype=np.float32), group_size)
+    qmax = float(2**bits - 1)
+    codes = np.rint(grouped / scale[:, None, :] + zero[:, None, :])
+    codes = np.clip(codes, 0.0, qmax).astype(np.uint8)
+    return codes.reshape(W.shape)
+
+
+def dequantize(q: QuantParams) -> np.ndarray:
+    """Inverse map Q⁻¹: codes -> float32 weights."""
+    grouped = _group(q.codes.astype(np.float32), q.group_size)
+    deq = (grouped - q.zero[:, None, :]) * q.scale[:, None, :]
+    return deq.reshape(q.codes.shape).astype(np.float32)
+
+
+def relative_residual_fro(W: np.ndarray, q: QuantParams) -> float:
+    """‖W − Q⁻¹(Q(W))‖_F / ‖W‖_F — the error metric of paper Fig. 4."""
+    W = np.asarray(W, dtype=np.float32)
+    num = float(np.linalg.norm(W - q.dequantize()))
+    den = float(np.linalg.norm(W)) or 1.0
+    return num / den

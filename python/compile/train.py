@@ -1,0 +1,139 @@
+"""Training loop for the tiny MoE LMs (build-time only).
+
+Trains each `ModelConfig` for a few hundred AdamW steps on the synthetic
+corpus so that (a) the router develops the skewed score distribution the
+paper's mechanism exploits and (b) perplexity / cloze accuracy respond
+meaningfully to quantization error.  Checkpoints land in
+``artifacts/<model>/weights_fp32.npz`` and are consumed by ``aot.py``.
+
+Run directly (``python -m compile.train mixtral-tiny``) or implicitly via
+``make artifacts`` (aot.py trains on demand when no checkpoint exists).
+"""
+
+from __future__ import annotations
+
+import functools
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import SyntheticCorpus, TRAIN_START, TRAIN_SEQS, VAL_START, VAL_SEQS
+from .model import CONFIGS, ModelConfig, forward_train, init_params
+
+BATCH = 16
+STEPS = 600
+LR_PEAK = 3e-3
+WARMUP = 50
+AUX_COEF = 0.01
+SEED = 0
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    logits, aux = forward_train(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return nll + AUX_COEF * aux, nll
+
+
+def lr_at(step):
+    warm = jnp.minimum(step / WARMUP, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / STEPS, 1.0)))
+    return LR_PEAK * warm * (0.1 + 0.9 * cos)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step(cfg: ModelConfig, params, opt, tokens, step):
+    (loss, nll), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens), has_aux=True
+    )(params)
+    lr = lr_at(step)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (step + 1))
+        vh = v / (1 - b2 ** (step + 1))
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), m, v
+
+    new = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    params = jax.tree.map(lambda t: t[0], new, is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], new, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], new, is_leaf=lambda t: isinstance(t, tuple))
+    return params, {"m": m, "v": v}, nll
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def eval_nll(cfg: ModelConfig, params, tokens):
+    _, nll = loss_fn(cfg, params, tokens)
+    return nll
+
+
+def flatten_params(cfg: ModelConfig, params) -> dict[str, np.ndarray]:
+    """Flatten the pytree into the name->array map stored in the npz."""
+    out = {"emb": params["emb"], "ln_f": params["ln_f"]}
+    for li, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            out[f"layers.{li}.{k}"] = v
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def unflatten_params(cfg: ModelConfig, flat: dict) -> dict:
+    params = {"emb": jnp.asarray(flat["emb"]), "ln_f": jnp.asarray(flat["ln_f"]), "layers": []}
+    for li in range(cfg.n_layers):
+        prefix = f"layers.{li}."
+        layer = {
+            k[len(prefix):]: jnp.asarray(v)
+            for k, v in flat.items()
+            if k.startswith(prefix)
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def train(cfg: ModelConfig, out_path: pathlib.Path, steps: int = STEPS) -> dict:
+    corpus = SyntheticCorpus()
+    params = init_params(cfg, jax.random.PRNGKey(SEED))
+    opt = {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+    }
+    val_tokens, _ = corpus.batch(VAL_START, VAL_SEQS)
+    val_tokens = jnp.asarray(val_tokens[:64])
+
+    t0 = time.time()
+    for step in range(steps):
+        start = TRAIN_START + (step * BATCH) % TRAIN_SEQS
+        tokens, _ = corpus.batch(start, BATCH)
+        params, opt, nll = train_step(cfg, params, opt, jnp.asarray(tokens), step)
+        if step % 100 == 0 or step == steps - 1:
+            vn = float(eval_nll(cfg, params, val_tokens))
+            print(
+                f"[{cfg.name}] step {step:4d} train_nll={float(nll):.4f} "
+                f"val_nll={vn:.4f} val_ppl={np.exp(vn):.2f} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(out_path, **flatten_params(cfg, params))
+    print(f"[{cfg.name}] wrote {out_path}")
+    return params
+
+
+def load_or_train(cfg: ModelConfig, artifacts_dir: pathlib.Path, steps: int = STEPS) -> dict:
+    path = artifacts_dir / cfg.name / "weights_fp32.npz"
+    if path.exists():
+        flat = dict(np.load(path))
+        return unflatten_params(cfg, flat)
+    return train(cfg, path, steps)
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(CONFIGS)
+    for name in names:
+        train(CONFIGS[name], pathlib.Path("../artifacts") / name / "weights_fp32.npz")

@@ -1,0 +1,115 @@
+"""Artifact-dependent tests (skipped until `make artifacts` has run).
+
+These validate the *shipped* artifacts: manifest consistency, weight-store
+completeness, eval-variant ordering (the Fig. 6 shape), and router skew
+(the Fig. 3 premise).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import beamw
+from compile.model import CONFIGS
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "mixtral-tiny" / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "mixtral-tiny" / "manifest.json").read_text())
+
+
+@pytest.fixture(scope="module")
+def store():
+    return beamw.read(ART / "mixtral-tiny" / "weights.beamw")
+
+
+def test_manifest_model_matches_config(manifest):
+    cfg = CONFIGS["mixtral-tiny"]
+    m = manifest["model"]
+    assert m["d_model"] == cfg.d_model
+    assert m["n_experts"] == cfg.n_experts
+    assert m["top_k"] == cfg.top_k
+
+
+def test_all_stage_files_exist(manifest):
+    for name, entry in manifest["stages"].items():
+        assert (ART / "mixtral-tiny" / entry["file"]).exists(), name
+
+
+def test_store_has_every_expert_variant(manifest, store):
+    m = manifest["model"]
+    for li in range(m["n_layers"]):
+        for e in range(m["n_experts"]):
+            for proj in ("w1", "w2", "w3"):
+                base = f"layers.{li}.experts.{e}.{proj}"
+                assert f"{base}.fp32" in store
+                for b in manifest["quant"]["bits"]:
+                    for method in manifest["quant"]["methods"]:
+                        assert f"{base}.{method}{b}.pk" in store
+                for b in manifest["quant"]["comp_bits"]:
+                    assert f"{base}.comp{b}.default.up" in store
+
+
+def test_transfer_bytes_ordering(manifest):
+    t = manifest["transfer"]
+    q = {int(k): v for k, v in t["q_expert_bytes"].items()}
+    assert q[2] < q[3] < q[4] < t["fp16_expert_bytes"]
+
+
+def test_comp_bytes_small_vs_expert(manifest):
+    """Compensators must be a small fraction of even an INT2 expert."""
+    t = manifest["transfer"]
+    comp = np.array(t["comp_bytes"]["default"]["2"], dtype=float)
+    assert comp.mean() < 0.6 * t["q_expert_bytes"]["2"]
+
+
+def test_rank_table_budget(manifest):
+    m = manifest["model"]
+    ranks = manifest["rank_table"]["default"]["ranks"]
+    assert len(ranks) == len(manifest["mat_keys"])
+    assert np.mean(ranks) <= m["r_avg"] + 1e-9
+
+
+def test_router_skew(manifest):
+    """Fig. 3 premise: rank-0 score dominates rank-1 for the mixtral-style model."""
+    stats = json.loads((ART / "mixtral-tiny" / "router_stats.json").read_text())
+    mean = stats["mean_over_layers"]
+    assert mean[0] > 1.5 * mean[1]
+
+
+def test_deepseek_router_flatter():
+    mx = json.loads((ART / "mixtral-tiny" / "router_stats.json").read_text())
+    ds = json.loads((ART / "deepseek-tiny" / "router_stats.json").read_text())
+    assert ds["mean_over_layers"][0] < mx["mean_over_layers"][0]
+
+
+def test_kurtosis_error_correlation_positive():
+    """Fig. 4b: kurtosis correlates with INT2 quantization error."""
+    entries = json.loads((ART / "mixtral-tiny" / "kurtosis.json").read_text())
+    k = np.log([e["kurtosis"] for e in entries])
+    err = np.array([e["err"]["2"] for e in entries])
+    corr = np.corrcoef(k, err)[0, 1]
+    assert corr > 0.1, corr
+
+
+@pytest.mark.slow
+def test_eval_variant_ordering():
+    """Fig. 6 shape on a small subset: fp16 ≤ ours2 ≤ hqq2 (ppl)."""
+    from compile.eval import evaluate_variant
+    from compile.model import MIXTRAL_TINY
+
+    res = {
+        v: evaluate_variant(MIXTRAL_TINY, ART, v, max_seqs=24)["ppl"]
+        for v in ("fp16", "ours2", "hqq2")
+    }
+    assert res["fp16"] <= res["ours2"] + 1e-6
+    assert res["ours2"] <= res["hqq2"] * 1.02

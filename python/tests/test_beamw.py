@@ -1,0 +1,61 @@
+"""BEAMW container: round-trips, format pinning (the rust reader mirrors this)."""
+
+import numpy as np
+import pytest
+
+from compile import beamw
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    tensors = {
+        "a.f32": np.random.default_rng(0).normal(size=(4, 5)).astype(np.float32),
+        "b.i32": np.arange(12, dtype=np.int32).reshape(3, 4),
+        "c.u8": np.arange(256, dtype=np.uint8).reshape(16, 16),
+        "d.i8": (np.arange(16, dtype=np.int8) - 8).reshape(4, 4),
+        "scalarish": np.array([3.5], dtype=np.float32),
+    }
+    path = tmp_path / "t.beamw"
+    beamw.write(path, tensors)
+    out = beamw.read(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_magic_pinned(tmp_path):
+    path = tmp_path / "t.beamw"
+    beamw.write(path, {"x": np.zeros(1, dtype=np.float32)})
+    with open(path, "rb") as f:
+        assert f.read(8) == b"BEAMW001"
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = tmp_path / "bad.beamw"
+    path.write_bytes(b"NOTBEAMW" + b"\x00" * 32)
+    with pytest.raises(ValueError):
+        beamw.read(path)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        beamw.write(tmp_path / "x.beamw", {"x": np.zeros(1, dtype=np.float64)})
+
+
+def test_offsets_contiguous(tmp_path):
+    """Tensors are laid out back-to-back (the rust reader assumes bounds)."""
+    import json
+
+    path = tmp_path / "t.beamw"
+    beamw.write(
+        path,
+        {"a": np.zeros((2, 2), np.float32), "b": np.zeros(3, np.uint8)},
+    )
+    raw = path.read_bytes()
+    hlen = int.from_bytes(raw[8:16], "little")
+    header = json.loads(raw[16 : 16 + hlen])
+    ends = 0
+    for e in header["tensors"]:
+        assert e["offset"] == ends
+        ends += e["nbytes"]
+    assert len(raw) == 16 + hlen + ends

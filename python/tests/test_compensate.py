@@ -1,0 +1,160 @@
+"""Compensation pipeline tests: kurtosis, rank allocation, residual SVD."""
+
+import numpy as np
+import pytest
+
+from compile.compensate import (
+    allocate_ranks,
+    allocate_uniform,
+    build_compensator,
+    build_compensator_from_svd,
+    compensated_weight,
+    kurtosis,
+    residual_curve,
+)
+from compile.quant import dequantize, quantize_hqq
+
+
+def test_kurtosis_gaussian_near_3():
+    W = np.random.default_rng(0).normal(size=(256, 256))
+    assert 2.8 < kurtosis(W) < 3.2
+
+
+def test_kurtosis_heavy_tail_above_gaussian():
+    rng = np.random.default_rng(1)
+    heavy = rng.standard_t(df=3, size=(256, 256))
+    assert kurtosis(heavy) > 4.0
+
+
+def test_kurtosis_uniform_below_gaussian():
+    W = np.random.default_rng(2).uniform(-1, 1, size=(128, 128))
+    assert kurtosis(W) < 2.0
+
+
+def test_kurtosis_constant_is_zero():
+    assert kurtosis(np.full((32, 32), 7.0)) == 0.0
+
+
+def test_allocate_respects_budget():
+    rng = np.random.default_rng(3)
+    k = rng.uniform(2, 50, size=96)
+    for r_avg in (4, 8, 16, 32):
+        ranks = allocate_ranks(k, r_avg, (0, 4, 8, 16, 32, 64), max_rank=128)
+        assert ranks.sum() <= 96 * r_avg
+
+
+def test_allocate_prioritizes_high_kurtosis():
+    k = np.array([1.0, 10.0, 5.0, 2.0])
+    ranks = allocate_ranks(k, 4, (0, 4, 8, 16), max_rank=128)
+    assert ranks[1] >= ranks[2] >= ranks[3] >= ranks[0] or ranks[1] == ranks.max()
+    assert ranks[1] == ranks.max()
+
+
+def test_allocate_clamps_to_max_rank():
+    k = np.array([10.0, 1.0])
+    ranks = allocate_ranks(k, 512, (0, 16, 1024), max_rank=64)
+    assert ranks.max() <= 16  # 1024 bucket infeasible under max_rank 64
+
+
+def test_allocate_deterministic_on_ties():
+    k = np.ones(8)
+    a = allocate_ranks(k, 8, (0, 16, 32))
+    b = allocate_ranks(k, 8, (0, 16, 32))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_allocate_uniform():
+    np.testing.assert_array_equal(allocate_uniform(4, 8), [8, 8, 8, 8])
+
+
+@pytest.fixture(scope="module")
+def quantized():
+    rng = np.random.default_rng(4)
+    # Column-scaled weights: spiked residual spectrum (DESIGN.md §3).
+    W = rng.normal(size=(128, 256)).astype(np.float32)
+    W *= np.exp(rng.normal(size=(1, 256)) * 0.8).astype(np.float32)
+    q = quantize_hqq(W, 2, 64)
+    return W, q
+
+
+def test_compensator_reduces_residual(quantized):
+    W, q = quantized
+    base = np.linalg.norm(W - dequantize(q))
+    for rank in (8, 16, 32):
+        c = build_compensator(W, q, rank)
+        err = np.linalg.norm(W - compensated_weight(q, c))
+        assert err < base
+    c8 = build_compensator(W, q, 8)
+    c32 = build_compensator(W, q, 32)
+    e8 = np.linalg.norm(W - compensated_weight(q, c8))
+    e32 = np.linalg.norm(W - compensated_weight(q, c32))
+    assert e32 < e8
+
+
+def test_rank_zero_compensator(quantized):
+    W, q = quantized
+    c = build_compensator(W, q, 0)
+    assert c.rank == 0
+    assert c.transfer_nbytes() == 0
+    np.testing.assert_array_equal(compensated_weight(q, c), dequantize(q))
+
+
+def test_padding_columns_are_exact_zero(quantized):
+    W, q = quantized
+    c = build_compensator(W, q, 8, pad_to=64)
+    u, v = c.factors()
+    assert u.shape == (128, 64)
+    assert v.shape == (64, 256)
+    assert np.abs(u[:, 8:]).max() == 0.0
+    assert np.abs(v[8:, :]).max() == 0.0
+
+
+def test_padded_equals_unpadded_delta(quantized):
+    W, q = quantized
+    plain = build_compensator(W, q, 8)
+    padded = build_compensator(W, q, 8, pad_to=64)
+    np.testing.assert_allclose(plain.delta(), padded.delta(), atol=1e-4)
+
+
+def test_pad_to_smaller_than_rank_raises(quantized):
+    W, q = quantized
+    with pytest.raises(ValueError):
+        build_compensator(W, q, 32, pad_to=16)
+
+
+def test_transfer_bytes_monotone_in_rank(quantized):
+    W, q = quantized
+    sizes = [build_compensator(W, q, r, pad_to=64).transfer_nbytes() for r in (4, 8, 16, 32)]
+    assert sizes == sorted(sizes)
+    assert all(s > 0 for s in sizes)
+
+
+def test_transfer_bytes_independent_of_padding(quantized):
+    W, q = quantized
+    a = build_compensator(W, q, 8).transfer_nbytes()
+    b = build_compensator(W, q, 8, pad_to=64).transfer_nbytes()
+    assert a == b  # padding never crosses the wire
+
+
+def test_compensator_cheaper_than_requantizing(quantized):
+    """The whole point: rank-8 factors ≪ one INT2 expert matrix."""
+    W, q = quantized
+    c = build_compensator(W, q, 8)
+    int2_matrix_bytes = W.size * 2 // 8
+    assert c.transfer_nbytes() < int2_matrix_bytes / 2
+
+
+def test_residual_curve_monotone(quantized):
+    W, q = quantized
+    curve = residual_curve(W, q, [0, 4, 8, 16, 32, 64, 128])
+    assert all(a >= b - 1e-12 for a, b in zip(curve, curve[1:]))
+    assert curve[-1] < curve[0]
+
+
+def test_from_svd_matches_direct(quantized):
+    W, q = quantized
+    E = W - dequantize(q)
+    svd = np.linalg.svd(E.astype(np.float64), full_matrices=False)
+    a = build_compensator(W, q, 16)
+    b = build_compensator_from_svd(svd, 16)
+    np.testing.assert_allclose(a.delta(), b.delta(), atol=1e-5)

@@ -1,0 +1,81 @@
+"""Synthetic corpus: determinism, structure, split hygiene."""
+
+import numpy as np
+
+from compile.corpus import (
+    CALIB_SEQS,
+    CALIB_START,
+    CNT,
+    REP,
+    SEP,
+    SyntheticCorpus,
+    TRAIN_SEQS,
+    TRAIN_START,
+    VAL_SEQS,
+    VAL_START,
+)
+
+
+def test_determinism():
+    a, da = SyntheticCorpus().batch(17, 8)
+    b, db = SyntheticCorpus().batch(17, 8)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(da, db)
+
+
+def test_tokens_in_vocab():
+    toks, _ = SyntheticCorpus().batch(0, 64)
+    assert toks.min() >= 0
+    assert toks.max() < 512
+
+
+def test_shapes():
+    toks, det = SyntheticCorpus().batch(0, 5)
+    assert toks.shape == (5, 64)
+    assert det.shape == (5, 64)
+
+
+def test_det_positions_exist_but_minority():
+    _, det = SyntheticCorpus().batch(0, 64)
+    frac = det.mean()
+    assert 0.1 < frac < 0.6
+
+
+def test_rep_motif_is_truly_determined():
+    """Wherever a REP motif appears, marked positions repeat the a/b pair."""
+    c = SyntheticCorpus()
+    checked = 0
+    for i in range(200):
+        toks, det = c.sequence(i)
+        for j in range(len(toks) - 6):
+            if toks[j] == REP and det[j + 3] and j + 5 < len(toks):
+                a, b = toks[j + 1], toks[j + 2]
+                assert toks[j + 3] == a and toks[j + 4] == b and toks[j + 5] == a
+                checked += 1
+    assert checked > 10
+
+
+def test_cnt_motif_is_consecutive():
+    c = SyntheticCorpus()
+    checked = 0
+    for i in range(200):
+        toks, det = c.sequence(i)
+        for j in range(len(toks) - 5):
+            if toks[j] == CNT and det[j + 2] and toks[j + 5] == SEP:
+                assert toks[j + 2] == toks[j + 1] + 1
+                assert toks[j + 3] == toks[j + 2] + 1
+                checked += 1
+    assert checked > 10
+
+
+def test_splits_disjoint():
+    assert TRAIN_START + TRAIN_SEQS <= VAL_START
+    assert VAL_START + VAL_SEQS <= CALIB_START
+    assert CALIB_SEQS > 0
+
+
+def test_different_sequences_differ():
+    c = SyntheticCorpus()
+    a, _ = c.sequence(0)
+    b, _ = c.sequence(1)
+    assert (a != b).any()

@@ -1,0 +1,234 @@
+"""L1 pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/bit-widths; every kernel must match its `ref.py`
+oracle to float32 tolerance (the interpret-mode kernel and the oracle share
+no tiling/unpacking code).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.compensate import build_compensator
+from compile.kernels import (
+    decode_attention,
+    expert_fp16,
+    expert_quant,
+    expert_quant_comp,
+    lowrank_delta,
+    quant_matmul,
+)
+from compile.kernels.ref import (
+    ref_decode_attention,
+    ref_expert_fp16,
+    ref_expert_quant,
+    ref_expert_quant_comp,
+    ref_lowrank_delta,
+    ref_quant_matmul,
+)
+from compile.quant import quantize_hqq, quantize_uniform
+from compile.quant.packing import container_bits, to_container
+
+
+def quant_args(W, bits, group=64):
+    q = quantize_uniform(W, bits, group)
+    cb = container_bits(bits)
+    return (
+        jnp.asarray(to_container(q.codes, bits)),
+        jnp.asarray(q.scale),
+        jnp.asarray(q.zero),
+    ), cb, q
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    b=st.integers(1, 8),
+    din_g=st.integers(1, 3),
+    dout=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_quant_matmul_matches_ref(bits, b, din_g, dout, seed):
+    rng = np.random.default_rng(seed)
+    d_in = 64 * din_g
+    W = rng.normal(size=(d_in, dout)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(b, d_in)).astype(np.float32))
+    (pk, sc, zp), cb, _ = quant_args(W, bits)
+    y = quant_matmul(x, pk, sc, zp, cbits=cb, group_size=64, d_out=dout)
+    y_ref = ref_quant_matmul(x, pk, sc, zp, cbits=cb, group_size=64, d_out=dout)
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-4)
+
+
+def test_quant_matmul_equals_dense_on_dequant():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(128, 128)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    (pk, sc, zp), cb, q = quant_args(W, 4)
+    y = quant_matmul(x, pk, sc, zp, cbits=cb, group_size=64, d_out=128)
+    np.testing.assert_allclose(y, np.asarray(x) @ q.dequantize(), atol=1e-3)
+
+
+def test_quant_matmul_tile_invariance():
+    rng = np.random.default_rng(1)
+    W = rng.normal(size=(128, 256)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    (pk, sc, zp), cb, _ = quant_args(W, 2)
+    full = quant_matmul(x, pk, sc, zp, cbits=cb, group_size=64, d_out=256, tile=256)
+    tiled = quant_matmul(x, pk, sc, zp, cbits=cb, group_size=64, d_out=256, tile=64)
+    np.testing.assert_allclose(full, tiled, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rank=st.sampled_from([4, 8, 16, 64]),
+    b=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_lowrank_delta_matches_ref(rank, b, seed):
+    rng = np.random.default_rng(seed)
+    d_in, d_out = 128, 256
+    U = rng.normal(size=(d_in, rank)).astype(np.float32) * 0.05
+    V = rng.normal(size=(rank, d_out)).astype(np.float32) * 0.05
+    uq = quantize_uniform(U, 3, min(64, d_in))
+    vq = quantize_uniform(V, 3, min(4, rank))
+    x = jnp.asarray(rng.normal(size=(b, d_in)).astype(np.float32))
+    args = (
+        jnp.asarray(to_container(uq.codes, 3)), jnp.asarray(uq.scale), jnp.asarray(uq.zero),
+        jnp.asarray(to_container(vq.codes, 3)), jnp.asarray(vq.scale), jnp.asarray(vq.zero),
+    )
+    y = lowrank_delta(x, *args, rank=rank, d_out=d_out)
+    y_ref = ref_lowrank_delta(x, *args, rank=rank, d_out=d_out)
+    np.testing.assert_allclose(y, y_ref, atol=1e-4)
+
+
+def test_expert_fp16_matches_ref():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32) * 0.1)
+    w2 = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32) * 0.1)
+    w3 = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32) * 0.1)
+    np.testing.assert_allclose(
+        expert_fp16(x, w1, w2, w3), ref_expert_fp16(x, w1, w2, w3), atol=1e-4
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4]), seed=st.integers(0, 2**31))
+def test_expert_quant_matches_ref(bits, seed):
+    rng = np.random.default_rng(seed)
+    d, f = 128, 256
+    x = jnp.asarray(rng.normal(size=(4, d)).astype(np.float32))
+    args = []
+    for shape in [(d, f), (f, d), (d, f)]:
+        W = rng.normal(size=shape).astype(np.float32) * 0.1
+        (pk, sc, zp), cb, _ = quant_args(W, bits)
+        args += [pk, sc, zp]
+    y = expert_quant(x, *args, cbits=container_bits(bits), group_size=64, d_ff=f, d_out=d)
+    y_ref = ref_expert_quant(
+        x, *args, cbits=container_bits(bits), group_size=64, d_ff=f, d_out=d
+    )
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-4)
+
+
+def _comp_args(rng, shape, bits, rank_pad):
+    W = rng.normal(size=shape).astype(np.float32) * 0.1
+    q = quantize_hqq(W, bits, 64)
+    c = build_compensator(W, q, 8, pad_to=rank_pad)
+    w = (jnp.asarray(to_container(q.codes, bits)), jnp.asarray(q.scale), jnp.asarray(q.zero))
+    comp = (
+        jnp.asarray(to_container(c.u_q.codes, 3)), jnp.asarray(c.u_q.scale), jnp.asarray(c.u_q.zero),
+        jnp.asarray(to_container(c.v_q.codes, 3)), jnp.asarray(c.v_q.scale), jnp.asarray(c.v_q.zero),
+    )
+    return w, comp
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_expert_quant_comp_matches_ref(bits):
+    rng = np.random.default_rng(11)
+    d, f, r = 128, 256, 64
+    x = jnp.asarray(rng.normal(size=(4, d)).astype(np.float32))
+    w1, c1 = _comp_args(rng, (d, f), bits, r)
+    w2, c2 = _comp_args(rng, (f, d), bits, r)
+    w3, c3 = _comp_args(rng, (d, f), bits, r)
+    cb = container_bits(bits)
+    y = expert_quant_comp(
+        x, w1, w2, w3, c1, c2, c3,
+        cbits=cb, group_size=64, d_ff=f, d_out=d, rank=r,
+    )
+    y_ref = ref_expert_quant_comp(
+        x, w1, w2, w3, c1, c2, c3,
+        cbits=cb, group_size=64, d_ff=f, d_out=d, rank=r,
+    )
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-4)
+
+
+def test_compensated_expert_beats_plain_quant():
+    """End-to-end: compensation must reduce output error vs the fp16 expert."""
+    rng = np.random.default_rng(12)
+    d, f, r = 128, 256, 64
+    # Column-scaled weights -> spiked residual (the regime BEAM targets).
+    def spiked(shape):
+        W = rng.normal(size=shape).astype(np.float32) * 0.1
+        return W * np.exp(rng.normal(size=(1, shape[1])) * 0.8).astype(np.float32)
+
+    Ws = [spiked((d, f)), spiked((f, d)), spiked((d, f))]
+    x = jnp.asarray(rng.normal(size=(8, d)).astype(np.float32))
+    y_true = ref_expert_fp16(x, *(jnp.asarray(w) for w in Ws))
+
+    args_q, args_w, args_c = [], [], []
+    for W in Ws:
+        q = quantize_hqq(W, 2, 64)
+        c = build_compensator(W, q, 32, pad_to=64)
+        t = (jnp.asarray(to_container(q.codes, 2)), jnp.asarray(q.scale), jnp.asarray(q.zero))
+        args_q += list(t)
+        args_w.append(t)
+        args_c.append((
+            jnp.asarray(to_container(c.u_q.codes, 3)), jnp.asarray(c.u_q.scale), jnp.asarray(c.u_q.zero),
+            jnp.asarray(to_container(c.v_q.codes, 3)), jnp.asarray(c.v_q.scale), jnp.asarray(c.v_q.zero),
+        ))
+
+    y_q = expert_quant(x, *args_q, cbits=2, group_size=64, d_ff=f, d_out=d)
+    y_c = expert_quant_comp(
+        x, *args_w, *args_c, cbits=2, group_size=64, d_ff=f, d_out=d, rank=64
+    )
+    err_q = float(jnp.linalg.norm(y_q - y_true))
+    err_c = float(jnp.linalg.norm(y_c - y_true))
+    assert err_c < err_q, f"compensation must help: {err_c} vs {err_q}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([16, 64]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(1, s + 1, size=(b,)).astype(np.int32))
+    np.testing.assert_allclose(
+        decode_attention(q, k, v, lens),
+        ref_decode_attention(q, k, v, lens),
+        atol=1e-4,
+    )
+
+
+def test_decode_attention_masks_stale_cache():
+    """Rows past `lengths` must not affect output (slot-reuse invariant)."""
+    rng = np.random.default_rng(13)
+    b, h, s, dh = 2, 2, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    lens = jnp.asarray(np.array([5, 9], dtype=np.int32))
+    out1 = decode_attention(q, jnp.asarray(k), jnp.asarray(v), lens)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 20:] = 99.0  # garbage beyond the valid prefix
+    v2[:, :, 20:] = -99.0
+    out2 = decode_attention(q, jnp.asarray(k2), jnp.asarray(v2), lens)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)

@@ -1,0 +1,151 @@
+"""L2 model tests: primitives, training forward, stage/training parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIGS,
+    MIXTRAL_TINY,
+    ModelConfig,
+    forward_train,
+    init_params,
+    rmsnorm,
+    rope,
+    router_probs,
+    stage_attn_prefill,
+    stage_embed,
+    stage_head,
+    stage_router,
+    topk_mask_renorm,
+)
+
+TINY = ModelConfig(
+    name="unit", vocab=64, d_model=64, d_ff=128, n_layers=2, n_heads=2,
+    n_experts=4, top_k=2, s_max=32, t_prefill=16, b_max=2,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_init_shapes(params):
+    assert params["emb"].shape == (64, 64)
+    layer = params["layers"][0]
+    assert layer["w1"].shape == (4, 64, 128)
+    assert layer["gate"].shape == (4,)[0:0] or layer["gate"].shape == (64, 4)
+
+
+def test_init_outlier_heterogeneity(params):
+    """Per-expert kurtosis must vary (drives the rank allocator)."""
+    from compile.compensate import kurtosis
+
+    ks = [kurtosis(np.asarray(params["layers"][0]["w1"][e])) for e in range(4)]
+    assert max(ks) > min(ks) * 1.5
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.array([[3.0, 4.0]])
+    out = rmsnorm(x, jnp.ones(2))
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(out**2, -1)), 1.0, rtol=1e-4
+    )
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    pos = jnp.arange(4)
+    out = rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8))
+    out = rope(x, jnp.zeros(1), 10000.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+
+def test_router_probs_normalized(params):
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 64))
+    p = router_probs(x, params["layers"][0]["gate"])
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_topk_mask_renorm_properties():
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(4), (7, 8)))
+    w = topk_mask_renorm(p, 2)
+    w_np = np.asarray(w)
+    assert ((w_np > 0).sum(-1) == 2).all()
+    np.testing.assert_allclose(w_np.sum(-1), 1.0, rtol=1e-5)
+    # nonzero entries correspond to the top-2 probs
+    for row_p, row_w in zip(np.asarray(p), w_np):
+        top2 = set(np.argsort(-row_p)[:2])
+        assert set(np.nonzero(row_w)[0]) == top2
+
+
+def test_forward_train_shapes_and_finite(params):
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 64, size=(2, 16), dtype=np.int32)
+    )
+    logits, aux = forward_train(TINY, params, tokens)
+    assert logits.shape == (2, 16, 64)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert float(aux) >= 1.0 - 1e-3  # switch loss lower bound at E·Σf·p = 1
+
+
+def test_forward_train_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    rng = np.random.default_rng(5)
+    t1 = rng.integers(0, 64, size=(1, 12), dtype=np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % 64
+    l1, _ = forward_train(TINY, params, jnp.asarray(t1))
+    l2, _ = forward_train(TINY, params, jnp.asarray(t2))
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5
+    )
+
+
+def test_stage_parity_with_training_forward(params):
+    """The staged serving path (prefill stages + dense top-k combine) must
+    match `forward_train` — pins the L2/L3 execution semantics."""
+    cfg = TINY
+    rng = np.random.default_rng(6)
+    T = cfg.t_prefill
+    tokens = rng.integers(0, cfg.vocab, size=(T,), dtype=np.int32)
+
+    # Reference: training forward.
+    ref_logits, _ = forward_train(cfg, params, jnp.asarray(tokens[None, :]))
+    ref_logits = np.asarray(ref_logits[0])
+
+    # Staged path.
+    (x,) = stage_embed(jnp.asarray(tokens), params["emb"])
+    attn = stage_attn_prefill(cfg)
+    for layer in params["layers"]:
+        x2, _, _ = attn(x, layer["ln1"], layer["wq"], layer["wk"], layer["wv"], layer["wo"])
+        xn, probs = stage_router(x2, layer["ln2"], layer["gate"])
+        w = topk_mask_renorm(probs, cfg.top_k)
+        # dense expert eval with stage semantics (fp16 experts)
+        moe = jnp.zeros_like(x2)
+        for e in range(cfg.n_experts):
+            from compile.kernels import expert_fp16
+
+            y = expert_fp16(xn, layer["w1"][e], layer["w2"][e], layer["w3"][e])
+            moe = moe + w[:, e : e + 1] * y
+        x = x2 + moe
+    (logits,) = stage_head(x, params["ln_f"], params["emb"])
+    np.testing.assert_allclose(np.asarray(logits), ref_logits, atol=2e-3, rtol=1e-3)
+
+
+def test_configs_registered():
+    assert "mixtral-tiny" in CONFIGS
+    assert "deepseek-tiny" in CONFIGS
+    assert CONFIGS["deepseek-tiny"].n_shared == 1
+    assert MIXTRAL_TINY.top_n < MIXTRAL_TINY.top_k

@@ -1,0 +1,85 @@
+"""Bit-packing codec tests: exact round-trips and byte accounting."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant.packing import (
+    container_bits,
+    pack_codes,
+    packed_nbytes,
+    to_container,
+    unpack_codes,
+)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_roundtrip_exact(bits):
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(0, 2**bits, size=(16, 64), dtype=np.uint8)
+    packed = pack_codes(codes, bits)
+    assert packed.shape[0] == 16
+    out = unpack_codes(packed, bits, 64)
+    np.testing.assert_array_equal(out, codes)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    rows=st.integers(1, 8),
+    chunks=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_roundtrip_hypothesis(bits, rows, chunks, seed):
+    cpc = {2: 4, 3: 8, 4: 2, 8: 1}[bits]
+    n = chunks * cpc
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, size=(rows, n), dtype=np.uint8)
+    out = unpack_codes(pack_codes(codes, bits), bits, n)
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_packed_nbytes_ratios():
+    assert packed_nbytes(1024, 2) == 256
+    assert packed_nbytes(1024, 3) == 384
+    assert packed_nbytes(1024, 4) == 512
+    assert packed_nbytes(1024, 8) == 1024
+
+
+def test_packed_nbytes_rejects_partial_chunks():
+    with pytest.raises(ValueError):
+        packed_nbytes(7, 3)
+
+
+def test_pack_rejects_out_of_range_codes():
+    with pytest.raises(ValueError):
+        pack_codes(np.array([[4]], dtype=np.uint8), 2)
+
+
+def test_3bit_pack_is_true_3_bits():
+    codes = np.zeros((1, 64), dtype=np.uint8)
+    assert pack_codes(codes, 3).shape[-1] == 24  # 64 * 3/8
+
+
+def test_container_widens_only_3bit():
+    assert container_bits(3) == 4
+    assert container_bits(2) == 2
+    assert container_bits(4) == 4
+    assert container_bits(8) == 8
+
+
+def test_to_container_3bit_is_4bit_packed():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 8, size=(4, 16), dtype=np.uint8)
+    cont = to_container(codes, 3)
+    assert cont.shape[-1] == 8  # 16 codes at 4 bits
+    np.testing.assert_array_equal(unpack_codes(cont, 4, 16), codes)
+
+
+def test_3bit_known_pattern():
+    # 8 codes [0..7] -> word 0b111_110_101_100_011_010_001_000 = 0xFAC688
+    codes = np.arange(8, dtype=np.uint8)[None, :]
+    packed = pack_codes(codes, 3)
+    word = int(packed[0, 0]) | (int(packed[0, 1]) << 8) | (int(packed[0, 2]) << 16)
+    for j in range(8):
+        assert (word >> (3 * j)) & 7 == j

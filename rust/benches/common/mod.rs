@@ -1,0 +1,21 @@
+//! Shared bench scaffolding (no criterion in the offline vendor set —
+//! `harness = false` mains with wall-clock + virtual-clock reporting).
+
+use std::time::Instant;
+
+/// Time a closure `iters` times; report min/mean wall time.
+pub fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!("  {label:<44} min {:>10.3} ms | mean {:>10.3} ms | n={iters}", min * 1e3, mean * 1e3);
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

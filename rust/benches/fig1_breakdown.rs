@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Fig. 1 (time breakdown + roofline).
+//!
+//! `cargo bench --bench fig1_breakdown` — runs the FP16-offloading serving
+//! point and prints the transfer/compute split plus the roofline table,
+//! with wall-clock timings of the underlying serve loop.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use beam_moe::harness::figures::{fig1, Harness};
+
+fn main() -> anyhow::Result<()> {
+    common::header("fig1: offloaded inference breakdown + roofline");
+    let mut h = Harness::new(PathBuf::from("artifacts"), Some(PathBuf::from("reports")), false)?;
+    let t0 = Instant::now();
+    fig1(&mut h)?;
+    println!("[bench] fig1 regenerated in {:.2}s wall", t0.elapsed().as_secs_f64());
+    Ok(())
+}

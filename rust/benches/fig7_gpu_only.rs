@@ -1,0 +1,45 @@
+//! Bench: paper Fig. 7 (top) — GPU-only offloading throughput.
+//!
+//! Serves the paper's workload (in=256, out∈{128,256}) under
+//! Mixtral-Offloading / HOBBIT / BEAM-3bit / BEAM-2bit on both models and
+//! prints tokens/s (virtual) + speedups. `cargo bench --bench fig7_gpu_only`.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use beam_moe::harness::figures::Harness;
+use beam_moe::config::{PolicyConfig, PolicyKind};
+use beam_moe::manifest::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    common::header("fig7 (GPU-only): serving throughput");
+    let h = Harness::new(PathBuf::from("artifacts"), Some(PathBuf::from("reports")), false)?;
+    for model in ["mixtral-tiny", "deepseek-tiny"] {
+        let top_n = Manifest::load(format!("artifacts/{model}"))?.model.top_n;
+        println!("-- {model} --");
+        let mut base = 0.0;
+        for (name, policy) in [
+            ("mixtral-offload", PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0)),
+            ("hobbit", PolicyConfig::new(PolicyKind::Hobbit, 4, 0)),
+            ("beam-3bit", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
+            ("beam-2bit", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+        ] {
+            for out_len in [128usize, 256] {
+                let t0 = Instant::now();
+                let r = h.serve_point(model, policy.clone(), false, out_len)?;
+                let tps = r.tokens_per_second();
+                if base == 0.0 {
+                    base = tps;
+                }
+                println!(
+                    "  {name:<18} out={out_len:<4} {tps:>9.2} tok/s ({:>5.2}x)  [wall {:.1}s]",
+                    tps / base,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+    }
+    Ok(())
+}

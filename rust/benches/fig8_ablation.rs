@@ -1,0 +1,20 @@
+//! Bench: paper Fig. 8 + Table 2 ablations (restored-expert count, rank
+//! budget, kurtosis vs uniform allocation, position-specific restore).
+//!
+//! `cargo bench --bench fig8_ablation` — scoring-based, so slower than the
+//! throughput benches; uses the reduced eval set.
+
+mod common;
+
+use std::path::PathBuf;
+
+use beam_moe::harness::figures::{fig8, tab2, Harness};
+
+fn main() -> anyhow::Result<()> {
+    common::header("fig8 + tab2: ablations");
+    let mut h = Harness::new(PathBuf::from("artifacts"), Some(PathBuf::from("reports")), false)?;
+    h.eval_seqs = 12; // bench-sized subset; `beam figure fig8 --full` for the real run
+    fig8(&mut h)?;
+    tab2(&mut h)?;
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Micro-benchmarks of the L3 hot path (the §Perf targets).
+//!
+//! `cargo bench --bench hotpath` — times the pieces the decode loop is made
+//! of: payload literalization (the host-side cost of a cache miss), routing
+//! plan construction, MoE combine, cache ops, a full expert stage execution
+//! and one end-to-end decode step.  EXPERIMENTS.md §Perf tracks these
+//! before/after each optimization.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
+use beam_moe::coordinator::combine;
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::ServeEngine;
+use beam_moe::manifest::{Manifest, WeightStore};
+use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
+use beam_moe::policies::plan::{topk_renorm, ExpertExec, Location, TokenAssign};
+use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    common::header("hotpath micro-benchmarks (wall-clock)");
+    let engine = Arc::new(Engine::cpu()?);
+    let model = StagedModel::load(Arc::clone(&engine), Manifest::load("artifacts/mixtral-tiny")?)?;
+    let dims = model.manifest.model.clone();
+
+    // 1. Payload literalization (cache-miss host cost).
+    common::time("payload_base int2 (9 literals)", 200, || {
+        let _ = model.payload_base(0, 0, Precision::Int(2), "hqq").unwrap();
+    });
+    common::time("payload_base fp16 (3 literals)", 200, || {
+        let _ = model.payload_base(0, 0, Precision::Fp16, "hqq").unwrap();
+    });
+    common::time("payload_comp int2 (18 literals)", 200, || {
+        let _ = model.payload_comp(0, 0, 2, "default").unwrap();
+    });
+
+    // 2. Routing plan (pure CPU).
+    let probs: Vec<f32> = (0..dims.b_max * dims.n_experts)
+        .map(|i| ((i * 2654435761usize) % 1000) as f32 / 1000.0)
+        .collect();
+    common::time("topk_renorm x batch", 10_000, || {
+        for r in 0..dims.b_max {
+            let row = &probs[r * dims.n_experts..(r + 1) * dims.n_experts];
+            let _ = topk_renorm(row, dims.top_k);
+        }
+    });
+
+    // 3. MoE combine.
+    let y = vec![0.5f32; dims.b_max * dims.d_model];
+    let exec = ExpertExec {
+        expert: 0,
+        precision: Precision::Int(2),
+        location: Location::Gpu,
+        tokens: (0..dims.b_max)
+            .map(|row| TokenAssign { row, weight: 0.5, rank: 0 })
+            .collect(),
+    };
+    common::time("combine::accumulate full batch", 10_000, || {
+        let mut acc = vec![0f32; dims.b_max * dims.d_model];
+        combine::accumulate(&mut acc, &y, &exec, dims.d_model);
+    });
+
+    // 4. Cache ops.
+    let mut cache = ExpertCache::new(1 << 20);
+    common::time("cache insert+get", 10_000, || {
+        let key = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Quant(2) };
+        cache.insert(key, Arc::new(Vec::new()), 1024);
+        let _ = cache.get(&key);
+    });
+
+    // 5. Expert stage execution (PJRT, decode batch).
+    let payload = model.payload_base(0, 0, Precision::Int(2), "hqq")?;
+    let refs: Vec<&xla::Literal> = payload.iter().collect();
+    let xn = model.lit_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
+    common::time("run_expert int2 decode (PJRT)", 50, || {
+        let _ = model.run_expert(Precision::Int(2), false, &xn, &refs).unwrap();
+    });
+    let payload_c = model.payload_comp(0, 0, 2, "default")?;
+    let refs_c: Vec<&xla::Literal> = payload.iter().chain(payload_c.iter()).collect();
+    common::time("run_expert int2+comp decode (PJRT)", 50, || {
+        let _ = model
+            .run_expert(Precision::IntComp(2), false, &xn, &refs_c)
+            .unwrap();
+    });
+
+    // 5b. Individual non-expert stages.
+    {
+        let (kc, vc) = model.empty_caches()?;
+        let pos: Vec<i32> = vec![3; dims.b_max];
+        let x = model.lit_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
+        common::time("attn_decode stage (PJRT)", 50, || {
+            let _ = model.attn_decode(0, &x, &kc, &vc, &pos).unwrap();
+        });
+        common::time("router stage (PJRT)", 50, || {
+            let _ = model.router(0, &x, false).unwrap();
+        });
+        common::time("embed stage (PJRT)", 50, || {
+            let _ = model.embed(&vec![1i32; dims.b_max], false).unwrap();
+        });
+        common::time("head stage (PJRT)", 50, || {
+            let _ = model.head(&x).unwrap();
+        });
+    }
+
+    // 6. End-to-end decode steps (the serving inner loop).
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let mut se = ServeEngine::new(
+        StagedModel::load(Arc::clone(&engine), Manifest::load("artifacts/mixtral-tiny")?)?,
+        PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n),
+        sys,
+    )?;
+    let eval = WeightStore::load(se.model.manifest.eval_path())?;
+    let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 4), &eval)?;
+    serve(&mut se, requests)?; // warm: prefill + a few steps, caches hot
+    let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 24), &eval)?;
+    let t0 = std::time::Instant::now();
+    let r = serve(&mut se, requests)?;
+    println!(
+        "  decode loop: {} steps in {:.2}s wall => {:.1} ms/step ({} pjrt execs, {:.2} wall tok/s)",
+        r.decode_steps,
+        t0.elapsed().as_secs_f64(),
+        1e3 * t0.elapsed().as_secs_f64() / r.decode_steps.max(1) as f64,
+        r.pjrt_execs,
+        r.wall_tokens_per_second(),
+    );
+    Ok(())
+}
+// (appended by perf pass) — per-stage timings live in stage_times bench below.

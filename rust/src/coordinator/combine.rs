@@ -1,0 +1,91 @@
+//! MoE output combination: `x += Σ_e w_{t,e} · y_e[t]` over the layer plan.
+//!
+//! Expert stages run densely over the whole (N, d) batch; the combine picks
+//! each exec's assigned rows with their renormalized top-k weights — the
+//! rust mirror of the `einsum("bte,ebtd->btd", w, y)` in the python
+//! training/eval forwards (pinned by integration tests and proptest).
+
+use crate::policies::plan::{ExpertExec, LayerPlan};
+
+/// Accumulate one exec's output rows into the MoE accumulator.
+pub fn accumulate(acc: &mut [f32], y: &[f32], exec: &ExpertExec, d: usize) {
+    for t in &exec.tokens {
+        let row = t.row * d;
+        let (dst, src) = (&mut acc[row..row + d], &y[row..row + d]);
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a += t.weight * b;
+        }
+    }
+}
+
+/// Add an always-on (shared expert / residual) contribution for active rows.
+pub fn accumulate_all(acc: &mut [f32], y: &[f32], active: &[bool], d: usize) {
+    for (row, &on) in active.iter().enumerate() {
+        if !on {
+            continue;
+        }
+        let o = row * d;
+        for (a, b) in acc[o..o + d].iter_mut().zip(&y[o..o + d]) {
+            *a += b;
+        }
+    }
+}
+
+/// Check a plan covers every active row's top-k exactly once (debug aid +
+/// proptest target).
+pub fn plan_is_partition(plan: &LayerPlan, n_tokens: usize, top_k: usize, active: &[bool]) -> bool {
+    let mut counts = vec![0usize; n_tokens];
+    for e in &plan.execs {
+        for t in &e.tokens {
+            if t.row >= n_tokens || !active[t.row] {
+                return false;
+            }
+            counts[t.row] += 1;
+        }
+    }
+    counts
+        .iter()
+        .zip(active)
+        .all(|(&c, &on)| if on { c == top_k } else { c == 0 })
+}
+
+/// Per-row combine-weight sum (must be ≈1 for active rows).
+pub fn weight_sums(plan: &LayerPlan, n_tokens: usize) -> Vec<f32> {
+    let mut sums = vec![0f32; n_tokens];
+    for e in &plan.execs {
+        for t in &e.tokens {
+            sums[t.row] += t.weight;
+        }
+    }
+    sums
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::policies::plan::{Location, TokenAssign};
+
+    #[test]
+    fn accumulate_weights_rows() {
+        let d = 2;
+        let mut acc = vec![0f32; 4];
+        let y = vec![1.0, 2.0, 3.0, 4.0];
+        let exec = ExpertExec {
+            expert: 0,
+            precision: Precision::Fp16,
+            location: Location::Gpu,
+            tokens: vec![TokenAssign { row: 1, weight: 0.5, rank: 0 }],
+        };
+        accumulate(&mut acc, &y, &exec, d);
+        assert_eq!(acc, vec![0.0, 0.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn accumulate_all_skips_inactive() {
+        let mut acc = vec![0f32; 4];
+        let y = vec![1.0f32; 4];
+        accumulate_all(&mut acc, &y, &[true, false], 2);
+        assert_eq!(acc, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,555 @@
+//! `ServeEngine` — the decode/prefill machinery.
+//!
+//! Each step runs real numerics through the AOT stages (PJRT) while
+//! advancing virtual time against the simulated testbed:
+//!
+//! ```text
+//!   embed ─► for each layer:                         (GPU resource)
+//!              attn ─► router ─► policy.plan()
+//!              per exec:   [link: weights(+comp) if cache miss] ─► GPU FFN
+//!                       or [ndp-link: acts] ─► NDP FFN ─► [acts back]
+//!              combine (host) ─► barrier
+//!          ─► head ─► sample
+//! ```
+//!
+//! Transfers and compute acquire different virtual resources, so expert
+//! *i*'s compute overlaps expert *i+1*'s transfer exactly as the real
+//! pipelined fetch does.  All byte counts come from the manifest's
+//! transfer tables (true packed sizes — DESIGN.md §7).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::{PolicyConfig, Precision, SystemConfig};
+use crate::coordinator::combine;
+use crate::coordinator::metrics::{Report, RequestRecord, StepBreakdown};
+use crate::coordinator::state::{BatchState, LayerKv};
+use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
+use crate::offload::ndp::NdpDevice;
+use crate::offload::transfer::{Link, TransferClass};
+use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
+use crate::policies::make_policy;
+use crate::runtime::literal::to_vec_f32;
+use crate::runtime::StagedModel;
+use crate::sim::clock::{Resource, VTime, VirtualClock};
+use crate::sim::CostModel;
+use crate::workload::{DecodeTrace, Request};
+
+pub struct ServeEngine {
+    pub model: StagedModel,
+    pub policy_cfg: PolicyConfig,
+    policy: Box<dyn Policy>,
+    pub cost: CostModel,
+    gpu: Resource,
+    pcie: Link,
+    ndp: Option<NdpDevice>,
+    ndp_link: Option<Link>,
+    pub cache: ExpertCache,
+    pub clock: VirtualClock,
+    pub state: BatchState,
+    breakdown: StepBreakdown,
+    /// [layer][expert] mean true compensator rank (cost model input).
+    avg_ranks: Vec<Vec<f64>>,
+    pub trace: Option<DecodeTrace>,
+    decode_steps: u64,
+    prefills: u64,
+    total_generated: usize,
+    records: Vec<RequestRecord>,
+    started: Instant,
+}
+
+impl ServeEngine {
+    pub fn new(model: StagedModel, policy_cfg: PolicyConfig, sys: SystemConfig) -> Result<Self> {
+        let dims = model.manifest.model.clone();
+        let cost = CostModel::new(sys.clone(), dims.clone());
+        let state = BatchState::new(&model)?;
+        let avg_ranks = Self::rank_table(&model, &policy_cfg.comp_tag)?;
+        let ndp = sys.ndp.as_ref().map(|n| NdpDevice::new(n.clone()));
+        let ndp_link = sys
+            .ndp
+            .as_ref()
+            .map(|n| Link::new("ndp-link", n.link_bw, n.link_lat));
+        let mut engine = ServeEngine {
+            policy: make_policy(&policy_cfg),
+            policy_cfg,
+            cost,
+            gpu: Resource::new("gpu"),
+            pcie: Link::new("pcie", sys.pcie_bw, sys.pcie_lat),
+            ndp,
+            ndp_link,
+            cache: ExpertCache::new(sys.gpu_cache_bytes),
+            clock: VirtualClock::new(),
+            state,
+            breakdown: StepBreakdown::default(),
+            avg_ranks,
+            trace: None,
+            decode_steps: 0,
+            prefills: 0,
+            total_generated: 0,
+            records: Vec::new(),
+            started: Instant::now(),
+            model,
+        };
+        engine.prewarm()?;
+        Ok(engine)
+    }
+
+    /// MoNDE statically pins its hottest experts in GPU HBM (the hot/cold
+    /// split of Kim et al. 2024); model-load time, so no link charge.
+    /// Layer-major order is a stable stand-in for offline hotness ranking.
+    fn prewarm(&mut self) -> Result<()> {
+        if !matches!(self.policy_cfg.kind, crate::config::PolicyKind::Monde) {
+            return Ok(());
+        }
+        let dims = self.model.manifest.model.clone();
+        let bytes = self.model.manifest.transfer.fp16_expert_bytes;
+        'outer: for layer in 0..dims.n_layers {
+            for expert in 0..dims.n_experts {
+                if self.cache.used_bytes() + bytes > self.cache.capacity() {
+                    break 'outer;
+                }
+                let key = PayloadKey { layer, expert, kind: PayloadKind::Fp16 };
+                let lits =
+                    Arc::new(self.model.payload_base(layer, expert, Precision::Fp16, "hqq")?);
+                self.cache.insert(key, lits, bytes);
+            }
+        }
+        Ok(())
+    }
+
+    fn rank_table(model: &StagedModel, tag: &str) -> Result<Vec<Vec<f64>>> {
+        let m = &model.manifest.model;
+        let mut out = vec![vec![0f64; m.n_experts]; m.n_layers];
+        if let Some(entry) = model.manifest.rank_table.get(tag) {
+            for (key, rank) in model.manifest.mat_keys.iter().zip(&entry.ranks) {
+                let mut it = key.split('.');
+                let l: usize = it.next().context("mat key")?.parse()?;
+                let e: usize = it.next().context("mat key")?.parse()?;
+                out[l][e] += *rank as f64 / 3.0;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Quantizer family for payloads: GPTQ only when explicitly selected
+    /// via the comp-free accuracy baselines; BEAM ships HQQ (paper §3.1).
+    fn method(&self) -> String {
+        self.policy_cfg.method.clone()
+    }
+
+    fn payload_kind(precision: Precision) -> PayloadKind {
+        match precision {
+            Precision::Fp16 => PayloadKind::Fp16,
+            Precision::Int(b) | Precision::IntComp(b) => PayloadKind::Quant(b),
+        }
+    }
+
+    /// Wire bytes of an expert's base payload at `precision`.
+    fn base_bytes(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::Fp16 => self.model.manifest.transfer.fp16_expert_bytes,
+            Precision::Int(b) | Precision::IntComp(b) => self.model.manifest.q_expert_bytes(b),
+        }
+    }
+
+    /// Fetch (or hit) the base payload; returns (literals, ready time).
+    fn acquire_base(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        precision: Precision,
+        ready: VTime,
+    ) -> Result<(Arc<Vec<Literal>>, VTime)> {
+        let key = PayloadKey { layer, expert, kind: Self::payload_kind(precision) };
+        if let Some(p) = self.cache.get(&key) {
+            return Ok((p, ready));
+        }
+        let lits = Arc::new(self.model.payload_base(layer, expert, precision, &self.method())?);
+        let bytes = self.base_bytes(precision);
+        let done = self
+            .pcie
+            .transfer(ready, bytes, TransferClass::ExpertWeights);
+        self.cache.insert(key, Arc::clone(&lits), bytes);
+        Ok((lits, done))
+    }
+
+    /// Fetch (or hit) the compensator payload for `bits`.
+    fn acquire_comp(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        bits: u8,
+        ready: VTime,
+    ) -> Result<(Arc<Vec<Literal>>, VTime)> {
+        let key = PayloadKey { layer, expert, kind: PayloadKind::Comp(bits) };
+        if let Some(p) = self.cache.get(&key) {
+            return Ok((p, ready));
+        }
+        let tag = self.policy_cfg.comp_tag.clone();
+        let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
+        let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+        let done = self.pcie.transfer(ready, bytes, TransferClass::Compensator);
+        self.cache.insert(key, Arc::clone(&lits), bytes);
+        Ok((lits, done))
+    }
+
+    fn plan_layer(&self, probs: &[f32], active: &[bool], layer: usize) -> LayerPlan {
+        let m = &self.model.manifest.model;
+        let cache = &self.cache;
+        let probe = move |e: usize| {
+            cache.contains(&PayloadKey { layer, expert: e, kind: PayloadKind::Fp16 })
+        };
+        let ctx = PlanCtx {
+            probs,
+            n_tokens: active.len(),
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            active,
+            ndp: self.ndp.is_some(),
+            fp16_cached: &probe,
+        };
+        self.policy.plan(&ctx)
+    }
+
+    /// Execute one layer's MoE (plan → transfers → experts → combine).
+    /// Returns the MoE output accumulated on the host.
+    fn run_moe_layer(
+        &mut self,
+        layer: usize,
+        xn: &Literal,
+        plan: &LayerPlan,
+        active: &[bool],
+        prefill: bool,
+        router_done: VTime,
+    ) -> Result<Vec<f32>> {
+        let m = self.model.manifest.model.clone();
+        let n_rows = if prefill { m.t_prefill } else { m.b_max };
+        let d = m.d_model;
+        let mut moe = vec![0f32; n_rows * d];
+        let mut ndp_barrier = router_done;
+
+        for exec in &plan.execs {
+            let n_tok = exec.tokens.len();
+            match exec.location {
+                Location::Gpu => {
+                    let (base, t_base) =
+                        self.acquire_base(layer, exec.expert, exec.precision, router_done)?;
+                    let (comp, ready) = match exec.precision {
+                        Precision::IntComp(bits) => {
+                            let (c, t_comp) =
+                                self.acquire_comp(layer, exec.expert, bits, router_done)?;
+                            (Some(c), t_base.max(t_comp))
+                        }
+                        _ => (None, t_base),
+                    };
+                    let avg_rank = if comp.is_some() {
+                        self.avg_ranks[layer][exec.expert]
+                    } else {
+                        0.0
+                    };
+                    let op = self.cost.expert_gpu(n_tok, exec.precision, avg_rank);
+                    self.gpu.acquire(ready, op.seconds);
+                    self.breakdown.expert_compute_s += op.seconds;
+                    let refs: Vec<&Literal> = match &comp {
+                        Some(c) => base.iter().chain(c.iter()).collect(),
+                        None => base.iter().collect(),
+                    };
+                    let y = self.model.run_expert(exec.precision, prefill, xn, &refs)?;
+                    combine::accumulate(&mut moe, &y.y, exec, d);
+                }
+                Location::Ndp => {
+                    // Activations out, near-data execute, activations back.
+                    let act = 2 * n_tok * d; // fp16 per direction
+                    let link = self.ndp_link.as_mut().expect("ndp exec without ndp link");
+                    let t_in = link.transfer(router_done, act, TransferClass::Activations);
+                    let dev = self.ndp.as_mut().expect("ndp exec without device");
+                    let op = self.cost.expert_ndp(
+                        n_tok,
+                        exec.precision,
+                        &dev.cfg.clone(),
+                    );
+                    let t_done = dev.execute_expert(&self.cost, t_in, n_tok, exec.precision);
+                    self.breakdown.ndp_compute_s += op.seconds;
+                    let link = self.ndp_link.as_mut().unwrap();
+                    let t_back = link.transfer(t_done, act, TransferClass::Activations);
+                    ndp_barrier = ndp_barrier.max(t_back);
+                    // Numerics: same stage executed locally (weights are
+                    // resident near-data; no PCIe charge).
+                    let lits =
+                        self.model
+                            .payload_base(layer, exec.expert, exec.precision, &self.method())?;
+                    let refs: Vec<&Literal> = lits.iter().collect();
+                    let y = self.model.run_expert(exec.precision, prefill, xn, &refs)?;
+                    combine::accumulate(&mut moe, &y.y, exec, d);
+                }
+            }
+        }
+
+        // Shared experts (DeepSeek-style): GPU-resident, fp16, every token.
+        for s in 0..m.n_shared {
+            let op = self.cost.expert_gpu(active.iter().filter(|&&a| a).count(), Precision::Fp16, 0.0);
+            self.gpu.acquire(router_done, op.seconds);
+            self.breakdown.expert_compute_s += op.seconds;
+            let y = self.model.run_shared_expert(layer, s, prefill, xn)?;
+            combine::accumulate_all(&mut moe, &y.y, active, d);
+        }
+
+        self.gpu.sync_to(ndp_barrier);
+        Ok(moe)
+    }
+
+    /// Public planning hook for the scorer/harness (same path as serving).
+    pub fn plan_layer_pub(&self, probs: &[f32], active: &[bool], layer: usize) -> LayerPlan {
+        self.plan_layer(probs, active, layer)
+    }
+
+    /// Public MoE execution hook for the scorer (virtual time still
+    /// advances, but scoring runs use a dedicated engine instance).
+    pub fn run_moe_layer_pub(
+        &mut self,
+        layer: usize,
+        xn: &Literal,
+        plan: &LayerPlan,
+        active: &[bool],
+        prefill: bool,
+    ) -> Result<Vec<f32>> {
+        let t = self.clock.now();
+        self.run_moe_layer(layer, xn, plan, active, prefill, t)
+    }
+
+    /// One decode step over all active slots.
+    pub fn decode_step(&mut self) -> Result<()> {
+        let m = self.model.manifest.model.clone();
+        let (tokens, pos) = self.state.decode_inputs();
+        let active = self.state.active_rows();
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active == 0 {
+            return Ok(());
+        }
+        let step_t0 = self.clock.now();
+
+        let mut x = self.model.embed(&tokens, false)?;
+        let op = self.cost.embed(n_active);
+        self.gpu.acquire(step_t0, op.seconds);
+
+        let ctx_total: usize = pos.iter().map(|&p| p as usize + 1).sum();
+        for layer in 0..m.n_layers {
+            let (x2, kc, vc) = self.model.attn_decode(
+                layer,
+                &x,
+                &self.state.kv[layer].k,
+                &self.state.kv[layer].v,
+                &pos,
+            )?;
+            self.state.kv[layer] = LayerKv { k: kc, v: vc };
+            let (xn, probs) = self.model.router(layer, &x2, false)?;
+            let op = self.cost.attn_router(n_active, ctx_total);
+            let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
+            self.breakdown.attn_router_s += op.seconds;
+
+            let plan = self.plan_layer(&probs, &active, layer);
+            debug_assert!(combine::plan_is_partition(&plan, m.b_max, m.top_k, &active));
+
+            if let Some(t) = self.trace.as_mut() {
+                if active[0] {
+                    let row = &probs[..m.n_experts];
+                    let sel = crate::policies::plan::topk_renorm(row, m.top_k)
+                        .into_iter()
+                        .map(|(e, w, _)| (e, w))
+                        .collect();
+                    t.push(self.decode_steps as usize, layer, sel);
+                }
+            }
+
+            let moe = self.run_moe_layer(layer, &xn, &plan, &active, false, router_done)?;
+            let mut xh = to_vec_f32(&x2)?;
+            for (a, b) in xh.iter_mut().zip(&moe) {
+                *a += b;
+            }
+            x = self.model.lit_x(m.b_max, &xh)?;
+        }
+
+        let logits = self.model.head(&x)?;
+        let op = self.cost.head(n_active);
+        self.gpu.acquire(self.clock.now(), op.seconds);
+        self.breakdown.head_s += op.seconds;
+
+        self.end_step();
+        let now = self.clock.now();
+
+        // Greedy sampling + completion handling.
+        for slot in 0..m.b_max {
+            if let Some(seq) = self.state.slots[slot].as_mut() {
+                let row = &logits[slot * m.vocab..(slot + 1) * m.vocab];
+                let next = argmax(row) as i32;
+                seq.tokens.push(next);
+                self.total_generated += 1;
+                if seq.done() {
+                    let seq = self.state.release(slot).unwrap();
+                    self.records.push(RequestRecord {
+                        id: seq.request_id,
+                        prompt_len: seq.prompt_len,
+                        generated: seq.generated(),
+                        arrival: seq.arrival,
+                        first_token_at: seq.first_token_at.unwrap_or(now),
+                        finished_at: now,
+                    });
+                }
+            }
+        }
+        self.decode_steps += 1;
+        Ok(())
+    }
+
+    /// Prefill one request into `slot` (its own virtual step).
+    pub fn prefill(&mut self, slot: usize, req: &Request) -> Result<()> {
+        let m = self.model.manifest.model.clone();
+        let plen = req.prompt.len().min(m.t_prefill);
+        self.state.admit(slot, req, self.clock.now());
+        let step_t0 = self.clock.now();
+
+        let mut toks = req.prompt[..plen].to_vec();
+        toks.resize(m.t_prefill, 0);
+        let mut x = self.model.embed(&toks, true)?;
+        self.gpu.acquire(step_t0, self.cost.embed(plen).seconds);
+
+        let active: Vec<bool> = (0..m.t_prefill).map(|i| i < plen).collect();
+        let ctx_total = plen * (plen + 1) / 2;
+        for layer in 0..m.n_layers {
+            let (x2, kc, vc) = self.model.attn_prefill(layer, &x)?;
+            self.state.install_prefill(slot, layer, &kc, &vc)?;
+            let (xn, probs) = self.model.router(layer, &x2, true)?;
+            let op = self.cost.attn_router(plen, ctx_total);
+            let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
+            self.breakdown.attn_router_s += op.seconds;
+
+            let plan = self.plan_layer(&probs, &active, layer);
+            let moe = self.run_moe_layer(layer, &xn, &plan, &active, true, router_done)?;
+            let mut xh = to_vec_f32(&x2)?;
+            for (a, b) in xh.iter_mut().zip(&moe) {
+                *a += b;
+            }
+            x = self.model.lit_x(m.t_prefill, &xh)?;
+        }
+
+        // First generated token from the last prompt position's hidden.
+        let xh = to_vec_f32(&x)?;
+        let mut batch_x = vec![0f32; m.b_max * m.d_model];
+        batch_x[slot * m.d_model..(slot + 1) * m.d_model]
+            .copy_from_slice(&xh[(plen - 1) * m.d_model..plen * m.d_model]);
+        let x_lit = self.model.lit_x(m.b_max, &batch_x)?;
+        let logits = self.model.head(&x_lit)?;
+        self.gpu.acquire(self.clock.now(), self.cost.head(1).seconds);
+
+        self.end_step();
+        let now = self.clock.now();
+        let seq = self.state.slots[slot].as_mut().unwrap();
+        let next = argmax(&logits[slot * m.vocab..(slot + 1) * m.vocab]) as i32;
+        seq.tokens.push(next);
+        seq.first_token_at = Some(now);
+        self.total_generated += 1;
+        self.prefills += 1;
+        Ok(())
+    }
+
+    fn end_step(&mut self) {
+        let mut resources: Vec<&mut Resource> = vec![&mut self.gpu, &mut self.pcie.resource];
+        if let Some(l) = self.ndp_link.as_mut() {
+            resources.push(&mut l.resource);
+        }
+        if let Some(n) = self.ndp.as_mut() {
+            resources.push(&mut n.compute);
+        }
+        self.clock.end_step(&mut resources);
+    }
+
+    pub fn now(&self) -> VTime {
+        self.clock.now()
+    }
+
+    pub fn report(&self) -> Report {
+        let mut bytes = std::collections::HashMap::new();
+        let mut breakdown = self.breakdown.clone();
+        let logs = [
+            Some(&self.pcie.log),
+            self.ndp_link.as_ref().map(|l| &l.log),
+        ];
+        for log in logs.into_iter().flatten() {
+            bytes
+                .entry("expert_weights".to_string())
+                .and_modify(|b| *b += log.bytes_of(TransferClass::ExpertWeights))
+                .or_insert(log.bytes_of(TransferClass::ExpertWeights));
+            bytes
+                .entry("compensator".to_string())
+                .and_modify(|b| *b += log.bytes_of(TransferClass::Compensator))
+                .or_insert(log.bytes_of(TransferClass::Compensator));
+            bytes
+                .entry("activations".to_string())
+                .and_modify(|b| *b += log.bytes_of(TransferClass::Activations))
+                .or_insert(log.bytes_of(TransferClass::Activations));
+        }
+        breakdown.transfer_weights_s = self
+            .pcie
+            .log
+            .events
+            .iter()
+            .filter(|e| e.class == TransferClass::ExpertWeights)
+            .map(|e| e.end - e.start)
+            .sum();
+        breakdown.transfer_comp_s = self
+            .pcie
+            .log
+            .events
+            .iter()
+            .filter(|e| e.class == TransferClass::Compensator)
+            .map(|e| e.end - e.start)
+            .sum();
+        breakdown.transfer_act_s = self
+            .ndp_link
+            .as_ref()
+            .map(|l| l.log.busy_seconds())
+            .unwrap_or(0.0);
+
+        Report {
+            policy: self.policy.name().to_string(),
+            model: self.model.manifest.model.name.clone(),
+            n_requests: self.records.len(),
+            total_generated: self.total_generated,
+            virtual_seconds: self.clock.now(),
+            wall_seconds: self.started.elapsed().as_secs_f64(),
+            decode_steps: self.decode_steps,
+            prefills: self.prefills,
+            breakdown,
+            bytes,
+            cache_hit_rate: self.cache.hit_rate(),
+            requests: self.records.clone(),
+            pjrt_execs: self
+                .model
+                .engine()
+                .exec_count
+                .load(std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Serving metrics: virtual-time ledgers (the paper's numbers), wall-clock
+//! (what the perf pass optimizes), byte counters, per-request latencies.
+
+use std::collections::HashMap;
+
+use crate::sim::clock::VTime;
+
+/// Where virtual time went — Fig. 1a's categories.
+#[derive(Debug, Default, Clone)]
+pub struct StepBreakdown {
+    pub attn_router_s: f64,
+    pub expert_compute_s: f64,
+    pub ndp_compute_s: f64,
+    pub transfer_weights_s: f64,
+    pub transfer_comp_s: f64,
+    pub transfer_act_s: f64,
+    pub head_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn add(&mut self, other: &StepBreakdown) {
+        self.attn_router_s += other.attn_router_s;
+        self.expert_compute_s += other.expert_compute_s;
+        self.ndp_compute_s += other.ndp_compute_s;
+        self.transfer_weights_s += other.transfer_weights_s;
+        self.transfer_comp_s += other.transfer_comp_s;
+        self.transfer_act_s += other.transfer_act_s;
+        self.head_s += other.head_s;
+    }
+
+    pub fn total_transfer(&self) -> f64 {
+        self.transfer_weights_s + self.transfer_comp_s + self.transfer_act_s
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.attn_router_s + self.expert_compute_s + self.ndp_compute_s + self.head_s
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub generated: usize,
+    pub arrival: VTime,
+    pub first_token_at: VTime,
+    pub finished_at: VTime,
+}
+
+/// Final report of a serve run.
+#[derive(Debug, Default, Clone)]
+pub struct Report {
+    pub policy: String,
+    pub model: String,
+    pub n_requests: usize,
+    pub total_generated: usize,
+    pub virtual_seconds: f64,
+    pub wall_seconds: f64,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub breakdown: StepBreakdown,
+    pub bytes: HashMap<String, usize>,
+    pub cache_hit_rate: f64,
+    pub requests: Vec<RequestRecord>,
+    pub pjrt_execs: u64,
+}
+
+impl Report {
+    /// End-to-end throughput in generated tokens per (virtual) second —
+    /// the y-axis of the paper's Fig. 7.
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.virtual_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total_generated as f64 / self.virtual_seconds
+    }
+
+    pub fn wall_tokens_per_second(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total_generated as f64 / self.wall_seconds
+    }
+
+    pub fn mean_request_latency(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests
+            .iter()
+            .map(|r| r.finished_at - r.arrival)
+            .sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests
+            .iter()
+            .map(|r| r.first_token_at - r.arrival)
+            .sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<22} {:>8.2} tok/s (virtual) | transfer {:>6.1}% | cache hit {:>5.1}% | {} reqs, {} tokens",
+            self.policy,
+            self.tokens_per_second(),
+            100.0 * self.breakdown.total_transfer()
+                / (self.breakdown.total_transfer() + self.breakdown.total_compute()).max(1e-12),
+            100.0 * self.cache_hit_rate,
+            self.n_requests,
+            self.total_generated,
+        )
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator — BEAM's L3.
+//!
+//! * [`state`]      — sequence slots + batched KV-cache management
+//! * [`batcher`]    — request queue, admission, continuous batching
+//! * [`combine`]    — MoE output combination (top-k weights × expert outputs)
+//! * [`metrics`]    — virtual/wall time ledgers, per-request latencies
+//! * [`engine`]     — `ServeEngine`: the decode/prefill loops wiring the
+//!                    staged model, the policy, the offload substrate and
+//!                    the cost model together
+//! * [`scheduler`]  — the outer serve loop (admit → prefill → decode)
+
+pub mod batcher;
+pub mod combine;
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+pub mod state;
+
+pub use engine::ServeEngine;
+pub use metrics::{Report, StepBreakdown};

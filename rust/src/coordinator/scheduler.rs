@@ -1,0 +1,89 @@
+//! The outer serve loop + the teacher-forced scorer.
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Action, Batcher};
+use crate::coordinator::engine::{argmax, ServeEngine};
+use crate::coordinator::metrics::Report;
+use crate::runtime::literal::to_vec_f32;
+use crate::workload::Request;
+
+/// Serve a workload to completion; returns the run report.
+pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report> {
+    let mut batcher = Batcher::new(requests);
+    loop {
+        let action = batcher.next_action(
+            engine.now(),
+            engine.state.free_slot(),
+            engine.state.n_active(),
+        );
+        match action {
+            Action::Prefill(slot, req) => engine.prefill(slot, &req)?,
+            Action::Decode => engine.decode_step()?,
+            Action::IdleUntil(t) => engine.clock.advance_to(t),
+            Action::Done => break,
+        }
+    }
+    Ok(engine.report())
+}
+
+/// Teacher-forced scoring of one sequence through the *serving* numerics
+/// (prefill stages + the policy's per-token compensation decisions).
+///
+/// Returns per-position logits (len-1 rows scored against tokens[1..]).
+/// This is what pins the rust path against `python/compile/eval.py` and
+/// regenerates Fig. 6 / Fig. 8 / Table 2 without python.
+pub fn score_sequence(engine: &mut ServeEngine, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    let m = engine.model.manifest.model.clone();
+    let len = tokens.len().min(m.t_prefill);
+    let mut toks = tokens[..len].to_vec();
+    toks.resize(m.t_prefill, 0);
+    let active: Vec<bool> = (0..m.t_prefill).map(|i| i < len).collect();
+
+    let mut x = engine.model.embed(&toks, true)?;
+    for layer in 0..m.n_layers {
+        let (x2, _kc, _vc) = engine.model.attn_prefill(layer, &x)?;
+        let (xn, probs) = engine.model.router(layer, &x2, true)?;
+        let plan = engine.plan_layer_pub(&probs, &active, layer);
+        let moe = engine.run_moe_layer_pub(layer, &xn, &plan, &active, true)?;
+        let mut xh = to_vec_f32(&x2)?;
+        for (a, b) in xh.iter_mut().zip(&moe) {
+            *a += b;
+        }
+        x = engine.model.lit_x(m.t_prefill, &xh)?;
+    }
+    let logits = engine.model.head_prefill(&x)?;
+    Ok(logits
+        .chunks(m.vocab)
+        .take(len)
+        .map(|c| c.to_vec())
+        .collect())
+}
+
+/// NLL + cloze metrics over a scored sequence (greedy prediction).
+pub struct SeqScore {
+    pub nll_sum: f64,
+    pub n_scored: usize,
+    pub cloze_hits: usize,
+    pub cloze_total: usize,
+}
+
+pub fn score_metrics(logits: &[Vec<f32>], tokens: &[i32], det: &[i8]) -> SeqScore {
+    let mut s = SeqScore { nll_sum: 0.0, n_scored: 0, cloze_hits: 0, cloze_total: 0 };
+    for t in 1..tokens.len().min(logits.len() + 1) {
+        let row = &logits[t - 1];
+        let target = tokens[t] as usize;
+        // log-softmax
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+        s.nll_sum += (lse - row[target]) as f64;
+        s.n_scored += 1;
+        if det[t] > 0 {
+            s.cloze_total += 1;
+            if argmax(row) == target {
+                s.cloze_hits += 1;
+            }
+        }
+    }
+    s
+}

@@ -1,0 +1,141 @@
+//! Sequence slots and batched KV-cache state.
+//!
+//! The decode batch has `b_max` fixed slots.  Each active slot owns a
+//! sequence (prompt + generated tokens) and one row of every layer's
+//! batched KV-cache literal.  Freed slots are reused without zeroing — the
+//! decode attention kernel masks reads beyond each slot's length
+//! (`kernels/attention.py`), so stale rows are harmless by construction.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::literal::{lit_f32, to_vec_f32};
+use crate::runtime::StagedModel;
+use crate::sim::clock::VTime;
+use crate::workload::Request;
+
+/// One in-flight request bound to a slot.
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    pub request_id: u64,
+    /// Prompt + generated tokens.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub arrival: VTime,
+    pub first_token_at: Option<VTime>,
+}
+
+impl ActiveSeq {
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated() >= self.max_new_tokens
+    }
+
+    /// Write position of the *next* decode step's KV entry.
+    pub fn next_pos(&self) -> i32 {
+        (self.tokens.len() - 1) as i32
+    }
+}
+
+/// Batched KV caches for one layer.
+pub struct LayerKv {
+    pub k: Literal,
+    pub v: Literal,
+}
+
+pub struct BatchState {
+    pub slots: Vec<Option<ActiveSeq>>,
+    pub kv: Vec<LayerKv>,
+    b_max: usize,
+    n_heads: usize,
+    s_max: usize,
+    d_head: usize,
+}
+
+impl BatchState {
+    pub fn new(model: &StagedModel) -> Result<Self> {
+        let m = &model.manifest.model;
+        let mut kv = Vec::with_capacity(m.n_layers);
+        for _ in 0..m.n_layers {
+            let (k, v) = model.empty_caches()?;
+            kv.push(LayerKv { k, v });
+        }
+        Ok(BatchState {
+            slots: (0..m.b_max).map(|_| None).collect(),
+            kv,
+            b_max: m.b_max,
+            n_heads: m.n_heads,
+            s_max: m.s_max,
+            d_head: m.d_head(),
+        })
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    pub fn active_rows(&self) -> Vec<bool> {
+        self.slots.iter().map(|s| s.is_some()).collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn admit(&mut self, slot: usize, req: &Request, now: VTime) {
+        debug_assert!(self.slots[slot].is_none());
+        self.slots[slot] = Some(ActiveSeq {
+            request_id: req.id,
+            tokens: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new_tokens: req.max_new_tokens,
+            arrival: req.arrival.max(now),
+            first_token_at: None,
+        });
+    }
+
+    pub fn release(&mut self, slot: usize) -> Option<ActiveSeq> {
+        self.slots[slot].take()
+    }
+
+    /// Per-slot decode inputs: (last token, write position).  Inactive
+    /// slots get (0, 0) — the attention kernel clamps lengths to ≥1 so the
+    /// padded rows produce finite garbage that the combine step ignores.
+    pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = vec![0i32; self.b_max];
+        let mut pos = vec![0i32; self.b_max];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(seq) = s {
+                tokens[i] = *seq.tokens.last().unwrap();
+                pos[i] = seq.next_pos();
+            }
+        }
+        (tokens, pos)
+    }
+
+    /// Install a freshly prefilled slot cache (H, S, dh) into the batched
+    /// (B, H, S, dh) literals for `slot`.  Host-side patch: runs once per
+    /// request, not per token.
+    pub fn install_prefill(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        k_slot: &Literal,
+        v_slot: &Literal,
+    ) -> Result<()> {
+        let row = self.n_heads * self.s_max * self.d_head;
+        let dims = [self.b_max, self.n_heads, self.s_max, self.d_head];
+        let lk = &mut self.kv[layer];
+        for (batched, incoming) in [(&mut lk.k, k_slot), (&mut lk.v, v_slot)] {
+            let mut host = to_vec_f32(batched)?;
+            let slot_data = to_vec_f32(incoming)?;
+            host[slot * row..(slot + 1) * row].copy_from_slice(&slot_data);
+            *batched = lit_f32(&dims, &host)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,12 @@
+//! Figure/table regeneration harness (the DESIGN.md §5 experiment index).
+//!
+//! Each `figN` function reproduces one paper artifact from the same
+//! serving/eval machinery the examples use and writes a small text/CSV
+//! report.  Absolute numbers differ from the paper (tiny models, simulated
+//! testbed); the *shape* — orderings, ratios, crossovers — is the
+//! reproduction target (EXPERIMENTS.md records both).
+
+pub mod figures;
+pub mod report;
+
+pub use report::ReportSink;

@@ -1,0 +1,53 @@
+//! Report sink: tee human-readable tables to stdout and CSV files.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+pub struct ReportSink {
+    pub out_dir: Option<PathBuf>,
+    buffer: String,
+}
+
+impl ReportSink {
+    pub fn new(out_dir: Option<PathBuf>) -> Self {
+        if let Some(d) = &out_dir {
+            let _ = fs::create_dir_all(d);
+        }
+        ReportSink { out_dir, buffer: String::new() }
+    }
+
+    /// Print a line and keep it for the flushed report.
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        let _ = writeln!(self.buffer, "{}", s.as_ref());
+    }
+
+    pub fn blank(&mut self) {
+        self.line("");
+    }
+
+    /// Write a CSV file next to the text report.
+    pub fn csv(&self, name: &str, header: &str, rows: &[String]) -> Result<()> {
+        if let Some(d) = &self.out_dir {
+            let mut body = String::from(header);
+            body.push('\n');
+            for r in rows {
+                body.push_str(r);
+                body.push('\n');
+            }
+            fs::write(d.join(name), body)?;
+        }
+        Ok(())
+    }
+
+    /// Flush the accumulated text report.
+    pub fn flush(&self, name: &str) -> Result<()> {
+        if let Some(d) = &self.out_dir {
+            fs::write(d.join(name), &self.buffer)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,39 @@
+//! # beam-moe — Bandwidth-Efficient Adaptive MoE via Low-Rank Compensation
+//!
+//! Rust L3 coordinator for the BEAM serving stack (DESIGN.md).  The crate
+//! loads AOT-compiled HLO artifacts produced by `python/compile/aot.py`,
+//! executes them on the PJRT CPU client for *numerics*, and drives an
+//! event-driven hardware model (H100 + PCIe + NDP) for the paper's
+//! *performance* metrics — python never runs on the request path.
+//!
+//! Module map (bottom-up):
+//!
+//! * [`config`]     — model/system/policy configuration
+//! * [`manifest`]   — artifact manifest + BEAMW weight store
+//! * [`quant`]      — bit-format accounting + reference dequantization
+//! * [`runtime`]    — PJRT engine, staged model executables
+//! * [`sim`]        — virtual clock + H100/NDP roofline cost model
+//! * [`offload`]    — memory tiers, link simulator, expert LRU cache, NDP
+//! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
+//!                    **BEAM** (router-guided top-n compensation — the paper)
+//! * [`coordinator`]— continuous batcher, prefill/decode scheduler, KV state,
+//!                    serving engine, metrics
+//! * [`workload`]   — request generators and traces
+//! * [`harness`]    — table/figure regeneration drivers (EXPERIMENTS.md)
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod jsonx;
+pub mod manifest;
+pub mod offload;
+pub mod policies;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+
+pub use config::{ModelDims, PolicyKind, Precision, SystemConfig};
+pub use coordinator::engine::ServeEngine;
+pub use manifest::{Manifest, WeightStore};
+pub use runtime::engine::Engine;

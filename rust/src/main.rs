@@ -1,0 +1,203 @@
+//! `beam` — the BEAM serving CLI (leader entrypoint).
+//!
+//! ```text
+//! beam serve  --model mixtral-tiny --policy beam --bits 2 [--ndp]
+//!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
+//! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
+//!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|all> [--out DIR] [--full]
+//! beam info   --model mixtral-tiny
+//! ```
+//!
+//! Requires `make artifacts` to have produced `artifacts/<model>/` first.
+//! (Arg parsing is in-tree: the offline build vendors no clap — Cargo.toml.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::ServeEngine;
+use beam_moe::harness::figures::{self, Harness};
+use beam_moe::manifest::Manifest;
+use beam_moe::offload::MemoryTiers;
+use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+
+const USAGE: &str = "usage: beam <serve|eval|figure|info> [--flags]  (see rust/src/main.rs docs)";
+
+/// Tiny flag parser: positional args + `--key value` + boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        let bools = ["ndp", "full", "raw-system"];
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if bools.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).with_context(|| format!("--{key} needs a value"))?;
+                    flags.insert(key.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn opt(&self, key: &str) -> Option<&String> {
+        self.flags.get(key)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
+    let kind: PolicyKind = args.get("policy", "beam").parse()?;
+    let bits: u8 = args.num("bits", 2u8)?;
+    let top_n: usize = args.num("top-n", manifest.model.top_n)?;
+    let mut p = PolicyConfig::new(kind, bits, top_n);
+    p.comp_tag = args.get("comp-tag", "default");
+    p.method = args.get("method", "hqq");
+    if let Some(pos) = args.opt("positions") {
+        p.restore_positions = Some(
+            pos.split(',')
+                .map(|s| s.trim().parse::<usize>().context("--positions"))
+                .collect::<Result<_>>()?,
+        );
+    }
+    Ok(p)
+}
+
+fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
+    if args.has("raw-system") {
+        if args.has("ndp") { SystemConfig::gpu_ndp() } else { SystemConfig::gpu_only() }
+    } else {
+        SystemConfig::scaled_for(&manifest.model, args.has("ndp"))
+    }
+}
+
+fn load_engine(artifacts: &PathBuf, args: &Args) -> Result<ServeEngine> {
+    let model_name = args.get("model", "mixtral-tiny");
+    let manifest = Manifest::load(artifacts.join(&model_name))?;
+    let engine = Arc::new(Engine::cpu()?);
+    let policy = policy_config(args, &manifest)?;
+    let model = StagedModel::load(engine, manifest)?;
+    let sys = system(args, &model.manifest);
+    ServeEngine::new(model, policy, sys)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        bail!("{USAGE}");
+    }
+    let args = Args::parse(&argv[1..])?;
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+
+    match argv[0].as_str() {
+        "serve" => {
+            let mut engine = load_engine(&artifacts, &args)?;
+            let wl = WorkloadConfig {
+                n_requests: args.num("requests", 8usize)?,
+                prompt_len: args.num("prompt-len", 256usize)?,
+                output_len: args.num("output-len", 128usize)?,
+                arrival_rate: args.opt("arrival-rate").map(|v| v.parse()).transpose()?,
+                seed: args.num("seed", 0xBEA4u64)?,
+            };
+            let eval_store =
+                beam_moe::manifest::WeightStore::load(engine.model.manifest.eval_path())?;
+            let reqs = WorkloadGen::generate(&wl, &eval_store)?;
+            let report = serve(&mut engine, reqs)?;
+            println!("{}", report.summary_line());
+            println!(
+                "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | pjrt execs {}",
+                report.virtual_seconds,
+                report.wall_seconds,
+                report.mean_ttft(),
+                report.mean_request_latency(),
+                report.pjrt_execs,
+            );
+            let b = &report.breakdown;
+            println!(
+                "  breakdown (s): attn+router {:.4} | experts {:.4} | ndp {:.4} | head {:.4} | xfer weights {:.4} | xfer comp {:.4} | xfer acts {:.4}",
+                b.attn_router_s, b.expert_compute_s, b.ndp_compute_s, b.head_s,
+                b.transfer_weights_s, b.transfer_comp_s, b.transfer_act_s,
+            );
+            for (k, v) in &report.bytes {
+                println!("  bytes[{k}] = {v}");
+            }
+            Ok(())
+        }
+        "eval" => {
+            let h = Harness::new(artifacts.clone(), None, false)?;
+            let model_name = args.get("model", "mixtral-tiny");
+            let manifest = Manifest::load(artifacts.join(&model_name))?;
+            let cfg = policy_config(&args, &manifest)?;
+            let seqs: usize = args.num("seqs", 32usize)?;
+            let label = format!("{:?}-{}bit", cfg.kind, cfg.bits);
+            let (ppl, acc) = h.score_variant(&model_name, cfg, seqs)?;
+            println!("{model_name} {label}: ppl={ppl:.3} cloze_acc={:.2}%", acc * 100.0);
+            Ok(())
+        }
+        "figure" => {
+            let name = args
+                .positional
+                .first()
+                .context("figure name required (fig1..fig8, tab2, all)")?
+                .clone();
+            let out = args.opt("out").map(PathBuf::from);
+            let mut h = Harness::new(artifacts, out, args.has("full"))?;
+            figures::run(&name, &mut h)
+        }
+        "info" => {
+            let model_name = args.get("model", "mixtral-tiny");
+            let manifest = Manifest::load(artifacts.join(&model_name))?;
+            println!("{:#?}", manifest.model);
+            let tiers = MemoryTiers::new(manifest.model.clone(), SystemConfig::gpu_only());
+            println!("{:#?}", tiers.report());
+            let mut stages: Vec<&str> = manifest.stages.keys().map(|s| s.as_str()).collect();
+            stages.sort_unstable();
+            println!("stages: {}", stages.join(", "));
+            println!(
+                "transfer bytes: fp16={} int4={} int3={} int2={}",
+                manifest.transfer.fp16_expert_bytes,
+                manifest.q_expert_bytes(4),
+                manifest.q_expert_bytes(3),
+                manifest.q_expert_bytes(2),
+            );
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}

@@ -1,0 +1,359 @@
+//! Artifact manifest parsing and the BEAMW weight store.
+//!
+//! `manifest.json` (written by `python/compile/aot.py`) indexes everything
+//! the coordinator needs: model dims, HLO stage files, quantization layout,
+//! compensator rank tables and the transfer-byte tables the link simulator
+//! charges.  `weights.beamw` / `eval.beamw` are BEAMW containers (see
+//! `python/compile/beamw.py` for the format spec — magic `BEAMW001`,
+//! u64 header length, JSON tensor table, raw little-endian blob).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelDims;
+use crate::jsonx::Value;
+
+/// One HLO stage entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct StageEntry {
+    pub file: String,
+    pub n_inputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantInfo {
+    pub methods: Vec<String>,
+    pub bits: Vec<u8>,
+    pub comp_bits: Vec<u8>,
+    /// bits -> kernel container bits ("3" rides in 4-bit containers).
+    pub container_bits: HashMap<u8, u8>,
+    pub v_group: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RankTableEntry {
+    /// True compensator rank per matrix, ordered like `mat_keys`.
+    pub ranks: Vec<usize>,
+    pub r_avg: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransferTables {
+    /// Bytes to move one FP16 expert (w1+w2+w3) across a link.
+    pub fp16_expert_bytes: usize,
+    /// bits -> bytes for one packed quantized expert incl. fp16 metadata.
+    pub q_expert_bytes: HashMap<u8, usize>,
+    /// tag -> bits -> [layer][expert] compensator bytes (true ranks).
+    pub comp_bytes: HashMap<String, HashMap<u8, Vec<Vec<usize>>>>,
+}
+
+/// Parsed `artifacts/<model>/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelDims,
+    pub stages: HashMap<String, StageEntry>,
+    pub quant: QuantInfo,
+    pub rank_table: HashMap<String, RankTableEntry>,
+    pub mat_keys: Vec<String>,
+    pub transfer: TransferTables,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(model_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = model_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Value::parse(&raw).context("parsing manifest.json")?;
+
+        let m = v.get("model")?;
+        let model = ModelDims {
+            name: m.get("name")?.str()?.to_string(),
+            vocab: m.get("vocab")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            d_ff: m.get("d_ff")?.usize()?,
+            n_layers: m.get("n_layers")?.usize()?,
+            n_heads: m.get("n_heads")?.usize()?,
+            n_experts: m.get("n_experts")?.usize()?,
+            top_k: m.get("top_k")?.usize()?,
+            n_shared: m.get("n_shared")?.usize()?,
+            s_max: m.get("s_max")?.usize()?,
+            t_prefill: m.get("t_prefill")?.usize()?,
+            b_max: m.get("b_max")?.usize()?,
+            group_size: m.get("group_size")?.usize()?,
+            rank_pad: m.get("rank_pad")?.usize()?,
+            r_avg: m.get("r_avg")?.usize()?,
+            top_n: m.get("top_n")?.usize()?,
+        };
+
+        let mut stages = HashMap::new();
+        for (name, entry) in v.get("stages")?.obj()? {
+            stages.insert(
+                name.clone(),
+                StageEntry {
+                    file: entry.get("file")?.str()?.to_string(),
+                    n_inputs: entry.opt("inputs").map(|i| i.arr().map(|a| a.len()).unwrap_or(0)).unwrap_or(0),
+                },
+            );
+        }
+
+        let q = v.get("quant")?;
+        let quant = QuantInfo {
+            methods: q
+                .get("methods")?
+                .arr()?
+                .iter()
+                .map(|s| s.str().map(str::to_string))
+                .collect::<Result<_>>()?,
+            bits: q.get("bits")?.usize_vec()?.iter().map(|&b| b as u8).collect(),
+            comp_bits: q.get("comp_bits")?.usize_vec()?.iter().map(|&b| b as u8).collect(),
+            container_bits: q
+                .get("container_bits")?
+                .obj()?
+                .iter()
+                .map(|(k, val)| Ok((k.parse::<u8>()?, val.usize()? as u8)))
+                .collect::<Result<_>>()?,
+            v_group: q.get("v_group")?.usize()?,
+        };
+
+        let mut rank_table = HashMap::new();
+        for (tag, entry) in v.get("rank_table")?.obj()? {
+            rank_table.insert(
+                tag.clone(),
+                RankTableEntry {
+                    ranks: entry.get("ranks")?.usize_vec()?,
+                    r_avg: entry.get("r_avg")?.usize()?,
+                },
+            );
+        }
+
+        let mat_keys = v
+            .get("mat_keys")?
+            .arr()?
+            .iter()
+            .map(|s| s.str().map(str::to_string))
+            .collect::<Result<_>>()?;
+
+        let t = v.get("transfer")?;
+        let mut q_expert_bytes = HashMap::new();
+        for (bits, val) in t.get("q_expert_bytes")?.obj()? {
+            q_expert_bytes.insert(bits.parse::<u8>()?, val.usize()?);
+        }
+        let mut comp_bytes = HashMap::new();
+        for (tag, by_bits) in t.get("comp_bytes")?.obj()? {
+            let mut inner = HashMap::new();
+            for (bits, table) in by_bits.obj()? {
+                let rows: Vec<Vec<usize>> = table
+                    .arr()?
+                    .iter()
+                    .map(|r| r.usize_vec())
+                    .collect::<Result<_>>()?;
+                inner.insert(bits.parse::<u8>()?, rows);
+            }
+            comp_bytes.insert(tag.clone(), inner);
+        }
+        let transfer = TransferTables {
+            fp16_expert_bytes: t.get("fp16_expert_bytes")?.usize()?,
+            q_expert_bytes,
+            comp_bytes,
+        };
+
+        Ok(Manifest { model, stages, quant, rank_table, mat_keys, transfer, dir })
+    }
+
+    pub fn stage_path(&self, name: &str) -> Result<PathBuf> {
+        let entry = self
+            .stages
+            .get(name)
+            .with_context(|| format!("stage `{name}` not in manifest"))?;
+        Ok(self.dir.join(&entry.file))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.beamw")
+    }
+
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join("eval.beamw")
+    }
+
+    /// Container bit-width the kernels consume for a given precision.
+    pub fn container_bits(&self, bits: u8) -> u8 {
+        self.quant
+            .container_bits
+            .get(&bits)
+            .copied()
+            .unwrap_or(if bits == 3 { 4 } else { bits })
+    }
+
+    /// Bytes on the wire for one expert at `bits` (packed codes + metadata).
+    pub fn q_expert_bytes(&self, bits: u8) -> usize {
+        self.transfer
+            .q_expert_bytes
+            .get(&bits)
+            .copied()
+            .unwrap_or_else(|| self.model.expert_params() * bits as usize / 8)
+    }
+
+    /// Compensator bytes for (tag, bits, layer, expert); 0 when absent.
+    pub fn comp_bytes(&self, tag: &str, bits: u8, layer: usize, expert: usize) -> usize {
+        self.transfer
+            .comp_bytes
+            .get(tag)
+            .and_then(|m| m.get(&bits))
+            .and_then(|t| t.get(layer))
+            .and_then(|r| r.get(expert))
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BEAMW reader
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U8,
+    I8,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u8" => Dtype::U8,
+            "i8" => Dtype::I8,
+            other => bail!("unknown BEAMW dtype `{other}`"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 | Dtype::I8 => 1,
+        }
+    }
+}
+
+/// A tensor view into the shared BEAMW blob (zero-copy until literalized).
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    blob: Arc<Vec<u8>>,
+    offset: usize,
+    nbytes: usize,
+}
+
+impl TensorView {
+    pub fn bytes(&self) -> &[u8] {
+        &self.blob[self.offset..self.offset + self.nbytes]
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .bytes()
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(self
+            .bytes()
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if !matches!(self.dtype, Dtype::U8 | Dtype::I8) {
+            bail!("tensor is {:?}, not u8/i8", self.dtype);
+        }
+        Ok(self.bytes())
+    }
+}
+
+/// In-memory BEAMW container: one blob + a name index.
+///
+/// In the offloading model this is "host memory": holding the store resident
+/// in RAM is exactly what Mixtral-Offloading does with expert weights, and
+/// literalization on demand is the host→device copy the link simulator prices.
+pub struct WeightStore {
+    tensors: HashMap<String, TensorView>,
+}
+
+impl WeightStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        if raw.len() < 16 || &raw[..8] != b"BEAMW001" {
+            bail!("bad BEAMW magic in {}", path.as_ref().display());
+        }
+        let hlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        let header = Value::parse(std::str::from_utf8(&raw[16..16 + hlen])?)
+            .context("BEAMW header")?;
+        let blob = Arc::new(raw[16 + hlen..].to_vec());
+        let entries = header.get("tensors")?.arr()?;
+        let mut tensors = HashMap::with_capacity(entries.len());
+        for e in entries {
+            let name = e.get("name")?.str()?.to_string();
+            let dtype = Dtype::parse(e.get("dtype")?.str()?)?;
+            let shape = e.get("shape")?.usize_vec()?;
+            let offset = e.get("offset")?.usize()?;
+            let nbytes = e.get("nbytes")?.usize()?;
+            let expect = shape.iter().product::<usize>() * dtype.size();
+            if expect != nbytes {
+                bail!("tensor {name}: shape/nbytes mismatch");
+            }
+            if offset + nbytes > blob.len() {
+                bail!("tensor {name}: out of blob bounds");
+            }
+            tensors.insert(
+                name,
+                TensorView { dtype, shape, blob: Arc::clone(&blob), offset, nbytes },
+            );
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorView> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor `{name}` not in weight store"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}

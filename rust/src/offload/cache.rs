@@ -1,0 +1,201 @@
+//! On-GPU expert payload cache (LRU by bytes).
+//!
+//! Caching is both *numeric* and *economic*: a hit reuses the already-built
+//! `xla::Literal`s (no host work) and, in virtual time, skips the link
+//! transfer — exactly what keeping an expert resident in HBM buys on the
+//! real system.  Capacity is the HBM headroom left after the dense weights
+//! and KV cache (`SystemConfig::gpu_cache_bytes`).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use xla::Literal;
+
+/// Which payload variant of an expert is cached.  Base weights and
+/// compensators are separate entries: BEAM fetches compensators only for
+/// top-n experts, so they have their own locality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PayloadKind {
+    Fp16,
+    Quant(u8),
+    /// Compensator factors for the given base bits (tag fixed per run).
+    Comp(u8),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PayloadKey {
+    pub layer: usize,
+    pub expert: usize,
+    pub kind: PayloadKind,
+}
+
+struct Entry {
+    payload: Arc<Vec<Literal>>,
+    bytes: usize,
+    last_use: u64,
+}
+
+pub struct ExpertCache {
+    capacity: usize,
+    used: usize,
+    tick: u64,
+    entries: HashMap<PayloadKey, Entry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl ExpertCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        ExpertCache {
+            capacity: capacity_bytes,
+            used: 0,
+            tick: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn contains(&self, key: &PayloadKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Look up a payload, updating recency and hit/miss counters.
+    pub fn get(&mut self, key: &PayloadKey) -> Option<Arc<Vec<Literal>>> {
+        self.tick += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_use = self.tick;
+                self.hits += 1;
+                Some(Arc::clone(&e.payload))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a payload of `bytes` (wire size — the HBM cost we account).
+    /// Evicts LRU entries until it fits; payloads larger than the whole
+    /// cache are passed through uncached.
+    pub fn insert(&mut self, key: PayloadKey, payload: Arc<Vec<Literal>>, bytes: usize) {
+        if bytes > self.capacity {
+            return;
+        }
+        if let Some(old) = self.entries.remove(&key) {
+            self.used -= old.bytes;
+        }
+        while self.used + bytes > self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| *k)
+                .expect("cache accounting out of sync");
+            let e = self.entries.remove(&lru).unwrap();
+            self.used -= e.bytes;
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.entries.insert(key, Entry { payload, bytes, last_use: self.tick });
+        self.used += bytes;
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(e: usize) -> PayloadKey {
+        PayloadKey { layer: 0, expert: e, kind: PayloadKind::Quant(2) }
+    }
+
+    fn payload() -> Arc<Vec<Literal>> {
+        Arc::new(Vec::new())
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 40);
+        c.insert(key(1), payload(), 40);
+        assert!(c.get(&key(0)).is_some()); // 0 is now MRU
+        c.insert(key(2), payload(), 40); // evicts 1 (LRU)
+        assert!(c.contains(&key(0)));
+        assert!(!c.contains(&key(1)));
+        assert!(c.contains(&key(2)));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_payload_passes_through() {
+        let mut c = ExpertCache::new(10);
+        c.insert(key(0), payload(), 100);
+        assert!(!c.contains(&key(0)));
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn reinsert_updates_bytes() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 60);
+        c.insert(key(0), payload(), 30);
+        assert_eq!(c.used_bytes(), 30);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn hit_rate_counts() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 10);
+        assert!(c.get(&key(0)).is_some());
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comp_and_base_are_distinct_entries() {
+        let mut c = ExpertCache::new(100);
+        let base = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Quant(2) };
+        let comp = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Comp(2) };
+        c.insert(base, payload(), 10);
+        assert!(!c.contains(&comp));
+        c.insert(comp, payload(), 5);
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Offloading substrate: memory tiers, link simulation, expert cache, NDP.
+//!
+//! This is the system the paper integrates with (§4.3): experts live in
+//! host/NDP memory, the GPU fetches what each token's routing demands, and
+//! the policy decides precision + placement.  `transfer` prices the link,
+//! `cache` keeps hot payloads on-GPU (both numerics — literals — and
+//! accounting), `ndp` models near-data execution, `tiers` documents
+//! capacities and placement.
+
+pub mod cache;
+pub mod ndp;
+pub mod tiers;
+pub mod transfer;
+
+pub use cache::{ExpertCache, PayloadKey, PayloadKind};
+pub use ndp::NdpDevice;
+pub use tiers::MemoryTiers;
+pub use transfer::{Link, TransferClass, TransferLog};

@@ -1,0 +1,82 @@
+//! NDP device model (MoNDE-class near-data processor, paper §4.1/§4.3).
+//!
+//! The device holds a full copy of the expert weights in its own memory
+//! (512 GB ≫ model size) and can execute expert FFNs in place; only
+//! activations (and, under BEAM, compensators going the *other* way) cross
+//! the external link.  Execution is serialized per device — a single PIM
+//! stack — which is what makes "ship everything to NDP" non-free and keeps
+//! hot experts worth caching on the GPU.
+
+use crate::config::{NdpConfig, Precision};
+use crate::sim::clock::{Resource, VTime};
+use crate::sim::roofline::CostModel;
+
+pub struct NdpDevice {
+    pub cfg: NdpConfig,
+    pub compute: Resource,
+    /// Expert executions performed near-data (for reports).
+    pub executions: u64,
+}
+
+impl NdpDevice {
+    pub fn new(cfg: NdpConfig) -> Self {
+        NdpDevice { cfg, compute: Resource::new("ndp"), executions: 0 }
+    }
+
+    /// Schedule one expert FFN on the device; returns completion time.
+    /// `ready` must already include the arrival of the input activations.
+    pub fn execute_expert(
+        &mut self,
+        cost: &CostModel,
+        ready: VTime,
+        n_tokens: usize,
+        precision: Precision,
+    ) -> VTime {
+        let op = cost.expert_ndp(n_tokens, precision, &self.cfg);
+        let (_, end) = self.compute.acquire(ready, op.seconds);
+        self.executions += 1;
+        end
+    }
+
+    /// Bytes of activation traffic for one expert round trip
+    /// (x in, y out, fp16 on the wire).
+    pub fn activation_bytes(&self, n_tokens: usize, d_model: usize) -> usize {
+        2 * n_tokens * d_model * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDims, SystemConfig};
+
+    fn cost() -> CostModel {
+        let dims = ModelDims {
+            name: "t".into(), vocab: 512, d_model: 128, d_ff: 256,
+            n_layers: 4, n_heads: 4, n_experts: 8, top_k: 2, n_shared: 0,
+            s_max: 320, t_prefill: 256, b_max: 8, group_size: 64,
+            rank_pad: 64, r_avg: 8, top_n: 1,
+        };
+        CostModel::new(SystemConfig::gpu_ndp(), dims)
+    }
+
+    #[test]
+    fn quantized_ndp_execution_is_faster() {
+        let c = cost();
+        let mut dev = NdpDevice::new(c.sys.ndp.clone().unwrap());
+        let t_fp = dev.execute_expert(&c, 0.0, 1, Precision::Fp16);
+        let mut dev2 = NdpDevice::new(c.sys.ndp.clone().unwrap());
+        let t_q2 = dev2.execute_expert(&c, 0.0, 1, Precision::Int(2));
+        assert!(t_q2 < t_fp, "low-bit weights stream 8x fewer bytes near-data");
+    }
+
+    #[test]
+    fn device_serializes_experts() {
+        let c = cost();
+        let mut dev = NdpDevice::new(c.sys.ndp.clone().unwrap());
+        let t1 = dev.execute_expert(&c, 0.0, 4, Precision::Fp16);
+        let t2 = dev.execute_expert(&c, 0.0, 4, Precision::Fp16);
+        assert!(t2 > t1);
+        assert_eq!(dev.executions, 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Memory tiers: who holds what (paper §4.1 deployment scenarios).
+//!
+//! * **HBM (GPU)** — dense weights (attention, norms, router, shared
+//!   experts), KV caches, the expert payload cache.
+//! * **Host DRAM** — every expert payload at every precision (the
+//!   `WeightStore`), the fetch source in GPU-only deployments.
+//! * **NDP memory** — in GPU-NDP deployments a copy of the (quantized or
+//!   fp16) experts lives near-data; cold experts execute there in place.
+//!
+//! This module is accounting only: it verifies capacity assumptions and
+//! reports occupancy — placement *decisions* are the policies' job.
+
+use crate::config::{ModelDims, SystemConfig};
+use crate::quant::formats::ExpertBytes;
+
+#[derive(Debug, Clone)]
+pub struct MemoryTiers {
+    pub dims: ModelDims,
+    pub sys: SystemConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    /// Dense (never offloaded) weight bytes on the GPU, fp16.
+    pub gpu_dense_bytes: usize,
+    /// Worst-case KV-cache bytes for the full decode batch, fp16.
+    pub gpu_kv_bytes: usize,
+    /// Expert-cache capacity.
+    pub gpu_cache_bytes: usize,
+    /// Total expert bytes at fp16 in host memory.
+    pub host_expert_bytes_fp16: usize,
+    /// Whether all experts would fit in the GPU cache (if so, offloading
+    /// is pointless and the experiment is misconfigured).
+    pub experts_fit_on_gpu: bool,
+}
+
+impl MemoryTiers {
+    pub fn new(dims: ModelDims, sys: SystemConfig) -> Self {
+        MemoryTiers { dims, sys }
+    }
+
+    pub fn expert_bytes(&self) -> ExpertBytes {
+        ExpertBytes {
+            d_model: self.dims.d_model,
+            d_ff: self.dims.d_ff,
+            group_size: self.dims.group_size,
+        }
+    }
+
+    pub fn report(&self) -> TierReport {
+        let d = &self.dims;
+        let dense_params = d.vocab * d.d_model          // embeddings (tied head)
+            + d.n_layers * (4 * d.d_model * d.d_model   // attn projections
+                + 2 * d.d_model                          // norms
+                + d.d_model * d.n_experts               // router gate
+                + d.n_shared * 3 * d.d_model * d.d_ff)  // shared experts
+            + d.d_model;                                 // final norm
+        let kv = d.b_max * d.n_layers * 2 * d.n_heads * d.s_max * d.d_head() * 2;
+        let total_experts =
+            d.n_layers * d.n_experts * self.expert_bytes().fp16();
+        TierReport {
+            gpu_dense_bytes: dense_params * 2,
+            gpu_kv_bytes: kv,
+            gpu_cache_bytes: self.sys.gpu_cache_bytes,
+            host_expert_bytes_fp16: total_experts,
+            experts_fit_on_gpu: self.sys.gpu_cache_bytes >= total_experts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(), vocab: 512, d_model: 128, d_ff: 256,
+            n_layers: 4, n_heads: 4, n_experts: 8, top_k: 2, n_shared: 0,
+            s_max: 320, t_prefill: 256, b_max: 8, group_size: 64,
+            rank_pad: 64, r_avg: 8, top_n: 1,
+        }
+    }
+
+    #[test]
+    fn offloading_is_required_in_default_config() {
+        let t = MemoryTiers::new(dims(), SystemConfig::gpu_only());
+        let r = t.report();
+        assert!(
+            !r.experts_fit_on_gpu,
+            "default testbed must force offloading (cache {} vs experts {})",
+            r.gpu_cache_bytes, r.host_expert_bytes_fp16
+        );
+    }
+
+    #[test]
+    fn expert_bytes_match_dims() {
+        let t = MemoryTiers::new(dims(), SystemConfig::gpu_only());
+        assert_eq!(t.expert_bytes().fp16(), 3 * 128 * 256 * 2);
+    }
+}

@@ -1,0 +1,107 @@
+//! The host↔GPU (or NDP↔GPU) link: a serially-reusable channel with
+//! latency + bandwidth, plus an event log for the Fig. 1a breakdown.
+
+use crate::sim::clock::{Resource, VTime};
+
+/// What a transfer carries — the breakdown categories of Fig. 1a and the
+//  byte ledgers of Fig. 7/8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransferClass {
+    /// Expert weights (any precision).
+    ExpertWeights,
+    /// Low-rank compensator factors (the paper's extra traffic).
+    Compensator,
+    /// Activations to/from the NDP device.
+    Activations,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TransferEvent {
+    pub class: TransferClass,
+    pub bytes: usize,
+    pub start: VTime,
+    pub end: VTime,
+}
+
+/// Aggregate ledger of everything that crossed a link.
+#[derive(Debug, Default, Clone)]
+pub struct TransferLog {
+    pub events: Vec<TransferEvent>,
+}
+
+impl TransferLog {
+    pub fn bytes_of(&self, class: TransferClass) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.class == class)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.events.iter().map(|e| e.bytes).sum()
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.events.iter().map(|e| e.end - e.start).sum()
+    }
+}
+
+/// One physical link (PCIe, or the NDP↔GPU channel).
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub resource: Resource,
+    pub bw: f64,
+    pub lat: f64,
+    pub log: TransferLog,
+}
+
+impl Link {
+    pub fn new(name: &'static str, bw: f64, lat: f64) -> Self {
+        Link { resource: Resource::new(name), bw, lat, log: TransferLog::default() }
+    }
+
+    /// Queue a transfer not before `ready`; returns completion time.
+    pub fn transfer(&mut self, ready: VTime, bytes: usize, class: TransferClass) -> VTime {
+        if bytes == 0 {
+            return ready;
+        }
+        let dur = self.lat + bytes as f64 / self.bw;
+        let (start, end) = self.resource.acquire(ready, dur);
+        self.log.events.push(TransferEvent { class, bytes, start, end });
+        end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfers_queue_fifo() {
+        let mut l = Link::new("pcie", 100.0, 0.0);
+        let e1 = l.transfer(0.0, 100, TransferClass::ExpertWeights);
+        let e2 = l.transfer(0.0, 200, TransferClass::ExpertWeights);
+        assert_eq!(e1, 1.0);
+        assert_eq!(e2, 3.0);
+        assert_eq!(l.log.total_bytes(), 300);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let mut l = Link::new("pcie", 100.0, 1.0);
+        assert_eq!(l.transfer(5.0, 0, TransferClass::Compensator), 5.0);
+        assert!(l.log.events.is_empty());
+    }
+
+    #[test]
+    fn ledger_by_class() {
+        let mut l = Link::new("pcie", 1e9, 0.0);
+        l.transfer(0.0, 100, TransferClass::ExpertWeights);
+        l.transfer(0.0, 7, TransferClass::Compensator);
+        l.transfer(0.0, 50, TransferClass::Activations);
+        assert_eq!(l.log.bytes_of(TransferClass::ExpertWeights), 100);
+        assert_eq!(l.log.bytes_of(TransferClass::Compensator), 7);
+        assert_eq!(l.log.bytes_of(TransferClass::Activations), 50);
+    }
+}

@@ -1,0 +1,182 @@
+//! BEAM — the paper's policy (§3.2 Router-Guided Error Compensation).
+//!
+//! Every expert is fetched/stored low-bit.  Per token, the experts whose
+//! router *rank* falls in `positions` (normally `0..top_n`, n < k) execute
+//! the **compensated** path: their INT3 low-rank factors come along and the
+//! kernel applies `Ŵ = Q⁻¹(Q(W)) + U·V`.  All other activated experts run
+//! plain low-bit.
+//!
+//! With an NDP device, execs with no compensated rows run near-data
+//! (low-bit weights stream the internal bus; only activations cross the
+//! link); any expert that needs compensation executes on the GPU — the
+//! restore kernel lives there and the compensator transfer is tiny.
+//!
+//! `positions` generalizes top-n for the Table 2 ablation (restore ONLY
+//! the 2nd-ranked expert, or ranks 3–5, etc.).
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct BeamPolicy {
+    pub bits: u8,
+    /// Router-rank positions that get compensation (paper: 0..top_n).
+    pub positions: Vec<usize>,
+}
+
+impl Policy for BeamPolicy {
+    fn name(&self) -> &'static str {
+        "beam"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let (comp, plain): (Vec<_>, Vec<_>) = tokens
+                .into_iter()
+                .partition(|t| self.positions.contains(&t.rank));
+            // Plain rows: near-data when available, GPU otherwise.  If the
+            // expert also has compensated rows it is already GPU-resident
+            // this step, so plain rows ride along on the GPU for free.
+            if !plain.is_empty() {
+                let location = if ctx.ndp && comp.is_empty() {
+                    Location::Ndp
+                } else {
+                    Location::Gpu
+                };
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::Int(self.bits),
+                    location,
+                    tokens: plain,
+                });
+            }
+            if !comp.is_empty() {
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::IntComp(self.bits),
+                    location: Location::Gpu,
+                    tokens: comp,
+                });
+            }
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        probs: &'a [f32],
+        active: &'a [bool],
+        n_experts: usize,
+        top_k: usize,
+        ndp: bool,
+        cached: &'a dyn Fn(usize) -> bool,
+    ) -> PlanCtx<'a> {
+        PlanCtx {
+            probs,
+            n_tokens: active.len(),
+            n_experts,
+            top_k,
+            active,
+            ndp,
+            fp16_cached: cached,
+        }
+    }
+
+    #[test]
+    fn top1_gets_compensation_top2_stays_plain() {
+        let probs = vec![0.6f32, 0.3, 0.05, 0.05];
+        let active = vec![true];
+        let cached = |_: usize| false;
+        let c = ctx(&probs, &active, 4, 2, false, &cached);
+        let plan = BeamPolicy { bits: 2, positions: vec![0] }.plan(&c);
+        let comp: Vec<_> = plan
+            .execs
+            .iter()
+            .filter(|e| e.precision.compensated())
+            .collect();
+        assert_eq!(comp.len(), 1);
+        assert_eq!(comp[0].expert, 0);
+        let plain: Vec<_> = plan
+            .execs
+            .iter()
+            .filter(|e| !e.precision.compensated())
+            .collect();
+        assert_eq!(plain.len(), 1);
+        assert_eq!(plain[0].expert, 1);
+    }
+
+    #[test]
+    fn ndp_hosts_only_uncompensated_execs() {
+        // Two tokens, both pick expert 0 as top-1 and expert 1 as top-2.
+        let probs = vec![0.7f32, 0.3, 0.7, 0.3];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let c = ctx(&probs, &active, 2, 2, true, &cached);
+        let plan = BeamPolicy { bits: 2, positions: vec![0] }.plan(&c);
+        for e in &plan.execs {
+            if e.precision.compensated() {
+                assert_eq!(e.location, Location::Gpu);
+            } else {
+                assert_eq!(e.location, Location::Ndp);
+            }
+        }
+    }
+
+    #[test]
+    fn split_expert_rides_gpu_with_its_comp_rows() {
+        // Expert 0 is token A's top-1 (comp) and token B's top-2 (plain):
+        // the plain rows must NOT bounce to NDP since the expert is already
+        // on the GPU.
+        let probs = vec![
+            0.7f32, 0.2, 0.1, // token A: top1=e0(comp), top2=e1
+            0.3, 0.6, 0.1, // token B: top1=e1(comp), top2=e0(plain)
+        ];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let c = ctx(&probs, &active, 3, 2, true, &cached);
+        let plan = BeamPolicy { bits: 2, positions: vec![0] }.plan(&c);
+        let e0_plain = plan
+            .execs
+            .iter()
+            .find(|e| e.expert == 0 && !e.precision.compensated())
+            .unwrap();
+        assert_eq!(e0_plain.location, Location::Gpu);
+    }
+
+    #[test]
+    fn table2_positions_restore_second_ranked_only() {
+        let probs = vec![0.6f32, 0.3, 0.05, 0.05];
+        let active = vec![true];
+        let cached = |_: usize| false;
+        let c = ctx(&probs, &active, 4, 2, false, &cached);
+        let plan = BeamPolicy { bits: 2, positions: vec![1] }.plan(&c);
+        let comp: Vec<_> = plan
+            .execs
+            .iter()
+            .filter(|e| e.precision.compensated())
+            .collect();
+        assert_eq!(comp.len(), 1);
+        assert_eq!(comp[0].expert, 1, "rank-1 (second) expert restored");
+    }
+
+    #[test]
+    fn assignment_count_is_exactly_n_times_k() {
+        let probs: Vec<f32> = (0..4 * 8).map(|i| ((i * 37) % 11) as f32 / 11.0).collect();
+        let active = vec![true, true, true, true];
+        let cached = |_: usize| false;
+        let c = ctx(&probs, &active, 8, 2, true, &cached);
+        let plan = BeamPolicy { bits: 3, positions: vec![0] }.plan(&c);
+        assert_eq!(plan.assignments(), 4 * 2);
+    }
+}

@@ -1,0 +1,83 @@
+//! HOBBIT baseline (Tang et al. 2024): mixed-precision expert loading.
+//!
+//! HOBBIT fetches a *low-bit* replica for experts whose contribution to the
+//! current token is small and full precision for dominant experts.  We model
+//! its token-level decision with a router-score threshold: (token, expert)
+//! pairs whose renormalized score exceeds `hi_threshold` use the FP16
+//! payload; the rest use the `lo_bits` replica.  The paper's observation —
+//! "still frequently transfers full-precision experts due to limited cache
+//! hit rate" — emerges naturally: every dominant token forces a full FP16
+//! expert across the link.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct HobbitPolicy {
+    pub hi_threshold: f64,
+    pub lo_bits: u8,
+}
+
+impl Policy for HobbitPolicy {
+    fn name(&self) -> &'static str {
+        "hobbit"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let (hi, lo): (Vec<_>, Vec<_>) = tokens
+                .into_iter()
+                .partition(|t| t.weight as f64 >= self.hi_threshold);
+            if !hi.is_empty() {
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::Fp16,
+                    location: Location::Gpu,
+                    tokens: hi,
+                });
+            }
+            if !lo.is_empty() {
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::Int(self.lo_bits),
+                    location: Location::Gpu,
+                    tokens: lo,
+                });
+            }
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.lo_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_by_score() {
+        // row 0: expert 0 dominant (0.9 renorm), row 1: balanced (0.5/0.5)
+        let probs = vec![0.9f32, 0.1, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let plan = HobbitPolicy { hi_threshold: 0.6, lo_bits: 4 }.plan(&ctx);
+        assert_eq!(plan.assignments(), 4);
+        let fp16: usize = plan
+            .execs
+            .iter()
+            .filter(|e| e.precision == Precision::Fp16)
+            .map(|e| e.tokens.len())
+            .sum();
+        assert_eq!(fp16, 1, "only row 0's dominant expert goes fp16");
+    }
+}

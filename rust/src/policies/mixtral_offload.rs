@@ -1,0 +1,57 @@
+//! Mixtral-Offloading baseline (Eliseev & Mazur 2023): experts live in host
+//! memory at FP16 and are fetched on demand; an LRU cache keeps recent
+//! experts on the GPU.  No quantization, no compensation — the policy the
+//! paper's Fig. 1a profiles to show offloaded inference is I/O-bound.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct MixtralOffloadPolicy;
+
+impl Policy for MixtralOffloadPolicy {
+    fn name(&self) -> &'static str {
+        "mixtral-offloading"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            plan.execs.push(ExpertExec {
+                expert,
+                precision: Precision::Fp16,
+                location: Location::Gpu,
+                tokens,
+            });
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Fp16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fp16_on_gpu() {
+        let probs = vec![0.6f32, 0.3, 0.05, 0.05, 0.1, 0.2, 0.3, 0.4];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let plan = MixtralOffloadPolicy.plan(&ctx);
+        assert_eq!(plan.assignments(), 4);
+        for e in &plan.execs {
+            assert_eq!(e.precision, Precision::Fp16);
+            assert_eq!(e.location, Location::Gpu);
+        }
+    }
+}

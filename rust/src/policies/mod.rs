@@ -1,0 +1,51 @@
+//! Expert placement / precision policies.
+//!
+//! A policy turns one layer's router probabilities into an execution plan:
+//! which experts run, at what precision, where (GPU or NDP), and — the
+//! paper's contribution — which (token, expert) pairs get their low-rank
+//! compensator applied.  Policies are pure planning; the coordinator owns
+//! execution, transfers and caching.
+//!
+//! Implemented policies (paper §4.1 "Baselines"):
+//!
+//! | policy            | reference                         | behaviour |
+//! |-------------------|-----------------------------------|-----------|
+//! | `MixtralOffload`  | Eliseev & Mazur 2023              | FP16 fetch on demand, LRU cache |
+//! | `StaticQuant`     | HQQ/GPTQ applied uniformly        | low-bit fetch, no compensation |
+//! | `Hobbit`          | Tang et al. 2024                  | mixed precision by router score |
+//! | `Monde`           | Kim et al. 2024                   | cold experts execute on NDP (fp16) |
+//! | `Beam`            | **this paper**                    | low-bit + router-guided top-n low-rank restore; non-restored experts run near-data when NDP exists |
+
+pub mod plan;
+
+mod beam;
+mod hobbit;
+mod mixtral_offload;
+mod monde;
+mod static_quant;
+
+pub use beam::BeamPolicy;
+pub use hobbit::HobbitPolicy;
+pub use mixtral_offload::MixtralOffloadPolicy;
+pub use monde::MondePolicy;
+pub use plan::{topk_renorm, ExpertExec, LayerPlan, Location, PlanCtx, Policy, TokenAssign};
+pub use static_quant::StaticQuantPolicy;
+
+use crate::config::{PolicyConfig, PolicyKind};
+
+/// Instantiate a policy from its config.
+pub fn make_policy(cfg: &PolicyConfig) -> Box<dyn Policy> {
+    match cfg.kind {
+        PolicyKind::MixtralOffload => Box::new(MixtralOffloadPolicy),
+        PolicyKind::StaticQuant => Box::new(StaticQuantPolicy { bits: cfg.bits }),
+        PolicyKind::Hobbit => Box::new(HobbitPolicy {
+            hi_threshold: cfg.hobbit_hi_threshold,
+            lo_bits: cfg.hobbit_lo_bits,
+        }),
+        PolicyKind::Monde => Box::new(MondePolicy),
+        PolicyKind::Beam => Box::new(BeamPolicy {
+            bits: cfg.bits,
+            positions: cfg.positions(),
+        }),
+    }
+}

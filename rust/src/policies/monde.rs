@@ -1,0 +1,77 @@
+//! MoNDE baseline (Kim et al. 2024): Mixture of Near-Data Experts.
+//!
+//! Experts reside (FP16) in the NDP device's memory.  *Hot* experts —
+//! whose payload is already GPU-cached — execute on the GPU; *cold* experts
+//! execute near-data, shipping only activations across the link.  This
+//! eliminates most weight traffic (the paper's Fig. 7 shows MoNDE well
+//! above Mixtral-Offloading) but leaves the NDP device doing FP16-rate
+//! work — the headroom BEAM's low-bit NDP execution then claims.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct MondePolicy;
+
+impl Policy for MondePolicy {
+    fn name(&self) -> &'static str {
+        "monde"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let hot = (ctx.fp16_cached)(expert);
+            plan.execs.push(ExpertExec {
+                expert,
+                precision: Precision::Fp16,
+                location: if hot || !ctx.ndp { Location::Gpu } else { Location::Ndp },
+                tokens,
+            });
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Fp16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_experts_go_ndp_hot_stay_gpu() {
+        let probs = vec![0.6f32, 0.4, 0.4, 0.6];
+        let active = vec![true, true];
+        let cached = |e: usize| e == 0;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 2, n_experts: 2, top_k: 2,
+            active: &active, ndp: true, fp16_cached: &cached,
+        };
+        let plan = MondePolicy.plan(&ctx);
+        for e in &plan.execs {
+            if e.expert == 0 {
+                assert_eq!(e.location, Location::Gpu);
+            } else {
+                assert_eq!(e.location, Location::Ndp);
+            }
+        }
+    }
+
+    #[test]
+    fn without_ndp_everything_is_gpu() {
+        let probs = vec![0.6f32, 0.4];
+        let active = vec![true];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 1, n_experts: 2, top_k: 1,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let plan = MondePolicy.plan(&ctx);
+        assert!(plan.execs.iter().all(|e| e.location == Location::Gpu));
+    }
+}

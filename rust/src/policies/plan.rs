@@ -1,0 +1,175 @@
+//! Planning types shared by all policies.
+
+use crate::config::Precision;
+
+/// Where an expert executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    Gpu,
+    Ndp,
+}
+
+/// One token row's use of an expert.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenAssign {
+    /// Row index into the (N, d) hidden batch.
+    pub row: usize,
+    /// Renormalized top-k combine weight.
+    pub weight: f32,
+    /// Router rank of this expert for this token (0 = highest score).
+    pub rank: usize,
+}
+
+/// One expert execution: a set of token rows at one precision/location.
+/// The same expert may appear in several execs (e.g. HOBBIT fetches it
+/// fp16 for dominant tokens and int4 for the rest; BEAM splits
+/// compensated vs plain rows).
+#[derive(Debug, Clone)]
+pub struct ExpertExec {
+    pub expert: usize,
+    pub precision: Precision,
+    pub location: Location,
+    pub tokens: Vec<TokenAssign>,
+}
+
+/// Execution plan for one MoE layer over the current token batch.
+#[derive(Debug, Clone, Default)]
+pub struct LayerPlan {
+    pub execs: Vec<ExpertExec>,
+}
+
+impl LayerPlan {
+    /// Total (expert, token) pairs — sanity: must equal N·top_k.
+    pub fn assignments(&self) -> usize {
+        self.execs.iter().map(|e| e.tokens.len()).sum()
+    }
+
+    pub fn experts_used(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.execs.iter().map(|e| e.expert).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Everything a policy may consult when planning.
+pub struct PlanCtx<'a> {
+    /// Router probabilities, row-major (n_tokens × n_experts) — the full
+    /// softmax (paper §2.1); top-k selection happens here in L3.
+    pub probs: &'a [f32],
+    pub n_tokens: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Rows that belong to live sequences (padding rows are skipped).
+    pub active: &'a [bool],
+    /// Is an NDP device present in this deployment?
+    pub ndp: bool,
+    /// `cache_probe(expert) == true` iff the expert's *fp16* payload is
+    /// currently GPU-resident (MoNDE's hot/cold split consults this).
+    pub fp16_cached: &'a dyn Fn(usize) -> bool,
+}
+
+/// Top-k selection with renormalization over the selected set — mirrors
+/// `python/compile/model.py::topk_mask_renorm` exactly (ties broken by
+/// lower expert index, matching `jax.lax.top_k`).
+///
+/// Returns (expert, weight, rank) triples sorted by descending probability.
+pub fn topk_renorm(row: &[f32], k: usize) -> Vec<(usize, f32, usize)> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    // Descending by prob; ascending index on ties (jax.lax.top_k order).
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    let chosen = &idx[..k.min(idx.len())];
+    let total: f32 = chosen.iter().map(|&e| row[e]).sum();
+    chosen
+        .iter()
+        .enumerate()
+        .map(|(rank, &e)| (e, row[e] / total, rank))
+        .collect()
+}
+
+/// A planning policy (see module docs in `policies/mod.rs`).
+pub trait Policy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Plan one layer.  Implementations must cover every active row's
+    /// top-k experts exactly once across all execs.
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan;
+
+    /// Precision of the *bulk* expert payload this policy moves (drives
+    /// roofline plots; HOBBIT reports its low-bit tier).
+    fn bulk_precision(&self) -> Precision;
+}
+
+/// Group per-token top-k selections by expert — the dispatch step shared
+/// by every policy.
+pub fn group_by_expert(ctx: &PlanCtx) -> Vec<Vec<TokenAssign>> {
+    let mut groups: Vec<Vec<TokenAssign>> = vec![Vec::new(); ctx.n_experts];
+    for row in 0..ctx.n_tokens {
+        if !ctx.active[row] {
+            continue;
+        }
+        let probs_row = &ctx.probs[row * ctx.n_experts..(row + 1) * ctx.n_experts];
+        for (expert, weight, rank) in topk_renorm(probs_row, ctx.top_k) {
+            groups[expert].push(TokenAssign { row, weight, rank });
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_renorm_sums_to_one() {
+        let row = [0.1f32, 0.5, 0.2, 0.2];
+        let sel = topk_renorm(&row, 2);
+        assert_eq!(sel[0].0, 1);
+        assert_eq!(sel[0].2, 0);
+        let s: f32 = sel.iter().map(|x| x.1).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        // 0.5/0.7 and 0.2/0.7
+        assert!((sel[0].1 - 0.5 / 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_tie_breaks_by_index() {
+        let row = [0.25f32, 0.25, 0.25, 0.25];
+        let sel = topk_renorm(&row, 2);
+        assert_eq!(sel[0].0, 0);
+        assert_eq!(sel[1].0, 1);
+    }
+
+    #[test]
+    fn group_by_expert_covers_all_assignments() {
+        let probs = vec![
+            0.7, 0.1, 0.1, 0.1, // row 0 -> experts 0 + tie(1)
+            0.1, 0.1, 0.2, 0.6, // row 1 -> experts 3, 2
+        ];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let groups = group_by_expert(&ctx);
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 4);
+        assert_eq!(groups[3].len(), 1);
+        assert_eq!(groups[3][0].rank, 0);
+    }
+
+    #[test]
+    fn inactive_rows_are_skipped() {
+        let probs = vec![0.9f32, 0.1, 0.9, 0.1];
+        let active = vec![true, false];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens: 2, n_experts: 2, top_k: 1,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let groups = group_by_expert(&ctx);
+        assert_eq!(groups[0].len(), 1);
+        assert_eq!(groups[0][0].row, 0);
+    }
+}

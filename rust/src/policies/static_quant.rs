@@ -1,0 +1,37 @@
+//! Static uniform quantization (the "w/ quantization, no compensation"
+//! configuration — what the paper's §2.1 motivates and §4.2 shows losing
+//! accuracy at 2-bit).  Identical transfer/caching behaviour to BEAM minus
+//! the compensators, so BEAM-vs-StaticQuant isolates the restore cost.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct StaticQuantPolicy {
+    pub bits: u8,
+}
+
+impl Policy for StaticQuantPolicy {
+    fn name(&self) -> &'static str {
+        "static-quant"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            plan.execs.push(ExpertExec {
+                expert,
+                precision: Precision::Int(self.bits),
+                location: Location::Gpu,
+                tokens,
+            });
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.bits)
+    }
+}

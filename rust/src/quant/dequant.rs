@@ -1,0 +1,89 @@
+//! Reference dequantization in rust — used by integration tests to pin the
+//! AOT kernels' numerics and by `figure fig4` to recompute residual norms
+//! without python.  Mirrors `kernels/ref.py::ref_unpack`/`ref_dequant`.
+
+/// Unpack little-endian `cbits`-bit fields from bytes along the last axis.
+/// `packed` is row-major `(rows, nbytes)`; returns `(rows, n_out)` codes.
+pub fn unpack_container(packed: &[u8], rows: usize, nbytes: usize, cbits: u8, n_out: usize) -> Vec<u8> {
+    assert_eq!(packed.len(), rows * nbytes);
+    let cpb = (8 / cbits) as usize;
+    let mask = (1u16 << cbits) as u8 - 1;
+    let mut out = vec![0u8; rows * n_out];
+    for r in 0..rows {
+        let row = &packed[r * nbytes..(r + 1) * nbytes];
+        let dst = &mut out[r * n_out..(r + 1) * n_out];
+        for (j, d) in dst.iter_mut().enumerate() {
+            let byte = row[j / cpb];
+            let shift = (j % cpb) as u8 * cbits;
+            *d = (byte >> shift) & mask;
+        }
+    }
+    out
+}
+
+/// Group-wise dequantize `(d_in, d_out)` codes with `(G, d_out)` metadata.
+pub fn dequantize_grouped(
+    codes: &[u8],
+    scale: &[f32],
+    zero: &[f32],
+    d_in: usize,
+    d_out: usize,
+    group_size: usize,
+) -> Vec<f32> {
+    assert_eq!(codes.len(), d_in * d_out);
+    let groups = d_in / group_size;
+    assert_eq!(scale.len(), groups * d_out);
+    assert_eq!(zero.len(), groups * d_out);
+    let mut out = vec![0f32; d_in * d_out];
+    for i in 0..d_in {
+        let g = i / group_size;
+        for j in 0..d_out {
+            let c = codes[i * d_out + j] as f32;
+            out[i * d_out + j] = (c - zero[g * d_out + j]) * scale[g * d_out + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpack_2bit_roundtrip() {
+        // codes 0..3 packed little-endian, 4 per byte.
+        let packed = vec![0b11_10_01_00u8, 0b00_01_10_11u8];
+        let codes = unpack_container(&packed, 1, 2, 2, 8);
+        assert_eq!(codes, vec![0, 1, 2, 3, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn unpack_4bit_roundtrip() {
+        let packed = vec![0x21u8, 0x43u8];
+        let codes = unpack_container(&packed, 1, 2, 4, 4);
+        assert_eq!(codes, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn unpack_truncates_padding() {
+        // 3 codes in a 4-bit container occupy 2 bytes; the 4th field is pad.
+        let packed = vec![0x21u8, 0x03u8];
+        let codes = unpack_container(&packed, 1, 2, 4, 3);
+        assert_eq!(codes, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn dequant_identity_when_zero_zero_scale_one() {
+        let codes = vec![0u8, 1, 2, 3];
+        let out = dequantize_grouped(&codes, &[1.0, 1.0], &[0.0, 0.0], 2, 2, 2);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dequant_grouped_scales() {
+        // d_in=4, d_out=1, two groups of 2 with different scales.
+        let codes = vec![1u8, 1, 1, 1];
+        let out = dequantize_grouped(&codes, &[2.0, 10.0], &[0.5, 0.0], 4, 1, 2);
+        assert_eq!(out, vec![1.0, 1.0, 10.0, 10.0]);
+    }
+}

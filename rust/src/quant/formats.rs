@@ -1,0 +1,89 @@
+//! Bit-packing byte accounting — the rust mirror of
+//! `python/compile/quant/packing.py` (pinned by tests against the manifest
+//! tables the python side computed).
+
+/// Kernel-container bit-width: 3-bit codes ride in 4-bit containers.
+pub fn container_bits(bits: u8) -> u8 {
+    if bits == 3 {
+        4
+    } else {
+        bits
+    }
+}
+
+/// True packed byte count for `n_codes` codes at `bits` bits
+/// (2/4/8-bit pack exactly; 3-bit uses the 8-codes→3-bytes codec).
+pub fn packed_nbytes(n_codes: usize, bits: u8) -> usize {
+    let (cpc, bpc) = match bits {
+        2 => (4, 1),
+        3 => (8, 3),
+        4 => (2, 1),
+        8 => (1, 1),
+        _ => panic!("unsupported bit-width {bits}"),
+    };
+    assert!(
+        n_codes % cpc == 0,
+        "{n_codes} codes not a multiple of chunk {cpc} for {bits}-bit"
+    );
+    n_codes / cpc * bpc
+}
+
+/// Wire sizes for one expert's weights at each precision, derived from
+/// model dimensions (cross-checked against `manifest.transfer`).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpertBytes {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub group_size: usize,
+}
+
+impl ExpertBytes {
+    pub fn fp16(&self) -> usize {
+        3 * self.d_model * self.d_ff * 2
+    }
+
+    /// Packed codes + fp16 (scale, zero) metadata for w1+w2+w3.
+    pub fn quantized(&self, bits: u8) -> usize {
+        let (d, f, g) = (self.d_model, self.d_ff, self.group_size);
+        let codes = packed_nbytes(d * f, bits) * 2 + packed_nbytes(f * d, bits);
+        let meta = ((d / g) * f * 2 + (f / g) * d) * 4; // 2×fp16 per group/col
+        codes + meta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_ratios() {
+        assert_eq!(packed_nbytes(8, 2), 2);
+        assert_eq!(packed_nbytes(8, 3), 3);
+        assert_eq!(packed_nbytes(8, 4), 4);
+        assert_eq!(packed_nbytes(8, 8), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn packing_requires_chunk_multiple() {
+        packed_nbytes(7, 3);
+    }
+
+    #[test]
+    fn container_widening() {
+        assert_eq!(container_bits(3), 4);
+        assert_eq!(container_bits(2), 2);
+        assert_eq!(container_bits(4), 4);
+    }
+
+    #[test]
+    fn expert_bytes_monotone_in_bits() {
+        let eb = ExpertBytes { d_model: 128, d_ff: 256, group_size: 64 };
+        assert!(eb.quantized(2) < eb.quantized(3));
+        assert!(eb.quantized(3) < eb.quantized(4));
+        assert!(eb.quantized(4) < eb.fp16());
+        // 2-bit codes alone are exactly 1/8 of fp16.
+        let codes2 = packed_nbytes(128 * 256, 2) * 3;
+        assert_eq!(codes2 * 8, eb.fp16());
+    }
+}

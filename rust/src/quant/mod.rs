@@ -1,0 +1,12 @@
+//! Quantization formats: byte accounting + a reference dequantizer.
+//!
+//! The *math* of dequantization lives in the AOT kernels (L1); this module
+//! mirrors just enough of it in rust to (a) price transfers exactly like
+//! `python/compile/quant/packing.py` does and (b) cross-check kernel outputs
+//! in integration tests.
+
+pub mod dequant;
+pub mod formats;
+
+pub use dequant::{dequantize_grouped, unpack_container};
+pub use formats::{container_bits, packed_nbytes, ExpertBytes};

@@ -1,0 +1,115 @@
+//! PJRT engine: loads HLO-text artifacts, compiles once, executes many.
+//!
+//! One `Engine` per process; executables are compiled lazily on first use
+//! and cached by stage name.  Execution is synchronous on the CPU client —
+//! the coordinator overlaps *simulated* transfers with compute in virtual
+//! time, not host threads (DESIGN.md §6).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::manifest::Manifest;
+
+pub struct Engine {
+    client: PjRtClient,
+    executables: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT invocations, for the perf harness.
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            executables: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO text file (used directly by tests and tools).
+    pub fn compile_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Get (compiling on first use) the executable for a manifest stage.
+    /// Keyed by (model dir, stage): one Engine can serve several models.
+    pub fn stage(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        let key = format!("{}::{name}", manifest.dir.display());
+        if let Some(e) = self.executables.lock().unwrap().get(&key) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let path = manifest.stage_path(name)?;
+        let exe = std::sync::Arc::new(self.compile_file(&path)?);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every stage in the manifest (serving warm-up).
+    pub fn warmup(&self, manifest: &Manifest) -> Result<usize> {
+        let mut n = 0;
+        for name in manifest.stages.keys() {
+            self.stage(manifest, name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Execute a stage; returns the decomposed output tuple.
+    ///
+    /// Stages are lowered with `return_tuple=True`, so the single result
+    /// literal is always a tuple — decomposed here into its parts.
+    ///
+    /// NOTE: goes through `execute_b` with rust-owned input buffers rather
+    /// than `execute<&Literal>`: the published crate's `execute` leaks every
+    /// *input* device buffer (`BufferFromHostLiteral(..).release()` with no
+    /// matching free in `xla_rs.cc::execute`), which OOMs a long serve loop.
+    /// With `execute_b` the inputs are `PjRtBuffer`s we drop ourselves.
+    /// (EXPERIMENTS.md §Perf, iteration 4.)
+    pub fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|lit| {
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("host->device: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        drop(buffers); // input device buffers freed here (not leaked)
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+}

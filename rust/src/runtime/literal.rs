@@ -1,0 +1,85 @@
+//! `xla::Literal` construction/extraction helpers.
+//!
+//! The published `xla` crate's typed constructors only cover
+//! i32/i64/u32/u64/f32/f64; packed weight codes are u8, so everything here
+//! routes through `create_from_shape_and_untyped_data` with explicit
+//! element types.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+use crate::manifest::{Dtype, TensorView};
+
+fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for upload only.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+fn check_len(dims: &[usize], len: usize) -> Result<()> {
+    let want: usize = dims.iter().product();
+    if want != len {
+        return Err(anyhow!("literal shape {dims:?} wants {want} elements, got {len}"));
+    }
+    Ok(())
+}
+
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    check_len(dims, data.len())?;
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes_of(data))
+        .map_err(|e| anyhow!("f32 literal: {e}"))
+}
+
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    check_len(dims, data.len())?;
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes_of(data))
+        .map_err(|e| anyhow!("i32 literal: {e}"))
+}
+
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
+    check_len(dims, data.len())?;
+    Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)
+        .map_err(|e| anyhow!("u8 literal: {e}"))
+}
+
+/// Literalize a BEAMW tensor view with its stored shape/dtype.
+pub fn lit_from_view(view: &TensorView) -> Result<Literal> {
+    let ty = match view.dtype {
+        Dtype::F32 => ElementType::F32,
+        Dtype::I32 => ElementType::S32,
+        Dtype::U8 => ElementType::U8,
+        Dtype::I8 => ElementType::S8,
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &view.shape, view.bytes())
+        .map_err(|e| anyhow!("literal from view: {e}"))
+}
+
+/// Extract an f32 literal into a host vector.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let l = lit_u8(&[4], &[7, 8, 9, 10]).unwrap();
+        assert_eq!(l.to_vec::<u8>().unwrap(), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        assert!(lit_f32(&[3], &[1.0]).is_err());
+        assert!(lit_i32(&[2, 2], &[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime: PJRT client wrapper, literal helpers, and the staged model.
+//!
+//! `engine` owns the PJRT CPU client and the compiled executables (one per
+//! HLO stage artifact).  `literal` converts BEAMW tensor views / host
+//! vectors into `xla::Literal`s.  `model` assembles the staged forward pass
+//! the coordinator drives (embed → [attn → router → experts]×L → head).
+
+pub mod engine;
+pub mod literal;
+pub mod model;
+
+pub use engine::Engine;
+pub use model::{ExpertOutput, StagedModel};

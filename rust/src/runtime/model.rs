@@ -1,0 +1,278 @@
+//! The staged model: typed wrappers over the AOT stage executables.
+//!
+//! Owns the resident ("always on GPU") weight literals — embeddings, attn
+//! projections, norms, router gates, shared experts — and assembles
+//! *offloaded* expert payloads (packed codes, metadata, compensators) on
+//! demand.  The coordinator decides *when* payloads move and what that
+//! costs; this module only knows *what* a payload is and how to execute a
+//! stage with it.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::config::Precision;
+use crate::manifest::{Manifest, WeightStore};
+use crate::runtime::engine::Engine;
+use crate::runtime::literal::{lit_f32, lit_from_view, lit_i32, to_vec_f32};
+
+/// Resident weights for one layer (never offloaded — paper §2.1: only
+/// expert parameters live in secondary memory).
+struct LayerResident {
+    ln1: Literal,
+    wq: Literal,
+    wk: Literal,
+    wv: Literal,
+    wo: Literal,
+    ln2: Literal,
+    gate: Literal,
+    shared: Vec<[Literal; 3]>, // fp16 shared experts (DeepSeek-style)
+}
+
+/// Output of one expert execution on a token batch.
+pub struct ExpertOutput {
+    /// (N, d) row-major expert output.
+    pub y: Vec<f32>,
+}
+
+pub struct StagedModel {
+    pub manifest: Manifest,
+    pub store: WeightStore,
+    engine: Arc<Engine>,
+    emb: Literal,
+    ln_f: Literal,
+    layers: Vec<LayerResident>,
+}
+
+impl StagedModel {
+    pub fn load(engine: Arc<Engine>, manifest: Manifest) -> Result<Self> {
+        let store = WeightStore::load(manifest.weights_path())?;
+        let emb = lit_from_view(store.get("emb")?)?;
+        let ln_f = lit_from_view(store.get("ln_f")?)?;
+        let mut layers = Vec::with_capacity(manifest.model.n_layers);
+        for li in 0..manifest.model.n_layers {
+            let g = |name: &str| -> Result<Literal> {
+                lit_from_view(store.get(&format!("layers.{li}.{name}"))?)
+            };
+            let mut shared = Vec::new();
+            for s in 0..manifest.model.n_shared {
+                shared.push([
+                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w1"))?)?,
+                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w2"))?)?,
+                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w3"))?)?,
+                ]);
+            }
+            layers.push(LayerResident {
+                ln1: g("ln1")?,
+                wq: g("wq")?,
+                wk: g("wk")?,
+                wv: g("wv")?,
+                wo: g("wo")?,
+                ln2: g("ln2")?,
+                gate: g("gate")?,
+                shared,
+            });
+        }
+        Ok(StagedModel { manifest, store, engine, emb, ln_f, layers })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn suffix(prefill: bool) -> &'static str {
+        if prefill {
+            "p"
+        } else {
+            "d"
+        }
+    }
+
+    /// Build an activation literal (N, d) from host data.
+    pub fn lit_x(&self, n: usize, data: &[f32]) -> Result<Literal> {
+        lit_f32(&[n, self.manifest.model.d_model], data)
+    }
+
+    // -- stages ----------------------------------------------------------
+
+    pub fn embed(&self, tokens: &[i32], prefill: bool) -> Result<Literal> {
+        let name = format!("embed_{}", Self::suffix(prefill));
+        let exe = self.engine.stage(&self.manifest, &name)?;
+        let toks = lit_i32(&[tokens.len()], tokens)?;
+        let mut out = self.engine.run(&exe, &[&toks, &self.emb])?;
+        Ok(out.remove(0))
+    }
+
+    /// Decode attention over B slots; returns (x', k_cache', v_cache').
+    pub fn attn_decode(
+        &self,
+        layer: usize,
+        x: &Literal,
+        k_cache: &Literal,
+        v_cache: &Literal,
+        pos: &[i32],
+    ) -> Result<(Literal, Literal, Literal)> {
+        let exe = self.engine.stage(&self.manifest, "attn_d")?;
+        let l = &self.layers[layer];
+        let pos_lit = lit_i32(&[pos.len()], pos)?;
+        let mut out = self.engine.run(
+            &exe,
+            &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo, k_cache, v_cache, &pos_lit],
+        )?;
+        let vc = out.remove(2);
+        let kc = out.remove(1);
+        let xo = out.remove(0);
+        Ok((xo, kc, vc))
+    }
+
+    /// Prefill attention for one sequence; returns (x', slot k/v caches).
+    pub fn attn_prefill(&self, layer: usize, x: &Literal) -> Result<(Literal, Literal, Literal)> {
+        let exe = self.engine.stage(&self.manifest, "attn_p")?;
+        let l = &self.layers[layer];
+        let mut out = self
+            .engine
+            .run(&exe, &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo])?;
+        let vc = out.remove(2);
+        let kc = out.remove(1);
+        let xo = out.remove(0);
+        Ok((xo, kc, vc))
+    }
+
+    /// Router stage: returns (normed hidden, router probs (N×E row-major)).
+    pub fn router(&self, layer: usize, x: &Literal, prefill: bool) -> Result<(Literal, Vec<f32>)> {
+        let name = format!("router_{}", Self::suffix(prefill));
+        let exe = self.engine.stage(&self.manifest, &name)?;
+        let l = &self.layers[layer];
+        let mut out = self.engine.run(&exe, &[x, &l.ln2, &l.gate])?;
+        let probs = to_vec_f32(&out.remove(1))?;
+        let xn = out.remove(0);
+        Ok((xn, probs))
+    }
+
+    /// Assemble the *base* literal payload for one (layer, expert):
+    /// 3 literals for fp16, 9 (packed, scale, zero × w1/w2/w3) for low-bit.
+    ///
+    /// This is what "transferring the expert" materializes on device.  The
+    /// `method` selects the quantizer family (`hqq` for BEAM/static,
+    /// `gptq` for the accuracy baseline).
+    pub fn payload_base(
+        &self,
+        layer: usize,
+        expert: usize,
+        precision: Precision,
+        method: &str,
+    ) -> Result<Vec<Literal>> {
+        let base = format!("layers.{layer}.experts.{expert}");
+        let mut lits = Vec::new();
+        match precision {
+            Precision::Fp16 => {
+                for proj in ["w1", "w2", "w3"] {
+                    lits.push(lit_from_view(self.store.get(&format!("{base}.{proj}.fp32"))?)?);
+                }
+            }
+            Precision::Int(bits) | Precision::IntComp(bits) => {
+                for proj in ["w1", "w2", "w3"] {
+                    let p = format!("{base}.{proj}.{method}{bits}");
+                    lits.push(lit_from_view(self.store.get(&format!("{p}.pk"))?)?);
+                    lits.push(lit_from_view(self.store.get(&format!("{p}.sc"))?)?);
+                    lits.push(lit_from_view(self.store.get(&format!("{p}.zp"))?)?);
+                }
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Assemble the *compensator* payload (18 literals: U/V packed + meta ×
+    /// w1/w2/w3) for the `tag` compensator set at base `bits`.
+    pub fn payload_comp(
+        &self,
+        layer: usize,
+        expert: usize,
+        bits: u8,
+        tag: &str,
+    ) -> Result<Vec<Literal>> {
+        let base = format!("layers.{layer}.experts.{expert}");
+        let mut lits = Vec::new();
+        for proj in ["w1", "w2", "w3"] {
+            let c = format!("{base}.{proj}.comp{bits}.{tag}");
+            for f in ["up", "us", "uz", "vp", "vs", "vz"] {
+                lits.push(lit_from_view(self.store.get(&format!("{c}.{f}"))?)?);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Stage name for an expert execution at `precision`.
+    pub fn expert_stage_name(precision: Precision, prefill: bool) -> Result<String> {
+        let sfx = Self::suffix(prefill);
+        Ok(match precision {
+            Precision::Fp16 => format!("expert_fp16_{sfx}"),
+            Precision::Int(b) => format!("expert_q{b}_{sfx}"),
+            Precision::IntComp(b) => format!("expert_q{b}c_{sfx}"),
+        })
+    }
+
+    /// Execute one expert over the (N, d) normed hidden; returns host (N, d).
+    /// `payload` is base literals, optionally followed by comp literals.
+    pub fn run_expert(
+        &self,
+        precision: Precision,
+        prefill: bool,
+        xn: &Literal,
+        payload: &[&Literal],
+    ) -> Result<ExpertOutput> {
+        let name = Self::expert_stage_name(precision, prefill)?;
+        let exe = self.engine.stage(&self.manifest, &name)?;
+        let expected = match precision {
+            Precision::Fp16 => 3,
+            Precision::Int(_) => 9,
+            Precision::IntComp(_) => 27,
+        };
+        if payload.len() != expected {
+            bail!("payload has {} literals, stage {name} wants {expected}", payload.len());
+        }
+        let mut args: Vec<&Literal> = Vec::with_capacity(1 + payload.len());
+        args.push(xn);
+        args.extend(payload.iter().copied());
+        let mut out = self.engine.run(&exe, &args)?;
+        Ok(ExpertOutput { y: to_vec_f32(&out.remove(0))? })
+    }
+
+    /// Execute a shared (always-resident, fp16) expert.
+    pub fn run_shared_expert(
+        &self,
+        layer: usize,
+        idx: usize,
+        prefill: bool,
+        xn: &Literal,
+    ) -> Result<ExpertOutput> {
+        let name = format!("expert_fp16_{}", Self::suffix(prefill));
+        let exe = self.engine.stage(&self.manifest, &name)?;
+        let [w1, w2, w3] = &self.layers[layer].shared[idx];
+        let mut out = self.engine.run(&exe, &[xn, w1, w2, w3])?;
+        Ok(ExpertOutput { y: to_vec_f32(&out.remove(0))? })
+    }
+
+    /// Head stage over the decode batch: logits (B × V row-major).
+    pub fn head(&self, x: &Literal) -> Result<Vec<f32>> {
+        let exe = self.engine.stage(&self.manifest, "head_d")?;
+        let mut out = self.engine.run(&exe, &[x, &self.ln_f, &self.emb])?;
+        to_vec_f32(&out.remove(0))
+    }
+
+    /// Head over prefill rows: logits (T × V) for teacher-forced scoring.
+    pub fn head_prefill(&self, x: &Literal) -> Result<Vec<f32>> {
+        let exe = self.engine.stage(&self.manifest, "head_p")?;
+        let mut out = self.engine.run(&exe, &[x, &self.ln_f, &self.emb])?;
+        to_vec_f32(&out.remove(0))
+    }
+
+    /// Fresh zeroed KV-cache literals for the decode batch.
+    pub fn empty_caches(&self) -> Result<(Literal, Literal)> {
+        let m = &self.manifest.model;
+        let dims = [m.b_max, m.n_heads, m.s_max, m.d_head()];
+        let zeros = vec![0f32; dims.iter().product()];
+        Ok((lit_f32(&dims, &zeros)?, lit_f32(&dims, &zeros)?))
+    }
+}

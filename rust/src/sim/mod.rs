@@ -1,0 +1,13 @@
+//! Hardware simulation: virtual time and the H100/NDP roofline cost model.
+//!
+//! Numerics execute on the CPU PJRT client; *performance* is accounted in
+//! virtual seconds against the paper's testbed (H100 PCIe + host DRAM,
+//! optionally an NDP device) — DESIGN.md §6.  `clock` provides serially-
+//! reusable resources (GPU, link, NDP) on a shared virtual timeline;
+//! `roofline` prices individual ops from tensor shapes and precisions.
+
+pub mod clock;
+pub mod roofline;
+
+pub use clock::{Resource, VirtualClock};
+pub use roofline::CostModel;

@@ -1,0 +1,7 @@
+//! Serving workloads: request generation and traces.
+
+pub mod reqgen;
+pub mod trace;
+
+pub use reqgen::{Request, WorkloadConfig, WorkloadGen};
+pub use trace::DecodeTrace;

@@ -1,0 +1,120 @@
+//! Request generation for serving experiments.
+//!
+//! Paper §4.1: "input length 256, different output token configurations".
+//! Prompts are drawn from the same synthetic-corpus token dumps the model
+//! was evaluated on (`eval.beamw:calib_tokens`), tiled to the requested
+//! prompt length so routing statistics match real text, not uniform noise.
+//! A deterministic xorshift stream drives arrivals/lengths so every run of
+//! a figure is reproducible without pulling in a rand dependency.
+
+use crate::manifest::WeightStore;
+use crate::sim::clock::VTime;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: VTime,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Poisson arrival rate (req/s of *virtual* time); `None` = offline
+    /// (all requests queued at t=0, the paper's throughput setting).
+    pub arrival_rate: Option<f64>,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    pub fn offline(n_requests: usize, prompt_len: usize, output_len: usize) -> Self {
+        WorkloadConfig { n_requests, prompt_len, output_len, arrival_rate: None, seed: 0xBEA4 }
+    }
+}
+
+/// Deterministic xorshift64* stream.
+#[derive(Debug, Clone)]
+pub struct XorShift(u64);
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential inter-arrival sample.
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+}
+
+pub struct WorkloadGen;
+
+impl WorkloadGen {
+    /// Build the request set from the model's eval token dump.
+    pub fn generate(cfg: &WorkloadConfig, store: &WeightStore) -> anyhow::Result<Vec<Request>> {
+        let toks = store.get("calib_tokens")?;
+        let (n_seqs, seq_len) = (toks.shape[0], toks.shape[1]);
+        let data = toks.as_i32()?;
+        let mut rng = XorShift::new(cfg.seed);
+        let mut arrival = 0.0;
+        let mut out = Vec::with_capacity(cfg.n_requests);
+        for id in 0..cfg.n_requests {
+            // Tile corpus rows to reach prompt_len.
+            let mut prompt = Vec::with_capacity(cfg.prompt_len);
+            while prompt.len() < cfg.prompt_len {
+                let row = (rng.next_u64() as usize) % n_seqs;
+                let start = row * seq_len;
+                let take = (cfg.prompt_len - prompt.len()).min(seq_len);
+                prompt.extend_from_slice(&data[start..start + take]);
+            }
+            if let Some(rate) = cfg.arrival_rate {
+                arrival += rng.next_exp(rate);
+            }
+            out.push(Request {
+                id: id as u64,
+                prompt,
+                max_new_tokens: cfg.output_len,
+                arrival,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn exp_samples_positive() {
+        let mut r = XorShift::new(7);
+        for _ in 0..100 {
+            assert!(r.next_exp(2.0) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Decode traces: per-step routing records for Fig. 2 (expert activation
+//! patterns over decode steps) and for replay-style experiments.
+
+/// One decode step's routing decisions in one layer.
+#[derive(Debug, Clone)]
+pub struct RoutingRecord {
+    pub step: usize,
+    pub layer: usize,
+    /// Selected experts and renormalized weights for slot 0 (the traced
+    /// sequence), ordered by rank.
+    pub experts: Vec<(usize, f32)>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct DecodeTrace {
+    pub records: Vec<RoutingRecord>,
+}
+
+impl DecodeTrace {
+    pub fn push(&mut self, step: usize, layer: usize, experts: Vec<(usize, f32)>) {
+        self.records.push(RoutingRecord { step, layer, experts });
+    }
+
+    /// Activation matrix for one layer: rows = decode steps, cols = experts,
+    /// entries = combine weight (0 when inactive) — Fig. 2's heatmap.
+    pub fn activation_matrix(&self, layer: usize, n_experts: usize) -> Vec<Vec<f32>> {
+        let mut rows = Vec::new();
+        for r in self.records.iter().filter(|r| r.layer == layer) {
+            let mut row = vec![0f32; n_experts];
+            for &(e, w) in &r.experts {
+                row[e] = w;
+            }
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// Fraction of consecutive steps whose expert set changed (Fig. 2's
+    /// "irregular activation" quantified).
+    pub fn switch_rate(&self, layer: usize) -> f64 {
+        let steps: Vec<Vec<usize>> = self
+            .records
+            .iter()
+            .filter(|r| r.layer == layer)
+            .map(|r| {
+                let mut e: Vec<usize> = r.experts.iter().map(|x| x.0).collect();
+                e.sort_unstable();
+                e
+            })
+            .collect();
+        if steps.len() < 2 {
+            return 0.0;
+        }
+        let switches = steps.windows(2).filter(|w| w[0] != w[1]).count();
+        switches as f64 / (steps.len() - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switch_rate_counts_changes() {
+        let mut t = DecodeTrace::default();
+        t.push(0, 0, vec![(0, 0.7), (1, 0.3)]);
+        t.push(1, 0, vec![(0, 0.6), (1, 0.4)]); // same set
+        t.push(2, 0, vec![(2, 0.9), (1, 0.1)]); // changed
+        assert!((t.switch_rate(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn activation_matrix_shape() {
+        let mut t = DecodeTrace::default();
+        t.push(0, 1, vec![(3, 1.0)]);
+        let m = t.activation_matrix(1, 4);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0], vec![0.0, 0.0, 0.0, 1.0]);
+    }
+}

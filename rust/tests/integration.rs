@@ -1,0 +1,252 @@
+//! Integration tests over the built artifacts (skipped when absent).
+//!
+//! These pin the rust runtime to the python build path: PJRT stage numerics
+//! against an independent rust recomputation, serving determinism, scoring
+//! sanity, and the accuracy ordering the paper's Fig. 6 relies on.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
+use beam_moe::coordinator::scheduler::{score_metrics, score_sequence, serve};
+use beam_moe::coordinator::ServeEngine;
+use beam_moe::manifest::{Manifest, WeightStore};
+use beam_moe::quant::dequant::{dequantize_grouped, unpack_container};
+use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+
+const ART: &str = "artifacts/mixtral-tiny";
+
+fn artifacts_ready() -> bool {
+    Path::new(ART).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn load_model() -> (Arc<Engine>, StagedModel) {
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let model = StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
+    (engine, model)
+}
+
+/// Recompute a quantized expert in pure rust and compare to the PJRT stage.
+#[test]
+fn expert_stage_matches_rust_reference() {
+    require_artifacts!();
+    let (_e, model) = load_model();
+    let m = model.manifest.model.clone();
+    let (d, f, g) = (m.d_model, m.d_ff, m.group_size);
+    let bits = 2u8;
+    let cb = model.manifest.container_bits(bits);
+
+    // Deterministic input.
+    let x: Vec<f32> = (0..m.b_max * d).map(|i| ((i % 29) as f32 - 14.0) / 40.0).collect();
+    let xn = model.lit_x(m.b_max, &x).unwrap();
+    let payload = model.payload_base(1, 3, Precision::Int(bits), "hqq").unwrap();
+    let refs: Vec<&xla::Literal> = payload.iter().collect();
+    let y = model.run_expert(Precision::Int(bits), false, &xn, &refs).unwrap().y;
+
+    // Independent rust recomputation from the weight store.
+    let dq = |proj: &str, d_in: usize, d_out: usize| -> Vec<f32> {
+        let base = format!("layers.1.experts.3.{proj}.hqq{bits}");
+        let pk = model.store.get(&format!("{base}.pk")).unwrap();
+        let sc = model.store.get(&format!("{base}.sc")).unwrap().as_f32().unwrap();
+        let zp = model.store.get(&format!("{base}.zp")).unwrap().as_f32().unwrap();
+        let codes = unpack_container(pk.as_u8().unwrap(), d_in, pk.shape[1], cb, d_out);
+        dequantize_grouped(&codes, &sc, &zp, d_in, d_out, g)
+    };
+    let (w1, w2, w3) = (dq("w1", d, f), dq("w2", f, d), dq("w3", d, f));
+
+    let matmul = |x: &[f32], w: &[f32], n: usize, k: usize, m2: usize| -> Vec<f32> {
+        let mut y = vec![0f32; n * m2];
+        for i in 0..n {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..m2 {
+                    y[i * m2 + j] += xv * w[kk * m2 + j];
+                }
+            }
+        }
+        y
+    };
+    let gate = matmul(&x, &w1, m.b_max, d, f);
+    let up = matmul(&x, &w3, m.b_max, d, f);
+    let h: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(g, u)| (g / (1.0 + (-g).exp())) * u)
+        .collect();
+    let y_ref = matmul(&h, &w2, m.b_max, f, d);
+
+    let max_diff = y
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "PJRT stage vs rust reference: max diff {max_diff}");
+}
+
+#[test]
+fn scoring_is_deterministic_and_sane() {
+    require_artifacts!();
+    let (_e, model) = load_model();
+    let manifest = model.manifest.clone();
+    let sys = SystemConfig::scaled_for(&manifest.model, false);
+    let mut engine =
+        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, 1), sys).unwrap();
+
+    let eval = WeightStore::load(engine.model.manifest.eval_path()).unwrap();
+    let toks = eval.get("val_tokens").unwrap();
+    let seq_len = toks.shape[1];
+    let data = toks.as_i32().unwrap();
+    let seq = &data[..seq_len];
+    let det: Vec<i8> = eval.get("val_det").unwrap().as_u8().unwrap()[..seq_len]
+        .iter()
+        .map(|&b| b as i8)
+        .collect();
+
+    let l1 = score_sequence(&mut engine, seq).unwrap();
+    let l2 = score_sequence(&mut engine, seq).unwrap();
+    assert_eq!(l1.len(), seq_len);
+    for (a, b) in l1.iter().zip(&l2) {
+        assert_eq!(a, b, "scoring must be deterministic");
+    }
+    let s = score_metrics(&l1, seq, &det);
+    let ppl = (s.nll_sum / s.n_scored as f64).exp();
+    assert!(ppl > 1.0 && ppl < 500.0, "ppl out of sane range: {ppl}");
+}
+
+#[test]
+fn fig6_ordering_fp16_beats_beam_beats_nothing() {
+    require_artifacts!();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let score = |policy: PolicyConfig| -> f64 {
+        let model =
+            StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
+        let sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        let mut se = ServeEngine::new(model, policy, sys).unwrap();
+        let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+        let toks = eval.get("val_tokens").unwrap();
+        let seq_len = toks.shape[1];
+        let data = toks.as_i32().unwrap();
+        let det = eval.get("val_det").unwrap();
+        let det_data = det.as_u8().unwrap();
+        let (mut nll, mut n) = (0f64, 0usize);
+        for s in 0..6 {
+            let seq = &data[s * seq_len..(s + 1) * seq_len];
+            let dm: Vec<i8> = det_data[s * seq_len..(s + 1) * seq_len]
+                .iter()
+                .map(|&b| b as i8)
+                .collect();
+            let logits = score_sequence(&mut se, seq).unwrap();
+            let m = score_metrics(&logits, seq, &dm);
+            nll += m.nll_sum;
+            n += m.n_scored;
+        }
+        (nll / n as f64).exp()
+    };
+    let fp16 = score(PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0));
+    let beam2 = score(PolicyConfig::new(PolicyKind::Beam, 2, 1));
+    let hqq2 = score(PolicyConfig::new(PolicyKind::StaticQuant, 2, 0));
+    assert!(fp16 <= beam2 + 1e-9, "fp16 {fp16} must beat beam2 {beam2}");
+    assert!(
+        beam2 <= hqq2 * 1.02,
+        "beam2 {beam2} must not be worse than hqq2 {hqq2}"
+    );
+}
+
+#[test]
+fn serving_is_deterministic_in_tokens_and_time() {
+    require_artifacts!();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let run = || {
+        let model =
+            StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
+        let sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        let mut se =
+            ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, 1), sys).unwrap();
+        let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+        let reqs = WorkloadGen::generate(&WorkloadConfig::offline(2, 48, 8), &eval).unwrap();
+        serve(&mut se, reqs).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.total_generated, b.total_generated);
+    assert!((a.virtual_seconds - b.virtual_seconds).abs() < 1e-12);
+    assert_eq!(a.decode_steps, b.decode_steps);
+}
+
+#[test]
+fn serve_report_is_consistent() {
+    require_artifacts!();
+    let (_e, model) = load_model();
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let mut se =
+        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n), sys).unwrap();
+    let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+    let n_req = 3;
+    let out_len = 6;
+    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_req, 48, out_len), &eval).unwrap();
+    let r = serve(&mut se, reqs).unwrap();
+    assert_eq!(r.n_requests, n_req);
+    assert_eq!(r.total_generated, n_req * out_len);
+    assert!(r.virtual_seconds > 0.0);
+    assert!(r.prefills == n_req as u64);
+    assert!(r.bytes["expert_weights"] > 0);
+    assert!(r.bytes["compensator"] > 0, "BEAM must move compensators");
+    for req in &r.requests {
+        assert!(req.first_token_at >= req.arrival);
+        assert!(req.finished_at >= req.first_token_at);
+        assert_eq!(req.generated, out_len);
+    }
+}
+
+#[test]
+fn ndp_run_moves_activations_not_weights_for_cold_experts() {
+    require_artifacts!();
+    let (_e, model) = load_model();
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, true);
+    let mut se =
+        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Monde, 16, 0), sys).unwrap();
+    let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(2, 48, 6), &eval).unwrap();
+    let r = serve(&mut se, reqs).unwrap();
+    assert!(r.bytes["activations"] > 0, "MoNDE ships activations");
+    // Weights are pre-pinned (hot) or resident near-data (cold): the link
+    // must carry no runtime weight traffic at all.
+    assert_eq!(r.bytes.get("expert_weights").copied().unwrap_or(0), 0);
+    assert!(r.breakdown.ndp_compute_s > 0.0);
+    assert!(r.cache_hit_rate > 0.0, "pre-pinned hot experts must hit");
+}
+
+#[test]
+fn weight_store_complete_for_runtime() {
+    require_artifacts!();
+    let manifest = Manifest::load(ART).unwrap();
+    let store = WeightStore::load(manifest.weights_path()).unwrap();
+    assert!(store.len() > 1000, "expected a full tensor set, got {}", store.len());
+    assert!(store.contains("emb"));
+    for li in 0..manifest.model.n_layers {
+        assert!(store.contains(&format!("layers.{li}.gate")));
+        for e in 0..manifest.model.n_experts {
+            for proj in ["w1", "w2", "w3"] {
+                let base = format!("layers.{li}.experts.{e}.{proj}");
+                assert!(store.contains(&format!("{base}.fp32")));
+                assert!(store.contains(&format!("{base}.hqq2.pk")));
+                assert!(store.contains(&format!("{base}.comp2.default.up")));
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline vendor set has no proptest; these use the same deterministic
+//! xorshift generator as the workload module to sweep hundreds of random
+//! cases per property (routing partition, combine-weight normalization,
+//! cache accounting, link serialization, JSON round-trips).
+
+use beam_moe::config::Precision;
+use beam_moe::jsonx::Value;
+use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
+use beam_moe::offload::transfer::{Link, TransferClass};
+use beam_moe::policies::plan::{group_by_expert, topk_renorm, PlanCtx, Policy};
+use beam_moe::policies::{BeamPolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy, StaticQuantPolicy};
+use beam_moe::workload::reqgen::XorShift;
+
+fn rand_probs(rng: &mut XorShift, n_tokens: usize, n_experts: usize) -> Vec<f32> {
+    // softmax-ish random rows
+    let mut probs = vec![0f32; n_tokens * n_experts];
+    for t in 0..n_tokens {
+        let row = &mut probs[t * n_experts..(t + 1) * n_experts];
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (rng.next_f64() as f32).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    probs
+}
+
+#[test]
+fn prop_topk_renorm_selects_largest_and_normalizes() {
+    let mut rng = XorShift::new(1);
+    for _ in 0..500 {
+        let e = 2 + (rng.next_u64() % 15) as usize;
+        let k = 1 + (rng.next_u64() as usize % e);
+        let row: Vec<f32> = (0..e).map(|_| rng.next_f64() as f32).collect();
+        let sel = topk_renorm(&row, k);
+        assert_eq!(sel.len(), k);
+        // weights normalized
+        let s: f32 = sel.iter().map(|x| x.1).sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // ranks ordered by descending prob
+        for w in sel.windows(2) {
+            assert!(row[w[0].0] >= row[w[1].0]);
+            assert_eq!(w[0].2 + 1, w[1].2);
+        }
+        // selected == the k largest values
+        let mut sorted: Vec<f32> = row.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = sorted[k - 1];
+        for (e_idx, _, _) in &sel {
+            assert!(row[*e_idx] >= thresh - 1e-7);
+        }
+    }
+}
+
+#[test]
+fn prop_every_policy_plans_a_partition() {
+    let mut rng = XorShift::new(2);
+    let policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(MixtralOffloadPolicy),
+        Box::new(StaticQuantPolicy { bits: 2 }),
+        Box::new(HobbitPolicy { hi_threshold: 0.6, lo_bits: 4 }),
+        Box::new(MondePolicy),
+        Box::new(BeamPolicy { bits: 2, positions: vec![0] }),
+        Box::new(BeamPolicy { bits: 3, positions: vec![1, 2] }),
+    ];
+    for iter in 0..200 {
+        let n_tokens = 1 + (rng.next_u64() % 8) as usize;
+        let n_experts = 2 + (rng.next_u64() % 14) as usize;
+        let top_k = 1 + (rng.next_u64() as usize % n_experts.min(4));
+        let probs = rand_probs(&mut rng, n_tokens, n_experts);
+        let active: Vec<bool> = (0..n_tokens).map(|_| rng.next_f64() > 0.3).collect();
+        let ndp = iter % 2 == 0;
+        let cached = |e: usize| e % 3 == 0;
+        let ctx = PlanCtx {
+            probs: &probs,
+            n_tokens,
+            n_experts,
+            top_k,
+            active: &active,
+            ndp,
+            fp16_cached: &cached,
+        };
+        let n_active = active.iter().filter(|&&a| a).count();
+        for p in &policies {
+            let plan = p.plan(&ctx);
+            assert_eq!(
+                plan.assignments(),
+                n_active * top_k,
+                "{} must assign every active token exactly top_k times",
+                p.name()
+            );
+            // per-token combine weights sum to 1
+            let sums = beam_moe::coordinator::combine::weight_sums(&plan, n_tokens);
+            for (t, s) in sums.iter().enumerate() {
+                if active[t] {
+                    assert!((s - 1.0).abs() < 1e-4, "{}: weight sum {s}", p.name());
+                } else {
+                    assert_eq!(*s, 0.0);
+                }
+            }
+            assert!(beam_moe::coordinator::combine::plan_is_partition(
+                &plan, n_tokens, top_k, &active
+            ));
+        }
+    }
+}
+
+#[test]
+fn prop_beam_compensates_exactly_configured_positions() {
+    let mut rng = XorShift::new(3);
+    for _ in 0..200 {
+        let n_tokens = 1 + (rng.next_u64() % 6) as usize;
+        let n_experts = 4 + (rng.next_u64() % 12) as usize;
+        let top_k = 2 + (rng.next_u64() as usize % 2);
+        let pos = vec![(rng.next_u64() as usize) % top_k];
+        let probs = rand_probs(&mut rng, n_tokens, n_experts);
+        let active = vec![true; n_tokens];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens, n_experts, top_k,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let plan = BeamPolicy { bits: 2, positions: pos.clone() }.plan(&ctx);
+        let mut comp_pairs = 0;
+        for exec in &plan.execs {
+            for t in &exec.tokens {
+                if exec.precision.compensated() {
+                    assert!(pos.contains(&t.rank));
+                    comp_pairs += 1;
+                } else {
+                    assert!(!pos.contains(&t.rank));
+                }
+            }
+        }
+        assert_eq!(comp_pairs, n_tokens * pos.len());
+    }
+}
+
+#[test]
+fn prop_cache_accounting_invariants() {
+    let mut rng = XorShift::new(4);
+    for _ in 0..50 {
+        let cap = 1000 + (rng.next_u64() % 4000) as usize;
+        let mut cache = ExpertCache::new(cap);
+        let mut gets = 0u64;
+        for _ in 0..300 {
+            let key = PayloadKey {
+                layer: (rng.next_u64() % 4) as usize,
+                expert: (rng.next_u64() % 8) as usize,
+                kind: if rng.next_f64() < 0.5 {
+                    PayloadKind::Quant(2)
+                } else {
+                    PayloadKind::Comp(2)
+                },
+            };
+            if rng.next_f64() < 0.5 {
+                let bytes = 100 + (rng.next_u64() % 900) as usize;
+                cache.insert(key, std::sync::Arc::new(Vec::new()), bytes);
+            } else {
+                let _ = cache.get(&key);
+                gets += 1;
+            }
+            assert!(cache.used_bytes() <= cap, "over capacity");
+        }
+        assert_eq!(cache.hits + cache.misses, gets);
+    }
+}
+
+#[test]
+fn prop_link_serializes_and_accounts() {
+    let mut rng = XorShift::new(5);
+    for _ in 0..50 {
+        let mut link = Link::new("test", 1e6, 1e-6);
+        let mut total = 0usize;
+        for _ in 0..100 {
+            let bytes = (rng.next_u64() % 10_000) as usize;
+            let ready = rng.next_f64() * 0.01;
+            link.transfer(ready, bytes, TransferClass::ExpertWeights);
+            total += bytes;
+        }
+        assert_eq!(link.log.total_bytes(), total);
+        // events never overlap (single channel)
+        for w in link.log.events.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_group_by_expert_rank_consistency() {
+    let mut rng = XorShift::new(6);
+    for _ in 0..200 {
+        let n_tokens = 1 + (rng.next_u64() % 8) as usize;
+        let n_experts = 2 + (rng.next_u64() % 8) as usize;
+        let top_k = 1 + (rng.next_u64() as usize % n_experts.min(3));
+        let probs = rand_probs(&mut rng, n_tokens, n_experts);
+        let active = vec![true; n_tokens];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs, n_tokens, n_experts, top_k,
+            active: &active, ndp: false, fp16_cached: &cached,
+        };
+        let groups = group_by_expert(&ctx);
+        for (e, tokens) in groups.iter().enumerate() {
+            for t in tokens {
+                // rank recorded must match position in the token's sorted row
+                let row = &probs[t.row * n_experts..(t.row + 1) * n_experts];
+                let sel = topk_renorm(row, top_k);
+                assert_eq!(sel[t.rank].0, e);
+                assert!((sel[t.rank].1 - t.weight).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_jsonx_roundtrip() {
+    let mut rng = XorShift::new(7);
+    fn gen(rng: &mut XorShift, depth: usize) -> Value {
+        match if depth == 0 { rng.next_u64() % 4 } else { rng.next_u64() % 6 } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.next_f64() < 0.5),
+            2 => Value::Num((rng.next_f64() * 1e6).round() / 100.0),
+            3 => Value::Str(format!("s{}-\"quoted\"\n", rng.next_u64() % 1000)),
+            4 => Value::Arr((0..rng.next_u64() % 5).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.next_u64() % 5)
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..300 {
+        let v = gen(&mut rng, 3);
+        let back = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+    }
+}
+
+#[test]
+fn prop_precision_bytes_ordering() {
+    use beam_moe::quant::formats::ExpertBytes;
+    let mut rng = XorShift::new(8);
+    for _ in 0..100 {
+        let d = 64 * (1 + (rng.next_u64() % 8) as usize);
+        let f = 64 * (1 + (rng.next_u64() % 8) as usize);
+        let eb = ExpertBytes { d_model: d, d_ff: f, group_size: 64 };
+        assert!(eb.quantized(2) < eb.quantized(3));
+        assert!(eb.quantized(3) < eb.quantized(4));
+        assert!(eb.quantized(4) < eb.fp16());
+        let _ = Precision::Int(2).bits();
+    }
+}
