@@ -11,6 +11,7 @@ mod common;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use beam_moe::backend::{default_backend, Tensor};
 use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
 use beam_moe::coordinator::combine;
 use beam_moe::coordinator::scheduler::serve;
@@ -18,23 +19,23 @@ use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use beam_moe::policies::plan::{topk_renorm, ExpertExec, Location, TokenAssign};
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
     common::header("hotpath micro-benchmarks (wall-clock)");
-    let engine = Arc::new(Engine::cpu()?);
-    let model = StagedModel::load(Arc::clone(&engine), Manifest::load("artifacts/mixtral-tiny")?)?;
+    let backend = default_backend()?;
+    let model = StagedModel::load(Arc::clone(&backend), Manifest::load("artifacts/mixtral-tiny")?)?;
     let dims = model.manifest.model.clone();
 
     // 1. Payload literalization (cache-miss host cost).
-    common::time("payload_base int2 (9 literals)", 200, || {
+    common::time("payload_base int2 (9 tensors)", 200, || {
         let _ = model.payload_base(0, 0, Precision::Int(2), "hqq").unwrap();
     });
-    common::time("payload_base fp16 (3 literals)", 200, || {
+    common::time("payload_base fp16 (3 tensors)", 200, || {
         let _ = model.payload_base(0, 0, Precision::Fp16, "hqq").unwrap();
     });
-    common::time("payload_comp int2 (18 literals)", 200, || {
+    common::time("payload_comp int2 (18 tensors)", 200, || {
         let _ = model.payload_comp(0, 0, 2, "default").unwrap();
     });
 
@@ -74,14 +75,14 @@ fn main() -> anyhow::Result<()> {
 
     // 5. Expert stage execution (PJRT, decode batch).
     let payload = model.payload_base(0, 0, Precision::Int(2), "hqq")?;
-    let refs: Vec<&xla::Literal> = payload.iter().collect();
-    let xn = model.lit_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
-    common::time("run_expert int2 decode (PJRT)", 50, || {
+    let refs: Vec<&Tensor> = payload.iter().collect();
+    let xn = model.make_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
+    common::time("run_expert int2 decode (stage)", 50, || {
         let _ = model.run_expert(Precision::Int(2), false, &xn, &refs).unwrap();
     });
     let payload_c = model.payload_comp(0, 0, 2, "default")?;
-    let refs_c: Vec<&xla::Literal> = payload.iter().chain(payload_c.iter()).collect();
-    common::time("run_expert int2+comp decode (PJRT)", 50, || {
+    let refs_c: Vec<&Tensor> = payload.iter().chain(payload_c.iter()).collect();
+    common::time("run_expert int2+comp decode (stage)", 50, || {
         let _ = model
             .run_expert(Precision::IntComp(2), false, &xn, &refs_c)
             .unwrap();
@@ -91,17 +92,17 @@ fn main() -> anyhow::Result<()> {
     {
         let (kc, vc) = model.empty_caches()?;
         let pos: Vec<i32> = vec![3; dims.b_max];
-        let x = model.lit_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
-        common::time("attn_decode stage (PJRT)", 50, || {
+        let x = model.make_x(dims.b_max, &vec![0.1f32; dims.b_max * dims.d_model])?;
+        common::time("attn_decode stage", 50, || {
             let _ = model.attn_decode(0, &x, &kc, &vc, &pos).unwrap();
         });
-        common::time("router stage (PJRT)", 50, || {
+        common::time("router stage", 50, || {
             let _ = model.router(0, &x, false).unwrap();
         });
-        common::time("embed stage (PJRT)", 50, || {
+        common::time("embed stage", 50, || {
             let _ = model.embed(&vec![1i32; dims.b_max], false).unwrap();
         });
-        common::time("head stage (PJRT)", 50, || {
+        common::time("head stage", 50, || {
             let _ = model.head(&x).unwrap();
         });
     }
@@ -109,7 +110,7 @@ fn main() -> anyhow::Result<()> {
     // 6. End-to-end decode steps (the serving inner loop).
     let sys = SystemConfig::scaled_for(&dims, false);
     let mut se = ServeEngine::new(
-        StagedModel::load(Arc::clone(&engine), Manifest::load("artifacts/mixtral-tiny")?)?,
+        StagedModel::load(Arc::clone(&backend), Manifest::load("artifacts/mixtral-tiny")?)?,
         PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n),
         sys,
     )?;
@@ -120,11 +121,11 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let r = serve(&mut se, requests)?;
     println!(
-        "  decode loop: {} steps in {:.2}s wall => {:.1} ms/step ({} pjrt execs, {:.2} wall tok/s)",
+        "  decode loop: {} steps in {:.2}s wall => {:.1} ms/step ({} backend execs, {:.2} wall tok/s)",
         r.decode_steps,
         t0.elapsed().as_secs_f64(),
         1e3 * t0.elapsed().as_secs_f64() / r.decode_steps.max(1) as f64,
-        r.pjrt_execs,
+        r.backend_execs,
         r.wall_tokens_per_second(),
     );
     Ok(())

@@ -11,18 +11,19 @@
 //! ```
 
 use anyhow::Result;
+use beam_moe::backend::default_backend;
 use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let model_name = args.get(1).map(|s| s.as_str()).unwrap_or("mixtral-tiny");
-    let engine = Arc::new(Engine::cpu()?);
+    let backend = default_backend()?;
     let manifest = Manifest::load(format!("artifacts/{model_name}"))?;
     let top_n = manifest.model.top_n;
 
@@ -35,7 +36,7 @@ fn main() -> Result<()> {
 
     for (name, policy) in policies {
         let model = StagedModel::load(
-            Arc::clone(&engine),
+            Arc::clone(&backend),
             Manifest::load(format!("artifacts/{model_name}"))?,
         )?;
         let sys = SystemConfig::scaled_for(&model.manifest.model, true);

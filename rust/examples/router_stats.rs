@@ -14,17 +14,17 @@ use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::jsonx::Value;
+use beam_moe::backend::default_backend;
 use beam_moe::manifest::{Manifest, WeightStore};
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{DecodeTrace, WorkloadConfig, WorkloadGen};
-use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let model_name = args.get(1).map(|s| s.as_str()).unwrap_or("mixtral-tiny");
 
-    let engine = Arc::new(Engine::cpu()?);
-    let model = StagedModel::load(engine, Manifest::load(format!("artifacts/{model_name}"))?)?;
+    let backend = default_backend()?;
+    let model = StagedModel::load(backend, Manifest::load(format!("artifacts/{model_name}"))?)?;
     let dims = model.manifest.model.clone();
     let sys = SystemConfig::scaled_for(&dims, false);
     let mut se = ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n), sys)?;

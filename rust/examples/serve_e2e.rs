@@ -11,11 +11,12 @@
 //! ```
 
 use anyhow::Result;
+use beam_moe::backend::default_backend;
 use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 use std::sync::Arc;
 
@@ -25,7 +26,7 @@ fn main() -> Result<()> {
     let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(6);
     let output_len: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64);
 
-    let engine = Arc::new(Engine::cpu()?);
+    let backend = default_backend()?;
     let manifest = Manifest::load(format!("artifacts/{model_name}"))?;
     let top_n = manifest.model.top_n;
     println!(
@@ -46,7 +47,7 @@ fn main() -> Result<()> {
     );
     let mut baseline = 0.0;
     for (name, policy) in policies {
-        let model = StagedModel::load(Arc::clone(&engine), Manifest::load(format!("artifacts/{model_name}"))?)?;
+        let model = StagedModel::load(Arc::clone(&backend), Manifest::load(format!("artifacts/{model_name}"))?)?;
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
         let mut se = ServeEngine::new(model, policy, sys)?;
         let eval = WeightStore::load(se.model.manifest.eval_path())?;

@@ -1,0 +1,92 @@
+//! Pluggable numerics backends (DESIGN.md §4).
+//!
+//! The coordinator never computes model math itself: it assembles stage
+//! arguments as host [`Tensor`]s and hands them to a [`Backend`].  Two
+//! implementations exist:
+//!
+//! * [`ReferenceBackend`] — pure-Rust dequant + GEMM + softmax, the
+//!   **default**.  Needs no compiled artifacts, no PJRT, no python: the
+//!   full serving loop (batcher, policies, offload tiers, NDP, virtual
+//!   clock) runs from a clean checkout.
+//! * `PjrtBackend` (behind the `pjrt` cargo feature) — executes the AOT
+//!   HLO stage artifacts produced by `python/compile/aot.py` on the PJRT
+//!   CPU client, wrapping the original `runtime::engine::Engine`.
+//!
+//! Both implement the same two traits, extracted from the old PJRT-only
+//! runtime:
+//!
+//! * [`Backend`] — owns execution state (clients, compiled/interpreted
+//!   stages) and hands out per-stage executors, the analogue of
+//!   `Engine::stage`.
+//! * [`StagedExec`] — one runnable stage, the analogue of one
+//!   `PjRtLoadedExecutable` plus `Engine::run`.
+//!
+//! Stage *semantics* (names, argument layouts, output ordering) are fixed
+//! by `python/compile/model.py` and documented in DESIGN.md §5; any backend
+//! must honor them bit-for-bit at the interface level so policies and tests
+//! are backend-agnostic.
+
+pub mod reference;
+pub mod tensor;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use reference::ReferenceBackend;
+pub use tensor::{Tensor, TensorData};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+
+/// One runnable model stage.
+///
+/// Not `Send`/`Sync` by requirement: the PJRT CPU client is not known to be
+/// thread-safe, and the serving loop is single-threaded by design (overlap
+/// happens in *virtual* time — DESIGN.md §6).
+pub trait StagedExec {
+    /// The manifest stage name this executor implements (e.g. `expert_q2_d`).
+    fn stage_name(&self) -> &str;
+
+    /// Execute the stage.  Argument order and the decomposed output tuple
+    /// match the python stage signatures exactly (DESIGN.md §5).
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// A numerics backend: a factory of [`StagedExec`]s plus bookkeeping.
+pub trait Backend {
+    /// Human-readable platform name (`reference-cpu`, `cpu` for PJRT, …).
+    fn platform(&self) -> String;
+
+    /// Get (building/compiling on first use) the executor for a stage.
+    fn stage(&self, manifest: &Manifest, name: &str) -> Result<Arc<dyn StagedExec>>;
+
+    /// Cumulative stage executions, for the perf harness.
+    fn exec_count(&self) -> u64;
+}
+
+/// The backend this build defaults to: PJRT when the `pjrt` feature is
+/// enabled, the pure-Rust reference backend otherwise.
+pub fn default_backend() -> Result<Arc<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    return Ok(Arc::new(pjrt::PjrtBackend::cpu()?));
+    #[cfg(not(feature = "pjrt"))]
+    Ok(Arc::new(ReferenceBackend::new()))
+}
+
+/// Backend selection by name (`--backend` on the CLI).
+pub fn by_name(name: &str) -> Result<Arc<dyn Backend>> {
+    match name {
+        "default" => default_backend(),
+        "ref" | "reference" => Ok(Arc::new(ReferenceBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" | "xla" => Ok(Arc::new(pjrt::PjrtBackend::cpu()?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" | "xla" => {
+            anyhow::bail!("backend `{name}` requires building with `--features pjrt`")
+        }
+        other => anyhow::bail!("unknown backend `{other}` (default|ref|pjrt)"),
+    }
+}

@@ -1,0 +1,100 @@
+//! PJRT backend: the XLA execution path, behind the `pjrt` cargo feature.
+//!
+//! Wraps [`crate::runtime::engine::Engine`] (PJRT CPU client + compiled
+//! HLO stage artifacts) in the [`Backend`]/[`StagedExec`] traits.  Host
+//! tensors are literalized on entry and read back on exit; the conversion
+//! cost is host-side work the virtual clock does not price (the same
+//! convention the pre-refactor runtime used — DESIGN.md §4).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal, PjRtLoadedExecutable};
+
+use crate::backend::{Backend, StagedExec, Tensor, TensorData};
+use crate::manifest::Manifest;
+use crate::runtime::engine::Engine;
+
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtBackend { engine: Arc::new(Engine::cpu()?) })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn stage(&self, manifest: &Manifest, name: &str) -> Result<Arc<dyn StagedExec>> {
+        let exe = self.engine.stage(manifest, name)?;
+        Ok(Arc::new(PjrtStage {
+            name: name.to_string(),
+            exe,
+            engine: Arc::clone(&self.engine),
+        }))
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.engine.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+struct PjrtStage {
+    name: String,
+    exe: Arc<PjRtLoadedExecutable>,
+    engine: Arc<Engine>,
+}
+
+impl StagedExec for PjrtStage {
+    fn stage_name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<Literal> = args.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let out = self.engine.run(&self.exe, &refs)?;
+        out.iter().map(from_literal).collect()
+    }
+}
+
+fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for upload only.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Upload a host tensor as an `xla::Literal`.
+pub fn to_literal(t: &Tensor) -> Result<Literal> {
+    let (ty, bytes) = match &t.data {
+        TensorData::F32(v) => (ElementType::F32, bytes_of(v.as_slice())),
+        TensorData::I32(v) => (ElementType::S32, bytes_of(v.as_slice())),
+        TensorData::U8(v) => (ElementType::U8, v.as_slice()),
+        TensorData::I8(v) => (ElementType::S8, bytes_of(v.as_slice())),
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| anyhow!("tensor -> literal: {e}"))
+}
+
+/// Read a stage output literal back to the host.  Stage outputs are f32
+/// (activations, caches, probs, logits) — model.py lowers everything at f32.
+pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal -> f32 host vec: {e}"))?;
+    Tensor::from_f32(&dims, data)
+}

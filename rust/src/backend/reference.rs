@@ -1,0 +1,585 @@
+//! The pure-Rust reference backend: dequant + GEMM + softmax on the host.
+//!
+//! Implements every AOT stage of `python/compile/model.py` in plain Rust —
+//! rmsnorm, RoPE, causal/KV-cache attention, router softmax, SwiGLU
+//! experts at fp16/low-bit/compensated precision, and the tied-embedding
+//! head — reusing [`crate::quant::dequant`] for the low-bit paths, so the
+//! packed-code semantics stay pinned to one implementation.
+//!
+//! This backend needs **no compiled artifacts**: `stage()` derives
+//! everything from the stage *name* and the manifest's model block, so the
+//! whole serving stack runs from a clean checkout (only `weights.beamw`
+//! and `manifest.json` are read; the HLO files may be absent).  It is the
+//! default backend; the `pjrt` feature swaps in the XLA execution path.
+//!
+//! Numerics are f32 end-to-end, matching the AOT stages (which are lowered
+//! at f32 despite the paper's fp16 wire format — DESIGN.md §3).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{Backend, StagedExec, Tensor};
+use crate::config::ModelDims;
+use crate::manifest::Manifest;
+use crate::quant::dequant::{dequantize_grouped, unpack_container};
+
+/// RMS-norm epsilon (`model.py::RMS_EPS`).
+const RMS_EPS: f32 = 1e-5;
+/// Rotary base.  `ModelConfig.rope_theta` defaults to 1e4 for every model
+/// the compile pipeline ships; the manifest does not carry it.
+const ROPE_THETA: f32 = 10000.0;
+
+pub struct ReferenceBackend {
+    execs: Arc<AtomicU64>,
+    /// Built executors, keyed by (model dir, stage) like the PJRT
+    /// executable cache — the serve loop resolves stages per call.
+    stages: RefCell<HashMap<String, Arc<RefStage>>>,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend {
+            execs: Arc::new(AtomicU64::new(0)),
+            stages: RefCell::new(HashMap::new()),
+        }
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+
+    fn stage(&self, manifest: &Manifest, name: &str) -> Result<Arc<dyn StagedExec>> {
+        // Key on every dim the executors snapshot, not just the artifact
+        // dir: synthetic manifests share a placeholder dir, and one backend
+        // may serve models with different shapes.
+        let m = &manifest.model;
+        let key = format!(
+            "{}|{}|{}.{}.{}.{}.{}.{}|{name}",
+            manifest.dir.display(),
+            m.name,
+            m.d_model,
+            m.d_ff,
+            m.n_heads,
+            m.s_max,
+            m.group_size,
+            m.rank_pad,
+        );
+        if let Some(s) = self.stages.borrow().get(&key) {
+            let hit: Arc<dyn StagedExec> = Arc::clone(s);
+            return Ok(hit);
+        }
+        let kind = StageKind::parse(name, manifest)?;
+        let stage = Arc::new(RefStage {
+            name: name.to_string(),
+            kind,
+            dims: manifest.model.clone(),
+            execs: Arc::clone(&self.execs),
+        });
+        self.stages.borrow_mut().insert(key, Arc::clone(&stage));
+        Ok(stage)
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+}
+
+/// Which stage family a name resolves to.  `cbits` is the kernel-container
+/// bit-width (3-bit codes ride in 4-bit containers — manifest §quant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StageKind {
+    Embed,
+    AttnDecode,
+    AttnPrefill,
+    Router,
+    ExpertFp16,
+    ExpertQuant { cbits: u8 },
+    ExpertQuantComp { cbits: u8 },
+    Head,
+}
+
+impl StageKind {
+    fn parse(name: &str, manifest: &Manifest) -> Result<StageKind> {
+        let (base, suffix) = name
+            .rsplit_once('_')
+            .with_context(|| format!("stage `{name}` has no _p/_d suffix"))?;
+        if suffix != "p" && suffix != "d" {
+            bail!("stage `{name}`: unknown suffix `{suffix}`");
+        }
+        Ok(match base {
+            "embed" => StageKind::Embed,
+            "attn" => {
+                if suffix == "p" {
+                    StageKind::AttnPrefill
+                } else {
+                    StageKind::AttnDecode
+                }
+            }
+            "router" => StageKind::Router,
+            "head" => StageKind::Head,
+            "expert_fp16" => StageKind::ExpertFp16,
+            _ => {
+                let spec = base
+                    .strip_prefix("expert_q")
+                    .with_context(|| format!("unknown stage `{name}`"))?;
+                let (bits_str, comp) = match spec.strip_suffix('c') {
+                    Some(b) => (b, true),
+                    None => (spec, false),
+                };
+                let bits: u8 = bits_str
+                    .parse()
+                    .with_context(|| format!("stage `{name}`: bad bit-width"))?;
+                let cbits = manifest.container_bits(bits);
+                if comp {
+                    StageKind::ExpertQuantComp { cbits }
+                } else {
+                    StageKind::ExpertQuant { cbits }
+                }
+            }
+        })
+    }
+}
+
+struct RefStage {
+    name: String,
+    kind: StageKind,
+    dims: ModelDims,
+    execs: Arc<AtomicU64>,
+}
+
+impl StagedExec for RefStage {
+    fn stage_name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.execs.fetch_add(1, Ordering::Relaxed);
+        match self.kind {
+            StageKind::Embed => self.embed(args),
+            StageKind::AttnDecode => self.attn_decode(args),
+            StageKind::AttnPrefill => self.attn_prefill(args),
+            StageKind::Router => self.router(args),
+            StageKind::ExpertFp16 => self.expert_fp16(args),
+            StageKind::ExpertQuant { cbits } => self.expert_quant(args, cbits),
+            StageKind::ExpertQuantComp { cbits } => self.expert_quant_comp(args, cbits),
+            StageKind::Head => self.head(args),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared primitives (the rust mirrors of model.py's helpers)
+// ---------------------------------------------------------------------------
+
+/// Row-wise RMS norm: `x * w / sqrt(mean(x^2) + eps)` over (n, d).
+fn rmsnorm(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * w[j] * inv;
+        }
+    }
+    out
+}
+
+/// Row-major GEMM: (n, k) @ (k, m) -> (n, m).  ikj loop order keeps the
+/// inner loop streaming over contiguous `w` rows.
+fn matmul(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut y = vec![0f32; n * m];
+    for i in 0..n {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * m..(kk + 1) * m];
+            let yrow = &mut y[i * m..(i + 1) * m];
+            for (yy, ww) in yrow.iter_mut().zip(wrow) {
+                *yy += xv * ww;
+            }
+        }
+    }
+    y
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// In-place numerically-stable softmax over a row.
+fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Half-split rotary embedding on one (dh,) head vector at position `pos`
+/// (model.py::rope: concat(x1·cos − x2·sin, x1·sin + x2·cos)).
+fn rope_inplace(v: &mut [f32], pos: i32, dh: usize) {
+    let half = dh / 2;
+    for i in 0..half {
+        let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (v[i], v[i + half]);
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// SwiGLU expert FFN: `(silu(x@w1) ⊙ (x@w3)) @ w2` over (n, d).
+fn swiglu(xn: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], n: usize, d: usize, f: usize) -> Vec<f32> {
+    let gate = matmul(xn, w1, n, d, f);
+    let up = matmul(xn, w3, n, d, f);
+    let h: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
+    matmul(&h, w2, n, f, d)
+}
+
+/// Dequantize one packed weight matrix (pk, sc, zp) to (d_in, d_out) f32.
+fn dequant_mat(
+    pk: &Tensor,
+    sc: &Tensor,
+    zp: &Tensor,
+    d_in: usize,
+    d_out: usize,
+    cbits: u8,
+    group_size: usize,
+) -> Result<Vec<f32>> {
+    let nbytes = *pk.shape.last().context("packed tensor has no shape")?;
+    let codes = unpack_container(pk.as_u8()?, d_in, nbytes, cbits, d_out);
+    Ok(dequantize_grouped(&codes, sc.as_f32()?, zp.as_f32()?, d_in, d_out, group_size))
+}
+
+/// Reconstruct the low-rank delta `U·V` from one compensator factor set
+/// (up, us, uz, vp, vs, vz).  Factors are INT3 codes in 4-bit containers
+/// regardless of the base weight width (paper §3.1 / kernels/ref.py).
+fn comp_delta(c: &[&Tensor], d_in: usize, d_out: usize, rank: usize) -> Result<Vec<f32>> {
+    let [up, us, uz, vp, vs, vz] = [c[0], c[1], c[2], c[3], c[4], c[5]];
+    let u_groups = us.shape[0];
+    let v_groups = vs.shape[0];
+    let u = dequant_mat(up, us, uz, d_in, rank, 4, d_in / u_groups)?;
+    let v = dequant_mat(vp, vs, vz, rank, d_out, 4, rank / v_groups)?;
+    Ok(matmul(&u, &v, d_in, rank, d_out))
+}
+
+// ---------------------------------------------------------------------------
+// Stage implementations
+// ---------------------------------------------------------------------------
+
+impl RefStage {
+    fn argc(&self, args: &[&Tensor], want: usize) -> Result<()> {
+        if args.len() != want {
+            bail!("stage {}: {} args, want {want}", self.name, args.len());
+        }
+        Ok(())
+    }
+
+    /// (tokens (N,) i32, emb (V, d)) -> (x (N, d)).
+    fn embed(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 2)?;
+        let tokens = args[0].as_i32()?;
+        let emb = args[1].as_f32()?;
+        let (v, d) = (args[1].shape[0], args[1].shape[1]);
+        let mut out = vec![0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= v {
+                bail!("token id {t} out of vocab {v}");
+            }
+            out[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+        }
+        Ok(vec![Tensor::from_f32(&[tokens.len(), d], out)?])
+    }
+
+    /// (x, ln2, gate (d, E)) -> (xn (N, d), probs (N, E)).
+    fn router(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 3)?;
+        let (n, d) = (args[0].shape[0], args[0].shape[1]);
+        let e = args[2].shape[1];
+        let xn = rmsnorm(args[0].as_f32()?, args[1].as_f32()?, n, d);
+        let mut probs = matmul(&xn, args[2].as_f32()?, n, d, e);
+        for row in probs.chunks_mut(e) {
+            softmax_inplace(row);
+        }
+        Ok(vec![Tensor::from_f32(&[n, d], xn)?, Tensor::from_f32(&[n, e], probs)?])
+    }
+
+    /// (x, ln_f, emb (V, d)) -> (logits (N, V)) with the tied head.
+    fn head(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 3)?;
+        let (n, d) = (args[0].shape[0], args[0].shape[1]);
+        let v = args[2].shape[0];
+        let xn = rmsnorm(args[0].as_f32()?, args[1].as_f32()?, n, d);
+        let emb = args[2].as_f32()?;
+        let mut logits = vec![0f32; n * v];
+        for i in 0..n {
+            let xr = &xn[i * d..(i + 1) * d];
+            for t in 0..v {
+                let er = &emb[t * d..(t + 1) * d];
+                logits[i * v + t] = xr.iter().zip(er).map(|(a, b)| a * b).sum();
+            }
+        }
+        Ok(vec![Tensor::from_f32(&[n, v], logits)?])
+    }
+
+    /// (xn, w1 (d,f), w2 (f,d), w3 (d,f)) -> (y (N, d)).
+    fn expert_fp16(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 4)?;
+        let (n, d) = (args[0].shape[0], args[0].shape[1]);
+        let f = args[1].shape[1];
+        let y = swiglu(
+            args[0].as_f32()?,
+            args[1].as_f32()?,
+            args[2].as_f32()?,
+            args[3].as_f32()?,
+            n,
+            d,
+            f,
+        );
+        Ok(vec![Tensor::from_f32(&[n, d], y)?])
+    }
+
+    /// (xn, (pk, sc, zp) × w1/w2/w3) -> (y (N, d)).
+    fn expert_quant(&self, args: &[&Tensor], cbits: u8) -> Result<Vec<Tensor>> {
+        self.argc(args, 10)?;
+        let (n, d, f, g) = (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
+        let w1 = dequant_mat(args[1], args[2], args[3], d, f, cbits, g)?;
+        let w2 = dequant_mat(args[4], args[5], args[6], f, d, cbits, g)?;
+        let w3 = dequant_mat(args[7], args[8], args[9], d, f, cbits, g)?;
+        let y = swiglu(args[0].as_f32()?, &w1, &w2, &w3, n, d, f);
+        Ok(vec![Tensor::from_f32(&[n, d], y)?])
+    }
+
+    /// (xn, 9 base, 6 comp × w1/w2/w3) -> (y (N, d)) — the restored path:
+    /// `Ŵi = deq(Wi) + Ui·Vi` per projection, then the plain SwiGLU.
+    fn expert_quant_comp(&self, args: &[&Tensor], cbits: u8) -> Result<Vec<Tensor>> {
+        self.argc(args, 28)?;
+        let (n, d, f, g) = (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
+        let r = self.dims.rank_pad;
+        let mut w1 = dequant_mat(args[1], args[2], args[3], d, f, cbits, g)?;
+        let mut w2 = dequant_mat(args[4], args[5], args[6], f, d, cbits, g)?;
+        let mut w3 = dequant_mat(args[7], args[8], args[9], d, f, cbits, g)?;
+        let d1 = comp_delta(&args[10..16], d, f, r)?;
+        let d2 = comp_delta(&args[16..22], f, d, r)?;
+        let d3 = comp_delta(&args[22..28], d, f, r)?;
+        for (w, dl) in [(&mut w1, &d1), (&mut w2, &d2), (&mut w3, &d3)] {
+            for (a, b) in w.iter_mut().zip(dl) {
+                *a += b;
+            }
+        }
+        let y = swiglu(args[0].as_f32()?, &w1, &w2, &w3, n, d, f);
+        Ok(vec![Tensor::from_f32(&[n, d], y)?])
+    }
+
+    /// (x (B,d), ln1, wq, wk, wv, wo, k_cache (B,H,S,dh), v_cache, pos (B,))
+    /// -> (x' (B,d), k_cache', v_cache').
+    fn attn_decode(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 9)?;
+        let (b, d) = (args[0].shape[0], args[0].shape[1]);
+        let (h, dh, s_max) = (self.dims.n_heads, self.dims.d_head(), self.dims.s_max);
+        let x = args[0].as_f32()?;
+        let pos = args[8].as_i32()?;
+        let xn = rmsnorm(x, args[1].as_f32()?, b, d);
+        let mut q = matmul(&xn, args[2].as_f32()?, b, d, d);
+        let mut k = matmul(&xn, args[3].as_f32()?, b, d, d);
+        let v = matmul(&xn, args[4].as_f32()?, b, d, d);
+        for bi in 0..b {
+            for hh in 0..h {
+                let o = bi * d + hh * dh;
+                rope_inplace(&mut q[o..o + dh], pos[bi], dh);
+                rope_inplace(&mut k[o..o + dh], pos[bi], dh);
+            }
+        }
+
+        // Write the new K/V rows into copies of the caches.  The write
+        // position saturates at s_max-1, mirroring XLA's
+        // `dynamic_update_slice` clamp the AOT stage relies on when a
+        // sequence outgrows the cache.
+        let mut kc = args[6].clone();
+        let mut vc = args[7].clone();
+        {
+            let kc = kc.as_f32_mut()?;
+            let vc = vc.as_f32_mut()?;
+            for bi in 0..b {
+                let p = (pos[bi].max(0) as usize).min(s_max - 1);
+                for hh in 0..h {
+                    let at = ((bi * h + hh) * s_max + p) * dh;
+                    kc[at..at + dh].copy_from_slice(&k[bi * d + hh * dh..bi * d + (hh + 1) * dh]);
+                    vc[at..at + dh].copy_from_slice(&v[bi * d + hh * dh..bi * d + (hh + 1) * dh]);
+                }
+            }
+        }
+
+        // Masked single-query attention per (slot, head); the valid prefix
+        // is capped at s_max like the iota mask in the AOT stage.
+        let scale = 1.0 / (dh as f32).sqrt();
+        let kcd = kc.as_f32()?;
+        let vcd = vc.as_f32()?;
+        let mut attn = vec![0f32; b * d];
+        for bi in 0..b {
+            let len = ((pos[bi] + 1).max(1) as usize).min(s_max);
+            for hh in 0..h {
+                let qv = &q[bi * d + hh * dh..bi * d + (hh + 1) * dh];
+                let base = (bi * h + hh) * s_max * dh;
+                let mut scores: Vec<f32> = (0..len)
+                    .map(|s| {
+                        let kr = &kcd[base + s * dh..base + (s + 1) * dh];
+                        qv.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * scale
+                    })
+                    .collect();
+                softmax_inplace(&mut scores);
+                let out = &mut attn[bi * d + hh * dh..bi * d + (hh + 1) * dh];
+                for (s, p) in scores.iter().enumerate() {
+                    let vr = &vcd[base + s * dh..base + (s + 1) * dh];
+                    for (o, vv) in out.iter_mut().zip(vr) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+        let proj = matmul(&attn, args[5].as_f32()?, b, d, d);
+        let xo: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+        Ok(vec![Tensor::from_f32(&[b, d], xo)?, kc, vc])
+    }
+
+    /// (x (T,d), ln1, wq, wk, wv, wo) -> (x' (T,d), kc (H,S,dh), vc (H,S,dh)).
+    fn attn_prefill(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.argc(args, 6)?;
+        let (t, d) = (args[0].shape[0], args[0].shape[1]);
+        let (h, dh, s_max) = (self.dims.n_heads, self.dims.d_head(), self.dims.s_max);
+        let x = args[0].as_f32()?;
+        let xn = rmsnorm(x, args[1].as_f32()?, t, d);
+        let mut q = matmul(&xn, args[2].as_f32()?, t, d, d);
+        let mut k = matmul(&xn, args[3].as_f32()?, t, d, d);
+        let v = matmul(&xn, args[4].as_f32()?, t, d, d);
+        for ti in 0..t {
+            for hh in 0..h {
+                let o = ti * d + hh * dh;
+                rope_inplace(&mut q[o..o + dh], ti as i32, dh);
+                rope_inplace(&mut k[o..o + dh], ti as i32, dh);
+            }
+        }
+
+        // Causal attention: query ti attends to keys 0..=ti.
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut attn = vec![0f32; t * d];
+        for ti in 0..t {
+            for hh in 0..h {
+                let qv = &q[ti * d + hh * dh..ti * d + (hh + 1) * dh];
+                let mut scores: Vec<f32> = (0..=ti)
+                    .map(|s| {
+                        let kr = &k[s * d + hh * dh..s * d + (hh + 1) * dh];
+                        qv.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * scale
+                    })
+                    .collect();
+                softmax_inplace(&mut scores);
+                let out = &mut attn[ti * d + hh * dh..ti * d + (hh + 1) * dh];
+                for (s, p) in scores.iter().enumerate() {
+                    let vr = &v[s * d + hh * dh..s * d + (hh + 1) * dh];
+                    for (o, vv) in out.iter_mut().zip(vr) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+        let proj = matmul(&attn, args[5].as_f32()?, t, d, d);
+        let xo: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+
+        // Slot caches, (H, S, dh), zero-padded past T.
+        let mut kc = vec![0f32; h * s_max * dh];
+        let mut vc = vec![0f32; h * s_max * dh];
+        for ti in 0..t {
+            for hh in 0..h {
+                let at = (hh * s_max + ti) * dh;
+                kc[at..at + dh].copy_from_slice(&k[ti * d + hh * dh..ti * d + (hh + 1) * dh]);
+                vc[at..at + dh].copy_from_slice(&v[ti * d + hh * dh..ti * d + (hh + 1) * dh]);
+            }
+        }
+        Ok(vec![
+            Tensor::from_f32(&[t, d], xo)?,
+            Tensor::from_f32(&[h, s_max, dh], kc)?,
+            Tensor::from_f32(&[h, s_max, dh], vc)?,
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_weight_normalizes() {
+        let x = vec![3.0f32, 4.0]; // rms = sqrt(12.5)
+        let out = rmsnorm(&x, &[1.0, 1.0], 1, 2);
+        let rms = (12.5f32 + RMS_EPS).sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let y = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(y, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut row);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn rope_at_position_zero_is_identity() {
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        rope_inplace(&mut v, 0, 4);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut v = vec![1.0f32, -2.0, 0.5, 3.0];
+        let n0: f32 = v.iter().map(|x| x * x).sum();
+        rope_inplace(&mut v, 17, 4);
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stage_names_parse() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let b = ReferenceBackend::new();
+        for name in [
+            "embed_p", "embed_d", "attn_p", "attn_d", "router_p", "router_d",
+            "expert_fp16_p", "expert_fp16_d", "expert_q2_p", "expert_q2c_d",
+            "head_p", "head_d",
+        ] {
+            assert!(b.stage(&manifest, name).is_ok(), "stage {name} must parse");
+        }
+        assert!(b.stage(&manifest, "bogus_d").is_err());
+        assert!(b.stage(&manifest, "nosuffix").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Host tensors — the backend-independent data currency of the coordinator.
+//!
+//! Every payload, activation and cache in the serving stack is a [`Tensor`]:
+//! a shape plus typed host storage.  Backends decide what to do with it —
+//! the reference backend computes on the host data directly; the PJRT
+//! backend (behind the `pjrt` feature) uploads it as an `xla::Literal` at
+//! stage boundaries.  Keeping the coordinator on host tensors is what makes
+//! the numerics layer pluggable (DESIGN.md §4).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::{Dtype, TensorView};
+
+/// Typed host storage of one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    I8(Vec<i8>),
+}
+
+/// A host tensor: row-major data with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+fn check_len(dims: &[usize], len: usize) -> Result<()> {
+    let want: usize = dims.iter().product();
+    if want != len {
+        return Err(anyhow!("tensor shape {dims:?} wants {want} elements, got {len}"));
+    }
+    Ok(())
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn from_u8(shape: &[usize], data: Vec<u8>) -> Result<Tensor> {
+        check_len(shape, data.len())?;
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::U8(data) })
+    }
+
+    /// Copy a BEAMW tensor view into a host tensor (the "host→staging"
+    /// step; the link simulator prices the device-bound copy separately).
+    pub fn from_view(view: &TensorView) -> Result<Tensor> {
+        let data = match view.dtype {
+            Dtype::F32 => TensorData::F32(view.as_f32()?),
+            Dtype::I32 => TensorData::I32(view.as_i32()?),
+            Dtype::U8 => TensorData::U8(view.bytes().to_vec()),
+            Dtype::I8 => TensorData::I8(view.bytes().iter().map(|&b| b as i8).collect()),
+        };
+        Ok(Tensor { shape: view.shape.clone(), data })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+            TensorData::U8(_) => "u8",
+            TensorData::I8(_) => "i8",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is {}, not f32", self.dtype_name()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is {}, not i32", self.dtype_name()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            _ => bail!("tensor is {}, not u8", self.dtype_name()),
+        }
+    }
+
+    /// Extract an owned f32 vector (the coordinator's host-side accumulate
+    /// path; mirrors the old `runtime::literal::to_vec_f32`).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.as_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let t = Tensor::from_u8(&[4], vec![7, 8, 9, 10]).unwrap();
+        assert_eq!(t.as_u8().unwrap(), &[7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        assert!(Tensor::from_f32(&[3], vec![1.0]).is_err());
+        assert!(Tensor::from_i32(&[2, 2], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let t = Tensor::from_i32(&[1], vec![1]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert!(t.as_u8().is_err());
+    }
+
+    #[test]
+    fn from_view_copies_f32() {
+        let view = TensorView::from_f32(vec![2], &[1.5, -2.5]).unwrap();
+        let t = Tensor::from_view(&view).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[1.5, -2.5]);
+    }
+}

@@ -1,7 +1,8 @@
 //! `ServeEngine` — the decode/prefill machinery.
 //!
-//! Each step runs real numerics through the AOT stages (PJRT) while
-//! advancing virtual time against the simulated testbed:
+//! Each step runs real numerics through the model stages (the pluggable
+//! numerics backend — reference or PJRT, DESIGN.md §4) while advancing
+//! virtual time against the simulated testbed:
 //!
 //! ```text
 //!   embed ─► for each layer:                         (GPU resource)
@@ -21,8 +22,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::Literal;
 
+use crate::backend::Tensor;
 use crate::config::{PolicyConfig, Precision, SystemConfig};
 use crate::coordinator::combine;
 use crate::coordinator::metrics::{Report, RequestRecord, StepBreakdown};
@@ -32,7 +33,6 @@ use crate::offload::ndp::NdpDevice;
 use crate::offload::transfer::{Link, TransferClass};
 use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
 use crate::policies::make_policy;
-use crate::runtime::literal::to_vec_f32;
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::CostModel;
@@ -155,14 +155,14 @@ impl ServeEngine {
         }
     }
 
-    /// Fetch (or hit) the base payload; returns (literals, ready time).
+    /// Fetch (or hit) the base payload; returns (tensors, ready time).
     fn acquire_base(
         &mut self,
         layer: usize,
         expert: usize,
         precision: Precision,
         ready: VTime,
-    ) -> Result<(Arc<Vec<Literal>>, VTime)> {
+    ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: Self::payload_kind(precision) };
         if let Some(p) = self.cache.get(&key) {
             return Ok((p, ready));
@@ -183,7 +183,7 @@ impl ServeEngine {
         expert: usize,
         bits: u8,
         ready: VTime,
-    ) -> Result<(Arc<Vec<Literal>>, VTime)> {
+    ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: PayloadKind::Comp(bits) };
         if let Some(p) = self.cache.get(&key) {
             return Ok((p, ready));
@@ -219,7 +219,7 @@ impl ServeEngine {
     fn run_moe_layer(
         &mut self,
         layer: usize,
-        xn: &Literal,
+        xn: &Tensor,
         plan: &LayerPlan,
         active: &[bool],
         prefill: bool,
@@ -253,7 +253,7 @@ impl ServeEngine {
                     let op = self.cost.expert_gpu(n_tok, exec.precision, avg_rank);
                     self.gpu.acquire(ready, op.seconds);
                     self.breakdown.expert_compute_s += op.seconds;
-                    let refs: Vec<&Literal> = match &comp {
+                    let refs: Vec<&Tensor> = match &comp {
                         Some(c) => base.iter().chain(c.iter()).collect(),
                         None => base.iter().collect(),
                     };
@@ -281,7 +281,7 @@ impl ServeEngine {
                     let lits =
                         self.model
                             .payload_base(layer, exec.expert, exec.precision, &self.method())?;
-                    let refs: Vec<&Literal> = lits.iter().collect();
+                    let refs: Vec<&Tensor> = lits.iter().collect();
                     let y = self.model.run_expert(exec.precision, prefill, xn, &refs)?;
                     combine::accumulate(&mut moe, &y.y, exec, d);
                 }
@@ -311,7 +311,7 @@ impl ServeEngine {
     pub fn run_moe_layer_pub(
         &mut self,
         layer: usize,
-        xn: &Literal,
+        xn: &Tensor,
         plan: &LayerPlan,
         active: &[bool],
         prefill: bool,
@@ -365,11 +365,11 @@ impl ServeEngine {
             }
 
             let moe = self.run_moe_layer(layer, &xn, &plan, &active, false, router_done)?;
-            let mut xh = to_vec_f32(&x2)?;
+            let mut xh = x2.to_f32_vec()?;
             for (a, b) in xh.iter_mut().zip(&moe) {
                 *a += b;
             }
-            x = self.model.lit_x(m.b_max, &xh)?;
+            x = self.model.make_x(m.b_max, &xh)?;
         }
 
         let logits = self.model.head(&x)?;
@@ -428,19 +428,19 @@ impl ServeEngine {
 
             let plan = self.plan_layer(&probs, &active, layer);
             let moe = self.run_moe_layer(layer, &xn, &plan, &active, true, router_done)?;
-            let mut xh = to_vec_f32(&x2)?;
+            let mut xh = x2.to_f32_vec()?;
             for (a, b) in xh.iter_mut().zip(&moe) {
                 *a += b;
             }
-            x = self.model.lit_x(m.t_prefill, &xh)?;
+            x = self.model.make_x(m.t_prefill, &xh)?;
         }
 
         // First generated token from the last prompt position's hidden.
-        let xh = to_vec_f32(&x)?;
+        let xh = x.to_f32_vec()?;
         let mut batch_x = vec![0f32; m.b_max * m.d_model];
         batch_x[slot * m.d_model..(slot + 1) * m.d_model]
             .copy_from_slice(&xh[(plen - 1) * m.d_model..plen * m.d_model]);
-        let x_lit = self.model.lit_x(m.b_max, &batch_x)?;
+        let x_lit = self.model.make_x(m.b_max, &batch_x)?;
         let logits = self.model.head(&x_lit)?;
         self.gpu.acquire(self.clock.now(), self.cost.head(1).seconds);
 
@@ -526,11 +526,7 @@ impl ServeEngine {
             bytes,
             cache_hit_rate: self.cache.hit_rate(),
             requests: self.records.clone(),
-            pjrt_execs: self
-                .model
-                .engine()
-                .exec_count
-                .load(std::sync::atomic::Ordering::Relaxed),
+            backend_execs: self.model.backend().exec_count(),
         }
     }
 }

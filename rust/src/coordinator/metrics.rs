@@ -62,7 +62,8 @@ pub struct Report {
     pub bytes: HashMap<String, usize>,
     pub cache_hit_rate: f64,
     pub requests: Vec<RequestRecord>,
-    pub pjrt_execs: u64,
+    /// Cumulative backend stage executions (was `pjrt_execs`).
+    pub backend_execs: u64,
 }
 
 impl Report {

@@ -5,7 +5,6 @@ use anyhow::Result;
 use crate::coordinator::batcher::{Action, Batcher};
 use crate::coordinator::engine::{argmax, ServeEngine};
 use crate::coordinator::metrics::Report;
-use crate::runtime::literal::to_vec_f32;
 use crate::workload::Request;
 
 /// Serve a workload to completion; returns the run report.
@@ -46,11 +45,11 @@ pub fn score_sequence(engine: &mut ServeEngine, tokens: &[i32]) -> Result<Vec<Ve
         let (xn, probs) = engine.model.router(layer, &x2, true)?;
         let plan = engine.plan_layer_pub(&probs, &active, layer);
         let moe = engine.run_moe_layer_pub(layer, &xn, &plan, &active, true)?;
-        let mut xh = to_vec_f32(&x2)?;
+        let mut xh = x2.to_f32_vec()?;
         for (a, b) in xh.iter_mut().zip(&moe) {
             *a += b;
         }
-        x = engine.model.lit_x(m.t_prefill, &xh)?;
+        x = engine.model.make_x(m.t_prefill, &xh)?;
     }
     let logits = engine.model.head_prefill(&x)?;
     Ok(logits

@@ -7,9 +7,8 @@
 //! (`kernels/attention.py`), so stale rows are harmless by construction.
 
 use anyhow::Result;
-use xla::Literal;
 
-use crate::runtime::literal::{lit_f32, to_vec_f32};
+use crate::backend::Tensor;
 use crate::runtime::StagedModel;
 use crate::sim::clock::VTime;
 use crate::workload::Request;
@@ -43,8 +42,8 @@ impl ActiveSeq {
 
 /// Batched KV caches for one layer.
 pub struct LayerKv {
-    pub k: Literal,
-    pub v: Literal,
+    pub k: Tensor,
+    pub v: Tensor,
 }
 
 pub struct BatchState {
@@ -118,23 +117,20 @@ impl BatchState {
     }
 
     /// Install a freshly prefilled slot cache (H, S, dh) into the batched
-    /// (B, H, S, dh) literals for `slot`.  Host-side patch: runs once per
+    /// (B, H, S, dh) tensors for `slot`.  Host-side patch: runs once per
     /// request, not per token.
     pub fn install_prefill(
         &mut self,
         slot: usize,
         layer: usize,
-        k_slot: &Literal,
-        v_slot: &Literal,
+        k_slot: &Tensor,
+        v_slot: &Tensor,
     ) -> Result<()> {
         let row = self.n_heads * self.s_max * self.d_head;
-        let dims = [self.b_max, self.n_heads, self.s_max, self.d_head];
         let lk = &mut self.kv[layer];
         for (batched, incoming) in [(&mut lk.k, k_slot), (&mut lk.v, v_slot)] {
-            let mut host = to_vec_f32(batched)?;
-            let slot_data = to_vec_f32(incoming)?;
-            host[slot * row..(slot + 1) * row].copy_from_slice(&slot_data);
-            *batched = lit_f32(&dims, &host)?;
+            let host = batched.as_f32_mut()?;
+            host[slot * row..(slot + 1) * row].copy_from_slice(incoming.as_f32()?);
         }
         Ok(())
     }

@@ -10,15 +10,17 @@ use crate::coordinator::scheduler::{score_metrics, score_sequence, serve};
 use crate::coordinator::ServeEngine;
 use crate::harness::report::ReportSink;
 use crate::manifest::Manifest;
+use crate::backend::{default_backend, Backend};
 use crate::quant::dequant::{dequantize_grouped, unpack_container};
-use crate::runtime::{Engine, StagedModel};
+use crate::runtime::StagedModel;
 use crate::workload::{DecodeTrace, WorkloadConfig, WorkloadGen};
 
 pub const MODELS: [&str; 2] = ["mixtral-tiny", "deepseek-tiny"];
 
 pub struct Harness {
     pub artifacts: PathBuf,
-    pub engine: Arc<Engine>,
+    /// Numerics backend every loaded model runs on (swap via `--backend`).
+    pub backend: Arc<dyn Backend>,
     pub sink: ReportSink,
     /// Evaluation sequence budget (scoring figures); `--full` raises it.
     pub eval_seqs: usize,
@@ -28,9 +30,18 @@ pub struct Harness {
 
 impl Harness {
     pub fn new(artifacts: PathBuf, out_dir: Option<PathBuf>, full: bool) -> Result<Self> {
+        Self::with_backend(artifacts, out_dir, full, default_backend()?)
+    }
+
+    pub fn with_backend(
+        artifacts: PathBuf,
+        out_dir: Option<PathBuf>,
+        full: bool,
+        backend: Arc<dyn Backend>,
+    ) -> Result<Self> {
         Ok(Harness {
             artifacts,
-            engine: Arc::new(Engine::cpu()?),
+            backend,
             sink: ReportSink::new(out_dir),
             eval_seqs: if full { 128 } else { 24 },
             serve_requests: if full { 16 } else { 8 },
@@ -43,7 +54,7 @@ impl Harness {
 
     pub fn load_model(&self, model: &str) -> Result<StagedModel> {
         let manifest = Manifest::load(self.model_dir(model))?;
-        StagedModel::load(Arc::clone(&self.engine), manifest)
+        StagedModel::load(Arc::clone(&self.backend), manifest)
     }
 
     fn serve_engine(

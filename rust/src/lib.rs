@@ -1,26 +1,33 @@
 //! # beam-moe — Bandwidth-Efficient Adaptive MoE via Low-Rank Compensation
 //!
-//! Rust L3 coordinator for the BEAM serving stack (DESIGN.md).  The crate
-//! loads AOT-compiled HLO artifacts produced by `python/compile/aot.py`,
-//! executes them on the PJRT CPU client for *numerics*, and drives an
-//! event-driven hardware model (H100 + PCIe + NDP) for the paper's
-//! *performance* metrics — python never runs on the request path.
+//! Rust L3 coordinator for the BEAM serving stack (see `rust/DESIGN.md`).
+//! The crate drives an event-driven hardware model (H100 + PCIe + NDP) for
+//! the paper's *performance* metrics while executing real numerics through
+//! a pluggable backend: the pure-Rust reference backend by default, or —
+//! with `--features pjrt` — the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` on the PJRT CPU client.  Python never runs on
+//! the request path.
 //!
 //! Module map (bottom-up):
 //!
 //! * [`config`]     — model/system/policy configuration
 //! * [`manifest`]   — artifact manifest + BEAMW weight store
 //! * [`quant`]      — bit-format accounting + reference dequantization
-//! * [`runtime`]    — PJRT engine, staged model executables
+//! * [`backend`]    — pluggable numerics: host tensors, the
+//!   [`backend::Backend`]/[`backend::StagedExec`] traits, the reference
+//!   backend, and (feature-gated) the PJRT backend
+//! * [`runtime`]    — the staged model the coordinator drives
+//! * [`synth`]      — deterministic synthetic model (zero-artifact runs)
 //! * [`sim`]        — virtual clock + H100/NDP roofline cost model
 //! * [`offload`]    — memory tiers, link simulator, expert LRU cache, NDP
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
-//!                    **BEAM** (router-guided top-n compensation — the paper)
+//!   **BEAM** (router-guided top-n compensation — the paper)
 //! * [`coordinator`]— continuous batcher, prefill/decode scheduler, KV state,
-//!                    serving engine, metrics
+//!   serving engine, metrics
 //! * [`workload`]   — request generators and traces
-//! * [`harness`]    — table/figure regeneration drivers (EXPERIMENTS.md)
+//! * [`harness`]    — table/figure regeneration drivers (`rust/EXPERIMENTS.md`)
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod harness;
@@ -31,9 +38,14 @@ pub mod policies;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod synth;
 pub mod workload;
 
+pub use backend::{default_backend, Backend, ReferenceBackend, Tensor};
 pub use config::{ModelDims, PolicyKind, Precision, SystemConfig};
 pub use coordinator::engine::ServeEngine;
 pub use manifest::{Manifest, WeightStore};
+pub use runtime::StagedModel;
+
+#[cfg(feature = "pjrt")]
 pub use runtime::engine::Engine;

@@ -9,12 +9,15 @@
 //! beam info   --model mixtral-tiny
 //! ```
 //!
+//! Every command accepts `--backend default|ref|pjrt` (`pjrt` needs the
+//! crate built with `--features pjrt`); the default is the reference
+//! backend unless the feature flips it.
+//!
 //! Requires `make artifacts` to have produced `artifacts/<model>/` first.
 //! (Arg parsing is in-tree: the offline build vendors no clap — Cargo.toml.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,7 +27,7 @@ use beam_moe::coordinator::ServeEngine;
 use beam_moe::harness::figures::{self, Harness};
 use beam_moe::manifest::Manifest;
 use beam_moe::offload::MemoryTiers;
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
 const USAGE: &str = "usage: beam <serve|eval|figure|info> [--flags]  (see rust/src/main.rs docs)";
@@ -110,9 +113,9 @@ fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
 fn load_engine(artifacts: &PathBuf, args: &Args) -> Result<ServeEngine> {
     let model_name = args.get("model", "mixtral-tiny");
     let manifest = Manifest::load(artifacts.join(&model_name))?;
-    let engine = Arc::new(Engine::cpu()?);
+    let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
     let policy = policy_config(args, &manifest)?;
-    let model = StagedModel::load(engine, manifest)?;
+    let model = StagedModel::load(backend, manifest)?;
     let sys = system(args, &model.manifest);
     ServeEngine::new(model, policy, sys)
 }
@@ -141,12 +144,12 @@ fn main() -> Result<()> {
             let report = serve(&mut engine, reqs)?;
             println!("{}", report.summary_line());
             println!(
-                "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | pjrt execs {}",
+                "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",
                 report.virtual_seconds,
                 report.wall_seconds,
                 report.mean_ttft(),
                 report.mean_request_latency(),
-                report.pjrt_execs,
+                report.backend_execs,
             );
             let b = &report.breakdown;
             println!(
@@ -160,7 +163,8 @@ fn main() -> Result<()> {
             Ok(())
         }
         "eval" => {
-            let h = Harness::new(artifacts.clone(), None, false)?;
+            let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
+            let h = Harness::with_backend(artifacts.clone(), None, false, backend)?;
             let model_name = args.get("model", "mixtral-tiny");
             let manifest = Manifest::load(artifacts.join(&model_name))?;
             let cfg = policy_config(&args, &manifest)?;
@@ -177,7 +181,8 @@ fn main() -> Result<()> {
                 .context("figure name required (fig1..fig8, tab2, all)")?
                 .clone();
             let out = args.opt("out").map(PathBuf::from);
-            let mut h = Harness::new(artifacts, out, args.has("full"))?;
+            let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
+            let mut h = Harness::with_backend(artifacts, out, args.has("full"), backend)?;
             figures::run(&name, &mut h)
         }
         "info" => {

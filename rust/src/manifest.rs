@@ -254,6 +254,31 @@ pub struct TensorView {
 }
 
 impl TensorView {
+    /// Build a standalone view over owned bytes (synthetic models / tests —
+    /// the file-free twin of the BEAMW reader below).
+    pub fn from_bytes(dtype: Dtype, shape: Vec<usize>, bytes: Vec<u8>) -> Result<Self> {
+        let expect = shape.iter().product::<usize>() * dtype.size();
+        if expect != bytes.len() {
+            bail!("tensor view: shape {shape:?} wants {expect} bytes, got {}", bytes.len());
+        }
+        let nbytes = bytes.len();
+        Ok(TensorView { dtype, shape, blob: Arc::new(bytes), offset: 0, nbytes })
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Result<Self> {
+        let bytes = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self::from_bytes(Dtype::F32, shape, bytes)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: &[i32]) -> Result<Self> {
+        let bytes = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self::from_bytes(Dtype::I32, shape, bytes)
+    }
+
+    pub fn from_u8(shape: Vec<usize>, data: &[u8]) -> Result<Self> {
+        Self::from_bytes(Dtype::U8, shape, data.to_vec())
+    }
+
     pub fn bytes(&self) -> &[u8] {
         &self.blob[self.offset..self.offset + self.nbytes]
     }
@@ -302,6 +327,16 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Empty in-memory store; populate with [`WeightStore::insert`]
+    /// (synthetic models / tests).
+    pub fn new() -> Self {
+        WeightStore { tensors: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, view: TensorView) {
+        self.tensors.insert(name.into(), view);
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let raw = std::fs::read(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
@@ -355,5 +390,11 @@ impl WeightStore {
 
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
+    }
+}
+
+impl Default for WeightStore {
+    fn default() -> Self {
+        Self::new()
     }
 }

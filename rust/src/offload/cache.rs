@@ -1,7 +1,7 @@
 //! On-GPU expert payload cache (LRU by bytes).
 //!
 //! Caching is both *numeric* and *economic*: a hit reuses the already-built
-//! `xla::Literal`s (no host work) and, in virtual time, skips the link
+//! payload tensors (no host work) and, in virtual time, skips the link
 //! transfer — exactly what keeping an expert resident in HBM buys on the
 //! real system.  Capacity is the HBM headroom left after the dense weights
 //! and KV cache (`SystemConfig::gpu_cache_bytes`).
@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use xla::Literal;
+use crate::backend::Tensor;
 
 /// Which payload variant of an expert is cached.  Base weights and
 /// compensators are separate entries: BEAM fetches compensators only for
@@ -30,7 +30,7 @@ pub struct PayloadKey {
 }
 
 struct Entry {
-    payload: Arc<Vec<Literal>>,
+    payload: Arc<Vec<Tensor>>,
     bytes: usize,
     last_use: u64,
 }
@@ -63,7 +63,7 @@ impl ExpertCache {
     }
 
     /// Look up a payload, updating recency and hit/miss counters.
-    pub fn get(&mut self, key: &PayloadKey) -> Option<Arc<Vec<Literal>>> {
+    pub fn get(&mut self, key: &PayloadKey) -> Option<Arc<Vec<Tensor>>> {
         self.tick += 1;
         match self.entries.get_mut(key) {
             Some(e) => {
@@ -81,7 +81,7 @@ impl ExpertCache {
     /// Insert a payload of `bytes` (wire size — the HBM cost we account).
     /// Evicts LRU entries until it fits; payloads larger than the whole
     /// cache are passed through uncached.
-    pub fn insert(&mut self, key: PayloadKey, payload: Arc<Vec<Literal>>, bytes: usize) {
+    pub fn insert(&mut self, key: PayloadKey, payload: Arc<Vec<Tensor>>, bytes: usize) {
         if bytes > self.capacity {
             return;
         }
@@ -143,7 +143,7 @@ mod tests {
         PayloadKey { layer: 0, expert: e, kind: PayloadKind::Quant(2) }
     }
 
-    fn payload() -> Arc<Vec<Literal>> {
+    fn payload() -> Arc<Vec<Tensor>> {
         Arc::new(Vec::new())
     }
 

@@ -4,7 +4,7 @@
 use crate::sim::clock::{Resource, VTime};
 
 /// What a transfer carries — the breakdown categories of Fig. 1a and the
-//  byte ledgers of Fig. 7/8.
+/// byte ledgers of Fig. 7/8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransferClass {
     /// Expert weights (any precision).

@@ -7,7 +7,7 @@
 pub fn unpack_container(packed: &[u8], rows: usize, nbytes: usize, cbits: u8, n_out: usize) -> Vec<u8> {
     assert_eq!(packed.len(), rows * nbytes);
     let cpb = (8 / cbits) as usize;
-    let mask = (1u16 << cbits) as u8 - 1;
+    let mask = (((1u16 << cbits) - 1) & 0xff) as u8;
     let mut out = vec![0u8; rows * n_out];
     for r in 0..rows {
         let row = &packed[r * nbytes..(r + 1) * nbytes];
@@ -62,6 +62,14 @@ mod tests {
         let packed = vec![0x21u8, 0x43u8];
         let codes = unpack_container(&packed, 1, 2, 4, 4);
         assert_eq!(codes, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn unpack_8bit_is_identity() {
+        // cbits=8: one code per byte; the mask must not underflow.
+        let packed = vec![0u8, 127, 255];
+        let codes = unpack_container(&packed, 1, 3, 8, 3);
+        assert_eq!(codes, vec![0, 127, 255]);
     }
 
     #[test]

@@ -1,13 +1,18 @@
-//! Runtime: PJRT client wrapper, literal helpers, and the staged model.
+//! Runtime: the staged model, plus the PJRT engine behind the `pjrt` feature.
 //!
-//! `engine` owns the PJRT CPU client and the compiled executables (one per
-//! HLO stage artifact).  `literal` converts BEAMW tensor views / host
-//! vectors into `xla::Literal`s.  `model` assembles the staged forward pass
-//! the coordinator drives (embed → [attn → router → experts]×L → head).
+//! `model` assembles the staged forward pass the coordinator drives
+//! (embed → [attn → router → experts]×L → head) on top of a pluggable
+//! [`crate::backend::Backend`].  The PJRT-specific pieces — the XLA client
+//! wrapper (`engine`) and `xla::Literal` helpers (`literal`) — only exist
+//! when the crate is built with `--features pjrt`; the default build runs
+//! every stage on the pure-Rust reference backend (DESIGN.md §4).
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod model;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use model::{ExpertOutput, StagedModel};

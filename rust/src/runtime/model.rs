@@ -1,33 +1,33 @@
-//! The staged model: typed wrappers over the AOT stage executables.
+//! The staged model: typed wrappers over the backend's stage executors.
 //!
-//! Owns the resident ("always on GPU") weight literals — embeddings, attn
+//! Owns the resident ("always on GPU") weight tensors — embeddings, attn
 //! projections, norms, router gates, shared experts — and assembles
 //! *offloaded* expert payloads (packed codes, metadata, compensators) on
 //! demand.  The coordinator decides *when* payloads move and what that
 //! costs; this module only knows *what* a payload is and how to execute a
-//! stage with it.
+//! stage with it.  Which device actually computes is the backend's business
+//! (PJRT with `--features pjrt`, the pure-Rust reference backend otherwise
+//! — DESIGN.md §4).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
+use crate::backend::{Backend, Tensor};
 use crate::config::Precision;
 use crate::manifest::{Manifest, WeightStore};
-use crate::runtime::engine::Engine;
-use crate::runtime::literal::{lit_f32, lit_from_view, lit_i32, to_vec_f32};
 
 /// Resident weights for one layer (never offloaded — paper §2.1: only
 /// expert parameters live in secondary memory).
 struct LayerResident {
-    ln1: Literal,
-    wq: Literal,
-    wk: Literal,
-    wv: Literal,
-    wo: Literal,
-    ln2: Literal,
-    gate: Literal,
-    shared: Vec<[Literal; 3]>, // fp16 shared experts (DeepSeek-style)
+    ln1: Tensor,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ln2: Tensor,
+    gate: Tensor,
+    shared: Vec<[Tensor; 3]>, // fp16 shared experts (DeepSeek-style)
 }
 
 /// Output of one expert execution on a token batch.
@@ -39,28 +39,38 @@ pub struct ExpertOutput {
 pub struct StagedModel {
     pub manifest: Manifest,
     pub store: WeightStore,
-    engine: Arc<Engine>,
-    emb: Literal,
-    ln_f: Literal,
+    backend: Arc<dyn Backend>,
+    emb: Tensor,
+    ln_f: Tensor,
     layers: Vec<LayerResident>,
 }
 
 impl StagedModel {
-    pub fn load(engine: Arc<Engine>, manifest: Manifest) -> Result<Self> {
+    /// Load from on-disk artifacts (`weights.beamw` next to the manifest).
+    pub fn load(backend: Arc<dyn Backend>, manifest: Manifest) -> Result<Self> {
         let store = WeightStore::load(manifest.weights_path())?;
-        let emb = lit_from_view(store.get("emb")?)?;
-        let ln_f = lit_from_view(store.get("ln_f")?)?;
+        Self::from_parts(backend, manifest, store)
+    }
+
+    /// Assemble from an in-memory weight store (synthetic models, tests).
+    pub fn from_parts(
+        backend: Arc<dyn Backend>,
+        manifest: Manifest,
+        store: WeightStore,
+    ) -> Result<Self> {
+        let emb = Tensor::from_view(store.get("emb")?)?;
+        let ln_f = Tensor::from_view(store.get("ln_f")?)?;
         let mut layers = Vec::with_capacity(manifest.model.n_layers);
         for li in 0..manifest.model.n_layers {
-            let g = |name: &str| -> Result<Literal> {
-                lit_from_view(store.get(&format!("layers.{li}.{name}"))?)
+            let g = |name: &str| -> Result<Tensor> {
+                Tensor::from_view(store.get(&format!("layers.{li}.{name}"))?)
             };
             let mut shared = Vec::new();
             for s in 0..manifest.model.n_shared {
                 shared.push([
-                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w1"))?)?,
-                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w2"))?)?,
-                    lit_from_view(store.get(&format!("layers.{li}.shared.{s}.w3"))?)?,
+                    Tensor::from_view(store.get(&format!("layers.{li}.shared.{s}.w1"))?)?,
+                    Tensor::from_view(store.get(&format!("layers.{li}.shared.{s}.w2"))?)?,
+                    Tensor::from_view(store.get(&format!("layers.{li}.shared.{s}.w3"))?)?,
                 ]);
             }
             layers.push(LayerResident {
@@ -74,11 +84,15 @@ impl StagedModel {
                 shared,
             });
         }
-        Ok(StagedModel { manifest, store, engine, emb, ln_f, layers })
+        Ok(StagedModel { manifest, store, backend, emb, ln_f, layers })
     }
 
-    pub fn engine(&self) -> &Arc<Engine> {
-        &self.engine
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    fn run_stage(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.backend.stage(&self.manifest, name)?.run(args)
     }
 
     fn suffix(prefill: bool) -> &'static str {
@@ -89,18 +103,17 @@ impl StagedModel {
         }
     }
 
-    /// Build an activation literal (N, d) from host data.
-    pub fn lit_x(&self, n: usize, data: &[f32]) -> Result<Literal> {
-        lit_f32(&[n, self.manifest.model.d_model], data)
+    /// Build an activation tensor (N, d) from host data.
+    pub fn make_x(&self, n: usize, data: &[f32]) -> Result<Tensor> {
+        Tensor::from_f32(&[n, self.manifest.model.d_model], data.to_vec())
     }
 
     // -- stages ----------------------------------------------------------
 
-    pub fn embed(&self, tokens: &[i32], prefill: bool) -> Result<Literal> {
+    pub fn embed(&self, tokens: &[i32], prefill: bool) -> Result<Tensor> {
         let name = format!("embed_{}", Self::suffix(prefill));
-        let exe = self.engine.stage(&self.manifest, &name)?;
-        let toks = lit_i32(&[tokens.len()], tokens)?;
-        let mut out = self.engine.run(&exe, &[&toks, &self.emb])?;
+        let toks = Tensor::from_i32(&[tokens.len()], tokens.to_vec())?;
+        let mut out = self.run_stage(&name, &[&toks, &self.emb])?;
         Ok(out.remove(0))
     }
 
@@ -108,17 +121,16 @@ impl StagedModel {
     pub fn attn_decode(
         &self,
         layer: usize,
-        x: &Literal,
-        k_cache: &Literal,
-        v_cache: &Literal,
+        x: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
         pos: &[i32],
-    ) -> Result<(Literal, Literal, Literal)> {
-        let exe = self.engine.stage(&self.manifest, "attn_d")?;
+    ) -> Result<(Tensor, Tensor, Tensor)> {
         let l = &self.layers[layer];
-        let pos_lit = lit_i32(&[pos.len()], pos)?;
-        let mut out = self.engine.run(
-            &exe,
-            &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo, k_cache, v_cache, &pos_lit],
+        let pos_t = Tensor::from_i32(&[pos.len()], pos.to_vec())?;
+        let mut out = self.run_stage(
+            "attn_d",
+            &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo, k_cache, v_cache, &pos_t],
         )?;
         let vc = out.remove(2);
         let kc = out.remove(1);
@@ -127,12 +139,9 @@ impl StagedModel {
     }
 
     /// Prefill attention for one sequence; returns (x', slot k/v caches).
-    pub fn attn_prefill(&self, layer: usize, x: &Literal) -> Result<(Literal, Literal, Literal)> {
-        let exe = self.engine.stage(&self.manifest, "attn_p")?;
+    pub fn attn_prefill(&self, layer: usize, x: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
         let l = &self.layers[layer];
-        let mut out = self
-            .engine
-            .run(&exe, &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo])?;
+        let mut out = self.run_stage("attn_p", &[x, &l.ln1, &l.wq, &l.wk, &l.wv, &l.wo])?;
         let vc = out.remove(2);
         let kc = out.remove(1);
         let xo = out.remove(0);
@@ -140,18 +149,17 @@ impl StagedModel {
     }
 
     /// Router stage: returns (normed hidden, router probs (N×E row-major)).
-    pub fn router(&self, layer: usize, x: &Literal, prefill: bool) -> Result<(Literal, Vec<f32>)> {
+    pub fn router(&self, layer: usize, x: &Tensor, prefill: bool) -> Result<(Tensor, Vec<f32>)> {
         let name = format!("router_{}", Self::suffix(prefill));
-        let exe = self.engine.stage(&self.manifest, &name)?;
         let l = &self.layers[layer];
-        let mut out = self.engine.run(&exe, &[x, &l.ln2, &l.gate])?;
-        let probs = to_vec_f32(&out.remove(1))?;
+        let mut out = self.run_stage(&name, &[x, &l.ln2, &l.gate])?;
+        let probs = out.remove(1).to_f32_vec()?;
         let xn = out.remove(0);
         Ok((xn, probs))
     }
 
-    /// Assemble the *base* literal payload for one (layer, expert):
-    /// 3 literals for fp16, 9 (packed, scale, zero × w1/w2/w3) for low-bit.
+    /// Assemble the *base* tensor payload for one (layer, expert):
+    /// 3 tensors for fp16, 9 (packed, scale, zero × w1/w2/w3) for low-bit.
     ///
     /// This is what "transferring the expert" materializes on device.  The
     /// `method` selects the quantizer family (`hqq` for BEAM/static,
@@ -162,28 +170,28 @@ impl StagedModel {
         expert: usize,
         precision: Precision,
         method: &str,
-    ) -> Result<Vec<Literal>> {
+    ) -> Result<Vec<Tensor>> {
         let base = format!("layers.{layer}.experts.{expert}");
-        let mut lits = Vec::new();
+        let mut out = Vec::new();
         match precision {
             Precision::Fp16 => {
                 for proj in ["w1", "w2", "w3"] {
-                    lits.push(lit_from_view(self.store.get(&format!("{base}.{proj}.fp32"))?)?);
+                    out.push(Tensor::from_view(self.store.get(&format!("{base}.{proj}.fp32"))?)?);
                 }
             }
             Precision::Int(bits) | Precision::IntComp(bits) => {
                 for proj in ["w1", "w2", "w3"] {
                     let p = format!("{base}.{proj}.{method}{bits}");
-                    lits.push(lit_from_view(self.store.get(&format!("{p}.pk"))?)?);
-                    lits.push(lit_from_view(self.store.get(&format!("{p}.sc"))?)?);
-                    lits.push(lit_from_view(self.store.get(&format!("{p}.zp"))?)?);
+                    out.push(Tensor::from_view(self.store.get(&format!("{p}.pk"))?)?);
+                    out.push(Tensor::from_view(self.store.get(&format!("{p}.sc"))?)?);
+                    out.push(Tensor::from_view(self.store.get(&format!("{p}.zp"))?)?);
                 }
             }
         }
-        Ok(lits)
+        Ok(out)
     }
 
-    /// Assemble the *compensator* payload (18 literals: U/V packed + meta ×
+    /// Assemble the *compensator* payload (18 tensors: U/V packed + meta ×
     /// w1/w2/w3) for the `tag` compensator set at base `bits`.
     pub fn payload_comp(
         &self,
@@ -191,16 +199,16 @@ impl StagedModel {
         expert: usize,
         bits: u8,
         tag: &str,
-    ) -> Result<Vec<Literal>> {
+    ) -> Result<Vec<Tensor>> {
         let base = format!("layers.{layer}.experts.{expert}");
-        let mut lits = Vec::new();
+        let mut out = Vec::new();
         for proj in ["w1", "w2", "w3"] {
             let c = format!("{base}.{proj}.comp{bits}.{tag}");
             for f in ["up", "us", "uz", "vp", "vs", "vz"] {
-                lits.push(lit_from_view(self.store.get(&format!("{c}.{f}"))?)?);
+                out.push(Tensor::from_view(self.store.get(&format!("{c}.{f}"))?)?);
             }
         }
-        Ok(lits)
+        Ok(out)
     }
 
     /// Stage name for an expert execution at `precision`.
@@ -214,29 +222,28 @@ impl StagedModel {
     }
 
     /// Execute one expert over the (N, d) normed hidden; returns host (N, d).
-    /// `payload` is base literals, optionally followed by comp literals.
+    /// `payload` is base tensors, optionally followed by comp tensors.
     pub fn run_expert(
         &self,
         precision: Precision,
         prefill: bool,
-        xn: &Literal,
-        payload: &[&Literal],
+        xn: &Tensor,
+        payload: &[&Tensor],
     ) -> Result<ExpertOutput> {
         let name = Self::expert_stage_name(precision, prefill)?;
-        let exe = self.engine.stage(&self.manifest, &name)?;
         let expected = match precision {
             Precision::Fp16 => 3,
             Precision::Int(_) => 9,
             Precision::IntComp(_) => 27,
         };
         if payload.len() != expected {
-            bail!("payload has {} literals, stage {name} wants {expected}", payload.len());
+            bail!("payload has {} tensors, stage {name} wants {expected}", payload.len());
         }
-        let mut args: Vec<&Literal> = Vec::with_capacity(1 + payload.len());
+        let mut args: Vec<&Tensor> = Vec::with_capacity(1 + payload.len());
         args.push(xn);
         args.extend(payload.iter().copied());
-        let mut out = self.engine.run(&exe, &args)?;
-        Ok(ExpertOutput { y: to_vec_f32(&out.remove(0))? })
+        let mut out = self.run_stage(&name, &args)?;
+        Ok(ExpertOutput { y: out.remove(0).to_f32_vec()? })
     }
 
     /// Execute a shared (always-resident, fp16) expert.
@@ -245,34 +252,34 @@ impl StagedModel {
         layer: usize,
         idx: usize,
         prefill: bool,
-        xn: &Literal,
+        xn: &Tensor,
     ) -> Result<ExpertOutput> {
         let name = format!("expert_fp16_{}", Self::suffix(prefill));
-        let exe = self.engine.stage(&self.manifest, &name)?;
         let [w1, w2, w3] = &self.layers[layer].shared[idx];
-        let mut out = self.engine.run(&exe, &[xn, w1, w2, w3])?;
-        Ok(ExpertOutput { y: to_vec_f32(&out.remove(0))? })
+        let mut out = self.run_stage(&name, &[xn, w1, w2, w3])?;
+        Ok(ExpertOutput { y: out.remove(0).to_f32_vec()? })
     }
 
     /// Head stage over the decode batch: logits (B × V row-major).
-    pub fn head(&self, x: &Literal) -> Result<Vec<f32>> {
-        let exe = self.engine.stage(&self.manifest, "head_d")?;
-        let mut out = self.engine.run(&exe, &[x, &self.ln_f, &self.emb])?;
-        to_vec_f32(&out.remove(0))
+    pub fn head(&self, x: &Tensor) -> Result<Vec<f32>> {
+        let mut out = self.run_stage("head_d", &[x, &self.ln_f, &self.emb])?;
+        out.remove(0).to_f32_vec()
     }
 
     /// Head over prefill rows: logits (T × V) for teacher-forced scoring.
-    pub fn head_prefill(&self, x: &Literal) -> Result<Vec<f32>> {
-        let exe = self.engine.stage(&self.manifest, "head_p")?;
-        let mut out = self.engine.run(&exe, &[x, &self.ln_f, &self.emb])?;
-        to_vec_f32(&out.remove(0))
+    pub fn head_prefill(&self, x: &Tensor) -> Result<Vec<f32>> {
+        let mut out = self.run_stage("head_p", &[x, &self.ln_f, &self.emb])?;
+        out.remove(0).to_f32_vec()
     }
 
-    /// Fresh zeroed KV-cache literals for the decode batch.
-    pub fn empty_caches(&self) -> Result<(Literal, Literal)> {
+    /// Fresh zeroed KV-cache tensors for the decode batch.
+    pub fn empty_caches(&self) -> Result<(Tensor, Tensor)> {
         let m = &self.manifest.model;
         let dims = [m.b_max, m.n_heads, m.s_max, m.d_head()];
         let zeros = vec![0f32; dims.iter().product()];
-        Ok((lit_f32(&dims, &zeros)?, lit_f32(&dims, &zeros)?))
+        Ok((
+            Tensor::from_f32(&dims, zeros.clone())?,
+            Tensor::from_f32(&dims, zeros)?,
+        ))
     }
 }

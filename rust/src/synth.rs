@@ -1,0 +1,537 @@
+//! Synthetic tiny model — the zero-artifact path through the full stack.
+//!
+//! `python/compile/aot.py` produces the *real* artifacts (trained weights,
+//! calibrated quantization, SVD compensators).  This module builds a
+//! structurally identical model directly in memory — deterministic
+//! pseudo-random weights, honest affine quantization, rank-1 power-iteration
+//! compensators — so the complete serving loop (batcher, policies, offload
+//! tiers, NDP, virtual clock) and the reference backend can run from a
+//! clean checkout with no python and no files on disk.  Tests and the
+//! quickstart example fall back to it when `artifacts/` is absent.
+//!
+//! The synthetic model is for *mechanics*, not accuracy claims: its
+//! perplexities are meaningless (the weights are untrained), but payload
+//! layouts, stage shapes, byte accounting and determinism are exactly
+//! those of the real pipeline (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::config::ModelDims;
+use crate::manifest::{
+    Dtype, Manifest, QuantInfo, RankTableEntry, StageEntry, TensorView, TransferTables,
+    WeightStore,
+};
+use crate::quant::formats::{packed_nbytes, ExpertBytes};
+use crate::runtime::StagedModel;
+use crate::workload::reqgen::XorShift;
+
+/// The synthetic model's quantization bit-width (2-bit, the paper's most
+/// aggressive configuration).
+pub const SYNTH_BITS: u8 = 2;
+
+/// Architecture of the synthetic model: small enough that a full serve run
+/// takes well under a second on the reference backend.
+pub fn tiny_dims(name: &str) -> ModelDims {
+    ModelDims {
+        name: name.to_string(),
+        vocab: 64,
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_experts: 4,
+        top_k: 2,
+        n_shared: 0,
+        s_max: 96,
+        t_prefill: 64,
+        b_max: 4,
+        group_size: 16,
+        rank_pad: 8,
+        r_avg: 1,
+        top_n: 1,
+    }
+}
+
+/// Manifest for the synthetic model: same schema as the on-disk
+/// `manifest.json`, with byte tables derived from [`ExpertBytes`] and a
+/// rank-1 compensator entry per matrix.
+pub fn tiny_manifest(name: &str) -> Manifest {
+    let dims = tiny_dims(name);
+    let (l, e) = (dims.n_layers, dims.n_experts);
+    let eb = ExpertBytes {
+        d_model: dims.d_model,
+        d_ff: dims.d_ff,
+        group_size: dims.group_size,
+    };
+
+    let mut stages = HashMap::new();
+    for base in ["embed", "attn", "router", "head", "expert_fp16"] {
+        for sfx in ["p", "d"] {
+            let n = format!("{base}_{sfx}");
+            stages.insert(n.clone(), StageEntry { file: format!("<builtin>/{n}"), n_inputs: 0 });
+        }
+    }
+    for base in [format!("expert_q{SYNTH_BITS}"), format!("expert_q{SYNTH_BITS}c")] {
+        for sfx in ["p", "d"] {
+            let n = format!("{base}_{sfx}");
+            stages.insert(n.clone(), StageEntry { file: format!("<builtin>/{n}"), n_inputs: 0 });
+        }
+    }
+
+    let mut mat_keys = Vec::new();
+    for li in 0..l {
+        for ei in 0..e {
+            for proj in ["w1", "w2", "w3"] {
+                mat_keys.push(format!("{li}.{ei}.{proj}"));
+            }
+        }
+    }
+    let mut rank_table = HashMap::new();
+    rank_table.insert(
+        "default".to_string(),
+        RankTableEntry { ranks: vec![1; mat_keys.len()], r_avg: 1 },
+    );
+
+    // Wire bytes of one rank-1 compensator set for w1/w2/w3, mirroring
+    // `compensate.py::transfer_nbytes` (the true-packed-size rule of
+    // DESIGN.md §7): 3-bit factors packed on the *true* rank in 8-code
+    // chunks, plus fp16 scale+zero per (group, column).
+    let comp_per_expert: usize = [
+        (dims.d_model, dims.d_ff),
+        (dims.d_ff, dims.d_model),
+        (dims.d_model, dims.d_ff),
+    ]
+    .iter()
+    .map(|&(d_in, d_out)| {
+        let r = 1usize; // true rank
+        let pad8 = |n: usize| n.div_ceil(8) * 8;
+        let codes = packed_nbytes(pad8(d_in * r), 3) + packed_nbytes(pad8(r * d_out), 3);
+        let g_u = d_in / dims.group_size.min(d_in);
+        let g_v = 1usize; // a single v group at true rank 1
+        codes + (g_u * r) * 2 * 2 + (g_v * d_out) * 2 * 2
+    })
+    .sum();
+    let mut comp_bits_table = HashMap::new();
+    comp_bits_table.insert(SYNTH_BITS, vec![vec![comp_per_expert; e]; l]);
+    let mut comp_bytes = HashMap::new();
+    comp_bytes.insert("default".to_string(), comp_bits_table);
+
+    let mut q_expert_bytes = HashMap::new();
+    q_expert_bytes.insert(SYNTH_BITS, eb.quantized(SYNTH_BITS));
+
+    Manifest {
+        model: dims,
+        stages,
+        quant: QuantInfo {
+            methods: vec!["hqq".to_string()],
+            bits: vec![SYNTH_BITS],
+            comp_bits: vec![SYNTH_BITS],
+            container_bits: [(2u8, 2u8), (3, 4)].into_iter().collect(),
+            v_group: 4,
+        },
+        rank_table,
+        mat_keys,
+        transfer: TransferTables {
+            fp16_expert_bytes: eb.fp16(),
+            q_expert_bytes,
+            comp_bytes,
+        },
+        dir: PathBuf::from("<synthetic>"),
+    }
+}
+
+/// Build the synthetic weight store: dense/resident weights, fp32 expert
+/// copies, affine-quantized low-bit payloads and rank-1 compensators —
+/// every key the runtime's `payload_base`/`payload_comp` can ask for.
+pub fn tiny_store(dims: &ModelDims) -> Result<WeightStore> {
+    let mut rng = XorShift::new(0x5EED);
+    let mut store = WeightStore::new();
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+
+    store.insert("emb", TensorView::from_f32(vec![v, d], &dense(&mut rng, v, d, 0.5))?);
+    store.insert("ln_f", TensorView::from_f32(vec![d], &vec![1.0; d])?);
+
+    for li in 0..dims.n_layers {
+        let p = |name: &str| format!("layers.{li}.{name}");
+        store.insert(p("ln1"), TensorView::from_f32(vec![d], &vec![1.0; d])?);
+        store.insert(p("ln2"), TensorView::from_f32(vec![d], &vec![1.0; d])?);
+        for w in ["wq", "wk", "wv", "wo"] {
+            store.insert(p(w), TensorView::from_f32(vec![d, d], &dense(&mut rng, d, d, 1.0))?);
+        }
+        store.insert(
+            p("gate"),
+            TensorView::from_f32(vec![d, dims.n_experts], &dense(&mut rng, d, dims.n_experts, 1.0))?,
+        );
+        for ei in 0..dims.n_experts {
+            for (proj, d_in, d_out) in [("w1", d, f), ("w2", f, d), ("w3", d, f)] {
+                let base = format!("layers.{li}.experts.{ei}.{proj}");
+                let w = dense(&mut rng, d_in, d_out, 1.0);
+                store.insert(
+                    format!("{base}.fp32"),
+                    TensorView::from_f32(vec![d_in, d_out], &w)?,
+                );
+                insert_quantized(&mut store, &base, &w, d_in, d_out, dims)?;
+            }
+        }
+    }
+    Ok(store)
+}
+
+/// Evaluation/calibration token dumps (`eval.beamw` analogue): enough
+/// sequences for the workload generator and the teacher-forced scorer.
+pub fn tiny_eval_store(dims: &ModelDims) -> Result<WeightStore> {
+    let mut rng = XorShift::new(0xCA11B);
+    let (n_seqs, seq_len) = (6usize, 48usize);
+    let mut store = WeightStore::new();
+    for key in ["calib_tokens", "val_tokens"] {
+        let toks: Vec<i32> = (0..n_seqs * seq_len)
+            .map(|_| 1 + (rng.next_u64() as usize % (dims.vocab - 1)) as i32)
+            .collect();
+        store.insert(key, TensorView::from_i32(vec![n_seqs, seq_len], &toks)?);
+    }
+    let det: Vec<u8> = (0..n_seqs * seq_len)
+        .map(|_| u8::from(rng.next_f64() < 0.3))
+        .collect();
+    store.insert("val_det", TensorView::from_bytes(Dtype::U8, vec![n_seqs, seq_len], det)?);
+    Ok(store)
+}
+
+/// Assemble a ready-to-serve synthetic [`StagedModel`] on `backend`.
+pub fn tiny_model(backend: Arc<dyn Backend>, name: &str) -> Result<StagedModel> {
+    let manifest = tiny_manifest(name);
+    let store = tiny_store(&manifest.model)?;
+    StagedModel::from_parts(backend, manifest, store)
+}
+
+// ---------------------------------------------------------------------------
+// Weight generation + quantization
+// ---------------------------------------------------------------------------
+
+fn dense(rng: &mut XorShift, d_in: usize, d_out: usize, gain: f32) -> Vec<f32> {
+    let s = gain / (d_in as f32).sqrt();
+    (0..d_in * d_out)
+        .map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * s)
+        .collect()
+}
+
+/// Pack `cbits`-bit codes little-endian along the last axis — the exact
+/// inverse of [`crate::quant::dequant::unpack_container`].
+pub fn pack_codes(codes: &[u8], rows: usize, n: usize, cbits: u8) -> Vec<u8> {
+    let cpb = (8 / cbits) as usize;
+    let nbytes = n.div_ceil(cpb);
+    let mut out = vec![0u8; rows * nbytes];
+    for r in 0..rows {
+        for j in 0..n {
+            out[r * nbytes + j / cpb] |= codes[r * n + j] << ((j % cpb) as u8 * cbits);
+        }
+    }
+    out
+}
+
+/// Group-wise affine quantization (min/max per group×column, float zero) —
+/// the rust analogue of `python/compile/quant/uniform.py`.
+/// Returns (codes (d_in, d_out), scale (G, d_out), zero (G, d_out)).
+pub fn quantize_affine(
+    w: &[f32],
+    d_in: usize,
+    d_out: usize,
+    group: usize,
+    bits: u8,
+) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    let maxq = ((1u32 << bits) - 1) as f32;
+    let groups = d_in / group;
+    let mut codes = vec![0u8; d_in * d_out];
+    let mut scale = vec![0f32; groups * d_out];
+    let mut zero = vec![0f32; groups * d_out];
+    for g in 0..groups {
+        for j in 0..d_out {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for i in g * group..(g + 1) * group {
+                lo = lo.min(w[i * d_out + j]);
+                hi = hi.max(w[i * d_out + j]);
+            }
+            let s = ((hi - lo) / maxq).max(1e-8);
+            let z = -lo / s;
+            scale[g * d_out + j] = s;
+            zero[g * d_out + j] = z;
+            for i in g * group..(g + 1) * group {
+                let c = (w[i * d_out + j] / s + z).round().clamp(0.0, maxq);
+                codes[i * d_out + j] = c as u8;
+            }
+        }
+    }
+    (codes, scale, zero)
+}
+
+/// Quantize one expert matrix and its rank-1 compensator into the store
+/// under the real pipeline's key layout.
+fn insert_quantized(
+    store: &mut WeightStore,
+    base: &str,
+    w: &[f32],
+    d_in: usize,
+    d_out: usize,
+    dims: &ModelDims,
+) -> Result<()> {
+    let bits = SYNTH_BITS;
+    let g = dims.group_size;
+    let (codes, sc, zp) = quantize_affine(w, d_in, d_out, g, bits);
+    let nbytes = d_out / (8 / bits) as usize;
+    let pk = pack_codes(&codes, d_in, d_out, bits);
+    let q = format!("{base}.hqq{bits}");
+    store.insert(format!("{q}.pk"), TensorView::from_u8(vec![d_in, nbytes], &pk)?);
+    let groups = d_in / g;
+    store.insert(format!("{q}.sc"), TensorView::from_f32(vec![groups, d_out], &sc)?);
+    store.insert(format!("{q}.zp"), TensorView::from_f32(vec![groups, d_out], &zp)?);
+
+    // Residual of the quantization, for the compensator.
+    let mut resid = vec![0f32; d_in * d_out];
+    for i in 0..d_in {
+        let gi = i / g;
+        for j in 0..d_out {
+            let deq = (codes[i * d_out + j] as f32 - zp[gi * d_out + j]) * sc[gi * d_out + j];
+            resid[i * d_out + j] = w[i * d_out + j] - deq;
+        }
+    }
+    insert_compensator(store, base, &resid, d_in, d_out, dims)
+}
+
+/// Rank-1 compensator: power-iteration SVD of the residual, quantized to
+/// INT3 codes in 4-bit containers (the factor format of `compensate.py`).
+/// The remaining `rank_pad - 1` columns are stored with zero scales so they
+/// dequantize to exactly 0 — padded rank, true rank 1 (DESIGN.md §7).
+fn insert_compensator(
+    store: &mut WeightStore,
+    base: &str,
+    resid: &[f32],
+    d_in: usize,
+    d_out: usize,
+    dims: &ModelDims,
+) -> Result<()> {
+    let r = dims.rank_pad;
+    let (u1, v1) = rank1(resid, d_in, d_out);
+
+    // U (d_in, r): column 0 carries σ·u, grouped along d_in like a weight.
+    let u_group = dims.group_size.min(d_in);
+    let gu = d_in / u_group;
+    let maxq = 7.0f32; // 3-bit codes
+    let mut u_codes = vec![0u8; d_in * r];
+    let mut us = vec![0f32; gu * r];
+    let mut uz = vec![0f32; gu * r];
+    for g in 0..gu {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for i in g * u_group..(g + 1) * u_group {
+            lo = lo.min(u1[i]);
+            hi = hi.max(u1[i]);
+        }
+        let s = ((hi - lo) / maxq).max(1e-8);
+        let z = -lo / s;
+        us[g * r] = s;
+        uz[g * r] = z;
+        for i in g * u_group..(g + 1) * u_group {
+            u_codes[i * r] = (u1[i] / s + z).round().clamp(0.0, maxq) as u8;
+        }
+    }
+
+    // V (r, d_out): row 0 carries v; integer zero-points let rows 1..r of
+    // the leading group encode exact zeros.
+    let v_group = r / 2; // two groups over the padded rank
+    let gv = r / v_group;
+    let mut v_codes = vec![0u8; r * d_out];
+    let mut vs = vec![0f32; gv * d_out];
+    let mut vz = vec![0f32; gv * d_out];
+    for j in 0..d_out {
+        let val = v1[j];
+        let (lo, hi) = (val.min(0.0), val.max(0.0));
+        let s = ((hi - lo) / maxq).max(1e-8);
+        let z = (-lo / s).round().clamp(0.0, maxq);
+        vs[j] = s;
+        vz[j] = z;
+        v_codes[j] = (val / s + z).round().clamp(0.0, maxq) as u8;
+        for row in 1..v_group {
+            v_codes[row * d_out + j] = z as u8;
+        }
+        // second group: zero scale, codes 0 -> exact 0
+    }
+
+    let c = format!("{base}.comp{SYNTH_BITS}.default");
+    let u_nb = r / 2; // 4-bit containers, 2 codes per byte
+    let v_nb = d_out / 2;
+    store.insert(
+        format!("{c}.up"),
+        TensorView::from_u8(vec![d_in, u_nb], &pack_codes(&u_codes, d_in, r, 4))?,
+    );
+    store.insert(format!("{c}.us"), TensorView::from_f32(vec![gu, r], &us)?);
+    store.insert(format!("{c}.uz"), TensorView::from_f32(vec![gu, r], &uz)?);
+    store.insert(
+        format!("{c}.vp"),
+        TensorView::from_u8(vec![r, v_nb], &pack_codes(&v_codes, r, d_out, 4))?,
+    );
+    store.insert(format!("{c}.vs"), TensorView::from_f32(vec![gv, d_out], &vs)?);
+    store.insert(format!("{c}.vz"), TensorView::from_f32(vec![gv, d_out], &vz)?);
+    Ok(())
+}
+
+/// Leading singular pair of `m` (d_in × d_out) by power iteration;
+/// returns (σ·u, v) with ‖v‖ = 1.
+fn rank1(m: &[f32], d_in: usize, d_out: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut v = vec![1.0f32; d_out];
+    let mut u = vec![0f32; d_in];
+    for _ in 0..12 {
+        // u = M v
+        for i in 0..d_in {
+            u[i] = m[i * d_out..(i + 1) * d_out]
+                .iter()
+                .zip(&v)
+                .map(|(a, b)| a * b)
+                .sum();
+        }
+        let un = u.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for x in u.iter_mut() {
+            *x /= un;
+        }
+        // v = Mᵀ u
+        for (j, vj) in v.iter_mut().enumerate() {
+            *vj = (0..d_in).map(|i| m[i * d_out + j] * u[i]).sum();
+        }
+        let vn = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for x in v.iter_mut() {
+            *x /= vn;
+        }
+    }
+    // Fold σ = uᵀ M v into u.
+    let mut sigma = 0f32;
+    for i in 0..d_in {
+        let mv: f32 = m[i * d_out..(i + 1) * d_out]
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| a * b)
+            .sum();
+        sigma += u[i] * mv;
+    }
+    for x in u.iter_mut() {
+        *x *= sigma;
+    }
+    (u, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dequant::{dequantize_grouped, unpack_container};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..32).map(|i| (i % 4) as u8).collect();
+        let packed = pack_codes(&codes, 2, 16, 2);
+        assert_eq!(unpack_container(&packed, 2, 4, 2, 16), codes);
+        let codes4: Vec<u8> = (0..16).map(|i| (i % 16) as u8).collect();
+        let packed4 = pack_codes(&codes4, 2, 8, 4);
+        assert_eq!(unpack_container(&packed4, 2, 4, 4, 8), codes4);
+    }
+
+    #[test]
+    fn affine_quantization_bounds_error() {
+        let mut rng = XorShift::new(9);
+        let w = dense(&mut rng, 32, 16, 1.0);
+        let (codes, sc, zp) = quantize_affine(&w, 32, 16, 16, 2);
+        let deq = dequantize_grouped(&codes, &sc, &zp, 32, 16, 16);
+        for (g, j) in [(0usize, 0usize), (1, 7)] {
+            let s = sc[g * 16 + j];
+            for i in g * 16..(g + 1) * 16 {
+                let err = (w[i * 16 + j] - deq[i * 16 + j]).abs();
+                assert!(err <= 0.5 * s + 1e-6, "quant error {err} > half step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn store_has_every_runtime_key() {
+        let dims = tiny_dims("t");
+        let store = tiny_store(&dims).unwrap();
+        assert!(store.contains("emb"));
+        for li in 0..dims.n_layers {
+            assert!(store.contains(&format!("layers.{li}.gate")));
+            for e in 0..dims.n_experts {
+                for proj in ["w1", "w2", "w3"] {
+                    let base = format!("layers.{li}.experts.{e}.{proj}");
+                    assert!(store.contains(&format!("{base}.fp32")));
+                    assert!(store.contains(&format!("{base}.hqq2.pk")));
+                    assert!(store.contains(&format!("{base}.comp2.default.up")));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compensator_reduces_weight_error() {
+        // deq(W) + U·V must be closer to W than deq(W) alone: the rank-1
+        // factor captures the leading residual direction even after its own
+        // 3-bit quantization.
+        let dims = tiny_dims("t");
+        let store = tiny_store(&dims).unwrap();
+        let (d, f, g) = (dims.d_model, dims.d_ff, dims.group_size);
+        let base = "layers.0.experts.0.w1";
+        let w = store.get(&format!("{base}.fp32")).unwrap().as_f32().unwrap();
+        let pk = store.get(&format!("{base}.hqq2.pk")).unwrap();
+        let sc = store.get(&format!("{base}.hqq2.sc")).unwrap().as_f32().unwrap();
+        let zp = store.get(&format!("{base}.hqq2.zp")).unwrap().as_f32().unwrap();
+        let codes = unpack_container(pk.as_u8().unwrap(), d, pk.shape[1], 2, f);
+        let deq = dequantize_grouped(&codes, &sc, &zp, d, f, g);
+
+        let c = format!("{base}.comp2.default");
+        let up = store.get(&format!("{c}.up")).unwrap();
+        let us = store.get(&format!("{c}.us")).unwrap();
+        let uz = store.get(&format!("{c}.uz")).unwrap();
+        let vp = store.get(&format!("{c}.vp")).unwrap();
+        let vs = store.get(&format!("{c}.vs")).unwrap();
+        let vz = store.get(&format!("{c}.vz")).unwrap();
+        let r = dims.rank_pad;
+        let u_codes = unpack_container(up.as_u8().unwrap(), d, up.shape[1], 4, r);
+        let v_codes = unpack_container(vp.as_u8().unwrap(), r, vp.shape[1], 4, f);
+        let (us_f, uz_f) = (us.as_f32().unwrap(), uz.as_f32().unwrap());
+        let (vs_f, vz_f) = (vs.as_f32().unwrap(), vz.as_f32().unwrap());
+        let u = dequantize_grouped(&u_codes, &us_f, &uz_f, d, r, d / us.shape[0]);
+        let v = dequantize_grouped(&v_codes, &vs_f, &vz_f, r, f, r / vs.shape[0]);
+
+        let (mut e_plain, mut e_comp) = (0f64, 0f64);
+        for i in 0..d {
+            for j in 0..f {
+                let mut delta = 0f32;
+                for k in 0..r {
+                    delta += u[i * r + k] * v[k * f + j];
+                }
+                e_plain += ((w[i * f + j] - deq[i * f + j]) as f64).powi(2);
+                e_comp += ((w[i * f + j] - deq[i * f + j] - delta) as f64).powi(2);
+            }
+        }
+        assert!(
+            e_comp < e_plain,
+            "compensated error {e_comp} must beat plain {e_plain}"
+        );
+    }
+
+    #[test]
+    fn rank1_recovers_outer_product() {
+        // M = a·bᵀ exactly -> power iteration recovers it.
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.3f32, 1.1, -0.7, 2.0];
+        let mut m = vec![0f32; 12];
+        for i in 0..3 {
+            for j in 0..4 {
+                m[i * 4 + j] = a[i] * b[j];
+            }
+        }
+        let (u, v) = rank1(&m, 3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                assert!((u[i] * v[j] - m[i * 4 + j]).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,18 +1,21 @@
 //! Integration tests over the built artifacts (skipped when absent).
 //!
-//! These pin the rust runtime to the python build path: PJRT stage numerics
-//! against an independent rust recomputation, serving determinism, scoring
-//! sanity, and the accuracy ordering the paper's Fig. 6 relies on.
+//! These pin the rust runtime to the python build path: stage numerics
+//! (reference backend by default, PJRT with `--features pjrt`) against an
+//! independent rust recomputation, serving determinism, scoring sanity,
+//! and the accuracy ordering the paper's Fig. 6 relies on.  The artifact-
+//! free twin of this suite lives in `tests/reference_backend.rs`.
 
 use std::path::Path;
 use std::sync::Arc;
 
+use beam_moe::backend::{default_backend, Backend, Tensor};
 use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
 use beam_moe::coordinator::scheduler::{score_metrics, score_sequence, serve};
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::quant::dequant::{dequantize_grouped, unpack_container};
-use beam_moe::runtime::{Engine, StagedModel};
+use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
 const ART: &str = "artifacts/mixtral-tiny";
@@ -30,13 +33,13 @@ macro_rules! require_artifacts {
     };
 }
 
-fn load_model() -> (Arc<Engine>, StagedModel) {
-    let engine = Arc::new(Engine::cpu().unwrap());
-    let model = StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
-    (engine, model)
+fn load_model() -> (Arc<dyn Backend>, StagedModel) {
+    let backend = default_backend().unwrap();
+    let model = StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
+    (backend, model)
 }
 
-/// Recompute a quantized expert in pure rust and compare to the PJRT stage.
+/// Recompute a quantized expert in pure rust and compare to the staged path.
 #[test]
 fn expert_stage_matches_rust_reference() {
     require_artifacts!();
@@ -48,9 +51,9 @@ fn expert_stage_matches_rust_reference() {
 
     // Deterministic input.
     let x: Vec<f32> = (0..m.b_max * d).map(|i| ((i % 29) as f32 - 14.0) / 40.0).collect();
-    let xn = model.lit_x(m.b_max, &x).unwrap();
+    let xn = model.make_x(m.b_max, &x).unwrap();
     let payload = model.payload_base(1, 3, Precision::Int(bits), "hqq").unwrap();
-    let refs: Vec<&xla::Literal> = payload.iter().collect();
+    let refs: Vec<&Tensor> = payload.iter().collect();
     let y = model.run_expert(Precision::Int(bits), false, &xn, &refs).unwrap().y;
 
     // Independent rust recomputation from the weight store.
@@ -93,7 +96,7 @@ fn expert_stage_matches_rust_reference() {
         .zip(&y_ref)
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
-    assert!(max_diff < 1e-3, "PJRT stage vs rust reference: max diff {max_diff}");
+    assert!(max_diff < 1e-3, "staged path vs rust reference: max diff {max_diff}");
 }
 
 #[test]
@@ -129,10 +132,10 @@ fn scoring_is_deterministic_and_sane() {
 #[test]
 fn fig6_ordering_fp16_beats_beam_beats_nothing() {
     require_artifacts!();
-    let engine = Arc::new(Engine::cpu().unwrap());
+    let backend = default_backend().unwrap();
     let score = |policy: PolicyConfig| -> f64 {
         let model =
-            StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
+            StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
         let mut se = ServeEngine::new(model, policy, sys).unwrap();
         let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
@@ -168,10 +171,10 @@ fn fig6_ordering_fp16_beats_beam_beats_nothing() {
 #[test]
 fn serving_is_deterministic_in_tokens_and_time() {
     require_artifacts!();
-    let engine = Arc::new(Engine::cpu().unwrap());
+    let backend = default_backend().unwrap();
     let run = || {
         let model =
-            StagedModel::load(Arc::clone(&engine), Manifest::load(ART).unwrap()).unwrap();
+            StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
         let mut se =
             ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, 1), sys).unwrap();
