@@ -12,13 +12,17 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use beam_moe::backend::{default_backend, Tensor};
-use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
+use beam_moe::config::{
+    PolicyConfig, PolicyKind, Precision, PredictorKind, PrefetchConfig, SystemConfig,
+};
 use beam_moe::coordinator::combine;
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
+use beam_moe::offload::prefetch::PrefetchQueue;
 use beam_moe::policies::plan::{topk_renorm, ExpertExec, Location, TokenAssign};
+use beam_moe::predict::{EwmaPopularity, ExpertPredictor, LayerObservation, PredictCtx};
 use beam_moe::runtime::StagedModel;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
@@ -71,6 +75,44 @@ fn main() -> anyhow::Result<()> {
         let key = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Quant(2) };
         cache.insert(key, Arc::new(Vec::new()), 1024);
         let _ = cache.get(&key);
+    });
+    // Eviction-heavy path: the BTreeMap recency index must keep this O(log n).
+    let mut small = ExpertCache::new(8 * 1024);
+    common::time("cache insert w/ eviction", 10_000, || {
+        for e in 0..16 {
+            let key = PayloadKey { layer: 0, expert: e, kind: PayloadKind::Quant(2) };
+            small.insert(key, Arc::new(Vec::new()), 1024);
+        }
+    });
+
+    // 4b. Prefetch bookkeeping + predictor ranking (pure CPU, per decode
+    // layer on the hot path when speculation is on).
+    let mut queue = PrefetchQueue::new(1 << 20);
+    common::time("prefetch budget spend+reset", 10_000, || {
+        queue.begin_step();
+        for _ in 0..8 {
+            let _ = queue.try_spend(1024);
+        }
+    });
+    let mut ewma = EwmaPopularity::new(dims.n_layers, dims.n_experts, 0.25);
+    let active = vec![true; dims.b_max];
+    common::time("ewma observe+predict", 10_000, || {
+        ewma.observe(&LayerObservation {
+            step: 0,
+            layer: 0,
+            n_experts: dims.n_experts,
+            top_k: dims.top_k,
+            probs: &probs[..dims.b_max * dims.n_experts],
+            active: &active,
+        });
+        let _ = ewma.predict(&PredictCtx {
+            step: 0,
+            layer: 0,
+            n_experts: dims.n_experts,
+            top_k: dims.top_k,
+            active: &active,
+            lookahead_probs: None,
+        });
     });
 
     // 5. Expert stage execution (PJRT, decode batch).
@@ -127,6 +169,29 @@ fn main() -> anyhow::Result<()> {
         1e3 * t0.elapsed().as_secs_f64() / r.decode_steps.max(1) as f64,
         r.backend_execs,
         r.wall_tokens_per_second(),
+    );
+
+    // 7. Same loop with gate-lookahead prefetching: the extra wall cost is
+    // one router stage + queue bookkeeping per decode layer.
+    let budget = dims.top_k
+        * dims.n_layers
+        * Manifest::load("artifacts/mixtral-tiny")?.q_expert_bytes(2);
+    let mut se = ServeEngine::with_prefetch(
+        StagedModel::load(Arc::clone(&backend), Manifest::load("artifacts/mixtral-tiny")?)?,
+        PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n),
+        SystemConfig::scaled_for(&dims, false),
+        PrefetchConfig::new(PredictorKind::GateLookahead, 1, budget),
+    )?;
+    let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 24), &eval)?;
+    let t0 = std::time::Instant::now();
+    let r = serve(&mut se, requests)?;
+    println!(
+        "  decode loop + gate prefetch: {} steps in {:.2}s wall => {:.1} ms/step (stall {:.4}s, cover {:.0}%)",
+        r.decode_steps,
+        t0.elapsed().as_secs_f64(),
+        1e3 * t0.elapsed().as_secs_f64() / r.decode_steps.max(1) as f64,
+        r.breakdown.transfer_stall_s,
+        100.0 * r.prefetch.coverage(),
     );
     Ok(())
 }

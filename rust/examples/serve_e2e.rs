@@ -71,6 +71,7 @@ fn main() -> Result<()> {
             r.wall_seconds,
             tps / baseline,
         );
+        println!("{:<22} {}", "", r.tail_line());
     }
     println!("\n(speedups vs fp16 offloading; paper Fig. 7 reports 5.2-7.6x for BEAM)");
     Ok(())

@@ -199,6 +199,70 @@ impl SystemConfig {
     }
 }
 
+/// Which lookahead predictor drives speculative expert prefetching
+/// (DESIGN.md §8).  `Off` reproduces the demand-only serve loop exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// No prefetching: every cache miss is fetched on demand.
+    Off,
+    /// Per-layer expert-popularity EWMA over observed decode routings.
+    Ewma,
+    /// Score layer *l+1*'s experts by running its router (ln2 + gate) on
+    /// layer *l*'s output hidden state (MoBiLE-style lookahead).
+    GateLookahead,
+    /// Replay a recorded `DecodeTrace` — the prefetch upper bound.
+    OracleReplay,
+}
+
+impl std::str::FromStr for PredictorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "off" | "none" => PredictorKind::Off,
+            "ewma" => PredictorKind::Ewma,
+            "gate" | "gate-lookahead" | "lookahead" => PredictorKind::GateLookahead,
+            "oracle" | "oracle-replay" => PredictorKind::OracleReplay,
+            other => anyhow::bail!("unknown predictor `{other}` (off|ewma|gate|oracle)"),
+        })
+    }
+}
+
+/// Speculative expert-prefetch knobs (DESIGN.md §8).  Transfers issued
+/// under these knobs ride the `TransferClass::Speculative` ledger class so
+/// speculative and demand bytes never mix.
+#[derive(Debug, Clone)]
+pub struct PrefetchConfig {
+    pub predictor: PredictorKind,
+    /// How many layers ahead each prediction reaches; past the last layer
+    /// the lookahead wraps to layer 0 of the *next* decode step.
+    pub lookahead: usize,
+    /// Speculative-byte budget per decode step; 0 disables issuing.
+    pub budget_bytes: usize,
+}
+
+impl PrefetchConfig {
+    /// Demand-only serving (the seed behaviour).
+    pub fn off() -> Self {
+        PrefetchConfig { predictor: PredictorKind::Off, lookahead: 1, budget_bytes: 0 }
+    }
+
+    pub fn new(predictor: PredictorKind, lookahead: usize, budget_bytes: usize) -> Self {
+        PrefetchConfig { predictor, lookahead, budget_bytes }
+    }
+
+    /// Will this config ever issue a speculative transfer?
+    pub fn enabled(&self) -> bool {
+        self.predictor != PredictorKind::Off && self.lookahead > 0 && self.budget_bytes > 0
+    }
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Policy tuning knobs shared by all policies.
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {

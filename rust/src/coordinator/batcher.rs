@@ -109,4 +109,42 @@ mod tests {
             other => panic!("{other:?}"),
         }
     }
+
+    #[test]
+    fn arrived_request_with_no_free_slot_decodes() {
+        // Regression: a request that has *already arrived* while every slot
+        // is busy must drive a decode step (draining a slot), never an
+        // IdleUntil on its past arrival time — the serve loop would call
+        // advance_to with a no-op and spin forever.
+        let mut b = Batcher::new(vec![req(0, 1.0)]);
+        match b.next_action(5.0, None, 4) {
+            Action::Decode => {}
+            other => panic!("must decode toward a free slot, got {other:?}"),
+        }
+        assert_eq!(b.pending(), 1, "the arrived request stays queued");
+    }
+
+    #[test]
+    fn idle_until_is_never_in_the_past() {
+        // Sweep every reachable (now, free_slot, n_active) shape: whenever
+        // the batcher answers IdleUntil, the target must lie strictly in
+        // the future (anything else livelocks the serve loop).
+        for &now in &[0.0, 0.5, 1.0, 5.0] {
+            for free_slot in [None, Some(0)] {
+                for n_active in [0usize, 2] {
+                    if free_slot.is_none() && n_active == 0 {
+                        continue; // unreachable: no active slots ⇒ a slot is free
+                    }
+                    let mut b = Batcher::new(vec![req(0, 1.0)]);
+                    if let Action::IdleUntil(t) = b.next_action(now, free_slot, n_active) {
+                        assert!(
+                            t > now,
+                            "IdleUntil({t}) at now={now} (free={free_slot:?}, \
+                             active={n_active}) would livelock"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

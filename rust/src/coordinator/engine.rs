@@ -18,21 +18,24 @@
 //! pipelined fetch does.  All byte counts come from the manifest's
 //! transfer tables (true packed sizes — DESIGN.md §7).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::backend::Tensor;
-use crate::config::{PolicyConfig, Precision, SystemConfig};
+use crate::config::{PolicyConfig, Precision, PredictorKind, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
-use crate::coordinator::metrics::{Report, RequestRecord, StepBreakdown};
+use crate::coordinator::metrics::{PrefetchReport, Report, RequestRecord, StepBreakdown};
 use crate::coordinator::state::{BatchState, LayerKv};
 use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use crate::offload::ndp::NdpDevice;
+use crate::offload::prefetch::PrefetchQueue;
 use crate::offload::transfer::{Link, TransferClass};
 use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
 use crate::policies::make_policy;
+use crate::predict::{make_predictor, ExpertPredictor, LayerObservation, PredictCtx};
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::CostModel;
@@ -54,6 +57,18 @@ pub struct ServeEngine {
     /// [layer][expert] mean true compensator rank (cost model input).
     avg_ranks: Vec<Vec<f64>>,
     pub trace: Option<DecodeTrace>,
+    /// Prefetch knobs (DESIGN.md §8); `PrefetchConfig::off()` reproduces
+    /// the demand-only loop byte-for-byte.
+    pub prefetch_cfg: PrefetchConfig,
+    predictor: Option<Box<dyn ExpertPredictor>>,
+    /// Speculative-transfer budget/coverage bookkeeping.
+    pub prefetch: PrefetchQueue,
+    /// layer → dense predictor scores, refreshed as predictions are made
+    /// (surfaced to policies through `PlanCtx::predicted`).
+    predicted_scores: HashMap<usize, Vec<f64>>,
+    /// The MoE layer currently executing belongs to a prefill step
+    /// (prefetch stats track the decode critical path only).
+    in_prefill: bool,
     decode_steps: u64,
     prefills: u64,
     total_generated: usize,
@@ -62,7 +77,18 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
+    /// Demand-only engine (no speculation) — the seed behaviour.
     pub fn new(model: StagedModel, policy_cfg: PolicyConfig, sys: SystemConfig) -> Result<Self> {
+        Self::with_prefetch(model, policy_cfg, sys, PrefetchConfig::off())
+    }
+
+    /// Engine with a speculative prefetch subsystem (DESIGN.md §8).
+    pub fn with_prefetch(
+        model: StagedModel,
+        policy_cfg: PolicyConfig,
+        sys: SystemConfig,
+        prefetch_cfg: PrefetchConfig,
+    ) -> Result<Self> {
         let dims = model.manifest.model.clone();
         let cost = CostModel::new(sys.clone(), dims.clone());
         let state = BatchState::new(&model)?;
@@ -72,6 +98,7 @@ impl ServeEngine {
             .ndp
             .as_ref()
             .map(|n| Link::new("ndp-link", n.link_bw, n.link_lat));
+        let predictor = make_predictor(prefetch_cfg.predictor, dims.n_layers, dims.n_experts);
         let mut engine = ServeEngine {
             policy: make_policy(&policy_cfg),
             policy_cfg,
@@ -86,6 +113,11 @@ impl ServeEngine {
             breakdown: StepBreakdown::default(),
             avg_ranks,
             trace: None,
+            prefetch: PrefetchQueue::new(prefetch_cfg.budget_bytes),
+            prefetch_cfg,
+            predictor,
+            predicted_scores: HashMap::new(),
+            in_prefill: false,
             decode_steps: 0,
             prefills: 0,
             total_generated: 0,
@@ -95,6 +127,14 @@ impl ServeEngine {
         };
         engine.prewarm()?;
         Ok(engine)
+    }
+
+    /// Install the recorded trace an `OracleReplay` predictor replays
+    /// (no-op for other predictor kinds).
+    pub fn set_oracle_trace(&mut self, trace: &DecodeTrace) {
+        if matches!(self.prefetch_cfg.predictor, PredictorKind::OracleReplay) {
+            self.predictor = Some(Box::new(crate::predict::OracleReplay::from_trace(trace)));
+        }
     }
 
     /// MoNDE statically pins its hottest experts in GPU HBM (the hot/cold
@@ -156,6 +196,9 @@ impl ServeEngine {
     }
 
     /// Fetch (or hit) the base payload; returns (tensors, ready time).
+    /// A cache entry whose transfer is still in flight (a prefetch, or a
+    /// demand fetch another exec issued) is *joined*: no second transfer,
+    /// but the requester inherits the in-flight completion time.
     fn acquire_base(
         &mut self,
         layer: usize,
@@ -164,19 +207,29 @@ impl ServeEngine {
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: Self::payload_kind(precision) };
-        if let Some(p) = self.cache.get(&key) {
-            return Ok((p, ready));
+        if let Some(hit) = self.cache.get_at(&key, ready) {
+            // First use of a speculative entry consumes its one-shot flag,
+            // so credit coverage regardless of prefill/decode — the
+            // prefetch saved a real link fetch either way.
+            if hit.first_spec_use {
+                self.prefetch.covered += 1;
+            }
+            return Ok((hit.payload, ready.max(hit.ready_at)));
         }
         let lits = Arc::new(self.model.payload_base(layer, expert, precision, &self.method())?);
         let bytes = self.base_bytes(precision);
         let done = self
             .pcie
             .transfer(ready, bytes, TransferClass::ExpertWeights);
-        self.cache.insert(key, Arc::clone(&lits), bytes);
+        if !self.in_prefill {
+            self.prefetch.demand_fetches += 1;
+        }
+        self.cache.insert_ready(key, Arc::clone(&lits), bytes, done);
         Ok((lits, done))
     }
 
-    /// Fetch (or hit) the compensator payload for `bits`.
+    /// Fetch (or hit) the compensator payload for `bits` (never
+    /// speculated: compensators are tiny and token-dependent).
     fn acquire_comp(
         &mut self,
         layer: usize,
@@ -185,14 +238,14 @@ impl ServeEngine {
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: PayloadKind::Comp(bits) };
-        if let Some(p) = self.cache.get(&key) {
-            return Ok((p, ready));
+        if let Some(hit) = self.cache.get_at(&key, ready) {
+            return Ok((hit.payload, ready.max(hit.ready_at)));
         }
         let tag = self.policy_cfg.comp_tag.clone();
         let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
         let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
         let done = self.pcie.transfer(ready, bytes, TransferClass::Compensator);
-        self.cache.insert(key, Arc::clone(&lits), bytes);
+        self.cache.insert_ready(key, Arc::clone(&lits), bytes, done);
         Ok((lits, done))
     }
 
@@ -210,6 +263,7 @@ impl ServeEngine {
             active,
             ndp: self.ndp.is_some(),
             fp16_cached: &probe,
+            predicted: self.predicted_scores.get(&layer).map(|v| v.as_slice()),
         };
         self.policy.plan(&ctx)
     }
@@ -230,6 +284,7 @@ impl ServeEngine {
         let d = m.d_model;
         let mut moe = vec![0f32; n_rows * d];
         let mut ndp_barrier = router_done;
+        self.in_prefill = prefill;
 
         for exec in &plan.execs {
             let n_tok = exec.tokens.len();
@@ -251,7 +306,16 @@ impl ServeEngine {
                         0.0
                     };
                     let op = self.cost.expert_gpu(n_tok, exec.precision, avg_rank);
-                    self.gpu.acquire(ready, op.seconds);
+                    let gpu_free = self.gpu.free_at();
+                    let (start, _) = self.gpu.acquire(ready, op.seconds);
+                    if !prefill {
+                        // Decode critical-path stall: how long this exec's
+                        // start was pushed past compute availability by
+                        // waiting on weight/compensator transfers — the
+                        // quantity prefetching exists to shrink (§8).
+                        self.breakdown.transfer_stall_s +=
+                            (start - gpu_free.max(router_done)).max(0.0);
+                    }
                     self.breakdown.expert_compute_s += op.seconds;
                     let refs: Vec<&Tensor> = match &comp {
                         Some(c) => base.iter().chain(c.iter()).collect(),
@@ -330,6 +394,7 @@ impl ServeEngine {
             return Ok(());
         }
         let step_t0 = self.clock.now();
+        self.prefetch.begin_step();
 
         let mut x = self.model.embed(&tokens, false)?;
         let op = self.cost.embed(n_active);
@@ -370,6 +435,12 @@ impl ServeEngine {
                 *a += b;
             }
             x = self.model.make_x(m.b_max, &xh)?;
+
+            // Speculate on upcoming layers now that this layer's demand
+            // transfers are queued (FIFO link ⇒ speculation yields to
+            // demand) and the updated hidden state exists for the gate
+            // lookahead (DESIGN.md §8).
+            self.issue_prefetches(layer, &x, &probs, &active, router_done)?;
         }
 
         let logits = self.model.head(&x)?;
@@ -455,6 +526,114 @@ impl ServeEngine {
         Ok(())
     }
 
+    /// Observe layer `layer`'s routing and issue budgeted speculative
+    /// transfers for the layers the predictor expects next (DESIGN.md §8).
+    /// `x_next` is the layer's *output* hidden (the residual stream the
+    /// gate lookahead scores); `router_done` is the earliest data-valid
+    /// time for speculation this layer.
+    fn issue_prefetches(
+        &mut self,
+        layer: usize,
+        x_next: &Tensor,
+        probs: &[f32],
+        active: &[bool],
+        router_done: VTime,
+    ) -> Result<()> {
+        let Some(mut pred) = self.predictor.take() else {
+            return Ok(());
+        };
+        let out = self.issue_with(pred.as_mut(), layer, x_next, probs, active, router_done);
+        self.predictor = Some(pred);
+        out
+    }
+
+    fn issue_with(
+        &mut self,
+        pred: &mut dyn ExpertPredictor,
+        layer: usize,
+        x_next: &Tensor,
+        probs: &[f32],
+        active: &[bool],
+        router_done: VTime,
+    ) -> Result<()> {
+        let m = self.model.manifest.model.clone();
+        pred.observe(&LayerObservation {
+            step: self.decode_steps,
+            layer,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            probs,
+            active,
+        });
+        if !self.prefetch_cfg.enabled() {
+            return Ok(());
+        }
+        // Speculate the policy's *bulk* payload only: compensators are
+        // token-dependent and tiny, so they stay on demand.
+        let prec = self.policy.bulk_precision();
+        let kind = Self::payload_kind(prec);
+        let bytes_each = self.base_bytes(prec);
+        let n_active = active.iter().filter(|&&a| a).count();
+        let cap = (n_active * m.top_k).clamp(m.top_k, m.n_experts);
+
+        for depth in 1..=self.prefetch_cfg.lookahead.min(m.n_layers) {
+            // Budget gone: don't burn router stages on predictions we
+            // could never issue (the scores are advisory only).
+            if self.prefetch.budget_left() < bytes_each {
+                break;
+            }
+            // Past the last layer the lookahead wraps to the next decode
+            // step's early layers.
+            let lf = layer + depth;
+            let (t_layer, t_step) = if lf < m.n_layers {
+                (lf, self.decode_steps)
+            } else {
+                (lf - m.n_layers, self.decode_steps + 1)
+            };
+            // The gate lookahead scores the target layer's router on the
+            // current residual stream — host-side math on an idle-tiny
+            // GEMV (d × E ≪ one attention), so no virtual-time charge.
+            let la_probs: Option<Vec<f32>> = if pred.wants_lookahead() {
+                Some(self.model.router(t_layer, x_next, false)?.1)
+            } else {
+                None
+            };
+            let ctx = PredictCtx {
+                step: t_step,
+                layer: t_layer,
+                n_experts: m.n_experts,
+                top_k: m.top_k,
+                active,
+                lookahead_probs: la_probs.as_deref(),
+            };
+            let ranked = pred.predict(&ctx);
+            let mut dense = vec![0f64; m.n_experts];
+            for p in &ranked {
+                dense[p.expert] = p.score;
+            }
+            self.predicted_scores.insert(t_layer, dense);
+
+            for p in ranked.into_iter().take(cap) {
+                let key = PayloadKey { layer: t_layer, expert: p.expert, kind };
+                // Dedup against resident payloads and in-flight fetches.
+                if self.cache.contains(&key) {
+                    continue;
+                }
+                if !self.prefetch.try_spend(bytes_each) {
+                    return Ok(()); // step budget exhausted
+                }
+                let lits =
+                    Arc::new(self.model.payload_base(t_layer, p.expert, prec, &self.method())?);
+                let done =
+                    self.pcie
+                        .transfer(router_done, bytes_each, TransferClass::Speculative);
+                self.cache.insert_speculative(key, lits, bytes_each, done);
+                self.prefetch.issued += 1;
+            }
+        }
+        Ok(())
+    }
+
     fn end_step(&mut self) {
         let mut resources: Vec<&mut Resource> = vec![&mut self.gpu, &mut self.pcie.resource];
         if let Some(l) = self.ndp_link.as_mut() {
@@ -490,23 +669,23 @@ impl ServeEngine {
                 .entry("activations".to_string())
                 .and_modify(|b| *b += log.bytes_of(TransferClass::Activations))
                 .or_insert(log.bytes_of(TransferClass::Activations));
+            bytes
+                .entry("speculative_weights".to_string())
+                .and_modify(|b| *b += log.bytes_of(TransferClass::Speculative))
+                .or_insert(log.bytes_of(TransferClass::Speculative));
         }
-        breakdown.transfer_weights_s = self
-            .pcie
-            .log
-            .events
-            .iter()
-            .filter(|e| e.class == TransferClass::ExpertWeights)
-            .map(|e| e.end - e.start)
-            .sum();
-        breakdown.transfer_comp_s = self
-            .pcie
-            .log
-            .events
-            .iter()
-            .filter(|e| e.class == TransferClass::Compensator)
-            .map(|e| e.end - e.start)
-            .sum();
+        let pcie_busy = |class: TransferClass| -> f64 {
+            self.pcie
+                .log
+                .events
+                .iter()
+                .filter(|e| e.class == class)
+                .map(|e| e.end - e.start)
+                .sum()
+        };
+        breakdown.transfer_weights_s = pcie_busy(TransferClass::ExpertWeights);
+        breakdown.transfer_comp_s = pcie_busy(TransferClass::Compensator);
+        breakdown.transfer_spec_s = pcie_busy(TransferClass::Speculative);
         breakdown.transfer_act_s = self
             .ndp_link
             .as_ref()
@@ -527,6 +706,20 @@ impl ServeEngine {
             cache_hit_rate: self.cache.hit_rate(),
             requests: self.records.clone(),
             backend_execs: self.model.backend().exec_count(),
+            prefetch: PrefetchReport {
+                predictor: self
+                    .predictor
+                    .as_ref()
+                    .map(|p| p.name())
+                    .unwrap_or("off")
+                    .to_string(),
+                issued: self.prefetch.issued,
+                covered: self.prefetch.covered,
+                demand_fetches: self.prefetch.demand_fetches,
+                speculative_bytes: self.pcie.log.bytes_of(TransferClass::Speculative),
+                wasted_bytes: self.cache.wasted_speculative_bytes
+                    + self.cache.resident_unused_speculative_bytes(),
+            },
         }
     }
 }

@@ -1,11 +1,12 @@
 //! Serving metrics: virtual-time ledgers (the paper's numbers), wall-clock
-//! (what the perf pass optimizes), byte counters, per-request latencies.
+//! (what the perf pass optimizes), byte counters, per-request latencies
+//! with tail percentiles, and the prefetch ledger (DESIGN.md §8).
 
 use std::collections::HashMap;
 
 use crate::sim::clock::VTime;
 
-/// Where virtual time went — Fig. 1a's categories.
+/// Where virtual time went — Fig. 1a's categories plus the prefetch split.
 #[derive(Debug, Default, Clone)]
 pub struct StepBreakdown {
     pub attn_router_s: f64,
@@ -14,6 +15,13 @@ pub struct StepBreakdown {
     pub transfer_weights_s: f64,
     pub transfer_comp_s: f64,
     pub transfer_act_s: f64,
+    /// Link busy-time of speculative (prefetched) expert transfers.
+    pub transfer_spec_s: f64,
+    /// Decode critical-path stall: virtual time expert compute waited on
+    /// weight/compensator transfers beyond GPU availability.  A *view* of
+    /// where transfer time landed, not extra busy time — excluded from
+    /// [`StepBreakdown::total_transfer`]; prefetching shrinks it.
+    pub transfer_stall_s: f64,
     pub head_s: f64,
 }
 
@@ -25,11 +33,14 @@ impl StepBreakdown {
         self.transfer_weights_s += other.transfer_weights_s;
         self.transfer_comp_s += other.transfer_comp_s;
         self.transfer_act_s += other.transfer_act_s;
+        self.transfer_spec_s += other.transfer_spec_s;
+        self.transfer_stall_s += other.transfer_stall_s;
         self.head_s += other.head_s;
     }
 
     pub fn total_transfer(&self) -> f64 {
         self.transfer_weights_s + self.transfer_comp_s + self.transfer_act_s
+            + self.transfer_spec_s
     }
 
     pub fn total_compute(&self) -> f64 {
@@ -45,6 +56,66 @@ pub struct RequestRecord {
     pub arrival: VTime,
     pub first_token_at: VTime,
     pub finished_at: VTime,
+}
+
+/// Prefetch-subsystem outcome of a serve run (DESIGN.md §8).
+#[derive(Debug, Default, Clone)]
+pub struct PrefetchReport {
+    /// Predictor that drove speculation (`"off"` for demand-only runs).
+    pub predictor: String,
+    /// Speculative transfers issued.
+    pub issued: u64,
+    /// Demand accesses served by a speculative entry (first use each).
+    pub covered: u64,
+    /// Decode-time base-weight demand transfers that still hit the link.
+    pub demand_fetches: u64,
+    /// Bytes moved under `TransferClass::Speculative`.
+    pub speculative_bytes: usize,
+    /// Speculative bytes that never served a demand access (evicted unused
+    /// plus resident-unused at report time).
+    pub wasted_bytes: usize,
+}
+
+impl PrefetchReport {
+    /// Fraction of decode base-weight demand a prefetch served; 1.0 when
+    /// nothing was demanded.
+    pub fn coverage(&self) -> f64 {
+        let total = self.covered + self.demand_fetches;
+        if total == 0 {
+            1.0
+        } else {
+            self.covered as f64 / total as f64
+        }
+    }
+
+    /// Fraction of issued prefetches that served at least one access.
+    pub fn hit_rate(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.covered as f64 / self.issued as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "predictor={} issued={} coverage={:.1}% spec={}B wasted={}B",
+            self.predictor,
+            self.issued,
+            100.0 * self.coverage(),
+            self.speculative_bytes,
+            self.wasted_bytes,
+        )
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (0 when empty).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Final report of a serve run.
@@ -64,6 +135,8 @@ pub struct Report {
     pub requests: Vec<RequestRecord>,
     /// Cumulative backend stage executions (was `pjrt_execs`).
     pub backend_execs: u64,
+    /// Prefetch-subsystem ledger (all zeros for demand-only runs).
+    pub prefetch: PrefetchReport,
 }
 
 impl Report {
@@ -81,6 +154,18 @@ impl Report {
             return 0.0;
         }
         self.total_generated as f64 / self.wall_seconds
+    }
+
+    fn sorted_metric(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
+        let mut v: Vec<f64> = self.requests.iter().map(f).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// [p50, p95, p99] for one per-request metric.
+    fn percentiles(&self, f: impl Fn(&RequestRecord) -> f64) -> [f64; 3] {
+        let sorted = self.sorted_metric(f);
+        [percentile(&sorted, 0.50), percentile(&sorted, 0.95), percentile(&sorted, 0.99)]
     }
 
     pub fn mean_request_latency(&self) -> f64 {
@@ -105,6 +190,35 @@ impl Report {
             / self.requests.len() as f64
     }
 
+    /// Time-to-first-token tail: [p50, p95, p99] virtual seconds.
+    pub fn ttft_percentiles(&self) -> [f64; 3] {
+        self.percentiles(|r| r.first_token_at - r.arrival)
+    }
+
+    /// Time-per-output-token tail (decode pace after the first token).
+    pub fn tpot_percentiles(&self) -> [f64; 3] {
+        self.percentiles(|r| {
+            (r.finished_at - r.first_token_at) / (r.generated.saturating_sub(1)).max(1) as f64
+        })
+    }
+
+    /// End-to-end request-latency tail: [p50, p95, p99] virtual seconds.
+    pub fn latency_percentiles(&self) -> [f64; 3] {
+        self.percentiles(|r| r.finished_at - r.arrival)
+    }
+
+    /// One-line tail-latency summary (companion to [`Report::summary_line`]
+    /// so load sweeps carry tail signal, not just means).
+    pub fn tail_line(&self) -> String {
+        let t = self.ttft_percentiles();
+        let p = self.tpot_percentiles();
+        let l = self.latency_percentiles();
+        format!(
+            "ttft p50/p95/p99 {:.4}/{:.4}/{:.4}s | tpot {:.5}/{:.5}/{:.5}s | e2e {:.4}/{:.4}/{:.4}s",
+            t[0], t[1], t[2], p[0], p[1], p[2], l[0], l[1], l[2],
+        )
+    }
+
     pub fn summary_line(&self) -> String {
         format!(
             "{:<22} {:>8.2} tok/s (virtual) | transfer {:>6.1}% | cache hit {:>5.1}% | {} reqs, {} tokens",
@@ -116,5 +230,71 @@ impl Report {
             self.n_requests,
             self.total_generated,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival: f64, first: f64, finish: f64, generated: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            prompt_len: 8,
+            generated,
+            arrival,
+            first_token_at: first,
+            finished_at: finish,
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 51.0);
+        assert_eq!(percentile(&s, 0.95), 95.0);
+        assert_eq!(percentile(&s, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn report_tail_percentiles() {
+        let mut r = Report::default();
+        for i in 0..10 {
+            let a = i as f64;
+            r.requests.push(req(a, a + 1.0 + i as f64 * 0.1, a + 11.0, 11));
+        }
+        let t = r.ttft_percentiles();
+        assert!(t[0] <= t[1] && t[1] <= t[2]);
+        let l = r.latency_percentiles();
+        assert!((l[0] - 11.0).abs() < 1e-12, "constant e2e latency");
+        // TPOT: (finish - first) / (generated - 1) = (10 - 0.1 i) / 10
+        let p = r.tpot_percentiles();
+        assert!(p[2] <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn tpot_handles_single_token_requests() {
+        let mut r = Report::default();
+        r.requests.push(req(0.0, 1.0, 1.0, 1));
+        assert_eq!(r.tpot_percentiles()[0], 0.0);
+    }
+
+    #[test]
+    fn prefetch_report_ratios() {
+        let p = PrefetchReport {
+            predictor: "gate-lookahead".into(),
+            issued: 10,
+            covered: 8,
+            demand_fetches: 2,
+            speculative_bytes: 1000,
+            wasted_bytes: 200,
+        };
+        assert!((p.coverage() - 0.8).abs() < 1e-12);
+        assert!((p.hit_rate() - 0.8).abs() < 1e-12);
+        let empty = PrefetchReport::default();
+        assert_eq!(empty.coverage(), 1.0);
+        assert_eq!(empty.hit_rate(), 0.0);
     }
 }

@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::coordinator::batcher::{Action, Batcher};
 use crate::coordinator::engine::{argmax, ServeEngine};
 use crate::coordinator::metrics::Report;
-use crate::workload::Request;
+use crate::workload::{DecodeTrace, Request};
 
 /// Serve a workload to completion; returns the run report.
 pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report> {
@@ -19,11 +19,33 @@ pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report>
         match action {
             Action::Prefill(slot, req) => engine.prefill(slot, &req)?,
             Action::Decode => engine.decode_step()?,
-            Action::IdleUntil(t) => engine.clock.advance_to(t),
+            Action::IdleUntil(t) => {
+                // A past/present target would make advance_to a no-op and
+                // spin this loop forever; the batcher guarantees progress
+                // (see `idle_until_is_never_in_the_past`).
+                debug_assert!(t > engine.now(), "batcher idled into the past: {t}");
+                engine.clock.advance_to(t);
+            }
             Action::Done => break,
         }
     }
     Ok(engine.report())
+}
+
+/// The oracle-replay protocol (DESIGN.md §8): serve `requests` demand-only
+/// on `recorder` (a fresh engine with the same model/policy/testbed) with
+/// trace recording on, then install the recorded routing into `engine`'s
+/// `OracleReplay` predictor.  Decode is deterministic, so the replayed run
+/// routes identically to the recording.
+pub fn record_oracle_trace(
+    engine: &mut ServeEngine,
+    mut recorder: ServeEngine,
+    requests: Vec<Request>,
+) -> Result<()> {
+    recorder.trace = Some(DecodeTrace::default());
+    serve(&mut recorder, requests)?;
+    engine.set_oracle_trace(&recorder.trace.take().unwrap());
+    Ok(())
 }
 
 /// Teacher-forced scoring of one sequence through the *serving* numerics

@@ -5,8 +5,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::config::{PolicyConfig, PolicyKind, SystemConfig};
-use crate::coordinator::scheduler::{score_metrics, score_sequence, serve};
+use crate::config::{PolicyConfig, PolicyKind, PredictorKind, PrefetchConfig, SystemConfig};
+use crate::coordinator::scheduler::{record_oracle_trace, score_metrics, score_sequence, serve};
 use crate::coordinator::ServeEngine;
 use crate::harness::report::ReportSink;
 use crate::manifest::Manifest;
@@ -107,13 +107,36 @@ impl Harness {
         ndp: bool,
         output_len: usize,
     ) -> Result<crate::coordinator::Report> {
+        self.serve_point_prefetch(model, policy, ndp, output_len, PrefetchConfig::off())
+    }
+
+    /// Serving experiment with a prefetch configuration.  An oracle-replay
+    /// point first records a demand-only pass over the same (deterministic)
+    /// workload and replays its trace.
+    pub fn serve_point_prefetch(
+        &self,
+        model: &str,
+        policy: PolicyConfig,
+        ndp: bool,
+        output_len: usize,
+        prefetch: PrefetchConfig,
+    ) -> Result<crate::coordinator::Report> {
         let manifest = Manifest::load(self.model_dir(model))?;
         let sys = SystemConfig::scaled_for(&manifest.model, ndp);
-        let mut engine = self.serve_engine(model, policy, sys)?;
+        let mut engine = ServeEngine::with_prefetch(
+            self.load_model(model)?,
+            policy.clone(),
+            sys.clone(),
+            prefetch.clone(),
+        )?;
         let wl = WorkloadConfig::offline(self.serve_requests, 256, output_len);
         let eval_store =
             crate::manifest::WeightStore::load(engine.model.manifest.eval_path())?;
         let requests = WorkloadGen::generate(&wl, &eval_store)?;
+        if matches!(prefetch.predictor, PredictorKind::OracleReplay) {
+            let recorder = ServeEngine::new(self.load_model(model)?, policy, sys)?;
+            record_oracle_trace(&mut engine, recorder, requests.clone())?;
+        }
         serve(&mut engine, requests)
     }
 }
@@ -603,6 +626,90 @@ pub fn tab2(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Prefetch sweep — throughput & wasted bytes vs predictor × budget
+// ---------------------------------------------------------------------------
+
+/// Not a paper figure: the prefetch subsystem's scenario sweep (DESIGN.md
+/// §8).  For every testbed × policy it compares demand-only serving with
+/// EWMA, gate-lookahead and oracle-replay prefetching at two step budgets,
+/// reporting virtual throughput, the decode weight-transfer stall the
+/// speculation removed, and what it cost in wasted speculative bytes.
+pub fn prefetch(h: &mut Harness) -> Result<()> {
+    let model = "mixtral-tiny";
+    let manifest = Manifest::load(h.model_dir(model))?;
+    let dims = manifest.model.clone();
+    let out_len = 64usize;
+    h.sink.line(format!(
+        "== Prefetch sweep ({model}, out={out_len}): tok/s + stall + wasted bytes vs predictor × budget =="
+    ));
+    let mut rows = Vec::new();
+
+    for ndp in [false, true] {
+        let testbed = if ndp { "gpu-ndp" } else { "gpu" };
+        h.sink.line(format!("  -- testbed: {testbed} --"));
+        let policies: Vec<(&str, PolicyConfig)> = if ndp {
+            vec![
+                ("monde", PolicyConfig::new(PolicyKind::Monde, 16, 0)),
+                ("beam-2bit", PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n)),
+            ]
+        } else {
+            vec![
+                ("mixtral-offload", PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0)),
+                ("hobbit", PolicyConfig::new(PolicyKind::Hobbit, 4, 0)),
+                ("static-quant2", PolicyConfig::new(PolicyKind::StaticQuant, 2, 0)),
+                ("beam-2bit", PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n)),
+            ]
+        };
+        for (pname, policy) in policies {
+            // "Full" budget = one decode step's worth of bulk payloads.
+            let bulk = crate::policies::bulk_expert_bytes(&manifest, &policy);
+            let full = dims.top_k * dims.n_layers * bulk;
+            let predictors = [
+                ("off", PredictorKind::Off),
+                ("ewma", PredictorKind::Ewma),
+                ("gate", PredictorKind::GateLookahead),
+                ("oracle", PredictorKind::OracleReplay),
+            ];
+            for (kname, kind) in predictors {
+                let budgets: &[usize] = if kind == PredictorKind::Off {
+                    &[0]
+                } else {
+                    &[1, 2] // × full/2
+                };
+                for &bx in budgets {
+                    let budget = bx * full / 2;
+                    let pf = PrefetchConfig::new(kind, 1, budget);
+                    let r = h.serve_point_prefetch(model, policy.clone(), ndp, out_len, pf)?;
+                    h.sink.line(format!(
+                        "    {pname:<16} {kname:<7} budget={budget:<8} {:>8.2} tok/s | stall {:>7.4}s | cover {:>5.1}% | spec {:>9}B wasted {:>9}B",
+                        r.tokens_per_second(),
+                        r.breakdown.transfer_stall_s,
+                        100.0 * r.prefetch.coverage(),
+                        r.prefetch.speculative_bytes,
+                        r.prefetch.wasted_bytes,
+                    ));
+                    rows.push(format!(
+                        "{testbed},{pname},{kname},{budget},{},{},{},{},{}",
+                        r.tokens_per_second(),
+                        r.breakdown.transfer_stall_s,
+                        r.prefetch.coverage(),
+                        r.prefetch.speculative_bytes,
+                        r.prefetch.wasted_bytes,
+                    ));
+                }
+            }
+        }
+    }
+    h.sink.csv(
+        "prefetch_sweep.csv",
+        "testbed,policy,predictor,budget_bytes,tokens_per_s,stall_s,coverage,spec_bytes,wasted_bytes",
+        &rows,
+    )?;
+    h.sink.line("  (expected shape: oracle ≥ gate > ewma ≥ off on tok/s; stall shrinks with budget; oracle wastes ~nothing)");
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -634,8 +741,9 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "fig7" => fig7(h),
         "fig8" => fig8(h),
         "tab2" => tab2(h),
+        "prefetch" => prefetch(h),
         "all" => all(h),
-        other => anyhow::bail!("unknown figure `{other}` (fig1-4, fig6-8, tab2, all)"),
+        other => anyhow::bail!("unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, all)"),
     }
     .and_then(|_| {
         if name != "all" {

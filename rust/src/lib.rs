@@ -19,9 +19,12 @@
 //! * [`runtime`]    — the staged model the coordinator drives
 //! * [`synth`]      — deterministic synthetic model (zero-artifact runs)
 //! * [`sim`]        — virtual clock + H100/NDP roofline cost model
-//! * [`offload`]    — memory tiers, link simulator, expert LRU cache, NDP
+//! * [`offload`]    — memory tiers, link simulator, expert LRU cache,
+//!   speculative prefetch queue, NDP
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
 //!   **BEAM** (router-guided top-n compensation — the paper)
+//! * [`predict`]    — router-guided expert predictors driving speculative
+//!   prefetch (EWMA / gate lookahead / oracle replay)
 //! * [`coordinator`]— continuous batcher, prefill/decode scheduler, KV state,
 //!   serving engine, metrics
 //! * [`workload`]   — request generators and traces
@@ -35,6 +38,7 @@ pub mod jsonx;
 pub mod manifest;
 pub mod offload;
 pub mod policies;
+pub mod predict;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
@@ -42,7 +46,7 @@ pub mod synth;
 pub mod workload;
 
 pub use backend::{default_backend, Backend, ReferenceBackend, Tensor};
-pub use config::{ModelDims, PolicyKind, Precision, SystemConfig};
+pub use config::{ModelDims, PolicyKind, Precision, PredictorKind, PrefetchConfig, SystemConfig};
 pub use coordinator::engine::ServeEngine;
 pub use manifest::{Manifest, WeightStore};
 pub use runtime::StagedModel;

@@ -3,9 +3,12 @@
 //! ```text
 //! beam serve  --model mixtral-tiny --policy beam --bits 2 [--ndp]
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
+//!             [--prefetch off|ewma|gate|oracle] [--prefetch-budget BYTES]
+//!             [--lookahead N]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|all> [--out DIR] [--full]
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|all>
+//!             [--out DIR] [--full]
 //! beam info   --model mixtral-tiny
 //! ```
 //!
@@ -21,8 +24,10 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
-use beam_moe::coordinator::scheduler::serve;
+use beam_moe::config::{
+    PolicyConfig, PolicyKind, PredictorKind, PrefetchConfig, SystemConfig,
+};
+use beam_moe::coordinator::scheduler::{record_oracle_trace, serve};
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::harness::figures::{self, Harness};
 use beam_moe::manifest::Manifest;
@@ -102,6 +107,17 @@ fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
     Ok(p)
 }
 
+/// `--prefetch off|ewma|gate|oracle`, `--prefetch-budget BYTES` (default:
+/// one decode step's worth of bulk payloads), `--lookahead N`.
+fn prefetch_config(args: &Args, manifest: &Manifest, policy: &PolicyConfig) -> Result<PrefetchConfig> {
+    let kind: PredictorKind = args.get("prefetch", "off").parse()?;
+    let lookahead: usize = args.num("lookahead", 1usize)?;
+    let bulk = beam_moe::policies::bulk_expert_bytes(manifest, policy);
+    let default_budget = manifest.model.top_k * manifest.model.n_layers * bulk;
+    let budget: usize = args.num("prefetch-budget", default_budget)?;
+    Ok(PrefetchConfig::new(kind, lookahead, budget))
+}
+
 fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
     if args.has("raw-system") {
         if args.has("ndp") { SystemConfig::gpu_ndp() } else { SystemConfig::gpu_only() }
@@ -115,9 +131,10 @@ fn load_engine(artifacts: &PathBuf, args: &Args) -> Result<ServeEngine> {
     let manifest = Manifest::load(artifacts.join(&model_name))?;
     let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
     let policy = policy_config(args, &manifest)?;
+    let prefetch = prefetch_config(args, &manifest, &policy)?;
     let model = StagedModel::load(backend, manifest)?;
     let sys = system(args, &model.manifest);
-    ServeEngine::new(model, policy, sys)
+    ServeEngine::with_prefetch(model, policy, sys, prefetch)
 }
 
 fn main() -> Result<()> {
@@ -141,8 +158,28 @@ fn main() -> Result<()> {
             let eval_store =
                 beam_moe::manifest::WeightStore::load(engine.model.manifest.eval_path())?;
             let reqs = WorkloadGen::generate(&wl, &eval_store)?;
+            if matches!(engine.prefetch_cfg.predictor, PredictorKind::OracleReplay) {
+                // The oracle replays a demand-only recording of the same
+                // (deterministic) workload on an identical fresh engine.
+                let model_name = args.get("model", "mixtral-tiny");
+                let manifest = Manifest::load(artifacts.join(&model_name))?;
+                let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
+                let policy = policy_config(&args, &manifest)?;
+                let model = StagedModel::load(backend, manifest)?;
+                let sys = system(&args, &model.manifest);
+                let recorder = ServeEngine::new(model, policy, sys)?;
+                record_oracle_trace(&mut engine, recorder, reqs.clone())?;
+            }
             let report = serve(&mut engine, reqs)?;
             println!("{}", report.summary_line());
+            println!("  tails: {}", report.tail_line());
+            if engine.prefetch_cfg.enabled() {
+                println!(
+                    "  prefetch: {} | decode weight-stall {:.4}s",
+                    report.prefetch.summary(),
+                    report.breakdown.transfer_stall_s,
+                );
+            }
             println!(
                 "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",
                 report.virtual_seconds,
@@ -153,9 +190,9 @@ fn main() -> Result<()> {
             );
             let b = &report.breakdown;
             println!(
-                "  breakdown (s): attn+router {:.4} | experts {:.4} | ndp {:.4} | head {:.4} | xfer weights {:.4} | xfer comp {:.4} | xfer acts {:.4}",
+                "  breakdown (s): attn+router {:.4} | experts {:.4} | ndp {:.4} | head {:.4} | xfer weights {:.4} | xfer comp {:.4} | xfer acts {:.4} | xfer spec {:.4}",
                 b.attn_router_s, b.expert_compute_s, b.ndp_compute_s, b.head_s,
-                b.transfer_weights_s, b.transfer_comp_s, b.transfer_act_s,
+                b.transfer_weights_s, b.transfer_comp_s, b.transfer_act_s, b.transfer_spec_s,
             );
             for (k, v) in &report.bytes {
                 println!("  bytes[{k}] = {v}");

@@ -1,15 +1,26 @@
-//! On-GPU expert payload cache (LRU by bytes).
+//! On-GPU expert payload cache (LRU by bytes) with in-flight entries.
 //!
 //! Caching is both *numeric* and *economic*: a hit reuses the already-built
 //! payload tensors (no host work) and, in virtual time, skips the link
 //! transfer — exactly what keeping an expert resident in HBM buys on the
 //! real system.  Capacity is the HBM headroom left after the dense weights
 //! and KV cache (`SystemConfig::gpu_cache_bytes`).
+//!
+//! Entries carry the virtual time their transfer lands (`ready_at`): a
+//! payload whose copy is still *in flight* — a speculative prefetch, or a
+//! demand fetch another exec already issued this step — can be joined (no
+//! second transfer) but is **not** a hit until the wire delivers it; the
+//! requester inherits the in-flight completion time (DESIGN.md §8).
+//!
+//! Recency is an ordered `BTreeMap<tick, key>` (ticks are unique), so
+//! eviction pops the least-recent entry in O(log n) instead of the old
+//! full-scan `min_by_key` over every entry.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use crate::backend::Tensor;
+use crate::sim::clock::VTime;
 
 /// Which payload variant of an expert is cached.  Base weights and
 /// compensators are separate entries: BEAM fetches compensators only for
@@ -33,6 +44,22 @@ struct Entry {
     payload: Arc<Vec<Tensor>>,
     bytes: usize,
     last_use: u64,
+    /// Virtual time the payload's transfer completes (0 for prewarmed).
+    ready_at: VTime,
+    /// Inserted by the prefetcher rather than a demand miss.
+    speculative: bool,
+    /// Served at least one demand access.
+    used: bool,
+}
+
+/// A successful lookup: the payload plus when it is actually usable.
+pub struct CacheHit {
+    pub payload: Arc<Vec<Tensor>>,
+    /// Virtual time the payload's transfer lands; ≤ `now` for resident hits.
+    pub ready_at: VTime,
+    /// This access is the first demand use of a speculative entry — the
+    /// coordinator counts it toward prefetch coverage.
+    pub first_spec_use: bool,
 }
 
 pub struct ExpertCache {
@@ -40,9 +67,14 @@ pub struct ExpertCache {
     used: usize,
     tick: u64,
     entries: HashMap<PayloadKey, Entry>,
+    /// last-use tick → key; ticks are unique so this is a total LRU order.
+    recency: BTreeMap<u64, PayloadKey>,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Speculative bytes evicted (or overwritten) without ever serving a
+    /// demand access — the prefetcher's sunk cost.
+    pub wasted_speculative_bytes: usize,
 }
 
 impl ExpertCache {
@@ -52,9 +84,11 @@ impl ExpertCache {
             used: 0,
             tick: 0,
             entries: HashMap::new(),
+            recency: BTreeMap::new(),
             hits: 0,
             misses: 0,
             evictions: 0,
+            wasted_speculative_bytes: 0,
         }
     }
 
@@ -62,14 +96,37 @@ impl ExpertCache {
         self.entries.contains_key(key)
     }
 
-    /// Look up a payload, updating recency and hit/miss counters.
+    /// Look up a payload ignoring transfer completion (resident == hit).
+    /// Kept for callers outside the virtual timeline (prewarm, benches).
     pub fn get(&mut self, key: &PayloadKey) -> Option<Arc<Vec<Tensor>>> {
+        self.get_at(key, VTime::INFINITY).map(|h| h.payload)
+    }
+
+    /// Look up a payload at virtual time `now`, updating recency and
+    /// hit/miss counters.  An entry whose transfer has not landed
+    /// (`ready_at > now`) is returned — the caller joins the in-flight
+    /// copy instead of re-transferring — but counts as a *miss*: the
+    /// requester still waits on the wire.
+    pub fn get_at(&mut self, key: &PayloadKey, now: VTime) -> Option<CacheHit> {
         self.tick += 1;
+        let tick = self.tick;
         match self.entries.get_mut(key) {
             Some(e) => {
-                e.last_use = self.tick;
-                self.hits += 1;
-                Some(Arc::clone(&e.payload))
+                self.recency.remove(&e.last_use);
+                e.last_use = tick;
+                self.recency.insert(tick, *key);
+                let first_spec_use = e.speculative && !e.used;
+                e.used = true;
+                if e.ready_at <= now {
+                    self.hits += 1;
+                } else {
+                    self.misses += 1;
+                }
+                Some(CacheHit {
+                    payload: Arc::clone(&e.payload),
+                    ready_at: e.ready_at,
+                    first_spec_use,
+                })
             }
             None => {
                 self.misses += 1;
@@ -78,30 +135,82 @@ impl ExpertCache {
         }
     }
 
-    /// Insert a payload of `bytes` (wire size — the HBM cost we account).
-    /// Evicts LRU entries until it fits; payloads larger than the whole
-    /// cache are passed through uncached.
+    /// Insert a payload of `bytes` (wire size — the HBM cost we account),
+    /// immediately usable.  Evicts LRU entries until it fits; payloads
+    /// larger than the whole cache are passed through uncached.
     pub fn insert(&mut self, key: PayloadKey, payload: Arc<Vec<Tensor>>, bytes: usize) {
+        self.insert_full(key, payload, bytes, 0.0, false);
+    }
+
+    /// Insert a demand-fetched payload whose transfer lands at `ready_at`.
+    pub fn insert_ready(
+        &mut self,
+        key: PayloadKey,
+        payload: Arc<Vec<Tensor>>,
+        bytes: usize,
+        ready_at: VTime,
+    ) {
+        self.insert_full(key, payload, bytes, ready_at, false);
+    }
+
+    /// Insert a speculative (prefetched) payload landing at `ready_at`.
+    pub fn insert_speculative(
+        &mut self,
+        key: PayloadKey,
+        payload: Arc<Vec<Tensor>>,
+        bytes: usize,
+        ready_at: VTime,
+    ) {
+        self.insert_full(key, payload, bytes, ready_at, true);
+    }
+
+    fn insert_full(
+        &mut self,
+        key: PayloadKey,
+        payload: Arc<Vec<Tensor>>,
+        bytes: usize,
+        ready_at: VTime,
+        speculative: bool,
+    ) {
         if bytes > self.capacity {
+            if speculative {
+                self.wasted_speculative_bytes += bytes;
+            }
             return;
         }
         if let Some(old) = self.entries.remove(&key) {
+            self.recency.remove(&old.last_use);
             self.used -= old.bytes;
+            if old.speculative && !old.used {
+                self.wasted_speculative_bytes += old.bytes;
+            }
         }
         while self.used + bytes > self.capacity {
-            let lru = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_use)
-                .map(|(k, _)| *k)
-                .expect("cache accounting out of sync");
+            let (_, lru) = self.recency.pop_first().expect("cache accounting out of sync");
             let e = self.entries.remove(&lru).unwrap();
             self.used -= e.bytes;
             self.evictions += 1;
+            if e.speculative && !e.used {
+                self.wasted_speculative_bytes += e.bytes;
+            }
         }
         self.tick += 1;
-        self.entries.insert(key, Entry { payload, bytes, last_use: self.tick });
+        self.entries.insert(
+            key,
+            Entry { payload, bytes, last_use: self.tick, ready_at, speculative, used: false },
+        );
+        self.recency.insert(self.tick, key);
         self.used += bytes;
+    }
+
+    /// Speculative bytes still resident that never served a demand access
+    /// (end-of-run component of the prefetcher's wasted bytes).
+    pub fn resident_unused_speculative_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| e.speculative && !e.used)
+            .map(|e| e.bytes)
+            .sum()
     }
 
     pub fn used_bytes(&self) -> usize {
@@ -129,9 +238,17 @@ impl ExpertCache {
         }
     }
 
+    /// Drop every entry *and* reset all counters — a cleared cache must not
+    /// leak hit/miss/eviction stats across harness runs.
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.recency.clear();
         self.used = 0;
+        self.tick = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+        self.wasted_speculative_bytes = 0;
     }
 }
 
@@ -197,5 +314,76 @@ mod tests {
         assert!(!c.contains(&comp));
         c.insert(comp, payload(), 5);
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn in_flight_entry_is_not_a_hit_before_ready() {
+        let mut c = ExpertCache::new(100);
+        c.insert_speculative(key(0), payload(), 10, 10.0);
+        // Before the transfer lands: joinable, but a miss.
+        let h = c.get_at(&key(0), 5.0).unwrap();
+        assert_eq!(h.ready_at, 10.0);
+        assert!(h.first_spec_use);
+        assert_eq!((c.hits, c.misses), (0, 1));
+        // After landing: a plain hit, and no longer a first speculative use.
+        let h = c.get_at(&key(0), 15.0).unwrap();
+        assert!(!h.first_spec_use);
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn unused_speculative_eviction_counts_wasted_bytes() {
+        let mut c = ExpertCache::new(100);
+        c.insert_speculative(key(0), payload(), 60, 1.0);
+        c.insert(key(1), payload(), 60); // evicts the unused prefetch
+        assert_eq!(c.wasted_speculative_bytes, 60);
+        // A *used* speculative entry is not wasted when evicted.
+        c.clear();
+        c.insert_speculative(key(0), payload(), 60, 1.0);
+        let _ = c.get_at(&key(0), 2.0);
+        c.insert(key(1), payload(), 60);
+        assert_eq!(c.wasted_speculative_bytes, 0);
+    }
+
+    #[test]
+    fn resident_unused_speculative_is_reported() {
+        let mut c = ExpertCache::new(100);
+        c.insert_speculative(key(0), payload(), 30, 1.0);
+        c.insert_speculative(key(1), payload(), 20, 1.0);
+        let _ = c.get_at(&key(1), 5.0);
+        assert_eq!(c.resident_unused_speculative_bytes(), 30);
+    }
+
+    #[test]
+    fn clear_resets_stats() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 60);
+        c.insert(key(1), payload(), 60); // evicts 0
+        let _ = c.get(&key(1));
+        let _ = c.get(&key(2));
+        assert!(c.hits + c.misses + c.evictions > 0);
+        c.clear();
+        assert_eq!((c.hits, c.misses, c.evictions), (0, 0, 0));
+        assert_eq!(c.wasted_speculative_bytes, 0);
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_after_many_touches_stays_consistent() {
+        // Regression for the BTreeMap recency index: interleaved get/insert
+        // must keep recency and entries in lockstep.
+        let mut c = ExpertCache::new(100);
+        for round in 0..20 {
+            for e in 0..6 {
+                if (round + e) % 3 == 0 {
+                    c.insert(key(e), payload(), 30);
+                } else {
+                    let _ = c.get(&key(e));
+                }
+                assert!(c.used_bytes() <= 100);
+            }
+        }
+        assert_eq!(c.len(), c.used_bytes() / 30);
     }
 }

@@ -4,15 +4,18 @@
 //! host/NDP memory, the GPU fetches what each token's routing demands, and
 //! the policy decides precision + placement.  `transfer` prices the link,
 //! `cache` keeps hot payloads on-GPU (both numerics — literals — and
-//! accounting), `ndp` models near-data execution, `tiers` documents
+//! accounting), `prefetch` budgets speculative transfers ahead of demand
+//! (DESIGN.md §8), `ndp` models near-data execution, `tiers` documents
 //! capacities and placement.
 
 pub mod cache;
 pub mod ndp;
+pub mod prefetch;
 pub mod tiers;
 pub mod transfer;
 
-pub use cache::{ExpertCache, PayloadKey, PayloadKind};
+pub use cache::{CacheHit, ExpertCache, PayloadKey, PayloadKind};
 pub use ndp::NdpDevice;
+pub use prefetch::PrefetchQueue;
 pub use tiers::MemoryTiers;
 pub use transfer::{Link, TransferClass, TransferLog};

@@ -1,0 +1,112 @@
+//! Speculative transfer scheduling — budget and coverage accounting
+//! (DESIGN.md §8).
+//!
+//! The queue is pure bookkeeping; the coordinator owns the link, the cache
+//! and the model.  Division of labor per issued prefetch:
+//!
+//! 1. predictor ranks upcoming experts (`predict::ExpertPredictor`);
+//! 2. the coordinator dedups against resident *and in-flight* cache
+//!    entries, asks this queue for budget ([`PrefetchQueue::try_spend`]),
+//!    and queues the transfer as [`TransferClass::Speculative`] *behind*
+//!    the layer's demand traffic (FIFO link ⇒ speculation yields to
+//!    demand);
+//! 3. the cache entry lands "in the future" (`insert_speculative` with the
+//!    transfer's completion time) — a demand access before that joins the
+//!    in-flight copy instead of re-fetching.
+//!
+//! The per-step byte budget caps how much link time speculation may steal
+//! from the next layer's demand misses; mispredicted bytes are charged to
+//! the ledger like any other transfer and surface as `wasted_bytes` in the
+//! report.
+//!
+//! [`TransferClass::Speculative`]: crate::offload::transfer::TransferClass
+
+/// Budget and coverage accounting for speculative expert transfers.
+#[derive(Debug, Default, Clone)]
+pub struct PrefetchQueue {
+    /// Speculative-byte budget per decode step (0 = disabled).
+    pub step_budget: usize,
+    spent_this_step: usize,
+    /// Speculative transfers issued.
+    pub issued: u64,
+    /// Demand accesses served by a speculative entry (first use each).
+    pub covered: u64,
+    /// Decode-time demand transfers that went to the link (base weights).
+    pub demand_fetches: u64,
+}
+
+impl PrefetchQueue {
+    pub fn new(step_budget: usize) -> Self {
+        PrefetchQueue { step_budget, ..Default::default() }
+    }
+
+    /// Reset the per-step budget (decode step boundary).
+    pub fn begin_step(&mut self) {
+        self.spent_this_step = 0;
+    }
+
+    /// Reserve budget for one speculative transfer; `false` once the step
+    /// budget is exhausted (the caller stops issuing until the next step).
+    pub fn try_spend(&mut self, bytes: usize) -> bool {
+        if bytes > self.step_budget - self.spent_this_step.min(self.step_budget) {
+            return false;
+        }
+        self.spent_this_step += bytes;
+        true
+    }
+
+    pub fn budget_left(&self) -> usize {
+        self.step_budget - self.spent_this_step.min(self.step_budget)
+    }
+
+    /// Fraction of decode-time base-weight demand that a prefetch served:
+    /// `covered / (covered + demand_fetches)`; 1.0 when nothing was
+    /// demanded at all.
+    pub fn coverage(&self) -> f64 {
+        let total = self.covered + self.demand_fetches;
+        if total == 0 {
+            1.0
+        } else {
+            self.covered as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_caps_spending_per_step() {
+        let mut q = PrefetchQueue::new(100);
+        assert!(q.try_spend(60));
+        assert!(q.try_spend(40));
+        assert!(!q.try_spend(1), "budget exhausted");
+        q.begin_step();
+        assert!(q.try_spend(100), "budget resets at the step boundary");
+    }
+
+    #[test]
+    fn zero_budget_never_spends() {
+        let mut q = PrefetchQueue::new(0);
+        assert!(!q.try_spend(1));
+        assert!(!q.try_spend(0) || q.budget_left() == 0);
+    }
+
+    #[test]
+    fn coverage_ratio() {
+        let mut q = PrefetchQueue::new(10);
+        assert_eq!(q.coverage(), 1.0, "no demand at all = fully covered");
+        q.covered = 3;
+        q.demand_fetches = 1;
+        assert!((q.coverage() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_request_does_not_underflow() {
+        let mut q = PrefetchQueue::new(10);
+        assert!(q.try_spend(10));
+        assert!(!q.try_spend(5));
+        assert_eq!(q.budget_left(), 0);
+    }
+}

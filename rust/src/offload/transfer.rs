@@ -7,12 +7,15 @@ use crate::sim::clock::{Resource, VTime};
 /// byte ledgers of Fig. 7/8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransferClass {
-    /// Expert weights (any precision).
+    /// Expert weights (any precision) fetched on demand.
     ExpertWeights,
     /// Low-rank compensator factors (the paper's extra traffic).
     Compensator,
     /// Activations to/from the NDP device.
     Activations,
+    /// Expert weights moved ahead of demand by the prefetcher (DESIGN.md
+    /// §8) — accounted separately so speculative and demand bytes never mix.
+    Speculative,
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -90,6 +90,7 @@ mod tests {
             active,
             ndp,
             fp16_cached: cached,
+            predicted: None,
         }
     }
 

@@ -31,7 +31,19 @@ pub use monde::MondePolicy;
 pub use plan::{topk_renorm, ExpertExec, LayerPlan, Location, PlanCtx, Policy, TokenAssign};
 pub use static_quant::StaticQuantPolicy;
 
-use crate::config::{PolicyConfig, PolicyKind};
+use crate::config::{PolicyConfig, PolicyKind, Precision};
+use crate::manifest::Manifest;
+
+/// Wire bytes of the *bulk* expert payload a policy moves per expert —
+/// the unit prefetch budgets are denominated in.  Derived from the same
+/// `Policy::bulk_precision` the engine speculates with, so budget math
+/// can never drift from what actually crosses the link (DESIGN.md §8).
+pub fn bulk_expert_bytes(manifest: &Manifest, cfg: &PolicyConfig) -> usize {
+    match make_policy(cfg).bulk_precision() {
+        Precision::Fp16 => manifest.transfer.fp16_expert_bytes,
+        Precision::Int(b) | Precision::IntComp(b) => manifest.q_expert_bytes(b),
+    }
+}
 
 /// Instantiate a policy from its config.
 pub fn make_policy(cfg: &PolicyConfig) -> Box<dyn Policy> {

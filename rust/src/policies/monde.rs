@@ -50,7 +50,7 @@ mod tests {
         let cached = |e: usize| e == 0;
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 2, top_k: 2,
-            active: &active, ndp: true, fp16_cached: &cached,
+            active: &active, ndp: true, fp16_cached: &cached, predicted: None,
         };
         let plan = MondePolicy.plan(&ctx);
         for e in &plan.execs {
@@ -69,7 +69,7 @@ mod tests {
         let cached = |_: usize| false;
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 1, n_experts: 2, top_k: 1,
-            active: &active, ndp: false, fp16_cached: &cached,
+            active: &active, ndp: false, fp16_cached: &cached, predicted: None,
         };
         let plan = MondePolicy.plan(&ctx);
         assert!(plan.execs.iter().all(|e| e.location == Location::Gpu));

@@ -67,6 +67,10 @@ pub struct PlanCtx<'a> {
     /// `cache_probe(expert) == true` iff the expert's *fp16* payload is
     /// currently GPU-resident (MoNDE's hot/cold split consults this).
     pub fp16_cached: &'a dyn Fn(usize) -> bool,
+    /// Predictor scores for this layer's experts (dense, `n_experts` long)
+    /// when the prefetch subsystem is active — advisory demand forecast a
+    /// policy may consult (DESIGN.md §8); `None` when prediction is off.
+    pub predicted: Option<&'a [f64]>,
 }
 
 /// Top-k selection with renormalization over the selected set — mirrors
@@ -150,7 +154,7 @@ mod tests {
         let cached = |_: usize| false;
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
-            active: &active, ndp: false, fp16_cached: &cached,
+            active: &active, ndp: false, fp16_cached: &cached, predicted: None,
         };
         let groups = group_by_expert(&ctx);
         let total: usize = groups.iter().map(|g| g.len()).sum();
@@ -166,7 +170,7 @@ mod tests {
         let cached = |_: usize| false;
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 2, top_k: 1,
-            active: &active, ndp: false, fp16_cached: &cached,
+            active: &active, ndp: false, fp16_cached: &cached, predicted: None,
         };
         let groups = group_by_expert(&ctx);
         assert_eq!(groups[0].len(), 1);

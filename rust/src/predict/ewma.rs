@@ -1,0 +1,124 @@
+//! Expert-popularity EWMA predictor.
+//!
+//! Routing is irregular step-to-step (paper Fig. 2) but expert *popularity*
+//! is skewed and slow-moving — the same fact MoNDE's hot/cold split and
+//! every offloading LRU exploits.  This predictor smooths each layer's
+//! per-expert top-k selection mass with an exponentially-weighted moving
+//! average and predicts the currently-hottest experts.  It is the cheapest
+//! predictor (no extra model math) and the weakest: it can only capture
+//! *stationary* skew, not the token-dependent routing the gate lookahead
+//! sees.
+
+use crate::policies::plan::topk_renorm;
+use crate::predict::{rank_scores, ExpertPredictor, LayerObservation, PredictCtx, PredictedExpert};
+
+pub struct EwmaPopularity {
+    alpha: f64,
+    /// `[layer][expert]` smoothed selection mass.
+    scores: Vec<Vec<f64>>,
+}
+
+impl EwmaPopularity {
+    pub fn new(n_layers: usize, n_experts: usize, alpha: f64) -> Self {
+        EwmaPopularity { alpha, scores: vec![vec![0.0; n_experts]; n_layers] }
+    }
+
+    /// Current smoothed score of one (layer, expert).
+    pub fn score(&self, layer: usize, expert: usize) -> f64 {
+        self.scores[layer][expert]
+    }
+}
+
+impl ExpertPredictor for EwmaPopularity {
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+
+    fn observe(&mut self, obs: &LayerObservation) {
+        if obs.layer >= self.scores.len() {
+            return;
+        }
+        // Per-step selection mass: renormalized top-k weight summed over
+        // active rows (the same dispatch rule the planner uses).
+        let mut mass = vec![0.0f64; obs.n_experts];
+        for (row, &live) in obs.active.iter().enumerate() {
+            if !live {
+                continue;
+            }
+            let probs_row = &obs.probs[row * obs.n_experts..(row + 1) * obs.n_experts];
+            for (expert, weight, _) in topk_renorm(probs_row, obs.top_k) {
+                mass[expert] += weight as f64;
+            }
+        }
+        for (s, m) in self.scores[obs.layer].iter_mut().zip(&mass) {
+            *s = (1.0 - self.alpha) * *s + self.alpha * m;
+        }
+    }
+
+    fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert> {
+        if ctx.layer >= self.scores.len() {
+            return Vec::new();
+        }
+        let n_active = ctx.active.iter().filter(|&&a| a).count();
+        let cap = (n_active * ctx.top_k).clamp(ctx.top_k, ctx.n_experts);
+        rank_scores(&self.scores[ctx.layer], cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs<'a>(layer: usize, probs: &'a [f32], active: &'a [bool]) -> LayerObservation<'a> {
+        LayerObservation { step: 0, layer, n_experts: 4, top_k: 2, probs, active }
+    }
+
+    #[test]
+    fn converges_to_the_frequent_experts() {
+        let mut p = EwmaPopularity::new(2, 4, 0.25);
+        let probs = vec![0.5f32, 0.3, 0.1, 0.1]; // top-2 = experts 0, 1
+        let active = vec![true];
+        for _ in 0..10 {
+            p.observe(&obs(1, &probs, &active));
+        }
+        let ctx = PredictCtx {
+            step: 0,
+            layer: 1,
+            n_experts: 4,
+            top_k: 2,
+            active: &active,
+            lookahead_probs: None,
+        };
+        let ranked = p.predict(&ctx);
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].expert, 0);
+        assert_eq!(ranked[1].expert, 1);
+        // Unobserved layer predicts nothing.
+        let ranked0 = p.predict(&PredictCtx { layer: 0, ..ctx });
+        assert!(ranked0.is_empty());
+    }
+
+    #[test]
+    fn observation_is_deterministic() {
+        let mk = || {
+            let mut p = EwmaPopularity::new(1, 4, 0.25);
+            let active = vec![true, true];
+            let probs = vec![0.4f32, 0.3, 0.2, 0.1, 0.1, 0.2, 0.3, 0.4];
+            p.observe(&obs(0, &probs, &active));
+            p
+        };
+        let (a, b) = (mk(), mk());
+        for e in 0..4 {
+            assert_eq!(a.score(0, e), b.score(0, e));
+        }
+    }
+
+    #[test]
+    fn inactive_rows_carry_no_mass() {
+        let mut p = EwmaPopularity::new(1, 4, 0.5);
+        let probs = vec![0.7f32, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.7];
+        p.observe(&obs(0, &probs, &[true, false]));
+        assert!(p.score(0, 0) > 0.0);
+        assert_eq!(p.score(0, 3), 0.0, "row 1 is inactive");
+    }
+}

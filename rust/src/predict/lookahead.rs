@@ -1,0 +1,91 @@
+//! Gate-lookahead predictor.
+//!
+//! The router of layer *l+1* is a tiny GEMV (d × E) over a hidden state
+//! that the residual stream keeps close to what layer *l* already produced.
+//! Running layer *l+1*'s router stage (ln2 + gate + softmax — the exact
+//! serving math, reference backend or PJRT alike) on layer *l*'s *output*
+//! hidden therefore predicts the next layer's routing long before its
+//! attention completes — MoBiLE's lookahead signal (arXiv 2510.12357).
+//!
+//! The predictor itself is stateless: the coordinator computes the
+//! lookahead probs (it owns the model) and hands them in via
+//! [`PredictCtx::lookahead_probs`]; this module only aggregates them into
+//! a per-expert ranking with the same top-k dispatch rule the planner
+//! applies, so a perfectly-predicted hidden state yields exactly the
+//! demand set.
+
+use crate::policies::plan::topk_renorm;
+use crate::predict::{rank_scores, ExpertPredictor, LayerObservation, PredictCtx, PredictedExpert};
+
+pub struct GateLookahead;
+
+impl ExpertPredictor for GateLookahead {
+    fn name(&self) -> &'static str {
+        "gate-lookahead"
+    }
+
+    fn wants_lookahead(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, _obs: &LayerObservation) {}
+
+    fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert> {
+        let Some(probs) = ctx.lookahead_probs else {
+            return Vec::new();
+        };
+        let mut agg = vec![0.0f64; ctx.n_experts];
+        for (row, &live) in ctx.active.iter().enumerate() {
+            if !live {
+                continue;
+            }
+            let probs_row = &probs[row * ctx.n_experts..(row + 1) * ctx.n_experts];
+            for (expert, weight, _) in topk_renorm(probs_row, ctx.top_k) {
+                agg[expert] += weight as f64;
+            }
+        }
+        let n_active = ctx.active.iter().filter(|&&a| a).count();
+        let cap = (n_active * ctx.top_k).clamp(ctx.top_k, ctx.n_experts);
+        rank_scores(&agg, cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_by_aggregated_topk_mass() {
+        let p = GateLookahead;
+        // Row 0 picks (2, 0); row 1 picks (2, 3): expert 2 dominates.
+        let probs = vec![0.4f32, 0.1, 0.45, 0.05, 0.05, 0.1, 0.5, 0.35];
+        let active = vec![true, true];
+        let ctx = PredictCtx {
+            step: 0,
+            layer: 1,
+            n_experts: 4,
+            top_k: 2,
+            active: &active,
+            lookahead_probs: Some(&probs),
+        };
+        let ranked = p.predict(&ctx);
+        assert_eq!(ranked[0].expert, 2);
+        let experts: Vec<usize> = ranked.iter().map(|r| r.expert).collect();
+        assert!(experts.contains(&0) && experts.contains(&3));
+        assert!(!experts.contains(&1), "expert 1 is in nobody's top-k");
+    }
+
+    #[test]
+    fn no_lookahead_probs_means_no_prediction() {
+        let active = vec![true];
+        let ctx = PredictCtx {
+            step: 0,
+            layer: 0,
+            n_experts: 4,
+            top_k: 2,
+            active: &active,
+            lookahead_probs: None,
+        };
+        assert!(GateLookahead.predict(&ctx).is_empty());
+    }
+}

@@ -1,0 +1,145 @@
+//! Router-guided expert prediction for speculative prefetching
+//! (DESIGN.md §8).
+//!
+//! The serve loop fetches cache-missed experts *on demand*, which puts the
+//! whole miss penalty on the decode critical path (the paper's Fig. 1a
+//! bottleneck).  A predictor ranks the experts an upcoming layer is likely
+//! to route to so the coordinator can move their payloads over the link
+//! *while the current layer computes* — the transfer-hiding idea of MoBiLE
+//! (arXiv 2510.12357), adapted to this codebase's virtual-time model.
+//!
+//! Predictors are pure ranking functions over routing observations: they
+//! never touch the cache, the link, or the clock.  The coordinator owns
+//! issuing (budget, dedup, yielding to demand — `offload::prefetch`), so a
+//! predictor bug can cost bandwidth but never correctness.
+//!
+//! Implementations (all deterministic):
+//!
+//! | predictor         | signal                                    | cost |
+//! |-------------------|-------------------------------------------|------|
+//! | [`EwmaPopularity`]| per-layer expert-frequency EWMA           | O(E) |
+//! | [`GateLookahead`] | next layer's router run on current hidden | one router stage |
+//! | [`OracleReplay`]  | a recorded `DecodeTrace` (upper bound)    | O(k) |
+
+pub mod ewma;
+pub mod lookahead;
+pub mod oracle;
+
+pub use ewma::EwmaPopularity;
+pub use lookahead::GateLookahead;
+pub use oracle::OracleReplay;
+
+use crate::config::PredictorKind;
+
+/// One expert's predicted demand for an upcoming layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictedExpert {
+    pub expert: usize,
+    /// Higher = more likely to be routed to; comparable only within one
+    /// prediction (predictors use different units).
+    pub score: f64,
+}
+
+/// What a predictor sees after each decode layer's router runs.
+pub struct LayerObservation<'a> {
+    /// Decode step the observation belongs to.
+    pub step: u64,
+    /// Layer whose routing was just computed.
+    pub layer: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Full router softmax, row-major (n_tokens × n_experts).
+    pub probs: &'a [f32],
+    /// Rows that belong to live sequences.
+    pub active: &'a [bool],
+}
+
+/// Everything a predictor may consult when ranking an upcoming layer.
+pub struct PredictCtx<'a> {
+    /// Decode step the target layer will run in.
+    pub step: u64,
+    /// Target layer being predicted.
+    pub layer: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub active: &'a [bool],
+    /// Router probs for the target layer obtained by applying its gate to
+    /// the *current* hidden state; engine-provided when
+    /// [`ExpertPredictor::wants_lookahead`] is true.
+    pub lookahead_probs: Option<&'a [f32]>,
+}
+
+/// A lookahead predictor: observe routing, rank upcoming experts.
+pub trait ExpertPredictor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Does `predict` need engine-computed lookahead router probs?
+    fn wants_lookahead(&self) -> bool {
+        false
+    }
+
+    /// Feed the routing outcome of the layer that just planned.
+    fn observe(&mut self, obs: &LayerObservation);
+
+    /// Rank the experts of `ctx.layer` by predicted demand, descending.
+    /// Only experts with nonzero evidence are returned — at most
+    /// `n_active × top_k` entries for the EWMA/lookahead predictors.
+    fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert>;
+}
+
+/// Instantiate a predictor (`None` for [`PredictorKind::Off`]).  An
+/// [`OracleReplay`] starts empty — install its trace via
+/// `ServeEngine::set_oracle_trace`.
+pub fn make_predictor(
+    kind: PredictorKind,
+    n_layers: usize,
+    n_experts: usize,
+) -> Option<Box<dyn ExpertPredictor>> {
+    match kind {
+        PredictorKind::Off => None,
+        PredictorKind::Ewma => Some(Box::new(EwmaPopularity::new(n_layers, n_experts, 0.25))),
+        PredictorKind::GateLookahead => Some(Box::new(GateLookahead)),
+        PredictorKind::OracleReplay => Some(Box::new(OracleReplay::empty())),
+    }
+}
+
+/// Rank a dense score table descending, dropping zero-evidence experts and
+/// capping at `cap` entries — the shared tail of every predictor.
+pub(crate) fn rank_scores(scores: &[f64], cap: usize) -> Vec<PredictedExpert> {
+    let mut out: Vec<PredictedExpert> = scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s > 0.0)
+        .map(|(expert, &score)| PredictedExpert { expert, score })
+        .collect();
+    // Descending score; ascending expert index on ties (deterministic).
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.expert.cmp(&b.expert)));
+    out.truncate(cap);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_scores_orders_and_caps() {
+        let ranked = rank_scores(&[0.1, 0.0, 0.7, 0.2], 2);
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].expert, 2);
+        assert_eq!(ranked[1].expert, 3);
+    }
+
+    #[test]
+    fn rank_scores_ties_break_by_index() {
+        let ranked = rank_scores(&[0.5, 0.5, 0.5], 3);
+        let order: Vec<usize> = ranked.iter().map(|p| p.expert).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn make_predictor_off_is_none() {
+        assert!(make_predictor(PredictorKind::Off, 2, 4).is_none());
+        assert!(make_predictor(PredictorKind::Ewma, 2, 4).is_some());
+    }
+}

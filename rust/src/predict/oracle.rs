@@ -1,0 +1,96 @@
+//! Oracle replay predictor — the prefetch upper bound.
+//!
+//! Replays a [`DecodeTrace`] recorded from an identical (deterministic)
+//! run: for decode step *s*, layer *l* it predicts exactly the experts the
+//! trace shows were routed to.  Every correctly-budgeted prefetch is used,
+//! none is wasted — the ceiling any learned predictor is measured against
+//! in the harness sweep.
+//!
+//! Scope: `DecodeTrace` records slot 0's routing (the Fig. 2 trace), so
+//! the oracle is exact for single-sequence decode and covers only slot 0's
+//! share of a batched one.
+
+use std::collections::HashMap;
+
+use crate::predict::{ExpertPredictor, LayerObservation, PredictCtx, PredictedExpert};
+use crate::workload::DecodeTrace;
+
+pub struct OracleReplay {
+    /// (step, layer) → recorded (expert, combine weight) in rank order.
+    records: HashMap<(u64, usize), Vec<(usize, f32)>>,
+}
+
+impl OracleReplay {
+    /// An oracle with nothing to replay (predicts nothing).
+    pub fn empty() -> Self {
+        OracleReplay { records: HashMap::new() }
+    }
+
+    pub fn from_trace(trace: &DecodeTrace) -> Self {
+        let mut records = HashMap::new();
+        for r in &trace.records {
+            records.insert((r.step as u64, r.layer), r.experts.clone());
+        }
+        OracleReplay { records }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+impl ExpertPredictor for OracleReplay {
+    fn name(&self) -> &'static str {
+        "oracle-replay"
+    }
+
+    fn observe(&mut self, _obs: &LayerObservation) {}
+
+    fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert> {
+        match self.records.get(&(ctx.step, ctx.layer)) {
+            Some(experts) => experts
+                .iter()
+                .map(|&(expert, weight)| PredictedExpert { expert, score: weight as f64 })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(step: u64, layer: usize) -> PredictCtx<'static> {
+        PredictCtx {
+            step,
+            layer,
+            n_experts: 4,
+            top_k: 2,
+            active: &[true],
+            lookahead_probs: None,
+        }
+    }
+
+    #[test]
+    fn replays_recorded_steps_exactly() {
+        let mut t = DecodeTrace::default();
+        t.push(0, 1, vec![(3, 0.7), (1, 0.3)]);
+        let o = OracleReplay::from_trace(&t);
+        let ranked = o.predict(&ctx(0, 1));
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].expert, 3);
+        assert_eq!(ranked[1].expert, 1);
+        assert!(o.predict(&ctx(1, 1)).is_empty(), "unrecorded step");
+        assert!(o.predict(&ctx(0, 0)).is_empty(), "unrecorded layer");
+    }
+
+    #[test]
+    fn empty_oracle_predicts_nothing() {
+        assert!(OracleReplay::empty().predict(&ctx(0, 0)).is_empty());
+    }
+}

@@ -33,6 +33,19 @@ impl WorkloadConfig {
     pub fn offline(n_requests: usize, prompt_len: usize, output_len: usize) -> Self {
         WorkloadConfig { n_requests, prompt_len, output_len, arrival_rate: None, seed: 0xBEA4 }
     }
+
+    /// Online arrivals: Poisson process at `rate` requests per virtual
+    /// second (the load-sweep setting; exercises the batcher's
+    /// arrived-but-no-free-slot path).
+    pub fn online(n_requests: usize, prompt_len: usize, output_len: usize, rate: f64) -> Self {
+        WorkloadConfig {
+            n_requests,
+            prompt_len,
+            output_len,
+            arrival_rate: Some(rate),
+            seed: 0xBEA4,
+        }
+    }
 }
 
 /// Deterministic xorshift64* stream.
@@ -116,5 +129,22 @@ mod tests {
         for _ in 0..100 {
             assert!(r.next_exp(2.0) >= 0.0);
         }
+    }
+
+    #[test]
+    fn online_config_has_monotone_arrivals() {
+        let cfg = WorkloadConfig::online(5, 8, 4, 10.0);
+        assert_eq!(cfg.arrival_rate, Some(10.0));
+        // Arrival accumulation is monotone by construction: cumulative sum
+        // of nonnegative exponential gaps.
+        let mut rng = XorShift::new(cfg.seed);
+        let mut arrival = 0.0;
+        let mut prev = 0.0;
+        for _ in 0..cfg.n_requests {
+            arrival += rng.next_exp(10.0);
+            assert!(arrival >= prev);
+            prev = arrival;
+        }
+        assert!(prev > 0.0);
     }
 }

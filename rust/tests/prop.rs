@@ -84,6 +84,7 @@ fn prop_every_policy_plans_a_partition() {
             active: &active,
             ndp,
             fp16_cached: &cached,
+            predicted: None,
         };
         let n_active = active.iter().filter(|&&a| a).count();
         for p in &policies {
@@ -123,7 +124,7 @@ fn prop_beam_compensates_exactly_configured_positions() {
         let cached = |_: usize| false;
         let ctx = PlanCtx {
             probs: &probs, n_tokens, n_experts, top_k,
-            active: &active, ndp: false, fp16_cached: &cached,
+            active: &active, ndp: false, fp16_cached: &cached, predicted: None,
         };
         let plan = BeamPolicy { bits: 2, positions: pos.clone() }.plan(&ctx);
         let mut comp_pairs = 0;
@@ -203,7 +204,7 @@ fn prop_group_by_expert_rank_consistency() {
         let cached = |_: usize| false;
         let ctx = PlanCtx {
             probs: &probs, n_tokens, n_experts, top_k,
-            active: &active, ndp: false, fp16_cached: &cached,
+            active: &active, ndp: false, fp16_cached: &cached, predicted: None,
         };
         let groups = group_by_expert(&ctx);
         for (e, tokens) in groups.iter().enumerate() {
