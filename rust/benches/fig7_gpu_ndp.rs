@@ -7,7 +7,7 @@ mod common;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use beam_moe::config::{PolicyConfig, PolicyKind};
+use beam_moe::config::PolicyConfig;
 use beam_moe::harness::figures::Harness;
 use beam_moe::manifest::Manifest;
 
@@ -19,9 +19,9 @@ fn main() -> anyhow::Result<()> {
         println!("-- {model} --");
         let mut base = 0.0;
         for (name, policy) in [
-            ("monde", PolicyConfig::new(PolicyKind::Monde, 16, 0)),
-            ("beam-ndp-3bit", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
-            ("beam-ndp-2bit", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+            ("monde", PolicyConfig::new("monde", 16, 0)),
+            ("beam-ndp-3bit", PolicyConfig::new("beam", 3, top_n)),
+            ("beam-ndp-2bit", PolicyConfig::new("beam", 2, top_n)),
         ] {
             for out_len in [128usize, 256] {
                 let t0 = Instant::now();

@@ -10,7 +10,7 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use beam_moe::harness::figures::Harness;
-use beam_moe::config::{PolicyConfig, PolicyKind};
+use beam_moe::config::PolicyConfig;
 use beam_moe::manifest::Manifest;
 
 fn main() -> anyhow::Result<()> {
@@ -21,10 +21,10 @@ fn main() -> anyhow::Result<()> {
         println!("-- {model} --");
         let mut base = 0.0;
         for (name, policy) in [
-            ("mixtral-offload", PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0)),
-            ("hobbit", PolicyConfig::new(PolicyKind::Hobbit, 4, 0)),
-            ("beam-3bit", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
-            ("beam-2bit", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+            ("mixtral-offload", PolicyConfig::new("mixtral-offload", 16, 0)),
+            ("hobbit", PolicyConfig::new("hobbit", 4, 0)),
+            ("beam-3bit", PolicyConfig::new("beam", 3, top_n)),
+            ("beam-2bit", PolicyConfig::new("beam", 2, top_n)),
         ] {
             for out_len in [128usize, 256] {
                 let t0 = Instant::now();

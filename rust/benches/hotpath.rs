@@ -12,9 +12,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use beam_moe::backend::{default_backend, Tensor};
-use beam_moe::config::{
-    PolicyConfig, PolicyKind, Precision, PredictorKind, PrefetchConfig, SystemConfig,
-};
+use beam_moe::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use beam_moe::coordinator::combine;
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::ServeEngine;
@@ -153,10 +151,10 @@ fn main() -> anyhow::Result<()> {
     let sys = SystemConfig::scaled_for(&dims, false);
     let mut se = ServeEngine::new(
         StagedModel::load(Arc::clone(&backend), Manifest::load("artifacts/mixtral-tiny")?)?,
-        PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n),
+        PolicyConfig::new("beam", 2, dims.top_n),
         sys,
     )?;
-    let eval = WeightStore::load(se.model.manifest.eval_path())?;
+    let eval = WeightStore::load(se.model().manifest.eval_path())?;
     let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 4), &eval)?;
     serve(&mut se, requests)?; // warm: prefill + a few steps, caches hot
     let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 24), &eval)?;
@@ -178,9 +176,9 @@ fn main() -> anyhow::Result<()> {
         * Manifest::load("artifacts/mixtral-tiny")?.q_expert_bytes(2);
     let mut se = ServeEngine::with_prefetch(
         StagedModel::load(Arc::clone(&backend), Manifest::load("artifacts/mixtral-tiny")?)?,
-        PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n),
+        PolicyConfig::new("beam", 2, dims.top_n),
         SystemConfig::scaled_for(&dims, false),
-        PrefetchConfig::new(PredictorKind::GateLookahead, 1, budget),
+        PrefetchConfig::new("gate", 1, budget),
     )?;
     let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 64, 24), &eval)?;
     let t0 = std::time::Instant::now();

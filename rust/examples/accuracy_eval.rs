@@ -10,7 +10,7 @@
 //! ```
 
 use anyhow::Result;
-use beam_moe::config::{PolicyConfig, PolicyKind};
+use beam_moe::config::PolicyConfig;
 use beam_moe::harness::figures::Harness;
 use beam_moe::manifest::Manifest;
 use std::path::PathBuf;
@@ -28,24 +28,16 @@ fn main() -> Result<()> {
     println!("== accuracy eval: {model}, {n} held-out sequences ==");
     println!("{:<10} {:>10} {:>10}", "variant", "ppl", "cloze%");
 
-    let mut variants: Vec<(String, PolicyConfig)> = vec![(
-        "fp16".into(),
-        PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0),
-    )];
+    let mut variants: Vec<(String, PolicyConfig)> =
+        vec![("fp16".into(), PolicyConfig::new("mixtral-offload", 16, 0))];
     for bits in [3u8, 2] {
         if has_gptq {
-            let mut p = PolicyConfig::new(PolicyKind::StaticQuant, bits, 0);
+            let mut p = PolicyConfig::new("static-quant", bits, 0);
             p.method = "gptq".into();
             variants.push((format!("gptq{bits}"), p));
         }
-        variants.push((
-            format!("hqq{bits}"),
-            PolicyConfig::new(PolicyKind::StaticQuant, bits, 0),
-        ));
-        variants.push((
-            format!("beam{bits}"),
-            PolicyConfig::new(PolicyKind::Beam, bits, top_n),
-        ));
+        variants.push((format!("hqq{bits}"), PolicyConfig::new("static-quant", bits, 0)));
+        variants.push((format!("beam{bits}"), PolicyConfig::new("beam", bits, top_n)));
     }
     for (name, policy) in variants {
         let (ppl, acc) = h.score_variant(model, policy, n)?;

@@ -12,11 +12,10 @@
 
 use anyhow::Result;
 use beam_moe::backend::default_backend;
-use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::ServeEngine;
+use beam_moe::config::{PolicyConfig, SystemConfig};
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::runtime::StagedModel;
+use beam_moe::server::ServerBuilder;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 use std::sync::Arc;
 
@@ -29,9 +28,9 @@ fn main() -> Result<()> {
 
     println!("== GPU-NDP offloading: {model_name} (NDP 512 GB/s, scaled) ==\n");
     let policies: Vec<(&str, PolicyConfig)> = vec![
-        ("monde(fp16-ndp)", PolicyConfig::new(PolicyKind::Monde, 16, 0)),
-        ("beam(int3)", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
-        ("beam(int2)", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+        ("monde(fp16-ndp)", PolicyConfig::new("monde", 16, 0)),
+        ("beam(int3)", PolicyConfig::new("beam", 3, top_n)),
+        ("beam(int2)", PolicyConfig::new("beam", 2, top_n)),
     ];
 
     for (name, policy) in policies {
@@ -40,16 +39,22 @@ fn main() -> Result<()> {
             Manifest::load(format!("artifacts/{model_name}"))?,
         )?;
         let sys = SystemConfig::scaled_for(&model.manifest.model, true);
-        let mut se = ServeEngine::new(model, policy, sys)?;
-        let eval = WeightStore::load(se.model.manifest.eval_path())?;
-        let requests = WorkloadGen::generate(&WorkloadConfig::offline(4, 256, 64), &eval)?;
-        let r = serve(&mut se, requests)?;
+        let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+        let eval = WeightStore::load(server.model().manifest.eval_path())?;
+        for req in WorkloadGen::generate(&WorkloadConfig::offline(4, 256, 64), &eval)? {
+            server.submit(req)?;
+        }
+        let r = server.run_to_completion()?;
         println!("{name}");
         println!("  {:.2} tok/s (virtual)", r.tokens_per_second());
         let b = &r.breakdown;
         println!(
             "  time: gpu-experts {:.4}s | ndp-experts {:.4}s | weight-xfer {:.4}s | comp-xfer {:.4}s | act-xfer {:.4}s",
-            b.expert_compute_s, b.ndp_compute_s, b.transfer_weights_s, b.transfer_comp_s, b.transfer_act_s
+            b.expert_compute_s,
+            b.ndp_compute_s,
+            b.transfer_weights_s,
+            b.transfer_comp_s,
+            b.transfer_act_s,
         );
         println!(
             "  bytes: weights {} | compensators {} | activations {}\n",
@@ -58,6 +63,6 @@ fn main() -> Result<()> {
             r.bytes.get("activations").unwrap_or(&0),
         );
     }
-    println!("(paper: BEAM gains 4.75-6.69x over MoNDE by running non-restored experts low-bit near-data)");
+    println!("(paper: BEAM gains 4.75-6.69x over MoNDE via low-bit near-data experts)");
     Ok(())
 }

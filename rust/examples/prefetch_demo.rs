@@ -14,29 +14,37 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use beam_moe::backend::{Backend, ReferenceBackend};
-use beam_moe::config::{
-    PolicyConfig, PolicyKind, PredictorKind, PrefetchConfig, SystemConfig,
-};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::Report;
+use beam_moe::server::{Server, ServerBuilder};
 use beam_moe::synth;
-use beam_moe::workload::{DecodeTrace, Request, WorkloadConfig, WorkloadGen};
+use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
 
-fn engine(prefetch: PrefetchConfig) -> Result<ServeEngine> {
+fn server(prefetch: PrefetchConfig) -> Result<Server> {
     let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
     let model = synth::tiny_model(backend, "synthetic-tiny")?;
     let dims = model.manifest.model.clone();
     let mut sys = SystemConfig::scaled_for(&dims, false);
     // Offloading regime: the cache holds ~5 of the 8 quantized experts.
     sys.gpu_cache_bytes = 5 * model.manifest.q_expert_bytes(synth::SYNTH_BITS);
-    let policy = PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1);
-    ServeEngine::with_prefetch(model, policy, sys, prefetch)
+    ServerBuilder::new(model)
+        .policy(PolicyConfig::new("beam", synth::SYNTH_BITS, 1))
+        .system(sys)
+        .prefetch(prefetch)
+        .build()
 }
 
 fn requests() -> Result<Vec<Request>> {
     let dims = synth::tiny_dims("synthetic-tiny");
     let eval = synth::tiny_eval_store(&dims)?;
     WorkloadGen::generate(&WorkloadConfig::offline(3, 32, 12), &eval)
+}
+
+fn run(server: &mut Server) -> Result<Report> {
+    for req in requests()? {
+        server.submit(req)?;
+    }
+    server.run_to_completion()
 }
 
 fn row(name: &str, r: &Report) {
@@ -56,29 +64,25 @@ fn main() -> Result<()> {
     let budget = dims.top_k
         * dims.n_layers
         * synth::tiny_manifest("synthetic-tiny").q_expert_bytes(synth::SYNTH_BITS);
-    println!("== speculative expert prefetching (synthetic model, BEAM int2, budget {budget}B/step) ==");
+    println!("== speculative prefetching (synthetic, BEAM int2, budget {budget}B/step) ==");
 
     // Demand-only baseline (doubles as the oracle's recording pass).
-    let mut base = engine(PrefetchConfig::off())?;
-    base.trace = Some(DecodeTrace::default());
-    let base_report = serve(&mut base, requests()?)?;
+    let mut base = server(PrefetchConfig::off())?;
+    base.record_trace();
+    let base_report = run(&mut base)?;
     row("demand-only", &base_report);
-    let trace = base.trace.take().unwrap();
+    let trace = base.take_trace()?;
 
-    for (name, kind) in [
-        ("ewma", PredictorKind::Ewma),
-        ("gate-lookahead", PredictorKind::GateLookahead),
-        ("oracle-replay", PredictorKind::OracleReplay),
-    ] {
-        let mut e = engine(PrefetchConfig::new(kind, 1, budget))?;
-        if kind == PredictorKind::OracleReplay {
-            e.set_oracle_trace(&trace);
+    for name in ["ewma", "gate-lookahead", "oracle-replay"] {
+        let mut s = server(PrefetchConfig::new(name, 1, budget))?;
+        if s.needs_recorded_trace() {
+            s.install_oracle_trace(&trace);
         }
-        let r = serve(&mut e, requests()?)?;
+        let r = run(&mut s)?;
         row(name, &r);
     }
 
     println!("\ntails (demand-only): {}", base_report.tail_line());
-    println!("(stall = decode critical-path wait on weight transfers; prefetching exists to shrink it)");
+    println!("(stall = decode critical-path wait on weight transfers; prefetching shrinks it)");
     Ok(())
 }

@@ -1,27 +1,25 @@
-//! Quickstart: load a BEAM model and serve two short requests.
+//! Quickstart: build a `Server` and stream tokens from two sessions.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the whole public API surface in ~40 lines: manifest → backend →
-//! staged model → serve engine with the paper's policy → report.  With no
-//! `artifacts/` directory (no python run), it falls back to the built-in
-//! synthetic tiny model, so the command above works from a clean checkout
-//! on the pure-Rust reference backend.  After `make artifacts`, the same
-//! binary serves the trained mixtral-tiny instead.
+//! Walks the whole public API surface in ~50 lines: manifest → backend →
+//! staged model → `ServerBuilder` → per-request `Session` token-event
+//! streams → report.  With no `artifacts/` directory (no python run), it
+//! falls back to the built-in synthetic tiny model, so the command above
+//! works from a clean checkout on the pure-Rust reference backend.  After
+//! `make artifacts`, the same binary serves the trained mixtral-tiny.
 
 use std::path::Path;
-
 use std::sync::Arc;
 
 use anyhow::Result;
 use beam_moe::backend::{default_backend, Backend, ReferenceBackend};
-use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::ServeEngine;
+use beam_moe::config::{PolicyConfig, SystemConfig};
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::runtime::StagedModel;
+use beam_moe::server::{ServerBuilder, ServerTick, TokenEvent};
 use beam_moe::synth;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
@@ -53,17 +51,41 @@ fn main() -> Result<()> {
         model.manifest.model.d_model
     );
 
-    // Policy: the paper's router-guided compensation at low-bit, top-1.
-    let policy = PolicyConfig::new(PolicyKind::Beam, bits, 1);
+    // Server: the paper's router-guided compensation policy at low-bit,
+    // top-1, on the simulated H100 testbed scaled for this model.
     let sys = SystemConfig::scaled_for(&model.manifest.model, false);
-    let mut serve_engine = ServeEngine::new(model, policy, sys)?;
+    let mut server = ServerBuilder::new(model)
+        .policy(PolicyConfig::new("beam", bits, 1))
+        .system(sys)
+        .build()?;
 
-    // Two requests from the corpus token dump, 24 output tokens each.
+    // Two requests from the corpus token dump, 24 output tokens each,
+    // submitted one at a time (admission-controlled — no up-front Vec).
     let wl = WorkloadConfig::offline(2, 48, 24);
-    let requests = WorkloadGen::generate(&wl, &eval)?;
+    let mut ids = Vec::new();
+    for req in WorkloadGen::generate(&wl, &eval)? {
+        ids.push(server.submit(req)?);
+    }
 
-    // Serve and report.
-    let report = serve(&mut serve_engine, requests)?;
+    // Drive the deterministic event loop, streaming session 0's first
+    // tokens with their virtual timestamps as they are generated.
+    let report = loop {
+        let tick = server.tick()?;
+        for ev in server.poll_events(ids[0]) {
+            match ev {
+                TokenEvent::Admitted { at } => println!("  [{}] admitted at {at:.4}s", ids[0]),
+                TokenEvent::Token { token, index, at } if index < 4 => {
+                    println!("  [{}] token[{index}] = {token} at {at:.4}s", ids[0]);
+                }
+                TokenEvent::Finished { at } => println!("  [{}] finished at {at:.4}s", ids[0]),
+                _ => {}
+            }
+        }
+        if tick == ServerTick::Done {
+            break server.report();
+        }
+    };
+
     println!("{}", report.summary_line());
     println!(
         "generated {} tokens in {:.4} virtual s  ({:.1} tok/s on the simulated H100 testbed)",

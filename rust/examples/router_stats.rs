@@ -10,14 +10,13 @@
 //! ```
 
 use anyhow::Result;
-use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::ServeEngine;
-use beam_moe::jsonx::Value;
 use beam_moe::backend::default_backend;
+use beam_moe::config::{PolicyConfig, SystemConfig};
+use beam_moe::jsonx::Value;
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::runtime::StagedModel;
-use beam_moe::workload::{DecodeTrace, WorkloadConfig, WorkloadGen};
+use beam_moe::server::ServerBuilder;
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -27,13 +26,18 @@ fn main() -> Result<()> {
     let model = StagedModel::load(backend, Manifest::load(format!("artifacts/{model_name}"))?)?;
     let dims = model.manifest.model.clone();
     let sys = SystemConfig::scaled_for(&dims, false);
-    let mut se = ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n), sys)?;
-    se.trace = Some(DecodeTrace::default());
+    let mut server = ServerBuilder::new(model)
+        .policy(PolicyConfig::new("beam", 2, dims.top_n))
+        .system(sys)
+        .build()?;
+    server.record_trace();
 
-    let eval = WeightStore::load(se.model.manifest.eval_path())?;
-    let requests = WorkloadGen::generate(&WorkloadConfig::offline(1, 64, 40), &eval)?;
-    serve(&mut se, requests)?;
-    let trace = se.trace.take().unwrap();
+    let eval = WeightStore::load(server.model().manifest.eval_path())?;
+    for req in WorkloadGen::generate(&WorkloadConfig::offline(1, 64, 40), &eval)? {
+        server.submit(req)?;
+    }
+    server.run_to_completion()?;
+    let trace = server.take_trace()?;
 
     println!("== expert activation over decode steps (layer 0, '#'=dominant '+'=secondary) ==");
     for (step, row) in trace.activation_matrix(0, dims.n_experts).iter().enumerate().take(24) {

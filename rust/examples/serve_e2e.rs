@@ -12,11 +12,10 @@
 
 use anyhow::Result;
 use beam_moe::backend::default_backend;
-use beam_moe::config::{PolicyConfig, PolicyKind, SystemConfig};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::ServeEngine;
+use beam_moe::config::{PolicyConfig, SystemConfig};
 use beam_moe::manifest::{Manifest, WeightStore};
 use beam_moe::runtime::StagedModel;
+use beam_moe::server::ServerBuilder;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 use std::sync::Arc;
 
@@ -34,11 +33,11 @@ fn main() -> Result<()> {
     );
 
     let policies: Vec<(&str, PolicyConfig)> = vec![
-        ("mixtral-offload(fp16)", PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0)),
-        ("hobbit(mixed)", PolicyConfig::new(PolicyKind::Hobbit, 4, 0)),
-        ("static-quant(int2)", PolicyConfig::new(PolicyKind::StaticQuant, 2, 0)),
-        ("beam(int3+top-n)", PolicyConfig::new(PolicyKind::Beam, 3, top_n)),
-        ("beam(int2+top-n)", PolicyConfig::new(PolicyKind::Beam, 2, top_n)),
+        ("mixtral-offload(fp16)", PolicyConfig::new("mixtral-offload", 16, 0)),
+        ("hobbit(mixed)", PolicyConfig::new("hobbit", 4, 0)),
+        ("static-quant(int2)", PolicyConfig::new("static-quant", 2, 0)),
+        ("beam(int3+top-n)", PolicyConfig::new("beam", 3, top_n)),
+        ("beam(int2+top-n)", PolicyConfig::new("beam", 2, top_n)),
     ];
 
     println!(
@@ -47,13 +46,18 @@ fn main() -> Result<()> {
     );
     let mut baseline = 0.0;
     for (name, policy) in policies {
-        let model = StagedModel::load(Arc::clone(&backend), Manifest::load(format!("artifacts/{model_name}"))?)?;
+        let model = StagedModel::load(
+            Arc::clone(&backend),
+            Manifest::load(format!("artifacts/{model_name}"))?,
+        )?;
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
-        let mut se = ServeEngine::new(model, policy, sys)?;
-        let eval = WeightStore::load(se.model.manifest.eval_path())?;
+        let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+        let eval = WeightStore::load(server.model().manifest.eval_path())?;
         let wl = WorkloadConfig::offline(n_requests, 256, output_len);
-        let requests = WorkloadGen::generate(&wl, &eval)?;
-        let r = serve(&mut se, requests)?;
+        for req in WorkloadGen::generate(&wl, &eval)? {
+            server.submit(req)?;
+        }
+        let r = server.run_to_completion()?;
         let tps = r.tokens_per_second();
         if baseline == 0.0 {
             baseline = tps;

@@ -249,7 +249,15 @@ fn rope_inplace(v: &mut [f32], pos: i32, dh: usize) {
 }
 
 /// SwiGLU expert FFN: `(silu(x@w1) ⊙ (x@w3)) @ w2` over (n, d).
-fn swiglu(xn: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], n: usize, d: usize, f: usize) -> Vec<f32> {
+fn swiglu(
+    xn: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    n: usize,
+    d: usize,
+    f: usize,
+) -> Vec<f32> {
     let gate = matmul(xn, w1, n, d, f);
     let up = matmul(xn, w3, n, d, f);
     let h: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
@@ -363,7 +371,8 @@ impl RefStage {
     /// (xn, (pk, sc, zp) × w1/w2/w3) -> (y (N, d)).
     fn expert_quant(&self, args: &[&Tensor], cbits: u8) -> Result<Vec<Tensor>> {
         self.argc(args, 10)?;
-        let (n, d, f, g) = (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
+        let (n, d, f, g) =
+            (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
         let w1 = dequant_mat(args[1], args[2], args[3], d, f, cbits, g)?;
         let w2 = dequant_mat(args[4], args[5], args[6], f, d, cbits, g)?;
         let w3 = dequant_mat(args[7], args[8], args[9], d, f, cbits, g)?;
@@ -375,7 +384,8 @@ impl RefStage {
     /// `Ŵi = deq(Wi) + Ui·Vi` per projection, then the plain SwiGLU.
     fn expert_quant_comp(&self, args: &[&Tensor], cbits: u8) -> Result<Vec<Tensor>> {
         self.argc(args, 28)?;
-        let (n, d, f, g) = (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
+        let (n, d, f, g) =
+            (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
         let r = self.dims.rank_pad;
         let mut w1 = dequant_mat(args[1], args[2], args[3], d, f, cbits, g)?;
         let mut w2 = dequant_mat(args[4], args[5], args[6], f, d, cbits, g)?;

@@ -61,39 +61,6 @@ impl Precision {
     }
 }
 
-/// Which serving policy drives expert placement/precision decisions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyKind {
-    /// Mixtral-Offloading (Eliseev & Mazur 2023): FP16 on-demand fetch + LRU.
-    MixtralOffload,
-    /// Uniform static quantization (no compensation) — "w/ quant" ablation.
-    StaticQuant,
-    /// HOBBIT (Tang et al. 2024): mixed-precision fetch by router score.
-    Hobbit,
-    /// MoNDE (Kim et al. 2024): cold experts execute on the NDP device, FP16.
-    Monde,
-    /// BEAM (this paper): low-bit everywhere + router-guided top-n
-    /// low-rank compensation; with NDP, non-restored experts run near-data.
-    Beam,
-}
-
-impl std::str::FromStr for PolicyKind {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
-        Ok(match s {
-            "mixtral-offload" | "mixtral-offloading" | "fp16" => PolicyKind::MixtralOffload,
-            "static-quant" | "quant" => PolicyKind::StaticQuant,
-            "hobbit" => PolicyKind::Hobbit,
-            "monde" => PolicyKind::Monde,
-            "beam" | "ours" => PolicyKind::Beam,
-            other => anyhow::bail!(
-                "unknown policy `{other}` (mixtral-offload|static-quant|hobbit|monde|beam)"
-            ),
-        })
-    }
-}
-
 /// Simulated hardware testbed (paper §4.1).  All quantities SI (bytes, s).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -199,41 +166,20 @@ impl SystemConfig {
     }
 }
 
-/// Which lookahead predictor drives speculative expert prefetching
-/// (DESIGN.md §8).  `Off` reproduces the demand-only serve loop exactly.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PredictorKind {
-    /// No prefetching: every cache miss is fetched on demand.
-    Off,
-    /// Per-layer expert-popularity EWMA over observed decode routings.
-    Ewma,
-    /// Score layer *l+1*'s experts by running its router (ln2 + gate) on
-    /// layer *l*'s output hidden state (MoBiLE-style lookahead).
-    GateLookahead,
-    /// Replay a recorded `DecodeTrace` — the prefetch upper bound.
-    OracleReplay,
-}
-
-impl std::str::FromStr for PredictorKind {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
-        Ok(match s {
-            "off" | "none" => PredictorKind::Off,
-            "ewma" => PredictorKind::Ewma,
-            "gate" | "gate-lookahead" | "lookahead" => PredictorKind::GateLookahead,
-            "oracle" | "oracle-replay" => PredictorKind::OracleReplay,
-            other => anyhow::bail!("unknown predictor `{other}` (off|ewma|gate|oracle)"),
-        })
-    }
-}
-
 /// Speculative expert-prefetch knobs (DESIGN.md §8).  Transfers issued
 /// under these knobs ride the `TransferClass::Speculative` ledger class so
 /// speculative and demand bytes never mix.
+///
+/// `predictor` names a constructor in the open `PredictorRegistry`
+/// (`predict::registry`, DESIGN.md §9) — the closed `PredictorKind` enum
+/// this replaced is gone, so new lookahead strategies register without
+/// touching this file.  `"off"` reproduces the demand-only serve loop
+/// exactly.
 #[derive(Debug, Clone)]
 pub struct PrefetchConfig {
-    pub predictor: PredictorKind,
+    /// Registry name of the predictor (`off`, `ewma`, `gate`, `oracle`, or
+    /// anything registered at runtime).
+    pub predictor: String,
     /// How many layers ahead each prediction reaches; past the last layer
     /// the lookahead wraps to layer 0 of the *next* decode step.
     pub lookahead: usize,
@@ -244,16 +190,18 @@ pub struct PrefetchConfig {
 impl PrefetchConfig {
     /// Demand-only serving (the seed behaviour).
     pub fn off() -> Self {
-        PrefetchConfig { predictor: PredictorKind::Off, lookahead: 1, budget_bytes: 0 }
+        PrefetchConfig { predictor: "off".to_string(), lookahead: 1, budget_bytes: 0 }
     }
 
-    pub fn new(predictor: PredictorKind, lookahead: usize, budget_bytes: usize) -> Self {
-        PrefetchConfig { predictor, lookahead, budget_bytes }
+    pub fn new(predictor: &str, lookahead: usize, budget_bytes: usize) -> Self {
+        PrefetchConfig { predictor: predictor.to_string(), lookahead, budget_bytes }
     }
 
-    /// Will this config ever issue a speculative transfer?
-    pub fn enabled(&self) -> bool {
-        self.predictor != PredictorKind::Off && self.lookahead > 0 && self.budget_bytes > 0
+    /// Do the numeric knobs permit issuing at all?  Whether a predictor
+    /// exists is the registry's call (its ctor may return `None`) — the
+    /// engine combines both in `ServeEngine::speculation_active`.
+    pub fn issuable(&self) -> bool {
+        self.lookahead > 0 && self.budget_bytes > 0
     }
 }
 
@@ -264,9 +212,17 @@ impl Default for PrefetchConfig {
 }
 
 /// Policy tuning knobs shared by all policies.
+///
+/// `policy` names a constructor in the open `PolicyRegistry`
+/// (`policies::registry`, DESIGN.md §9) — the closed `PolicyKind` enum
+/// this replaced is gone, so new placement/precision strategies register
+/// without touching this file, the engine, or the CLI.
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
-    pub kind: PolicyKind,
+    /// Registry name of the policy (`beam`, `hobbit`, `monde`,
+    /// `mixtral-offload`, `static-quant`, or anything registered at
+    /// runtime).
+    pub policy: String,
     /// Quantizer family of the stored payloads (`hqq` for BEAM/static,
     /// `gptq` for the GPTQ accuracy baseline).
     pub method: String,
@@ -286,9 +242,9 @@ pub struct PolicyConfig {
 }
 
 impl PolicyConfig {
-    pub fn new(kind: PolicyKind, bits: u8, top_n: usize) -> Self {
+    pub fn new(policy: &str, bits: u8, top_n: usize) -> Self {
         PolicyConfig {
-            kind,
+            policy: policy.to_string(),
             method: "hqq".to_string(),
             bits,
             top_n,

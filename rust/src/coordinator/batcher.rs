@@ -32,8 +32,30 @@ pub enum Action {
 
 impl Batcher {
     pub fn new(mut requests: Vec<Request>) -> Self {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // Stable sort: equal arrivals keep submission order (`total_cmp`
+        // so a NaN arrival cannot panic admission).
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         Batcher { queue: requests.into(), admitted: 0 }
+    }
+
+    /// Insert an incrementally-submitted request, keeping arrival order.
+    /// Equal arrivals keep submission order — the exact order
+    /// [`Batcher::new`]'s stable sort produces, so a `Server` fed one
+    /// request at a time schedules identically to the up-front `Vec` path.
+    pub fn push(&mut self, req: Request) {
+        let pos = self
+            .queue
+            .iter()
+            .position(|r| r.arrival.total_cmp(&req.arrival).is_gt())
+            .unwrap_or(self.queue.len());
+        self.queue.insert(pos, req);
+    }
+
+    /// Remove a still-queued request by id (session cancel before
+    /// admission); `None` if it was already admitted or never queued.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
     }
 
     pub fn pending(&self) -> usize {
@@ -87,6 +109,40 @@ mod tests {
         let mut b = Batcher::new(vec![req(0, 10.0)]);
         match b.next_action(1.0, Some(0), 0) {
             Action::IdleUntil(t) => assert_eq!(t, 10.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_matches_upfront_sort_order() {
+        // Incremental submission must reproduce Batcher::new's stable
+        // arrival sort, ties included.
+        let reqs = vec![req(3, 1.0), req(0, 2.0), req(1, 1.0), req(2, 0.5)];
+        let upfront = Batcher::new(reqs.clone());
+        let mut incremental = Batcher::new(vec![]);
+        for r in reqs {
+            incremental.push(r);
+        }
+        let ids = |b: &mut Batcher| -> Vec<u64> {
+            let mut out = Vec::new();
+            while let Action::Prefill(_, r) = b.next_action(10.0, Some(0), 0) {
+                out.push(r.id);
+            }
+            out
+        };
+        let (mut a, mut b) = (upfront, incremental);
+        assert_eq!(ids(&mut a), vec![2, 3, 1, 0]);
+        assert_eq!(ids(&mut b), vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn remove_drops_only_the_queued_id() {
+        let mut b = Batcher::new(vec![req(0, 0.0), req(1, 1.0)]);
+        assert!(b.remove(1).is_some());
+        assert!(b.remove(1).is_none(), "already removed");
+        assert_eq!(b.pending(), 1);
+        match b.next_action(5.0, Some(0), 0) {
+            Action::Prefill(_, r) => assert_eq!(r.id, 0),
             other => panic!("{other:?}"),
         }
     }

@@ -25,44 +25,85 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::backend::Tensor;
-use crate::config::{PolicyConfig, Precision, PredictorKind, PrefetchConfig, SystemConfig};
+use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
 use crate::coordinator::metrics::{PrefetchReport, Report, RequestRecord, StepBreakdown};
-use crate::coordinator::state::{BatchState, LayerKv};
+use crate::coordinator::state::{ActiveSeq, BatchState, LayerKv};
 use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use crate::offload::ndp::NdpDevice;
 use crate::offload::prefetch::PrefetchQueue;
 use crate::offload::transfer::{Link, TransferClass};
-use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
 use crate::policies::make_policy;
+use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
 use crate::predict::{make_predictor, ExpertPredictor, LayerObservation, PredictCtx};
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::CostModel;
 use crate::workload::{DecodeTrace, Request};
 
+/// One generated token tagged for the session layer (`server::Server`
+/// drains these after every step and routes them into `TokenEvent`
+/// streams).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EmittedToken {
+    pub request_id: u64,
+    pub token: i32,
+    /// 0-based index among the request's generated tokens.
+    pub index: usize,
+    /// Virtual time the step that produced the token completed.
+    pub at: VTime,
+    /// This token completes the request.
+    pub last: bool,
+}
+
+/// Read-only snapshot of engine progress (the façade's replacement for
+/// the `pub` fields `ServeEngine` no longer exposes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub virtual_now: VTime,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub total_generated: usize,
+    /// Batch slots currently bound to live sequences.
+    pub active_slots: usize,
+    /// Requests that ran to completion (cancelled ones excluded).
+    pub completed_requests: usize,
+}
+
+/// Read-only view of the expert cache's economics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheView {
+    pub entries: usize,
+    pub used_bytes: usize,
+    pub capacity_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub hit_rate: f64,
+}
+
 pub struct ServeEngine {
-    pub model: StagedModel,
-    pub policy_cfg: PolicyConfig,
+    model: StagedModel,
+    policy_cfg: PolicyConfig,
     policy: Box<dyn Policy>,
-    pub cost: CostModel,
+    cost: CostModel,
     gpu: Resource,
     pcie: Link,
     ndp: Option<NdpDevice>,
     ndp_link: Option<Link>,
-    pub cache: ExpertCache,
-    pub clock: VirtualClock,
-    pub state: BatchState,
+    cache: ExpertCache,
+    pub(crate) clock: VirtualClock,
+    pub(crate) state: BatchState,
     breakdown: StepBreakdown,
     /// [layer][expert] mean true compensator rank (cost model input).
     avg_ranks: Vec<Vec<f64>>,
-    pub trace: Option<DecodeTrace>,
+    trace: Option<DecodeTrace>,
     /// Prefetch knobs (DESIGN.md §8); `PrefetchConfig::off()` reproduces
     /// the demand-only loop byte-for-byte.
-    pub prefetch_cfg: PrefetchConfig,
+    prefetch_cfg: PrefetchConfig,
     predictor: Option<Box<dyn ExpertPredictor>>,
     /// Speculative-transfer budget/coverage bookkeeping.
-    pub prefetch: PrefetchQueue,
+    prefetch: PrefetchQueue,
     /// layer → dense predictor scores, refreshed as predictions are made
     /// (surfaced to policies through `PlanCtx::predicted`).
     predicted_scores: HashMap<usize, Vec<f64>>,
@@ -73,6 +114,8 @@ pub struct ServeEngine {
     prefills: u64,
     total_generated: usize,
     records: Vec<RequestRecord>,
+    /// Tokens generated since the session layer last drained.
+    emitted: Vec<EmittedToken>,
     started: Instant,
 }
 
@@ -98,9 +141,9 @@ impl ServeEngine {
             .ndp
             .as_ref()
             .map(|n| Link::new("ndp-link", n.link_bw, n.link_lat));
-        let predictor = make_predictor(prefetch_cfg.predictor, dims.n_layers, dims.n_experts);
+        let predictor = make_predictor(&prefetch_cfg.predictor, dims.n_layers, dims.n_experts)?;
         let mut engine = ServeEngine {
-            policy: make_policy(&policy_cfg),
+            policy: make_policy(&policy_cfg)?,
             policy_cfg,
             cost,
             gpu: Resource::new("gpu"),
@@ -122,6 +165,7 @@ impl ServeEngine {
             prefills: 0,
             total_generated: 0,
             records: Vec::new(),
+            emitted: Vec::new(),
             started: Instant::now(),
             model,
         };
@@ -129,19 +173,116 @@ impl ServeEngine {
         Ok(engine)
     }
 
-    /// Install the recorded trace an `OracleReplay` predictor replays
-    /// (no-op for other predictor kinds).
-    pub fn set_oracle_trace(&mut self, trace: &DecodeTrace) {
-        if matches!(self.prefetch_cfg.predictor, PredictorKind::OracleReplay) {
-            self.predictor = Some(Box::new(crate::predict::OracleReplay::from_trace(trace)));
+    // -- read-only façade (DESIGN.md §9): the fields behind these used to
+    // be `pub`; binaries/examples/figures now go through `server::Server`,
+    // which forwards here -------------------------------------------------
+
+    /// The staged model this engine serves (manifest, stages, store).
+    pub fn model(&self) -> &StagedModel {
+        &self.model
+    }
+
+    /// The policy knob set the engine was built with.
+    pub fn policy_config(&self) -> &PolicyConfig {
+        &self.policy_cfg
+    }
+
+    /// The prefetch knob set the engine was built with.
+    pub fn prefetch_config(&self) -> &PrefetchConfig {
+        &self.prefetch_cfg
+    }
+
+    /// Snapshot of serve-loop progress.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            virtual_now: self.clock.now(),
+            decode_steps: self.decode_steps,
+            prefills: self.prefills,
+            total_generated: self.total_generated,
+            active_slots: self.state.n_active(),
+            completed_requests: self.records.len(),
         }
     }
 
-    /// MoNDE statically pins its hottest experts in GPU HBM (the hot/cold
-    /// split of Kim et al. 2024); model-load time, so no link charge.
+    /// Snapshot of the expert cache's economics.
+    pub fn cache_view(&self) -> CacheView {
+        CacheView {
+            entries: self.cache.len(),
+            used_bytes: self.cache.used_bytes(),
+            capacity_bytes: self.cache.capacity(),
+            hits: self.cache.hits,
+            misses: self.cache.misses,
+            evictions: self.cache.evictions,
+            hit_rate: self.cache.hit_rate(),
+        }
+    }
+
+    /// Record decode routing from now on (the Fig. 2 trace and the
+    /// oracle-replay recording pass).
+    pub fn record_trace(&mut self) {
+        self.trace = Some(DecodeTrace::default());
+    }
+
+    /// Take the recorded decode trace; contextful error when tracing was
+    /// never enabled (the old `trace.take().unwrap()` panic path).
+    pub fn take_trace(&mut self) -> Result<DecodeTrace> {
+        self.trace
+            .take()
+            .context("no decode trace recorded — call record_trace() before serving")
+    }
+
+    /// Install the recorded trace a trace-replaying predictor (e.g.
+    /// `oracle`) replays; no-op for predictors that learn online.
+    pub fn set_oracle_trace(&mut self, trace: &DecodeTrace) {
+        if let Some(p) = self.predictor.as_mut() {
+            p.install_trace(trace);
+        }
+    }
+
+    /// Does the configured predictor need a recorded trace installed
+    /// before serving ([`ServeEngine::set_oracle_trace`])?
+    pub fn needs_recorded_trace(&self) -> bool {
+        self.predictor.as_ref().is_some_and(|p| p.wants_trace())
+    }
+
+    /// Can this run ever issue a speculative transfer?  Ground truth for
+    /// "is prefetching on": a predictor was actually constructed (the
+    /// registry's call — an off-like name builds `None`) *and* the
+    /// numeric knobs permit issuing.
+    pub fn speculation_active(&self) -> bool {
+        self.predictor.is_some() && self.prefetch_cfg.issuable()
+    }
+
+    /// Tokens generated since the last drain (session-event seam).
+    pub(crate) fn take_emitted(&mut self) -> Vec<EmittedToken> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Drop undelivered per-token events (the legacy `serve` loop has no
+    /// session layer; without this a long run would retain one entry per
+    /// generated token).
+    pub(crate) fn discard_emitted(&mut self) {
+        self.emitted.clear();
+    }
+
+    /// Slot currently bound to `request_id`, if any.
+    pub(crate) fn slot_of(&self, request_id: u64) -> Option<usize> {
+        self.state
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|q| q.request_id == request_id))
+    }
+
+    /// Release `slot` without recording a completion (session cancel).
+    pub(crate) fn cancel_slot(&mut self, slot: usize) -> Option<ActiveSeq> {
+        self.state.release(slot)
+    }
+
+    /// Policies may pin FP16 experts in GPU HBM at model-load time (the
+    /// MoNDE hot/cold split of Kim et al. 2024); no link charge.
     /// Layer-major order is a stable stand-in for offline hotness ranking.
     fn prewarm(&mut self) -> Result<()> {
-        if !matches!(self.policy_cfg.kind, crate::config::PolicyKind::Monde) {
+        if !self.policy.prewarm_fp16() {
             return Ok(());
         }
         let dims = self.model.manifest.model.clone();
@@ -354,7 +495,8 @@ impl ServeEngine {
 
         // Shared experts (DeepSeek-style): GPU-resident, fp16, every token.
         for s in 0..m.n_shared {
-            let op = self.cost.expert_gpu(active.iter().filter(|&&a| a).count(), Precision::Fp16, 0.0);
+            let n_live = active.iter().filter(|&&a| a).count();
+            let op = self.cost.expert_gpu(n_live, Precision::Fp16, 0.0);
             self.gpu.acquire(router_done, op.seconds);
             self.breakdown.expert_compute_s += op.seconds;
             let y = self.model.run_shared_expert(layer, s, prefill, xn)?;
@@ -365,14 +507,21 @@ impl ServeEngine {
         Ok(moe)
     }
 
-    /// Public planning hook for the scorer/harness (same path as serving).
-    pub fn plan_layer_pub(&self, probs: &[f32], active: &[bool], layer: usize) -> LayerPlan {
+    /// Crate-visible planning seam for the teacher-forced scorer (same
+    /// path as serving; was the `plan_layer_pub` test hook).
+    pub(crate) fn plan_layer_for_scoring(
+        &self,
+        probs: &[f32],
+        active: &[bool],
+        layer: usize,
+    ) -> LayerPlan {
         self.plan_layer(probs, active, layer)
     }
 
-    /// Public MoE execution hook for the scorer (virtual time still
-    /// advances, but scoring runs use a dedicated engine instance).
-    pub fn run_moe_layer_pub(
+    /// Crate-visible MoE execution seam for the scorer (virtual time still
+    /// advances, but scoring runs use a dedicated engine instance; was the
+    /// `run_moe_layer_pub` test hook).
+    pub(crate) fn run_moe_layer_for_scoring(
         &mut self,
         layer: usize,
         xn: &Tensor,
@@ -458,7 +607,15 @@ impl ServeEngine {
                 let next = argmax(row) as i32;
                 seq.tokens.push(next);
                 self.total_generated += 1;
-                if seq.done() {
+                let done = seq.done();
+                self.emitted.push(EmittedToken {
+                    request_id: seq.request_id,
+                    token: next,
+                    index: seq.generated() - 1,
+                    at: now,
+                    last: done,
+                });
+                if done {
                     let seq = self.state.release(slot).unwrap();
                     self.records.push(RequestRecord {
                         id: seq.request_id,
@@ -521,6 +678,13 @@ impl ServeEngine {
         let next = argmax(&logits[slot * m.vocab..(slot + 1) * m.vocab]) as i32;
         seq.tokens.push(next);
         seq.first_token_at = Some(now);
+        self.emitted.push(EmittedToken {
+            request_id: seq.request_id,
+            token: next,
+            index: 0,
+            at: now,
+            last: seq.done(),
+        });
         self.total_generated += 1;
         self.prefills += 1;
         Ok(())
@@ -565,7 +729,9 @@ impl ServeEngine {
             probs,
             active,
         });
-        if !self.prefetch_cfg.enabled() {
+        // A predictor exists (the caller took it out of `self.predictor`)
+        // but the numeric knobs may still forbid issuing.
+        if !self.prefetch_cfg.issuable() {
             return Ok(());
         }
         // Speculate the policy's *bulk* payload only: compensators are
@@ -724,10 +890,12 @@ impl ServeEngine {
     }
 }
 
-pub fn argmax(row: &[f32]) -> usize {
+/// Greedy sampling argmax, first index on ties; `total_cmp` keeps it
+/// panic-free (and deterministic) even on NaN-poisoned logits.
+pub(crate) fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

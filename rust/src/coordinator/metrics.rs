@@ -158,7 +158,7 @@ impl Report {
 
     fn sorted_metric(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
         let mut v: Vec<f64> = self.requests.iter().map(f).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         v
     }
 

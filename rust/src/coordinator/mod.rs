@@ -16,5 +16,5 @@ pub mod metrics;
 pub mod scheduler;
 pub mod state;
 
-pub use engine::ServeEngine;
+pub use engine::{CacheView, EngineStats, ServeEngine};
 pub use metrics::{Report, StepBreakdown};

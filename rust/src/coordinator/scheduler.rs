@@ -5,9 +5,14 @@ use anyhow::Result;
 use crate::coordinator::batcher::{Action, Batcher};
 use crate::coordinator::engine::{argmax, ServeEngine};
 use crate::coordinator::metrics::Report;
-use crate::workload::{DecodeTrace, Request};
+use crate::workload::Request;
 
 /// Serve a workload to completion; returns the run report.
+///
+/// The pre-`Server` entrypoint, kept as the golden reference the session
+/// façade is pinned against (`tests/server_api.rs` proves
+/// `Server::run_to_completion` is byte-identical); new callers should use
+/// [`crate::server::ServerBuilder`].
 pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report> {
     let mut batcher = Batcher::new(requests);
     loop {
@@ -28,24 +33,11 @@ pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report>
             }
             Action::Done => break,
         }
+        // No session layer here: drop per-token events instead of letting
+        // them accumulate for the engine's lifetime.
+        engine.discard_emitted();
     }
     Ok(engine.report())
-}
-
-/// The oracle-replay protocol (DESIGN.md §8): serve `requests` demand-only
-/// on `recorder` (a fresh engine with the same model/policy/testbed) with
-/// trace recording on, then install the recorded routing into `engine`'s
-/// `OracleReplay` predictor.  Decode is deterministic, so the replayed run
-/// routes identically to the recording.
-pub fn record_oracle_trace(
-    engine: &mut ServeEngine,
-    mut recorder: ServeEngine,
-    requests: Vec<Request>,
-) -> Result<()> {
-    recorder.trace = Some(DecodeTrace::default());
-    serve(&mut recorder, requests)?;
-    engine.set_oracle_trace(&recorder.trace.take().unwrap());
-    Ok(())
 }
 
 /// Teacher-forced scoring of one sequence through the *serving* numerics
@@ -55,25 +47,25 @@ pub fn record_oracle_trace(
 /// This is what pins the rust path against `python/compile/eval.py` and
 /// regenerates Fig. 6 / Fig. 8 / Table 2 without python.
 pub fn score_sequence(engine: &mut ServeEngine, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
-    let m = engine.model.manifest.model.clone();
+    let m = engine.model().manifest.model.clone();
     let len = tokens.len().min(m.t_prefill);
     let mut toks = tokens[..len].to_vec();
     toks.resize(m.t_prefill, 0);
     let active: Vec<bool> = (0..m.t_prefill).map(|i| i < len).collect();
 
-    let mut x = engine.model.embed(&toks, true)?;
+    let mut x = engine.model().embed(&toks, true)?;
     for layer in 0..m.n_layers {
-        let (x2, _kc, _vc) = engine.model.attn_prefill(layer, &x)?;
-        let (xn, probs) = engine.model.router(layer, &x2, true)?;
-        let plan = engine.plan_layer_pub(&probs, &active, layer);
-        let moe = engine.run_moe_layer_pub(layer, &xn, &plan, &active, true)?;
+        let (x2, _kc, _vc) = engine.model().attn_prefill(layer, &x)?;
+        let (xn, probs) = engine.model().router(layer, &x2, true)?;
+        let plan = engine.plan_layer_for_scoring(&probs, &active, layer);
+        let moe = engine.run_moe_layer_for_scoring(layer, &xn, &plan, &active, true)?;
         let mut xh = x2.to_f32_vec()?;
         for (a, b) in xh.iter_mut().zip(&moe) {
             *a += b;
         }
-        x = engine.model.make_x(m.t_prefill, &xh)?;
+        x = engine.model().make_x(m.t_prefill, &xh)?;
     }
-    let logits = engine.model.head_prefill(&x)?;
+    let logits = engine.model().head_prefill(&x)?;
     Ok(logits
         .chunks(m.vocab)
         .take(len)

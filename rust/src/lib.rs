@@ -21,13 +21,19 @@
 //! * [`sim`]        — virtual clock + H100/NDP roofline cost model
 //! * [`offload`]    — memory tiers, link simulator, expert LRU cache,
 //!   speculative prefetch queue, NDP
+//! * [`registry`]   — the shared name → constructor table (aliases,
+//!   sorted listings) behind both open registries (DESIGN.md §9)
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
-//!   **BEAM** (router-guided top-n compensation — the paper)
+//!   **BEAM** (router-guided top-n compensation — the paper), dispatched
+//!   through the open name → constructor `PolicyRegistry`
 //! * [`predict`]    — router-guided expert predictors driving speculative
-//!   prefetch (EWMA / gate lookahead / oracle replay)
+//!   prefetch (EWMA / gate lookahead / oracle replay), dispatched through
+//!   the open `PredictorRegistry`
 //! * [`coordinator`]— continuous batcher, prefill/decode scheduler, KV state,
 //!   serving engine, metrics
 //! * [`workload`]   — request generators and traces
+//! * [`server`]     — the public serving surface: `ServerBuilder` →
+//!   `Server` → per-request `Session` token-event streams (DESIGN.md §9)
 //! * [`harness`]    — table/figure regeneration drivers (`rust/EXPERIMENTS.md`)
 
 pub mod backend;
@@ -40,16 +46,19 @@ pub mod offload;
 pub mod policies;
 pub mod predict;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod synth;
 pub mod workload;
 
 pub use backend::{default_backend, Backend, ReferenceBackend, Tensor};
-pub use config::{ModelDims, PolicyKind, Precision, PredictorKind, PrefetchConfig, SystemConfig};
+pub use config::{ModelDims, PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 pub use coordinator::engine::ServeEngine;
 pub use manifest::{Manifest, WeightStore};
 pub use runtime::StagedModel;
+pub use server::{Server, ServerBuilder, Session, SessionId, SessionStatus, TokenEvent};
 
 #[cfg(feature = "pjrt")]
 pub use runtime::engine::Engine;

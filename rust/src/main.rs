@@ -3,14 +3,19 @@
 //! ```text
 //! beam serve  --model mixtral-tiny --policy beam --bits 2 [--ndp]
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
-//!             [--prefetch off|ewma|gate|oracle] [--prefetch-budget BYTES]
-//!             [--lookahead N]
+//!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
+//!             [--lookahead N] [--max-pending N]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
 //! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|all>
 //!             [--out DIR] [--full]
 //! beam info   --model mixtral-tiny
 //! ```
+//!
+//! `--policy` and `--prefetch` resolve through the open policy/predictor
+//! registries (DESIGN.md §9): `beam serve --policy biglittle` works even
+//! though no enum in `config.rs` lists it, and an unknown name fails with
+//! the sorted registered-name list.
 //!
 //! Every command accepts `--backend default|ref|pjrt` (`pjrt` needs the
 //! crate built with `--features pjrt`); the default is the reference
@@ -20,20 +25,17 @@
 //! (Arg parsing is in-tree: the offline build vendors no clap — Cargo.toml.)
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use beam_moe::config::{
-    PolicyConfig, PolicyKind, PredictorKind, PrefetchConfig, SystemConfig,
-};
-use beam_moe::coordinator::scheduler::{record_oracle_trace, serve};
-use beam_moe::coordinator::ServeEngine;
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
 use beam_moe::harness::figures::{self, Harness};
 use beam_moe::manifest::Manifest;
 use beam_moe::offload::MemoryTiers;
 use beam_moe::runtime::StagedModel;
-use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+use beam_moe::server::{Server, ServerBuilder, SubmitError};
+use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
 
 const USAGE: &str = "usage: beam <serve|eval|figure|info> [--flags]  (see rust/src/main.rs docs)";
 
@@ -90,11 +92,12 @@ impl Args {
     }
 }
 
+/// `--policy NAME` resolves through the policy registry at build time;
+/// a bad name fails with the registered-name list.
 fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
-    let kind: PolicyKind = args.get("policy", "beam").parse()?;
     let bits: u8 = args.num("bits", 2u8)?;
     let top_n: usize = args.num("top-n", manifest.model.top_n)?;
-    let mut p = PolicyConfig::new(kind, bits, top_n);
+    let mut p = PolicyConfig::new(&args.get("policy", "beam"), bits, top_n);
     p.comp_tag = args.get("comp-tag", "default");
     p.method = args.get("method", "hqq");
     if let Some(pos) = args.opt("positions") {
@@ -107,34 +110,69 @@ fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
     Ok(p)
 }
 
-/// `--prefetch off|ewma|gate|oracle`, `--prefetch-budget BYTES` (default:
-/// one decode step's worth of bulk payloads), `--lookahead N`.
-fn prefetch_config(args: &Args, manifest: &Manifest, policy: &PolicyConfig) -> Result<PrefetchConfig> {
-    let kind: PredictorKind = args.get("prefetch", "off").parse()?;
+/// `--prefetch NAME` (predictor registry), `--prefetch-budget BYTES`
+/// (default: one decode step's worth of bulk payloads), `--lookahead N`.
+fn prefetch_config(
+    args: &Args,
+    manifest: &Manifest,
+    policy: &PolicyConfig,
+) -> Result<PrefetchConfig> {
+    let name = args.get("prefetch", "off");
     let lookahead: usize = args.num("lookahead", 1usize)?;
-    let bulk = beam_moe::policies::bulk_expert_bytes(manifest, policy);
+    let bulk = beam_moe::policies::bulk_expert_bytes(manifest, policy)?;
     let default_budget = manifest.model.top_k * manifest.model.n_layers * bulk;
     let budget: usize = args.num("prefetch-budget", default_budget)?;
-    Ok(PrefetchConfig::new(kind, lookahead, budget))
+    Ok(PrefetchConfig::new(&name, lookahead, budget))
 }
 
 fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
     if args.has("raw-system") {
-        if args.has("ndp") { SystemConfig::gpu_ndp() } else { SystemConfig::gpu_only() }
+        if args.has("ndp") {
+            SystemConfig::gpu_ndp()
+        } else {
+            SystemConfig::gpu_only()
+        }
     } else {
         SystemConfig::scaled_for(&manifest.model, args.has("ndp"))
     }
 }
 
-fn load_engine(artifacts: &PathBuf, args: &Args) -> Result<ServeEngine> {
+fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> {
     let model_name = args.get("model", "mixtral-tiny");
     let manifest = Manifest::load(artifacts.join(&model_name))?;
     let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
     let policy = policy_config(args, &manifest)?;
-    let prefetch = prefetch_config(args, &manifest, &policy)?;
+    let prefetch_cfg = if prefetch {
+        prefetch_config(args, &manifest, &policy)?
+    } else {
+        PrefetchConfig::off()
+    };
     let model = StagedModel::load(backend, manifest)?;
     let sys = system(args, &model.manifest);
-    ServeEngine::with_prefetch(model, policy, sys, prefetch)
+    ServerBuilder::new(model)
+        .policy(policy)
+        .system(sys)
+        .prefetch(prefetch_cfg)
+        .max_pending(args.num("max-pending", usize::MAX)?)
+        .build()
+}
+
+/// Submit a batch respecting admission control: when `--max-pending`
+/// backpressures, drive the event loop until the queue drains enough to
+/// retry — the streaming-client pattern the session API expects.
+fn submit_all(server: &mut Server, reqs: &[Request]) -> Result<()> {
+    for req in reqs {
+        loop {
+            match server.submit(req.clone()) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure { .. }) => {
+                    server.tick()?;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -147,7 +185,7 @@ fn main() -> Result<()> {
 
     match argv[0].as_str() {
         "serve" => {
-            let mut engine = load_engine(&artifacts, &args)?;
+            let mut server = load_server(&artifacts, &args, true)?;
             let wl = WorkloadConfig {
                 n_requests: args.num("requests", 8usize)?,
                 prompt_len: args.num("prompt-len", 256usize)?,
@@ -156,24 +194,23 @@ fn main() -> Result<()> {
                 seed: args.num("seed", 0xBEA4u64)?,
             };
             let eval_store =
-                beam_moe::manifest::WeightStore::load(engine.model.manifest.eval_path())?;
+                beam_moe::manifest::WeightStore::load(server.model().manifest.eval_path())?;
             let reqs = WorkloadGen::generate(&wl, &eval_store)?;
-            if matches!(engine.prefetch_cfg.predictor, PredictorKind::OracleReplay) {
-                // The oracle replays a demand-only recording of the same
-                // (deterministic) workload on an identical fresh engine.
-                let model_name = args.get("model", "mixtral-tiny");
-                let manifest = Manifest::load(artifacts.join(&model_name))?;
-                let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
-                let policy = policy_config(&args, &manifest)?;
-                let model = StagedModel::load(backend, manifest)?;
-                let sys = system(&args, &model.manifest);
-                let recorder = ServeEngine::new(model, policy, sys)?;
-                record_oracle_trace(&mut engine, recorder, reqs.clone())?;
+            if server.needs_recorded_trace() {
+                // Trace-replaying predictors (oracle) replay a demand-only
+                // recording of the same (deterministic) workload on an
+                // identical fresh server.
+                let mut recorder = load_server(&artifacts, &args, false)?;
+                recorder.record_trace();
+                submit_all(&mut recorder, &reqs)?;
+                recorder.run_to_completion()?;
+                server.install_oracle_trace(&recorder.take_trace()?);
             }
-            let report = serve(&mut engine, reqs)?;
+            submit_all(&mut server, &reqs)?;
+            let report = server.run_to_completion()?;
             println!("{}", report.summary_line());
             println!("  tails: {}", report.tail_line());
-            if engine.prefetch_cfg.enabled() {
+            if server.speculation_active() {
                 println!(
                     "  prefetch: {} | decode weight-stall {:.4}s",
                     report.prefetch.summary(),
@@ -206,7 +243,8 @@ fn main() -> Result<()> {
             let manifest = Manifest::load(artifacts.join(&model_name))?;
             let cfg = policy_config(&args, &manifest)?;
             let seqs: usize = args.num("seqs", 32usize)?;
-            let label = format!("{:?}-{}bit", cfg.kind, cfg.bits);
+            let policy_name = beam_moe::policies::resolve_policy(&cfg.policy)?;
+            let label = format!("{policy_name}-{}bit", cfg.bits);
             let (ppl, acc) = h.score_variant(&model_name, cfg, seqs)?;
             println!("{model_name} {label}: ppl={ppl:.3} cloze_acc={:.2}%", acc * 100.0);
             Ok(())
@@ -238,6 +276,8 @@ fn main() -> Result<()> {
                 manifest.q_expert_bytes(3),
                 manifest.q_expert_bytes(2),
             );
+            println!("policies: {}", beam_moe::policies::registered_policies().join(", "));
+            println!("predictors: {}", beam_moe::predict::registered_predictors().join(", "));
             Ok(())
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),

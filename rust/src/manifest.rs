@@ -96,7 +96,10 @@ impl Manifest {
                 name.clone(),
                 StageEntry {
                     file: entry.get("file")?.str()?.to_string(),
-                    n_inputs: entry.opt("inputs").map(|i| i.arr().map(|a| a.len()).unwrap_or(0)).unwrap_or(0),
+                    n_inputs: entry
+                        .opt("inputs")
+                        .map(|i| i.arr().map(|a| a.len()).unwrap_or(0))
+                        .unwrap_or(0),
                 },
             );
         }

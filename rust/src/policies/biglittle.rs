@@ -1,0 +1,93 @@
+//! Registry-only demo policy: big/little expert switching.
+//!
+//! MoBiLE (2025) serves each token's *dominant* expert at full fidelity
+//! ("big") and the rest from cheap low-bit replicas ("little").  Modeled
+//! here with the rank signal the planner already carries: rank-0 rows run
+//! the FP16 payload, lower-ranked rows the `bits` replica.
+//!
+//! This policy is deliberately **absent from `config.rs`** — it exists to
+//! prove the open `PolicyRegistry` extension contract (DESIGN.md §9): a
+//! strategy becomes servable end-to-end (CLI `--policy biglittle`,
+//! `ServerBuilder`, harness) through registration alone.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct BigLittlePolicy {
+    /// Precision of the "little" replica lower-ranked rows use.
+    pub bits: u8,
+}
+
+impl Policy for BigLittlePolicy {
+    fn name(&self) -> &'static str {
+        "biglittle"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let (big, little): (Vec<_>, Vec<_>) = tokens.into_iter().partition(|t| t.rank == 0);
+            if !big.is_empty() {
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::Fp16,
+                    location: Location::Gpu,
+                    tokens: big,
+                });
+            }
+            if !little.is_empty() {
+                plan.execs.push(ExpertExec {
+                    expert,
+                    precision: Precision::Int(self.bits),
+                    location: Location::Gpu,
+                    tokens: little,
+                });
+            }
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank0_goes_big_rest_little() {
+        // Row 0: top-1 = expert 0; row 1: top-1 = expert 1, top-2 = expert 0.
+        let probs = vec![0.7f32, 0.2, 0.1, 0.3, 0.6, 0.1];
+        let active = vec![true, true];
+        let cached = |_: usize| false;
+        let ctx = PlanCtx {
+            probs: &probs,
+            n_tokens: 2,
+            n_experts: 3,
+            top_k: 2,
+            active: &active,
+            ndp: false,
+            fp16_cached: &cached,
+            predicted: None,
+        };
+        let plan = BigLittlePolicy { bits: 2 }.plan(&ctx);
+        assert_eq!(plan.assignments(), 4);
+        for e in &plan.execs {
+            for t in &e.tokens {
+                if t.rank == 0 {
+                    assert_eq!(e.precision, Precision::Fp16);
+                } else {
+                    assert_eq!(e.precision, Precision::Int(2));
+                }
+            }
+        }
+        // Expert 0 is split: big rows for token 0, little rows for token 1.
+        let e0: Vec<_> = plan.execs.iter().filter(|e| e.expert == 0).collect();
+        assert_eq!(e0.len(), 2);
+    }
+}

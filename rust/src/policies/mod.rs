@@ -10,54 +10,48 @@
 //!
 //! | policy            | reference                         | behaviour |
 //! |-------------------|-----------------------------------|-----------|
-//! | `MixtralOffload`  | Eliseev & Mazur 2023              | FP16 fetch on demand, LRU cache |
-//! | `StaticQuant`     | HQQ/GPTQ applied uniformly        | low-bit fetch, no compensation |
-//! | `Hobbit`          | Tang et al. 2024                  | mixed precision by router score |
-//! | `Monde`           | Kim et al. 2024                   | cold experts execute on NDP (fp16) |
-//! | `Beam`            | **this paper**                    | low-bit + router-guided top-n low-rank restore; non-restored experts run near-data when NDP exists |
+//! | `mixtral-offload` | Eliseev & Mazur 2023              | FP16 fetch on demand, LRU cache |
+//! | `static-quant`    | HQQ/GPTQ applied uniformly        | low-bit fetch, no compensation |
+//! | `hobbit`          | Tang et al. 2024                  | mixed precision by router score |
+//! | `monde`           | Kim et al. 2024                   | cold experts execute on NDP (fp16) |
+//! | `beam`            | **this paper**                    | low-bit + router-guided top-n low-rank restore; non-restored experts run near-data when NDP exists |
+//! | `biglittle`       | MoBiLE-style demo                 | rank-0 rows FP16, rest low-bit — registered in `registry.rs` only |
+//!
+//! Dispatch is an open **name → constructor registry** ([`registry`],
+//! DESIGN.md §9): new strategies register at runtime instead of editing a
+//! `PolicyKind` enum in `config.rs`.
 
 pub mod plan;
+pub mod registry;
 
 mod beam;
+mod biglittle;
 mod hobbit;
 mod mixtral_offload;
 mod monde;
 mod static_quant;
 
 pub use beam::BeamPolicy;
+pub use biglittle::BigLittlePolicy;
 pub use hobbit::HobbitPolicy;
 pub use mixtral_offload::MixtralOffloadPolicy;
 pub use monde::MondePolicy;
 pub use plan::{topk_renorm, ExpertExec, LayerPlan, Location, PlanCtx, Policy, TokenAssign};
+pub use registry::{
+    make_policy, register_policy, registered_policies, resolve_policy, PolicyCtor, PolicyRegistry,
+};
 pub use static_quant::StaticQuantPolicy;
 
-use crate::config::{PolicyConfig, PolicyKind, Precision};
+use crate::config::{PolicyConfig, Precision};
 use crate::manifest::Manifest;
 
 /// Wire bytes of the *bulk* expert payload a policy moves per expert —
 /// the unit prefetch budgets are denominated in.  Derived from the same
 /// `Policy::bulk_precision` the engine speculates with, so budget math
 /// can never drift from what actually crosses the link (DESIGN.md §8).
-pub fn bulk_expert_bytes(manifest: &Manifest, cfg: &PolicyConfig) -> usize {
-    match make_policy(cfg).bulk_precision() {
+pub fn bulk_expert_bytes(manifest: &Manifest, cfg: &PolicyConfig) -> anyhow::Result<usize> {
+    Ok(match make_policy(cfg)?.bulk_precision() {
         Precision::Fp16 => manifest.transfer.fp16_expert_bytes,
         Precision::Int(b) | Precision::IntComp(b) => manifest.q_expert_bytes(b),
-    }
-}
-
-/// Instantiate a policy from its config.
-pub fn make_policy(cfg: &PolicyConfig) -> Box<dyn Policy> {
-    match cfg.kind {
-        PolicyKind::MixtralOffload => Box::new(MixtralOffloadPolicy),
-        PolicyKind::StaticQuant => Box::new(StaticQuantPolicy { bits: cfg.bits }),
-        PolicyKind::Hobbit => Box::new(HobbitPolicy {
-            hi_threshold: cfg.hobbit_hi_threshold,
-            lo_bits: cfg.hobbit_lo_bits,
-        }),
-        PolicyKind::Monde => Box::new(MondePolicy),
-        PolicyKind::Beam => Box::new(BeamPolicy {
-            bits: cfg.bits,
-            positions: cfg.positions(),
-        }),
-    }
+    })
 }

@@ -37,6 +37,10 @@ impl Policy for MondePolicy {
     fn bulk_precision(&self) -> Precision {
         Precision::Fp16
     }
+
+    fn prewarm_fp16(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -81,7 +81,10 @@ pub struct PlanCtx<'a> {
 pub fn topk_renorm(row: &[f32], k: usize) -> Vec<(usize, f32, usize)> {
     let mut idx: Vec<usize> = (0..row.len()).collect();
     // Descending by prob; ascending index on ties (jax.lax.top_k order).
-    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    // `total_cmp` keeps the sort total even if a poisoned upstream stage
+    // feeds NaN probabilities — the old `partial_cmp().unwrap()` panicked
+    // the whole serve loop on the first NaN.
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
     let chosen = &idx[..k.min(idx.len())];
     let total: f32 = chosen.iter().map(|&e| row[e]).sum();
     chosen
@@ -102,6 +105,14 @@ pub trait Policy: Send + Sync {
     /// Precision of the *bulk* expert payload this policy moves (drives
     /// roofline plots; HOBBIT reports its low-bit tier).
     fn bulk_precision(&self) -> Precision;
+
+    /// Should the engine statically pin FP16 experts into the GPU cache at
+    /// model-load time (MoNDE's offline hot/cold split)?  Lives on the
+    /// policy — not on a config enum — so registry-registered strategies
+    /// can opt in too.
+    fn prewarm_fp16(&self) -> bool {
+        false
+    }
 }
 
 /// Group per-token top-k selections by expert — the dispatch step shared

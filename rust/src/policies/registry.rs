@@ -1,0 +1,199 @@
+//! Open policy registry: name → constructor (DESIGN.md §9).
+//!
+//! Replaces the closed `PolicyKind` enum: a placement/precision strategy
+//! becomes servable by registering a constructor under a name — no edits
+//! to `config.rs`, the engine, or the CLI.  `ServerBuilder`, the `beam`
+//! CLI and the harness all resolve policies here, so a policy registered
+//! from *anywhere* (another module, a test, a downstream crate) is
+//! selectable end-to-end by name.  The registry ships the five paper
+//! policies plus `biglittle`, a registry-only demo proving the extension
+//! point (see `policies/biglittle.rs`).  The table mechanics (aliases,
+//! sorted listings, the unknown-name error) are shared with the predictor
+//! registry via [`crate::registry::NameTable`].
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::Result;
+
+use crate::config::PolicyConfig;
+use crate::policies::plan::Policy;
+use crate::policies::{
+    BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
+    StaticQuantPolicy,
+};
+use crate::registry::NameTable;
+
+/// Constructs a policy from the shared knob set.  Constructors may reject
+/// a config (bad bits, missing knob) with a contextful error.
+pub type PolicyCtor = Arc<dyn Fn(&PolicyConfig) -> Result<Box<dyn Policy>> + Send + Sync>;
+
+/// A name → constructor table for policies, with alias support.
+#[derive(Clone)]
+pub struct PolicyRegistry {
+    table: NameTable<PolicyCtor>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (tests compose their own; serving code uses the
+    /// process-wide one via [`make_policy`]).
+    pub fn empty() -> Self {
+        PolicyRegistry { table: NameTable::new("policy") }
+    }
+
+    /// The registry with every built-in policy registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("mixtral-offload", |_| Ok(Box::new(MixtralOffloadPolicy)));
+        r.alias("mixtral-offloading", "mixtral-offload");
+        r.alias("fp16", "mixtral-offload");
+        r.register("static-quant", |cfg| Ok(Box::new(StaticQuantPolicy { bits: cfg.bits })));
+        r.alias("quant", "static-quant");
+        r.register("hobbit", |cfg| {
+            Ok(Box::new(HobbitPolicy {
+                hi_threshold: cfg.hobbit_hi_threshold,
+                lo_bits: cfg.hobbit_lo_bits,
+            }))
+        });
+        r.register("monde", |_| Ok(Box::new(MondePolicy)));
+        r.register("beam", |cfg| {
+            Ok(Box::new(BeamPolicy { bits: cfg.bits, positions: cfg.positions() }))
+        });
+        r.alias("ours", "beam");
+        // Registry-only demo (NOT listed in config.rs): proves strategies
+        // plug in by registration alone.
+        r.register("biglittle", |cfg| Ok(Box::new(BigLittlePolicy { bits: cfg.bits })));
+        r
+    }
+
+    /// Register `name`; a later registration under the same name wins.
+    pub fn register<F>(&mut self, name: &str, ctor: F)
+    where
+        F: Fn(&PolicyConfig) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+    {
+        self.table.register(name, Arc::new(ctor));
+    }
+
+    /// Register `alias` as another name for `canonical`.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.table.alias(alias, canonical);
+    }
+
+    /// Canonical names, sorted (CLI help and error messages).
+    pub fn names(&self) -> Vec<String> {
+        self.table.names()
+    }
+
+    /// Resolve a (possibly aliased) name to its canonical form; unknown
+    /// names fail with the registered-name list.
+    pub fn resolve(&self, name: &str) -> Result<String> {
+        self.table.resolve(name)
+    }
+
+    /// Clone out the constructor for a (possibly aliased) name.
+    pub fn ctor(&self, name: &str) -> Result<PolicyCtor> {
+        self.table.ctor(name)
+    }
+
+    /// Instantiate the policy `cfg.policy` names.
+    pub fn create(&self, cfg: &PolicyConfig) -> Result<Box<dyn Policy>> {
+        (self.ctor(&cfg.policy)?)(cfg)
+    }
+}
+
+/// The process-wide registry every resolution path consults (engine,
+/// `ServerBuilder`, CLI, harness).  Seeded with the built-ins on first
+/// touch; [`register_policy`] extends it at runtime.
+fn global() -> &'static RwLock<PolicyRegistry> {
+    static REG: OnceLock<RwLock<PolicyRegistry>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(PolicyRegistry::builtin()))
+}
+
+/// Register a policy in the process-wide registry.
+pub fn register_policy<F>(name: &str, ctor: F)
+where
+    F: Fn(&PolicyConfig) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+{
+    global().write().expect("policy registry poisoned").register(name, ctor);
+}
+
+/// Sorted canonical names currently registered process-wide.
+pub fn registered_policies() -> Vec<String> {
+    global().read().expect("policy registry poisoned").names()
+}
+
+/// Resolve a name against the process-wide registry (validation seam for
+/// `ServerBuilder::build` and the CLI).
+pub fn resolve_policy(name: &str) -> Result<String> {
+    global().read().expect("policy registry poisoned").resolve(name)
+}
+
+/// Instantiate `cfg.policy` from the process-wide registry.  The ctor is
+/// cloned out and the lock released *before* it runs, so a constructor
+/// may itself call [`register_policy`] without deadlocking (and a
+/// panicking constructor cannot poison the registry).
+pub fn make_policy(cfg: &PolicyConfig) -> Result<Box<dyn Policy>> {
+    let ctor = global().read().expect("policy registry poisoned").ctor(&cfg.policy)?;
+    ctor(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_are_sorted_and_complete() {
+        let names = PolicyRegistry::builtin().names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        let expected = ["beam", "biglittle", "hobbit", "mixtral-offload", "monde", "static-quant"];
+        for name in expected {
+            assert!(names.contains(&name.to_string()), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        let r = PolicyRegistry::builtin();
+        assert_eq!(r.resolve("ours").unwrap(), "beam");
+        assert_eq!(r.resolve("fp16").unwrap(), "mixtral-offload");
+        assert_eq!(r.resolve("beam").unwrap(), "beam");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let err = PolicyRegistry::builtin().resolve("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown policy `nope`"), "{err}");
+        assert!(err.contains("beam") && err.contains("static-quant"), "{err}");
+    }
+
+    #[test]
+    fn create_dispatches_config_knobs() {
+        let r = PolicyRegistry::builtin();
+        let cfg = PolicyConfig::new("static-quant", 3, 0);
+        let p = r.create(&cfg).unwrap();
+        assert_eq!(p.name(), "static-quant");
+        assert_eq!(p.bulk_precision(), crate::config::Precision::Int(3));
+    }
+
+    #[test]
+    fn runtime_registration_shadows_and_extends() {
+        let mut r = PolicyRegistry::builtin();
+        r.register("custom-fp16", |_| Ok(Box::new(MixtralOffloadPolicy)));
+        let cfg = PolicyConfig::new("custom-fp16", 16, 0);
+        assert_eq!(r.create(&cfg).unwrap().name(), "mixtral-offloading");
+    }
+
+    #[test]
+    fn reentrant_registration_from_a_ctor_does_not_deadlock() {
+        // A constructor that registers a helper policy while it runs: the
+        // global make_policy path must have released its lock by then.
+        register_policy("reentrant-outer", |_| {
+            register_policy("reentrant-inner", |_| Ok(Box::new(MixtralOffloadPolicy)));
+            Ok(Box::new(MondePolicy))
+        });
+        let p = make_policy(&PolicyConfig::new("reentrant-outer", 16, 0)).unwrap();
+        assert_eq!(p.name(), "monde");
+        assert!(registered_policies().contains(&"reentrant-inner".to_string()));
+    }
+}

@@ -24,12 +24,17 @@
 pub mod ewma;
 pub mod lookahead;
 pub mod oracle;
+pub mod registry;
 
 pub use ewma::EwmaPopularity;
 pub use lookahead::GateLookahead;
 pub use oracle::OracleReplay;
+pub use registry::{
+    make_predictor, register_predictor, registered_predictors, resolve_predictor, PredictorCtor,
+    PredictorRegistry, PredictorSpec,
+};
 
-use crate::config::PredictorKind;
+use crate::workload::DecodeTrace;
 
 /// One expert's predicted demand for an upcoming layer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -78,6 +83,16 @@ pub trait ExpertPredictor: Send {
         false
     }
 
+    /// Does this predictor replay a pre-recorded [`DecodeTrace`]?  When
+    /// true, the serving layer records a demand-only pass of the workload
+    /// first and hands the trace over via [`ExpertPredictor::install_trace`].
+    fn wants_trace(&self) -> bool {
+        false
+    }
+
+    /// Install a recorded trace (no-op for predictors that learn online).
+    fn install_trace(&mut self, _trace: &DecodeTrace) {}
+
     /// Feed the routing outcome of the layer that just planned.
     fn observe(&mut self, obs: &LayerObservation);
 
@@ -85,22 +100,6 @@ pub trait ExpertPredictor: Send {
     /// Only experts with nonzero evidence are returned — at most
     /// `n_active × top_k` entries for the EWMA/lookahead predictors.
     fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert>;
-}
-
-/// Instantiate a predictor (`None` for [`PredictorKind::Off`]).  An
-/// [`OracleReplay`] starts empty — install its trace via
-/// `ServeEngine::set_oracle_trace`.
-pub fn make_predictor(
-    kind: PredictorKind,
-    n_layers: usize,
-    n_experts: usize,
-) -> Option<Box<dyn ExpertPredictor>> {
-    match kind {
-        PredictorKind::Off => None,
-        PredictorKind::Ewma => Some(Box::new(EwmaPopularity::new(n_layers, n_experts, 0.25))),
-        PredictorKind::GateLookahead => Some(Box::new(GateLookahead)),
-        PredictorKind::OracleReplay => Some(Box::new(OracleReplay::empty())),
-    }
 }
 
 /// Rank a dense score table descending, dropping zero-evidence experts and
@@ -112,8 +111,9 @@ pub(crate) fn rank_scores(scores: &[f64], cap: usize) -> Vec<PredictedExpert> {
         .filter(|(_, s)| **s > 0.0)
         .map(|(expert, &score)| PredictedExpert { expert, score })
         .collect();
-    // Descending score; ascending expert index on ties (deterministic).
-    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.expert.cmp(&b.expert)));
+    // Descending score; ascending expert index on ties (deterministic;
+    // `total_cmp` so a NaN score can never panic the serve loop).
+    out.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.expert.cmp(&b.expert)));
     out.truncate(cap);
     out
 }
@@ -139,7 +139,7 @@ mod tests {
 
     #[test]
     fn make_predictor_off_is_none() {
-        assert!(make_predictor(PredictorKind::Off, 2, 4).is_none());
-        assert!(make_predictor(PredictorKind::Ewma, 2, 4).is_some());
+        assert!(make_predictor("off", 2, 4).unwrap().is_none());
+        assert!(make_predictor("ewma", 2, 4).unwrap().is_some());
     }
 }

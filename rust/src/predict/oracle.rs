@@ -48,6 +48,14 @@ impl ExpertPredictor for OracleReplay {
         "oracle-replay"
     }
 
+    fn wants_trace(&self) -> bool {
+        true
+    }
+
+    fn install_trace(&mut self, trace: &DecodeTrace) {
+        *self = OracleReplay::from_trace(trace);
+    }
+
     fn observe(&mut self, _obs: &LayerObservation) {}
 
     fn predict(&self, ctx: &PredictCtx) -> Vec<PredictedExpert> {

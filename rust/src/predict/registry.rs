@@ -1,0 +1,164 @@
+//! Open predictor registry: name → constructor (DESIGN.md §9).
+//!
+//! Replaces the closed `PredictorKind` enum: a lookahead strategy becomes
+//! usable by registering a constructor under a name — no edits to
+//! `config.rs`, the engine, or the CLI.  `"off"` (and its alias `"none"`)
+//! is a first-class registration that constructs *no* predictor, so
+//! demand-only serving resolves through the same path.  The table
+//! mechanics (aliases, sorted listings, the unknown-name error) are
+//! shared with the policy registry via [`crate::registry::NameTable`].
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::Result;
+
+use crate::predict::{EwmaPopularity, ExpertPredictor, GateLookahead, OracleReplay};
+use crate::registry::NameTable;
+
+/// Model shape a predictor constructor may size its state from.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictorSpec {
+    pub n_layers: usize,
+    pub n_experts: usize,
+}
+
+/// Constructs a predictor; `None` means "prediction off".
+pub type PredictorCtor =
+    Arc<dyn Fn(&PredictorSpec) -> Option<Box<dyn ExpertPredictor>> + Send + Sync>;
+
+/// A name → constructor table for predictors, with alias support.
+#[derive(Clone)]
+pub struct PredictorRegistry {
+    table: NameTable<PredictorCtor>,
+}
+
+impl PredictorRegistry {
+    pub fn empty() -> Self {
+        PredictorRegistry { table: NameTable::new("predictor") }
+    }
+
+    /// The registry with every built-in predictor registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("off", |_| None);
+        r.alias("none", "off");
+        r.register("ewma", |spec| {
+            Some(Box::new(EwmaPopularity::new(spec.n_layers, spec.n_experts, 0.25)))
+        });
+        r.register("gate", |_| Some(Box::new(GateLookahead)));
+        r.alias("gate-lookahead", "gate");
+        r.alias("lookahead", "gate");
+        r.register("oracle", |_| Some(Box::new(OracleReplay::empty())));
+        r.alias("oracle-replay", "oracle");
+        r
+    }
+
+    /// Register `name`; a later registration under the same name wins.
+    pub fn register<F>(&mut self, name: &str, ctor: F)
+    where
+        F: Fn(&PredictorSpec) -> Option<Box<dyn ExpertPredictor>> + Send + Sync + 'static,
+    {
+        self.table.register(name, Arc::new(ctor));
+    }
+
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.table.alias(alias, canonical);
+    }
+
+    /// Canonical names, sorted (CLI help and error messages).
+    pub fn names(&self) -> Vec<String> {
+        self.table.names()
+    }
+
+    /// Resolve a (possibly aliased) name to its canonical form; unknown
+    /// names fail with the registered-name list.
+    pub fn resolve(&self, name: &str) -> Result<String> {
+        self.table.resolve(name)
+    }
+
+    /// Clone out the constructor for a (possibly aliased) name.
+    pub fn ctor(&self, name: &str) -> Result<PredictorCtor> {
+        self.table.ctor(name)
+    }
+
+    /// Instantiate the predictor `name` (`Ok(None)` = prediction off).
+    pub fn create(
+        &self,
+        name: &str,
+        spec: &PredictorSpec,
+    ) -> Result<Option<Box<dyn ExpertPredictor>>> {
+        Ok((self.ctor(name)?)(spec))
+    }
+}
+
+fn global() -> &'static RwLock<PredictorRegistry> {
+    static REG: OnceLock<RwLock<PredictorRegistry>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(PredictorRegistry::builtin()))
+}
+
+/// Register a predictor in the process-wide registry.
+pub fn register_predictor<F>(name: &str, ctor: F)
+where
+    F: Fn(&PredictorSpec) -> Option<Box<dyn ExpertPredictor>> + Send + Sync + 'static,
+{
+    global().write().expect("predictor registry poisoned").register(name, ctor);
+}
+
+/// Sorted canonical names currently registered process-wide.
+pub fn registered_predictors() -> Vec<String> {
+    global().read().expect("predictor registry poisoned").names()
+}
+
+/// Resolve a name against the process-wide registry (validation seam for
+/// `ServerBuilder::build` and the CLI).
+pub fn resolve_predictor(name: &str) -> Result<String> {
+    global().read().expect("predictor registry poisoned").resolve(name)
+}
+
+/// Instantiate `name` from the process-wide registry (`Ok(None)` = off).
+/// The ctor is cloned out and the lock released *before* it runs, so a
+/// constructor may itself call [`register_predictor`] without
+/// deadlocking.
+pub fn make_predictor(
+    name: &str,
+    n_layers: usize,
+    n_experts: usize,
+) -> Result<Option<Box<dyn ExpertPredictor>>> {
+    let spec = PredictorSpec { n_layers, n_experts };
+    let ctor = global().read().expect("predictor registry poisoned").ctor(name)?;
+    Ok(ctor(&spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_and_none_construct_nothing() {
+        assert!(make_predictor("off", 2, 4).unwrap().is_none());
+        assert!(make_predictor("none", 2, 4).unwrap().is_none());
+        assert!(make_predictor("ewma", 2, 4).unwrap().is_some());
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        let r = PredictorRegistry::builtin();
+        assert_eq!(r.resolve("gate-lookahead").unwrap(), "gate");
+        assert_eq!(r.resolve("oracle-replay").unwrap(), "oracle");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let err = make_predictor("nope", 1, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown predictor `nope`"), "{err}");
+        assert!(err.contains("ewma") && err.contains("oracle"), "{err}");
+    }
+
+    #[test]
+    fn constructed_predictors_report_their_names() {
+        let gate = make_predictor("gate", 1, 4).unwrap().unwrap();
+        assert_eq!(gate.name(), "gate-lookahead");
+        let oracle = make_predictor("oracle", 1, 4).unwrap().unwrap();
+        assert!(oracle.wants_trace(), "oracle needs a recorded trace");
+    }
+}

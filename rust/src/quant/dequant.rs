@@ -4,7 +4,13 @@
 
 /// Unpack little-endian `cbits`-bit fields from bytes along the last axis.
 /// `packed` is row-major `(rows, nbytes)`; returns `(rows, n_out)` codes.
-pub fn unpack_container(packed: &[u8], rows: usize, nbytes: usize, cbits: u8, n_out: usize) -> Vec<u8> {
+pub fn unpack_container(
+    packed: &[u8],
+    rows: usize,
+    nbytes: usize,
+    cbits: u8,
+    n_out: usize,
+) -> Vec<u8> {
     assert_eq!(packed.len(), rows * nbytes);
     let cpb = (8 / cbits) as usize;
     let mask = (((1u16 << cbits) - 1) & 0xff) as u8;

@@ -1,0 +1,89 @@
+//! Shared name → constructor table backing the open policy and predictor
+//! registries (DESIGN.md §9).
+//!
+//! Alias resolution, sorted listings, the unknown-name error surface and
+//! the constructor hand-out discipline live here exactly once, so the two
+//! registries cannot drift.  `ctor()` *clones the constructor out* — the
+//! process-wide registries drop their lock guard before invoking it, so a
+//! constructor may itself register further entries without deadlocking.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A name → constructor table with alias support; `kind` labels error
+/// messages (`"policy"`, `"predictor"`).  `BTreeMap` keeps listings (CLI
+/// help, error messages) sorted and deterministic.
+#[derive(Clone)]
+pub struct NameTable<C: Clone> {
+    kind: &'static str,
+    ctors: BTreeMap<String, C>,
+    /// alias → canonical name.
+    aliases: BTreeMap<String, String>,
+}
+
+impl<C: Clone> NameTable<C> {
+    pub fn new(kind: &'static str) -> Self {
+        NameTable { kind, ctors: BTreeMap::new(), aliases: BTreeMap::new() }
+    }
+
+    /// Register `name`; a later registration under the same name wins.
+    pub fn register(&mut self, name: &str, ctor: C) {
+        self.ctors.insert(name.to_string(), ctor);
+    }
+
+    /// Register `alias` as another name for `canonical`.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(alias.to_string(), canonical.to_string());
+    }
+
+    /// Canonical names, sorted (CLI help and error messages).
+    pub fn names(&self) -> Vec<String> {
+        self.ctors.keys().cloned().collect()
+    }
+
+    /// Resolve a (possibly aliased) name to its canonical form; unknown
+    /// names fail with the registered-name list.
+    pub fn resolve(&self, name: &str) -> Result<String> {
+        let canon = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        if self.ctors.contains_key(canon) {
+            Ok(canon.to_string())
+        } else {
+            bail!("unknown {} `{name}` — registered: {}", self.kind, self.names().join(", "))
+        }
+    }
+
+    /// Clone out the constructor registered under a (possibly aliased)
+    /// name — callers invoke it *after* releasing any registry lock.
+    pub fn ctor(&self, name: &str) -> Result<C> {
+        let canon = self.resolve(name)?;
+        Ok(self.ctors[&canon].clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_follows_aliases_and_reports_kind() {
+        let mut t: NameTable<u32> = NameTable::new("widget");
+        t.register("real", 7);
+        t.alias("nick", "real");
+        assert_eq!(t.resolve("nick").unwrap(), "real");
+        assert_eq!(t.ctor("nick").unwrap(), 7);
+        let err = t.resolve("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown widget `nope`"), "{err}");
+        assert!(err.contains("real"), "{err}");
+    }
+
+    #[test]
+    fn names_are_sorted_and_latest_registration_wins() {
+        let mut t: NameTable<u32> = NameTable::new("widget");
+        t.register("b", 1);
+        t.register("a", 2);
+        t.register("b", 3);
+        assert_eq!(t.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(t.ctor("b").unwrap(), 3);
+    }
+}

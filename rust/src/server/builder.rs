@@ -1,0 +1,87 @@
+//! [`ServerBuilder`] — validated construction of a [`Server`].
+//!
+//! Every serving entrypoint (CLI, harness, examples, tests) funnels
+//! through `build()`, which resolves the policy and predictor names
+//! against the open registries *before* any engine state exists — a bad
+//! `--policy` flag fails here with the registered-name list, not deep in
+//! the serve loop.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use crate::coordinator::ServeEngine;
+use crate::runtime::StagedModel;
+use crate::server::Server;
+
+/// Builder for a [`Server`]: model + policy + testbed + prefetch +
+/// admission knobs, validated at [`ServerBuilder::build`].
+pub struct ServerBuilder {
+    model: StagedModel,
+    policy: PolicyConfig,
+    system: Option<SystemConfig>,
+    prefetch: PrefetchConfig,
+    max_pending: usize,
+}
+
+impl ServerBuilder {
+    /// Start from a loaded model.  Defaults: the paper's BEAM policy at
+    /// 2-bit with the manifest's `top_n`, the GPU-only testbed scaled for
+    /// the model, prefetching off, and unbounded admission.
+    pub fn new(model: StagedModel) -> Self {
+        let top_n = model.manifest.model.top_n;
+        ServerBuilder {
+            model,
+            policy: PolicyConfig::new("beam", 2, top_n),
+            system: None,
+            prefetch: PrefetchConfig::off(),
+            max_pending: usize::MAX,
+        }
+    }
+
+    /// Full policy knob set (name + bits + top-n + tags).
+    pub fn policy(mut self, policy: PolicyConfig) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Swap only the policy's registry name, keeping the other knobs.
+    pub fn policy_name(mut self, name: &str) -> Self {
+        self.policy.policy = name.to_string();
+        self
+    }
+
+    /// Simulated testbed; defaults to the GPU-only testbed scaled for the
+    /// model (`SystemConfig::scaled_for`).
+    pub fn system(mut self, system: SystemConfig) -> Self {
+        self.system = Some(system);
+        self
+    }
+
+    /// Speculative-prefetch knob set (predictor registry name + lookahead
+    /// + per-step byte budget).
+    pub fn prefetch(mut self, prefetch: PrefetchConfig) -> Self {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// Admission control: `submit` refuses (backpressure) once this many
+    /// requests are queued ahead of the batch.
+    pub fn max_pending(mut self, limit: usize) -> Self {
+        self.max_pending = limit;
+        self
+    }
+
+    /// Validate every knob and construct the server.
+    pub fn build(self) -> Result<Server> {
+        // Registry resolution up front: unknown names fail with the
+        // sorted registered-name list (the CLI's error surface).
+        crate::policies::resolve_policy(&self.policy.policy)?;
+        crate::predict::resolve_predictor(&self.prefetch.predictor)?;
+        ensure!(self.max_pending > 0, "max_pending must be at least 1");
+        let system = self
+            .system
+            .unwrap_or_else(|| SystemConfig::scaled_for(&self.model.manifest.model, false));
+        let engine = ServeEngine::with_prefetch(self.model, self.policy, system, self.prefetch)?;
+        Ok(Server::from_parts(engine, self.max_pending))
+    }
+}

@@ -1,0 +1,248 @@
+//! The session-oriented serving façade (DESIGN.md §9).
+//!
+//! [`Server`] is the public surface of the serving stack: requests enter
+//! one at a time through [`Server::submit`] (admission-controlled, not an
+//! up-front `Vec`), produce per-request [`TokenEvent`] streams with
+//! virtual timestamps, can be cancelled mid-flight, and advance through an
+//! explicit deterministic event loop — [`Server::tick`] performs exactly
+//! one scheduling action, [`Server::run_to_completion`] drains everything
+//! and returns the run [`Report`].
+//!
+//! Construction goes through [`ServerBuilder`], which validates every
+//! knob (policy and predictor names resolve against the open registries —
+//! `policies::registry` / `predict::registry`) before any engine state
+//! exists.  Behind the façade the legacy `ServeEngine` is fully private:
+//! read-only [`EngineStats`] / [`CacheView`] snapshots replace its old
+//! `pub` fields, and `tests/server_api.rs` pins `run_to_completion` to be
+//! byte-identical to the pre-façade `scheduler::serve` loop.
+
+mod builder;
+pub mod session;
+
+pub use builder::ServerBuilder;
+pub use session::{Session, SessionId, SessionStatus, SubmitError, TokenEvent};
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::PrefetchConfig;
+use crate::coordinator::batcher::{Action, Batcher};
+use crate::coordinator::{CacheView, EngineStats, Report, ServeEngine};
+use crate::runtime::StagedModel;
+use crate::sim::clock::VTime;
+use crate::workload::{DecodeTrace, Request};
+
+/// What one [`Server::tick`] did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerTick {
+    /// Admitted and prefilled one session.
+    Prefilled(SessionId),
+    /// Ran one decode step over the active batch.
+    Decoded,
+    /// Nothing runnable: idled virtual time forward to the next arrival.
+    Idled(VTime),
+    /// Queue empty and no active sessions — the loop is drained.
+    Done,
+}
+
+/// Session-oriented serving façade over the (private) engine.
+pub struct Server {
+    engine: ServeEngine,
+    batcher: Batcher,
+    sessions: HashMap<SessionId, Session>,
+    max_pending: usize,
+}
+
+impl Server {
+    pub(crate) fn from_parts(engine: ServeEngine, max_pending: usize) -> Self {
+        Server { engine, batcher: Batcher::new(Vec::new()), sessions: HashMap::new(), max_pending }
+    }
+
+    /// Submit one request; returns its session handle.  Fails with
+    /// [`SubmitError::Backpressure`] when `max_pending` requests are
+    /// already queued (admission control) — the request is *not* enqueued
+    /// and may be resubmitted after the loop makes progress.
+    pub fn submit(&mut self, req: Request) -> Result<SessionId, SubmitError> {
+        let id = SessionId(req.id);
+        if self.sessions.contains_key(&id) {
+            return Err(SubmitError::DuplicateId(req.id));
+        }
+        if self.batcher.pending() >= self.max_pending {
+            return Err(SubmitError::Backpressure {
+                pending: self.batcher.pending(),
+                limit: self.max_pending,
+            });
+        }
+        self.sessions.insert(id, Session::new(id, req.prompt.len(), req.max_new_tokens));
+        self.batcher.push(req);
+        Ok(id)
+    }
+
+    /// Perform exactly one scheduling action (admit-or-prefill, decode,
+    /// or idle) and route any generated tokens into their sessions.
+    pub fn tick(&mut self) -> Result<ServerTick> {
+        let action = self.batcher.next_action(
+            self.engine.now(),
+            self.engine.state.free_slot(),
+            self.engine.state.n_active(),
+        );
+        let step = match action {
+            Action::Prefill(slot, req) => {
+                let id = SessionId(req.id);
+                if let Some(s) = self.sessions.get_mut(&id) {
+                    s.mark_active(self.engine.now());
+                }
+                self.engine.prefill(slot, &req)?;
+                ServerTick::Prefilled(id)
+            }
+            Action::Decode => {
+                self.engine.decode_step()?;
+                ServerTick::Decoded
+            }
+            Action::IdleUntil(t) => {
+                // A past/present target would make advance_to a no-op and
+                // spin forever; the batcher guarantees progress (see
+                // `idle_until_is_never_in_the_past`).
+                debug_assert!(t > self.engine.now(), "batcher idled into the past: {t}");
+                self.engine.clock.advance_to(t);
+                ServerTick::Idled(t)
+            }
+            Action::Done => ServerTick::Done,
+        };
+        self.route_emitted();
+        Ok(step)
+    }
+
+    /// Drive [`Server::tick`] until the queue and the batch drain, then
+    /// return the run report — the session-API equivalent of the legacy
+    /// `scheduler::serve` loop (pinned byte-identical to it).
+    pub fn run_to_completion(&mut self) -> Result<Report> {
+        while self.tick()? != ServerTick::Done {}
+        Ok(self.report())
+    }
+
+    /// Cancel a session: drops it from the queue (still pending) or frees
+    /// its batch slot (active).  `Ok(false)` if it already finished or was
+    /// already cancelled.
+    pub fn cancel(&mut self, id: SessionId) -> Result<bool> {
+        let Some(session) = self.sessions.get_mut(&id) else {
+            bail!("unknown session {id}");
+        };
+        match session.status() {
+            SessionStatus::Queued => {
+                let _ = self.batcher.remove(id.0);
+            }
+            SessionStatus::Active => {
+                if let Some(slot) = self.engine.slot_of(id.0) {
+                    let _ = self.engine.cancel_slot(slot);
+                }
+            }
+            SessionStatus::Finished | SessionStatus::Cancelled => return Ok(false),
+        }
+        let at = self.engine.now();
+        session.mark_cancelled(at);
+        Ok(true)
+    }
+
+    /// Token events appended to `id`'s stream since the previous poll.
+    pub fn poll_events(&mut self, id: SessionId) -> Vec<TokenEvent> {
+        self.sessions.get_mut(&id).map(Session::poll).unwrap_or_default()
+    }
+
+    /// The session handle for `id`, if it was ever submitted.
+    pub fn session(&self, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    /// Remove a *terminal* (finished or cancelled) session, returning it.
+    /// Long-lived servers call this to release the session's event history
+    /// and make its request id submittable again; `None` while the session
+    /// is still queued/active or was never submitted.
+    pub fn reap(&mut self, id: SessionId) -> Option<Session> {
+        match self.sessions.get(&id)?.status() {
+            SessionStatus::Finished | SessionStatus::Cancelled => self.sessions.remove(&id),
+            SessionStatus::Queued | SessionStatus::Active => None,
+        }
+    }
+
+    /// Requests submitted but not yet admitted to a slot.
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> VTime {
+        self.engine.now()
+    }
+
+    /// Final (or interim) run report — byte ledger, stall breakdown,
+    /// per-request latencies.
+    pub fn report(&self) -> Report {
+        self.engine.report()
+    }
+
+    /// Read-only snapshot of serve-loop progress.
+    pub fn stats(&self) -> EngineStats {
+        self.engine.stats()
+    }
+
+    /// Read-only snapshot of the expert cache's economics.
+    pub fn cache_view(&self) -> CacheView {
+        self.engine.cache_view()
+    }
+
+    /// The staged model being served.
+    pub fn model(&self) -> &StagedModel {
+        self.engine.model()
+    }
+
+    /// The prefetch knob set the server was built with.
+    pub fn prefetch_config(&self) -> &PrefetchConfig {
+        self.engine.prefetch_config()
+    }
+
+    /// Record decode routing from now on (Fig. 2 traces; the recording
+    /// pass of the oracle-replay protocol).
+    pub fn record_trace(&mut self) {
+        self.engine.record_trace();
+    }
+
+    /// Take the recorded decode trace; contextful error when tracing was
+    /// never enabled.
+    pub fn take_trace(&mut self) -> Result<DecodeTrace> {
+        self.engine.take_trace()
+    }
+
+    /// Does the configured predictor need a recorded trace installed
+    /// before serving (`oracle` and friends)?
+    pub fn needs_recorded_trace(&self) -> bool {
+        self.engine.needs_recorded_trace()
+    }
+
+    /// Can this server ever issue a speculative transfer?  (A predictor
+    /// was constructed and the prefetch knobs permit issuing.)
+    pub fn speculation_active(&self) -> bool {
+        self.engine.speculation_active()
+    }
+
+    /// Install a recorded trace into a trace-replaying predictor.
+    pub fn install_oracle_trace(&mut self, trace: &DecodeTrace) {
+        self.engine.set_oracle_trace(trace);
+    }
+
+    /// Teacher-forced scoring of one sequence through the serving numerics
+    /// (the eval path; see `scheduler::score_sequence`).
+    pub fn score_sequence(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        crate::coordinator::scheduler::score_sequence(&mut self.engine, tokens)
+    }
+
+    /// Route tokens the engine emitted this tick into their sessions.
+    fn route_emitted(&mut self) {
+        for e in self.engine.take_emitted() {
+            if let Some(s) = self.sessions.get_mut(&SessionId(e.request_id)) {
+                s.push_token(e.token, e.index, e.at, e.last);
+            }
+        }
+    }
+}

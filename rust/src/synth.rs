@@ -165,7 +165,10 @@ pub fn tiny_store(dims: &ModelDims) -> Result<WeightStore> {
         }
         store.insert(
             p("gate"),
-            TensorView::from_f32(vec![d, dims.n_experts], &dense(&mut rng, d, dims.n_experts, 1.0))?,
+            TensorView::from_f32(
+                vec![d, dims.n_experts],
+                &dense(&mut rng, d, dims.n_experts, 1.0),
+            )?,
         );
         for ei in 0..dims.n_experts {
             for (proj, d_in, d_out) in [("w1", d, f), ("w2", f, d), ("w3", d, f)] {

@@ -10,7 +10,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use beam_moe::backend::{default_backend, Backend, Tensor};
-use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
+use beam_moe::config::{PolicyConfig, Precision, SystemConfig};
 use beam_moe::coordinator::scheduler::{score_metrics, score_sequence, serve};
 use beam_moe::coordinator::ServeEngine;
 use beam_moe::manifest::{Manifest, WeightStore};
@@ -105,10 +105,9 @@ fn scoring_is_deterministic_and_sane() {
     let (_e, model) = load_model();
     let manifest = model.manifest.clone();
     let sys = SystemConfig::scaled_for(&manifest.model, false);
-    let mut engine =
-        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, 1), sys).unwrap();
+    let mut engine = ServeEngine::new(model, PolicyConfig::new("beam", 2, 1), sys).unwrap();
 
-    let eval = WeightStore::load(engine.model.manifest.eval_path()).unwrap();
+    let eval = WeightStore::load(engine.model().manifest.eval_path()).unwrap();
     let toks = eval.get("val_tokens").unwrap();
     let seq_len = toks.shape[1];
     let data = toks.as_i32().unwrap();
@@ -134,11 +133,10 @@ fn fig6_ordering_fp16_beats_beam_beats_nothing() {
     require_artifacts!();
     let backend = default_backend().unwrap();
     let score = |policy: PolicyConfig| -> f64 {
-        let model =
-            StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
+        let model = StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
         let mut se = ServeEngine::new(model, policy, sys).unwrap();
-        let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+        let eval = WeightStore::load(se.model().manifest.eval_path()).unwrap();
         let toks = eval.get("val_tokens").unwrap();
         let seq_len = toks.shape[1];
         let data = toks.as_i32().unwrap();
@@ -158,9 +156,9 @@ fn fig6_ordering_fp16_beats_beam_beats_nothing() {
         }
         (nll / n as f64).exp()
     };
-    let fp16 = score(PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0));
-    let beam2 = score(PolicyConfig::new(PolicyKind::Beam, 2, 1));
-    let hqq2 = score(PolicyConfig::new(PolicyKind::StaticQuant, 2, 0));
+    let fp16 = score(PolicyConfig::new("mixtral-offload", 16, 0));
+    let beam2 = score(PolicyConfig::new("beam", 2, 1));
+    let hqq2 = score(PolicyConfig::new("static-quant", 2, 0));
     assert!(fp16 <= beam2 + 1e-9, "fp16 {fp16} must beat beam2 {beam2}");
     assert!(
         beam2 <= hqq2 * 1.02,
@@ -173,12 +171,10 @@ fn serving_is_deterministic_in_tokens_and_time() {
     require_artifacts!();
     let backend = default_backend().unwrap();
     let run = || {
-        let model =
-            StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
+        let model = StagedModel::load(Arc::clone(&backend), Manifest::load(ART).unwrap()).unwrap();
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
-        let mut se =
-            ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, 1), sys).unwrap();
-        let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+        let mut se = ServeEngine::new(model, PolicyConfig::new("beam", 2, 1), sys).unwrap();
+        let eval = WeightStore::load(se.model().manifest.eval_path()).unwrap();
         let reqs = WorkloadGen::generate(&WorkloadConfig::offline(2, 48, 8), &eval).unwrap();
         serve(&mut se, reqs).unwrap()
     };
@@ -195,9 +191,8 @@ fn serve_report_is_consistent() {
     let (_e, model) = load_model();
     let dims = model.manifest.model.clone();
     let sys = SystemConfig::scaled_for(&dims, false);
-    let mut se =
-        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Beam, 2, dims.top_n), sys).unwrap();
-    let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+    let mut se = ServeEngine::new(model, PolicyConfig::new("beam", 2, dims.top_n), sys).unwrap();
+    let eval = WeightStore::load(se.model().manifest.eval_path()).unwrap();
     let n_req = 3;
     let out_len = 6;
     let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_req, 48, out_len), &eval).unwrap();
@@ -221,9 +216,8 @@ fn ndp_run_moves_activations_not_weights_for_cold_experts() {
     let (_e, model) = load_model();
     let dims = model.manifest.model.clone();
     let sys = SystemConfig::scaled_for(&dims, true);
-    let mut se =
-        ServeEngine::new(model, PolicyConfig::new(PolicyKind::Monde, 16, 0), sys).unwrap();
-    let eval = WeightStore::load(se.model.manifest.eval_path()).unwrap();
+    let mut se = ServeEngine::new(model, PolicyConfig::new("monde", 16, 0), sys).unwrap();
+    let eval = WeightStore::load(se.model().manifest.eval_path()).unwrap();
     let reqs = WorkloadGen::generate(&WorkloadConfig::offline(2, 48, 6), &eval).unwrap();
     let r = serve(&mut se, reqs).unwrap();
     assert!(r.bytes["activations"] > 0, "MoNDE ships activations");

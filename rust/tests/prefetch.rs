@@ -2,21 +2,20 @@
 //!
 //! Pins the ISSUE-2 acceptance invariants: zero-budget speculation is
 //! byte-identical to demand-only serving, prefetch runs are deterministic,
-//! `OracleReplay` covers (nearly) every decode fetch with unlimited
+//! oracle replay covers (nearly) every decode fetch with unlimited
 //! budget, gate-lookahead prefetching strictly shrinks the decode
 //! critical-path weight-transfer stall for BEAM on the GPU-only testbed,
 //! and speculative/demand bytes stay in separate ledger classes.
+//! Everything runs through the session-oriented `Server` API.
 
 use std::sync::Arc;
 
 use beam_moe::backend::{Backend, ReferenceBackend};
-use beam_moe::config::{
-    PolicyConfig, PolicyKind, PredictorKind, PrefetchConfig, SystemConfig,
-};
-use beam_moe::coordinator::scheduler::serve;
-use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::Report;
+use beam_moe::server::{Server, ServerBuilder};
 use beam_moe::synth;
-use beam_moe::workload::{DecodeTrace, WorkloadConfig, WorkloadGen};
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
 fn backend() -> Arc<dyn Backend> {
     Arc::new(ReferenceBackend::new())
@@ -27,7 +26,7 @@ fn q_bytes() -> usize {
     synth::tiny_manifest("synthetic-tiny").q_expert_bytes(synth::SYNTH_BITS)
 }
 
-/// BEAM engine in the offloading regime: the cache holds ~`cache_experts`
+/// BEAM server in the offloading regime: the cache holds ~`cache_experts`
 /// quantized experts out of n_layers × n_experts, so decode misses.
 ///
 /// The link runs at 8× the scaled-testbed rate: the paper's operating
@@ -37,22 +36,29 @@ fn q_bytes() -> usize {
 /// the *subsystem's* behaviour — coverage, budgets, ledger split — rather
 /// than about the razor-thin margin of one operating point; both sides of
 /// every comparison share the same testbed, so the comparisons stay fair.
-fn engine(prefetch: PrefetchConfig, cache_experts: usize) -> ServeEngine {
+fn server(prefetch: PrefetchConfig, cache_experts: usize) -> Server {
     let model = synth::tiny_model(backend(), "synthetic-tiny").unwrap();
     let dims = model.manifest.model.clone();
     let mut sys = SystemConfig::scaled_for(&dims, false);
     sys.pcie_bw *= 8.0;
     sys.gpu_cache_bytes = cache_experts * q_bytes();
-    let policy = PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1);
-    ServeEngine::with_prefetch(model, policy, sys, prefetch).unwrap()
+    ServerBuilder::new(model)
+        .policy(PolicyConfig::new("beam", synth::SYNTH_BITS, 1))
+        .system(sys)
+        .prefetch(prefetch)
+        .build()
+        .unwrap()
 }
 
-fn run(engine: &mut ServeEngine, n_requests: usize, output_len: usize) -> Report {
-    let dims = engine.model.manifest.model.clone();
+fn run(server: &mut Server, n_requests: usize, output_len: usize) -> Report {
+    let dims = server.model().manifest.model.clone();
     let eval = synth::tiny_eval_store(&dims).unwrap();
     let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_requests, 32, output_len), &eval)
         .unwrap();
-    serve(engine, reqs).unwrap()
+    for req in reqs {
+        server.submit(req).unwrap();
+    }
+    server.run_to_completion().unwrap()
 }
 
 /// A sane per-step budget: one decode step's worth of bulk payloads.
@@ -63,10 +69,10 @@ fn sane_budget() -> usize {
 
 #[test]
 fn zero_budget_prefetch_is_byte_identical_to_demand_only() {
-    let mut demand = engine(PrefetchConfig::off(), 5);
+    let mut demand = server(PrefetchConfig::off(), 5);
     let a = run(&mut demand, 3, 6);
-    let zero = PrefetchConfig::new(PredictorKind::GateLookahead, 1, 0);
-    let mut spec = engine(zero, 5);
+    let zero = PrefetchConfig::new("gate", 1, 0);
+    let mut spec = server(zero, 5);
     let b = run(&mut spec, 3, 6);
 
     assert_eq!(a.bytes, b.bytes, "zero budget must not move a single extra byte");
@@ -84,9 +90,9 @@ fn zero_budget_prefetch_is_byte_identical_to_demand_only() {
 #[test]
 fn prefetch_run_is_deterministic_across_runs() {
     let mk = || {
-        let pf = PrefetchConfig::new(PredictorKind::GateLookahead, 1, sane_budget());
-        let mut e = engine(pf, 5);
-        run(&mut e, 3, 6)
+        let pf = PrefetchConfig::new("gate", 1, sane_budget());
+        let mut s = server(pf, 5);
+        run(&mut s, 3, 6)
     };
     let (a, b) = (mk(), mk());
     assert_eq!(a.bytes, b.bytes);
@@ -102,17 +108,18 @@ fn prefetch_run_is_deterministic_across_runs() {
 fn oracle_replay_with_unlimited_budget_covers_decode_fetches() {
     // Record a demand-only pass (single sequence: the trace records slot 0,
     // which with one request is the entire demand set).
-    let mut rec = engine(PrefetchConfig::off(), 6);
-    rec.trace = Some(DecodeTrace::default());
+    let mut rec = server(PrefetchConfig::off(), 6);
+    rec.record_trace();
     let base = run(&mut rec, 1, 16);
     assert!(base.prefetch.demand_fetches > 0, "baseline must miss in this regime");
-    let trace = rec.trace.take().unwrap();
+    let trace = rec.take_trace().unwrap();
     assert!(!trace.records.is_empty());
 
     // Replay with effectively unlimited budget.
-    let pf = PrefetchConfig::new(PredictorKind::OracleReplay, 1, usize::MAX / 2);
-    let mut oracle = engine(pf, 6);
-    oracle.set_oracle_trace(&trace);
+    let pf = PrefetchConfig::new("oracle", 1, usize::MAX / 2);
+    let mut oracle = server(pf, 6);
+    assert!(oracle.needs_recorded_trace(), "oracle must ask for a trace");
+    oracle.install_oracle_trace(&trace);
     let r = run(&mut oracle, 1, 16);
 
     assert!(r.prefetch.issued > 0);
@@ -149,10 +156,10 @@ fn oracle_replay_with_unlimited_budget_covers_decode_fetches() {
 /// GPU-only testbed, with speculative bytes ledgered separately.
 #[test]
 fn gate_lookahead_strictly_reduces_decode_transfer_stall() {
-    let mut demand = engine(PrefetchConfig::off(), 5);
+    let mut demand = server(PrefetchConfig::off(), 5);
     let a = run(&mut demand, 3, 8);
-    let pf = PrefetchConfig::new(PredictorKind::GateLookahead, 1, sane_budget());
-    let mut spec = engine(pf, 5);
+    let pf = PrefetchConfig::new("gate", 1, sane_budget());
+    let mut spec = server(pf, 5);
     let b = run(&mut spec, 3, 8);
 
     assert!(b.prefetch.issued > 0, "gate lookahead must speculate");
@@ -174,9 +181,9 @@ fn gate_lookahead_strictly_reduces_decode_transfer_stall() {
 
 #[test]
 fn ewma_prefetch_serves_and_accounts() {
-    let pf = PrefetchConfig::new(PredictorKind::Ewma, 1, sane_budget());
-    let mut e = engine(pf, 5);
-    let r = run(&mut e, 3, 8);
+    let pf = PrefetchConfig::new("ewma", 1, sane_budget());
+    let mut s = server(pf, 5);
+    let r = run(&mut s, 3, 8);
     assert!(r.prefetch.issued > 0, "popularity must accumulate and issue");
     assert_eq!(
         r.prefetch.speculative_bytes,
@@ -192,10 +199,10 @@ fn ewma_prefetch_serves_and_accounts() {
 
 #[test]
 fn lookahead_depth_two_wraps_and_stays_deterministic() {
-    let pf = PrefetchConfig::new(PredictorKind::GateLookahead, 2, 2 * sane_budget());
+    let pf = PrefetchConfig::new("gate", 2, 2 * sane_budget());
     let mk = || {
-        let mut e = engine(pf.clone(), 6);
-        run(&mut e, 2, 6)
+        let mut s = server(pf.clone(), 6);
+        run(&mut s, 2, 6)
     };
     let (a, b) = (mk(), mk());
     assert!(a.prefetch.issued > 0);
@@ -212,13 +219,17 @@ fn online_workload_completes_without_livelock() {
     let dims = model.manifest.model.clone();
     let mut sys = SystemConfig::scaled_for(&dims, false);
     sys.gpu_cache_bytes = 5 * q_bytes();
-    let policy = PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1);
-    let mut e = ServeEngine::new(model, policy, sys).unwrap();
+    let mut s = ServerBuilder::new(model)
+        .policy(PolicyConfig::new("beam", synth::SYNTH_BITS, 1))
+        .system(sys)
+        .build()
+        .unwrap();
     let eval = synth::tiny_eval_store(&dims).unwrap();
     // 6 requests into 4 slots: at least two arrive with every slot busy.
-    let reqs =
-        WorkloadGen::generate(&WorkloadConfig::online(6, 24, 4, 100.0), &eval).unwrap();
-    let r = serve(&mut e, reqs).unwrap();
+    for req in WorkloadGen::generate(&WorkloadConfig::online(6, 24, 4, 100.0), &eval).unwrap() {
+        s.submit(req).unwrap();
+    }
+    let r = s.run_to_completion().unwrap();
     assert_eq!(r.n_requests, 6, "every online request must finish");
     assert_eq!(r.total_generated, 6 * 4);
     // Tail percentiles are well-formed on an online run.

@@ -10,7 +10,10 @@ use beam_moe::jsonx::Value;
 use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use beam_moe::offload::transfer::{Link, TransferClass};
 use beam_moe::policies::plan::{group_by_expert, topk_renorm, PlanCtx, Policy};
-use beam_moe::policies::{BeamPolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy, StaticQuantPolicy};
+use beam_moe::policies::{
+    BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
+    StaticQuantPolicy,
+};
 use beam_moe::workload::reqgen::XorShift;
 
 fn rand_probs(rng: &mut XorShift, n_tokens: usize, n_experts: usize) -> Vec<f32> {
@@ -67,6 +70,7 @@ fn prop_every_policy_plans_a_partition() {
         Box::new(MondePolicy),
         Box::new(BeamPolicy { bits: 2, positions: vec![0] }),
         Box::new(BeamPolicy { bits: 3, positions: vec![1, 2] }),
+        Box::new(BigLittlePolicy { bits: 2 }),
     ];
     for iter in 0..200 {
         let n_tokens = 1 + (rng.next_u64() % 8) as usize;

@@ -10,11 +10,11 @@
 use std::sync::Arc;
 
 use beam_moe::backend::{Backend, ReferenceBackend, Tensor};
-use beam_moe::config::{PolicyConfig, PolicyKind, Precision, SystemConfig};
-use beam_moe::coordinator::scheduler::{score_sequence, serve};
-use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::config::{PolicyConfig, Precision, SystemConfig};
+use beam_moe::coordinator::Report;
 use beam_moe::quant::dequant::{dequantize_grouped, unpack_container};
 use beam_moe::runtime::StagedModel;
+use beam_moe::server::ServerBuilder;
 use beam_moe::synth;
 use beam_moe::workload::{WorkloadConfig, WorkloadGen};
 
@@ -150,18 +150,20 @@ fn serve_once(policy: PolicyConfig, ndp: bool) -> Report {
     // Force the offloading regime: the synthetic model is so small that the
     // default cache would hold every expert (paper setting: they must not fit).
     sys.gpu_cache_bytes = 2 * model.manifest.transfer.fp16_expert_bytes;
-    let mut se = ServeEngine::new(model, policy, sys).unwrap();
+    let mut server = ServerBuilder::new(model).policy(policy).system(sys).build().unwrap();
     let eval = synth::tiny_eval_store(&dims).unwrap();
-    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(3, 32, 6), &eval).unwrap();
-    serve(&mut se, reqs).unwrap()
+    for req in WorkloadGen::generate(&WorkloadConfig::offline(3, 32, 6), &eval).unwrap() {
+        server.submit(req).unwrap();
+    }
+    server.run_to_completion().unwrap()
 }
 
 /// The ISSUE-pinned invariant: `ServeEngine` decode is deterministic
 /// across two runs on the same seed — tokens, steps and virtual time.
 #[test]
 fn serve_engine_decode_is_deterministic_across_runs() {
-    let a = serve_once(PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1), false);
-    let b = serve_once(PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1), false);
+    let a = serve_once(PolicyConfig::new("beam", synth::SYNTH_BITS, 1), false);
+    let b = serve_once(PolicyConfig::new("beam", synth::SYNTH_BITS, 1), false);
     assert_eq!(a.total_generated, b.total_generated);
     assert_eq!(a.decode_steps, b.decode_steps);
     assert_eq!(a.prefills, b.prefills);
@@ -174,18 +176,18 @@ fn serve_engine_decode_is_deterministic_across_runs() {
 #[test]
 fn full_serving_loop_runs_on_every_policy() {
     let b = synth::SYNTH_BITS;
-    let mut hobbit = PolicyConfig::new(PolicyKind::Hobbit, b, 0);
+    let mut hobbit = PolicyConfig::new("hobbit", b, 0);
     hobbit.hobbit_lo_bits = b; // the synthetic store only packs one width
     let cases: Vec<(PolicyConfig, bool)> = vec![
-        (PolicyConfig::new(PolicyKind::MixtralOffload, 16, 0), false),
-        (PolicyConfig::new(PolicyKind::StaticQuant, b, 0), false),
+        (PolicyConfig::new("mixtral-offload", 16, 0), false),
+        (PolicyConfig::new("static-quant", b, 0), false),
         (hobbit, false),
-        (PolicyConfig::new(PolicyKind::Beam, b, 1), false),
-        (PolicyConfig::new(PolicyKind::Monde, 16, 0), true),
-        (PolicyConfig::new(PolicyKind::Beam, b, 1), true),
+        (PolicyConfig::new("beam", b, 1), false),
+        (PolicyConfig::new("monde", 16, 0), true),
+        (PolicyConfig::new("beam", b, 1), true),
     ];
     for (policy, ndp) in cases {
-        let name = format!("{:?}", policy.kind);
+        let name = policy.policy.clone();
         let r = serve_once(policy, ndp);
         assert_eq!(r.n_requests, 3, "{name}: all requests must finish");
         assert_eq!(r.total_generated, 3 * 6, "{name}: token accounting");
@@ -200,8 +202,8 @@ fn full_serving_loop_runs_on_every_policy() {
 /// BEAM must move compensator bytes; static-quant must not.
 #[test]
 fn compensator_traffic_is_policy_dependent() {
-    let beam = serve_once(PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1), false);
-    let plain = serve_once(PolicyConfig::new(PolicyKind::StaticQuant, synth::SYNTH_BITS, 0), false);
+    let beam = serve_once(PolicyConfig::new("beam", synth::SYNTH_BITS, 1), false);
+    let plain = serve_once(PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0), false);
     assert!(beam.bytes["compensator"] > 0, "BEAM ships compensators");
     assert_eq!(plain.bytes.get("compensator").copied().unwrap_or(0), 0);
     assert!(beam.bytes["expert_weights"] > 0);
@@ -220,13 +222,12 @@ fn scoring_is_deterministic_on_reference_backend() {
     let run = || {
         let model = model();
         let sys = SystemConfig::scaled_for(&model.manifest.model, false);
-        let mut se = ServeEngine::new(
-            model,
-            PolicyConfig::new(PolicyKind::Beam, synth::SYNTH_BITS, 1),
-            sys,
-        )
-        .unwrap();
-        score_sequence(&mut se, &seq).unwrap()
+        let mut server = ServerBuilder::new(model)
+            .policy(PolicyConfig::new("beam", synth::SYNTH_BITS, 1))
+            .system(sys)
+            .build()
+            .unwrap();
+        server.score_sequence(&seq).unwrap()
     };
     let l1 = run();
     let l2 = run();

@@ -1,0 +1,405 @@
+//! Session-oriented `Server` API tests (artifact-free, synthetic model).
+//!
+//! The load-bearing pin is **golden compatibility**: for the same model,
+//! policy, testbed and workload, `Server::run_to_completion()` must
+//! reproduce the legacy `scheduler::serve()` report *byte-for-byte* —
+//! tokens, virtual time, the transfer ledger, the stall breakdown and the
+//! per-request records.  On top of that: token-event streams with
+//! monotone virtual timestamps, cancel (queued and active), admission
+//! backpressure, and the open-registry acceptance case — a policy
+//! registered from this test file (listed nowhere in `config.rs`) served
+//! end-to-end by name through `ServerBuilder`.
+
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx};
+use beam_moe::policies::{register_policy, Policy};
+use beam_moe::server::{ServerBuilder, ServerTick, SessionStatus, SubmitError, TokenEvent};
+use beam_moe::synth;
+use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+fn model() -> beam_moe::StagedModel {
+    synth::tiny_model(backend(), "synthetic-tiny").unwrap()
+}
+
+/// Offloading-regime testbed (cache holds ~2 FP16 experts).
+fn sys_offload(ndp: bool) -> SystemConfig {
+    let m = model();
+    let mut sys = SystemConfig::scaled_for(&m.manifest.model, ndp);
+    sys.gpu_cache_bytes = 2 * m.manifest.transfer.fp16_expert_bytes;
+    sys
+}
+
+fn requests(wl: &WorkloadConfig) -> Vec<Request> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    WorkloadGen::generate(wl, &eval).unwrap()
+}
+
+/// The legacy path: up-front `Vec<Request>` through `scheduler::serve`.
+fn legacy_report(policy: PolicyConfig, prefetch: PrefetchConfig, wl: &WorkloadConfig) -> Report {
+    let mut engine =
+        ServeEngine::with_prefetch(model(), policy, sys_offload(false), prefetch).unwrap();
+    serve(&mut engine, requests(wl)).unwrap()
+}
+
+/// The new path: incremental submission through the `Server` façade.
+fn server_report(policy: PolicyConfig, prefetch: PrefetchConfig, wl: &WorkloadConfig) -> Report {
+    let mut server = ServerBuilder::new(model())
+        .policy(policy)
+        .system(sys_offload(false))
+        .prefetch(prefetch)
+        .build()
+        .unwrap();
+    for req in requests(wl) {
+        server.submit(req).unwrap();
+    }
+    server.run_to_completion().unwrap()
+}
+
+/// Byte-for-byte equality of everything deterministic in a report
+/// (wall-clock excluded by construction).
+fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
+    assert_eq!(a.policy, b.policy, "{label}: policy");
+    assert_eq!(a.n_requests, b.n_requests, "{label}: n_requests");
+    assert_eq!(a.total_generated, b.total_generated, "{label}: tokens");
+    assert_eq!(a.decode_steps, b.decode_steps, "{label}: decode_steps");
+    assert_eq!(a.prefills, b.prefills, "{label}: prefills");
+    assert_eq!(a.virtual_seconds, b.virtual_seconds, "{label}: virtual time");
+    assert_eq!(a.bytes, b.bytes, "{label}: byte ledger");
+    assert_eq!(a.cache_hit_rate, b.cache_hit_rate, "{label}: cache hit rate");
+    let (x, y) = (&a.breakdown, &b.breakdown);
+    assert_eq!(x.attn_router_s, y.attn_router_s, "{label}: attn_router_s");
+    assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(x.ndp_compute_s, y.ndp_compute_s, "{label}: ndp_compute_s");
+    assert_eq!(x.transfer_weights_s, y.transfer_weights_s, "{label}: transfer_weights_s");
+    assert_eq!(x.transfer_comp_s, y.transfer_comp_s, "{label}: transfer_comp_s");
+    assert_eq!(x.transfer_act_s, y.transfer_act_s, "{label}: transfer_act_s");
+    assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
+    assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
+    assert_eq!(x.head_s, y.head_s, "{label}: head_s");
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(ra.id, rb.id, "{label}: record id");
+        assert_eq!(ra.prompt_len, rb.prompt_len, "{label}: prompt_len");
+        assert_eq!(ra.generated, rb.generated, "{label}: generated");
+        assert_eq!(ra.arrival, rb.arrival, "{label}: arrival");
+        assert_eq!(ra.first_token_at, rb.first_token_at, "{label}: first_token_at");
+        assert_eq!(ra.finished_at, rb.finished_at, "{label}: finished_at");
+    }
+    assert_eq!(a.prefetch.issued, b.prefetch.issued, "{label}: prefetch issued");
+    assert_eq!(a.prefetch.covered, b.prefetch.covered, "{label}: prefetch covered");
+    assert_eq!(a.prefetch.demand_fetches, b.prefetch.demand_fetches, "{label}: demand");
+}
+
+/// ISSUE-3 acceptance: the session façade reproduces the pre-redesign
+/// `serve()` path byte-for-byte — offline, online and speculative.
+#[test]
+fn golden_compat_server_matches_legacy_serve() {
+    let beam = || PolicyConfig::new("beam", synth::SYNTH_BITS, 1);
+
+    let offline = WorkloadConfig::offline(3, 32, 6);
+    let a = legacy_report(beam(), PrefetchConfig::off(), &offline);
+    let b = server_report(beam(), PrefetchConfig::off(), &offline);
+    assert_reports_identical(&a, &b, "offline/demand-only");
+    assert!(a.total_generated > 0);
+
+    // Online arrivals exercise the IdleUntil path through `tick()`.
+    let online = WorkloadConfig::online(6, 24, 4, 100.0);
+    let a = legacy_report(beam(), PrefetchConfig::off(), &online);
+    let b = server_report(beam(), PrefetchConfig::off(), &online);
+    assert_reports_identical(&a, &b, "online/demand-only");
+
+    // Speculation on: the gate-lookahead prefetch loop must ride along
+    // unchanged under the façade.
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let budget =
+        dims.top_k * dims.n_layers * synth::tiny_manifest("synthetic-tiny").q_expert_bytes(2);
+    let pf = PrefetchConfig::new("gate", 1, budget);
+    let a = legacy_report(beam(), pf.clone(), &offline);
+    let b = server_report(beam(), pf, &offline);
+    assert_reports_identical(&a, &b, "offline/gate-prefetch");
+}
+
+#[test]
+fn token_events_stream_with_monotone_virtual_timestamps() {
+    let out_len = 6usize;
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let mut ids = Vec::new();
+    for req in requests(&WorkloadConfig::offline(2, 32, out_len)) {
+        ids.push(server.submit(req).unwrap());
+    }
+    let report = server.run_to_completion().unwrap();
+
+    for (i, id) in ids.iter().enumerate() {
+        let events = server.poll_events(*id);
+        // Admitted + out_len tokens + Finished.
+        assert_eq!(events.len(), out_len + 2, "session {i}");
+        assert!(matches!(events[0], TokenEvent::Admitted { .. }));
+        assert!(matches!(events[events.len() - 1], TokenEvent::Finished { .. }));
+        let times: Vec<f64> = events.iter().map(|e| e.at()).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "monotone vtimes: {times:?}");
+        let indices: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(indices, (0..out_len).collect::<Vec<_>>());
+        // The stream's timestamps are the report's latency truth.
+        let record = report.requests.iter().find(|r| r.id == id.0).unwrap();
+        let first = events
+            .iter()
+            .find_map(|e| match e {
+                TokenEvent::Token { index: 0, at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first, record.first_token_at, "TTFT via events == report");
+        assert_eq!(events.last().unwrap().at(), record.finished_at);
+        assert_eq!(server.session(*id).unwrap().status(), SessionStatus::Finished);
+        // Polling drains: a second poll yields nothing new.
+        assert!(server.poll_events(*id).is_empty());
+    }
+}
+
+#[test]
+fn events_arrive_incrementally_while_ticking() {
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let id = {
+        let mut reqs = requests(&WorkloadConfig::offline(1, 32, 4));
+        server.submit(reqs.remove(0)).unwrap()
+    };
+    // First tick must be the prefill: Admitted + first token appear.
+    assert_eq!(server.tick().unwrap(), ServerTick::Prefilled(id));
+    let first = server.poll_events(id);
+    assert!(matches!(first[0], TokenEvent::Admitted { .. }));
+    assert!(
+        matches!(first[1], TokenEvent::Token { index: 0, .. }),
+        "prefill emits the first token"
+    );
+    // Each decode tick appends exactly one more token for this session.
+    assert_eq!(server.tick().unwrap(), ServerTick::Decoded);
+    let next = server.poll_events(id);
+    assert_eq!(next.len(), 1);
+    assert!(matches!(next[0], TokenEvent::Token { index: 1, .. }));
+    server.run_to_completion().unwrap();
+    assert_eq!(server.session(id).unwrap().status(), SessionStatus::Finished);
+}
+
+#[test]
+fn cancel_queued_session_never_runs() {
+    // 6 requests into 4 slots: ids[4..] start queued.
+    let out_len = 4usize;
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let mut ids = Vec::new();
+    for req in requests(&WorkloadConfig::offline(6, 24, out_len)) {
+        ids.push(server.submit(req).unwrap());
+    }
+    assert!(server.cancel(ids[5]).unwrap());
+    assert_eq!(server.session(ids[5]).unwrap().status(), SessionStatus::Cancelled);
+    assert_eq!(server.pending(), 5);
+
+    let report = server.run_to_completion().unwrap();
+    assert_eq!(report.n_requests, 5, "cancelled request must not serve");
+    assert_eq!(report.total_generated, 5 * out_len);
+    assert_eq!(server.session(ids[5]).unwrap().generated(), 0);
+    let events = server.poll_events(ids[5]);
+    assert!(matches!(events[..], [TokenEvent::Cancelled { .. }]));
+    // Cancelling twice is a no-op, not an error.
+    assert!(!server.cancel(ids[5]).unwrap());
+}
+
+#[test]
+fn cancel_active_session_frees_its_slot_mid_decode() {
+    let out_len = 8usize;
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let mut ids = Vec::new();
+    for req in requests(&WorkloadConfig::offline(2, 32, out_len)) {
+        ids.push(server.submit(req).unwrap());
+    }
+    // Admit both (two prefill ticks), then a couple of decode steps.
+    assert!(matches!(server.tick().unwrap(), ServerTick::Prefilled(_)));
+    assert!(matches!(server.tick().unwrap(), ServerTick::Prefilled(_)));
+    assert_eq!(server.tick().unwrap(), ServerTick::Decoded);
+    assert_eq!(server.session(ids[1]).unwrap().status(), SessionStatus::Active);
+
+    assert!(server.cancel(ids[1]).unwrap());
+    assert_eq!(server.session(ids[1]).unwrap().status(), SessionStatus::Cancelled);
+    let generated_at_cancel = server.session(ids[1]).unwrap().generated();
+    assert!(generated_at_cancel >= 2, "prefill + one decode landed before cancel");
+    assert!(generated_at_cancel < out_len);
+
+    let report = server.run_to_completion().unwrap();
+    // Only the surviving session completes and is recorded.
+    assert_eq!(report.n_requests, 1);
+    assert_eq!(report.requests[0].id, ids[0].0);
+    assert_eq!(server.session(ids[0]).unwrap().status(), SessionStatus::Finished);
+    assert_eq!(server.session(ids[0]).unwrap().generated(), out_len);
+    // The cancelled stream stopped where it was cancelled.
+    assert_eq!(server.session(ids[1]).unwrap().generated(), generated_at_cancel);
+}
+
+#[test]
+fn submit_backpressure_and_duplicate_ids() {
+    let out_len = 4usize;
+    let mut server = ServerBuilder::new(model())
+        .system(sys_offload(false))
+        .max_pending(2)
+        .build()
+        .unwrap();
+    let reqs = requests(&WorkloadConfig::offline(3, 24, out_len));
+    server.submit(reqs[0].clone()).unwrap();
+    server.submit(reqs[1].clone()).unwrap();
+    // Queue full: admission control refuses (and does not enqueue).
+    match server.submit(reqs[2].clone()) {
+        Err(SubmitError::Backpressure { pending, limit }) => {
+            assert_eq!((pending, limit), (2, 2));
+        }
+        other => panic!("expected backpressure, got {other:?}"),
+    }
+    assert_eq!(server.pending(), 2);
+    // One scheduling step admits a request; the retry then succeeds.
+    assert!(matches!(server.tick().unwrap(), ServerTick::Prefilled(_)));
+    server.submit(reqs[2].clone()).unwrap();
+    // Resubmitting an existing id is rejected.
+    assert!(matches!(server.submit(reqs[1].clone()), Err(SubmitError::DuplicateId(_))));
+    let report = server.run_to_completion().unwrap();
+    assert_eq!(report.n_requests, 3);
+}
+
+/// A policy that exists only in this test file — nothing in `config.rs`,
+/// `policies/`, or the CLI knows it.  Everything runs plain low-bit on
+/// the GPU (distinguishable from `static-quant` by its name).
+struct TestShimPolicy {
+    bits: u8,
+}
+
+impl Policy for TestShimPolicy {
+    fn name(&self) -> &'static str {
+        "test-shim"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            plan.execs.push(ExpertExec {
+                expert,
+                precision: Precision::Int(self.bits),
+                location: Location::Gpu,
+                tokens,
+            });
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.bits)
+    }
+}
+
+/// ISSUE-3 acceptance: a policy registered from a test file (not listed
+/// in `config.rs`) is selectable by name end-to-end via `ServerBuilder`.
+#[test]
+fn policy_registered_at_runtime_serves_end_to_end_by_name() {
+    register_policy("test-shim", |cfg| Ok(Box::new(TestShimPolicy { bits: cfg.bits })));
+
+    let out_len = 4usize;
+    let mut server = ServerBuilder::new(model())
+        .policy(PolicyConfig::new("test-shim", synth::SYNTH_BITS, 0))
+        .system(sys_offload(false))
+        .build()
+        .unwrap();
+    for req in requests(&WorkloadConfig::offline(2, 24, out_len)) {
+        server.submit(req).unwrap();
+    }
+    let report = server.run_to_completion().unwrap();
+    assert_eq!(report.policy, "test-shim", "the registered policy actually served");
+    assert_eq!(report.n_requests, 2);
+    assert_eq!(report.total_generated, 2 * out_len);
+    assert!(report.bytes["expert_weights"] > 0);
+    assert_eq!(report.bytes.get("compensator").copied().unwrap_or(0), 0);
+}
+
+/// The registry-shipped demo policy (`biglittle`, absent from config.rs)
+/// resolves and serves, and moves both FP16 and low-bit payloads.
+#[test]
+fn biglittle_demo_policy_is_selectable_by_name() {
+    let mut server = ServerBuilder::new(model())
+        .policy(PolicyConfig::new("biglittle", synth::SYNTH_BITS, 0))
+        .system(sys_offload(false))
+        .build()
+        .unwrap();
+    for req in requests(&WorkloadConfig::offline(2, 24, 4)) {
+        server.submit(req).unwrap();
+    }
+    let report = server.run_to_completion().unwrap();
+    assert_eq!(report.policy, "biglittle");
+    assert_eq!(report.n_requests, 2);
+    assert!(report.bytes["expert_weights"] > 0);
+}
+
+#[test]
+fn unknown_policy_and_predictor_fail_at_build_with_name_list() {
+    let err = ServerBuilder::new(model())
+        .policy_name("not-a-policy")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown policy `not-a-policy`"), "{err}");
+    assert!(err.contains("beam") && err.contains("biglittle"), "{err}");
+
+    let err = ServerBuilder::new(model())
+        .prefetch(PrefetchConfig::new("not-a-predictor", 1, 1024))
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown predictor `not-a-predictor`"), "{err}");
+    assert!(err.contains("ewma") && err.contains("gate"), "{err}");
+}
+
+#[test]
+fn reap_releases_terminal_sessions_and_frees_the_id() {
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let req = requests(&WorkloadConfig::offline(1, 24, 3)).remove(0);
+    let id = server.submit(req.clone()).unwrap();
+    assert!(server.reap(id).is_none(), "live sessions cannot be reaped");
+    server.run_to_completion().unwrap();
+    let reaped = server.reap(id).expect("finished session reaps");
+    assert_eq!(reaped.generated(), 3);
+    assert!(server.session(id).is_none());
+    // The id is submittable again once its old session is reaped.
+    server.submit(req).unwrap();
+    let r = server.run_to_completion().unwrap();
+    assert_eq!(r.n_requests, 2);
+}
+
+#[test]
+fn builder_defaults_serve_the_paper_policy() {
+    // No knobs at all: beam@2bit on the scaled GPU-only testbed.
+    let mut server = ServerBuilder::new(model()).build().unwrap();
+    for req in requests(&WorkloadConfig::offline(1, 24, 3)) {
+        server.submit(req).unwrap();
+    }
+    let report = server.run_to_completion().unwrap();
+    assert_eq!(report.policy, "beam");
+    assert_eq!(report.total_generated, 3);
+    let stats = server.stats();
+    assert_eq!(stats.total_generated, 3);
+    assert_eq!(stats.completed_requests, 1);
+    assert!(stats.virtual_now > 0.0);
+    let cache = server.cache_view();
+    assert!(cache.hits + cache.misses > 0, "the cache saw traffic");
+}
