@@ -239,6 +239,10 @@ pub struct PolicyConfig {
     pub hobbit_hi_threshold: f64,
     /// HOBBIT: low-bit width for unimportant experts.
     pub hobbit_lo_bits: u8,
+    /// `adaptive`: total byte budget the per-expert precision allocator
+    /// may spend across all layer×expert payloads (DESIGN.md §10).
+    /// `None` = the floor plan plus compensate-everything headroom.
+    pub alloc_budget_bytes: Option<usize>,
 }
 
 impl PolicyConfig {
@@ -252,6 +256,7 @@ impl PolicyConfig {
             restore_positions: None,
             hobbit_hi_threshold: 0.8,
             hobbit_lo_bits: 4,
+            alloc_budget_bytes: None,
         }
     }
 

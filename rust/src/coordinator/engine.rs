@@ -36,6 +36,7 @@ use crate::offload::transfer::{Link, TransferClass};
 use crate::policies::make_policy;
 use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
 use crate::predict::{make_predictor, ExpertPredictor, LayerObservation, PredictCtx};
+use crate::quant::alloc::PrecisionAllocator;
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::CostModel;
@@ -107,6 +108,11 @@ pub struct ServeEngine {
     /// layer → dense predictor scores, refreshed as predictions are made
     /// (surfaced to policies through `PlanCtx::predicted`).
     predicted_scores: HashMap<usize, Vec<f64>>,
+    /// Budgeted per-expert precision allocator (DESIGN.md §10) — present
+    /// only when the policy consumes its plan (`wants_precision_plan`).
+    /// Re-plans at decode-step boundaries; its per-layer map reaches the
+    /// policy through `PlanCtx::precisions`.
+    alloc: Option<PrecisionAllocator>,
     /// The MoE layer currently executing belongs to a prefill step
     /// (prefetch stats track the decode critical path only).
     in_prefill: bool,
@@ -142,8 +148,21 @@ impl ServeEngine {
             .as_ref()
             .map(|n| Link::new("ndp-link", n.link_bw, n.link_lat));
         let predictor = make_predictor(&prefetch_cfg.predictor, dims.n_layers, dims.n_experts)?;
+        let policy = make_policy(&policy_cfg)?;
+        let alloc = if policy.wants_precision_plan() {
+            // `cfg.bits` is the adaptive floor: the ladder never serves an
+            // expert below it (and fails fast if the artifact cannot).
+            Some(PrecisionAllocator::new(
+                &model.manifest,
+                &policy_cfg.comp_tag,
+                policy_cfg.bits,
+                policy_cfg.alloc_budget_bytes,
+            )?)
+        } else {
+            None
+        };
         let mut engine = ServeEngine {
-            policy: make_policy(&policy_cfg)?,
+            policy,
             policy_cfg,
             cost,
             gpu: Resource::new("gpu"),
@@ -160,6 +179,7 @@ impl ServeEngine {
             prefetch_cfg,
             predictor,
             predicted_scores: HashMap::new(),
+            alloc,
             in_prefill: false,
             decode_steps: 0,
             prefills: 0,
@@ -405,8 +425,20 @@ impl ServeEngine {
             ndp: self.ndp.is_some(),
             fp16_cached: &probe,
             predicted: self.predicted_scores.get(&layer).map(|v| v.as_slice()),
+            precisions: self.alloc.as_ref().map(|a| a.layer(layer)),
         };
         self.policy.plan(&ctx)
+    }
+
+    /// Feed one layer's routing into the precision allocator's demand EWMA
+    /// (prefill and decode both count — prompt routing is the cheapest
+    /// warm-up signal; DESIGN.md §10).
+    fn observe_alloc(&mut self, layer: usize, probs: &[f32], active: &[bool]) {
+        let m = &self.model.manifest.model;
+        let (n_experts, top_k, step) = (m.n_experts, m.top_k, self.decode_steps);
+        if let Some(a) = self.alloc.as_mut() {
+            a.observe(&LayerObservation { step, layer, n_experts, top_k, probs, active });
+        }
     }
 
     /// Execute one layer's MoE (plan → transfers → experts → combine).
@@ -544,6 +576,11 @@ impl ServeEngine {
         }
         let step_t0 = self.clock.now();
         self.prefetch.begin_step();
+        // Decode-step boundary: refresh the per-expert precision plan from
+        // the routing demand accumulated so far (DESIGN.md §10).
+        if let Some(a) = self.alloc.as_mut() {
+            a.replan();
+        }
 
         let mut x = self.model.embed(&tokens, false)?;
         let op = self.cost.embed(n_active);
@@ -564,6 +601,7 @@ impl ServeEngine {
             let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
             self.breakdown.attn_router_s += op.seconds;
 
+            self.observe_alloc(layer, &probs, &active);
             let plan = self.plan_layer(&probs, &active, layer);
             debug_assert!(combine::plan_is_partition(&plan, m.b_max, m.top_k, &active));
 
@@ -654,6 +692,7 @@ impl ServeEngine {
             let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
             self.breakdown.attn_router_s += op.seconds;
 
+            self.observe_alloc(layer, &probs, &active);
             let plan = self.plan_layer(&probs, &active, layer);
             let moe = self.run_moe_layer(layer, &xn, &plan, &active, true, router_done)?;
             let mut xh = x2.to_f32_vec()?;
@@ -886,6 +925,7 @@ impl ServeEngine {
                 wasted_bytes: self.cache.wasted_speculative_bytes
                     + self.cache.resident_unused_speculative_bytes(),
             },
+            alloc: self.alloc.as_ref().map(|a| a.report()),
         }
     }
 }

@@ -4,6 +4,7 @@
 
 use std::collections::HashMap;
 
+use crate::quant::alloc::AllocReport;
 use crate::sim::clock::VTime;
 
 /// Where virtual time went — Fig. 1a's categories plus the prefetch split.
@@ -137,6 +138,9 @@ pub struct Report {
     pub backend_execs: u64,
     /// Prefetch-subsystem ledger (all zeros for demand-only runs).
     pub prefetch: PrefetchReport,
+    /// Final state of the budgeted precision allocator (DESIGN.md §10);
+    /// `None` for fixed-precision policies.
+    pub alloc: Option<AllocReport>,
 }
 
 impl Report {
@@ -156,8 +160,14 @@ impl Report {
         self.total_generated as f64 / self.wall_seconds
     }
 
+    /// Ascending per-request samples for the tail percentiles.  Records
+    /// that never produced a token (`generated == 0` — cancelled before
+    /// their first token, or synthesized defaults) carry
+    /// `first_token_at = 0.0` and would fabricate negative or zero
+    /// latencies, so they are excluded from tail metrics.
     fn sorted_metric(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
-        let mut v: Vec<f64> = self.requests.iter().map(f).collect();
+        let mut v: Vec<f64> =
+            self.requests.iter().filter(|r| r.generated > 0).map(f).collect();
         v.sort_by(|a, b| a.total_cmp(b));
         v
     }
@@ -168,26 +178,24 @@ impl Report {
         [percentile(&sorted, 0.50), percentile(&sorted, 0.95), percentile(&sorted, 0.99)]
     }
 
-    pub fn mean_request_latency(&self) -> f64 {
-        if self.requests.is_empty() {
-            return 0.0;
+    /// Mean over the same token-producing records the tails use —
+    /// zero-generated records would drag the means negative just like
+    /// they fabricated tail latencies.
+    fn mean_metric(&self, f: impl Fn(&RequestRecord) -> f64) -> f64 {
+        let v: Vec<f64> = self.requests.iter().filter(|r| r.generated > 0).map(f).collect();
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
         }
-        self.requests
-            .iter()
-            .map(|r| r.finished_at - r.arrival)
-            .sum::<f64>()
-            / self.requests.len() as f64
+    }
+
+    pub fn mean_request_latency(&self) -> f64 {
+        self.mean_metric(|r| r.finished_at - r.arrival)
     }
 
     pub fn mean_ttft(&self) -> f64 {
-        if self.requests.is_empty() {
-            return 0.0;
-        }
-        self.requests
-            .iter()
-            .map(|r| r.first_token_at - r.arrival)
-            .sum::<f64>()
-            / self.requests.len() as f64
+        self.mean_metric(|r| r.first_token_at - r.arrival)
     }
 
     /// Time-to-first-token tail: [p50, p95, p99] virtual seconds.
@@ -272,6 +280,25 @@ mod tests {
         // TPOT: (finish - first) / (generated - 1) = (10 - 0.1 i) / 10
         let p = r.tpot_percentiles();
         assert!(p[2] <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn zero_generated_records_are_excluded_from_tails() {
+        // Regression: a cancelled/zero-generated record's default
+        // `first_token_at = 0.0` fabricated negative TTFTs in the tails.
+        let mut r = Report::default();
+        r.requests.push(req(5.0, 6.0, 16.0, 11));
+        r.requests.push(req(7.0, 8.5, 18.0, 11));
+        let clean = (r.ttft_percentiles(), r.tpot_percentiles(), r.latency_percentiles());
+        let (mean_t, mean_l) = (r.mean_ttft(), r.mean_request_latency());
+        r.requests.push(RequestRecord { id: 9, arrival: 50.0, ..Default::default() });
+        assert_eq!(r.ttft_percentiles(), clean.0, "tails unchanged by the ghost record");
+        assert_eq!(r.tpot_percentiles(), clean.1);
+        assert_eq!(r.latency_percentiles(), clean.2);
+        assert!(r.ttft_percentiles()[0] > 0.0, "no fabricated negative/zero TTFT");
+        assert_eq!(r.mean_ttft(), mean_t, "means are filtered too");
+        assert_eq!(r.mean_request_latency(), mean_l);
+        assert!(r.mean_ttft() > 0.0);
     }
 
     #[test]

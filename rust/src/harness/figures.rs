@@ -1,18 +1,22 @@
 //! One driver per paper table/figure (DESIGN.md §5).
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::backend::{default_backend, Backend};
-use crate::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use crate::backend::{default_backend, Backend, ReferenceBackend};
+use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::scheduler::score_metrics;
+use crate::coordinator::Report;
 use crate::harness::report::ReportSink;
 use crate::manifest::Manifest;
+use crate::quant::alloc::PrecisionLadder;
 use crate::quant::dequant::{dequantize_grouped, unpack_container};
 use crate::runtime::StagedModel;
 use crate::server::{Server, ServerBuilder};
+use crate::synth;
 use crate::workload::{WorkloadConfig, WorkloadGen};
 
 pub const MODELS: [&str; 2] = ["mixtral-tiny", "deepseek-tiny"];
@@ -26,6 +30,10 @@ pub struct Harness {
     pub eval_seqs: usize,
     /// Requests per serving point (throughput figures).
     pub serve_requests: usize,
+    /// `--smoke`: run drivers that support it (the `adaptive` sweep) on
+    /// the built-in synthetic model with a tiny workload — artifact-free,
+    /// the CI quickstart-job configuration.
+    pub smoke: bool,
 }
 
 impl Harness {
@@ -45,6 +53,7 @@ impl Harness {
             sink: ReportSink::new(out_dir),
             eval_seqs: if full { 128 } else { 24 },
             serve_requests: if full { 16 } else { 8 },
+            smoke: false,
         })
     }
 
@@ -296,6 +305,64 @@ pub fn fig3(h: &mut Harness) -> Result<()> {
 // Fig. 4 — residual restoration + kurtosis↔error correlation
 // ---------------------------------------------------------------------------
 
+/// One expert projection's dequantization probe (the §7 payload layout,
+/// shared by fig4's residual table and the adaptive sweep): fp32
+/// reference, dequantized base and `‖W‖` are computed **once**; the
+/// relative error for any compensator delta derives from them.
+struct ProjProbe {
+    base: String,
+    bits: u8,
+    d_in: usize,
+    d_out: usize,
+    w: Vec<f32>,
+    q: Vec<f32>,
+    wn: f64,
+}
+
+impl ProjProbe {
+    fn new(model: &StagedModel, li: usize, e: usize, proj: &str, bits: u8) -> Result<Self> {
+        let m = &model.manifest.model;
+        let (d_in, d_out) = match proj {
+            "w2" => (m.d_ff, m.d_model),
+            _ => (m.d_model, m.d_ff),
+        };
+        let base = format!("layers.{li}.experts.{e}.{proj}");
+        let w = model.store.get(&format!("{base}.fp32"))?.as_f32()?;
+        let cb = model.manifest.container_bits(bits);
+        let pk = model.store.get(&format!("{base}.hqq{bits}.pk"))?;
+        let sc = model.store.get(&format!("{base}.hqq{bits}.sc"))?.as_f32()?;
+        let zp = model.store.get(&format!("{base}.hqq{bits}.zp"))?.as_f32()?;
+        let codes = unpack_container(pk.as_u8()?, d_in, pk.shape[1], cb, d_out);
+        let q = dequantize_grouped(&codes, &sc, &zp, d_in, d_out, m.group_size);
+        let wn: f64 = w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        Ok(ProjProbe { base, bits, d_in, d_out, w, q, wn })
+    }
+
+    /// `‖W − (deq(W) + Δtag)‖ / ‖W‖`, with Δ the `tag` compensator's
+    /// reconstructed U·V (no delta buffer is built for the plain case).
+    fn error(&self, model: &StagedModel, tag: Option<&str>) -> Result<f64> {
+        let sq: f64 = match tag {
+            Some(t) => {
+                let delta = comp_delta(model, &self.comp_prefix(t), self.d_in, self.d_out)?;
+                self.w
+                    .iter()
+                    .zip(self.q.iter().zip(&delta))
+                    .map(|(a, (b, dl))| ((a - b - dl) as f64).powi(2))
+                    .sum()
+            }
+            None => {
+                self.w.iter().zip(&self.q).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+            }
+        };
+        Ok(sq.sqrt() / self.wn.max(1e-12))
+    }
+
+    /// Store-key prefix of this projection's `tag` compensator set.
+    fn comp_prefix(&self, tag: &str) -> String {
+        format!("{}.comp{}.{tag}", self.base, self.bits)
+    }
+}
+
 fn residual_norms(
     model: &StagedModel,
     li: usize,
@@ -304,45 +371,13 @@ fn residual_norms(
     bits: u8,
     tags: &[&str],
 ) -> Result<Vec<(String, f64)>> {
-    let m = &model.manifest.model;
-    let (d_in, d_out) = match proj {
-        "w2" => (m.d_ff, m.d_model),
-        _ => (m.d_model, m.d_ff),
-    };
-    let base = format!("layers.{li}.experts.{e}.{proj}");
-    let w = model.store.get(&format!("{base}.fp32"))?.as_f32()?;
-    let cb = model.manifest.container_bits(bits) as usize;
-
-    let q = {
-        let pk = model.store.get(&format!("{base}.hqq{bits}.pk"))?;
-        let sc = model.store.get(&format!("{base}.hqq{bits}.sc"))?.as_f32()?;
-        let zp = model.store.get(&format!("{base}.hqq{bits}.zp"))?.as_f32()?;
-        let codes = unpack_container(pk.as_u8()?, d_in, pk.shape[1], cb as u8, d_out);
-        dequantize_grouped(&codes, &sc, &zp, d_in, d_out, m.group_size)
-    };
-    let wn: f64 = w.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
-    let mut out = Vec::new();
-    let eq: f64 = w
-        .iter()
-        .zip(&q)
-        .map(|(a, b)| ((a - b) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt();
-    out.push(("quant".to_string(), eq / wn));
-
+    let probe = ProjProbe::new(model, li, e, proj, bits)?;
+    let mut out = vec![("quant".to_string(), probe.error(model, None)?)];
     for tag in tags {
-        let c = format!("{base}.comp{bits}.{tag}");
-        if !model.store.contains(&format!("{c}.up")) {
+        if !model.store.contains(&format!("{}.up", probe.comp_prefix(tag))) {
             continue;
         }
-        let delta = comp_delta(model, &c, d_in, d_out)?;
-        let ec: f64 = w
-            .iter()
-            .zip(q.iter().zip(&delta))
-            .map(|(a, (b, dl))| ((a - b - dl) as f64).powi(2))
-            .sum::<f64>()
-            .sqrt();
-        out.push((tag.to_string(), ec / wn));
+        out.push((tag.to_string(), probe.error(model, Some(tag))?));
     }
     Ok(out)
 }
@@ -716,6 +751,251 @@ pub fn prefetch(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive sweep — heterogeneous precision vs uniform at equal byte budget
+// ---------------------------------------------------------------------------
+
+/// `‖W − Ŵ(precision)‖/‖W‖` averaged over one expert's three projections:
+/// the FFN-vs-fp16 weight error of serving this expert at `precision`
+/// (0 for fp16; quantization residual for `Int`; residual after the `tag`
+/// low-rank restore for `IntComp`).
+pub fn expert_weight_error(
+    model: &StagedModel,
+    layer: usize,
+    expert: usize,
+    precision: Precision,
+    tag: &str,
+) -> Result<f64> {
+    let (bits, comp) = match precision {
+        Precision::Fp16 => return Ok(0.0),
+        Precision::Int(b) => (b, None),
+        Precision::IntComp(b) => (b, Some(tag)),
+    };
+    let mut total = 0.0;
+    for proj in ["w1", "w2", "w3"] {
+        total += ProjProbe::new(model, layer, expert, proj, bits)?.error(model, comp)?;
+    }
+    Ok(total / 3.0)
+}
+
+/// Demand-weighted error with a caller-owned memo: [`expert_weight_error`]
+/// is pure in (layer, expert, precision), so the sweep reuses one table
+/// across budget points and testbeds instead of re-dequantizing.  The memo
+/// is keyed without `tag` — reuse one cache only with a fixed tag.
+fn weighted_error_cached(
+    model: &StagedModel,
+    cache: &mut HashMap<(usize, usize, Precision), f64>,
+    assignment: &[Vec<Precision>],
+    scores: &[Vec<f64>],
+    tag: &str,
+) -> Result<f64> {
+    let mass: f64 = scores.iter().flatten().sum();
+    let n: usize = assignment.iter().map(Vec::len).sum();
+    let mut err = 0.0;
+    for (li, row) in assignment.iter().enumerate() {
+        for (ei, p) in row.iter().enumerate() {
+            let w = if mass > 0.0 { scores[li][ei] / mass } else { 1.0 / n.max(1) as f64 };
+            if w > 0.0 {
+                let e = match cache.get(&(li, ei, *p)) {
+                    Some(e) => *e,
+                    None => {
+                        let e = expert_weight_error(model, li, ei, *p, tag)?;
+                        cache.insert((li, ei, *p), e);
+                        e
+                    }
+                };
+                err += w * e;
+            }
+        }
+    }
+    Ok(err)
+}
+
+/// Routing-demand-weighted mean of [`expert_weight_error`] over a
+/// `[layer][expert]` precision assignment — the accuracy axis of the
+/// adaptive-vs-uniform comparison.  `scores` is the allocator's EWMA
+/// demand table (`Report::alloc`); an all-zero table weighs uniformly.
+pub fn demand_weighted_error(
+    model: &StagedModel,
+    assignment: &[Vec<Precision>],
+    scores: &[Vec<f64>],
+    tag: &str,
+) -> Result<f64> {
+    weighted_error_cached(model, &mut HashMap::new(), assignment, scores, tag)
+}
+
+/// Not a paper figure: the heterogeneity-aware precision-allocator sweep
+/// (DESIGN.md §10).  For both testbeds and a ladder of equal byte
+/// budgets, it serves uniform `static-quant` (the best uniform bit-width
+/// that fits the budget) against `adaptive` (the budgeted per-expert
+/// allocator at the same budget), reporting virtual throughput, decode
+/// weight-transfer stall, and the demand-weighted FFN-vs-fp16 weight
+/// error.  At the floor budget the adaptive plan degenerates to the
+/// uniform one and the byte ledgers must match exactly; above it, hot
+/// experts climb to compensated/high-bit payloads the uniform policy
+/// cannot reach without jumping a whole rung.
+///
+/// With `--smoke` (or no artifacts) it runs on the built-in synthetic
+/// model with a tiny workload — the artifact-free CI path.
+pub fn adaptive(h: &mut Harness) -> Result<()> {
+    let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
+    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
+        Box::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = h.artifacts.clone();
+        let backend = Arc::clone(&h.backend);
+        Box::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(Arc::clone(&backend), manifest)
+        })
+    };
+    // One resident copy for the manifest, ladder and weight-error probes.
+    let probe = mk_model()?;
+    let manifest = probe.manifest.clone();
+    let dims = manifest.model.clone();
+    let mut bits: Vec<u8> = manifest.quant.bits.clone();
+    bits.sort_unstable();
+    bits.dedup();
+    let floor_bits = bits[0];
+    // One comp tag binds the budget points, the served adaptive config
+    // and the error probes — they must price the same payloads.
+    let tag = "default";
+    let ladder = PrecisionLadder::from_manifest(&manifest, tag, floor_bits)?;
+    let pairs = dims.n_layers * dims.n_experts;
+    let uniform_cost = |b: u8| pairs * manifest.q_expert_bytes(b);
+    let comp_total = manifest.comp_bytes_total(tag, floor_bits);
+
+    // Equal-budget ladder: every uniform bit-width's total cost, plus the
+    // point uniform quantization cannot exploit — the floor width with
+    // compensate-everything headroom (heterogeneity's home turf).
+    let mut points: Vec<(String, usize)> =
+        bits.iter().map(|&b| (format!("eq-int{b}"), uniform_cost(b))).collect();
+    if comp_total > 0 {
+        points.push((format!("int{floor_bits}+comp"), uniform_cost(floor_bits) + comp_total));
+    }
+    points.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+    points.dedup_by_key(|p| p.1);
+
+    let (n_req, prompt_len, out_len) =
+        if smoke { (2, 32, 8) } else { (h.serve_requests, 256, 64) };
+    let eval = if smoke {
+        synth::tiny_eval_store(&dims)?
+    } else {
+        crate::manifest::WeightStore::load(probe.manifest.eval_path())?
+    };
+    let requests =
+        WorkloadGen::generate(&WorkloadConfig::offline(n_req, prompt_len, out_len), &eval)?;
+    // Offloading regime: the cache holds roughly half the floor plan.
+    let cache_bytes = (ladder.floor_bytes() / 2).max(manifest.q_expert_bytes(floor_bits));
+
+    let serve = |policy: PolicyConfig, ndp: bool| -> Result<Report> {
+        let model = mk_model()?;
+        let mut sys = SystemConfig::scaled_for(&model.manifest.model, ndp);
+        sys.gpu_cache_bytes = cache_bytes;
+        let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+        for req in &requests {
+            server.submit(req.clone())?;
+        }
+        server.run_to_completion()
+    };
+
+    h.sink.line(format!(
+        "== Adaptive sweep ({}, out={out_len}{}): per-expert precision vs uniform at equal byte budget ==",
+        dims.name,
+        if smoke { ", smoke" } else { "" },
+    ));
+    h.sink.line(format!(
+        "  floor int{floor_bits}: plan {}B | all-fp16 {}B | budgets: {}",
+        ladder.floor_bytes(),
+        ladder.top_bytes(),
+        points
+            .iter()
+            .map(|(n, b)| format!("{n}={b}B"))
+            .collect::<Vec<_>>()
+            .join(" "),
+    ));
+    let mut rows = Vec::new();
+    // Per-(layer, expert, precision) weight errors are model-fixed: one
+    // memo serves every budget point and both testbeds.
+    let mut werr_cache: HashMap<(usize, usize, Precision), f64> = HashMap::new();
+    for ndp in [false, true] {
+        let testbed = if ndp { "gpu-ndp" } else { "gpu" };
+        h.sink.line(format!("  -- testbed: {testbed} --"));
+        for (label, budget) in &points {
+            let uniform_bits = bits
+                .iter()
+                .copied()
+                .filter(|&b| uniform_cost(b) <= *budget)
+                .max()
+                .unwrap_or(floor_bits);
+            let uni = serve(PolicyConfig::new("static-quant", uniform_bits, 0), ndp)?;
+            let mut ada_cfg = PolicyConfig::new("adaptive", floor_bits, 0);
+            ada_cfg.comp_tag = tag.to_string();
+            ada_cfg.alloc_budget_bytes = Some(*budget);
+            let ada = serve(ada_cfg, ndp)?;
+            let alloc = ada
+                .alloc
+                .as_ref()
+                .context("adaptive run must carry an allocator report")?;
+            let uniform_assignment =
+                vec![vec![Precision::Int(uniform_bits); dims.n_experts]; dims.n_layers];
+            let e_uni = weighted_error_cached(
+                &probe,
+                &mut werr_cache,
+                &uniform_assignment,
+                &alloc.scores,
+                tag,
+            )?;
+            let e_ada = weighted_error_cached(
+                &probe,
+                &mut werr_cache,
+                &alloc.assignment,
+                &alloc.scores,
+                tag,
+            )?;
+            let variants = [
+                (format!("static-quant{uniform_bits}"), &uni, e_uni),
+                ("adaptive".to_string(), &ada, e_ada),
+            ];
+            for (name, r, e) in variants {
+                h.sink.line(format!(
+                    "    {label:<10} {name:<15} {:>8.2} tok/s | stall {:>8.5}s | werr {:>7.4} | xfer {:>9}B",
+                    r.tokens_per_second(),
+                    r.breakdown.transfer_stall_s,
+                    e,
+                    r.bytes.values().sum::<usize>(),
+                ));
+                rows.push(format!(
+                    "{testbed},{label},{name},{budget},{},{},{}",
+                    r.tokens_per_second(),
+                    r.breakdown.transfer_stall_s,
+                    e,
+                ));
+            }
+            h.sink.line(format!("    {label:<10} {:<15} {}", "alloc", alloc.summary()));
+            if *budget == uniform_cost(floor_bits) {
+                h.sink.line(format!(
+                    "    {label:<10} degenerate uniform budget: byte ledgers identical = {}",
+                    uni.bytes == ada.bytes,
+                ));
+            }
+        }
+    }
+    h.sink.csv(
+        "adaptive_sweep.csv",
+        "testbed,budget_label,policy,budget_bytes,tokens_per_s,stall_s,weighted_err",
+        &rows,
+    )?;
+    h.sink.line(
+        "  (expected: equal-budget adaptive ≤ uniform on demand-weighted error — hot experts \
+         climb to comp/high-bit rungs; at the floor budget the plans and byte ledgers coincide)",
+    );
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -748,8 +1028,11 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "fig8" => fig8(h),
         "tab2" => tab2(h),
         "prefetch" => prefetch(h),
+        "adaptive" => adaptive(h),
         "all" => all(h),
-        other => anyhow::bail!("unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, all)"),
+        other => {
+            anyhow::bail!("unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, all)")
+        }
     }
     .and_then(|_| {
         if name != "all" {

@@ -12,7 +12,8 @@
 //!
 //! * [`config`]     — model/system/policy configuration
 //! * [`manifest`]   — artifact manifest + BEAMW weight store
-//! * [`quant`]      — bit-format accounting + reference dequantization
+//! * [`quant`]      — bit-format accounting, reference dequantization, and
+//!   the budgeted per-expert precision allocator (DESIGN.md §10)
 //! * [`backend`]    — pluggable numerics: host tensors, the
 //!   [`backend::Backend`]/[`backend::StagedExec`] traits, the reference
 //!   backend, and (feature-gated) the PJRT backend
@@ -24,8 +25,9 @@
 //! * [`registry`]   — the shared name → constructor table (aliases,
 //!   sorted listings) behind both open registries (DESIGN.md §9)
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
-//!   **BEAM** (router-guided top-n compensation — the paper), dispatched
-//!   through the open name → constructor `PolicyRegistry`
+//!   **BEAM** (router-guided top-n compensation — the paper) / `adaptive`
+//!   (demand-driven per-expert precision), dispatched through the open
+//!   name → constructor `PolicyRegistry`
 //! * [`predict`]    — router-guided expert predictors driving speculative
 //!   prefetch (EWMA / gate lookahead / oracle replay), dispatched through
 //!   the open `PredictorRegistry`

@@ -4,13 +4,18 @@
 //! beam serve  --model mixtral-tiny --policy beam --bits 2 [--ndp]
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
 //!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
-//!             [--lookahead N] [--max-pending N]
+//!             [--lookahead N] [--max-pending N] [--alloc-budget BYTES]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|all>
-//!             [--out DIR] [--full]
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|all>
+//!             [--out DIR] [--full] [--smoke]
 //! beam info   --model mixtral-tiny
 //! ```
+//!
+//! `--policy adaptive` serves the budgeted per-expert precision allocator
+//! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
+//! byte budget across all layer×expert payloads.  `figure adaptive --smoke`
+//! runs the sweep artifact-free on the synthetic model (the CI path).
 //!
 //! `--policy` and `--prefetch` resolve through the open policy/predictor
 //! registries (DESIGN.md §9): `beam serve --policy biglittle` works even
@@ -50,7 +55,7 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
-        let bools = ["ndp", "full", "raw-system"];
+        let bools = ["ndp", "full", "raw-system", "smoke"];
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
@@ -100,6 +105,9 @@ fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
     let mut p = PolicyConfig::new(&args.get("policy", "beam"), bits, top_n);
     p.comp_tag = args.get("comp-tag", "default");
     p.method = args.get("method", "hqq");
+    if let Some(b) = args.opt("alloc-budget") {
+        p.alloc_budget_bytes = Some(b.parse().context("--alloc-budget")?);
+    }
     if let Some(pos) = args.opt("positions") {
         p.restore_positions = Some(
             pos.split(',')
@@ -217,6 +225,9 @@ fn main() -> Result<()> {
                     report.breakdown.transfer_stall_s,
                 );
             }
+            if let Some(a) = &report.alloc {
+                println!("  alloc: {}", a.summary());
+            }
             println!(
                 "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",
                 report.virtual_seconds,
@@ -258,6 +269,7 @@ fn main() -> Result<()> {
             let out = args.opt("out").map(PathBuf::from);
             let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
             let mut h = Harness::with_backend(artifacts, out, args.has("full"), backend)?;
+            h.smoke = args.has("smoke");
             figures::run(&name, &mut h)
         }
         "info" => {

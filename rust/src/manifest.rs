@@ -165,7 +165,38 @@ impl Manifest {
             comp_bytes,
         };
 
-        Ok(Manifest { model, stages, quant, rank_table, mat_keys, transfer, dir })
+        let manifest = Manifest { model, stages, quant, rank_table, mat_keys, transfer, dir };
+        manifest.validate().context("validating manifest.json")?;
+        Ok(manifest)
+    }
+
+    /// Reject impossible model-dims/bit-width combinations up front, with
+    /// enough context to point at the bad knob — the pack-chunk rules used
+    /// to surface as an `assert!` panic deep inside byte accounting.
+    pub fn validate(&self) -> Result<()> {
+        let m = &self.model;
+        let g = m.group_size;
+        if g == 0 || m.d_model % g != 0 || m.d_ff % g != 0 {
+            bail!(
+                "model `{}`: group_size {g} must divide d_model {} and d_ff {}",
+                m.name,
+                m.d_model,
+                m.d_ff
+            );
+        }
+        for &bits in &self.quant.bits {
+            let (cpc, _) = crate::quant::formats::pack_chunk(bits)
+                .with_context(|| format!("model `{}` declares {bits}-bit payloads", m.name))?;
+            if (m.d_model * m.d_ff) % cpc != 0 {
+                bail!(
+                    "model `{}`: d_model×d_ff = {} is not a multiple of the {bits}-bit \
+                     pack chunk ({cpc} codes) — these dims cannot ship {bits}-bit experts",
+                    m.name,
+                    m.d_model * m.d_ff
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn stage_path(&self, name: &str) -> Result<PathBuf> {
@@ -200,6 +231,20 @@ impl Manifest {
             .get(&bits)
             .copied()
             .unwrap_or_else(|| self.model.expert_params() * bits as usize / 8)
+    }
+
+    /// Total `tag` compensator bytes at `bits` across every (layer,
+    /// expert) — the "compensate everything" headroom the adaptive
+    /// sweep's budget points are denominated in (DESIGN.md §10).
+    pub fn comp_bytes_total(&self, tag: &str, bits: u8) -> usize {
+        let (nl, ne) = (self.model.n_layers, self.model.n_experts);
+        let mut total = 0;
+        for layer in 0..nl {
+            for expert in 0..ne {
+                total += self.comp_bytes(tag, bits, layer, expert);
+            }
+        }
+        total
     }
 
     /// Compensator bytes for (tag, bits, layer, expert); 0 when absent.

@@ -47,8 +47,13 @@ impl PrefetchQueue {
 
     /// Reserve budget for one speculative transfer; `false` once the step
     /// budget is exhausted (the caller stops issuing until the next step).
+    ///
+    /// Zero-byte requests and zero budgets are rejected outright: a
+    /// `try_spend(0)` used to "succeed" against an exhausted (or disabled)
+    /// budget, letting zero-byte speculative transfers be issued and
+    /// counted in `issued`, which deflated the reported hit rate.
     pub fn try_spend(&mut self, bytes: usize) -> bool {
-        if bytes > self.step_budget - self.spent_this_step.min(self.step_budget) {
+        if bytes == 0 || self.step_budget == 0 || bytes > self.budget_left() {
             return false;
         }
         self.spent_this_step += bytes;
@@ -90,7 +95,19 @@ mod tests {
     fn zero_budget_never_spends() {
         let mut q = PrefetchQueue::new(0);
         assert!(!q.try_spend(1));
-        assert!(!q.try_spend(0) || q.budget_left() == 0);
+        assert!(!q.try_spend(0), "a zero budget rejects even zero-byte requests");
+    }
+
+    #[test]
+    fn zero_byte_requests_are_rejected_even_with_budget() {
+        // Regression: try_spend(0) used to succeed, issuing zero-byte
+        // speculative transfers that inflated `issued` (deflating
+        // hit_rate) without moving anything.
+        let mut q = PrefetchQueue::new(100);
+        assert!(!q.try_spend(0));
+        assert_eq!(q.budget_left(), 100, "a rejected request spends nothing");
+        assert!(q.try_spend(100));
+        assert!(!q.try_spend(0), "still rejected once the budget is gone");
     }
 
     #[test]

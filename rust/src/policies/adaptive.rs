@@ -1,0 +1,116 @@
+//! Adaptive per-expert precision (DESIGN.md §10).
+//!
+//! The paper's §2.1 motivation — uniform static quantization "degrades
+//! accuracy under aggressive compression by ignoring expert heterogeneity"
+//! — made concrete: the engine's budgeted allocator
+//! (`quant::alloc::PrecisionAllocator`) assigns each (layer, expert) a
+//! `(bits, compensator)` rung under a total byte budget, driven by EWMA
+//! routing popularity and refreshed at decode-step boundaries.  Hot
+//! experts climb toward compensated/high-bit payloads; cold ones stay at
+//! the low-bit floor.  This policy is the *consumer* of that plan: it
+//! reads the per-layer precision map off [`PlanCtx::precisions`] and
+//! otherwise mirrors `static-quant` exactly — same expert grouping, same
+//! GPU placement — so a floor-only budget reproduces the uniform policy's
+//! byte ledger bit-for-bit (the degenerate case `tests/adaptive.rs` pins).
+//!
+//! Related work this subsystem deliberately echoes: Dynamic Expert
+//! Quantization (arXiv:2511.15015) drives per-expert precision from
+//! routing statistics; MoBiLE (arXiv:2510.12357) switches hot experts to
+//! higher-fidelity replicas.
+
+use crate::config::Precision;
+use crate::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx, Policy};
+
+pub struct AdaptivePolicy {
+    /// Floor bit-width: what every expert falls back to before the first
+    /// allocation (and on the teacher-forced scoring path), and the bulk
+    /// payload prefetch budgets are denominated in.
+    pub floor_bits: u8,
+}
+
+impl Policy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn plan(&self, ctx: &PlanCtx) -> LayerPlan {
+        let mut plan = LayerPlan::default();
+        for (expert, tokens) in group_by_expert(ctx).into_iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let precision = ctx
+                .precisions
+                .map(|p| p[expert])
+                .unwrap_or(Precision::Int(self.floor_bits));
+            plan.execs.push(ExpertExec {
+                expert,
+                precision,
+                location: Location::Gpu,
+                tokens,
+            });
+        }
+        plan
+    }
+
+    fn bulk_precision(&self) -> Precision {
+        Precision::Int(self.floor_bits)
+    }
+
+    fn wants_precision_plan(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        probs: &'a [f32],
+        active: &'a [bool],
+        precisions: Option<&'a [Precision]>,
+    ) -> PlanCtx<'a> {
+        PlanCtx {
+            probs,
+            n_tokens: active.len(),
+            n_experts: 4,
+            top_k: 2,
+            active,
+            ndp: false,
+            fp16_cached: &|_| false,
+            predicted: None,
+            precisions,
+        }
+    }
+
+    #[test]
+    fn without_a_map_every_exec_runs_the_floor() {
+        let probs = vec![0.6f32, 0.3, 0.05, 0.05];
+        let active = vec![true];
+        let plan = AdaptivePolicy { floor_bits: 2 }.plan(&ctx(&probs, &active, None));
+        assert_eq!(plan.assignments(), 2);
+        for e in &plan.execs {
+            assert_eq!(e.precision, Precision::Int(2));
+            assert_eq!(e.location, Location::Gpu);
+        }
+    }
+
+    #[test]
+    fn map_precisions_flow_into_the_plan() {
+        let probs = vec![0.6f32, 0.3, 0.05, 0.05];
+        let active = vec![true];
+        let map = [
+            Precision::IntComp(2),
+            Precision::Int(2),
+            Precision::Fp16,
+            Precision::Int(2),
+        ];
+        let plan = AdaptivePolicy { floor_bits: 2 }.plan(&ctx(&probs, &active, Some(&map)));
+        // Experts 0 and 1 are routed; each exec carries its mapped rung.
+        for e in &plan.execs {
+            assert_eq!(e.precision, map[e.expert]);
+        }
+        assert!(plan.execs.iter().any(|e| e.precision.compensated()));
+    }
+}

@@ -91,6 +91,7 @@ mod tests {
             ndp,
             fp16_cached: cached,
             predicted: None,
+            precisions: None,
         }
     }
 

@@ -74,6 +74,7 @@ mod tests {
             ndp: false,
             fp16_cached: &cached,
             predicted: None,
+            precisions: None,
         };
         let plan = BigLittlePolicy { bits: 2 }.plan(&ctx);
         assert_eq!(plan.assignments(), 4);

@@ -46,6 +46,7 @@ mod tests {
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
+            precisions: None,
         };
         let plan = MixtralOffloadPolicy.plan(&ctx);
         assert_eq!(plan.assignments(), 4);

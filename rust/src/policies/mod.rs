@@ -16,6 +16,7 @@
 //! | `monde`           | Kim et al. 2024                   | cold experts execute on NDP (fp16) |
 //! | `beam`            | **this paper**                    | low-bit + router-guided top-n low-rank restore; non-restored experts run near-data when NDP exists |
 //! | `biglittle`       | MoBiLE-style demo                 | rank-0 rows FP16, rest low-bit — registered in `registry.rs` only |
+//! | `adaptive`        | Dynamic Expert Quantization-style | per-expert `(bits, comp)` from the budgeted allocator (DESIGN.md §10); hot experts climb, cold stay at the floor |
 //!
 //! Dispatch is an open **name → constructor registry** ([`registry`],
 //! DESIGN.md §9): new strategies register at runtime instead of editing a
@@ -24,6 +25,7 @@
 pub mod plan;
 pub mod registry;
 
+mod adaptive;
 mod beam;
 mod biglittle;
 mod hobbit;
@@ -31,6 +33,7 @@ mod mixtral_offload;
 mod monde;
 mod static_quant;
 
+pub use adaptive::AdaptivePolicy;
 pub use beam::BeamPolicy;
 pub use biglittle::BigLittlePolicy;
 pub use hobbit::HobbitPolicy;

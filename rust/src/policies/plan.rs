@@ -71,6 +71,11 @@ pub struct PlanCtx<'a> {
     /// when the prefetch subsystem is active — advisory demand forecast a
     /// policy may consult (DESIGN.md §8); `None` when prediction is off.
     pub predicted: Option<&'a [f64]>,
+    /// Per-expert precision map for this layer from the budgeted allocator
+    /// (DESIGN.md §10), present when the policy opted in via
+    /// [`Policy::wants_precision_plan`]; `None` for fixed-precision
+    /// policies and before the engine built an allocator.
+    pub precisions: Option<&'a [Precision]>,
 }
 
 /// Top-k selection with renormalization over the selected set — mirrors
@@ -87,10 +92,19 @@ pub fn topk_renorm(row: &[f32], k: usize) -> Vec<(usize, f32, usize)> {
     idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
     let chosen = &idx[..k.min(idx.len())];
     let total: f32 = chosen.iter().map(|&e| row[e]).sum();
+    // An all-zero (or NaN-poisoned) router row has no mass to renormalize;
+    // dividing by its sum would hand every downstream combine a NaN weight
+    // that silently poisons the hidden state.  Fall back to uniform
+    // weights over the chosen set — the `total > 0` test is false for NaN
+    // too, so both degenerate rows take the guarded path.
+    let uniform = 1.0 / chosen.len().max(1) as f32;
     chosen
         .iter()
         .enumerate()
-        .map(|(rank, &e)| (e, row[e] / total, rank))
+        .map(|(rank, &e)| {
+            let w = if total > 0.0 { row[e] / total } else { uniform };
+            (e, w, rank)
+        })
         .collect()
 }
 
@@ -111,6 +125,14 @@ pub trait Policy: Send + Sync {
     /// policy — not on a config enum — so registry-registered strategies
     /// can opt in too.
     fn prewarm_fp16(&self) -> bool {
+        false
+    }
+
+    /// Should the engine run the budgeted per-expert precision allocator
+    /// (DESIGN.md §10) and hand its per-layer map to `plan` through
+    /// [`PlanCtx::precisions`]?  Opted into by `adaptive`; fixed-precision
+    /// policies keep the default.
+    fn wants_precision_plan(&self) -> bool {
         false
     }
 }
@@ -148,6 +170,23 @@ mod tests {
     }
 
     #[test]
+    fn topk_all_zero_row_falls_back_to_uniform_weights() {
+        // Regression: an all-zero router row used to divide by a zero sum,
+        // yielding NaN combine weights that poisoned the hidden state.
+        let sel = topk_renorm(&[0.0f32, 0.0, 0.0, 0.0], 2);
+        assert_eq!(sel.len(), 2);
+        for (_, w, _) in &sel {
+            assert!(w.is_finite(), "weight must be finite, got {w}");
+            assert!((w - 0.5).abs() < 1e-6, "uniform over the chosen set");
+        }
+        let s: f32 = sel.iter().map(|x| x.1).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        // NaN-poisoned rows take the same guarded path.
+        let sel = topk_renorm(&[f32::NAN, f32::NAN], 2);
+        assert!(sel.iter().all(|(_, w, _)| (w - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
     fn topk_tie_breaks_by_index() {
         let row = [0.25f32, 0.25, 0.25, 0.25];
         let sel = topk_renorm(&row, 2);
@@ -166,6 +205,7 @@ mod tests {
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
+            precisions: None,
         };
         let groups = group_by_expert(&ctx);
         let total: usize = groups.iter().map(|g| g.len()).sum();
@@ -182,6 +222,7 @@ mod tests {
         let ctx = PlanCtx {
             probs: &probs, n_tokens: 2, n_experts: 2, top_k: 1,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
+            precisions: None,
         };
         let groups = group_by_expert(&ctx);
         assert_eq!(groups[0].len(), 1);

@@ -13,15 +13,23 @@
 
 use std::sync::{Arc, OnceLock, RwLock};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::PolicyConfig;
 use crate::policies::plan::Policy;
 use crate::policies::{
-    BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
+    AdaptivePolicy, BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
     StaticQuantPolicy,
 };
 use crate::registry::NameTable;
+
+/// Quantized-policy knob validation: an unsupported `--bits` fails here
+/// with a contextful error instead of panicking inside byte accounting.
+fn checked_bits(policy: &str, bits: u8) -> Result<u8> {
+    crate::quant::formats::pack_chunk(bits)
+        .with_context(|| format!("policy `{policy}`: invalid --bits {bits}"))?;
+    Ok(bits)
+}
 
 /// Constructs a policy from the shared knob set.  Constructors may reject
 /// a config (bad bits, missing knob) with a contextful error.
@@ -46,22 +54,34 @@ impl PolicyRegistry {
         r.register("mixtral-offload", |_| Ok(Box::new(MixtralOffloadPolicy)));
         r.alias("mixtral-offloading", "mixtral-offload");
         r.alias("fp16", "mixtral-offload");
-        r.register("static-quant", |cfg| Ok(Box::new(StaticQuantPolicy { bits: cfg.bits })));
+        r.register("static-quant", |cfg| {
+            Ok(Box::new(StaticQuantPolicy { bits: checked_bits("static-quant", cfg.bits)? }))
+        });
         r.alias("quant", "static-quant");
         r.register("hobbit", |cfg| {
             Ok(Box::new(HobbitPolicy {
                 hi_threshold: cfg.hobbit_hi_threshold,
-                lo_bits: cfg.hobbit_lo_bits,
+                lo_bits: checked_bits("hobbit", cfg.hobbit_lo_bits)?,
             }))
         });
         r.register("monde", |_| Ok(Box::new(MondePolicy)));
         r.register("beam", |cfg| {
-            Ok(Box::new(BeamPolicy { bits: cfg.bits, positions: cfg.positions() }))
+            Ok(Box::new(BeamPolicy {
+                bits: checked_bits("beam", cfg.bits)?,
+                positions: cfg.positions(),
+            }))
         });
         r.alias("ours", "beam");
         // Registry-only demo (NOT listed in config.rs): proves strategies
         // plug in by registration alone.
-        r.register("biglittle", |cfg| Ok(Box::new(BigLittlePolicy { bits: cfg.bits })));
+        r.register("biglittle", |cfg| {
+            Ok(Box::new(BigLittlePolicy { bits: checked_bits("biglittle", cfg.bits)? }))
+        });
+        // Budgeted per-expert precision (DESIGN.md §10): cfg.bits is the
+        // floor width; the byte budget rides cfg.alloc_budget_bytes.
+        r.register("adaptive", |cfg| {
+            Ok(Box::new(AdaptivePolicy { floor_bits: checked_bits("adaptive", cfg.bits)? }))
+        });
         r
     }
 
@@ -146,10 +166,23 @@ mod tests {
         let mut sorted = names.clone();
         sorted.sort();
         assert_eq!(names, sorted);
-        let expected = ["beam", "biglittle", "hobbit", "mixtral-offload", "monde", "static-quant"];
+        let expected =
+            ["adaptive", "beam", "biglittle", "hobbit", "mixtral-offload", "monde", "static-quant"];
         for name in expected {
             assert!(names.contains(&name.to_string()), "missing {name}");
         }
+    }
+
+    #[test]
+    fn bad_bits_fail_at_construction_with_context() {
+        let r = PolicyRegistry::builtin();
+        for policy in ["static-quant", "beam", "adaptive", "biglittle"] {
+            let err = format!("{:#}", r.create(&PolicyConfig::new(policy, 5, 0)).unwrap_err());
+            assert!(err.contains(&format!("policy `{policy}`")), "{err}");
+            assert!(err.contains("unsupported bit-width 5"), "{err}");
+        }
+        // mixtral-offload ignores bits entirely (its payloads are fp16).
+        assert!(r.create(&PolicyConfig::new("mixtral-offload", 16, 0)).is_ok());
     }
 
     #[test]

@@ -27,6 +27,12 @@ impl EwmaPopularity {
     pub fn score(&self, layer: usize, expert: usize) -> f64 {
         self.scores[layer][expert]
     }
+
+    /// The full `[layer][expert]` score table — the demand input of the
+    /// budgeted precision allocator (`quant::alloc`, DESIGN.md §10).
+    pub fn scores(&self) -> &[Vec<f64>] {
+        &self.scores
+    }
 }
 
 impl ExpertPredictor for EwmaPopularity {

@@ -1,0 +1,445 @@
+//! Budgeted per-expert precision allocation (DESIGN.md §10).
+//!
+//! The paper's motivating claim is that *uniform* static quantization
+//! ignores expert heterogeneity: routing mass is heavily skewed, so the
+//! bytes spent hauling a cold expert at 4-bit would buy far more accuracy
+//! spent on compensators (or extra bits) for a hot one.  This module turns
+//! that trade-off into an explicit optimization: given
+//!
+//! * a **precision ladder** per (layer, expert) — the payload variants the
+//!   artifact actually ships, priced at their true wire bytes
+//!   ([`PrecisionLadder::from_manifest`], the §7 packed-size rule), and
+//! * per-(layer, expert) **demand scores** — EWMA routing popularity from
+//!   `predict::EwmaPopularity`, refreshed at decode-step boundaries, and
+//! * a total **byte budget** over all layer×expert payloads,
+//!
+//! [`allocate`] solves a greedy incremental knapsack: every expert starts
+//! at the floor (cheapest) rung, then single-rung upgrades are applied in
+//! descending `score / Δbytes` order until the next upgrade no longer
+//! fits.  The upgrade *sequence* depends only on scores and ladder costs —
+//! never on the budget — so the plan is **monotone in budget**: more
+//! budget can only raise an expert's precision (the property
+//! `tests/adaptive.rs` sweeps).  Two corner cases anchor the contract:
+//! a budget equal to the floor cost admits no upgrade (the plan degenerates
+//! to uniform `static-quant` at the floor width, byte-identical ledger and
+//! all), and a budget of `n × fp16` walks every expert to the top rung.
+//!
+//! [`PrecisionAllocator`] packages ladder + budget + EWMA + current plan
+//! for the engine: `observe` feeds each layer's router outcome, `replan`
+//! recomputes the assignment at decode-step boundaries (next to
+//! `PrefetchQueue::begin_step`), and `layer` hands the per-expert
+//! precision map to policies through `PlanCtx::precisions`.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::Precision;
+use crate::manifest::Manifest;
+// `ExpertPredictor` is in scope for its `observe` method on the EWMA.
+use crate::predict::{EwmaPopularity, ExpertPredictor, LayerObservation};
+
+/// One rung of an expert's precision ladder: a payload variant and its
+/// wire-byte cost (true packed sizes — DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RungCost {
+    pub precision: Precision,
+    pub bytes: usize,
+}
+
+/// Per-(layer, expert) precision options, strictly ascending in cost.
+/// Rung 0 is the floor every expert can afford; the last rung is FP16.
+#[derive(Debug, Clone)]
+pub struct PrecisionLadder {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// `[layer][expert]` → ascending-cost rungs.
+    pub rungs: Vec<Vec<Vec<RungCost>>>,
+}
+
+impl PrecisionLadder {
+    /// Build the ladder from an artifact manifest: `Int(b)` for every
+    /// shipped bit-width at or above `floor_bits` (`quant.bits`, priced by
+    /// `q_expert_bytes`), `IntComp(b)` wherever the `tag` compensator
+    /// table has bytes for (b, layer, expert) (`comp_bytes`), and `Fp16`
+    /// on top.  `floor_bits` is the adaptive policy's `--bits` knob: no
+    /// expert is ever served below it.  Candidates whose cost does not
+    /// strictly exceed the previous rung are dropped, so "one rung up"
+    /// always costs real bytes.
+    ///
+    /// **Modeling assumption**: wire bytes are the fidelity proxy — a
+    /// costlier rung is treated as more faithful.  That holds cleanly
+    /// within a family (more bits, adding a compensator) and is the
+    /// paper's own currency for the bandwidth/accuracy frontier, but a
+    /// manifest could in principle price `IntComp(b)` above `Int(b+1)`
+    /// while restoring less; the `figure adaptive` sweep measures the
+    /// realized demand-weighted error rather than trusting the ordering.
+    pub fn from_manifest(manifest: &Manifest, tag: &str, floor_bits: u8) -> Result<Self> {
+        let m = &manifest.model;
+        let mut bits: Vec<u8> = manifest.quant.bits.clone();
+        bits.sort_unstable();
+        bits.dedup();
+        bits.retain(|&b| b >= floor_bits);
+        ensure!(
+            !bits.is_empty(),
+            "manifest for `{}` ships no quantized bit-width at or above the configured \
+             floor ({floor_bits}-bit; shipped: {:?}) — the precision allocator needs a floor",
+            m.name,
+            manifest.quant.bits
+        );
+        let mut rungs = vec![vec![Vec::new(); m.n_experts]; m.n_layers];
+        for (layer, row) in rungs.iter_mut().enumerate() {
+            for (expert, ladder) in row.iter_mut().enumerate() {
+                let mut cand: Vec<RungCost> = Vec::new();
+                for &b in &bits {
+                    let q = manifest.q_expert_bytes(b);
+                    cand.push(RungCost { precision: Precision::Int(b), bytes: q });
+                    let comp = manifest.comp_bytes(tag, b, layer, expert);
+                    if comp > 0 {
+                        cand.push(RungCost { precision: Precision::IntComp(b), bytes: q + comp });
+                    }
+                }
+                cand.push(RungCost {
+                    precision: Precision::Fp16,
+                    bytes: manifest.transfer.fp16_expert_bytes,
+                });
+                cand.sort_by_key(|r| (r.bytes, r.precision.bits(), r.precision.compensated()));
+                for r in cand {
+                    if ladder.last().is_none_or(|l: &RungCost| r.bytes > l.bytes) {
+                        ladder.push(r);
+                    }
+                }
+            }
+        }
+        Ok(PrecisionLadder { n_layers: m.n_layers, n_experts: m.n_experts, rungs })
+    }
+
+    /// Total bytes of the all-floor plan (every expert at rung 0).
+    pub fn floor_bytes(&self) -> usize {
+        self.rungs.iter().flatten().map(|ladder| ladder[0].bytes).sum()
+    }
+
+    /// Total bytes with every expert at its top rung (FP16 for manifest
+    /// ladders) — the budget at which allocation degenerates to all-fp16.
+    pub fn top_bytes(&self) -> usize {
+        self.rungs
+            .iter()
+            .flatten()
+            .map(|ladder| ladder.last().expect("ladder has a floor rung").bytes)
+            .sum()
+    }
+
+    /// Extra bytes of moving to the `tag` compensated floor everywhere —
+    /// the default headroom [`PrecisionAllocator::new`] grants.
+    fn floor_comp_slack(&self) -> usize {
+        self.rungs
+            .iter()
+            .flatten()
+            .map(|ladder| {
+                ladder
+                    .iter()
+                    .find(|r| r.precision.compensated())
+                    .map_or(0, |r| r.bytes - ladder[0].bytes)
+            })
+            .sum()
+    }
+}
+
+/// The allocator's output: a per-(layer, expert) precision assignment that
+/// fits the byte budget (or sits at the floor when the budget is below
+/// even that).
+#[derive(Debug, Clone, Default)]
+pub struct PrecisionPlan {
+    /// `[layer][expert]` assigned precision.
+    pub assignment: Vec<Vec<Precision>>,
+    /// `[layer][expert]` ladder-rung index behind the assignment
+    /// (monotonicity is stated in rungs, not bits).
+    pub rung: Vec<Vec<usize>>,
+    /// Total wire bytes of the assignment.
+    pub plan_bytes: usize,
+}
+
+impl PrecisionPlan {
+    /// One layer's per-expert precision map (what `PlanCtx` carries).
+    pub fn layer(&self, layer: usize) -> &[Precision] {
+        &self.assignment[layer]
+    }
+}
+
+/// Greedy budgeted assignment (see module docs).  `scores` is the
+/// `[layer][expert]` demand table; ties break toward the lower
+/// (layer, expert) index so the plan is deterministic even from an
+/// all-zero (cold-start) score table.
+pub fn allocate(ladder: &PrecisionLadder, scores: &[Vec<f64>], budget: usize) -> PrecisionPlan {
+    let (nl, ne) = (ladder.n_layers, ladder.n_experts);
+    let mut rung = vec![vec![0usize; ne]; nl];
+    let mut spent = ladder.floor_bytes();
+    loop {
+        // Next upgrade = argmax score/Δbytes over every expert's next rung.
+        // The choice never consults the budget, so a bigger budget replays
+        // the same sequence further — the monotonicity guarantee.
+        let mut best: Option<(f64, usize, usize, usize)> = None;
+        for li in 0..nl {
+            for ei in 0..ne {
+                let steps = &ladder.rungs[li][ei];
+                let r = rung[li][ei];
+                if r + 1 >= steps.len() {
+                    continue;
+                }
+                let delta = steps[r + 1].bytes - steps[r].bytes;
+                let ratio = scores[li][ei] / delta as f64;
+                let better = match best {
+                    None => true,
+                    Some((br, bl, be, _)) => ratio > br || (ratio == br && (li, ei) < (bl, be)),
+                };
+                if better {
+                    best = Some((ratio, li, ei, delta));
+                }
+            }
+        }
+        let Some((_, li, ei, delta)) = best else { break };
+        if spent + delta > budget {
+            break; // stop (never skip): keeps the applied set a prefix
+        }
+        rung[li][ei] += 1;
+        spent += delta;
+    }
+    let mut assignment = Vec::with_capacity(nl);
+    for li in 0..nl {
+        let mut row = Vec::with_capacity(ne);
+        for ei in 0..ne {
+            row.push(ladder.rungs[li][ei][rung[li][ei]].precision);
+        }
+        assignment.push(row);
+    }
+    PrecisionPlan { assignment, rung, plan_bytes: spent }
+}
+
+/// Snapshot of the allocator's final state for the run [`Report`]
+/// (`Report::alloc`) — what the `figure adaptive` sweep plots.
+///
+/// [`Report`]: crate::coordinator::Report
+#[derive(Debug, Clone, Default)]
+pub struct AllocReport {
+    pub budget_bytes: usize,
+    pub plan_bytes: usize,
+    /// `[layer][expert]` final precision assignment.
+    pub assignment: Vec<Vec<Precision>>,
+    /// `[layer][expert]` EWMA demand scores behind the final plan.
+    pub scores: Vec<Vec<f64>>,
+}
+
+impl AllocReport {
+    /// One-line plan census: `budget=…B plan=…B int2=… int2c=… fp16=…`.
+    pub fn summary(&self) -> String {
+        let mut census: Vec<(String, usize)> = Vec::new();
+        for p in self.assignment.iter().flatten() {
+            let label = match p {
+                Precision::Fp16 => "fp16".to_string(),
+                Precision::Int(b) => format!("int{b}"),
+                Precision::IntComp(b) => format!("int{b}c"),
+            };
+            match census.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, n)) => *n += 1,
+                None => census.push((label, 1)),
+            }
+        }
+        census.sort();
+        let cells: Vec<String> = census.iter().map(|(l, n)| format!("{l}={n}")).collect();
+        format!("budget={}B plan={}B {}", self.budget_bytes, self.plan_bytes, cells.join(" "))
+    }
+}
+
+/// Ladder + budget + demand statistics + current plan: everything the
+/// engine threads through a serve run (DESIGN.md §10).
+pub struct PrecisionAllocator {
+    ladder: PrecisionLadder,
+    budget: usize,
+    ewma: EwmaPopularity,
+    plan: PrecisionPlan,
+    /// Scores the current plan was computed from (the EWMA keeps moving
+    /// between re-plans; the report pairs the plan with *its* demand).
+    plan_scores: Vec<Vec<f64>>,
+}
+
+impl PrecisionAllocator {
+    /// Build from the manifest's ladder with `floor_bits` as the lowest
+    /// servable width.  `budget` of `None` grants the floor plan plus
+    /// enough headroom to compensate every expert at the floor width —
+    /// the EWMA then decides which experts earn the upgrade first;
+    /// `--alloc-budget` overrides.
+    pub fn new(
+        manifest: &Manifest,
+        comp_tag: &str,
+        floor_bits: u8,
+        budget: Option<usize>,
+    ) -> Result<Self> {
+        let m = &manifest.model;
+        let ladder = PrecisionLadder::from_manifest(manifest, comp_tag, floor_bits)
+            .with_context(|| format!("building the precision ladder for `{}`", m.name))?;
+        let budget = budget.unwrap_or_else(|| ladder.floor_bytes() + ladder.floor_comp_slack());
+        let ewma = EwmaPopularity::new(m.n_layers, m.n_experts, 0.25);
+        // Before any routing statistics exist (and on the teacher-forced
+        // scoring path, which never crosses a decode-step boundary) every
+        // expert sits at the floor.
+        let plan = allocate(&ladder, ewma.scores(), ladder.floor_bytes());
+        let plan_scores = ewma.scores().to_vec();
+        Ok(PrecisionAllocator { ladder, budget, ewma, plan, plan_scores })
+    }
+
+    /// Feed one layer's router outcome into the demand EWMA (prefill and
+    /// decode both count: prompt routing is the cheapest warm-up signal).
+    pub fn observe(&mut self, obs: &LayerObservation) {
+        self.ewma.observe(obs);
+    }
+
+    /// Recompute the assignment from current demand — called once per
+    /// decode step, next to `PrefetchQueue::begin_step`.
+    pub fn replan(&mut self) {
+        self.plan = allocate(&self.ladder, self.ewma.scores(), self.budget);
+        self.plan_scores = self.ewma.scores().to_vec();
+    }
+
+    /// One layer's per-expert precision map (the `PlanCtx` view).
+    pub fn layer(&self, layer: usize) -> &[Precision] {
+        self.plan.layer(layer)
+    }
+
+    pub fn plan(&self) -> &PrecisionPlan {
+        &self.plan
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn report(&self) -> AllocReport {
+        AllocReport {
+            budget_bytes: self.budget,
+            plan_bytes: self.plan.plan_bytes,
+            assignment: self.plan.assignment.clone(),
+            scores: self.plan_scores.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1 layer × 2 experts, ladder Int(2) → Int(4) → Fp16.
+    fn toy_ladder() -> PrecisionLadder {
+        let ladder = vec![
+            RungCost { precision: Precision::Int(2), bytes: 100 },
+            RungCost { precision: Precision::Int(4), bytes: 200 },
+            RungCost { precision: Precision::Fp16, bytes: 800 },
+        ];
+        PrecisionLadder { n_layers: 1, n_experts: 2, rungs: vec![vec![ladder.clone(), ladder]] }
+    }
+
+    #[test]
+    fn floor_budget_admits_no_upgrade() {
+        let l = toy_ladder();
+        let plan = allocate(&l, &[vec![5.0, 1.0]], l.floor_bytes());
+        assert_eq!(plan.assignment[0], vec![Precision::Int(2), Precision::Int(2)]);
+        assert_eq!(plan.plan_bytes, 200);
+    }
+
+    #[test]
+    fn hot_expert_upgrades_first() {
+        let l = toy_ladder();
+        // Budget for exactly one Int(2)→Int(4) upgrade (Δ = 100).
+        let plan = allocate(&l, &[vec![1.0, 5.0]], l.floor_bytes() + 100);
+        assert_eq!(plan.assignment[0], vec![Precision::Int(2), Precision::Int(4)]);
+        assert_eq!(plan.plan_bytes, 300);
+    }
+
+    #[test]
+    fn full_budget_degenerates_to_all_fp16() {
+        let l = toy_ladder();
+        let plan = allocate(&l, &[vec![0.0, 0.0]], l.top_bytes());
+        assert_eq!(plan.assignment[0], vec![Precision::Fp16, Precision::Fp16]);
+        assert_eq!(plan.plan_bytes, l.top_bytes());
+    }
+
+    #[test]
+    fn zero_scores_upgrade_deterministically_by_index() {
+        let l = toy_ladder();
+        let plan = allocate(&l, &[vec![0.0, 0.0]], l.floor_bytes() + 100);
+        assert_eq!(plan.assignment[0], vec![Precision::Int(4), Precision::Int(2)]);
+    }
+
+    #[test]
+    fn stop_rule_leaves_budget_unspent_rather_than_skipping() {
+        let l = toy_ladder();
+        // Expert 1 is hot: its Fp16 upgrade (Δ=600) is chosen next but does
+        // not fit — allocation stops instead of sneaking expert 0 to Int(4).
+        let plan = allocate(&l, &[vec![0.1, 50.0]], l.floor_bytes() + 150);
+        assert_eq!(plan.assignment[0], vec![Precision::Int(2), Precision::Int(4)]);
+        assert_eq!(plan.plan_bytes, 300);
+    }
+
+    #[test]
+    fn floor_above_shipped_widths_is_a_contextful_error() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let err = PrecisionLadder::from_manifest(&manifest, "default", 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("floor (4-bit"), "{err}");
+        assert!(err.contains("[2]"), "{err}");
+    }
+
+    #[test]
+    fn synth_manifest_ladder_shape() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let l = PrecisionLadder::from_manifest(&manifest, "default", 2).unwrap();
+        assert_eq!(l.n_layers, 2);
+        assert_eq!(l.n_experts, 4);
+        for ladder in l.rungs.iter().flatten() {
+            assert_eq!(ladder[0].precision, Precision::Int(2));
+            assert_eq!(ladder[1].precision, Precision::IntComp(2));
+            assert_eq!(ladder.last().unwrap().precision, Precision::Fp16);
+            for w in ladder.windows(2) {
+                assert!(w[0].bytes < w[1].bytes, "strictly ascending cost");
+            }
+        }
+        assert!(l.floor_bytes() < l.top_bytes());
+    }
+
+    #[test]
+    fn allocator_defaults_and_report_census() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let mut a = PrecisionAllocator::new(&manifest, "default", 2, None).unwrap();
+        // Cold start: all-floor regardless of headroom.
+        assert!(a
+            .plan()
+            .assignment
+            .iter()
+            .flatten()
+            .all(|p| *p == Precision::Int(2)));
+        // One observation routing layer 0 to experts 2 (hot) and 3.
+        let probs = vec![0.1f32, 0.1, 0.5, 0.3];
+        let active = vec![true];
+        a.observe(&crate::predict::LayerObservation {
+            step: 0,
+            layer: 0,
+            n_experts: 4,
+            top_k: 2,
+            probs: &probs,
+            active: &active,
+        });
+        a.replan();
+        // The two routed experts earn compensation; after that the
+        // hottest expert's FP16 rung is the best ratio but exceeds the
+        // remaining headroom, so allocation stops — cold experts stay at
+        // the floor rather than soaking up budget the hot ones may need.
+        let plan = a.plan();
+        assert_eq!(plan.assignment[0][2], Precision::IntComp(2));
+        assert_eq!(plan.assignment[0][3], Precision::IntComp(2));
+        let n_comp =
+            plan.assignment.iter().flatten().filter(|p| p.compensated()).count();
+        assert_eq!(n_comp, 2, "only routed experts upgrade");
+        let r = a.report();
+        assert_eq!(r.plan_bytes, a.plan().plan_bytes);
+        assert!(r.summary().contains("int2=6"), "{}", r.summary());
+        assert!(r.summary().contains("int2c=2"), "{}", r.summary());
+    }
+}

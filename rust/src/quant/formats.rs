@@ -2,6 +2,8 @@
 //! `python/compile/quant/packing.py` (pinned by tests against the manifest
 //! tables the python side computed).
 
+use anyhow::{bail, ensure, Result};
+
 /// Kernel-container bit-width: 3-bit codes ride in 4-bit containers.
 pub fn container_bits(bits: u8) -> u8 {
     if bits == 3 {
@@ -11,21 +13,32 @@ pub fn container_bits(bits: u8) -> u8 {
     }
 }
 
-/// True packed byte count for `n_codes` codes at `bits` bits
-/// (2/4/8-bit pack exactly; 3-bit uses the 8-codes→3-bytes codec).
-pub fn packed_nbytes(n_codes: usize, bits: u8) -> usize {
-    let (cpc, bpc) = match bits {
+/// Pack geometry for one bit-width: (codes per chunk, bytes per chunk).
+/// Unsupported widths fail with a contextful error instead of panicking —
+/// a bad `--bits` flag must surface at config/manifest validation, not
+/// take down the CLI mid-serve.
+pub fn pack_chunk(bits: u8) -> Result<(usize, usize)> {
+    Ok(match bits {
         2 => (4, 1),
         3 => (8, 3),
         4 => (2, 1),
         8 => (1, 1),
-        _ => panic!("unsupported bit-width {bits}"),
-    };
-    assert!(
+        _ => bail!("unsupported bit-width {bits} (supported: 2, 3, 4, 8)"),
+    })
+}
+
+/// True packed byte count for `n_codes` codes at `bits` bits
+/// (2/4/8-bit pack exactly; 3-bit uses the 8-codes→3-bytes codec).
+/// Errors — unsupported width, dims not a multiple of the pack chunk —
+/// carry enough context to point at the offending `--bits`/dims combo.
+pub fn packed_nbytes(n_codes: usize, bits: u8) -> Result<usize> {
+    let (cpc, bpc) = pack_chunk(bits)?;
+    ensure!(
         n_codes % cpc == 0,
-        "{n_codes} codes not a multiple of chunk {cpc} for {bits}-bit"
+        "{n_codes} codes not a multiple of the {bits}-bit pack chunk ({cpc} codes) — \
+         model dims are incompatible with {bits}-bit packing"
     );
-    n_codes / cpc * bpc
+    Ok(n_codes / cpc * bpc)
 }
 
 /// Wire sizes for one expert's weights at each precision, derived from
@@ -43,11 +56,11 @@ impl ExpertBytes {
     }
 
     /// Packed codes + fp16 (scale, zero) metadata for w1+w2+w3.
-    pub fn quantized(&self, bits: u8) -> usize {
+    pub fn quantized(&self, bits: u8) -> Result<usize> {
         let (d, f, g) = (self.d_model, self.d_ff, self.group_size);
-        let codes = packed_nbytes(d * f, bits) * 2 + packed_nbytes(f * d, bits);
+        let codes = packed_nbytes(d * f, bits)? * 2 + packed_nbytes(f * d, bits)?;
         let meta = ((d / g) * f * 2 + (f / g) * d) * 4; // 2×fp16 per group/col
-        codes + meta
+        Ok(codes + meta)
     }
 }
 
@@ -57,16 +70,25 @@ mod tests {
 
     #[test]
     fn packing_ratios() {
-        assert_eq!(packed_nbytes(8, 2), 2);
-        assert_eq!(packed_nbytes(8, 3), 3);
-        assert_eq!(packed_nbytes(8, 4), 4);
-        assert_eq!(packed_nbytes(8, 8), 8);
+        assert_eq!(packed_nbytes(8, 2).unwrap(), 2);
+        assert_eq!(packed_nbytes(8, 3).unwrap(), 3);
+        assert_eq!(packed_nbytes(8, 4).unwrap(), 4);
+        assert_eq!(packed_nbytes(8, 8).unwrap(), 8);
     }
 
     #[test]
-    #[should_panic]
     fn packing_requires_chunk_multiple() {
-        packed_nbytes(7, 3);
+        let err = packed_nbytes(7, 3).unwrap_err().to_string();
+        assert!(err.contains("7 codes"), "{err}");
+        assert!(err.contains("3-bit"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_width_is_a_contextful_error() {
+        let err = packed_nbytes(8, 5).unwrap_err().to_string();
+        assert!(err.contains("unsupported bit-width 5"), "{err}");
+        assert!(err.contains("2, 3, 4, 8"), "{err}");
+        assert!(pack_chunk(16).is_err());
     }
 
     #[test]
@@ -79,11 +101,11 @@ mod tests {
     #[test]
     fn expert_bytes_monotone_in_bits() {
         let eb = ExpertBytes { d_model: 128, d_ff: 256, group_size: 64 };
-        assert!(eb.quantized(2) < eb.quantized(3));
-        assert!(eb.quantized(3) < eb.quantized(4));
-        assert!(eb.quantized(4) < eb.fp16());
+        assert!(eb.quantized(2).unwrap() < eb.quantized(3).unwrap());
+        assert!(eb.quantized(3).unwrap() < eb.quantized(4).unwrap());
+        assert!(eb.quantized(4).unwrap() < eb.fp16());
         // 2-bit codes alone are exactly 1/8 of fp16.
-        let codes2 = packed_nbytes(128 * 256, 2) * 3;
+        let codes2 = packed_nbytes(128 * 256, 2).unwrap() * 3;
         assert_eq!(codes2 * 8, eb.fp16());
     }
 }

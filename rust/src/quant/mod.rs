@@ -1,12 +1,17 @@
-//! Quantization formats: byte accounting + a reference dequantizer.
+//! Quantization formats: byte accounting, a reference dequantizer, and
+//! the budgeted per-expert precision allocator.
 //!
 //! The *math* of dequantization lives in the AOT kernels (L1); this module
 //! mirrors just enough of it in rust to (a) price transfers exactly like
 //! `python/compile/quant/packing.py` does and (b) cross-check kernel outputs
-//! in integration tests.
+//! in integration tests.  On top of the byte accounting sits `alloc`
+//! (DESIGN.md §10): the demand-driven `(bits, compensator)` assignment the
+//! `adaptive` policy serves.
 
+pub mod alloc;
 pub mod dequant;
 pub mod formats;
 
+pub use alloc::{allocate, AllocReport, PrecisionAllocator, PrecisionLadder, PrecisionPlan};
 pub use dequant::{dequantize_grouped, unpack_container};
-pub use formats::{container_bits, packed_nbytes, ExpertBytes};
+pub use formats::{container_bits, pack_chunk, packed_nbytes, ExpertBytes};

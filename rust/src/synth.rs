@@ -110,7 +110,8 @@ pub fn tiny_manifest(name: &str) -> Manifest {
     .map(|&(d_in, d_out)| {
         let r = 1usize; // true rank
         let pad8 = |n: usize| n.div_ceil(8) * 8;
-        let codes = packed_nbytes(pad8(d_in * r), 3) + packed_nbytes(pad8(r * d_out), 3);
+        let pk3 = |n: usize| packed_nbytes(n, 3).expect("pad8 keeps codes chunk-aligned");
+        let codes = pk3(pad8(d_in * r)) + pk3(pad8(r * d_out));
         let g_u = d_in / dims.group_size.min(d_in);
         let g_v = 1usize; // a single v group at true rank 1
         codes + (g_u * r) * 2 * 2 + (g_v * d_out) * 2 * 2
@@ -122,7 +123,10 @@ pub fn tiny_manifest(name: &str) -> Manifest {
     comp_bytes.insert("default".to_string(), comp_bits_table);
 
     let mut q_expert_bytes = HashMap::new();
-    q_expert_bytes.insert(SYNTH_BITS, eb.quantized(SYNTH_BITS));
+    q_expert_bytes.insert(
+        SYNTH_BITS,
+        eb.quantized(SYNTH_BITS).expect("synthetic dims are pack-aligned"),
+    );
 
     Manifest {
         model: dims,

@@ -1,0 +1,245 @@
+//! Heterogeneity-aware precision allocator tests (artifact-free).
+//!
+//! Pins the ISSUE-4 acceptance invariants: the allocator's output always
+//! fits the byte budget, is monotone in budget (more budget never lowers
+//! any expert's rung), degenerates to all-fp16 at a `n × fp16` budget,
+//! and — end to end through the `adaptive` policy — a uniform-forcing
+//! (floor) budget serves a byte ledger identical to `static-quant`, while
+//! slack budget buys compensators for the *hottest* experts and strictly
+//! lowers the demand-weighted FFN-vs-fp16 weight error at equal bytes.
+
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{PolicyConfig, Precision, SystemConfig};
+use beam_moe::coordinator::Report;
+use beam_moe::harness::figures::demand_weighted_error;
+use beam_moe::quant::alloc::{allocate, PrecisionLadder, RungCost};
+use beam_moe::server::ServerBuilder;
+use beam_moe::synth;
+use beam_moe::workload::reqgen::XorShift;
+use beam_moe::workload::{WorkloadConfig, WorkloadGen};
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+/// Random per-(layer, expert) ladders: strictly ascending costs, FP16 top.
+fn rand_ladder(rng: &mut XorShift, nl: usize, ne: usize) -> PrecisionLadder {
+    let steps = [Precision::Int(2), Precision::IntComp(2), Precision::Int(4)];
+    let rungs = (0..nl)
+        .map(|_| {
+            (0..ne)
+                .map(|_| {
+                    let n_rungs = 2 + (rng.next_u64() % 3) as usize; // 2..=4
+                    let mut bytes = 50 + (rng.next_u64() % 100) as usize;
+                    let mut ladder = Vec::new();
+                    for p in steps.iter().take(n_rungs - 1) {
+                        ladder.push(RungCost { precision: *p, bytes });
+                        bytes += 1 + (rng.next_u64() % 200) as usize;
+                    }
+                    ladder.push(RungCost { precision: Precision::Fp16, bytes });
+                    ladder
+                })
+                .collect()
+        })
+        .collect();
+    PrecisionLadder { n_layers: nl, n_experts: ne, rungs }
+}
+
+#[test]
+fn prop_plan_fits_budget_is_monotone_and_degenerates() {
+    let mut rng = XorShift::new(0xA110C);
+    for _ in 0..200 {
+        let nl = 1 + (rng.next_u64() % 3) as usize;
+        let ne = 1 + (rng.next_u64() % 6) as usize;
+        let ladder = rand_ladder(&mut rng, nl, ne);
+        let scores: Vec<Vec<f64>> = (0..nl)
+            .map(|_| {
+                (0..ne)
+                    .map(|_| if rng.next_f64() < 0.25 { 0.0 } else { rng.next_f64() * 3.0 })
+                    .collect()
+            })
+            .collect();
+        let (floor, top) = (ladder.floor_bytes(), ladder.top_bytes());
+
+        let mut budgets: Vec<usize> = (0..6)
+            .map(|_| floor + (rng.next_f64() * (top - floor) as f64) as usize)
+            .collect();
+        budgets.push(floor);
+        budgets.push(top);
+        budgets.sort_unstable();
+        let mut prev: Option<Vec<Vec<usize>>> = None;
+        for &budget in &budgets {
+            let plan = allocate(&ladder, &scores, budget);
+            assert!(plan.plan_bytes <= budget, "plan must fit the budget");
+            assert!(plan.plan_bytes >= floor, "the floor is mandatory");
+            if let Some(p) = &prev {
+                for li in 0..nl {
+                    for ei in 0..ne {
+                        assert!(
+                            plan.rung[li][ei] >= p[li][ei],
+                            "more budget never lowers any expert's precision"
+                        );
+                    }
+                }
+            }
+            prev = Some(plan.rung);
+        }
+
+        // Budget = n × fp16 (every top rung): all-fp16, budget fully spent.
+        let full = allocate(&ladder, &scores, top);
+        for li in 0..nl {
+            for ei in 0..ne {
+                assert_eq!(full.rung[li][ei], ladder.rungs[li][ei].len() - 1);
+                assert_eq!(full.assignment[li][ei], Precision::Fp16);
+            }
+        }
+        assert_eq!(full.plan_bytes, top);
+
+        // Floor budget (and anything below it) admits no upgrade.
+        let fl = allocate(&ladder, &scores, floor);
+        assert!(fl.rung.iter().flatten().all(|&r| r == 0));
+        assert_eq!(fl.plan_bytes, floor);
+        let under = allocate(&ladder, &scores, floor.saturating_sub(1));
+        assert!(under.rung.iter().flatten().all(|&r| r == 0));
+    }
+}
+
+#[test]
+fn manifest_ladder_degenerates_to_all_fp16_at_n_times_fp16() {
+    let manifest = synth::tiny_manifest("synthetic-tiny");
+    let dims = &manifest.model;
+    let ladder = PrecisionLadder::from_manifest(&manifest, "default", synth::SYNTH_BITS).unwrap();
+    let budget = dims.n_layers * dims.n_experts * manifest.transfer.fp16_expert_bytes;
+    assert_eq!(ladder.top_bytes(), budget, "manifest top rung is fp16");
+    let scores = vec![vec![0.0f64; dims.n_experts]; dims.n_layers];
+    let plan = allocate(&ladder, &scores, budget);
+    assert!(plan.assignment.iter().flatten().all(|p| *p == Precision::Fp16));
+}
+
+/// Offloading-regime serve run on the synthetic model (cache holds ~5 of
+/// the 8 floor-width experts).
+fn serve(policy: PolicyConfig) -> Report {
+    let model = synth::tiny_model(backend(), "synthetic-tiny").unwrap();
+    let dims = model.manifest.model.clone();
+    let mut sys = SystemConfig::scaled_for(&dims, false);
+    sys.gpu_cache_bytes = 5 * model.manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let mut server = ServerBuilder::new(model).policy(policy).system(sys).build().unwrap();
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    for req in WorkloadGen::generate(&WorkloadConfig::offline(3, 32, 8), &eval).unwrap() {
+        server.submit(req).unwrap();
+    }
+    server.run_to_completion().unwrap()
+}
+
+fn floor_plan_bytes() -> usize {
+    let manifest = synth::tiny_manifest("synthetic-tiny");
+    let dims = &manifest.model;
+    dims.n_layers * dims.n_experts * manifest.q_expert_bytes(synth::SYNTH_BITS)
+}
+
+/// ISSUE-4 acceptance (golden): `adaptive` under a uniform-forcing budget
+/// reproduces the `static-quant` byte ledger — and the whole deterministic
+/// report — exactly.
+#[test]
+fn uniform_budget_adaptive_is_byte_identical_to_static_quant() {
+    let uni = serve(PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0));
+    let mut cfg = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+    cfg.alloc_budget_bytes = Some(floor_plan_bytes());
+    let ada = serve(cfg);
+
+    assert_eq!(uni.bytes, ada.bytes, "byte ledgers must be identical");
+    assert_eq!(uni.total_generated, ada.total_generated, "same tokens");
+    assert_eq!(uni.virtual_seconds, ada.virtual_seconds, "same virtual time");
+    assert_eq!(uni.decode_steps, ada.decode_steps);
+    assert_eq!(uni.cache_hit_rate, ada.cache_hit_rate);
+    let (a, b) = (&uni.breakdown, &ada.breakdown);
+    assert_eq!(a.attn_router_s, b.attn_router_s);
+    assert_eq!(a.expert_compute_s, b.expert_compute_s);
+    assert_eq!(a.transfer_weights_s, b.transfer_weights_s);
+    assert_eq!(a.transfer_comp_s, b.transfer_comp_s);
+    assert_eq!(a.transfer_stall_s, b.transfer_stall_s);
+    assert_eq!(uni.bytes.get("compensator").copied().unwrap_or(0), 0);
+
+    // The adaptive run still reports its (floor-pinned) allocator state.
+    assert!(uni.alloc.is_none(), "fixed-precision policies carry no alloc report");
+    let alloc = ada.alloc.expect("adaptive must carry an alloc report");
+    assert_eq!(alloc.plan_bytes, floor_plan_bytes());
+    assert!(alloc
+        .assignment
+        .iter()
+        .flatten()
+        .all(|p| *p == Precision::Int(synth::SYNTH_BITS)));
+}
+
+/// Slack budget buys compensators for the hottest experts first, and the
+/// heterogeneous plan strictly lowers demand-weighted weight error vs the
+/// uniform floor at equal (in fact: superset-of) bytes.
+#[test]
+fn slack_budget_upgrades_hot_experts_and_lowers_weighted_error() {
+    let manifest = synth::tiny_manifest("synthetic-tiny");
+    let dims = manifest.model.clone();
+    let comp_total = manifest.comp_bytes_total("default", synth::SYNTH_BITS);
+    assert!(comp_total > 0);
+
+    let mut cfg = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+    cfg.alloc_budget_bytes = Some(floor_plan_bytes() + comp_total / 2);
+    let ada = serve(cfg);
+    let alloc = ada.alloc.as_ref().expect("alloc report");
+
+    let n_pairs = dims.n_layers * dims.n_experts;
+    let n_comp = alloc.assignment.iter().flatten().filter(|p| p.compensated()).count();
+    assert!(n_comp > 0, "slack must buy compensators");
+    assert!(n_comp < n_pairs, "half the headroom cannot compensate everyone");
+    assert!(ada.bytes["compensator"] > 0, "compensators actually crossed the link");
+    assert!(alloc.plan_bytes <= floor_plan_bytes() + comp_total / 2);
+
+    // The synthetic comp cost is uniform across experts, so the upgraded
+    // set must be exactly the top-scored pairs: every compensated expert
+    // is at least as hot as every uncompensated one.
+    let mut flat: Vec<(f64, bool)> = Vec::new();
+    for (li, row) in alloc.assignment.iter().enumerate() {
+        for (ei, p) in row.iter().enumerate() {
+            flat.push((alloc.scores[li][ei], p.compensated()));
+        }
+    }
+    let min_comp =
+        flat.iter().filter(|(_, c)| *c).map(|(s, _)| *s).fold(f64::INFINITY, f64::min);
+    let max_plain = flat.iter().filter(|(_, c)| !*c).map(|(s, _)| *s).fold(0.0, f64::max);
+    assert!(
+        min_comp >= max_plain,
+        "hot experts get compensation first: min(comp)={min_comp} < max(plain)={max_plain}"
+    );
+
+    // Accuracy at equal budget: the heterogeneous plan strictly beats the
+    // uniform floor on demand-weighted FFN-vs-fp16 weight error.
+    let probe = synth::tiny_model(backend(), "synthetic-tiny").unwrap();
+    let uniform =
+        vec![vec![Precision::Int(synth::SYNTH_BITS); dims.n_experts]; dims.n_layers];
+    let e_uni = demand_weighted_error(&probe, &uniform, &alloc.scores, "default").unwrap();
+    let e_ada =
+        demand_weighted_error(&probe, &alloc.assignment, &alloc.scores, "default").unwrap();
+    assert!(
+        e_ada < e_uni,
+        "adaptive must strictly lower demand-weighted error: {e_ada} vs {e_uni}"
+    );
+}
+
+/// The adaptive serve path is deterministic run-to-run (the EWMA, the
+/// re-plan cadence and the greedy allocator are all deterministic).
+#[test]
+fn adaptive_serving_is_deterministic() {
+    let mk = || {
+        let mut cfg = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+        cfg.alloc_budget_bytes = None; // default compensate-everything headroom
+        serve(cfg)
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.bytes, b.bytes);
+    assert_eq!(a.total_generated, b.total_generated);
+    assert_eq!(a.virtual_seconds, b.virtual_seconds);
+    let (pa, pb) = (a.alloc.unwrap(), b.alloc.unwrap());
+    assert_eq!(pa.assignment, pb.assignment);
+    assert_eq!(pa.plan_bytes, pb.plan_bytes);
+}

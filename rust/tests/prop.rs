@@ -11,7 +11,7 @@ use beam_moe::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use beam_moe::offload::transfer::{Link, TransferClass};
 use beam_moe::policies::plan::{group_by_expert, topk_renorm, PlanCtx, Policy};
 use beam_moe::policies::{
-    BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
+    AdaptivePolicy, BeamPolicy, BigLittlePolicy, HobbitPolicy, MixtralOffloadPolicy, MondePolicy,
     StaticQuantPolicy,
 };
 use beam_moe::workload::reqgen::XorShift;
@@ -71,6 +71,7 @@ fn prop_every_policy_plans_a_partition() {
         Box::new(BeamPolicy { bits: 2, positions: vec![0] }),
         Box::new(BeamPolicy { bits: 3, positions: vec![1, 2] }),
         Box::new(BigLittlePolicy { bits: 2 }),
+        Box::new(AdaptivePolicy { floor_bits: 2 }),
     ];
     for iter in 0..200 {
         let n_tokens = 1 + (rng.next_u64() % 8) as usize;
@@ -89,6 +90,7 @@ fn prop_every_policy_plans_a_partition() {
             ndp,
             fp16_cached: &cached,
             predicted: None,
+            precisions: None,
         };
         let n_active = active.iter().filter(|&&a| a).count();
         for p in &policies {
@@ -129,6 +131,7 @@ fn prop_beam_compensates_exactly_configured_positions() {
         let ctx = PlanCtx {
             probs: &probs, n_tokens, n_experts, top_k,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
+            precisions: None,
         };
         let plan = BeamPolicy { bits: 2, positions: pos.clone() }.plan(&ctx);
         let mut comp_pairs = 0;
@@ -209,6 +212,7 @@ fn prop_group_by_expert_rank_consistency() {
         let ctx = PlanCtx {
             probs: &probs, n_tokens, n_experts, top_k,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
+            precisions: None,
         };
         let groups = group_by_expert(&ctx);
         for (e, tokens) in groups.iter().enumerate() {
@@ -255,9 +259,9 @@ fn prop_precision_bytes_ordering() {
         let d = 64 * (1 + (rng.next_u64() % 8) as usize);
         let f = 64 * (1 + (rng.next_u64() % 8) as usize);
         let eb = ExpertBytes { d_model: d, d_ff: f, group_size: 64 };
-        assert!(eb.quantized(2) < eb.quantized(3));
-        assert!(eb.quantized(3) < eb.quantized(4));
-        assert!(eb.quantized(4) < eb.fp16());
+        assert!(eb.quantized(2).unwrap() < eb.quantized(3).unwrap());
+        assert!(eb.quantized(3).unwrap() < eb.quantized(4).unwrap());
+        assert!(eb.quantized(4).unwrap() < eb.fp16());
         let _ = Precision::Int(2).bits();
     }
 }

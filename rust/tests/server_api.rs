@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use beam_moe::backend::{Backend, ReferenceBackend};
 use beam_moe::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::metrics::RequestRecord;
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::{Report, ServeEngine};
 use beam_moe::policies::plan::{group_by_expert, ExpertExec, LayerPlan, Location, PlanCtx};
@@ -247,6 +248,40 @@ fn cancel_active_session_frees_its_slot_mid_decode() {
     assert_eq!(server.session(ids[0]).unwrap().generated(), out_len);
     // The cancelled stream stopped where it was cancelled.
     assert_eq!(server.session(ids[1]).unwrap().generated(), generated_at_cancel);
+}
+
+/// ISSUE-4 satellite pin: cancelling mid-run must not let zero-generated
+/// records fabricate negative/zero latencies in the report's tails.
+#[test]
+fn cancel_then_report_keeps_tails_free_of_fabricated_latencies() {
+    let out_len = 8usize;
+    let mut server = ServerBuilder::new(model()).system(sys_offload(false)).build().unwrap();
+    let mut ids = Vec::new();
+    for req in requests(&WorkloadConfig::offline(3, 24, out_len)) {
+        ids.push(server.submit(req).unwrap());
+    }
+    for _ in 0..3 {
+        assert!(matches!(server.tick().unwrap(), ServerTick::Prefilled(_)));
+    }
+    assert_eq!(server.tick().unwrap(), ServerTick::Decoded);
+    assert!(server.cancel(ids[2]).unwrap());
+    let report = server.run_to_completion().unwrap();
+
+    assert_eq!(report.n_requests, 2, "the cancelled session never completes");
+    assert!(report.requests.iter().all(|r| r.generated > 0));
+    let t = report.ttft_percentiles();
+    assert!(t[0] > 0.0, "no fabricated zero/negative TTFT: {t:?}");
+    assert!(t[0] <= t[1] && t[1] <= t[2]);
+    assert!(report.latency_percentiles()[0] > 0.0);
+    assert!(report.tpot_percentiles()[0] > 0.0);
+
+    // Even if a zero-generated record (default first_token_at = 0.0) ends
+    // up in a report, the tail metrics exclude it.
+    let mut poisoned = report.clone();
+    poisoned.requests.push(RequestRecord { id: 999, arrival: 42.0, ..Default::default() });
+    assert_eq!(poisoned.ttft_percentiles(), report.ttft_percentiles());
+    assert_eq!(poisoned.tpot_percentiles(), report.tpot_percentiles());
+    assert_eq!(poisoned.latency_percentiles(), report.latency_percentiles());
 }
 
 #[test]
