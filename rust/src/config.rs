@@ -61,6 +61,52 @@ impl Precision {
     }
 }
 
+/// Expert-parallel sharding over a fleet of identical devices
+/// (DESIGN.md §11).  `devices = 1` (the default) is the single-device
+/// testbed every earlier experiment ran on — the engine's `D = 1` path is
+/// pinned byte-identical to it by `tests/shard.rs` and the golden corpus.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Number of expert-parallel devices.  Experts are statically owned
+    /// round-robin (`expert % devices`); device 0 additionally runs the
+    /// dense stages (embed, attention, router, head, shared experts).
+    pub devices: usize,
+    /// Per-device byte capacity reserved for *pinned replicas* of hot
+    /// remote experts (popularity-driven replication, re-planned at every
+    /// decode-step boundary).  0 disables replication.  Replica refills
+    /// are priced on the real links under `TransferClass::Replication`.
+    pub replicate_budget_bytes: usize,
+    /// Peer (dev↔dev) link bandwidth as a multiple of the host link's
+    /// `pcie_bw` — NVLink-class interconnects run several PCIe multiples.
+    /// Expressed as a ratio so `SystemConfig::scaled` keeps it faithful.
+    pub peer_bw_ratio: f64,
+    /// Per-message peer-link latency, seconds.
+    pub peer_lat: f64,
+}
+
+impl ShardConfig {
+    /// The single-device deployment (no peers, no replication).
+    pub fn single() -> Self {
+        ShardConfig {
+            devices: 1,
+            replicate_budget_bytes: 0,
+            peer_bw_ratio: 4.0,
+            peer_lat: 5.0e-6,
+        }
+    }
+
+    /// `D` devices with a replica budget, default peer-link ratios.
+    pub fn new(devices: usize, replicate_budget_bytes: usize) -> Self {
+        ShardConfig { devices: devices.max(1), replicate_budget_bytes, ..Self::single() }
+    }
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
 /// Simulated hardware testbed (paper §4.1).  All quantities SI (bytes, s).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -82,6 +128,9 @@ pub struct SystemConfig {
     /// Whether next-layer expert transfers overlap current-layer compute
     /// (both Mixtral-Offloading and BEAM issue async copies).
     pub overlap: bool,
+    /// Expert-parallel device fleet (DESIGN.md §11); `ShardConfig::single`
+    /// reproduces the single-device testbed exactly.
+    pub shard: ShardConfig,
 }
 
 /// Near-data-processing device (MoNDE-style, CXL/PIM class — §4.1:
@@ -112,6 +161,7 @@ impl SystemConfig {
             gpu_cache_bytes: 768 * 1024,
             ndp: None,
             overlap: true,
+            shard: ShardConfig::single(),
         }
     }
 

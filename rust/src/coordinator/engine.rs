@@ -17,8 +17,17 @@
 //! *i*'s compute overlaps expert *i+1*'s transfer exactly as the real
 //! pipelined fetch does.  All byte counts come from the manifest's
 //! transfer tables (true packed sizes — DESIGN.md §7).
+//!
+//! Under expert-parallel sharding (`ShardConfig::devices > 1`, DESIGN.md
+//! §11) the engine drives a *fleet*: every device owns a compute stream,
+//! a host link and an `ExpertCache`; experts are statically owned
+//! round-robin, token batches for remote experts pay activation round
+//! trips on the dev↔dev peer links, and a popularity-driven replicator
+//! pins hot remote experts into per-device replica regions at decode-step
+//! boundaries.  `D = 1` materializes exactly one device on the old wiring
+//! and is pinned byte-identical to the pre-sharding engine.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,20 +36,37 @@ use anyhow::{Context, Result};
 use crate::backend::Tensor;
 use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
-use crate::coordinator::metrics::{PrefetchReport, Report, RequestRecord, StepBreakdown};
+use crate::coordinator::metrics::{
+    PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
+};
 use crate::coordinator::state::{ActiveSeq, BatchState, LayerKv};
 use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use crate::offload::ndp::NdpDevice;
 use crate::offload::prefetch::PrefetchQueue;
-use crate::offload::transfer::{Link, TransferClass};
+use crate::offload::replicate::Replicator;
+use crate::offload::transfer::{Link, TransferClass, TransferLog};
 use crate::policies::make_policy;
-use crate::policies::plan::{LayerPlan, Location, PlanCtx, Policy};
+use crate::policies::plan::{LayerPlacement, LayerPlan, Location, PlanCtx, Policy};
 use crate::predict::{make_predictor, ExpertPredictor, LayerObservation, PredictCtx};
 use crate::quant::alloc::PrecisionAllocator;
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
+use crate::sim::topology::Topology;
 use crate::sim::CostModel;
 use crate::workload::{DecodeTrace, Request};
+
+/// One expert-parallel device: compute stream, host link, payload cache
+/// (DESIGN.md §11).  Device 0 additionally runs the dense stages (embed,
+/// attention, router, head, shared experts).
+struct DeviceState {
+    gpu: Resource,
+    host_link: Link,
+    cache: ExpertCache,
+    /// Decode-time demand fetches issued on this device's host link.
+    demand_fetches: u64,
+    /// Expert execs run on this device.
+    execs: u64,
+}
 
 /// One generated token tagged for the session layer (`server::Server`
 /// drains these after every step and routes them into `TokenEvent`
@@ -88,11 +114,21 @@ pub struct ServeEngine {
     policy_cfg: PolicyConfig,
     policy: Box<dyn Policy>,
     cost: CostModel,
-    gpu: Resource,
-    pcie: Link,
+    /// The expert-parallel fleet; `devices[0]` is the wiring every
+    /// pre-sharding run used (`D = 1` ⇒ exactly that, nothing else).
+    devices: Vec<DeviceState>,
+    /// Directed dev↔dev peer links, `peer[src][dst]` (`None` diagonal).
+    peer: Vec<Vec<Option<Link>>>,
+    topology: Topology,
+    /// Popularity-driven hot-expert replication (DESIGN.md §11); present
+    /// only when `D > 1` and the replica budget is nonzero.
+    replicator: Option<Replicator>,
+    /// Execs dispatched off device 0 (paid an activation round trip).
+    remote_execs: u64,
+    /// Execs served by a landed copy on a non-owner device.
+    replica_serves: u64,
     ndp: Option<NdpDevice>,
     ndp_link: Option<Link>,
-    cache: ExpertCache,
     pub(crate) clock: VirtualClock,
     pub(crate) state: BatchState,
     breakdown: StepBreakdown,
@@ -147,6 +183,36 @@ impl ServeEngine {
             .ndp
             .as_ref()
             .map(|n| Link::new("ndp-link", n.link_bw, n.link_lat));
+        let topology = Topology::from_system(&sys);
+        let devices: Vec<DeviceState> = topology
+            .host
+            .iter()
+            .map(|spec| DeviceState {
+                gpu: Resource::new("gpu"),
+                host_link: Link::new("pcie", spec.bw, spec.lat),
+                cache: ExpertCache::new(sys.gpu_cache_bytes),
+                demand_fetches: 0,
+                execs: 0,
+            })
+            .collect();
+        let peer: Vec<Vec<Option<Link>>> = topology
+            .peer
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|spec| spec.map(|s| Link::new("peer", s.bw, s.lat)))
+                    .collect()
+            })
+            .collect();
+        let replicator = (topology.n_devices > 1 && sys.shard.replicate_budget_bytes > 0)
+            .then(|| {
+                Replicator::new(
+                    dims.n_layers,
+                    dims.n_experts,
+                    topology.n_devices,
+                    sys.shard.replicate_budget_bytes,
+                )
+            });
         let predictor = make_predictor(&prefetch_cfg.predictor, dims.n_layers, dims.n_experts)?;
         let policy = make_policy(&policy_cfg)?;
         let alloc = if policy.wants_precision_plan() {
@@ -165,11 +231,14 @@ impl ServeEngine {
             policy,
             policy_cfg,
             cost,
-            gpu: Resource::new("gpu"),
-            pcie: Link::new("pcie", sys.pcie_bw, sys.pcie_lat),
+            devices,
+            peer,
+            topology,
+            replicator,
+            remote_execs: 0,
+            replica_serves: 0,
             ndp,
             ndp_link,
-            cache: ExpertCache::new(sys.gpu_cache_bytes),
             clock: VirtualClock::new(),
             state,
             breakdown: StepBreakdown::default(),
@@ -224,17 +293,39 @@ impl ServeEngine {
         }
     }
 
-    /// Snapshot of the expert cache's economics.
+    /// Snapshot of the expert caches' economics, aggregated over the
+    /// fleet (a single device's numbers when `D = 1`).
     pub fn cache_view(&self) -> CacheView {
-        CacheView {
-            entries: self.cache.len(),
-            used_bytes: self.cache.used_bytes(),
-            capacity_bytes: self.cache.capacity(),
-            hits: self.cache.hits,
-            misses: self.cache.misses,
-            evictions: self.cache.evictions,
-            hit_rate: self.cache.hit_rate(),
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut view = CacheView::default();
+        // Per device: LRU capacity plus the reserved replica region (the
+        // replicate budget), so `used <= capacity` holds fleet-wide.
+        let replica_cap = if self.replicator.is_some() {
+            self.cost.sys.shard.replicate_budget_bytes
+        } else {
+            0
+        };
+        for d in &self.devices {
+            view.entries += d.cache.len();
+            view.used_bytes += d.cache.used_bytes() + d.cache.pinned_bytes();
+            view.capacity_bytes += d.cache.capacity() + replica_cap;
+            hits += d.cache.hits;
+            misses += d.cache.misses;
+            view.evictions += d.cache.evictions;
         }
+        view.hits = hits;
+        view.misses = misses;
+        view.hit_rate = if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        };
+        view
+    }
+
+    /// Aggregate cache hit rate across the fleet (the `Report` field).
+    fn fleet_hit_rate(&self) -> f64 {
+        self.cache_view().hit_rate
     }
 
     /// Record decode routing from now on (the Fig. 2 trace and the
@@ -300,22 +391,26 @@ impl ServeEngine {
 
     /// Policies may pin FP16 experts in GPU HBM at model-load time (the
     /// MoNDE hot/cold split of Kim et al. 2024); no link charge.
-    /// Layer-major order is a stable stand-in for offline hotness ranking.
+    /// Layer-major order is a stable stand-in for offline hotness ranking;
+    /// each expert prewarms into its *owner* device's cache (the single
+    /// device when `D = 1`).
     fn prewarm(&mut self) -> Result<()> {
         if !self.policy.prewarm_fp16() {
             return Ok(());
         }
         let dims = self.model.manifest.model.clone();
         let bytes = self.model.manifest.transfer.fp16_expert_bytes;
-        'outer: for layer in 0..dims.n_layers {
+        for layer in 0..dims.n_layers {
             for expert in 0..dims.n_experts {
-                if self.cache.used_bytes() + bytes > self.cache.capacity() {
-                    break 'outer;
+                let dev = self.topology.owner_of(expert);
+                let cache = &self.devices[dev].cache;
+                if cache.used_bytes() + bytes > cache.capacity() {
+                    continue;
                 }
                 let key = PayloadKey { layer, expert, kind: PayloadKind::Fp16 };
                 let lits =
                     Arc::new(self.model.payload_base(layer, expert, Precision::Fp16, "hqq")?);
-                self.cache.insert(key, lits, bytes);
+                self.devices[dev].cache.insert(key, lits, bytes);
             }
         }
         Ok(())
@@ -356,19 +451,21 @@ impl ServeEngine {
         }
     }
 
-    /// Fetch (or hit) the base payload; returns (tensors, ready time).
-    /// A cache entry whose transfer is still in flight (a prefetch, or a
-    /// demand fetch another exec issued) is *joined*: no second transfer,
-    /// but the requester inherits the in-flight completion time.
+    /// Fetch (or hit) the base payload on device `dev`; returns (tensors,
+    /// ready time).  A cache entry whose transfer is still in flight (a
+    /// prefetch, a replica copy, or a demand fetch another exec issued) is
+    /// *joined*: no second transfer, but the requester inherits the
+    /// in-flight completion time.  Misses fetch over `dev`'s host link.
     fn acquire_base(
         &mut self,
+        dev: usize,
         layer: usize,
         expert: usize,
         precision: Precision,
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: Self::payload_kind(precision) };
-        if let Some(hit) = self.cache.get_at(&key, ready) {
+        if let Some(hit) = self.devices[dev].cache.get_at(&key, ready) {
             // First use of a speculative entry consumes its one-shot flag,
             // so credit coverage regardless of prefill/decode — the
             // prefetch saved a real link fetch either way.
@@ -379,43 +476,107 @@ impl ServeEngine {
         }
         let lits = Arc::new(self.model.payload_base(layer, expert, precision, &self.method())?);
         let bytes = self.base_bytes(precision);
-        let done = self
-            .pcie
-            .transfer(ready, bytes, TransferClass::ExpertWeights);
+        let done =
+            self.devices[dev].host_link.transfer(ready, bytes, TransferClass::ExpertWeights);
         if !self.in_prefill {
             self.prefetch.demand_fetches += 1;
+            self.devices[dev].demand_fetches += 1;
         }
-        self.cache.insert_ready(key, Arc::clone(&lits), bytes, done);
+        self.devices[dev].cache.insert_ready(key, Arc::clone(&lits), bytes, done);
         Ok((lits, done))
     }
 
-    /// Fetch (or hit) the compensator payload for `bits` (never
-    /// speculated: compensators are tiny and token-dependent).
+    /// Fetch (or hit) the compensator payload for `bits` on device `dev`
+    /// (never speculated: compensators are tiny and token-dependent).
     fn acquire_comp(
         &mut self,
+        dev: usize,
         layer: usize,
         expert: usize,
         bits: u8,
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
         let key = PayloadKey { layer, expert, kind: PayloadKind::Comp(bits) };
-        if let Some(hit) = self.cache.get_at(&key, ready) {
+        if let Some(hit) = self.devices[dev].cache.get_at(&key, ready) {
             return Ok((hit.payload, ready.max(hit.ready_at)));
         }
         let tag = self.policy_cfg.comp_tag.clone();
         let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
         let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
-        let done = self.pcie.transfer(ready, bytes, TransferClass::Compensator);
-        self.cache.insert_ready(key, Arc::clone(&lits), bytes, done);
+        let done =
+            self.devices[dev].host_link.transfer(ready, bytes, TransferClass::Compensator);
+        self.devices[dev].cache.insert_ready(key, Arc::clone(&lits), bytes, done);
         Ok((lits, done))
+    }
+
+    /// Queue a transfer on the directed `src → dst` peer link.
+    fn peer_transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        ready: VTime,
+        bytes: usize,
+        class: TransferClass,
+    ) -> VTime {
+        self.peer[src][dst]
+            .as_mut()
+            .expect("peer link exists for distinct devices")
+            .transfer(ready, bytes, class)
+    }
+
+    /// Pick the device that serves this exec: the cheapest *landed* copy
+    /// (earliest-free compute stream; the owner wins ties, then the lower
+    /// index), falling back to the owner — who then demand-fetches over
+    /// its host link.  The probe is economics-free (`peek_ready_at`), so
+    /// `D = 1` routing (always device 0) perturbs nothing.
+    fn choose_device(&self, key: &PayloadKey, owner: usize, now: VTime) -> usize {
+        if self.devices.len() == 1 {
+            return 0;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for (d, dev) in self.devices.iter().enumerate() {
+            if dev.cache.peek_ready_at(key).is_some_and(|t| t <= now) {
+                let free = dev.gpu.free_at();
+                let better = match best {
+                    None => true,
+                    Some((bf, bd)) => {
+                        free < bf || (free == bf && (d == owner || (bd != owner && d < bd)))
+                    }
+                };
+                if better {
+                    best = Some((free, d));
+                }
+            }
+        }
+        best.map_or(owner, |(_, d)| d)
     }
 
     fn plan_layer(&self, probs: &[f32], active: &[bool], layer: usize) -> LayerPlan {
         let m = &self.model.manifest.model;
-        let cache = &self.cache;
+        let devices = &self.devices;
         let probe = move |e: usize| {
-            cache.contains(&PayloadKey { layer, expert: e, kind: PayloadKind::Fp16 })
+            let key = PayloadKey { layer, expert: e, kind: PayloadKind::Fp16 };
+            devices.iter().any(|d| d.cache.contains(&key))
         };
+        // The placement view exists only on fleets — `D = 1` planning
+        // inputs are exactly the pre-sharding ones (the §11 equivalence
+        // rule covers the planner too).
+        let placement = (devices.len() > 1).then(|| {
+            let bulk = Self::payload_kind(self.policy.bulk_precision());
+            let now = self.clock.now();
+            let owner: Vec<usize> = (0..m.n_experts).map(|e| self.topology.owner_of(e)).collect();
+            // `replicated` means *landed*: an in-flight copy still costs
+            // the wire wait this seam exists to route around.
+            let replicated = (0..m.n_experts)
+                .map(|e| {
+                    let key = PayloadKey { layer, expert: e, kind: bulk };
+                    devices.iter().enumerate().any(|(d, dev)| {
+                        d != owner[e] && dev.cache.peek_ready_at(&key).is_some_and(|t| t <= now)
+                    })
+                })
+                .collect();
+            LayerPlacement { n_devices: devices.len(), owner, replicated }
+        });
         let ctx = PlanCtx {
             probs,
             n_tokens: active.len(),
@@ -426,18 +587,24 @@ impl ServeEngine {
             fp16_cached: &probe,
             predicted: self.predicted_scores.get(&layer).map(|v| v.as_slice()),
             precisions: self.alloc.as_ref().map(|a| a.layer(layer)),
+            placement: placement.as_ref(),
         };
         self.policy.plan(&ctx)
     }
 
-    /// Feed one layer's routing into the precision allocator's demand EWMA
-    /// (prefill and decode both count — prompt routing is the cheapest
-    /// warm-up signal; DESIGN.md §10).
-    fn observe_alloc(&mut self, layer: usize, probs: &[f32], active: &[bool]) {
+    /// Feed one layer's routing into the demand EWMAs — the precision
+    /// allocator's (DESIGN.md §10) and the sharding replicator's (§11).
+    /// Prefill and decode both count: prompt routing is the cheapest
+    /// warm-up signal.
+    fn observe_demand(&mut self, layer: usize, probs: &[f32], active: &[bool]) {
         let m = &self.model.manifest.model;
         let (n_experts, top_k, step) = (m.n_experts, m.top_k, self.decode_steps);
+        let obs = LayerObservation { step, layer, n_experts, top_k, probs, active };
         if let Some(a) = self.alloc.as_mut() {
-            a.observe(&LayerObservation { step, layer, n_experts, top_k, probs, active });
+            a.observe(&obs);
+        }
+        if let Some(r) = self.replicator.as_mut() {
+            r.observe(&obs);
         }
     }
 
@@ -456,19 +623,45 @@ impl ServeEngine {
         let n_rows = if prefill { m.t_prefill } else { m.b_max };
         let d = m.d_model;
         let mut moe = vec![0f32; n_rows * d];
-        let mut ndp_barrier = router_done;
+        // Device 0's next dense stage waits on NDP round trips *and* on
+        // remote devices shipping their expert outputs back.
+        let mut combine_barrier = router_done;
         self.in_prefill = prefill;
 
         for exec in &plan.execs {
             let n_tok = exec.tokens.len();
             match exec.location {
                 Location::Gpu => {
+                    let key = PayloadKey {
+                        layer,
+                        expert: exec.expert,
+                        kind: Self::payload_kind(exec.precision),
+                    };
+                    let owner = self.topology.owner_of(exec.expert);
+                    let dev = self.choose_device(&key, owner, router_done);
+                    // Cross-device dispatch: the hidden state lives on
+                    // device 0; a remote exec ships activations out (and,
+                    // below, back) on the peer links.  The weight fetch
+                    // (if any) overlaps the activation hop — both are
+                    // data-valid at router_done.
+                    let act_bytes = self.cost.act_bytes_one_way(n_tok);
+                    let act_in = if dev == 0 {
+                        router_done
+                    } else {
+                        self.peer_transfer(
+                            0,
+                            dev,
+                            router_done,
+                            act_bytes,
+                            TransferClass::Activations,
+                        )
+                    };
                     let (base, t_base) =
-                        self.acquire_base(layer, exec.expert, exec.precision, router_done)?;
-                    let (comp, ready) = match exec.precision {
+                        self.acquire_base(dev, layer, exec.expert, exec.precision, router_done)?;
+                    let (comp, weights_ready) = match exec.precision {
                         Precision::IntComp(bits) => {
                             let (c, t_comp) =
-                                self.acquire_comp(layer, exec.expert, bits, router_done)?;
+                                self.acquire_comp(dev, layer, exec.expert, bits, router_done)?;
                             (Some(c), t_base.max(t_comp))
                         }
                         _ => (None, t_base),
@@ -479,17 +672,28 @@ impl ServeEngine {
                         0.0
                     };
                     let op = self.cost.expert_gpu(n_tok, exec.precision, avg_rank);
-                    let gpu_free = self.gpu.free_at();
-                    let (start, _) = self.gpu.acquire(ready, op.seconds);
+                    let gpu_free = self.devices[dev].gpu.free_at();
+                    let ready = weights_ready.max(act_in);
+                    let (start, end) = self.devices[dev].gpu.acquire(ready, op.seconds);
                     if !prefill {
                         // Decode critical-path stall: how long this exec's
-                        // start was pushed past compute availability by
-                        // waiting on weight/compensator transfers — the
-                        // quantity prefetching exists to shrink (§8).
-                        self.breakdown.transfer_stall_s +=
-                            (start - gpu_free.max(router_done)).max(0.0);
+                        // start was pushed past compute-and-data
+                        // availability by waiting on weight/compensator
+                        // transfers — the quantity prefetching (§8) and
+                        // replication (§11) exist to shrink.
+                        self.breakdown.transfer_stall_s += (start - gpu_free.max(act_in)).max(0.0);
                     }
                     self.breakdown.expert_compute_s += op.seconds;
+                    self.devices[dev].execs += 1;
+                    if dev != owner {
+                        self.replica_serves += 1;
+                    }
+                    if dev != 0 {
+                        self.remote_execs += 1;
+                        let t_back =
+                            self.peer_transfer(dev, 0, end, act_bytes, TransferClass::Activations);
+                        combine_barrier = combine_barrier.max(t_back);
+                    }
                     let refs: Vec<&Tensor> = match &comp {
                         Some(c) => base.iter().chain(c.iter()).collect(),
                         None => base.iter().collect(),
@@ -499,7 +703,7 @@ impl ServeEngine {
                 }
                 Location::Ndp => {
                     // Activations out, near-data execute, activations back.
-                    let act = 2 * n_tok * d; // fp16 per direction
+                    let act = self.cost.act_bytes_one_way(n_tok); // fp16 per direction
                     let link = self.ndp_link.as_mut().expect("ndp exec without ndp link");
                     let t_in = link.transfer(router_done, act, TransferClass::Activations);
                     let dev = self.ndp.as_mut().expect("ndp exec without device");
@@ -512,7 +716,7 @@ impl ServeEngine {
                     self.breakdown.ndp_compute_s += op.seconds;
                     let link = self.ndp_link.as_mut().unwrap();
                     let t_back = link.transfer(t_done, act, TransferClass::Activations);
-                    ndp_barrier = ndp_barrier.max(t_back);
+                    combine_barrier = combine_barrier.max(t_back);
                     // Numerics: same stage executed locally (weights are
                     // resident near-data; no PCIe charge).
                     let lits =
@@ -525,17 +729,18 @@ impl ServeEngine {
             }
         }
 
-        // Shared experts (DeepSeek-style): GPU-resident, fp16, every token.
+        // Shared experts (DeepSeek-style): resident on device 0, fp16,
+        // every token.
         for s in 0..m.n_shared {
             let n_live = active.iter().filter(|&&a| a).count();
             let op = self.cost.expert_gpu(n_live, Precision::Fp16, 0.0);
-            self.gpu.acquire(router_done, op.seconds);
+            self.devices[0].gpu.acquire(router_done, op.seconds);
             self.breakdown.expert_compute_s += op.seconds;
             let y = self.model.run_shared_expert(layer, s, prefill, xn)?;
             combine::accumulate_all(&mut moe, &y.y, active, d);
         }
 
-        self.gpu.sync_to(ndp_barrier);
+        self.devices[0].gpu.sync_to(combine_barrier);
         Ok(moe)
     }
 
@@ -577,14 +782,17 @@ impl ServeEngine {
         let step_t0 = self.clock.now();
         self.prefetch.begin_step();
         // Decode-step boundary: refresh the per-expert precision plan from
-        // the routing demand accumulated so far (DESIGN.md §10).
+        // the routing demand accumulated so far (DESIGN.md §10) and
+        // reconcile the fleet's pinned replica sets against the same
+        // popularity table (DESIGN.md §11).
         if let Some(a) = self.alloc.as_mut() {
             a.replan();
         }
+        self.replicate_step()?;
 
         let mut x = self.model.embed(&tokens, false)?;
         let op = self.cost.embed(n_active);
-        self.gpu.acquire(step_t0, op.seconds);
+        self.devices[0].gpu.acquire(step_t0, op.seconds);
 
         let ctx_total: usize = pos.iter().map(|&p| p as usize + 1).sum();
         for layer in 0..m.n_layers {
@@ -598,10 +806,10 @@ impl ServeEngine {
             self.state.kv[layer] = LayerKv { k: kc, v: vc };
             let (xn, probs) = self.model.router(layer, &x2, false)?;
             let op = self.cost.attn_router(n_active, ctx_total);
-            let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
+            let (_, router_done) = self.devices[0].gpu.acquire(self.clock.now(), op.seconds);
             self.breakdown.attn_router_s += op.seconds;
 
-            self.observe_alloc(layer, &probs, &active);
+            self.observe_demand(layer, &probs, &active);
             let plan = self.plan_layer(&probs, &active, layer);
             debug_assert!(combine::plan_is_partition(&plan, m.b_max, m.top_k, &active));
 
@@ -632,7 +840,7 @@ impl ServeEngine {
 
         let logits = self.model.head(&x)?;
         let op = self.cost.head(n_active);
-        self.gpu.acquire(self.clock.now(), op.seconds);
+        self.devices[0].gpu.acquire(self.clock.now(), op.seconds);
         self.breakdown.head_s += op.seconds;
 
         self.end_step();
@@ -680,7 +888,7 @@ impl ServeEngine {
         let mut toks = req.prompt[..plen].to_vec();
         toks.resize(m.t_prefill, 0);
         let mut x = self.model.embed(&toks, true)?;
-        self.gpu.acquire(step_t0, self.cost.embed(plen).seconds);
+        self.devices[0].gpu.acquire(step_t0, self.cost.embed(plen).seconds);
 
         let active: Vec<bool> = (0..m.t_prefill).map(|i| i < plen).collect();
         let ctx_total = plen * (plen + 1) / 2;
@@ -689,10 +897,10 @@ impl ServeEngine {
             self.state.install_prefill(slot, layer, &kc, &vc)?;
             let (xn, probs) = self.model.router(layer, &x2, true)?;
             let op = self.cost.attn_router(plen, ctx_total);
-            let (_, router_done) = self.gpu.acquire(self.clock.now(), op.seconds);
+            let (_, router_done) = self.devices[0].gpu.acquire(self.clock.now(), op.seconds);
             self.breakdown.attn_router_s += op.seconds;
 
-            self.observe_alloc(layer, &probs, &active);
+            self.observe_demand(layer, &probs, &active);
             let plan = self.plan_layer(&probs, &active, layer);
             let moe = self.run_moe_layer(layer, &xn, &plan, &active, true, router_done)?;
             let mut xh = x2.to_f32_vec()?;
@@ -709,7 +917,7 @@ impl ServeEngine {
             .copy_from_slice(&xh[(plen - 1) * m.d_model..plen * m.d_model]);
         let x_lit = self.model.make_x(m.b_max, &batch_x)?;
         let logits = self.model.head(&x_lit)?;
-        self.gpu.acquire(self.clock.now(), self.cost.head(1).seconds);
+        self.devices[0].gpu.acquire(self.clock.now(), self.cost.head(1).seconds);
 
         self.end_step();
         let now = self.clock.now();
@@ -820,27 +1028,107 @@ impl ServeEngine {
 
             for p in ranked.into_iter().take(cap) {
                 let key = PayloadKey { layer: t_layer, expert: p.expert, kind };
-                // Dedup against resident payloads and in-flight fetches.
-                if self.cache.contains(&key) {
+                // Dedup against resident payloads and in-flight fetches
+                // anywhere in the fleet (a landed replica is as good as a
+                // local copy — the router will pick it).
+                if self.devices.iter().any(|d| d.cache.contains(&key)) {
                     continue;
                 }
                 if !self.prefetch.try_spend(bytes_each) {
                     return Ok(()); // step budget exhausted
                 }
+                // Speculation lands on the expert's owner device, over its
+                // own host link.
+                let dev = self.topology.owner_of(p.expert);
                 let lits =
                     Arc::new(self.model.payload_base(t_layer, p.expert, prec, &self.method())?);
-                let done =
-                    self.pcie
-                        .transfer(router_done, bytes_each, TransferClass::Speculative);
-                self.cache.insert_speculative(key, lits, bytes_each, done);
+                let done = self.devices[dev].host_link.transfer(
+                    router_done,
+                    bytes_each,
+                    TransferClass::Speculative,
+                );
+                self.devices[dev].cache.insert_speculative(key, lits, bytes_each, done);
                 self.prefetch.issued += 1;
             }
         }
         Ok(())
     }
 
+    /// Decode-step-boundary replica reconcile (DESIGN.md §11): turn the
+    /// popularity table into each device's desired pinned set, discard
+    /// stale replicas (free), and transfer the missing ones — from the
+    /// owner's landed copy over the dev→dev peer link when possible,
+    /// otherwise from host memory over the target's host link — under
+    /// `TransferClass::Replication`.  No-op when `D = 1` or budget 0.
+    fn replicate_step(&mut self) -> Result<()> {
+        let Some(mut rep) = self.replicator.take() else {
+            return Ok(());
+        };
+        let out = self.replicate_with(&mut rep);
+        self.replicator = Some(rep);
+        out
+    }
+
+    fn replicate_with(&mut self, rep: &mut Replicator) -> Result<()> {
+        let prec = self.policy.bulk_precision();
+        let kind = Self::payload_kind(prec);
+        let bulk = self.base_bytes(prec);
+        let now = self.clock.now();
+        let n_devices = self.devices.len();
+        // Ownership comes from the topology — one authority for the shard
+        // rule, shared with routing and the peer-sourcing check below.
+        let plan = {
+            let topo = &self.topology;
+            rep.plan(bulk, |e| topo.owner_of(e))
+        };
+
+        let mut desired: Vec<HashSet<PayloadKey>> = vec![HashSet::new(); n_devices];
+        for t in &plan {
+            desired[t.device].insert(PayloadKey { layer: t.layer, expert: t.expert, kind });
+        }
+        // Stale replicas are discards — no link traffic to free HBM.
+        for (dev, want) in desired.iter().enumerate() {
+            for key in self.devices[dev].cache.pinned_keys() {
+                if !want.contains(&key) {
+                    self.devices[dev].cache.unpin(&key);
+                }
+            }
+        }
+        // Place missing replicas hottest-first (the plan's order).  A key
+        // already resident on the target — pinned from an earlier step, or
+        // demand-cached — is sticky: no re-transfer while it lives.
+        for t in &plan {
+            let key = PayloadKey { layer: t.layer, expert: t.expert, kind };
+            if self.devices[t.device].cache.contains(&key) {
+                continue;
+            }
+            let owner = self.topology.owner_of(t.expert);
+            let lits = Arc::new(self.model.payload_base(t.layer, t.expert, prec, &self.method())?);
+            let owner_has_landed = owner != t.device
+                && self.devices[owner].cache.peek_ready_at(&key).is_some_and(|r| r <= now);
+            let done = if owner_has_landed {
+                self.peer_transfer(owner, t.device, now, bulk, TransferClass::Replication)
+            } else {
+                self.devices[t.device]
+                    .host_link
+                    .transfer(now, bulk, TransferClass::Replication)
+            };
+            self.devices[t.device].cache.insert_pinned(key, lits, bulk, done);
+            rep.issued += 1;
+            rep.bytes_moved += bulk;
+        }
+        Ok(())
+    }
+
     fn end_step(&mut self) {
-        let mut resources: Vec<&mut Resource> = vec![&mut self.gpu, &mut self.pcie.resource];
+        let mut resources: Vec<&mut Resource> = Vec::new();
+        for d in self.devices.iter_mut() {
+            resources.push(&mut d.gpu);
+            resources.push(&mut d.host_link.resource);
+        }
+        for l in self.peer.iter_mut().flatten().flatten() {
+            resources.push(&mut l.resource);
+        }
         if let Some(l) = self.ndp_link.as_mut() {
             resources.push(&mut l.resource);
         }
@@ -857,45 +1145,37 @@ impl ServeEngine {
     pub fn report(&self) -> Report {
         let mut bytes = std::collections::HashMap::new();
         let mut breakdown = self.breakdown.clone();
-        let logs = [
-            Some(&self.pcie.log),
-            self.ndp_link.as_ref().map(|l| &l.log),
-        ];
-        for log in logs.into_iter().flatten() {
-            bytes
-                .entry("expert_weights".to_string())
-                .and_modify(|b| *b += log.bytes_of(TransferClass::ExpertWeights))
-                .or_insert(log.bytes_of(TransferClass::ExpertWeights));
-            bytes
-                .entry("compensator".to_string())
-                .and_modify(|b| *b += log.bytes_of(TransferClass::Compensator))
-                .or_insert(log.bytes_of(TransferClass::Compensator));
-            bytes
-                .entry("activations".to_string())
-                .and_modify(|b| *b += log.bytes_of(TransferClass::Activations))
-                .or_insert(log.bytes_of(TransferClass::Activations));
-            bytes
-                .entry("speculative_weights".to_string())
-                .and_modify(|b| *b += log.bytes_of(TransferClass::Speculative))
-                .or_insert(log.bytes_of(TransferClass::Speculative));
+        // Every link in the deployment: per-device host links, the peer
+        // mesh, and the NDP link — `D = 1` reduces to the old pcie(+ndp).
+        let mut logs: Vec<&TransferLog> = self.devices.iter().map(|d| &d.host_link.log).collect();
+        for l in self.peer.iter().flatten().flatten() {
+            logs.push(&l.log);
         }
-        let pcie_busy = |class: TransferClass| -> f64 {
-            self.pcie
-                .log
-                .events
-                .iter()
+        if let Some(l) = self.ndp_link.as_ref() {
+            logs.push(&l.log);
+        }
+        for (name, class) in [
+            ("expert_weights", TransferClass::ExpertWeights),
+            ("compensator", TransferClass::Compensator),
+            ("activations", TransferClass::Activations),
+            ("speculative_weights", TransferClass::Speculative),
+            ("replication", TransferClass::Replication),
+        ] {
+            let total: usize = logs.iter().map(|log| log.bytes_of(class)).sum();
+            bytes.insert(name.to_string(), total);
+        }
+        let busy = |class: TransferClass| -> f64 {
+            logs.iter()
+                .flat_map(|log| log.events.iter())
                 .filter(|e| e.class == class)
                 .map(|e| e.end - e.start)
                 .sum()
         };
-        breakdown.transfer_weights_s = pcie_busy(TransferClass::ExpertWeights);
-        breakdown.transfer_comp_s = pcie_busy(TransferClass::Compensator);
-        breakdown.transfer_spec_s = pcie_busy(TransferClass::Speculative);
-        breakdown.transfer_act_s = self
-            .ndp_link
-            .as_ref()
-            .map(|l| l.log.busy_seconds())
-            .unwrap_or(0.0);
+        breakdown.transfer_weights_s = busy(TransferClass::ExpertWeights);
+        breakdown.transfer_comp_s = busy(TransferClass::Compensator);
+        breakdown.transfer_spec_s = busy(TransferClass::Speculative);
+        breakdown.transfer_repl_s = busy(TransferClass::Replication);
+        breakdown.transfer_act_s = busy(TransferClass::Activations);
 
         Report {
             policy: self.policy.name().to_string(),
@@ -908,7 +1188,7 @@ impl ServeEngine {
             prefills: self.prefills,
             breakdown,
             bytes,
-            cache_hit_rate: self.cache.hit_rate(),
+            cache_hit_rate: self.fleet_hit_rate(),
             requests: self.records.clone(),
             backend_execs: self.model.backend().exec_count(),
             prefetch: PrefetchReport {
@@ -921,11 +1201,31 @@ impl ServeEngine {
                 issued: self.prefetch.issued,
                 covered: self.prefetch.covered,
                 demand_fetches: self.prefetch.demand_fetches,
-                speculative_bytes: self.pcie.log.bytes_of(TransferClass::Speculative),
-                wasted_bytes: self.cache.wasted_speculative_bytes
-                    + self.cache.resident_unused_speculative_bytes(),
+                speculative_bytes: self
+                    .devices
+                    .iter()
+                    .map(|d| d.host_link.log.bytes_of(TransferClass::Speculative))
+                    .sum(),
+                wasted_bytes: self
+                    .devices
+                    .iter()
+                    .map(|d| {
+                        d.cache.wasted_speculative_bytes
+                            + d.cache.resident_unused_speculative_bytes()
+                    })
+                    .sum(),
             },
             alloc: self.alloc.as_ref().map(|a| a.report()),
+            shard: (self.devices.len() > 1).then(|| ShardReport {
+                devices: self.devices.len(),
+                replicate_budget_bytes: self.cost.sys.shard.replicate_budget_bytes,
+                replicas_issued: self.replicator.as_ref().map_or(0, |r| r.issued),
+                replication_bytes: self.replicator.as_ref().map_or(0, |r| r.bytes_moved),
+                replica_serves: self.replica_serves,
+                remote_execs: self.remote_execs,
+                demand_fetches_per_device: self.devices.iter().map(|d| d.demand_fetches).collect(),
+                execs_per_device: self.devices.iter().map(|d| d.execs).collect(),
+            }),
         }
     }
 }

@@ -18,6 +18,9 @@ pub struct StepBreakdown {
     pub transfer_act_s: f64,
     /// Link busy-time of speculative (prefetched) expert transfers.
     pub transfer_spec_s: f64,
+    /// Link busy-time of hot-expert replica copies across the sharded
+    /// fleet (DESIGN.md §11); 0 on single-device runs.
+    pub transfer_repl_s: f64,
     /// Decode critical-path stall: virtual time expert compute waited on
     /// weight/compensator transfers beyond GPU availability.  A *view* of
     /// where transfer time landed, not extra busy time — excluded from
@@ -35,6 +38,7 @@ impl StepBreakdown {
         self.transfer_comp_s += other.transfer_comp_s;
         self.transfer_act_s += other.transfer_act_s;
         self.transfer_spec_s += other.transfer_spec_s;
+        self.transfer_repl_s += other.transfer_repl_s;
         self.transfer_stall_s += other.transfer_stall_s;
         self.head_s += other.head_s;
     }
@@ -42,6 +46,7 @@ impl StepBreakdown {
     pub fn total_transfer(&self) -> f64 {
         self.transfer_weights_s + self.transfer_comp_s + self.transfer_act_s
             + self.transfer_spec_s
+            + self.transfer_repl_s
     }
 
     pub fn total_compute(&self) -> f64 {
@@ -110,6 +115,45 @@ impl PrefetchReport {
     }
 }
 
+/// Expert-parallel sharding outcome of a serve run (DESIGN.md §11);
+/// attached to [`Report::shard`] only when `D > 1` so single-device
+/// reports are unchanged.
+#[derive(Debug, Default, Clone)]
+pub struct ShardReport {
+    /// Devices in the fleet.
+    pub devices: usize,
+    /// Per-device replica-region byte budget.
+    pub replicate_budget_bytes: usize,
+    /// Replica transfers issued by the step-boundary reconcile.
+    pub replicas_issued: u64,
+    /// Bytes moved under `TransferClass::Replication`.
+    pub replication_bytes: usize,
+    /// Demand execs served by a landed copy on a non-owner device.
+    pub replica_serves: u64,
+    /// Expert execs dispatched to a device other than device 0 (each one
+    /// pays an activation round trip on the peer links).
+    pub remote_execs: u64,
+    /// Decode-time demand fetches issued per device's host link.
+    pub demand_fetches_per_device: Vec<u64>,
+    /// Expert execs run per device (fleet balance).
+    pub execs_per_device: Vec<u64>,
+}
+
+impl ShardReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "D={} repl-budget={}B replicas={} ({}B) replica-serves={} remote-execs={} execs/dev={:?}",
+            self.devices,
+            self.replicate_budget_bytes,
+            self.replicas_issued,
+            self.replication_bytes,
+            self.replica_serves,
+            self.remote_execs,
+            self.execs_per_device,
+        )
+    }
+}
+
 /// Nearest-rank percentile of an ascending-sorted sample (0 when empty).
 fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -141,6 +185,8 @@ pub struct Report {
     /// Final state of the budgeted precision allocator (DESIGN.md §10);
     /// `None` for fixed-precision policies.
     pub alloc: Option<AllocReport>,
+    /// Sharding/replication ledger (DESIGN.md §11); `None` when `D = 1`.
+    pub shard: Option<ShardReport>,
 }
 
 impl Report {

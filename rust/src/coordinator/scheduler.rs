@@ -11,7 +11,10 @@ use crate::workload::Request;
 ///
 /// The pre-`Server` entrypoint, kept as the golden reference the session
 /// façade is pinned against (`tests/server_api.rs` proves
-/// `Server::run_to_completion` is byte-identical); new callers should use
+/// `Server::run_to_completion` is byte-identical, `tests/fuzz_server.rs`
+/// extends the pin to randomized submit/cancel/reap interleavings, and
+/// `tests/shard.rs` pins the `D = 1` expert-parallel engine to this loop
+/// — DESIGN.md §11's equivalence rule); new callers should use
 /// [`crate::server::ServerBuilder`].
 pub fn serve(engine: &mut ServeEngine, requests: Vec<Request>) -> Result<Report> {
     let mut batcher = Batcher::new(requests);

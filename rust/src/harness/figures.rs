@@ -30,10 +30,13 @@ pub struct Harness {
     pub eval_seqs: usize,
     /// Requests per serving point (throughput figures).
     pub serve_requests: usize,
-    /// `--smoke`: run drivers that support it (the `adaptive` sweep) on
-    /// the built-in synthetic model with a tiny workload — artifact-free,
-    /// the CI quickstart-job configuration.
+    /// `--smoke`: run drivers that support it (the `adaptive` and `shard`
+    /// sweeps) on the built-in synthetic model with a tiny workload —
+    /// artifact-free, the CI quickstart-job configuration.
     pub smoke: bool,
+    /// `--bless`: the `golden` driver rewrites the pinned report
+    /// snapshots under `rust/tests/golden/` instead of diffing them.
+    pub bless: bool,
 }
 
 impl Harness {
@@ -54,6 +57,7 @@ impl Harness {
             eval_seqs: if full { 128 } else { 24 },
             serve_requests: if full { 16 } else { 8 },
             smoke: false,
+            bless: false,
         })
     }
 
@@ -417,6 +421,53 @@ fn comp_delta(model: &StagedModel, prefix: &str, d_in: usize, d_out: usize) -> R
     Ok(delta)
 }
 
+/// `layer.expert.proj` → (layer, expert, proj) with contextful errors for
+/// malformed keys (the bare `it.next().unwrap()` chain this replaced
+/// panicked on any truncated or non-numeric manifest entry).
+pub fn parse_mat_key(key: &str) -> Result<(usize, usize, String)> {
+    let mut it = key.split('.');
+    let mut field = |name: &str| {
+        it.next()
+            .with_context(|| format!("mat key `{key}` is missing its {name} field"))
+    };
+    let li = field("layer")?
+        .parse::<usize>()
+        .with_context(|| format!("mat key `{key}`: layer is not an index"))?;
+    let e = field("expert")?
+        .parse::<usize>()
+        .with_context(|| format!("mat key `{key}`: expert is not an index"))?;
+    let proj = field("projection")?.to_string();
+    Ok((li, e, proj))
+}
+
+/// The matrix with the highest allocated rank in `tag`'s rank table —
+/// fig4's representative high-kurtosis pick.  Contextful errors for a
+/// missing tag, an empty rank list (the old `max_by_key(...).unwrap()`
+/// panic path) and rank/key tables that disagree in length.
+pub fn best_ranked_matrix(
+    manifest: &Manifest,
+    tag: &str,
+) -> Result<(usize, usize, String)> {
+    let entry = manifest
+        .rank_table
+        .get(tag)
+        .with_context(|| format!("manifest has no `{tag}` rank table (run `make artifacts`)"))?;
+    let (best_idx, _) = entry
+        .ranks
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, r)| **r)
+        .with_context(|| format!("rank table `{tag}` is empty — no matrix to pick"))?;
+    let key = manifest.mat_keys.get(best_idx).with_context(|| {
+        format!(
+            "rank table `{tag}` has {} ranks but only {} mat keys",
+            entry.ranks.len(),
+            manifest.mat_keys.len()
+        )
+    })?;
+    parse_mat_key(key)
+}
+
 pub fn fig4(h: &mut Harness) -> Result<()> {
     let model = h.load_model("mixtral-tiny")?;
     h.sink.line(
@@ -425,16 +476,8 @@ pub fn fig4(h: &mut Harness) -> Result<()> {
     let tags = ["r4k", "r8k", "r16k", "r32k", "default"];
     let mut rows = Vec::new();
     // Representative high-kurtosis matrix: use the highest default rank.
-    let ranks = &model.manifest.rank_table["default"].ranks;
-    let (best_idx, _) = ranks.iter().enumerate().max_by_key(|(_, r)| **r).unwrap();
-    let key = &model.manifest.mat_keys[best_idx];
-    let mut it = key.split('.');
-    let (li, e, proj) = (
-        it.next().unwrap().parse::<usize>()?,
-        it.next().unwrap().parse::<usize>()?,
-        it.next().unwrap().to_string(),
-    );
-    h.sink.line(format!("  matrix {key} (highest allocated rank):"));
+    let (li, e, proj) = best_ranked_matrix(&model.manifest, "default")?;
+    h.sink.line(format!("  matrix {li}.{e}.{proj} (highest allocated rank):"));
     for (tag, err) in residual_norms(&model, li, e, &proj, 2, &tags)? {
         h.sink.line(format!("    {tag:<8} ‖W−Ŵ‖/‖W‖ = {err:.4}"));
         rows.push(format!("{tag},{err}"));
@@ -996,6 +1039,155 @@ pub fn adaptive(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Shard sweep — expert-parallel devices × replication budget × policy
+// ---------------------------------------------------------------------------
+
+/// Not a paper figure: the expert-parallel sharding sweep (DESIGN.md
+/// §11).  For D ∈ {1, 2, 4} devices it serves each policy with the
+/// replicator off and with a full per-device replica budget, reporting
+/// virtual throughput, the decode weight-transfer stall, replication
+/// traffic and the fleet's exec balance.  Two pins ride along: the `D=1`
+/// run must be byte-identical to the plain single-device server (the §11
+/// equivalence rule), and on the skewed decode workload a nonzero
+/// replication budget must not raise the weight stall.
+///
+/// With `--smoke` (or no artifacts) it runs on the built-in synthetic
+/// model with a tiny workload — the artifact-free CI path.
+pub fn shard(h: &mut Harness) -> Result<()> {
+    use crate::config::ShardConfig;
+
+    let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
+    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
+        Box::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = h.artifacts.clone();
+        let backend = Arc::clone(&h.backend);
+        Box::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(Arc::clone(&backend), manifest)
+        })
+    };
+    let probe = mk_model()?;
+    let manifest = probe.manifest.clone();
+    let dims = manifest.model.clone();
+    let mut bits: Vec<u8> = manifest.quant.bits.clone();
+    bits.sort_unstable();
+    let floor_bits = *bits.first().context("manifest ships no quantized width")?;
+    let q = manifest.q_expert_bytes(floor_bits);
+    // Offloading-thrash regime: each device caches ~one bulk payload, so
+    // zero-budget fleets refetch recurring experts every step; the full
+    // replica budget can pin every (layer, expert) pair somewhere.
+    let cache_bytes = q;
+    let full_budget = dims.n_layers * dims.n_experts * q;
+
+    let (n_req, prompt_len, out_len) =
+        if smoke { (2, 32, 12) } else { (h.serve_requests, 256, 64) };
+    let eval = if smoke {
+        synth::tiny_eval_store(&dims)?
+    } else {
+        crate::manifest::WeightStore::load(probe.manifest.eval_path())?
+    };
+    let requests =
+        WorkloadGen::generate(&WorkloadConfig::offline(n_req, prompt_len, out_len), &eval)?;
+
+    let serve = |policy: PolicyConfig, shard: Option<ShardConfig>| -> Result<Report> {
+        let model = mk_model()?;
+        let mut sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        sys.gpu_cache_bytes = cache_bytes;
+        let mut builder = ServerBuilder::new(model).policy(policy).system(sys);
+        if let Some(s) = shard {
+            builder = builder.shard(s);
+        }
+        let mut server = builder.build()?;
+        for req in &requests {
+            server.submit(req.clone())?;
+        }
+        server.run_to_completion()
+    };
+
+    h.sink.line(format!(
+        "== Shard sweep ({}, out={out_len}{}): D × replication budget × policy ==",
+        dims.name,
+        if smoke { ", smoke" } else { "" },
+    ));
+    h.sink.line(format!(
+        "  per-device cache {cache_bytes}B | full replica budget {full_budget}B/device",
+    ));
+    let policies: Vec<(String, PolicyConfig)> = vec![
+        (
+            format!("static-quant{floor_bits}"),
+            PolicyConfig::new("static-quant", floor_bits, 0),
+        ),
+        (
+            format!("beam-{floor_bits}bit"),
+            PolicyConfig::new("beam", floor_bits, dims.top_n),
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (pname, policy) in &policies {
+        // §11 equivalence rule: an explicit D=1 shard config serves the
+        // identical byte ledger and stall breakdown as the plain
+        // single-device server.
+        let plain = serve(policy.clone(), None)?;
+        let d1 = serve(policy.clone(), Some(ShardConfig::new(1, full_budget)))?;
+        let identical = plain.bytes == d1.bytes
+            && plain.breakdown.transfer_stall_s == d1.breakdown.transfer_stall_s
+            && plain.virtual_seconds == d1.virtual_seconds;
+        h.sink.line(format!(
+            "  {pname:<16} D=1 equivalence: byte ledger + stall identical = {identical}"
+        ));
+        // The equivalence rule is a hard contract (DESIGN.md §11), not a
+        // log line — the CI smoke run must fail if it ever breaks.
+        anyhow::ensure!(
+            identical,
+            "{pname}: D=1 sharded ledger diverged from the plain single-device server"
+        );
+        for devices in [1usize, 2, 4] {
+            for (blabel, budget) in [("none", 0usize), ("full", full_budget)] {
+                if devices == 1 && budget > 0 {
+                    continue; // replication needs peers
+                }
+                let r = serve(policy.clone(), Some(ShardConfig::new(devices, budget)))?;
+                let (repl_bytes, serves, balance) = match &r.shard {
+                    Some(s) => (
+                        s.replication_bytes,
+                        s.replica_serves,
+                        format!("{:?}", s.execs_per_device),
+                    ),
+                    None => (0, 0, "[all on dev0]".to_string()),
+                };
+                h.sink.line(format!(
+                    "    D={devices} repl={blabel:<4} {pname:<16} {:>8.2} tok/s | stall {:>8.5}s | repl {:>9}B | replica-serves {serves:>5} | execs {balance}",
+                    r.tokens_per_second(),
+                    r.breakdown.transfer_stall_s,
+                    repl_bytes,
+                ));
+                rows.push(format!(
+                    "{devices},{blabel},{pname},{},{},{},{}",
+                    r.tokens_per_second(),
+                    r.breakdown.transfer_stall_s,
+                    repl_bytes,
+                    serves,
+                ));
+            }
+        }
+    }
+    h.sink.csv(
+        "shard_sweep.csv",
+        "devices,replication,policy,tokens_per_s,stall_s,replication_bytes,replica_serves",
+        &rows,
+    )?;
+    h.sink.line(
+        "  (expected: D=1 ledgers identical to the plain server; with D≥2 a full replica \
+         budget cuts the decode weight-stall the zero-budget fleet pays on every refetch)",
+    );
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -1029,9 +1221,14 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "tab2" => tab2(h),
         "prefetch" => prefetch(h),
         "adaptive" => adaptive(h),
+        "shard" => shard(h),
+        "golden" => crate::harness::golden::run(h),
         "all" => all(h),
         other => {
-            anyhow::bail!("unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, all)")
+            anyhow::bail!(
+                "unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, shard, \
+                 golden, all)"
+            )
         }
     }
     .and_then(|_| {
@@ -1042,3 +1239,55 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
     })
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth;
+
+    #[test]
+    fn parse_mat_key_roundtrips_and_rejects_malformed() {
+        assert_eq!(parse_mat_key("3.7.w2").unwrap(), (3, 7, "w2".to_string()));
+        let err = parse_mat_key("3.7").unwrap_err().to_string();
+        assert!(err.contains("missing its projection"), "{err}");
+        let err = parse_mat_key("").unwrap_err().to_string();
+        assert!(err.contains("layer is not an index"), "{err}");
+        let err = parse_mat_key("a.b.w1").unwrap_err().to_string();
+        assert!(err.contains("layer is not an index"), "{err}");
+        let err = parse_mat_key("3.x.w1").unwrap_err().to_string();
+        assert!(err.contains("expert is not an index"), "{err}");
+    }
+
+    #[test]
+    fn best_ranked_matrix_picks_the_highest_rank() {
+        let mut m = synth::tiny_manifest("t");
+        m.rank_table.get_mut("default").unwrap().ranks[5] = 9;
+        let got = best_ranked_matrix(&m, "default").unwrap();
+        assert_eq!(got, parse_mat_key(&m.mat_keys[5]).unwrap());
+    }
+
+    #[test]
+    fn best_ranked_matrix_reports_missing_tag_and_empty_ranks() {
+        // Regression for figures.rs' old `max_by_key(...).unwrap()` +
+        // `rank_table["default"]` panic paths: every malformed manifest
+        // shape must surface as a contextful error instead.
+        let m = synth::tiny_manifest("t");
+        let err = best_ranked_matrix(&m, "nope").unwrap_err().to_string();
+        assert!(err.contains("no `nope` rank table"), "{err}");
+
+        let mut empty = synth::tiny_manifest("t");
+        empty.rank_table.get_mut("default").unwrap().ranks.clear();
+        let err = best_ranked_matrix(&empty, "default").unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+
+        let mut keyless = synth::tiny_manifest("t");
+        keyless.mat_keys.clear();
+        let err = best_ranked_matrix(&keyless, "default").unwrap_err().to_string();
+        assert!(err.contains("mat keys"), "{err}");
+
+        let mut malformed = synth::tiny_manifest("t");
+        malformed.rank_table.get_mut("default").unwrap().ranks[0] = 99;
+        malformed.mat_keys[0] = "zero.0.w1".to_string();
+        let err = best_ranked_matrix(&malformed, "default").unwrap_err().to_string();
+        assert!(err.contains("layer is not an index"), "{err}");
+    }
+}

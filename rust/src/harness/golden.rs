@@ -1,0 +1,273 @@
+//! Golden replay corpus: pinned end-to-end report snapshots.
+//!
+//! Each scenario drives the full serving stack (synthetic model, zero
+//! artifacts) through `Server::run_to_completion` and renders everything
+//! deterministic about the run — token streams, the per-class byte
+//! ledger, the stall breakdown, per-request latencies, prefetch/alloc/
+//! shard ledgers — into one canonical text snapshot.  The pins live in
+//! `rust/tests/golden/<name>.golden.txt`:
+//!
+//! * `tests/golden_replay.rs` replays every scenario and diffs against
+//!   its pin (and checks replay determinism);
+//! * `beam figure golden --bless` regenerates the pins after an
+//!   *intentional* ledger change — commit the diff with the change that
+//!   caused it;
+//! * a missing pin is written on first run (self-bless) so fresh clones
+//!   and CI bootstrap cleanly; the committed pins are the regression
+//!   contract between sessions.
+//!
+//! Snapshots are compared as *strings*: floats are rendered with Rust's
+//! shortest-roundtrip `{:?}`, map keys are sorted, and every field the
+//! engine computes deterministically is included — a one-bit ledger drift
+//! anywhere in the clock/link/cache machinery shows up as a diff line.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, ReferenceBackend};
+use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
+use crate::coordinator::Report;
+use crate::harness::figures::Harness;
+use crate::server::{ServerBuilder, TokenEvent};
+use crate::synth;
+use crate::workload::{WorkloadConfig, WorkloadGen};
+
+/// Names of the committed scenarios, in corpus order.
+pub fn scenario_names() -> Vec<&'static str> {
+    vec!["beam2-offline", "static2-gate-prefetch", "adaptive-budgeted", "shard2-replicated"]
+}
+
+/// Directory the pins live in (`rust/tests/golden/`).
+pub fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Pin file of one scenario.
+pub fn pin_path(name: &str) -> PathBuf {
+    golden_dir().join(format!("{name}.golden.txt"))
+}
+
+/// Replay one scenario and render its canonical snapshot.
+pub fn render(name: &str) -> Result<String> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(Arc::clone(&backend), "synthetic-tiny")?;
+    let manifest = model.manifest.clone();
+    let dims = manifest.model.clone();
+    let q = manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let pairs = dims.n_layers * dims.n_experts;
+
+    let mut sys = SystemConfig::scaled_for(&dims, false);
+    let mut policy = PolicyConfig::new("beam", synth::SYNTH_BITS, 1);
+    let mut prefetch = PrefetchConfig::off();
+    let mut shard: Option<ShardConfig> = None;
+    let wl = match name {
+        // The paper policy on the offload-regime single device — the
+        // ledger every PR since the seed has been building on.
+        "beam2-offline" => {
+            sys.gpu_cache_bytes = 2 * manifest.transfer.fp16_expert_bytes;
+            WorkloadConfig::offline(3, 32, 6)
+        }
+        // Speculation on: gate-lookahead prefetch with a one-step budget
+        // (pins the §8 speculative ledger split).
+        "static2-gate-prefetch" => {
+            policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+            prefetch = PrefetchConfig::new("gate", 1, dims.top_k * dims.n_layers * q);
+            sys.gpu_cache_bytes = 2 * manifest.transfer.fp16_expert_bytes;
+            WorkloadConfig::offline(2, 32, 6)
+        }
+        // The §10 budgeted allocator with compensate-everything headroom.
+        "adaptive-budgeted" => {
+            policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+            policy.alloc_budget_bytes =
+                Some(pairs * q + manifest.comp_bytes_total("default", synth::SYNTH_BITS));
+            sys.gpu_cache_bytes = 5 * q;
+            WorkloadConfig::offline(2, 32, 6)
+        }
+        // The §11 fleet: two devices, thrash-sized caches, a full replica
+        // budget (pins the replication ledger and the peer-link traffic).
+        "shard2-replicated" => {
+            policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+            sys.gpu_cache_bytes = q;
+            shard = Some(ShardConfig::new(2, pairs * q));
+            WorkloadConfig::offline(2, 32, 8)
+        }
+        other => anyhow::bail!("unknown golden scenario `{other}`"),
+    };
+
+    let mut builder = ServerBuilder::new(model).policy(policy).system(sys).prefetch(prefetch);
+    if let Some(s) = shard {
+        builder = builder.shard(s);
+    }
+    let mut server = builder.build()?;
+    let eval = synth::tiny_eval_store(&dims)?;
+    let mut ids = Vec::new();
+    for req in WorkloadGen::generate(&wl, &eval)? {
+        ids.push(server.submit(req).context("golden scenario submit")?);
+    }
+    let report = server.run_to_completion()?;
+
+    let mut out = String::new();
+    let w = &mut out;
+    let _ = writeln!(w, "scenario: {name}");
+    render_report(w, &report);
+    for id in ids {
+        let tokens: Vec<i32> = server
+            .poll_events(id)
+            .into_iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { token, .. } => Some(token),
+                _ => None,
+            })
+            .collect();
+        let _ = writeln!(w, "tokens[{}]: {tokens:?}", id.0);
+    }
+    Ok(out)
+}
+
+/// Render every deterministic field of a [`Report`] in a stable order.
+fn render_report(w: &mut String, r: &Report) {
+    let _ = writeln!(w, "policy: {}", r.policy);
+    let _ = writeln!(w, "model: {}", r.model);
+    let _ = writeln!(w, "n_requests: {}", r.n_requests);
+    let _ = writeln!(w, "total_generated: {}", r.total_generated);
+    let _ = writeln!(w, "decode_steps: {}", r.decode_steps);
+    let _ = writeln!(w, "prefills: {}", r.prefills);
+    let _ = writeln!(w, "virtual_seconds: {:?}", r.virtual_seconds);
+    let mut byte_keys: Vec<&String> = r.bytes.keys().collect();
+    byte_keys.sort();
+    for k in byte_keys {
+        let _ = writeln!(w, "bytes.{k}: {}", r.bytes[k]);
+    }
+    let b = &r.breakdown;
+    let _ = writeln!(w, "breakdown.attn_router_s: {:?}", b.attn_router_s);
+    let _ = writeln!(w, "breakdown.expert_compute_s: {:?}", b.expert_compute_s);
+    let _ = writeln!(w, "breakdown.ndp_compute_s: {:?}", b.ndp_compute_s);
+    let _ = writeln!(w, "breakdown.transfer_weights_s: {:?}", b.transfer_weights_s);
+    let _ = writeln!(w, "breakdown.transfer_comp_s: {:?}", b.transfer_comp_s);
+    let _ = writeln!(w, "breakdown.transfer_act_s: {:?}", b.transfer_act_s);
+    let _ = writeln!(w, "breakdown.transfer_spec_s: {:?}", b.transfer_spec_s);
+    let _ = writeln!(w, "breakdown.transfer_repl_s: {:?}", b.transfer_repl_s);
+    let _ = writeln!(w, "breakdown.transfer_stall_s: {:?}", b.transfer_stall_s);
+    let _ = writeln!(w, "breakdown.head_s: {:?}", b.head_s);
+    let _ = writeln!(w, "cache_hit_rate: {:?}", r.cache_hit_rate);
+    let p = &r.prefetch;
+    let _ = writeln!(
+        w,
+        "prefetch: predictor={} issued={} covered={} demand={} spec_bytes={} wasted={}",
+        p.predictor, p.issued, p.covered, p.demand_fetches, p.speculative_bytes, p.wasted_bytes
+    );
+    if let Some(a) = &r.alloc {
+        let _ = writeln!(w, "alloc: {}", a.summary());
+    }
+    if let Some(s) = &r.shard {
+        let _ = writeln!(w, "shard: {}", s.summary());
+        let _ = writeln!(w, "shard.demand_fetches_per_device: {:?}", s.demand_fetches_per_device);
+    }
+    for rec in &r.requests {
+        let _ = writeln!(
+            w,
+            "record[{}]: prompt={} generated={} arrival={:?} first={:?} finished={:?}",
+            rec.id, rec.prompt_len, rec.generated, rec.arrival, rec.first_token_at,
+            rec.finished_at
+        );
+    }
+}
+
+/// Outcome of checking one scenario against its pin.
+pub enum PinStatus {
+    /// The replay matched the committed pin.
+    Match,
+    /// No pin existed; one was written (commit it).
+    Blessed,
+    /// `--bless`: the pin was rewritten.
+    Rewritten,
+}
+
+/// Replay `name` and reconcile with its pin file.  `bless` forces a
+/// rewrite; otherwise a missing pin is written (self-bless) and an
+/// existing pin is diffed — the error names the first diverging line.
+pub fn check_pin(name: &str, bless: bool) -> Result<PinStatus> {
+    let got = render(name)?;
+    let path = pin_path(name);
+    std::fs::create_dir_all(golden_dir())?;
+    if bless {
+        std::fs::write(&path, &got)?;
+        return Ok(PinStatus::Rewritten);
+    }
+    if !path.exists() {
+        std::fs::write(&path, &got)?;
+        return Ok(PinStatus::Blessed);
+    }
+    let want = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading pin {}", path.display()))?;
+    if want == got {
+        return Ok(PinStatus::Match);
+    }
+    let diff = first_diff(&want, &got);
+    anyhow::bail!(
+        "golden scenario `{name}` diverged from its pin {}\n{diff}\n\
+         If the ledger change is intentional, regenerate with \
+         `cargo run --release -- figure golden --bless` and commit the diff.",
+        path.display(),
+    )
+}
+
+/// First line where two snapshots disagree, for diff-sized error output.
+fn first_diff(want: &str, got: &str) -> String {
+    for (i, (w, g)) in want.lines().zip(got.lines()).enumerate() {
+        if w != g {
+            return format!("  line {}:\n  - pinned: {w}\n  - replay: {g}", i + 1);
+        }
+    }
+    format!(
+        "  line counts differ: pinned {} vs replay {}",
+        want.lines().count(),
+        got.lines().count()
+    )
+}
+
+/// The `figure golden` driver: replay every scenario, bless or diff.
+pub fn run(h: &mut Harness) -> Result<()> {
+    h.sink.line(format!(
+        "== Golden replay corpus ({} scenarios, pins in {}) ==",
+        scenario_names().len(),
+        golden_dir().display(),
+    ));
+    for name in scenario_names() {
+        let status = check_pin(name, h.bless)?;
+        let verdict = match status {
+            PinStatus::Match => "matches pin",
+            PinStatus::Blessed => "pin written (first run — commit it)",
+            PinStatus::Rewritten => "pin re-blessed",
+        };
+        h.sink.line(format!("  {name:<24} {verdict}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_are_unique_and_resolvable() {
+        let names = scenario_names();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        assert!(render("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn first_diff_pinpoints_the_divergence() {
+        let d = first_diff("a\nb\nc", "a\nX\nc");
+        assert!(d.contains("line 2"), "{d}");
+        assert!(d.contains("- pinned: b"), "{d}");
+        let d = first_diff("a\nb", "a\nb\nc");
+        assert!(d.contains("line counts differ"), "{d}");
+    }
+}

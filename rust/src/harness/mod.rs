@@ -7,6 +7,7 @@
 //! reproduction target (EXPERIMENTS.md records both).
 
 pub mod figures;
+pub mod golden;
 pub mod report;
 
 pub use report::ReportSink;

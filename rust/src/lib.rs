@@ -19,9 +19,11 @@
 //!   backend, and (feature-gated) the PJRT backend
 //! * [`runtime`]    — the staged model the coordinator drives
 //! * [`synth`]      — deterministic synthetic model (zero-artifact runs)
-//! * [`sim`]        — virtual clock + H100/NDP roofline cost model
-//! * [`offload`]    — memory tiers, link simulator, expert LRU cache,
-//!   speculative prefetch queue, NDP
+//! * [`sim`]        — virtual clock + H100/NDP roofline cost model +
+//!   device-fleet topology (DESIGN.md §11)
+//! * [`offload`]    — memory tiers, link simulator, expert LRU cache with
+//!   pinned replicas, speculative prefetch queue, the popularity-driven
+//!   sharding replicator, NDP
 //! * [`registry`]   — the shared name → constructor table (aliases,
 //!   sorted listings) behind both open registries (DESIGN.md §9)
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /
@@ -56,7 +58,7 @@ pub mod synth;
 pub mod workload;
 
 pub use backend::{default_backend, Backend, ReferenceBackend, Tensor};
-pub use config::{ModelDims, PolicyConfig, Precision, PrefetchConfig, SystemConfig};
+pub use config::{ModelDims, PolicyConfig, Precision, PrefetchConfig, ShardConfig, SystemConfig};
 pub use coordinator::engine::ServeEngine;
 pub use manifest::{Manifest, WeightStore};
 pub use runtime::StagedModel;

@@ -5,12 +5,20 @@
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
 //!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
 //!             [--lookahead N] [--max-pending N] [--alloc-budget BYTES]
+//!             [--devices D] [--replicate-budget BYTES]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|all>
-//!             [--out DIR] [--full] [--smoke]
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|golden|all>
+//!             [--out DIR] [--full] [--smoke] [--bless]
 //! beam info   --model mixtral-tiny
 //! ```
+//!
+//! `--devices D` shards each layer's experts across `D` expert-parallel
+//! devices (DESIGN.md §11); `--replicate-budget B` reserves `B` bytes per
+//! device for pinned replicas of popularity-hot remote experts.  `figure
+//! shard --smoke` sweeps D × budget × policy artifact-free; `figure
+//! golden --bless` regenerates the pinned report snapshots under
+//! `rust/tests/golden/`.
 //!
 //! `--policy adaptive` serves the budgeted per-expert precision allocator
 //! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
@@ -55,7 +63,7 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
-        let bools = ["ndp", "full", "raw-system", "smoke"];
+        let bools = ["ndp", "full", "raw-system", "smoke", "bless"];
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
@@ -133,8 +141,8 @@ fn prefetch_config(
     Ok(PrefetchConfig::new(&name, lookahead, budget))
 }
 
-fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
-    if args.has("raw-system") {
+fn system(args: &Args, manifest: &Manifest) -> Result<SystemConfig> {
+    let mut sys = if args.has("raw-system") {
         if args.has("ndp") {
             SystemConfig::gpu_ndp()
         } else {
@@ -142,7 +150,14 @@ fn system(args: &Args, manifest: &Manifest) -> SystemConfig {
         }
     } else {
         SystemConfig::scaled_for(&manifest.model, args.has("ndp"))
-    }
+    };
+    // Expert-parallel sharding (DESIGN.md §11): D devices, each with a
+    // per-device replica-region budget for popularity-hot remote experts.
+    let devices: usize = args.num("devices", 1usize)?;
+    anyhow::ensure!(devices >= 1, "--devices must be at least 1");
+    let replicate: usize = args.num("replicate-budget", 0usize)?;
+    sys.shard = beam_moe::config::ShardConfig::new(devices, replicate);
+    Ok(sys)
 }
 
 fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> {
@@ -156,7 +171,7 @@ fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> 
         PrefetchConfig::off()
     };
     let model = StagedModel::load(backend, manifest)?;
-    let sys = system(args, &model.manifest);
+    let sys = system(args, &model.manifest)?;
     ServerBuilder::new(model)
         .policy(policy)
         .system(sys)
@@ -228,6 +243,13 @@ fn main() -> Result<()> {
             if let Some(a) = &report.alloc {
                 println!("  alloc: {}", a.summary());
             }
+            if let Some(s) = &report.shard {
+                println!(
+                    "  shard: {} | decode weight-stall {:.4}s",
+                    s.summary(),
+                    report.breakdown.transfer_stall_s,
+                );
+            }
             println!(
                 "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",
                 report.virtual_seconds,
@@ -270,6 +292,7 @@ fn main() -> Result<()> {
             let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
             let mut h = Harness::with_backend(artifacts, out, args.has("full"), backend)?;
             h.smoke = args.has("smoke");
+            h.bless = args.has("bless");
             figures::run(&name, &mut h)
         }
         "info" => {

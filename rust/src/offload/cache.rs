@@ -15,6 +15,14 @@
 //! Recency is an ordered `BTreeMap<tick, key>` (ticks are unique), so
 //! eviction pops the least-recent entry in O(log n) instead of the old
 //! full-scan `min_by_key` over every entry.
+//!
+//! Under expert-parallel sharding (DESIGN.md §11) a device may also hold
+//! **pinned replicas** of hot remote experts: entries placed by the
+//! popularity-driven replicator into a *reserved* byte region
+//! (`ShardConfig::replicate_budget_bytes`) that sits outside the LRU
+//! capacity — demand traffic can never evict a replica; only the
+//! replicator's step-boundary reconcile ([`ExpertCache::unpin`]) frees
+//! one.  Pinned bytes are accounted separately (`pinned_bytes`).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -25,7 +33,7 @@ use crate::sim::clock::VTime;
 /// Which payload variant of an expert is cached.  Base weights and
 /// compensators are separate entries: BEAM fetches compensators only for
 /// top-n experts, so they have their own locality.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PayloadKind {
     Fp16,
     Quant(u8),
@@ -33,7 +41,7 @@ pub enum PayloadKind {
     Comp(u8),
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PayloadKey {
     pub layer: usize,
     pub expert: usize,
@@ -50,6 +58,9 @@ struct Entry {
     speculative: bool,
     /// Served at least one demand access.
     used: bool,
+    /// Replica pinned by the sharding replicator: lives in the reserved
+    /// replica region, absent from the recency index, never LRU-evicted.
+    pinned: bool,
 }
 
 /// A successful lookup: the payload plus when it is actually usable.
@@ -65,9 +76,12 @@ pub struct CacheHit {
 pub struct ExpertCache {
     capacity: usize,
     used: usize,
+    /// Bytes held by pinned replicas (the reserved region, outside `used`).
+    pinned_used: usize,
     tick: u64,
     entries: HashMap<PayloadKey, Entry>,
     /// last-use tick → key; ticks are unique so this is a total LRU order.
+    /// Pinned entries are deliberately absent (never eviction candidates).
     recency: BTreeMap<u64, PayloadKey>,
     pub hits: u64,
     pub misses: u64,
@@ -82,6 +96,7 @@ impl ExpertCache {
         ExpertCache {
             capacity: capacity_bytes,
             used: 0,
+            pinned_used: 0,
             tick: 0,
             entries: HashMap::new(),
             recency: BTreeMap::new(),
@@ -94,6 +109,15 @@ impl ExpertCache {
 
     pub fn contains(&self, key: &PayloadKey) -> bool {
         self.entries.contains_key(key)
+    }
+
+    /// Non-mutating residency probe: the entry's `ready_at` if present.
+    /// Unlike [`ExpertCache::get_at`] this touches neither recency nor the
+    /// hit/miss counters — it is the device-routing peek (`D > 1` chooses
+    /// the cheapest *landed* copy without perturbing any cache economics),
+    /// so the `D = 1` ledger is untouched by routing probes.
+    pub fn peek_ready_at(&self, key: &PayloadKey) -> Option<VTime> {
+        self.entries.get(key).map(|e| e.ready_at)
     }
 
     /// Look up a payload ignoring transfer completion (resident == hit).
@@ -112,9 +136,13 @@ impl ExpertCache {
         let tick = self.tick;
         match self.entries.get_mut(key) {
             Some(e) => {
-                self.recency.remove(&e.last_use);
-                e.last_use = tick;
-                self.recency.insert(tick, *key);
+                // Pinned replicas live outside the recency index: touching
+                // one must not make it an eviction candidate.
+                if !e.pinned {
+                    self.recency.remove(&e.last_use);
+                    e.last_use = tick;
+                    self.recency.insert(tick, *key);
+                }
                 let first_spec_use = e.speculative && !e.used;
                 e.used = true;
                 if e.ready_at <= now {
@@ -178,13 +206,7 @@ impl ExpertCache {
             }
             return;
         }
-        if let Some(old) = self.entries.remove(&key) {
-            self.recency.remove(&old.last_use);
-            self.used -= old.bytes;
-            if old.speculative && !old.used {
-                self.wasted_speculative_bytes += old.bytes;
-            }
-        }
+        self.remove_entry(&key);
         while self.used + bytes > self.capacity {
             let (_, lru) = self.recency.pop_first().expect("cache accounting out of sync");
             let e = self.entries.remove(&lru).unwrap();
@@ -197,10 +219,91 @@ impl ExpertCache {
         self.tick += 1;
         self.entries.insert(
             key,
-            Entry { payload, bytes, last_use: self.tick, ready_at, speculative, used: false },
+            Entry {
+                payload,
+                bytes,
+                last_use: self.tick,
+                ready_at,
+                speculative,
+                used: false,
+                pinned: false,
+            },
         );
         self.recency.insert(self.tick, key);
         self.used += bytes;
+    }
+
+    /// Drop an entry (pinned or not), fixing whichever byte pool held it.
+    fn remove_entry(&mut self, key: &PayloadKey) -> bool {
+        let Some(old) = self.entries.remove(key) else {
+            return false;
+        };
+        if old.pinned {
+            self.pinned_used -= old.bytes;
+        } else {
+            self.recency.remove(&old.last_use);
+            self.used -= old.bytes;
+            if old.speculative && !old.used {
+                self.wasted_speculative_bytes += old.bytes;
+            }
+        }
+        true
+    }
+
+    /// Pin a replica of a hot remote expert into the reserved replica
+    /// region (outside LRU capacity), landing at `ready_at`.  The caller
+    /// (the sharding replicator) enforces the region's byte budget; an
+    /// existing entry under `key` — demand-cached or an older replica — is
+    /// replaced.
+    pub fn insert_pinned(
+        &mut self,
+        key: PayloadKey,
+        payload: Arc<Vec<Tensor>>,
+        bytes: usize,
+        ready_at: VTime,
+    ) {
+        self.remove_entry(&key);
+        self.tick += 1;
+        self.entries.insert(
+            key,
+            Entry {
+                payload,
+                bytes,
+                last_use: self.tick,
+                ready_at,
+                speculative: false,
+                used: false,
+                pinned: true,
+            },
+        );
+        self.pinned_used += bytes;
+    }
+
+    /// Drop a pinned replica (the replicator's reconcile path — freeing a
+    /// replica is a discard, no link traffic).  `false` if `key` is absent
+    /// or not pinned.
+    pub fn unpin(&mut self, key: &PayloadKey) -> bool {
+        match self.entries.get(key) {
+            Some(e) if e.pinned => self.remove_entry(key),
+            _ => false,
+        }
+    }
+
+    /// Keys of every pinned replica, sorted for deterministic reconcile.
+    pub fn pinned_keys(&self) -> Vec<PayloadKey> {
+        let mut keys: Vec<PayloadKey> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pinned)
+            .map(|(k, _)| *k)
+            .collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Bytes held by pinned replicas (the reserved region).
+    pub fn pinned_bytes(&self) -> usize {
+        self.pinned_used
     }
 
     /// Speculative bytes still resident that never served a demand access
@@ -244,6 +347,7 @@ impl ExpertCache {
         self.entries.clear();
         self.recency.clear();
         self.used = 0;
+        self.pinned_used = 0;
         self.tick = 0;
         self.hits = 0;
         self.misses = 0;
@@ -367,6 +471,77 @@ mod tests {
         assert_eq!(c.wasted_speculative_bytes, 0);
         assert!(c.is_empty());
         assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_replicas_survive_lru_pressure() {
+        let mut c = ExpertCache::new(100);
+        c.insert_pinned(key(9), payload(), 50, 1.0);
+        assert_eq!(c.pinned_bytes(), 50);
+        assert_eq!(c.used_bytes(), 0, "replica region sits outside LRU capacity");
+        // Fill and churn the LRU region: the pin must never be evicted.
+        for e in 0..10 {
+            c.insert(key(e), payload(), 50);
+        }
+        assert!(c.contains(&key(9)));
+        assert_eq!(c.pinned_bytes(), 50);
+        assert!(c.evictions > 0);
+        // Touching the pin must not make it an eviction candidate.
+        let _ = c.get_at(&key(9), 5.0);
+        c.insert(key(20), payload(), 50);
+        c.insert(key(21), payload(), 50);
+        assert!(c.contains(&key(9)), "a touched pin still cannot be evicted");
+    }
+
+    #[test]
+    fn unpin_frees_only_pinned_entries() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 30);
+        c.insert_pinned(key(1), payload(), 40, 0.0);
+        assert!(!c.unpin(&key(0)), "demand entries are not unpinnable");
+        assert!(c.unpin(&key(1)));
+        assert!(!c.unpin(&key(1)), "already gone");
+        assert_eq!(c.pinned_bytes(), 0);
+        assert_eq!(c.used_bytes(), 30);
+        assert!(c.contains(&key(0)));
+    }
+
+    #[test]
+    fn peek_does_not_touch_stats_or_recency() {
+        let mut c = ExpertCache::new(100);
+        c.insert_ready(key(0), payload(), 40, 7.0);
+        c.insert(key(1), payload(), 40);
+        assert_eq!(c.peek_ready_at(&key(0)), Some(7.0));
+        assert_eq!(c.peek_ready_at(&key(2)), None);
+        assert_eq!((c.hits, c.misses), (0, 0), "peek is economics-free");
+        // Recency untouched by the peek: key(0) is still LRU and evicts.
+        c.insert(key(3), payload(), 40);
+        assert!(!c.contains(&key(0)));
+        assert!(c.contains(&key(1)));
+    }
+
+    #[test]
+    fn insert_pinned_replaces_a_demand_copy() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 60);
+        c.insert_pinned(key(0), payload(), 60, 2.0);
+        assert_eq!(c.used_bytes(), 0, "the demand copy's bytes were released");
+        assert_eq!(c.pinned_bytes(), 60);
+        assert_eq!(c.len(), 1);
+        // And clear() resets the replica region too.
+        c.clear();
+        assert_eq!(c.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_keys_are_sorted() {
+        let mut c = ExpertCache::new(100);
+        for e in [3usize, 0, 2] {
+            c.insert_pinned(key(e), payload(), 10, 0.0);
+        }
+        c.insert(key(1), payload(), 10);
+        let pins = c.pinned_keys();
+        assert_eq!(pins.iter().map(|k| k.expert).collect::<Vec<_>>(), vec![0, 2, 3]);
     }
 
     #[test]

@@ -2,20 +2,23 @@
 //!
 //! This is the system the paper integrates with (§4.3): experts live in
 //! host/NDP memory, the GPU fetches what each token's routing demands, and
-//! the policy decides precision + placement.  `transfer` prices the link,
+//! the policy decides precision + placement.  `transfer` prices the links,
 //! `cache` keeps hot payloads on-GPU (both numerics — literals — and
 //! accounting), `prefetch` budgets speculative transfers ahead of demand
-//! (DESIGN.md §8), `ndp` models near-data execution, `tiers` documents
-//! capacities and placement.
+//! (DESIGN.md §8), `replicate` pins hot-expert replicas across the sharded
+//! device fleet (DESIGN.md §11), `ndp` models near-data execution, `tiers`
+//! documents capacities and placement.
 
 pub mod cache;
 pub mod ndp;
 pub mod prefetch;
+pub mod replicate;
 pub mod tiers;
 pub mod transfer;
 
 pub use cache::{CacheHit, ExpertCache, PayloadKey, PayloadKind};
 pub use ndp::NdpDevice;
 pub use prefetch::PrefetchQueue;
+pub use replicate::{ReplicaTarget, Replicator};
 pub use tiers::MemoryTiers;
 pub use transfer::{Link, TransferClass, TransferLog};

@@ -1,0 +1,209 @@
+//! Popularity-driven hot-expert replication across the device fleet
+//! (DESIGN.md §11).
+//!
+//! Expert-parallel sharding gives every expert one static owner device
+//! (`Topology::owner_of`).  When routing is skewed — and paper Fig. 2 plus
+//! the EWMA table of §10 say it always is — the owners of the hot experts
+//! become serialization points: their host links absorb every refetch and
+//! their compute queues absorb every exec while the rest of the fleet
+//! idles.  The replicator spends a per-device byte budget
+//! (`ShardConfig::replicate_budget_bytes`) on **pinned replicas** of the
+//! hottest experts, placed on non-owner devices, so the engine's routing
+//! step can serve them from the cheapest resident copy instead.
+//!
+//! Division of labor (mirrors `offload::prefetch`):
+//!
+//! 1. this module smooths routing mass into the shared [`EwmaPopularity`]
+//!    table and, at every decode-step boundary, turns it into a *desired
+//!    replica set* per device ([`Replicator::plan`]) — pure bookkeeping;
+//! 2. the coordinator reconciles each device's pinned set against the
+//!    plan: undesired replicas are unpinned (a discard — free), missing
+//!    ones are transferred under [`TransferClass::Replication`] from the
+//!    owner's resident copy (dev→dev peer link) or from host memory
+//!    (the target's host link), then pinned with the transfer's landing
+//!    time.
+//!
+//! The plan depends only on the score table, the ladder of byte costs and
+//! the budget — never on link state — so identical runs re-plan
+//! identically (the differential tests lean on this).
+//!
+//! [`TransferClass::Replication`]: crate::offload::transfer::TransferClass
+
+use crate::predict::{EwmaPopularity, ExpertPredictor, LayerObservation};
+
+/// One desired replica: place `(layer, expert)`'s bulk payload on `device`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaTarget {
+    pub device: usize,
+    pub layer: usize,
+    pub expert: usize,
+}
+
+/// Popularity table + budget → per-step desired replica sets.
+pub struct Replicator {
+    ewma: EwmaPopularity,
+    n_devices: usize,
+    /// Per-device replica-region byte budget.
+    budget_bytes: usize,
+    /// Replica transfers actually issued (engine-side counter).
+    pub issued: u64,
+    /// Bytes moved under `TransferClass::Replication`.
+    pub bytes_moved: usize,
+}
+
+impl Replicator {
+    pub fn new(n_layers: usize, n_experts: usize, n_devices: usize, budget_bytes: usize) -> Self {
+        Replicator {
+            // Same smoothing constant as the §10 allocator: popularity is
+            // one signal, consumed by two planners.
+            ewma: EwmaPopularity::new(n_layers, n_experts, 0.25),
+            n_devices,
+            budget_bytes,
+            issued: 0,
+            bytes_moved: 0,
+        }
+    }
+
+    /// Feed one layer's router outcome (prefill and decode both count —
+    /// prompt routing warms the table before the first decode boundary).
+    pub fn observe(&mut self, obs: &LayerObservation) {
+        self.ewma.observe(obs);
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Desired replica set for the coming decode step: walk (layer,
+    /// expert) pairs hottest-first (score ties break toward the lower
+    /// (layer, expert) index) and give each at most one replica, on the
+    /// first non-owner device — in ring order from the owner — whose
+    /// budget still fits `bulk_bytes`.  Cold pairs (score 0) never
+    /// replicate: an unobserved expert cannot earn fleet HBM.
+    pub fn plan(
+        &self,
+        bulk_bytes: usize,
+        owner_of: impl Fn(usize) -> usize,
+    ) -> Vec<ReplicaTarget> {
+        if self.n_devices < 2 || self.budget_bytes < bulk_bytes || bulk_bytes == 0 {
+            return Vec::new();
+        }
+        let scores = self.ewma.scores();
+        let mut ranked: Vec<(usize, usize, f64)> = Vec::new();
+        for (layer, row) in scores.iter().enumerate() {
+            for (expert, &s) in row.iter().enumerate() {
+                if s > 0.0 {
+                    ranked.push((layer, expert, s));
+                }
+            }
+        }
+        ranked.sort_by(|a, b| b.2.total_cmp(&a.2).then((a.0, a.1).cmp(&(b.0, b.1))));
+
+        let mut left = vec![self.budget_bytes; self.n_devices];
+        let mut out = Vec::new();
+        for (layer, expert, _) in ranked {
+            let owner = owner_of(expert);
+            for step in 1..self.n_devices {
+                let device = (owner + step) % self.n_devices;
+                if left[device] >= bulk_bytes {
+                    left[device] -= bulk_bytes;
+                    out.push(ReplicaTarget { device, layer, expert });
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn observe_mass_k(r: &mut Replicator, layer: usize, probs: &[f32], reps: usize, top_k: usize) {
+        let active = vec![true];
+        for _ in 0..reps {
+            r.observe(&LayerObservation {
+                step: 0,
+                layer,
+                n_experts: probs.len(),
+                top_k,
+                probs,
+                active: &active,
+            });
+        }
+    }
+
+    fn observe_mass(r: &mut Replicator, layer: usize, probs: &[f32], reps: usize) {
+        observe_mass_k(r, layer, probs, reps, 2);
+    }
+
+    #[test]
+    fn single_device_or_tiny_budget_plans_nothing() {
+        let mut r = Replicator::new(1, 4, 1, 1 << 20);
+        observe_mass(&mut r, 0, &[0.7, 0.1, 0.1, 0.1], 3);
+        assert!(r.plan(100, |e| e % 1).is_empty(), "D=1 never replicates");
+
+        let mut r = Replicator::new(1, 4, 2, 50);
+        observe_mass(&mut r, 0, &[0.7, 0.1, 0.1, 0.1], 3);
+        assert!(r.plan(100, |e| e % 2).is_empty(), "budget below one payload");
+        assert!(r.plan(0, |e| e % 2).is_empty(), "zero-byte payloads never move");
+    }
+
+    #[test]
+    fn hottest_pairs_replicate_first_on_non_owner_devices() {
+        let mut r = Replicator::new(1, 4, 2, 100);
+        // Expert 0 hottest, expert 1 second; 2/3 cold-ish.
+        observe_mass(&mut r, 0, &[0.6, 0.3, 0.06, 0.04], 5);
+        let plan = r.plan(100, |e| e % 2);
+        // One payload per device fits: expert 0 -> device 1, expert 1 -> device 0.
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0], ReplicaTarget { device: 1, layer: 0, expert: 0 });
+        assert_eq!(plan[1], ReplicaTarget { device: 0, layer: 0, expert: 1 });
+        for t in &plan {
+            assert_ne!(t.device, t.expert % 2, "never replicate onto the owner");
+        }
+    }
+
+    #[test]
+    fn budget_caps_each_device_independently() {
+        // top-3 routing scores experts {0, 1, 2} on both layers: device 1
+        // is asked for replicas of e0 and e2 twice each (4 wants) but its
+        // 250-byte budget fits only 2 — the coldest wants are dropped.
+        let mut r = Replicator::new(2, 4, 2, 250);
+        observe_mass_k(&mut r, 0, &[0.4, 0.3, 0.2, 0.1], 5, 3);
+        observe_mass_k(&mut r, 1, &[0.4, 0.3, 0.2, 0.1], 5, 3);
+        let plan = r.plan(100, |e| e % 2);
+        for dev in 0..2 {
+            let bytes: usize = plan.iter().filter(|t| t.device == dev).count() * 100;
+            assert!(bytes <= 250, "device {dev} over budget: {bytes}");
+        }
+        assert_eq!(plan.len(), 4, "{plan:?}");
+        assert!(
+            plan.iter().all(|t| t.expert < 2),
+            "expert 2's wants exceed the surviving budget: {plan:?}"
+        );
+    }
+
+    #[test]
+    fn cold_pairs_never_replicate_and_plans_are_deterministic() {
+        let mut r = Replicator::new(1, 4, 2, 1 << 20);
+        // Only experts 0 and 1 ever routed.
+        observe_mass(&mut r, 0, &[0.7, 0.3, 0.0, 0.0], 4);
+        let plan = r.plan(64, |e| e % 2);
+        assert!(plan.iter().all(|t| t.expert < 2), "cold experts earn nothing: {plan:?}");
+        assert_eq!(plan, r.plan(64, |e| e % 2), "same table, same plan");
+    }
+
+    #[test]
+    fn score_ties_break_toward_lower_layer_then_expert() {
+        let mut r = Replicator::new(2, 2, 2, 100);
+        // Identical distributions on both layers -> equal scores everywhere.
+        observe_mass(&mut r, 0, &[0.5, 0.5], 3);
+        observe_mass(&mut r, 1, &[0.5, 0.5], 3);
+        let plan = r.plan(100, |e| e % 2);
+        // One payload per device: layer 0's pair wins both slots.
+        assert_eq!(plan.len(), 2);
+        assert!(plan.iter().all(|t| t.layer == 0), "{plan:?}");
+    }
+}

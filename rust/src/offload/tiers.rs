@@ -25,12 +25,16 @@ pub struct TierReport {
     pub gpu_dense_bytes: usize,
     /// Worst-case KV-cache bytes for the full decode batch, fp16.
     pub gpu_kv_bytes: usize,
-    /// Expert-cache capacity.
+    /// Expert-cache capacity (per device under sharding).
     pub gpu_cache_bytes: usize,
+    /// Expert-parallel device count (DESIGN.md §11); 1 = single device.
+    pub n_devices: usize,
+    /// Per-device bytes reserved for pinned hot-expert replicas.
+    pub replica_region_bytes: usize,
     /// Total expert bytes at fp16 in host memory.
     pub host_expert_bytes_fp16: usize,
-    /// Whether all experts would fit in the GPU cache (if so, offloading
-    /// is pointless and the experiment is misconfigured).
+    /// Whether all experts would fit across the fleet's caches (if so,
+    /// offloading is pointless and the experiment is misconfigured).
     pub experts_fit_on_gpu: bool,
 }
 
@@ -58,12 +62,16 @@ impl MemoryTiers {
         let kv = d.b_max * d.n_layers * 2 * d.n_heads * d.s_max * d.d_head() * 2;
         let total_experts =
             d.n_layers * d.n_experts * self.expert_bytes().fp16();
+        let n_devices = self.sys.shard.devices.max(1);
+        let fleet_cache = self.sys.gpu_cache_bytes * n_devices;
         TierReport {
             gpu_dense_bytes: dense_params * 2,
             gpu_kv_bytes: kv,
             gpu_cache_bytes: self.sys.gpu_cache_bytes,
+            n_devices,
+            replica_region_bytes: self.sys.shard.replicate_budget_bytes,
             host_expert_bytes_fp16: total_experts,
-            experts_fit_on_gpu: self.sys.gpu_cache_bytes >= total_experts,
+            experts_fit_on_gpu: fleet_cache >= total_experts,
         }
     }
 }
@@ -96,5 +104,19 @@ mod tests {
     fn expert_bytes_match_dims() {
         let t = MemoryTiers::new(dims(), SystemConfig::gpu_only());
         assert_eq!(t.expert_bytes().fp16(), 3 * 128 * 256 * 2);
+    }
+
+    #[test]
+    fn sharded_report_scales_fleet_capacity() {
+        let mut sys = SystemConfig::gpu_only();
+        sys.shard = crate::config::ShardConfig::new(4, 1024);
+        let r = MemoryTiers::new(dims(), sys.clone()).report();
+        assert_eq!(r.n_devices, 4);
+        assert_eq!(r.replica_region_bytes, 1024);
+        assert_eq!(r.gpu_cache_bytes, sys.gpu_cache_bytes, "per-device capacity");
+        // Fit is judged fleet-wide: 4 devices hold 4x the experts.
+        let single = MemoryTiers::new(dims(), SystemConfig::gpu_only()).report();
+        assert_eq!(single.n_devices, 1);
+        assert!(!single.experts_fit_on_gpu);
     }
 }

@@ -16,6 +16,10 @@ pub enum TransferClass {
     /// Expert weights moved ahead of demand by the prefetcher (DESIGN.md
     /// §8) — accounted separately so speculative and demand bytes never mix.
     Speculative,
+    /// Hot-expert replica copies placed by the popularity-driven
+    /// replicator under expert-parallel sharding (DESIGN.md §11) — rides
+    /// host→dev or dev→dev links, never mixed with demand or speculation.
+    Replication,
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -81,6 +81,7 @@ mod tests {
             fp16_cached: &|_| false,
             predicted: None,
             precisions,
+            placement: None,
         }
     }
 

@@ -92,6 +92,7 @@ mod tests {
             fp16_cached: cached,
             predicted: None,
             precisions: None,
+            placement: None,
         }
     }
 

@@ -75,6 +75,7 @@ mod tests {
             fp16_cached: &cached,
             predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = BigLittlePolicy { bits: 2 }.plan(&ctx);
         assert_eq!(plan.assignments(), 4);

@@ -70,6 +70,7 @@ mod tests {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = HobbitPolicy { hi_threshold: 0.6, lo_bits: 4 }.plan(&ctx);
         assert_eq!(plan.assignments(), 4);

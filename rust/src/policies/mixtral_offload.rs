@@ -47,6 +47,7 @@ mod tests {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = MixtralOffloadPolicy.plan(&ctx);
         assert_eq!(plan.assignments(), 4);

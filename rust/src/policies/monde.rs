@@ -56,6 +56,7 @@ mod tests {
             probs: &probs, n_tokens: 2, n_experts: 2, top_k: 2,
             active: &active, ndp: true, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = MondePolicy.plan(&ctx);
         for e in &plan.execs {
@@ -76,6 +77,7 @@ mod tests {
             probs: &probs, n_tokens: 1, n_experts: 2, top_k: 1,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = MondePolicy.plan(&ctx);
         assert!(plan.execs.iter().all(|e| e.location == Location::Gpu));

@@ -52,6 +52,20 @@ impl LayerPlan {
     }
 }
 
+/// Expert placement over the device fleet for one layer (DESIGN.md §11):
+/// who owns each expert and where landed replicas sit.  Policies may use
+/// it to bias plans toward co-located experts; the engine's routing step
+/// (cheapest-resident-copy) works whether or not they do.
+#[derive(Debug, Clone)]
+pub struct LayerPlacement {
+    pub n_devices: usize,
+    /// Owner device of each expert (static shard: `expert % n_devices`).
+    pub owner: Vec<usize>,
+    /// `replicated[e]`: a landed replica of `e`'s bulk payload exists on
+    /// some non-owner device this step.
+    pub replicated: Vec<bool>,
+}
+
 /// Everything a policy may consult when planning.
 pub struct PlanCtx<'a> {
     /// Router probabilities, row-major (n_tokens × n_experts) — the full
@@ -76,6 +90,10 @@ pub struct PlanCtx<'a> {
     /// [`Policy::wants_precision_plan`]; `None` for fixed-precision
     /// policies and before the engine built an allocator.
     pub precisions: Option<&'a [Precision]>,
+    /// Expert placement across the sharded device fleet (DESIGN.md §11);
+    /// `None` on single-device deployments — the `D = 1` planning inputs
+    /// are exactly the pre-sharding ones.
+    pub placement: Option<&'a LayerPlacement>,
 }
 
 /// Top-k selection with renormalization over the selected set — mirrors
@@ -206,6 +224,7 @@ mod tests {
             probs: &probs, n_tokens: 2, n_experts: 4, top_k: 2,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let groups = group_by_expert(&ctx);
         let total: usize = groups.iter().map(|g| g.len()).sum();
@@ -223,6 +242,7 @@ mod tests {
             probs: &probs, n_tokens: 2, n_experts: 2, top_k: 1,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let groups = group_by_expert(&ctx);
         assert_eq!(groups[0].len(), 1);

@@ -378,6 +378,69 @@ mod tests {
     }
 
     #[test]
+    fn budget_exactly_at_a_ladder_step_boundary_applies_the_upgrade() {
+        // Δ(Int2→Int4) = 100: a budget landing *exactly* on the boundary
+        // must buy the rung — `spent + delta > budget` is strict.
+        let l = toy_ladder();
+        let plan = allocate(&l, &[vec![5.0, 1.0]], l.floor_bytes() + 100);
+        assert_eq!(plan.assignment[0], vec![Precision::Int(4), Precision::Int(2)]);
+        assert_eq!(plan.plan_bytes, l.floor_bytes() + 100, "every byte spent");
+    }
+
+    #[test]
+    fn budget_one_byte_below_the_boundary_stays_at_the_floor() {
+        let l = toy_ladder();
+        let plan = allocate(&l, &[vec![5.0, 1.0]], l.floor_bytes() + 99);
+        assert_eq!(plan.assignment[0], vec![Precision::Int(2), Precision::Int(2)]);
+        assert_eq!(plan.plan_bytes, l.floor_bytes(), "no partial rungs");
+    }
+
+    #[test]
+    fn equal_score_per_byte_ties_break_by_layer_then_expert() {
+        // Two experts with *different* scores and deltas but the same
+        // score/Δbytes ratio: expert 0 at 1.0/100, expert 1 at 2.0/200
+        // (ladder below).  The tie must go to the lower (layer, expert)
+        // index — pinned so plans are stable across runs and platforms.
+        let cheap = vec![
+            RungCost { precision: Precision::Int(2), bytes: 100 },
+            RungCost { precision: Precision::Int(4), bytes: 200 },
+        ];
+        let dear = vec![
+            RungCost { precision: Precision::Int(2), bytes: 100 },
+            RungCost { precision: Precision::Fp16, bytes: 300 },
+        ];
+        let l = PrecisionLadder { n_layers: 1, n_experts: 2, rungs: vec![vec![cheap, dear]] };
+        let plan = allocate(&l, &[vec![1.0, 2.0]], l.floor_bytes() + 100);
+        assert_eq!(
+            plan.assignment[0],
+            vec![Precision::Int(4), Precision::Int(2)],
+            "equal ratio: lower expert index upgrades first"
+        );
+        // Same tie across *layers*: layer 0 wins.
+        let l2 = PrecisionLadder {
+            n_layers: 2,
+            n_experts: 1,
+            rungs: vec![vec![toy_ladder().rungs[0][0].clone()]; 2],
+        };
+        let plan = allocate(&l2, &[vec![3.0], vec![3.0]], l2.floor_bytes() + 100);
+        assert_eq!(plan.rung[0][0], 1);
+        assert_eq!(plan.rung[1][0], 0);
+    }
+
+    #[test]
+    fn allocation_is_deterministic_across_runs() {
+        let l = toy_ladder();
+        let scores = vec![vec![0.25, 0.25]];
+        for budget in [l.floor_bytes(), l.floor_bytes() + 100, l.top_bytes()] {
+            let a = allocate(&l, &scores, budget);
+            let b = allocate(&l, &scores, budget);
+            assert_eq!(a.assignment, b.assignment, "budget {budget}");
+            assert_eq!(a.rung, b.rung);
+            assert_eq!(a.plan_bytes, b.plan_bytes);
+        }
+    }
+
+    #[test]
     fn floor_above_shipped_widths_is_a_contextful_error() {
         let manifest = crate::synth::tiny_manifest("t");
         let err = PrecisionLadder::from_manifest(&manifest, "default", 4)

@@ -8,17 +8,18 @@
 
 use anyhow::{ensure, Result};
 
-use crate::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
 use crate::coordinator::ServeEngine;
 use crate::runtime::StagedModel;
 use crate::server::Server;
 
-/// Builder for a [`Server`]: model + policy + testbed + prefetch +
-/// admission knobs, validated at [`ServerBuilder::build`].
+/// Builder for a [`Server`]: model + policy + testbed + sharding +
+/// prefetch + admission knobs, validated at [`ServerBuilder::build`].
 pub struct ServerBuilder {
     model: StagedModel,
     policy: PolicyConfig,
     system: Option<SystemConfig>,
+    shard: Option<ShardConfig>,
     prefetch: PrefetchConfig,
     max_pending: usize,
 }
@@ -33,6 +34,7 @@ impl ServerBuilder {
             model,
             policy: PolicyConfig::new("beam", 2, top_n),
             system: None,
+            shard: None,
             prefetch: PrefetchConfig::off(),
             max_pending: usize::MAX,
         }
@@ -57,6 +59,15 @@ impl ServerBuilder {
         self
     }
 
+    /// Expert-parallel sharding knob set (device count + per-device
+    /// replica budget, DESIGN.md §11); overrides whatever `shard` the
+    /// testbed config carries.  The default — `ShardConfig::single()` via
+    /// the testbed — is the single-device deployment.
+    pub fn shard(mut self, shard: ShardConfig) -> Self {
+        self.shard = Some(shard);
+        self
+    }
+
     /// Speculative-prefetch knob set (predictor registry name + lookahead
     /// + per-step byte budget).
     pub fn prefetch(mut self, prefetch: PrefetchConfig) -> Self {
@@ -78,9 +89,13 @@ impl ServerBuilder {
         crate::policies::resolve_policy(&self.policy.policy)?;
         crate::predict::resolve_predictor(&self.prefetch.predictor)?;
         ensure!(self.max_pending > 0, "max_pending must be at least 1");
-        let system = self
+        let mut system = self
             .system
             .unwrap_or_else(|| SystemConfig::scaled_for(&self.model.manifest.model, false));
+        if let Some(shard) = self.shard {
+            ensure!(shard.devices >= 1, "a deployment needs at least one device");
+            system.shard = shard;
+        }
         let engine = ServeEngine::with_prefetch(self.model, self.policy, system, self.prefetch)?;
         Ok(Server::from_parts(engine, self.max_pending))
     }

@@ -11,7 +11,10 @@
 //! Construction goes through [`ServerBuilder`], which validates every
 //! knob (policy and predictor names resolve against the open registries —
 //! `policies::registry` / `predict::registry`) before any engine state
-//! exists.  Behind the façade the legacy `ServeEngine` is fully private:
+//! exists.  `ServerBuilder::shard` selects the expert-parallel fleet
+//! (DESIGN.md §11) — `Report::shard` carries the resulting
+//! replication/balance ledger, `None` on single-device runs.  Behind the
+//! façade the legacy `ServeEngine` is fully private:
 //! read-only [`EngineStats`] / [`CacheView`] snapshots replace its old
 //! `pub` fields, and `tests/server_api.rs` pins `run_to_completion` to be
 //! byte-identical to the pre-façade `scheduler::serve` loop.

@@ -8,6 +8,8 @@
 
 pub mod clock;
 pub mod roofline;
+pub mod topology;
 
 pub use clock::{Resource, VirtualClock};
 pub use roofline::CostModel;
+pub use topology::{LinkSpec, Topology};

@@ -125,6 +125,14 @@ impl CostModel {
         lat + bytes as f64 / bw
     }
 
+    /// One direction of expert activation traffic for `n_tokens` (fp16 on
+    /// the wire): the payload crossing the NDP link, and — under
+    /// expert-parallel sharding — the dev↔dev peer links when a token
+    /// batch is dispatched to a remote expert (DESIGN.md §11).
+    pub fn act_bytes_one_way(&self, n_tokens: usize) -> usize {
+        2 * n_tokens * self.dims.d_model
+    }
+
     /// Operational intensity of the offloaded expert GEMM wrt link traffic
     /// (Fig. 1b x-axis): FLOPs per byte crossing PCIe.
     pub fn expert_oi_vs_link(&self, n_tokens: usize, wire_bytes: usize) -> f64 {
@@ -175,6 +183,12 @@ mod tests {
         let comp = m.expert_gpu(4, Precision::IntComp(2), 8.0).seconds;
         assert!(comp >= plain);
         assert!(comp < plain * 1.5, "compensation must stay cheap: {plain} vs {comp}");
+    }
+
+    #[test]
+    fn act_bytes_are_fp16_rows() {
+        let m = model();
+        assert_eq!(m.act_bytes_one_way(3), 3 * 128 * 2);
     }
 
     #[test]

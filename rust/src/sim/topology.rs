@@ -1,0 +1,133 @@
+//! Device-fleet link graph for expert-parallel sharding (DESIGN.md §11).
+//!
+//! A [`Topology`] is the *wiring spec* of the simulated deployment: one
+//! host↔device link per device (the PCIe wire every earlier single-device
+//! experiment priced) plus a full mesh of directed dev↔dev peer links
+//! (NVLink-class: `ShardConfig::peer_bw_ratio × pcie_bw`).  The engine
+//! materializes each spec into an [`crate::offload::transfer::Link`] — a
+//! serially-reusable [`crate::sim::clock::Resource`] with its own transfer
+//! ledger, so per-link byte accounting falls out of the same machinery the
+//! single wire used.
+//!
+//! `D = 1` yields exactly one host link and no peers — the single-device
+//! wiring, byte-identical by construction (the §11 equivalence rule).
+
+use crate::config::SystemConfig;
+
+/// Bandwidth/latency of one directed link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub bw: f64,
+    pub lat: f64,
+}
+
+/// The fleet's link graph: per-device host links + a directed peer mesh.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n_devices: usize,
+    /// Host↔device link of each device (demand fetches, prefetch,
+    /// host-sourced replication).
+    pub host: Vec<LinkSpec>,
+    /// `peer[i][j]`: directed device-i → device-j link (`None` on the
+    /// diagonal).  Carries cross-device activations and peer-sourced
+    /// replica copies.
+    pub peer: Vec<Vec<Option<LinkSpec>>>,
+}
+
+impl Topology {
+    /// Build the fleet wiring from a testbed config: `shard.devices`
+    /// identical host links at (`pcie_bw`, `pcie_lat`) and a symmetric
+    /// peer mesh at (`peer_bw_ratio × pcie_bw`, `peer_lat`).
+    pub fn from_system(sys: &SystemConfig) -> Self {
+        let d = sys.shard.devices.max(1);
+        let host = vec![LinkSpec { bw: sys.pcie_bw, lat: sys.pcie_lat }; d];
+        let peer_spec = LinkSpec {
+            bw: sys.pcie_bw * sys.shard.peer_bw_ratio,
+            lat: sys.shard.peer_lat,
+        };
+        let peer = (0..d)
+            .map(|i| {
+                (0..d)
+                    .map(|j| if i == j { None } else { Some(peer_spec) })
+                    .collect()
+            })
+            .collect();
+        Topology { n_devices: d, host, peer }
+    }
+
+    /// Static shard ownership: experts are distributed round-robin so
+    /// neighbouring (often co-hot) expert ids land on different devices.
+    pub fn owner_of(&self, expert: usize) -> usize {
+        expert % self.n_devices
+    }
+
+    /// Directed peer links as a flat `(src, dst, spec)` list (the order
+    /// the engine materializes and drains them in — deterministic).
+    pub fn peer_edges(&self) -> Vec<(usize, usize, LinkSpec)> {
+        let mut out = Vec::new();
+        for (i, row) in self.peer.iter().enumerate() {
+            for (j, spec) in row.iter().enumerate() {
+                if let Some(s) = spec {
+                    out.push((i, j, *s));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ShardConfig;
+
+    #[test]
+    fn single_device_has_one_host_link_and_no_peers() {
+        let sys = SystemConfig::gpu_only();
+        let t = Topology::from_system(&sys);
+        assert_eq!(t.n_devices, 1);
+        assert_eq!(t.host.len(), 1);
+        assert_eq!(t.host[0], LinkSpec { bw: sys.pcie_bw, lat: sys.pcie_lat });
+        assert!(t.peer_edges().is_empty());
+        assert_eq!(t.owner_of(5), 0);
+    }
+
+    #[test]
+    fn mesh_is_full_and_directed() {
+        let mut sys = SystemConfig::gpu_only();
+        sys.shard = ShardConfig::new(3, 0);
+        let t = Topology::from_system(&sys);
+        assert_eq!(t.n_devices, 3);
+        let edges = t.peer_edges();
+        assert_eq!(edges.len(), 6, "3 devices -> 6 directed peer links");
+        for (i, j, spec) in edges {
+            assert_ne!(i, j);
+            assert_eq!(spec.bw, sys.pcie_bw * sys.shard.peer_bw_ratio);
+            assert_eq!(spec.lat, sys.shard.peer_lat);
+        }
+        assert!(t.peer[1][1].is_none());
+    }
+
+    #[test]
+    fn ownership_is_round_robin() {
+        let mut sys = SystemConfig::gpu_only();
+        sys.shard = ShardConfig::new(2, 0);
+        let t = Topology::from_system(&sys);
+        let owners: Vec<usize> = (0..4).map(|e| t.owner_of(e)).collect();
+        assert_eq!(owners, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn peer_ratio_survives_testbed_scaling() {
+        // `scaled` divides pcie_bw; the ratio-expressed peer bandwidth must
+        // track it so the peer/host speed relation is scale-invariant.
+        let mut sys = SystemConfig::gpu_only();
+        sys.shard = ShardConfig::new(2, 0);
+        let t1 = Topology::from_system(&sys);
+        let sys2 = sys.clone().scaled(10.0);
+        let t2 = Topology::from_system(&sys2);
+        let r1 = t1.peer[0][1].unwrap().bw / t1.host[0].bw;
+        let r2 = t2.peer[0][1].unwrap().bw / t2.host[0].bw;
+        assert!((r1 - r2).abs() < 1e-9);
+    }
+}

@@ -226,6 +226,42 @@ fn slack_budget_upgrades_hot_experts_and_lowers_weighted_error() {
     );
 }
 
+/// ISSUE-5 satellite: ladder-step boundary budgets on the *manifest*
+/// ladder — exactly at a rung's Δbytes buys it, one byte below does not —
+/// and score ties resolve by the pinned (layer, expert) order, so plans
+/// are stable across runs.
+#[test]
+fn manifest_ladder_boundary_budgets_and_ties_are_pinned() {
+    let manifest = synth::tiny_manifest("synthetic-tiny");
+    let dims = manifest.model.clone();
+    let ladder = PrecisionLadder::from_manifest(&manifest, "default", synth::SYNTH_BITS).unwrap();
+    let floor = ladder.floor_bytes();
+    // Synthetic comp costs are uniform: rung 0 → 1 is Int2 → IntComp2.
+    let delta = ladder.rungs[0][0][1].bytes - ladder.rungs[0][0][0].bytes;
+    assert!(delta > 0);
+
+    // One hot pair: budget exactly at the boundary buys its compensator…
+    let mut scores = vec![vec![0.0f64; dims.n_experts]; dims.n_layers];
+    scores[1][2] = 1.0;
+    let at = allocate(&ladder, &scores, floor + delta);
+    assert!(at.assignment[1][2].compensated(), "exact boundary budget buys the rung");
+    assert_eq!(at.plan_bytes, floor + delta);
+    // …and one byte below leaves the whole fleet at the floor.
+    let below = allocate(&ladder, &scores, floor + delta - 1);
+    assert!(below.rung.iter().flatten().all(|&r| r == 0), "{:?}", below.rung);
+    assert_eq!(below.plan_bytes, floor);
+
+    // All-equal scores (uniform Δ ⇒ all ratios tie): upgrades fill in
+    // (layer, expert) order, deterministically.
+    let even = vec![vec![0.5f64; dims.n_experts]; dims.n_layers];
+    let two = allocate(&ladder, &even, floor + 2 * delta);
+    assert!(two.assignment[0][0].compensated());
+    assert!(two.assignment[0][1].compensated());
+    assert!(two.assignment.iter().flatten().filter(|p| p.compensated()).count() == 2);
+    let replay = allocate(&ladder, &even, floor + 2 * delta);
+    assert_eq!(two.assignment, replay.assignment, "tie-break order is stable");
+}
+
 /// The adaptive serve path is deterministic run-to-run (the EWMA, the
 /// re-plan cadence and the greedy allocator are all deterministic).
 #[test]

@@ -1,0 +1,328 @@
+//! Seeded randomized differential test of the session façade
+//! (artifact-free): drive `Server::tick()` through randomized
+//! submit/cancel/reap interleavings and pin the result against the legacy
+//! `scheduler::serve` golden for the same admitted set.
+//!
+//! Every random choice flows from one logged `XorShift` seed, so a
+//! failure replays deterministically: re-run with
+//! `FUZZ_SEED=<seed> cargo test --test fuzz_server` (the CI seed-matrix
+//! job runs three fixed seeds).
+//!
+//! Two layers of checking:
+//!
+//! * **Differential** (`randomized_interleavings_match_legacy_serve`) —
+//!   cancels target still-queued sessions only (removed before any tick
+//!   can admit them), so the engine-visible work is exactly the admitted
+//!   set; the final report must be byte-identical to `scheduler::serve`
+//!   over those requests, and the token-event streams must equal a plain
+//!   `run_to_completion` replay's.
+//! * **Invariants** (`active_cancellation_interleavings_stay_sane`) —
+//!   cancels may also hit *active* sessions (no legacy equivalent);
+//!   the run must stay deterministic under replay, keep event times
+//!   monotone, and report only positive-latency completed records.
+
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::server::{Server, ServerBuilder, ServerTick, SessionId, SessionStatus, TokenEvent};
+use beam_moe::synth;
+use beam_moe::workload::reqgen::XorShift;
+use beam_moe::workload::Request;
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+fn model() -> beam_moe::StagedModel {
+    synth::tiny_model(backend(), "synthetic-tiny").unwrap()
+}
+
+fn sys_offload() -> SystemConfig {
+    let m = model();
+    let mut sys = SystemConfig::scaled_for(&m.manifest.model, false);
+    sys.gpu_cache_bytes = 2 * m.manifest.transfer.fp16_expert_bytes;
+    sys
+}
+
+/// Seeds under test: `FUZZ_SEED` pins one (the CI matrix), otherwise a
+/// small fixed battery.
+fn seeds() -> Vec<u64> {
+    match std::env::var("FUZZ_SEED") {
+        Ok(s) => vec![s.parse().expect("FUZZ_SEED must be a u64")],
+        Err(_) => vec![0xF00D, 0xBEEF, 7],
+    }
+}
+
+/// One randomized scenario: requests (random lengths, offline or online
+/// arrivals), a queued-cancel subset, and a random policy/prefetch pair.
+struct Scenario {
+    requests: Vec<Request>,
+    cancel: Vec<u64>,
+    policy: PolicyConfig,
+    prefetch: PrefetchConfig,
+}
+
+fn scenario(rng: &mut XorShift) -> Scenario {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    let toks = eval.get("calib_tokens").unwrap();
+    let (n_seqs, seq_len) = (toks.shape[0], toks.shape[1]);
+    let data = toks.as_i32().unwrap();
+
+    let n_requests = 3 + (rng.next_u64() % 5) as usize;
+    let online = rng.next_f64() < 0.5;
+    let mut arrival = 0.0f64;
+    let mut requests = Vec::with_capacity(n_requests);
+    for id in 0..n_requests {
+        let plen = 8 + (rng.next_u64() % 33) as usize; // 8..=40
+        let row = (rng.next_u64() as usize) % n_seqs;
+        let start = row * seq_len;
+        let prompt = data[start..start + plen.min(seq_len)].to_vec();
+        if online {
+            arrival += rng.next_exp(200.0);
+        }
+        requests.push(Request {
+            id: id as u64,
+            prompt,
+            max_new_tokens: 2 + (rng.next_u64() % 6) as usize,
+            arrival,
+        });
+    }
+    // Cancel a random subset while queued; keep at least one survivor.
+    let mut cancel: Vec<u64> =
+        (0..n_requests as u64).filter(|_| rng.next_f64() < 0.3).collect();
+    if cancel.len() == n_requests {
+        cancel.pop();
+    }
+    let bits = synth::SYNTH_BITS;
+    let policy = match rng.next_u64() % 3 {
+        0 => PolicyConfig::new("beam", bits, 1),
+        1 => PolicyConfig::new("static-quant", bits, 0),
+        _ => {
+            // The synthetic store packs a single width: HOBBIT's low tier
+            // must ride it (same knob tests/reference_backend.rs sets).
+            let mut p = PolicyConfig::new("hobbit", bits, 0);
+            p.hobbit_lo_bits = bits;
+            p
+        }
+    };
+    let prefetch = if rng.next_f64() < 0.4 {
+        let q = synth::tiny_manifest("synthetic-tiny").q_expert_bytes(bits);
+        PrefetchConfig::new("gate", 1, dims.top_k * dims.n_layers * q)
+    } else {
+        PrefetchConfig::off()
+    };
+    Scenario { requests, cancel, policy, prefetch }
+}
+
+fn build_server(sc: &Scenario) -> Server {
+    ServerBuilder::new(model())
+        .policy(sc.policy.clone())
+        .system(sys_offload())
+        .prefetch(sc.prefetch.clone())
+        .build()
+        .unwrap()
+}
+
+fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
+    assert_eq!(a.policy, b.policy, "{label}: policy");
+    assert_eq!(a.n_requests, b.n_requests, "{label}: n_requests");
+    assert_eq!(a.total_generated, b.total_generated, "{label}: tokens");
+    assert_eq!(a.decode_steps, b.decode_steps, "{label}: decode_steps");
+    assert_eq!(a.prefills, b.prefills, "{label}: prefills");
+    assert_eq!(a.virtual_seconds, b.virtual_seconds, "{label}: virtual time");
+    assert_eq!(a.bytes, b.bytes, "{label}: byte ledger");
+    assert_eq!(a.cache_hit_rate, b.cache_hit_rate, "{label}: cache hit rate");
+    let (x, y) = (&a.breakdown, &b.breakdown);
+    assert_eq!(x.attn_router_s, y.attn_router_s, "{label}: attn_router_s");
+    assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(x.transfer_weights_s, y.transfer_weights_s, "{label}: transfer_weights_s");
+    assert_eq!(x.transfer_comp_s, y.transfer_comp_s, "{label}: transfer_comp_s");
+    assert_eq!(x.transfer_act_s, y.transfer_act_s, "{label}: transfer_act_s");
+    assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
+    assert_eq!(x.transfer_repl_s, y.transfer_repl_s, "{label}: transfer_repl_s");
+    assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
+    assert_eq!(x.head_s, y.head_s, "{label}: head_s");
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(ra.id, rb.id, "{label}: record id");
+        assert_eq!(ra.generated, rb.generated, "{label}: generated");
+        assert_eq!(ra.arrival, rb.arrival, "{label}: arrival");
+        assert_eq!(ra.first_token_at, rb.first_token_at, "{label}: first_token_at");
+        assert_eq!(ra.finished_at, rb.finished_at, "{label}: finished_at");
+    }
+    assert_eq!(a.prefetch.issued, b.prefetch.issued, "{label}: prefetch issued");
+    assert_eq!(a.prefetch.covered, b.prefetch.covered, "{label}: prefetch covered");
+    assert_eq!(a.prefetch.demand_fetches, b.prefetch.demand_fetches, "{label}: demand");
+}
+
+/// Drive the server with a randomized tick/poll/reap interleaving until
+/// the loop drains.  Polling and reaping must never perturb the engine;
+/// reaped sessions' event streams are captured so the caller can still
+/// pin them.
+fn drive_randomized(
+    server: &mut Server,
+    ids: &[SessionId],
+    rng: &mut XorShift,
+) -> Vec<(SessionId, Vec<TokenEvent>, SessionStatus)> {
+    let mut reaped: Vec<(SessionId, Vec<TokenEvent>, SessionStatus)> = Vec::new();
+    loop {
+        let burst = 1 + (rng.next_u64() % 4);
+        let mut done = false;
+        for _ in 0..burst {
+            if server.tick().unwrap() == ServerTick::Done {
+                done = true;
+                break;
+            }
+        }
+        // Random observer actions between bursts.
+        if !ids.is_empty() && rng.next_f64() < 0.6 {
+            let id = ids[(rng.next_u64() as usize) % ids.len()];
+            let _ = server.poll_events(id);
+        }
+        if !ids.is_empty() && rng.next_f64() < 0.3 {
+            let id = ids[(rng.next_u64() as usize) % ids.len()];
+            if !reaped.iter().any(|(r, _, _)| *r == id) {
+                if let Some(session) = server.reap(id) {
+                    reaped.push((id, session.events().to_vec(), session.status()));
+                }
+            }
+        }
+        if done {
+            break;
+        }
+    }
+    reaped
+}
+
+/// The differential pin (ISSUE-5 satellite): randomized interleavings of
+/// submit / queued-cancel / tick / poll / reap must reproduce the legacy
+/// `scheduler::serve` ledger for the admitted set, and the per-session
+/// token streams of a plain replay.
+#[test]
+fn randomized_interleavings_match_legacy_serve() {
+    for seed in seeds() {
+        eprintln!("fuzz_server differential seed = {seed:#x}");
+        let mut rng = XorShift::new(seed);
+        let sc = scenario(&mut rng);
+        let label = format!("seed {seed:#x}");
+
+        // Randomized server run: submit everything, cancel the chosen
+        // subset while still queued, then drive with a random
+        // tick/poll/reap interleaving.
+        let mut server = build_server(&sc);
+        let mut ids = Vec::new();
+        for req in &sc.requests {
+            ids.push(server.submit(req.clone()).unwrap());
+        }
+        for id in &sc.cancel {
+            assert!(server.cancel(SessionId(*id)).unwrap(), "{label}: cancel queued");
+        }
+        // Reap a cancelled session immediately sometimes: terminal state.
+        if let Some(first) = sc.cancel.first() {
+            if rng.next_f64() < 0.5 {
+                assert!(server.reap(SessionId(*first)).is_some(), "{label}: reap cancelled");
+            }
+        }
+        let survivors: Vec<SessionId> =
+            ids.iter().copied().filter(|id| !sc.cancel.contains(&id.0)).collect();
+        let reaped = drive_randomized(&mut server, &survivors, &mut rng);
+        let fuzzed = server.report();
+
+        // Legacy golden over the admitted set.
+        let admitted: Vec<Request> = sc
+            .requests
+            .iter()
+            .filter(|r| !sc.cancel.contains(&r.id))
+            .cloned()
+            .collect();
+        let mut engine = ServeEngine::with_prefetch(
+            model(),
+            sc.policy.clone(),
+            sys_offload(),
+            sc.prefetch.clone(),
+        )
+        .unwrap();
+        let golden = serve(&mut engine, admitted.clone()).unwrap();
+        assert_reports_identical(&golden, &fuzzed, &label);
+
+        // Token streams: identical to a plain run over the admitted set.
+        let mut plain = build_server(&sc);
+        for req in &admitted {
+            plain.submit(req.clone()).unwrap();
+        }
+        plain.run_to_completion().unwrap();
+        for id in &survivors {
+            let (events, status) = match reaped.iter().find(|(r, _, _)| r == id) {
+                Some((_, e, s)) => (e.clone(), *s),
+                None => {
+                    let s = server.session(*id).unwrap_or_else(|| panic!("{label}: session"));
+                    (s.events().to_vec(), s.status())
+                }
+            };
+            let b = plain.session(*id).unwrap();
+            assert_eq!(events.as_slice(), b.events(), "{label}: token stream of {id}");
+            assert_eq!(status, SessionStatus::Finished, "{label}: {id} finished");
+        }
+    }
+}
+
+/// Invariant layer: interleavings that cancel *active* sessions and
+/// submit mid-run have no legacy equivalent, but must stay deterministic
+/// under replay and structurally sane.
+#[test]
+fn active_cancellation_interleavings_stay_sane() {
+    for seed in seeds() {
+        eprintln!("fuzz_server invariant seed = {seed:#x}");
+        let run = |seed: u64| -> (Report, Vec<(u64, Vec<TokenEvent>)>) {
+            let mut rng = XorShift::new(seed);
+            let sc = scenario(&mut rng);
+            let mut server = build_server(&sc);
+            let mut ids: Vec<SessionId> = Vec::new();
+            // Submit in two waves with random ticks between, cancelling
+            // random (possibly active) sessions along the way.
+            let half = sc.requests.len() / 2;
+            for req in &sc.requests[..half] {
+                ids.push(server.submit(req.clone()).unwrap());
+            }
+            for _ in 0..(rng.next_u64() % 6) {
+                let _ = server.tick().unwrap();
+            }
+            for req in &sc.requests[half..] {
+                ids.push(server.submit(req.clone()).unwrap());
+            }
+            for id in &ids {
+                if rng.next_f64() < 0.25 {
+                    let _ = server.cancel(*id).unwrap();
+                }
+            }
+            server.run_to_completion().unwrap();
+            let streams = ids
+                .iter()
+                .map(|id| (id.0, server.session(*id).unwrap().events().to_vec()))
+                .collect();
+            (server.report(), streams)
+        };
+        let (ra, sa) = run(seed);
+        let (rb, sb) = run(seed);
+        assert_reports_identical(&ra, &rb, &format!("replay seed {seed:#x}"));
+        assert_eq!(sa, sb, "seed {seed:#x}: streams replay identically");
+
+        // Structural sanity: monotone event times, positive latencies.
+        for (id, events) in &sa {
+            let times: Vec<f64> = events.iter().map(|e| e.at()).collect();
+            assert!(
+                times.windows(2).all(|w| w[0] <= w[1]),
+                "seed {seed:#x}: session {id} event times not monotone: {times:?}"
+            );
+        }
+        assert!(ra.requests.iter().all(|r| r.generated > 0), "seed {seed:#x}");
+        assert!(ra.breakdown.transfer_stall_s >= 0.0);
+        if !ra.requests.is_empty() {
+            assert!(ra.virtual_seconds > 0.0, "seed {seed:#x}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Golden replay corpus (artifact-free): every scenario in
+//! `harness::golden` replays deterministically and matches its committed
+//! pin under `rust/tests/golden/`.
+//!
+//! Workflow:
+//! * a present pin is a strict byte-for-byte contract — any ledger drift
+//!   fails with the first diverging line;
+//! * a missing pin is written on first run (self-bless) so fresh clones
+//!   bootstrap; commit the generated `*.golden.txt` files;
+//! * after an *intentional* ledger change, regenerate via
+//!   `cargo run --release -- figure golden --bless` and commit the diff.
+
+use beam_moe::harness::golden::{check_pin, pin_path, render, scenario_names, PinStatus};
+
+/// Replaying a scenario twice must produce identical snapshots — the
+/// determinism floor under the pins (and under `tests/fuzz_server.rs`).
+#[test]
+fn golden_scenarios_replay_deterministically() {
+    for name in scenario_names() {
+        let a = render(name).unwrap();
+        let b = render(name).unwrap();
+        assert_eq!(a, b, "scenario `{name}` is not replay-deterministic");
+        assert!(a.contains(&format!("scenario: {name}")));
+        assert!(a.contains("bytes.expert_weights:"), "{name} snapshot misses the ledger");
+        assert!(a.contains("tokens["), "{name} snapshot misses the token streams");
+    }
+}
+
+/// The pin diff itself: strict when a pin is committed, self-blessing on
+/// first run (prints what to commit).
+#[test]
+fn golden_scenarios_match_their_pins() {
+    for name in scenario_names() {
+        match check_pin(name, false) {
+            Ok(PinStatus::Match) => {}
+            Ok(PinStatus::Blessed) => {
+                eprintln!(
+                    "golden: wrote missing pin {} — commit it to lock the ledger",
+                    pin_path(name).display()
+                );
+            }
+            Ok(PinStatus::Rewritten) => unreachable!("bless not requested"),
+            Err(e) => panic!("{e:#}"),
+        }
+    }
+}
+
+/// Scenario coverage: the corpus pins each subsystem's ledger — demand
+/// serving, speculative prefetch (§8), the budgeted allocator (§10) and
+/// the sharded fleet with replication (§11).
+#[test]
+fn corpus_covers_the_subsystem_ledgers() {
+    let all: Vec<String> = scenario_names().iter().map(|n| render(n).unwrap()).collect();
+    assert!(all[0].contains("policy: beam"));
+    assert!(all[1].contains("predictor=gate-lookahead"), "{}", all[1]);
+    assert!(all[2].contains("alloc: budget="), "{}", all[2]);
+    assert!(all[3].contains("shard: D=2"), "{}", all[3]);
+    assert!(all[3].contains("bytes.replication:"), "{}", all[3]);
+}

@@ -91,6 +91,7 @@ fn prop_every_policy_plans_a_partition() {
             fp16_cached: &cached,
             predicted: None,
             precisions: None,
+            placement: None,
         };
         let n_active = active.iter().filter(|&&a| a).count();
         for p in &policies {
@@ -132,6 +133,7 @@ fn prop_beam_compensates_exactly_configured_positions() {
             probs: &probs, n_tokens, n_experts, top_k,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let plan = BeamPolicy { bits: 2, positions: pos.clone() }.plan(&ctx);
         let mut comp_pairs = 0;
@@ -213,6 +215,7 @@ fn prop_group_by_expert_rank_consistency() {
             probs: &probs, n_tokens, n_experts, top_k,
             active: &active, ndp: false, fp16_cached: &cached, predicted: None,
             precisions: None,
+            placement: None,
         };
         let groups = group_by_expert(&ctx);
         for (e, tokens) in groups.iter().enumerate() {
