@@ -26,6 +26,20 @@
 //! pins hot remote experts into per-device replica regions at decode-step
 //! boundaries.  `D = 1` materializes exactly one device on the old wiring
 //! and is pinned byte-identical to the pre-sharding engine.
+//!
+//! A scripted [`FaultPlan`] (DESIGN.md §12) makes the fleet *mortal*:
+//! at each decode-step boundary due events are applied — device loss
+//! (HBM purged, queued work and links aborted, orphaned owner experts
+//! re-owned hottest-first, in-flight transfers from the dead source
+//! requeued as demand fetches), hot-add (experts return to their static
+//! home; replicas refill via the popularity reconcile, not a re-shard),
+//! link degradation and transient stalls.  Routing then simply never
+//! selects a dead device, so tokens keep flowing off surviving copies;
+//! the recovery ledger lands in [`Report::fault`].  Token numerics are
+//! placement-independent by construction, so faults can only move
+//! *time*, never values — the chaos goldens pin both.  With no plan (or
+//! an empty one) none of this wiring runs and the ledger is
+//! byte-identical to the §11 engine.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -37,21 +51,21 @@ use crate::backend::Tensor;
 use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
 use crate::coordinator::metrics::{
-    PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
+    FaultReport, PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
 };
 use crate::coordinator::state::{ActiveSeq, BatchState, LayerKv};
 use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
 use crate::offload::ndp::NdpDevice;
 use crate::offload::prefetch::PrefetchQueue;
-use crate::offload::replicate::Replicator;
+use crate::offload::replicate::{plan_reowning, Replicator};
 use crate::offload::transfer::{Link, TransferClass, TransferLog};
 use crate::policies::make_policy;
 use crate::policies::plan::{LayerPlacement, LayerPlan, Location, PlanCtx, Policy};
-use crate::predict::{make_predictor, ExpertPredictor, LayerObservation, PredictCtx};
+use crate::predict::{make_predictor, EwmaPopularity, ExpertPredictor, LayerObservation, PredictCtx};
 use crate::quant::alloc::PrecisionAllocator;
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
-use crate::sim::topology::Topology;
+use crate::sim::topology::{FaultEvent, FaultKind, FaultPlan, LinkSpec, Topology};
 use crate::sim::CostModel;
 use crate::workload::{DecodeTrace, Request};
 
@@ -66,6 +80,25 @@ struct DeviceState {
     demand_fetches: u64,
     /// Expert execs run on this device.
     execs: u64,
+}
+
+/// Runtime state of the fault-injection subsystem (DESIGN.md §12);
+/// constructed only for a non-empty [`FaultPlan`], so its absence is the
+/// byte-identical no-fault path.
+struct FaultState {
+    /// Scripted events not yet applied (script order preserved).
+    pending: Vec<FaultEvent>,
+    /// Per-device liveness; routing never selects a dead device.
+    alive: Vec<bool>,
+    /// The topology's base host-link specs — what `LinkRestore` restores.
+    base_host: Vec<LinkSpec>,
+    /// Re-owning overlay: `reowned[e] = Some(d)` moves expert `e`'s
+    /// ownership to survivor `d`; `None` defers to `Topology::owner_of`.
+    reowned: Vec<Option<usize>>,
+    /// Own popularity table for hottest-first re-owning — the replicator's
+    /// is absent on budget-0 fleets, and orphans must re-own there too.
+    ewma: EwmaPopularity,
+    report: FaultReport,
 }
 
 /// One generated token tagged for the session layer (`server::Server`
@@ -123,6 +156,9 @@ pub struct ServeEngine {
     /// Popularity-driven hot-expert replication (DESIGN.md §11); present
     /// only when `D > 1` and the replica budget is nonzero.
     replicator: Option<Replicator>,
+    /// Fault-injection state (DESIGN.md §12); present only when a
+    /// non-empty `FaultPlan` was installed.
+    faults: Option<FaultState>,
     /// Execs dispatched off device 0 (paid an activation round trip).
     remote_execs: u64,
     /// Execs served by a landed copy on a non-owner device.
@@ -174,6 +210,20 @@ impl ServeEngine {
         sys: SystemConfig,
         prefetch_cfg: PrefetchConfig,
     ) -> Result<Self> {
+        Self::with_config(model, policy_cfg, sys, prefetch_cfg, None)
+    }
+
+    /// Full constructor: prefetching plus an optional scripted
+    /// [`FaultPlan`] (DESIGN.md §12).  `None` — or an empty plan — builds
+    /// no fault state at all and stays byte-identical to
+    /// [`ServeEngine::with_prefetch`].
+    pub fn with_config(
+        model: StagedModel,
+        policy_cfg: PolicyConfig,
+        sys: SystemConfig,
+        prefetch_cfg: PrefetchConfig,
+        fault_plan: Option<FaultPlan>,
+    ) -> Result<Self> {
         let dims = model.manifest.model.clone();
         let cost = CostModel::new(sys.clone(), dims.clone());
         let state = BatchState::new(&model)?;
@@ -213,6 +263,22 @@ impl ServeEngine {
                     sys.shard.replicate_budget_bytes,
                 )
             });
+        let faults = match fault_plan {
+            Some(plan) if !plan.is_empty() => {
+                plan.validate(topology.n_devices)?;
+                Some(FaultState {
+                    pending: plan.events,
+                    alive: vec![true; topology.n_devices],
+                    base_host: topology.host.clone(),
+                    reowned: vec![None; dims.n_experts],
+                    // Same smoothing constant as §10/§11: popularity is one
+                    // signal, consumed by three planners.
+                    ewma: EwmaPopularity::new(dims.n_layers, dims.n_experts, 0.25),
+                    report: FaultReport::default(),
+                })
+            }
+            _ => None,
+        };
         let predictor = make_predictor(&prefetch_cfg.predictor, dims.n_layers, dims.n_experts)?;
         let policy = make_policy(&policy_cfg)?;
         let alloc = if policy.wants_precision_plan() {
@@ -235,6 +301,7 @@ impl ServeEngine {
             peer,
             topology,
             replicator,
+            faults,
             remote_execs: 0,
             replica_serves: 0,
             ndp,
@@ -535,6 +602,9 @@ impl ServeEngine {
         }
         let mut best: Option<(f64, usize)> = None;
         for (d, dev) in self.devices.iter().enumerate() {
+            if !self.device_alive(d) {
+                continue;
+            }
             if dev.cache.peek_ready_at(key).is_some_and(|t| t <= now) {
                 let free = dev.gpu.free_at();
                 let better = match best {
@@ -551,6 +621,133 @@ impl ServeEngine {
         best.map_or(owner, |(_, d)| d)
     }
 
+    /// Is device `d` currently alive?  Always true without a fault plan —
+    /// the probe compiles down to nothing on the no-fault path.
+    fn device_alive(&self, d: usize) -> bool {
+        self.faults.as_ref().is_none_or(|f| f.alive[d])
+    }
+
+    /// `expert`'s current owner: the re-owning overlay when a fault plan
+    /// moved it off a dead device, else the topology's static assignment.
+    fn effective_owner(&self, expert: usize) -> usize {
+        match &self.faults {
+            Some(f) => f.reowned[expert].unwrap_or_else(|| self.topology.owner_of(expert)),
+            None => self.topology.owner_of(expert),
+        }
+    }
+
+    /// Apply every due scripted fault at this decode-step boundary
+    /// (DESIGN.md §12).  Returns whether a device loss fired — the caller
+    /// attributes this step's extra weight stall to the recovery window.
+    fn apply_faults(&mut self) -> bool {
+        let Some(mut fs) = self.faults.take() else {
+            return false;
+        };
+        let out = self.apply_faults_with(&mut fs);
+        self.faults = Some(fs);
+        out
+    }
+
+    fn apply_faults_with(&mut self, fs: &mut FaultState) -> bool {
+        let now = self.clock.now();
+        let step = self.decode_steps;
+        let mut due: Vec<FaultEvent> = Vec::new();
+        fs.pending.retain(|ev| {
+            let fire = now >= ev.at && step >= ev.after_step;
+            if fire {
+                due.push(*ev);
+            }
+            !fire
+        });
+        let mut loss = false;
+        for ev in due {
+            fs.report.events_applied += 1;
+            match ev.kind {
+                FaultKind::DeviceDown { device } => {
+                    if !fs.alive[device] {
+                        continue; // scripted kill of an already-dead device
+                    }
+                    fs.alive[device] = false;
+                    fs.report.device_losses += 1;
+                    loss = true;
+                    // Abort the dead device's queued work: its compute
+                    // stream, host link and every peer link touching it
+                    // must not gate this step's barrier.
+                    self.devices[device].gpu.cut_to(now);
+                    self.devices[device].host_link.resource.cut_to(now);
+                    for other in 0..self.devices.len() {
+                        if other == device {
+                            continue;
+                        }
+                        if let Some(l) = self.peer[device][other].as_mut() {
+                            l.resource.cut_to(now);
+                        }
+                        if let Some(l) = self.peer[other][device].as_mut() {
+                            l.resource.cut_to(now);
+                        }
+                    }
+                    // HBM contents are gone (stats survive — the run
+                    // continues), and survivors drop any copy still on the
+                    // wire *from* the dead device: its advertised landing
+                    // time is a lie, so the next access demand-fetches.
+                    self.devices[device].cache.purge();
+                    for (d, dev) in self.devices.iter_mut().enumerate() {
+                        if fs.alive[d] {
+                            fs.report.requeued_fetches +=
+                                dev.cache.drop_in_flight_from(device, now) as u64;
+                        }
+                    }
+                    // Re-own the orphans hottest-first onto the survivors.
+                    let topo = &self.topology;
+                    let moves = plan_reowning(
+                        fs.ewma.scores(),
+                        |e| topo.owner_of(e),
+                        &fs.reowned,
+                        &fs.alive,
+                    );
+                    for (expert, home) in moves {
+                        fs.reowned[expert] = Some(home);
+                        fs.report.reowned_experts += 1;
+                    }
+                }
+                FaultKind::DeviceUp { device } => {
+                    if fs.alive[device] {
+                        continue; // hot-add of a device that never left
+                    }
+                    fs.alive[device] = true;
+                    fs.report.device_revivals += 1;
+                    self.devices[device].gpu.sync_to(now);
+                    self.devices[device].host_link.resource.sync_to(now);
+                    // Partial rebalance, not a re-shard: the revived
+                    // device's *static* experts come home (its HBM refills
+                    // on demand / via the replica reconcile); experts
+                    // re-owned between other devices stay put.
+                    for e in 0..fs.reowned.len() {
+                        if self.topology.owner_of(e) == device {
+                            fs.reowned[e] = None;
+                        }
+                    }
+                }
+                FaultKind::LinkDegrade { device, factor } => {
+                    self.devices[device].host_link.bw = fs.base_host[device].bw * factor;
+                    fs.report.link_degrades += 1;
+                }
+                FaultKind::LinkRestore { device } => {
+                    self.devices[device].host_link.bw = fs.base_host[device].bw;
+                }
+                FaultKind::Stall { device, seconds } => {
+                    if !fs.alive[device] {
+                        continue; // a dead device cannot stall anyone
+                    }
+                    self.devices[device].gpu.acquire(now, seconds);
+                    fs.report.stalls_injected += 1;
+                    fs.report.stall_injected_s += seconds;
+                }
+            }
+        }
+        loss
+    }
+
     fn plan_layer(&self, probs: &[f32], active: &[bool], layer: usize) -> LayerPlan {
         let m = &self.model.manifest.model;
         let devices = &self.devices;
@@ -564,14 +761,17 @@ impl ServeEngine {
         let placement = (devices.len() > 1).then(|| {
             let bulk = Self::payload_kind(self.policy.bulk_precision());
             let now = self.clock.now();
-            let owner: Vec<usize> = (0..m.n_experts).map(|e| self.topology.owner_of(e)).collect();
+            let owner: Vec<usize> = (0..m.n_experts).map(|e| self.effective_owner(e)).collect();
             // `replicated` means *landed*: an in-flight copy still costs
-            // the wire wait this seam exists to route around.
+            // the wire wait this seam exists to route around.  A copy on a
+            // dead device is no copy at all.
             let replicated = (0..m.n_experts)
                 .map(|e| {
                     let key = PayloadKey { layer, expert: e, kind: bulk };
                     devices.iter().enumerate().any(|(d, dev)| {
-                        d != owner[e] && dev.cache.peek_ready_at(&key).is_some_and(|t| t <= now)
+                        d != owner[e]
+                            && self.device_alive(d)
+                            && dev.cache.peek_ready_at(&key).is_some_and(|t| t <= now)
                     })
                 })
                 .collect();
@@ -606,6 +806,9 @@ impl ServeEngine {
         if let Some(r) = self.replicator.as_mut() {
             r.observe(&obs);
         }
+        if let Some(f) = self.faults.as_mut() {
+            f.ewma.observe(&obs);
+        }
     }
 
     /// Execute one layer's MoE (plan → transfers → experts → combine).
@@ -637,7 +840,7 @@ impl ServeEngine {
                         expert: exec.expert,
                         kind: Self::payload_kind(exec.precision),
                     };
-                    let owner = self.topology.owner_of(exec.expert);
+                    let owner = self.effective_owner(exec.expert);
                     let dev = self.choose_device(&key, owner, router_done);
                     // Cross-device dispatch: the hidden state lives on
                     // device 0; a remote exec ships activations out (and,
@@ -781,10 +984,14 @@ impl ServeEngine {
         }
         let step_t0 = self.clock.now();
         self.prefetch.begin_step();
-        // Decode-step boundary: refresh the per-expert precision plan from
-        // the routing demand accumulated so far (DESIGN.md §10) and
-        // reconcile the fleet's pinned replica sets against the same
-        // popularity table (DESIGN.md §11).
+        // Decode-step boundary: apply due scripted faults (DESIGN.md §12)
+        // *first* — the precision replan and the replica reconcile below
+        // must see the post-fault fleet — then refresh the per-expert
+        // precision plan from the routing demand accumulated so far
+        // (DESIGN.md §10) and reconcile the fleet's pinned replica sets
+        // against the same popularity table (DESIGN.md §11).
+        let fault_loss = self.apply_faults();
+        let stall_before_fault = self.breakdown.transfer_stall_s;
         if let Some(a) = self.alloc.as_mut() {
             a.replan();
         }
@@ -872,6 +1079,14 @@ impl ServeEngine {
                         finished_at: now,
                     });
                 }
+            }
+        }
+        // Attribute the loss step's extra weight stall to the recovery
+        // window — the spike the chaos goldens pin as bounded.
+        if fault_loss {
+            let spike = self.breakdown.transfer_stall_s - stall_before_fault;
+            if let Some(fs) = self.faults.as_mut() {
+                fs.report.recovery_stall_s += spike;
             }
         }
         self.decode_steps += 1;
@@ -1037,9 +1252,9 @@ impl ServeEngine {
                 if !self.prefetch.try_spend(bytes_each) {
                     return Ok(()); // step budget exhausted
                 }
-                // Speculation lands on the expert's owner device, over its
-                // own host link.
-                let dev = self.topology.owner_of(p.expert);
+                // Speculation lands on the expert's (effective) owner
+                // device, over its own host link — never on a dead device.
+                let dev = self.effective_owner(p.expert);
                 let lits =
                     Arc::new(self.model.payload_base(t_layer, p.expert, prec, &self.method())?);
                 let done = self.devices[dev].host_link.transfer(
@@ -1075,12 +1290,12 @@ impl ServeEngine {
         let bulk = self.base_bytes(prec);
         let now = self.clock.now();
         let n_devices = self.devices.len();
-        // Ownership comes from the topology — one authority for the shard
-        // rule, shared with routing and the peer-sourcing check below.
-        let plan = {
-            let topo = &self.topology;
-            rep.plan(bulk, |e| topo.owner_of(e))
-        };
+        // Ownership is the *effective* assignment (re-owning overlay over
+        // the topology) — one authority for the shard rule, shared with
+        // routing and the peer-sourcing check below.  Dead devices neither
+        // receive replicas nor serve as sources.
+        let alive: Vec<bool> = (0..n_devices).map(|d| self.device_alive(d)).collect();
+        let plan = rep.plan_alive(bulk, |e| self.effective_owner(e), &alive);
 
         let mut desired: Vec<HashSet<PayloadKey>> = vec![HashSet::new(); n_devices];
         for t in &plan {
@@ -1102,18 +1317,27 @@ impl ServeEngine {
             if self.devices[t.device].cache.contains(&key) {
                 continue;
             }
-            let owner = self.topology.owner_of(t.expert);
+            let owner = self.effective_owner(t.expert);
             let lits = Arc::new(self.model.payload_base(t.layer, t.expert, prec, &self.method())?);
             let owner_has_landed = owner != t.device
                 && self.devices[owner].cache.peek_ready_at(&key).is_some_and(|r| r <= now);
-            let done = if owner_has_landed {
-                self.peer_transfer(owner, t.device, now, bulk, TransferClass::Replication)
+            // Peer-sourced copies record their source device so that, if
+            // the source dies mid-copy, the in-flight entry is dropped and
+            // requeued instead of advertising a landing the dead wire can
+            // never honor.
+            let (done, src) = if owner_has_landed {
+                let t_done =
+                    self.peer_transfer(owner, t.device, now, bulk, TransferClass::Replication);
+                (t_done, Some(owner))
             } else {
-                self.devices[t.device]
-                    .host_link
-                    .transfer(now, bulk, TransferClass::Replication)
+                let t_done = self.devices[t.device].host_link.transfer(
+                    now,
+                    bulk,
+                    TransferClass::Replication,
+                );
+                (t_done, None)
             };
-            self.devices[t.device].cache.insert_pinned(key, lits, bulk, done);
+            self.devices[t.device].cache.insert_pinned_from(key, lits, bulk, done, src);
             rep.issued += 1;
             rep.bytes_moved += bulk;
         }
@@ -1226,6 +1450,7 @@ impl ServeEngine {
                 demand_fetches_per_device: self.devices.iter().map(|d| d.demand_fetches).collect(),
                 execs_per_device: self.devices.iter().map(|d| d.execs).collect(),
             }),
+            fault: self.faults.as_ref().map(|f| f.report.clone()),
         }
     }
 }

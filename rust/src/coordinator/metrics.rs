@@ -154,6 +154,55 @@ impl ShardReport {
     }
 }
 
+/// Fault-injection outcome of a serve run (DESIGN.md §12); attached to
+/// [`Report::fault`] only when a non-empty [`FaultPlan`] was installed, so
+/// no-fault reports are unchanged.  `PartialEq` so differential tests can
+/// diff the whole recovery ledger at once.
+///
+/// [`FaultPlan`]: crate::sim::topology::FaultPlan
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct FaultReport {
+    /// Scripted events that fired (idempotent no-ops included).
+    pub events_applied: u64,
+    /// Device-loss transitions (alive → dead).
+    pub device_losses: u64,
+    /// Device hot-add transitions (dead → alive).
+    pub device_revivals: u64,
+    /// Host-link bandwidth degradations applied.
+    pub link_degrades: u64,
+    /// Transient compute stalls injected.
+    pub stalls_injected: u64,
+    /// Total virtual seconds of injected compute stall.
+    pub stall_injected_s: f64,
+    /// Orphaned experts re-owned onto surviving devices (hottest-first).
+    pub reowned_experts: u64,
+    /// In-flight transfers voided by a dead source link and requeued as
+    /// demand fetches.
+    pub requeued_fetches: u64,
+    /// Extra decode weight-stall accrued during the steps where a device
+    /// loss was applied — the recovery-window spike the chaos goldens pin.
+    pub recovery_stall_s: f64,
+}
+
+impl FaultReport {
+    pub fn summary(&self) -> String {
+        // `{:?}` (shortest round-trip) for the float fields: the golden
+        // pins diff this line as a raw string.
+        format!(
+            "events={} losses={} revivals={} degrades={} stalls={} ({:?}s) reowned={} requeued={} recovery-stall={:?}s",
+            self.events_applied,
+            self.device_losses,
+            self.device_revivals,
+            self.link_degrades,
+            self.stalls_injected,
+            self.stall_injected_s,
+            self.reowned_experts,
+            self.requeued_fetches,
+            self.recovery_stall_s,
+        )
+    }
+}
+
 /// Nearest-rank percentile of an ascending-sorted sample (0 when empty).
 fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -187,6 +236,9 @@ pub struct Report {
     pub alloc: Option<AllocReport>,
     /// Sharding/replication ledger (DESIGN.md §11); `None` when `D = 1`.
     pub shard: Option<ShardReport>,
+    /// Fault-injection/recovery ledger (DESIGN.md §12); `None` unless a
+    /// non-empty `FaultPlan` was installed.
+    pub fault: Option<FaultReport>,
 }
 
 impl Report {

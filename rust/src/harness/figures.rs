@@ -1188,6 +1188,160 @@ pub fn shard(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Fault sweep — stall vs MTBF × replica budget (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Not a paper figure: the fault-tolerance sweep (DESIGN.md §12).  On the
+/// skewed D=2 fleet it scripts kill/revive cycles of device 1 at three
+/// MTBFs (in decode steps), with the replicator off and with a full
+/// per-device replica budget, and reports throughput, the decode weight
+/// stall and the recovery ledger.  Two hard contracts ride along: an
+/// *empty* `FaultPlan` serves the byte-identical ledger of a plan-free
+/// server, and every faulted run generates exactly as many tokens as its
+/// healthy twin — faults move time, never tokens.
+///
+/// With `--smoke` (or no artifacts) it runs on the built-in synthetic
+/// model with a tiny workload — the artifact-free CI path.
+pub fn fault(h: &mut Harness) -> Result<()> {
+    use crate::config::ShardConfig;
+    use crate::sim::topology::FaultPlan;
+
+    let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
+    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
+        Box::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = h.artifacts.clone();
+        let backend = Arc::clone(&h.backend);
+        Box::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(Arc::clone(&backend), manifest)
+        })
+    };
+    let probe = mk_model()?;
+    let manifest = probe.manifest.clone();
+    let dims = manifest.model.clone();
+    let mut bits: Vec<u8> = manifest.quant.bits.clone();
+    bits.sort_unstable();
+    let floor_bits = *bits.first().context("manifest ships no quantized width")?;
+    let q = manifest.q_expert_bytes(floor_bits);
+    // Same offloading-thrash regime as the shard sweep: faults hurt most
+    // when every miss pays the wire.
+    let cache_bytes = q;
+    let full_budget = dims.n_layers * dims.n_experts * q;
+
+    let (n_req, prompt_len, out_len) =
+        if smoke { (2usize, 32usize, 24usize) } else { (h.serve_requests, 256, 64) };
+    let eval = if smoke {
+        synth::tiny_eval_store(&dims)?
+    } else {
+        crate::manifest::WeightStore::load(probe.manifest.eval_path())?
+    };
+    let requests =
+        WorkloadGen::generate(&WorkloadConfig::offline(n_req, prompt_len, out_len), &eval)?;
+
+    let policy = PolicyConfig::new("static-quant", floor_bits, 0);
+    let serve = |shard: ShardConfig, faults: Option<FaultPlan>| -> Result<Report> {
+        let model = mk_model()?;
+        let mut sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        sys.gpu_cache_bytes = cache_bytes;
+        let mut builder =
+            ServerBuilder::new(model).policy(policy.clone()).system(sys).shard(shard);
+        if let Some(f) = faults {
+            builder = builder.faults(f);
+        }
+        let mut server = builder.build()?;
+        for req in &requests {
+            server.submit(req.clone())?;
+        }
+        server.run_to_completion()
+    };
+
+    h.sink.line(format!(
+        "== Fault sweep ({}, out={out_len}{}): kill/revive MTBF × replica budget ==",
+        dims.name,
+        if smoke { ", smoke" } else { "" },
+    ));
+    h.sink.line(format!(
+        "  D=2, per-device cache {cache_bytes}B | full replica budget {full_budget}B/device",
+    ));
+
+    // §12 equivalence rule: an *empty* FaultPlan installs nothing — the
+    // ledger is byte-identical to the plan-free fleet.  Hard CI contract.
+    let clean = serve(ShardConfig::new(2, full_budget), None)?;
+    let empty = serve(ShardConfig::new(2, full_budget), Some(FaultPlan::new()))?;
+    let identical = clean.bytes == empty.bytes
+        && clean.breakdown.transfer_stall_s == empty.breakdown.transfer_stall_s
+        && clean.virtual_seconds == empty.virtual_seconds
+        && empty.fault.is_none();
+    h.sink.line(format!("  empty-plan equivalence: byte ledger + stall identical = {identical}"));
+    anyhow::ensure!(
+        identical,
+        "an empty FaultPlan perturbed the ledger — the no-fault path must stay byte-identical"
+    );
+    let clean_zero = serve(ShardConfig::new(2, 0), None)?;
+
+    let mut rows = Vec::new();
+    for mtbf in [out_len / 2, out_len / 4, out_len / 8] {
+        let mtbf = mtbf.max(1) as u64;
+        // Alternate kill/revive of device 1 every `mtbf` decode steps.
+        let mut plan = FaultPlan::new();
+        let mut k = 1u64;
+        while k * mtbf < out_len as u64 {
+            plan = if k % 2 == 1 { plan.kill(1, k * mtbf) } else { plan.revive(1, k * mtbf) };
+            k += 1;
+        }
+        for (blabel, budget) in [("none", 0usize), ("full", full_budget)] {
+            let r = serve(ShardConfig::new(2, budget), Some(plan.clone()))?;
+            let f = r.fault.clone().context("faulted run rendered no fault report")?;
+            anyhow::ensure!(
+                f.device_losses >= 1,
+                "MTBF {mtbf} scripted a kill inside the run but none fired"
+            );
+            // Zero token loss: the faulted fleet completes the same
+            // workload as its healthy twin.  Hard CI contract.
+            let healthy = if budget == 0 { &clean_zero } else { &clean };
+            anyhow::ensure!(
+                r.total_generated == healthy.total_generated,
+                "MTBF {mtbf} repl={blabel}: faulted run lost tokens ({} vs {})",
+                r.total_generated,
+                healthy.total_generated,
+            );
+            h.sink.line(format!(
+                "    mtbf={mtbf:<3} repl={blabel:<4} {:>8.2} tok/s | stall {:>8.5}s | recovery {:>8.5}s | losses {} reowned {} requeued {}",
+                r.tokens_per_second(),
+                r.breakdown.transfer_stall_s,
+                f.recovery_stall_s,
+                f.device_losses,
+                f.reowned_experts,
+                f.requeued_fetches,
+            ));
+            rows.push(format!(
+                "{mtbf},{blabel},{},{},{},{},{},{}",
+                r.tokens_per_second(),
+                r.breakdown.transfer_stall_s,
+                f.recovery_stall_s,
+                f.device_losses,
+                f.reowned_experts,
+                f.requeued_fetches,
+            ));
+        }
+    }
+    h.sink.csv(
+        "fault_sweep.csv",
+        "mtbf_steps,replication,tokens_per_s,stall_s,recovery_stall_s,losses,reowned,requeued",
+        &rows,
+    )?;
+    h.sink.line(
+        "  (expected: zero token loss at every MTBF; a full replica budget bounds the \
+         recovery stall the zero-budget fleet pays in re-owned demand fetches)",
+    );
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -1222,12 +1376,13 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "prefetch" => prefetch(h),
         "adaptive" => adaptive(h),
         "shard" => shard(h),
+        "fault" => fault(h),
         "golden" => crate::harness::golden::run(h),
         "all" => all(h),
         other => {
             anyhow::bail!(
                 "unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, shard, \
-                 golden, all)"
+                 fault, golden, all)"
             )
         }
     }

@@ -13,8 +13,11 @@
 //!   *intentional* ledger change — commit the diff with the change that
 //!   caused it;
 //! * a missing pin is written on first run (self-bless) so fresh clones
-//!   and CI bootstrap cleanly; the committed pins are the regression
-//!   contract between sessions.
+//!   and CI bootstrap cleanly — **unless** the scenario is listed in the
+//!   committed `tests/golden/STRICT` manifest, in which case a missing
+//!   pin is an error (strict-diff mode: a deleted pin must not silently
+//!   re-bless itself).  `--bless` writes pins *and* appends the blessed
+//!   names to `STRICT`, so blessing is the one-way door into strictness.
 //!
 //! Snapshots are compared as *strings*: floats are rendered with Rust's
 //! shortest-roundtrip `{:?}`, map keys are sorted, and every field the
@@ -32,12 +35,20 @@ use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
 use crate::coordinator::Report;
 use crate::harness::figures::Harness;
 use crate::server::{ServerBuilder, TokenEvent};
+use crate::sim::topology::FaultPlan;
 use crate::synth;
 use crate::workload::{WorkloadConfig, WorkloadGen};
 
 /// Names of the committed scenarios, in corpus order.
 pub fn scenario_names() -> Vec<&'static str> {
-    vec!["beam2-offline", "static2-gate-prefetch", "adaptive-budgeted", "shard2-replicated"]
+    vec![
+        "beam2-offline",
+        "static2-gate-prefetch",
+        "adaptive-budgeted",
+        "shard2-replicated",
+        "shard2-kill-dev1",
+        "shard3-degraded-link",
+    ]
 }
 
 /// Directory the pins live in (`rust/tests/golden/`).
@@ -63,6 +74,7 @@ pub fn render(name: &str) -> Result<String> {
     let mut policy = PolicyConfig::new("beam", synth::SYNTH_BITS, 1);
     let mut prefetch = PrefetchConfig::off();
     let mut shard: Option<ShardConfig> = None;
+    let mut faults: Option<FaultPlan> = None;
     let wl = match name {
         // The paper policy on the offload-regime single device — the
         // ledger every PR since the seed has been building on.
@@ -94,12 +106,35 @@ pub fn render(name: &str) -> Result<String> {
             shard = Some(ShardConfig::new(2, pairs * q));
             WorkloadConfig::offline(2, 32, 8)
         }
+        // §12 chaos: kill device 1 mid-decode, revive it later.  Tokens
+        // keep flowing off the replicas and re-owned experts; the pin
+        // bounds the recovery stall spike and the whole fault ledger.
+        "shard2-kill-dev1" => {
+            policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+            sys.gpu_cache_bytes = q;
+            shard = Some(ShardConfig::new(2, pairs * q));
+            faults = Some(FaultPlan::new().kill(1, 6).revive(1, 16));
+            WorkloadConfig::offline(2, 32, 24)
+        }
+        // §12 chaos: a three-device fleet with a degraded host link on the
+        // dense device plus a transient compute stall on device 1 (no
+        // losses — pins the degrade/stall ledger in isolation).
+        "shard3-degraded-link" => {
+            policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+            sys.gpu_cache_bytes = q;
+            shard = Some(ShardConfig::new(3, pairs * q));
+            faults = Some(FaultPlan::new().degrade(0, 2, 0.25).stall(1, 5, 2e-4).restore(0, 8));
+            WorkloadConfig::offline(2, 32, 12)
+        }
         other => anyhow::bail!("unknown golden scenario `{other}`"),
     };
 
     let mut builder = ServerBuilder::new(model).policy(policy).system(sys).prefetch(prefetch);
     if let Some(s) = shard {
         builder = builder.shard(s);
+    }
+    if let Some(f) = faults {
+        builder = builder.faults(f);
     }
     let mut server = builder.build()?;
     let eval = synth::tiny_eval_store(&dims)?;
@@ -166,6 +201,9 @@ fn render_report(w: &mut String, r: &Report) {
         let _ = writeln!(w, "shard: {}", s.summary());
         let _ = writeln!(w, "shard.demand_fetches_per_device: {:?}", s.demand_fetches_per_device);
     }
+    if let Some(f) = &r.fault {
+        let _ = writeln!(w, "fault: {}", f.summary());
+    }
     for rec in &r.requests {
         let _ = writeln!(
             w,
@@ -186,18 +224,70 @@ pub enum PinStatus {
     Rewritten,
 }
 
+/// The strict-diff manifest: scenarios listed here have committed pins
+/// and must never self-bless — a missing pin is an error, not a bootstrap.
+pub fn strict_path() -> PathBuf {
+    golden_dir().join("STRICT")
+}
+
+/// Parse the `STRICT` manifest: one scenario name per line, `#` comments.
+fn parse_strict(text: &str) -> Vec<String> {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or("").trim())
+        .filter(|l| !l.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Scenario names under strict-diff mode (empty when no manifest exists).
+pub fn strict_names() -> Vec<String> {
+    std::fs::read_to_string(strict_path()).map(|t| parse_strict(&t)).unwrap_or_default()
+}
+
+/// Append `name` to the `STRICT` manifest (idempotent): once blessed, a
+/// scenario's pin can never silently self-bless again.
+fn mark_strict(name: &str) -> Result<()> {
+    let path = strict_path();
+    let existing = std::fs::read_to_string(&path).unwrap_or_else(|_| {
+        "# Golden scenarios under strict-diff mode: a missing pin is an error,\n\
+         # not a self-bless.  `figure golden --bless` appends names here.\n"
+            .to_string()
+    });
+    if parse_strict(&existing).iter().any(|n| n == name) {
+        return Ok(());
+    }
+    let mut text = existing;
+    if !text.ends_with('\n') {
+        text.push('\n');
+    }
+    text.push_str(name);
+    text.push('\n');
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 /// Replay `name` and reconcile with its pin file.  `bless` forces a
-/// rewrite; otherwise a missing pin is written (self-bless) and an
-/// existing pin is diffed — the error names the first diverging line.
+/// rewrite (and flips the scenario to strict-diff mode); otherwise a
+/// missing pin is written (self-bless) unless the scenario is strict, and
+/// an existing pin is diffed — the error names the first diverging line.
 pub fn check_pin(name: &str, bless: bool) -> Result<PinStatus> {
     let got = render(name)?;
     let path = pin_path(name);
     std::fs::create_dir_all(golden_dir())?;
     if bless {
         std::fs::write(&path, &got)?;
+        mark_strict(name)?;
         return Ok(PinStatus::Rewritten);
     }
     if !path.exists() {
+        anyhow::ensure!(
+            !strict_names().iter().any(|n| n == name),
+            "golden scenario `{name}` is strict (listed in {}) but its pin {} is missing — \
+             restore the committed pin or re-bless intentionally with \
+             `cargo run --release -- figure golden --bless`",
+            strict_path().display(),
+            path.display(),
+        );
         std::fs::write(&path, &got)?;
         return Ok(PinStatus::Blessed);
     }
@@ -260,6 +350,13 @@ mod tests {
         dedup.dedup();
         assert_eq!(dedup.len(), names.len());
         assert!(render("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn strict_manifest_parses_names_and_comments() {
+        let names = parse_strict("# header\nbeam2-offline\n\n  shard2-kill-dev1  # chaos\n");
+        assert_eq!(names, vec!["beam2-offline", "shard2-kill-dev1"]);
+        assert!(parse_strict("# only comments\n\n").is_empty());
     }
 
     #[test]

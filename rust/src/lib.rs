@@ -20,10 +20,11 @@
 //! * [`runtime`]    — the staged model the coordinator drives
 //! * [`synth`]      — deterministic synthetic model (zero-artifact runs)
 //! * [`sim`]        — virtual clock + H100/NDP roofline cost model +
-//!   device-fleet topology (DESIGN.md §11)
+//!   device-fleet topology (DESIGN.md §11) + scripted fault plans
+//!   (DESIGN.md §12)
 //! * [`offload`]    — memory tiers, link simulator, expert LRU cache with
 //!   pinned replicas, speculative prefetch queue, the popularity-driven
-//!   sharding replicator, NDP
+//!   sharding replicator + re-owning reconciler, NDP
 //! * [`registry`]   — the shared name → constructor table (aliases,
 //!   sorted listings) behind both open registries (DESIGN.md §9)
 //! * [`policies`]   — Mixtral-Offloading / HOBBIT / MoNDE / static-quant /

@@ -5,10 +5,10 @@
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
 //!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
 //!             [--lookahead N] [--max-pending N] [--alloc-budget BYTES]
-//!             [--devices D] [--replicate-budget BYTES]
+//!             [--devices D] [--replicate-budget BYTES] [--fault-plan FILE]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|golden|all>
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|golden|all>
 //!             [--out DIR] [--full] [--smoke] [--bless]
 //! beam info   --model mixtral-tiny
 //! ```
@@ -19,6 +19,13 @@
 //! shard --smoke` sweeps D × budget × policy artifact-free; `figure
 //! golden --bless` regenerates the pinned report snapshots under
 //! `rust/tests/golden/`.
+//!
+//! `--fault-plan FILE` installs a deterministic chaos script (DESIGN.md
+//! §12): one event per line — `kill dev=1 step=6`, `revive dev=1 step=16`,
+//! `degrade dev=0 factor=0.25`, `restore dev=0 step=8`,
+//! `stall dev=1 secs=2e-4` — applied at decode-step boundaries.  `figure
+//! fault --smoke` sweeps recovery stall vs kill/revive MTBF × replica
+//! budget artifact-free.
 //!
 //! `--policy adaptive` serves the budgeted per-expert precision allocator
 //! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
@@ -172,12 +179,19 @@ fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> 
     };
     let model = StagedModel::load(backend, manifest)?;
     let sys = system(args, &model.manifest)?;
-    ServerBuilder::new(model)
+    let mut builder = ServerBuilder::new(model)
         .policy(policy)
         .system(sys)
         .prefetch(prefetch_cfg)
-        .max_pending(args.num("max-pending", usize::MAX)?)
-        .build()
+        .max_pending(args.num("max-pending", usize::MAX)?);
+    // Deterministic chaos script (DESIGN.md §12); validated against the
+    // fleet size at build().
+    if let Some(path) = args.opt("fault-plan") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path}"))?;
+        builder = builder.faults(beam_moe::sim::topology::FaultPlan::parse(&text)?);
+    }
+    builder.build()
 }
 
 /// Submit a batch respecting admission control: when `--max-pending`
@@ -249,6 +263,9 @@ fn main() -> Result<()> {
                     s.summary(),
                     report.breakdown.transfer_stall_s,
                 );
+            }
+            if let Some(f) = &report.fault {
+                println!("  fault: {}", f.summary());
             }
             println!(
                 "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",

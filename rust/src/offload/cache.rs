@@ -61,6 +61,11 @@ struct Entry {
     /// Replica pinned by the sharding replicator: lives in the reserved
     /// replica region, absent from the recency index, never LRU-evicted.
     pinned: bool,
+    /// Source *device* of an in-flight peer transfer (`None` for host
+    /// sourced or local inserts).  When that device dies the entry's
+    /// `ready_at` is a lie — the wire went dark mid-copy — so the fault
+    /// path drops it via [`ExpertCache::drop_in_flight_from`].
+    src: Option<usize>,
 }
 
 /// A successful lookup: the payload plus when it is actually usable.
@@ -227,6 +232,7 @@ impl ExpertCache {
                 speculative,
                 used: false,
                 pinned: false,
+                src: None,
             },
         );
         self.recency.insert(self.tick, key);
@@ -262,6 +268,20 @@ impl ExpertCache {
         bytes: usize,
         ready_at: VTime,
     ) {
+        self.insert_pinned_from(key, payload, bytes, ready_at, None);
+    }
+
+    /// [`ExpertCache::insert_pinned`] with the transfer's source device
+    /// recorded, so a peer-sourced replica still on the wire can be dropped
+    /// if that peer dies before the copy lands (DESIGN.md §12).
+    pub fn insert_pinned_from(
+        &mut self,
+        key: PayloadKey,
+        payload: Arc<Vec<Tensor>>,
+        bytes: usize,
+        ready_at: VTime,
+        src: Option<usize>,
+    ) {
         self.remove_entry(&key);
         self.tick += 1;
         self.entries.insert(
@@ -274,9 +294,41 @@ impl ExpertCache {
                 speculative: false,
                 used: false,
                 pinned: true,
+                src,
             },
         );
         self.pinned_used += bytes;
+    }
+
+    /// Drop every entry whose transfer is still in flight (`ready_at >
+    /// now`) from a source device that just died.  Without this, the entry
+    /// would keep advertising a `ready_at` the dead wire can never honor —
+    /// and once virtual time passed it, a *stale miss* would turn into a
+    /// phantom hit.  Returns how many entries were dropped (the engine
+    /// requeues them as demand fetches).
+    pub fn drop_in_flight_from(&mut self, src: usize, now: VTime) -> usize {
+        let doomed: Vec<PayloadKey> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.src == Some(src) && e.ready_at > now)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in &doomed {
+            self.remove_entry(key);
+        }
+        doomed.len()
+    }
+
+    /// Drop every entry — the device-death path.  Unlike
+    /// [`ExpertCache::clear`] the run's hit/miss/eviction economics are
+    /// preserved (the run continues; only the HBM contents are gone).
+    /// Still-unused speculative bytes are charged as wasted.
+    pub fn purge(&mut self) {
+        let keys: Vec<PayloadKey> = self.entries.keys().copied().collect();
+        for key in &keys {
+            self.remove_entry(key);
+        }
+        debug_assert_eq!(self.used + self.pinned_used, 0);
     }
 
     /// Drop a pinned replica (the replicator's reconcile path — freeing a
@@ -542,6 +594,48 @@ mod tests {
         c.insert(key(1), payload(), 10);
         let pins = c.pinned_keys();
         assert_eq!(pins.iter().map(|k| k.expert).collect::<Vec<_>>(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn dead_source_in_flight_entries_are_dropped_not_stale() {
+        // Regression (ISSUE 6 satellite): an in-flight entry whose source
+        // link died must not report a `ready_at` in the past once virtual
+        // time passes it — it must be a miss until requeued.
+        let mut c = ExpertCache::new(100);
+        c.insert_pinned_from(key(0), payload(), 10, 9.0, Some(1)); // on the wire from dev 1
+        c.insert_pinned_from(key(1), payload(), 10, 2.0, Some(1)); // already landed
+        c.insert_ready(key(2), payload(), 10, 9.0); // host-sourced, unaffected
+        // Device 1 dies at t=4: only its still-in-flight entry is dropped.
+        assert_eq!(c.drop_in_flight_from(1, 4.0), 1);
+        assert!(!c.contains(&key(0)), "dead-link in-flight entry is gone");
+        assert!(c.contains(&key(1)), "a landed replica survives its source");
+        assert!(c.contains(&key(2)), "host transfers don't ride the dead link");
+        assert_eq!(c.pinned_bytes(), 10);
+        // The doomed key is now a plain miss — no phantom hit at t=10.
+        assert!(c.get_at(&key(0), 10.0).is_none());
+    }
+
+    #[test]
+    fn purge_empties_hbm_but_keeps_the_runs_economics() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), payload(), 60);
+        c.insert(key(1), payload(), 60); // evicts 0
+        c.insert_speculative(key(2), payload(), 20, 1.0); // never used
+        c.insert_pinned(key(3), payload(), 30, 0.0);
+        let _ = c.get(&key(1));
+        let _ = c.get(&key(4));
+        let (hits, misses, evictions) = (c.hits, c.misses, c.evictions);
+        assert!(hits + misses + evictions > 0);
+        c.purge();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.pinned_bytes(), 0);
+        assert_eq!(
+            (c.hits, c.misses, c.evictions),
+            (hits, misses, evictions),
+            "device death must not rewrite the run's ledger"
+        );
+        assert_eq!(c.wasted_speculative_bytes, 20, "the unused prefetch was sunk cost");
     }
 
     #[test]

@@ -19,6 +19,6 @@ pub mod transfer;
 pub use cache::{CacheHit, ExpertCache, PayloadKey, PayloadKind};
 pub use ndp::NdpDevice;
 pub use prefetch::PrefetchQueue;
-pub use replicate::{ReplicaTarget, Replicator};
+pub use replicate::{plan_reowning, ReplicaTarget, Replicator};
 pub use tiers::MemoryTiers;
 pub use transfer::{Link, TransferClass, TransferLog};

@@ -85,7 +85,21 @@ impl Replicator {
         bulk_bytes: usize,
         owner_of: impl Fn(usize) -> usize,
     ) -> Vec<ReplicaTarget> {
-        if self.n_devices < 2 || self.budget_bytes < bulk_bytes || bulk_bytes == 0 {
+        let alive = vec![true; self.n_devices];
+        self.plan_alive(bulk_bytes, owner_of, &alive)
+    }
+
+    /// [`Replicator::plan`] restricted to the live fleet (DESIGN.md §12):
+    /// dead devices neither receive replicas nor count as owners to skip.
+    /// With fewer than two live devices there is nowhere to replicate.
+    pub fn plan_alive(
+        &self,
+        bulk_bytes: usize,
+        owner_of: impl Fn(usize) -> usize,
+        alive: &[bool],
+    ) -> Vec<ReplicaTarget> {
+        let live = alive.iter().filter(|a| **a).count();
+        if live < 2 || self.budget_bytes < bulk_bytes || bulk_bytes == 0 {
             return Vec::new();
         }
         let scores = self.ewma.scores();
@@ -105,7 +119,7 @@ impl Replicator {
             let owner = owner_of(expert);
             for step in 1..self.n_devices {
                 let device = (owner + step) % self.n_devices;
-                if left[device] >= bulk_bytes {
+                if alive[device] && device != owner && left[device] >= bulk_bytes {
                     left[device] -= bulk_bytes;
                     out.push(ReplicaTarget { device, layer, expert });
                     break;
@@ -114,6 +128,55 @@ impl Replicator {
         }
         out
     }
+}
+
+/// Re-own orphaned experts after a device loss (DESIGN.md §12).
+///
+/// `overlay[e]` is the current re-owning overlay (`None` = the static
+/// `base_owner(e)` still holds); `alive` the fleet's liveness mask.  Every
+/// expert whose *effective* owner is dead is reassigned **hottest-first**
+/// (summed popularity across layers, ties toward the lower expert index) to
+/// the live device with the fewest effectively-owned experts (ties toward
+/// the lower device index), counting assignments as they are made so the
+/// orphans spread instead of piling onto one survivor.  Pure bookkeeping
+/// over the score table — deterministic by construction, which the chaos
+/// goldens and `tests/fault.rs` pin.
+///
+/// Returns `(expert, new_owner)` in assignment (hottest-first) order.
+pub fn plan_reowning(
+    scores: &[Vec<f64>],
+    base_owner: impl Fn(usize) -> usize,
+    overlay: &[Option<usize>],
+    alive: &[bool],
+) -> Vec<(usize, usize)> {
+    let n_experts = overlay.len();
+    let effective = |e: usize| overlay[e].unwrap_or_else(|| base_owner(e));
+    let mut orphans: Vec<(usize, f64)> = (0..n_experts)
+        .filter(|&e| !alive[effective(e)])
+        .map(|e| (e, scores.iter().map(|row| row[e]).sum()))
+        .collect();
+    if orphans.is_empty() {
+        return Vec::new();
+    }
+    orphans.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+
+    let mut load = vec![0usize; alive.len()];
+    for e in 0..n_experts {
+        let d = effective(e);
+        if alive[d] {
+            load[d] += 1;
+        }
+    }
+    let mut out = Vec::with_capacity(orphans.len());
+    for (expert, _) in orphans {
+        let home = (0..alive.len())
+            .filter(|&d| alive[d])
+            .min_by_key(|&d| (load[d], d))
+            .expect("caller guarantees at least one live device");
+        load[home] += 1;
+        out.push((expert, home));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -205,5 +268,59 @@ mod tests {
         // One payload per device: layer 0's pair wins both slots.
         assert_eq!(plan.len(), 2);
         assert!(plan.iter().all(|t| t.layer == 0), "{plan:?}");
+    }
+
+    #[test]
+    fn plan_alive_skips_dead_devices() {
+        let mut r = Replicator::new(1, 6, 3, 1 << 20);
+        observe_mass_k(&mut r, 0, &[0.3, 0.2, 0.15, 0.15, 0.1, 0.1], 5, 3);
+        // All alive: plan_alive with an all-true mask is exactly plan().
+        let all = vec![true; 3];
+        assert_eq!(r.plan_alive(64, |e| e % 3, &all), r.plan(64, |e| e % 3));
+        // Device 1 dead (its experts re-owned to device 2 by the caller):
+        // no replica may target device 1.
+        let owner = |e: usize| if e % 3 == 1 { 2 } else { e % 3 };
+        let plan = r.plan_alive(64, owner, &[true, false, true]);
+        assert!(!plan.is_empty());
+        for t in &plan {
+            assert_ne!(t.device, 1, "dead device got a replica: {plan:?}");
+            assert_ne!(t.device, owner(t.expert), "replica on its own owner: {plan:?}");
+        }
+        // One live device: nowhere to replicate *to*.
+        assert!(r.plan_alive(64, |_| 0, &[true, false, false]).is_empty());
+    }
+
+    #[test]
+    fn reowning_is_hottest_first_and_balanced() {
+        // D=3, 6 experts owned round-robin; device 1 (experts 1, 4) dies.
+        let scores = vec![vec![0.1, 0.5, 0.0, 0.0, 0.9, 0.0]];
+        let overlay = vec![None; 6];
+        let out = plan_reowning(&scores, |e| e % 3, &overlay, &[true, false, true]);
+        // Hottest orphan first (e4 at 0.9 beats e1 at 0.5); both survivors
+        // start with 2 owned experts, so the orphans split across them.
+        assert_eq!(out, vec![(4, 0), (1, 2)]);
+        // Deterministic: same inputs, same assignment.
+        assert_eq!(out, plan_reowning(&scores, |e| e % 3, &overlay, &[true, false, true]));
+    }
+
+    #[test]
+    fn reowning_respects_the_overlay_and_never_picks_dead_homes() {
+        // Expert 1 was already re-owned to device 2; now device 2 dies too.
+        let scores = vec![vec![0.0, 0.4, 0.0, 0.2]];
+        let mut overlay = vec![None; 4];
+        overlay[1] = Some(2);
+        let alive = [true, true, false, false];
+        let out = plan_reowning(&scores, |e| e % 4, &overlay, &alive);
+        // Orphans: e1 (overlay home 2 dead), e2 (base home 2 dead),
+        // e3 (base home 3 dead) — hottest-first e1, e3, then cold e2.
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].0, 1);
+        assert_eq!(out[1].0, 3);
+        assert_eq!(out[2].0, 2);
+        for &(_, home) in &out {
+            assert!(alive[home], "orphan re-owned to a dead device: {out:?}");
+        }
+        // Nothing orphaned -> nothing moves.
+        assert!(plan_reowning(&scores, |e| e % 4, &overlay, &[true; 4]).is_empty());
     }
 }

@@ -12,15 +12,18 @@ use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
 use crate::coordinator::ServeEngine;
 use crate::runtime::StagedModel;
 use crate::server::Server;
+use crate::sim::topology::FaultPlan;
 
 /// Builder for a [`Server`]: model + policy + testbed + sharding +
-/// prefetch + admission knobs, validated at [`ServerBuilder::build`].
+/// prefetch + fault-plan + admission knobs, validated at
+/// [`ServerBuilder::build`].
 pub struct ServerBuilder {
     model: StagedModel,
     policy: PolicyConfig,
     system: Option<SystemConfig>,
     shard: Option<ShardConfig>,
     prefetch: PrefetchConfig,
+    faults: Option<FaultPlan>,
     max_pending: usize,
 }
 
@@ -36,6 +39,7 @@ impl ServerBuilder {
             system: None,
             shard: None,
             prefetch: PrefetchConfig::off(),
+            faults: None,
             max_pending: usize::MAX,
         }
     }
@@ -75,6 +79,16 @@ impl ServerBuilder {
         self
     }
 
+    /// Deterministic scripted fault injection (DESIGN.md §12): device
+    /// loss / hot-add, link degradation and transient stalls applied at
+    /// decode-step boundaries.  An empty plan installs nothing — the run
+    /// stays byte-identical to a plan-free build.  Validated against the
+    /// fleet size at [`ServerBuilder::build`].
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Admission control: `submit` refuses (backpressure) once this many
     /// requests are queued ahead of the batch.
     pub fn max_pending(mut self, limit: usize) -> Self {
@@ -96,7 +110,8 @@ impl ServerBuilder {
             ensure!(shard.devices >= 1, "a deployment needs at least one device");
             system.shard = shard;
         }
-        let engine = ServeEngine::with_prefetch(self.model, self.policy, system, self.prefetch)?;
+        let engine =
+            ServeEngine::with_config(self.model, self.policy, system, self.prefetch, self.faults)?;
         Ok(Server::from_parts(engine, self.max_pending))
     }
 }

@@ -45,6 +45,17 @@ impl Resource {
         }
     }
 
+    /// Pull the availability cursor *back* to `t`, voiding queued work —
+    /// the fault-injection path (DESIGN.md §12): when a device dies, the
+    /// operations queued on its compute stream and links are aborted and
+    /// must not gate the step barrier.  `busy_total` is left as charged —
+    /// the wire/stream time was spent before the fault hit.
+    pub fn cut_to(&mut self, t: VTime) {
+        if t < self.free_at {
+            self.free_at = t;
+        }
+    }
+
     pub fn busy_total(&self) -> VTime {
         self.busy_total
     }
@@ -98,6 +109,19 @@ mod tests {
         assert_eq!((s1, e1), (0.0, 2.0));
         assert_eq!((s2, e2), (2.0, 5.0)); // queued behind the first
         assert_eq!(r.busy_total(), 5.0);
+    }
+
+    #[test]
+    fn cut_to_voids_queued_work_but_never_advances() {
+        let mut r = Resource::new("link");
+        r.acquire(0.0, 10.0); // queued transfer ends at 10
+        r.cut_to(3.0); // link dies at t=3: the tail is aborted
+        assert_eq!(r.free_at(), 3.0);
+        r.cut_to(7.0); // cutting forward is a no-op
+        assert_eq!(r.free_at(), 3.0);
+        assert_eq!(r.busy_total(), 10.0, "charged time is not refunded");
+        let (s, _) = r.acquire(3.0, 1.0);
+        assert_eq!(s, 3.0, "the resource is usable again at the cut");
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod topology;
 
 pub use clock::{Resource, VirtualClock};
 pub use roofline::CostModel;
-pub use topology::{LinkSpec, Topology};
+pub use topology::{FaultEvent, FaultKind, FaultPlan, LinkSpec, Topology};

@@ -11,8 +11,18 @@
 //!
 //! `D = 1` yields exactly one host link and no peers — the single-device
 //! wiring, byte-identical by construction (the §11 equivalence rule).
+//!
+//! The fleet's *failure* script lives here too (DESIGN.md §12): a
+//! [`FaultPlan`] is a deterministic list of scripted [`FaultEvent`]s —
+//! device loss/hot-add, host-link degradation and transient compute
+//! stalls — keyed to virtual time and/or decode-step count, so every
+//! chaos run replays identically.  The engine applies due events at
+//! decode-step boundaries; an empty plan is byte-identical to no plan.
+
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::SystemConfig;
+use crate::sim::clock::VTime;
 
 /// Bandwidth/latency of one directed link.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -76,6 +86,219 @@ impl Topology {
     }
 }
 
+/// What one scripted fault does when it fires (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Device loss: the device's HBM contents vanish, its queued work and
+    /// every link touching it are aborted, and its orphaned owner experts
+    /// are re-owned hottest-first.  Device 0 runs the dense stages and can
+    /// never be killed ([`FaultPlan::validate`]).
+    DeviceDown { device: usize },
+    /// Hot-add: the device rejoins with an empty cache; experts whose
+    /// static home it is return to it (popularity-driven partial
+    /// rebalancing refills its replicas — no full re-shard).
+    DeviceUp { device: usize },
+    /// Host-link degradation: the device's host link runs at
+    /// `factor × base bandwidth` until restored (`0 < factor ≤ 1`).
+    LinkDegrade { device: usize, factor: f64 },
+    /// Undo a [`FaultKind::LinkDegrade`]: back to the topology's base spec.
+    LinkRestore { device: usize },
+    /// Transient stall: the device's compute stream is held for `seconds`
+    /// of virtual time (a driver hiccup / preemption burst).
+    Stall { device: usize, seconds: f64 },
+}
+
+/// One scripted fault: fires at the first decode-step boundary where both
+/// `now >= at` *and* `decode_steps >= after_step` hold.  Step keying makes
+/// chaos scenarios robust to timing shifts; virtual-time keying scripts
+/// wall-calendar faults (MTBF sweeps).  Either key may be left at 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: VTime,
+    pub after_step: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, replayable fault script.  Events are applied in list
+/// order at each decode-step boundary; applying the same plan to the same
+/// run replays the same recovery byte-for-byte (the chaos goldens and
+/// `tests/fuzz_server.rs` pin this).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn push(mut self, after_step: u64, kind: FaultKind) -> Self {
+        self.events.push(FaultEvent { at: 0.0, after_step, kind });
+        self
+    }
+
+    /// Script a device loss at the given decode-step boundary.
+    pub fn kill(self, device: usize, after_step: u64) -> Self {
+        self.push(after_step, FaultKind::DeviceDown { device })
+    }
+
+    /// Script a device hot-add at the given decode-step boundary.
+    pub fn revive(self, device: usize, after_step: u64) -> Self {
+        self.push(after_step, FaultKind::DeviceUp { device })
+    }
+
+    /// Script a host-link degradation to `factor × base bandwidth`.
+    pub fn degrade(self, device: usize, after_step: u64, factor: f64) -> Self {
+        self.push(after_step, FaultKind::LinkDegrade { device, factor })
+    }
+
+    /// Script the restoration of a degraded host link.
+    pub fn restore(self, device: usize, after_step: u64) -> Self {
+        self.push(after_step, FaultKind::LinkRestore { device })
+    }
+
+    /// Script a transient compute stall of `seconds` virtual seconds.
+    pub fn stall(self, device: usize, after_step: u64, seconds: f64) -> Self {
+        self.push(after_step, FaultKind::Stall { device, seconds })
+    }
+
+    /// Reject plans the fleet cannot honor: out-of-range device indices,
+    /// killing device 0 (it runs the dense stages — embed, attention,
+    /// router, head — so the deployment cannot survive losing it), and
+    /// non-physical degrade factors / stall durations.
+    pub fn validate(&self, n_devices: usize) -> Result<()> {
+        for (i, ev) in self.events.iter().enumerate() {
+            ensure!(
+                ev.at.is_finite() && ev.at >= 0.0,
+                "fault event {i}: `at` must be a finite non-negative virtual time"
+            );
+            let device = match ev.kind {
+                FaultKind::DeviceDown { device } => {
+                    ensure!(
+                        device != 0,
+                        "fault event {i}: device 0 runs the dense stages and cannot be killed"
+                    );
+                    device
+                }
+                FaultKind::DeviceUp { device } | FaultKind::LinkRestore { device } => device,
+                FaultKind::LinkDegrade { device, factor } => {
+                    ensure!(
+                        factor.is_finite() && factor > 0.0 && factor <= 1.0,
+                        "fault event {i}: degrade factor must be in (0, 1], got {factor}"
+                    );
+                    device
+                }
+                FaultKind::Stall { device, seconds } => {
+                    ensure!(
+                        seconds.is_finite() && seconds >= 0.0,
+                        "fault event {i}: stall seconds must be finite and non-negative"
+                    );
+                    device
+                }
+            };
+            ensure!(
+                device < n_devices,
+                "fault event {i}: device {device} out of range for a {n_devices}-device fleet"
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse the `--fault-plan` file format: one event per line, `#`
+    /// comments, a leading action word (`kill | revive | degrade |
+    /// restore | stall`) plus `key=value` tokens in any order
+    /// (`dev=`, `step=`, `at=`, `factor=`, `secs=`).
+    ///
+    /// ```text
+    /// # lose device 1 mid-decode, bring it back later
+    /// kill    dev=1 step=6
+    /// revive  dev=1 step=16
+    /// degrade dev=0 factor=0.25 at=0.002
+    /// stall   dev=1 secs=2e-4 step=5
+    /// restore dev=0 step=8
+    /// ```
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("fault plan line {}: `{}`", lineno + 1, raw.trim());
+            let mut tokens = line.split_whitespace();
+            let action = tokens.next().expect("non-empty line has a first token");
+            let (mut at, mut step) = (0.0f64, 0u64);
+            let (mut dev, mut factor, mut secs) = (None, None, None);
+            for tok in tokens {
+                let (key, value) = tok
+                    .split_once('=')
+                    .with_context(|| format!("{}: expected key=value, got `{tok}`", ctx()))?;
+                match key {
+                    "dev" => dev = Some(value.parse::<usize>().with_context(ctx)?),
+                    "step" => step = value.parse::<u64>().with_context(ctx)?,
+                    "at" => at = value.parse::<f64>().with_context(ctx)?,
+                    "factor" => factor = Some(value.parse::<f64>().with_context(ctx)?),
+                    "secs" => secs = Some(value.parse::<f64>().with_context(ctx)?),
+                    other => bail!("{}: unknown key `{other}`", ctx()),
+                }
+            }
+            let device = dev.with_context(|| format!("{}: missing dev=", ctx()))?;
+            let kind = match action {
+                "kill" => FaultKind::DeviceDown { device },
+                "revive" => FaultKind::DeviceUp { device },
+                "degrade" => FaultKind::LinkDegrade {
+                    device,
+                    factor: factor.with_context(|| format!("{}: missing factor=", ctx()))?,
+                },
+                "restore" => FaultKind::LinkRestore { device },
+                "stall" => FaultKind::Stall {
+                    device,
+                    seconds: secs.with_context(|| format!("{}: missing secs=", ctx()))?,
+                },
+                other => bail!(
+                    "{}: unknown action `{other}` (kill|revive|degrade|restore|stall)",
+                    ctx()
+                ),
+            };
+            events.push(FaultEvent { at, after_step: step, kind });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Canonical text form; `parse(render(p)) == p` (pinned by a test).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for ev in &self.events {
+            let (action, dev, extra) = match ev.kind {
+                FaultKind::DeviceDown { device } => ("kill", device, String::new()),
+                FaultKind::DeviceUp { device } => ("revive", device, String::new()),
+                FaultKind::LinkDegrade { device, factor } => {
+                    ("degrade", device, format!(" factor={factor:?}"))
+                }
+                FaultKind::LinkRestore { device } => ("restore", device, String::new()),
+                FaultKind::Stall { device, seconds } => {
+                    ("stall", device, format!(" secs={seconds:?}"))
+                }
+            };
+            let _ = write!(out, "{action} dev={dev}{extra}");
+            if ev.after_step > 0 {
+                let _ = write!(out, " step={}", ev.after_step);
+            }
+            if ev.at > 0.0 {
+                let _ = write!(out, " at={:?}", ev.at);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +352,61 @@ mod tests {
         let r1 = t1.peer[0][1].unwrap().bw / t1.host[0].bw;
         let r2 = t2.peer[0][1].unwrap().bw / t2.host[0].bw;
         assert!((r1 - r2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_plan_round_trips_through_text() {
+        let plan = FaultPlan::new()
+            .kill(1, 6)
+            .revive(1, 16)
+            .degrade(0, 2, 0.25)
+            .stall(1, 5, 2e-4)
+            .restore(0, 8);
+        let text = plan.render();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn fault_plan_parses_comments_and_key_order() {
+        let text = "\n# chaos script\nkill step=3 dev=1  # lose device 1\n\nstall dev=2 secs=1e-3 at=0.5\n";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { at: 0.0, after_step: 3, kind: FaultKind::DeviceDown { device: 1 } }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent {
+                at: 0.5,
+                after_step: 0,
+                kind: FaultKind::Stall { device: 2, seconds: 1e-3 }
+            }
+        );
+    }
+
+    #[test]
+    fn fault_plan_parse_rejects_malformed_lines() {
+        assert!(FaultPlan::parse("explode dev=1").is_err(), "unknown action");
+        assert!(FaultPlan::parse("kill step=2").is_err(), "missing dev=");
+        assert!(FaultPlan::parse("degrade dev=1").is_err(), "missing factor=");
+        assert!(FaultPlan::parse("stall dev=1").is_err(), "missing secs=");
+        assert!(FaultPlan::parse("kill dev=1 oops").is_err(), "bare token");
+        assert!(FaultPlan::parse("kill dev=1 color=red").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn fault_plan_validate_guards_the_fleet() {
+        assert!(FaultPlan::new().kill(1, 0).validate(2).is_ok());
+        assert!(
+            FaultPlan::new().kill(0, 0).validate(2).is_err(),
+            "device 0 runs the dense stages"
+        );
+        assert!(FaultPlan::new().kill(2, 0).validate(2).is_err(), "device out of range");
+        assert!(FaultPlan::new().degrade(1, 0, 0.0).validate(2).is_err(), "factor must be > 0");
+        assert!(FaultPlan::new().degrade(1, 0, 1.5).validate(2).is_err(), "factor must be <= 1");
+        assert!(FaultPlan::new().stall(1, 0, -1.0).validate(2).is_err(), "negative stall");
+        assert!(FaultPlan::new().validate(1).is_ok(), "empty plan is always valid");
     }
 }

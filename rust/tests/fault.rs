@@ -1,0 +1,410 @@
+//! Fault-tolerance tests (DESIGN.md §12, artifact-free).
+//!
+//! The acceptance pins of the fault-tolerance ISSUE:
+//!
+//! 1. **No-fault equivalence** — a server built with an *empty*
+//!    [`FaultPlan`] (and one whose only event never fires) serves a
+//!    ledger byte-identical to the plan-free path: tokens, byte ledger,
+//!    stall breakdown, per-request records, token-event streams.
+//! 2. **Zero token loss** — killing device 1 mid-decode on the skewed
+//!    `D = 2` workload loses no tokens, with or without a replica
+//!    budget: numerics are placement-independent, so faults move only
+//!    virtual time.
+//! 3. **Reconciler properties** — after any plan every expert has a
+//!    live effective home, re-owning is deterministic and hottest-first,
+//!    and the replica planner never exceeds its per-device budget or
+//!    targets dead devices.
+
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::{FaultReport, Report, ServeEngine};
+use beam_moe::offload::{plan_reowning, Replicator};
+use beam_moe::predict::LayerObservation;
+use beam_moe::server::{ServerBuilder, TokenEvent};
+use beam_moe::sim::topology::{FaultKind, FaultPlan};
+use beam_moe::synth;
+use beam_moe::workload::reqgen::XorShift;
+use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+fn model() -> beam_moe::StagedModel {
+    synth::tiny_model(backend(), "synthetic-tiny").unwrap()
+}
+
+fn q_bytes() -> usize {
+    synth::tiny_manifest("synthetic-tiny").q_expert_bytes(synth::SYNTH_BITS)
+}
+
+fn requests(wl: &WorkloadConfig) -> Vec<Request> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    WorkloadGen::generate(wl, &eval).unwrap()
+}
+
+/// Thrash-regime testbed: each device caches ~`payloads` bulk payloads.
+fn sys_thrash(payloads: usize) -> SystemConfig {
+    let m = model();
+    let mut sys = SystemConfig::scaled_for(&m.manifest.model, false);
+    sys.gpu_cache_bytes = payloads * q_bytes();
+    sys
+}
+
+/// Serve the workload through the session façade, returning the report
+/// and every session's token-event stream (submission order).
+fn serve_faulted(
+    sys: SystemConfig,
+    shard: Option<ShardConfig>,
+    faults: Option<FaultPlan>,
+    wl: &WorkloadConfig,
+) -> (Report, Vec<(u64, Vec<TokenEvent>)>) {
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    let mut builder = ServerBuilder::new(model()).policy(policy).system(sys);
+    if let Some(s) = shard {
+        builder = builder.shard(s);
+    }
+    if let Some(f) = faults {
+        builder = builder.faults(f);
+    }
+    let mut server = builder.build().unwrap();
+    let mut ids = Vec::new();
+    for req in requests(wl) {
+        ids.push(server.submit(req).unwrap());
+    }
+    server.run_to_completion().unwrap();
+    let streams = ids
+        .iter()
+        .map(|id| (id.0, server.session(*id).unwrap().events().to_vec()))
+        .collect();
+    (server.report(), streams)
+}
+
+fn assert_ledgers_identical(a: &Report, b: &Report, label: &str) {
+    assert_eq!(a.total_generated, b.total_generated, "{label}: tokens");
+    assert_eq!(a.decode_steps, b.decode_steps, "{label}: decode_steps");
+    assert_eq!(a.prefills, b.prefills, "{label}: prefills");
+    assert_eq!(a.virtual_seconds, b.virtual_seconds, "{label}: virtual time");
+    assert_eq!(a.bytes, b.bytes, "{label}: byte ledger");
+    assert_eq!(a.cache_hit_rate, b.cache_hit_rate, "{label}: cache hit rate");
+    let (x, y) = (&a.breakdown, &b.breakdown);
+    assert_eq!(x.attn_router_s, y.attn_router_s, "{label}: attn_router_s");
+    assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(x.transfer_weights_s, y.transfer_weights_s, "{label}: transfer_weights_s");
+    assert_eq!(x.transfer_comp_s, y.transfer_comp_s, "{label}: transfer_comp_s");
+    assert_eq!(x.transfer_act_s, y.transfer_act_s, "{label}: transfer_act_s");
+    assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
+    assert_eq!(x.transfer_repl_s, y.transfer_repl_s, "{label}: transfer_repl_s");
+    assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
+    assert_eq!(x.head_s, y.head_s, "{label}: head_s");
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(
+            (ra.id, ra.prompt_len, ra.generated),
+            (rb.id, rb.prompt_len, rb.generated),
+            "{label}: record shape"
+        );
+        assert_eq!(ra.first_token_at, rb.first_token_at, "{label}: first_token_at");
+        assert_eq!(ra.finished_at, rb.finished_at, "{label}: finished_at");
+    }
+}
+
+/// Acceptance pin: an *empty* fault plan installs nothing — the run is
+/// byte-identical to the legacy `scheduler::serve` loop, and the report
+/// carries no fault ledger.
+#[test]
+fn empty_fault_plan_is_byte_identical_to_legacy_serve() {
+    let wl = WorkloadConfig::offline(3, 32, 6);
+    let mut engine = ServeEngine::with_prefetch(
+        model(),
+        PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0),
+        sys_thrash(2),
+        PrefetchConfig::off(),
+    )
+    .unwrap();
+    let legacy = serve(&mut engine, requests(&wl)).unwrap();
+
+    let (faulted, _) = serve_faulted(sys_thrash(2), None, Some(FaultPlan::new()), &wl);
+    assert!(faulted.fault.is_none(), "empty plans install no fault state");
+    assert_ledgers_identical(&legacy, &faulted, "empty-plan");
+    assert!(legacy.total_generated > 0);
+}
+
+/// A plan whose only event never fires (step keyed far past the run) must
+/// leave the sharded ledger and the token streams byte-identical — the
+/// fault machinery observes but never perturbs — and report all zeroes.
+#[test]
+fn inert_fault_plan_leaves_the_ledger_byte_identical() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let wl = WorkloadConfig::offline(2, 32, 12);
+    let shard = || Some(ShardConfig::new(2, pairs * q_bytes()));
+
+    let (plain, plain_streams) = serve_faulted(sys_thrash(1), shard(), None, &wl);
+    let inert_plan = FaultPlan::new().kill(1, 100_000);
+    let (inert, inert_streams) = serve_faulted(sys_thrash(1), shard(), Some(inert_plan), &wl);
+
+    assert_ledgers_identical(&plain, &inert, "inert-plan");
+    assert_eq!(plain_streams, inert_streams, "inert-plan: token streams");
+    assert_eq!(
+        inert.fault,
+        Some(FaultReport::default()),
+        "an unfired plan reports an all-zero fault ledger"
+    );
+}
+
+/// Acceptance pin: killing device 1 mid-decode on the skewed `D = 2`
+/// workload with a full replica budget loses zero tokens — the streams
+/// equal the healthy fleet's — and the recovery ledger shows exactly the
+/// two dev-1-owned experts re-owned.
+#[test]
+fn killing_device_1_loses_zero_tokens_with_replicas() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let wl = WorkloadConfig::offline(2, 32, 24);
+    let shard = || Some(ShardConfig::new(2, pairs * q_bytes()));
+
+    let (healthy, healthy_streams) = serve_faulted(sys_thrash(1), shard(), None, &wl);
+    let plan = FaultPlan::new().kill(1, 6);
+    let (faulted, faulted_streams) = serve_faulted(sys_thrash(1), shard(), Some(plan), &wl);
+
+    assert_eq!(faulted.total_generated, healthy.total_generated, "zero token loss");
+    assert_eq!(faulted_streams, healthy_streams, "token streams survive the kill");
+    let f = faulted.fault.as_ref().expect("a fired plan reports its ledger");
+    assert_eq!(f.events_applied, 1);
+    assert_eq!(f.device_losses, 1);
+    assert_eq!(f.reowned_experts, 2, "device 1 owned experts 1 and 3");
+    assert!(f.recovery_stall_s >= 0.0);
+    assert!(
+        faulted.virtual_seconds >= healthy.virtual_seconds,
+        "losing half the fleet cannot speed the run up"
+    );
+}
+
+/// Acceptance pin: with a **zero** replica budget there are no landed
+/// copies to fall back to — recovery must complete purely via re-owned
+/// demand fetches, still losing no tokens.
+#[test]
+fn budget_zero_still_completes_via_reowned_demand_fetches() {
+    let wl = WorkloadConfig::offline(2, 32, 24);
+    let shard = || Some(ShardConfig::new(2, 0));
+
+    let (healthy, healthy_streams) = serve_faulted(sys_thrash(1), shard(), None, &wl);
+    let plan = FaultPlan::new().kill(1, 4);
+    let (faulted, faulted_streams) = serve_faulted(sys_thrash(1), shard(), Some(plan), &wl);
+
+    assert_eq!(faulted.total_generated, healthy.total_generated, "zero token loss");
+    assert_eq!(faulted_streams, healthy_streams, "token streams survive the kill");
+    let f = faulted.fault.as_ref().unwrap();
+    assert_eq!(f.device_losses, 1);
+    assert_eq!(f.reowned_experts, 2);
+    let s = faulted.shard.as_ref().unwrap();
+    assert_eq!(s.replicas_issued, 0, "no budget, no copies");
+    assert!(
+        s.demand_fetches_per_device[0] > 0,
+        "the survivor demand-fetched the re-owned experts"
+    );
+}
+
+/// Hot-add: reviving the killed device returns its static experts to it
+/// (partial rebalance, no full re-shard), so the revived fleet runs more
+/// execs on device 1 than the kill-only fleet.
+#[test]
+fn revived_device_rejoins_and_serves_its_static_experts() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let wl = WorkloadConfig::offline(2, 32, 24);
+    let shard = || Some(ShardConfig::new(2, pairs * q_bytes()));
+
+    let kill_only = FaultPlan::new().kill(1, 4);
+    let (dead, _) = serve_faulted(sys_thrash(1), shard(), Some(kill_only), &wl);
+    let kill_revive = FaultPlan::new().kill(1, 4).revive(1, 10);
+    let (revived, _) = serve_faulted(sys_thrash(1), shard(), Some(kill_revive), &wl);
+
+    assert_eq!(revived.total_generated, dead.total_generated, "same numerics");
+    let f = revived.fault.as_ref().unwrap();
+    assert_eq!(f.device_losses, 1);
+    assert_eq!(f.device_revivals, 1);
+    let (sd, sr) = (dead.shard.as_ref().unwrap(), revived.shard.as_ref().unwrap());
+    assert!(
+        sr.execs_per_device[1] > sd.execs_per_device[1],
+        "the revived device serves again: {} vs {} dead-fleet execs",
+        sr.execs_per_device[1],
+        sd.execs_per_device[1],
+    );
+}
+
+/// Chaos runs replay byte-for-byte: the same plan on the same workload
+/// reproduces the full ledger, the fault ledger, and every token stream.
+#[test]
+fn faulted_replay_is_deterministic() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let wl = WorkloadConfig::offline(2, 32, 16);
+    let mk = || {
+        let plan = FaultPlan::new()
+            .degrade(0, 2, 0.25)
+            .kill(1, 5)
+            .revive(1, 11)
+            .stall(1, 13, 2e-4)
+            .restore(0, 14);
+        serve_faulted(
+            sys_thrash(1),
+            Some(ShardConfig::new(2, pairs * q_bytes())),
+            Some(plan),
+            &wl,
+        )
+    };
+    let ((ra, sa), (rb, sb)) = (mk(), mk());
+    assert_ledgers_identical(&ra, &rb, "chaos replay");
+    assert_eq!(ra.fault, rb.fault, "chaos replay: fault ledger");
+    assert_eq!(sa, sb, "chaos replay: token streams");
+    let f = ra.fault.as_ref().unwrap();
+    assert_eq!(f.events_applied, 5);
+    assert_eq!(f.link_degrades, 1);
+    assert_eq!(f.stalls_injected, 1);
+}
+
+/// Reconciler property sweep: under random score tables, overlays, and
+/// liveness masks (device 0 always alive), [`plan_reowning`] reassigns
+/// exactly the orphans, hottest-first, onto live devices — and is
+/// deterministic.
+#[test]
+fn reowning_properties_hold_under_random_fleets() {
+    let mut rng = XorShift::new(0xFA17);
+    for trial in 0..200 {
+        let n_devices = 2 + (rng.next_u64() % 3) as usize; // 2..=4
+        let n_experts = n_devices + (rng.next_u64() % 6) as usize;
+        let n_layers = 1 + (rng.next_u64() % 2) as usize;
+        let scores: Vec<Vec<f64>> = (0..n_layers)
+            .map(|_| (0..n_experts).map(|_| (rng.next_u64() % 100) as f64).collect())
+            .collect();
+        let mut alive: Vec<bool> = (0..n_devices).map(|_| rng.next_f64() < 0.7).collect();
+        alive[0] = true; // device 0 runs the dense stages
+        let overlay: Vec<Option<usize>> = (0..n_experts)
+            .map(|_| {
+                (rng.next_f64() < 0.3).then(|| (rng.next_u64() as usize) % n_devices)
+            })
+            .collect();
+        let base = |e: usize| e % n_devices;
+        let label = format!("trial {trial}: alive={alive:?} overlay={overlay:?}");
+
+        let plan = plan_reowning(&scores, base, &overlay, &alive);
+        let again = plan_reowning(&scores, base, &overlay, &alive);
+        assert_eq!(plan, again, "{label}: deterministic");
+
+        // Exactly the orphans are reassigned, each onto a live device.
+        let effective = |e: usize| overlay[e].unwrap_or(e % n_devices);
+        let orphans: Vec<usize> = (0..n_experts).filter(|&e| !alive[effective(e)]).collect();
+        let mut planned: Vec<usize> = plan.iter().map(|&(e, _)| e).collect();
+        planned.sort_unstable();
+        assert_eq!(planned, orphans, "{label}: reassigns exactly the orphans");
+        for &(_, home) in &plan {
+            assert!(alive[home], "{label}: new home {home} must be alive");
+        }
+
+        // After applying the plan, every expert has a live effective home.
+        let mut patched = overlay.clone();
+        for &(e, home) in &plan {
+            patched[e] = Some(home);
+        }
+        for e in 0..n_experts {
+            let home = patched[e].unwrap_or(e % n_devices);
+            assert!(alive[home], "{label}: expert {e} still homed on dead {home}");
+        }
+
+        // Assignment order is hottest-first (summed across layers).
+        let heat = |e: usize| -> f64 { scores.iter().map(|row| row[e]).sum() };
+        for w in plan.windows(2) {
+            assert!(heat(w[0].0) >= heat(w[1].0), "{label}: not hottest-first");
+        }
+    }
+}
+
+/// Replica-planner property sweep: [`Replicator::plan_alive`] never
+/// exceeds the per-device budget, never targets dead devices or the
+/// owner, and degrades to [`Replicator::plan`] on an all-alive fleet.
+#[test]
+fn replica_budget_holds_under_random_liveness() {
+    let mut rng = XorShift::new(0x5EED);
+    for trial in 0..100 {
+        let n_devices = 2 + (rng.next_u64() % 3) as usize; // 2..=4
+        let (n_layers, n_experts) = (2usize, 6usize);
+        let bulk = 50usize;
+        let budget = (rng.next_u64() % 4) as usize * bulk; // 0..=3 payloads
+        let mut rep = Replicator::new(n_layers, n_experts, n_devices, budget);
+        for layer in 0..n_layers {
+            let probs: Vec<f32> =
+                (0..n_experts).map(|_| (rng.next_u64() % 100) as f32 / 100.0).collect();
+            for _ in 0..3 {
+                rep.observe(&LayerObservation {
+                    step: 0,
+                    layer,
+                    n_experts,
+                    top_k: 2,
+                    probs: &probs,
+                    active: &[true],
+                });
+            }
+        }
+        let mut alive: Vec<bool> = (0..n_devices).map(|_| rng.next_f64() < 0.7).collect();
+        alive[0] = true;
+        let owner = |e: usize| e % n_devices;
+        let label = format!("trial {trial}: alive={alive:?} budget={budget}");
+
+        let plan = rep.plan_alive(bulk, owner, &alive);
+        let mut used = vec![0usize; n_devices];
+        for t in &plan {
+            assert!(alive[t.device], "{label}: replica on dead device {}", t.device);
+            assert_ne!(t.device, owner(t.expert), "{label}: replica on the owner");
+            used[t.device] += bulk;
+        }
+        for (d, &u) in used.iter().enumerate() {
+            assert!(u <= budget, "{label}: device {d} over budget ({u} > {budget})");
+        }
+        if alive.iter().all(|&a| a) {
+            assert_eq!(plan, rep.plan(bulk, owner), "{label}: all-alive == plan()");
+        }
+        if alive.iter().filter(|a| **a).count() < 2 {
+            assert!(plan.is_empty(), "{label}: nowhere to replicate");
+        }
+    }
+}
+
+/// The `--fault-plan` text format round-trips, validation guards the
+/// fleet, and the builder surfaces validation errors at `build()`.
+#[test]
+fn fault_plan_surface_round_trips_and_validates() {
+    let plan = FaultPlan::new()
+        .kill(1, 6)
+        .revive(1, 16)
+        .degrade(0, 2, 0.25)
+        .stall(1, 5, 2e-4)
+        .restore(0, 8);
+    let reparsed = FaultPlan::parse(&plan.render()).unwrap();
+    assert_eq!(reparsed, plan, "render/parse round-trip");
+    assert!(plan.validate(2).is_ok());
+    assert!(plan.validate(1).is_err(), "device 1 out of a 1-device fleet");
+
+    let text = "# comment\nkill step=6 dev=1  # trailing\n\nstall secs=1e-3 dev=0\n";
+    let parsed = FaultPlan::parse(text).unwrap();
+    assert_eq!(parsed.events.len(), 2);
+    assert_eq!(parsed.events[0].kind, FaultKind::DeviceDown { device: 1 });
+    assert_eq!(parsed.events[0].after_step, 6);
+
+    // Killing device 0 is rejected at `ServerBuilder::build`.
+    let mut sys = sys_thrash(1);
+    sys.shard = ShardConfig::new(2, 0);
+    let err = ServerBuilder::new(model())
+        .policy(PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0))
+        .system(sys)
+        .faults(FaultPlan::new().kill(0, 3))
+        .build()
+        .map(|_| ())
+        .expect_err("killing device 0 must not build");
+    assert!(err.to_string().contains("device 0"), "{err}");
+}

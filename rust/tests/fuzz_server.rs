@@ -8,7 +8,7 @@
 //! `FUZZ_SEED=<seed> cargo test --test fuzz_server` (the CI seed-matrix
 //! job runs three fixed seeds).
 //!
-//! Two layers of checking:
+//! Three layers of checking:
 //!
 //! * **Differential** (`randomized_interleavings_match_legacy_serve`) —
 //!   cancels target still-queued sessions only (removed before any tick
@@ -20,14 +20,21 @@
 //!   cancels may also hit *active* sessions (no legacy equivalent);
 //!   the run must stay deterministic under replay, keep event times
 //!   monotone, and report only positive-latency completed records.
+//! * **Chaos** (`fault_interleavings_match_plain_replay`) — a seeded
+//!   [`FaultPlan`] kills (and sometimes revives) device 1 mid-run on a
+//!   `D = 2` fleet; the randomized tick/poll/reap drive must reproduce a
+//!   plain replay's full ledger, fault ledger, and token streams, and
+//!   generate exactly as many tokens as the fault-free fleet
+//!   (DESIGN.md §12: faults move virtual time, never numerics).
 
 use std::sync::Arc;
 
 use beam_moe::backend::{Backend, ReferenceBackend};
-use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
 use beam_moe::coordinator::scheduler::serve;
 use beam_moe::coordinator::{Report, ServeEngine};
 use beam_moe::server::{Server, ServerBuilder, ServerTick, SessionId, SessionStatus, TokenEvent};
+use beam_moe::sim::topology::FaultPlan;
 use beam_moe::synth;
 use beam_moe::workload::reqgen::XorShift;
 use beam_moe::workload::Request;
@@ -47,7 +54,8 @@ fn sys_offload() -> SystemConfig {
     sys
 }
 
-/// Seeds under test: `FUZZ_SEED` pins one (the CI matrix), otherwise a
+/// Seeds under test: `FUZZ_SEED` pins one (the CI matrix, which includes
+/// 64023 = 0xFA17 to exercise the fault interleavings), otherwise a
 /// small fixed battery.
 fn seeds() -> Vec<u64> {
     match std::env::var("FUZZ_SEED") {
@@ -157,6 +165,7 @@ fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
     assert_eq!(a.prefetch.issued, b.prefetch.issued, "{label}: prefetch issued");
     assert_eq!(a.prefetch.covered, b.prefetch.covered, "{label}: prefetch covered");
     assert_eq!(a.prefetch.demand_fetches, b.prefetch.demand_fetches, "{label}: demand");
+    assert_eq!(a.fault, b.fault, "{label}: fault ledger");
 }
 
 /// Drive the server with a randomized tick/poll/reap interleaving until
@@ -324,5 +333,81 @@ fn active_cancellation_interleavings_stay_sane() {
         if !ra.requests.is_empty() {
             assert!(ra.virtual_seconds > 0.0, "seed {seed:#x}");
         }
+    }
+}
+
+/// Chaos layer (DESIGN.md §12): kill — and sometimes revive — device 1
+/// mid-run on a seeded `D = 2` fleet.  The randomized tick/poll/reap
+/// interleaving must reproduce a plain replay byte-for-byte (ledger,
+/// fault ledger, token streams), and the faulted fleet must generate
+/// exactly as many tokens as its fault-free twin.
+#[test]
+fn fault_interleavings_match_plain_replay() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let q = synth::tiny_manifest("synthetic-tiny").q_expert_bytes(synth::SYNTH_BITS);
+    for seed in seeds() {
+        eprintln!("fuzz_server chaos seed = {seed:#x}");
+        let mut rng = XorShift::new(seed);
+        let sc = scenario(&mut rng);
+        let label = format!("chaos seed {seed:#x}");
+
+        // Seeded fault script: kill device 1 early; half the time bring
+        // it back a few boundaries later.  Replica budget is all-or-none.
+        let budget = if rng.next_f64() < 0.5 { pairs * q } else { 0 };
+        let kill_step = 1 + rng.next_u64() % 6;
+        let mut plan = FaultPlan::new().kill(1, kill_step);
+        if rng.next_f64() < 0.5 {
+            plan = plan.revive(1, kill_step + 1 + rng.next_u64() % 6);
+        }
+
+        let build = |faults: Option<FaultPlan>| -> Server {
+            let mut builder = ServerBuilder::new(model())
+                .policy(sc.policy.clone())
+                .system(sys_offload())
+                .shard(ShardConfig::new(2, budget))
+                .prefetch(sc.prefetch.clone());
+            if let Some(f) = faults {
+                builder = builder.faults(f);
+            }
+            builder.build().unwrap()
+        };
+
+        // Randomized drive (no cancels: every request runs to the end).
+        let mut server = build(Some(plan.clone()));
+        let mut ids = Vec::new();
+        for req in &sc.requests {
+            ids.push(server.submit(req.clone()).unwrap());
+        }
+        let reaped = drive_randomized(&mut server, &ids, &mut rng);
+        let fuzzed = server.report();
+        assert!(fuzzed.fault.is_some(), "{label}: fault ledger present");
+
+        // Plain replay with the same plan: byte-identical everything.
+        let mut plain = build(Some(plan));
+        for req in &sc.requests {
+            plain.submit(req.clone()).unwrap();
+        }
+        plain.run_to_completion().unwrap();
+        assert_reports_identical(&plain.report(), &fuzzed, &label);
+        for id in &ids {
+            let events = match reaped.iter().find(|(r, _, _)| r == id) {
+                Some((_, e, _)) => e.clone(),
+                None => server.session(*id).unwrap().events().to_vec(),
+            };
+            let b = plain.session(*id).unwrap();
+            assert_eq!(events.as_slice(), b.events(), "{label}: token stream of {id}");
+        }
+
+        // Fault-free twin: the kill cost virtual time, never tokens.
+        let mut clean = build(None);
+        for req in &sc.requests {
+            clean.submit(req.clone()).unwrap();
+        }
+        clean.run_to_completion().unwrap();
+        let clean = clean.report();
+        assert!(clean.fault.is_none(), "{label}: twin carries no fault ledger");
+        assert_eq!(clean.total_generated, fuzzed.total_generated, "{label}: zero token loss");
+        assert_eq!(clean.prefills, fuzzed.prefills, "{label}: prefills");
     }
 }

@@ -6,9 +6,11 @@
 //! * a present pin is a strict byte-for-byte contract — any ledger drift
 //!   fails with the first diverging line;
 //! * a missing pin is written on first run (self-bless) so fresh clones
-//!   bootstrap; commit the generated `*.golden.txt` files;
+//!   bootstrap — **unless** the scenario is listed in
+//!   `rust/tests/golden/STRICT`, where a missing pin is an error;
 //! * after an *intentional* ledger change, regenerate via
-//!   `cargo run --release -- figure golden --bless` and commit the diff.
+//!   `cargo run --release -- figure golden --bless` (which also marks the
+//!   scenarios strict) and commit the diff.
 
 use beam_moe::harness::golden::{check_pin, pin_path, render, scenario_names, PinStatus};
 
@@ -26,8 +28,8 @@ fn golden_scenarios_replay_deterministically() {
     }
 }
 
-/// The pin diff itself: strict when a pin is committed, self-blessing on
-/// first run (prints what to commit).
+/// The pin diff itself: strict when a pin is committed (or the scenario
+/// is marked strict), self-blessing on first run (prints what to commit).
 #[test]
 fn golden_scenarios_match_their_pins() {
     for name in scenario_names() {
@@ -46,8 +48,9 @@ fn golden_scenarios_match_their_pins() {
 }
 
 /// Scenario coverage: the corpus pins each subsystem's ledger — demand
-/// serving, speculative prefetch (§8), the budgeted allocator (§10) and
-/// the sharded fleet with replication (§11).
+/// serving, speculative prefetch (§8), the budgeted allocator (§10), the
+/// sharded fleet with replication (§11), and the chaos scenarios (§12:
+/// a mid-decode device kill and a degraded-link fleet).
 #[test]
 fn corpus_covers_the_subsystem_ledgers() {
     let all: Vec<String> = scenario_names().iter().map(|n| render(n).unwrap()).collect();
@@ -56,4 +59,10 @@ fn corpus_covers_the_subsystem_ledgers() {
     assert!(all[2].contains("alloc: budget="), "{}", all[2]);
     assert!(all[3].contains("shard: D=2"), "{}", all[3]);
     assert!(all[3].contains("bytes.replication:"), "{}", all[3]);
+    assert!(all[4].contains("shard: D=2"), "{}", all[4]);
+    assert!(all[4].contains("fault: "), "{}", all[4]);
+    assert!(all[4].contains("losses=1"), "{}", all[4]);
+    assert!(all[5].contains("shard: D=3"), "{}", all[5]);
+    assert!(all[5].contains("fault: "), "{}", all[5]);
+    assert!(all[5].contains("degrades=1"), "{}", all[5]);
 }
