@@ -295,6 +295,402 @@ pub struct PolicyConfig {
     pub alloc_budget_bytes: Option<usize>,
 }
 
+/// Priority class of a tenant (DESIGN.md §13).  Ordering is meaningful:
+/// `Interactive > Standard > Batch`, and the `slo` scheduler only ever
+/// preempts a strictly lower class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PriorityClass {
+    Batch,
+    Standard,
+    Interactive,
+}
+
+impl PriorityClass {
+    /// Deficit-round-robin weight multiplier: higher classes replenish
+    /// their token quota faster (1× / 2× / 4×).
+    pub fn weight(&self) -> u64 {
+        match self {
+            PriorityClass::Batch => 1,
+            PriorityClass::Standard => 2,
+            PriorityClass::Interactive => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "batch" => Ok(PriorityClass::Batch),
+            "standard" => Ok(PriorityClass::Standard),
+            "interactive" => Ok(PriorityClass::Interactive),
+            other => anyhow::bail!(
+                "unknown priority class `{other}` (expected batch|standard|interactive)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityClass::Batch => "batch",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Interactive => "interactive",
+        }
+    }
+}
+
+/// Request-length distribution for one tenant's prompt or output lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// Every request uses exactly this length.
+    Fixed(usize),
+    /// Bounded Pareto on `[lo, hi]` with tail index `alpha` — the
+    /// heavy-tailed length mix production traces show (short chat turns
+    /// plus occasional huge documents).
+    BoundedPareto { alpha: f64, lo: usize, hi: usize },
+}
+
+impl LengthDist {
+    /// Parse `N` or `pareto:ALPHA:LO:HI`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(rest) = s.strip_prefix("pareto:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            anyhow::ensure!(
+                parts.len() == 3,
+                "length dist `{s}`: expected pareto:ALPHA:LO:HI"
+            );
+            let alpha: f64 = parts[0]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("length dist `{s}`: bad alpha: {e}"))?;
+            let lo: usize = parts[1]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("length dist `{s}`: bad lo: {e}"))?;
+            let hi: usize = parts[2]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("length dist `{s}`: bad hi: {e}"))?;
+            anyhow::ensure!(alpha.is_finite() && alpha > 0.0, "length dist `{s}`: alpha must be finite and > 0");
+            anyhow::ensure!(lo >= 1, "length dist `{s}`: lo must be >= 1");
+            anyhow::ensure!(hi >= lo, "length dist `{s}`: hi must be >= lo");
+            Ok(LengthDist::BoundedPareto { alpha, lo, hi })
+        } else {
+            let n: usize = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("length dist `{s}`: expected N or pareto:ALPHA:LO:HI: {e}"))?;
+            anyhow::ensure!(n >= 1, "length dist `{s}`: length must be >= 1");
+            Ok(LengthDist::Fixed(n))
+        }
+    }
+
+    /// Mean of the distribution (used to derive deadline defaults).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(n) => n as f64,
+            LengthDist::BoundedPareto { alpha, lo, hi } => {
+                // Bounded-Pareto mean; alpha == 1 has a log closed form.
+                let (l, h) = (lo as f64, hi as f64);
+                if (alpha - 1.0).abs() < 1e-9 {
+                    (h * l / (h - l).max(1e-12)) * (h / l).ln()
+                } else {
+                    let num = l.powf(alpha) / (1.0 - (l / h).powf(alpha));
+                    num * (alpha / (alpha - 1.0))
+                        * (1.0 / l.powf(alpha - 1.0) - 1.0 / h.powf(alpha - 1.0))
+                }
+            }
+        }
+    }
+}
+
+/// Arrival process for one tenant's request stream.  All processes are
+/// driven by the tenant's own deterministic xorshift substream, so mixes
+/// replay bit-exact (DESIGN.md §13).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson at `rate` req/s of virtual time.
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson process: exponential
+    /// inter-arrivals at the current state's rate, flipping state with
+    /// probability `p_flip` after each arrival — calm stretches
+    /// punctuated by bursts.
+    Mmpp { calm_rate: f64, burst_rate: f64, p_flip: f64 },
+    /// Diurnal (cosine-modulated) Poisson: rate(t) ramps between `base`
+    /// and `peak` over `period` virtual seconds.
+    Diurnal { base_rate: f64, peak_rate: f64, period: f64 },
+}
+
+impl ArrivalKind {
+    /// Parse `RATE`, `mmpp:CALM:BURST:PFLIP` or `diurnal:BASE:PEAK:PERIOD`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        fn f(part: &str, what: &str, ctx: &str) -> anyhow::Result<f64> {
+            let v: f64 = part
+                .parse()
+                .map_err(|e| anyhow::anyhow!("arrival `{ctx}`: bad {what}: {e}"))?;
+            anyhow::ensure!(v.is_finite(), "arrival `{ctx}`: {what} must be finite");
+            Ok(v)
+        }
+        let kind = if let Some(rest) = s.strip_prefix("mmpp:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            anyhow::ensure!(parts.len() == 3, "arrival `{s}`: expected mmpp:CALM:BURST:PFLIP");
+            ArrivalKind::Mmpp {
+                calm_rate: f(parts[0], "calm rate", s)?,
+                burst_rate: f(parts[1], "burst rate", s)?,
+                p_flip: f(parts[2], "p_flip", s)?,
+            }
+        } else if let Some(rest) = s.strip_prefix("diurnal:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            anyhow::ensure!(parts.len() == 3, "arrival `{s}`: expected diurnal:BASE:PEAK:PERIOD");
+            ArrivalKind::Diurnal {
+                base_rate: f(parts[0], "base rate", s)?,
+                peak_rate: f(parts[1], "peak rate", s)?,
+                period: f(parts[2], "period", s)?,
+            }
+        } else {
+            ArrivalKind::Poisson { rate: f(s, "rate", s)? }
+        };
+        kind.validate()?;
+        Ok(kind)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            ArrivalKind::Poisson { rate } => {
+                anyhow::ensure!(rate.is_finite() && rate > 0.0, "poisson rate must be finite and > 0 (got {rate})");
+            }
+            ArrivalKind::Mmpp { calm_rate, burst_rate, p_flip } => {
+                anyhow::ensure!(calm_rate.is_finite() && calm_rate > 0.0, "mmpp calm rate must be finite and > 0 (got {calm_rate})");
+                anyhow::ensure!(burst_rate.is_finite() && burst_rate > 0.0, "mmpp burst rate must be finite and > 0 (got {burst_rate})");
+                anyhow::ensure!((0.0..=1.0).contains(&p_flip), "mmpp p_flip must be in [0, 1] (got {p_flip})");
+            }
+            ArrivalKind::Diurnal { base_rate, peak_rate, period } => {
+                anyhow::ensure!(base_rate.is_finite() && base_rate > 0.0, "diurnal base rate must be finite and > 0 (got {base_rate})");
+                anyhow::ensure!(peak_rate.is_finite() && peak_rate >= base_rate, "diurnal peak rate must be finite and >= base rate (got {peak_rate})");
+                anyhow::ensure!(period.is_finite() && period > 0.0, "diurnal period must be finite and > 0 (got {period})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Scale every rate by `factor` (offered-load sweeps).
+    pub fn scaled(&self, factor: f64) -> Self {
+        match *self {
+            ArrivalKind::Poisson { rate } => ArrivalKind::Poisson { rate: rate * factor },
+            ArrivalKind::Mmpp { calm_rate, burst_rate, p_flip } => ArrivalKind::Mmpp {
+                calm_rate: calm_rate * factor,
+                burst_rate: burst_rate * factor,
+                p_flip,
+            },
+            ArrivalKind::Diurnal { base_rate, peak_rate, period } => ArrivalKind::Diurnal {
+                base_rate: base_rate * factor,
+                peak_rate: peak_rate * factor,
+                period,
+            },
+        }
+    }
+}
+
+/// One tenant of the multi-tenant traffic mix (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub arrival: ArrivalKind,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    pub class: PriorityClass,
+    /// TTFT deadline in virtual seconds; `None` = no SLO (best-effort).
+    pub deadline_s: Option<f64>,
+    /// Extra DRR weight multiplier on top of the class weight.
+    pub weight: f64,
+    /// Queue-depth cap for this tenant; submissions past it are shed
+    /// with `SubmitError::Overloaded`.  `None` = unbounded.
+    pub queue_limit: Option<usize>,
+    /// Shed queued requests whose deadline already passed instead of
+    /// admitting them late (the `slo` scheduler only).
+    pub shed_expired: bool,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, rate: f64, class: PriorityClass) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            arrival: ArrivalKind::Poisson { rate },
+            prompt_len: LengthDist::Fixed(16),
+            output_len: LengthDist::Fixed(8),
+            class,
+            deadline_s: None,
+            weight: 1.0,
+            queue_limit: None,
+            shed_expired: false,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "tenant name must be non-empty");
+        self.arrival
+            .validate()
+            .map_err(|e| anyhow::anyhow!("tenant `{}`: {e}", self.name))?;
+        if let Some(d) = self.deadline_s {
+            anyhow::ensure!(d.is_finite() && d > 0.0, "tenant `{}`: deadline must be finite and > 0 (got {d})", self.name);
+        }
+        anyhow::ensure!(self.weight.is_finite() && self.weight > 0.0, "tenant `{}`: weight must be finite and > 0 (got {})", self.name, self.weight);
+        if let Some(q) = self.queue_limit {
+            anyhow::ensure!(q > 0, "tenant `{}`: queue limit must be > 0", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// A full tenant mix: the traffic side of the scheduling subsystem.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMix {
+    pub tenants: Vec<TenantSpec>,
+    /// Master seed; each tenant derives an independent substream.
+    pub seed: u64,
+}
+
+impl TenantMix {
+    /// Parse the line-based tenants file (same style as `FaultPlan`):
+    ///
+    /// ```text
+    /// # comment
+    /// seed 7
+    /// tenant gold class=interactive rate=80 prompt=32 output=8 deadline=0.02 weight=4 queue=64 shed_expired
+    /// tenant bulk class=batch rate=mmpp:20:200:0.1 prompt=pareto:1.2:8:64 output=pareto:1.2:4:32
+    /// ```
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut mix = TenantMix { tenants: Vec::new(), seed: 0xBEA4 };
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let ctx = || format!("tenants file line {}", lineno + 1);
+            let mut words = line.split_whitespace();
+            match words.next() {
+                Some("seed") => {
+                    let v = words
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("{}: seed needs a value", ctx()))?;
+                    mix.seed = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("{}: bad seed `{v}`: {e}", ctx()))?;
+                }
+                Some("tenant") => {
+                    let name = words
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("{}: tenant needs a name", ctx()))?;
+                    let mut spec = TenantSpec::new(name, 1.0, PriorityClass::Standard);
+                    for w in words {
+                        if w == "shed_expired" {
+                            spec.shed_expired = true;
+                            continue;
+                        }
+                        let (key, val) = w.split_once('=').ok_or_else(|| {
+                            anyhow::anyhow!("{}: expected key=value, got `{w}`", ctx())
+                        })?;
+                        match key {
+                            "class" => spec.class = PriorityClass::parse(val)
+                                .map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?,
+                            "rate" | "arrival" => spec.arrival = ArrivalKind::parse(val)
+                                .map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?,
+                            "prompt" => spec.prompt_len = LengthDist::parse(val)
+                                .map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?,
+                            "output" => spec.output_len = LengthDist::parse(val)
+                                .map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?,
+                            "deadline" => {
+                                let d: f64 = val.parse().map_err(|e| {
+                                    anyhow::anyhow!("{}: bad deadline `{val}`: {e}", ctx())
+                                })?;
+                                spec.deadline_s = Some(d);
+                            }
+                            "weight" => {
+                                spec.weight = val.parse().map_err(|e| {
+                                    anyhow::anyhow!("{}: bad weight `{val}`: {e}", ctx())
+                                })?;
+                            }
+                            "queue" => {
+                                let q: usize = val.parse().map_err(|e| {
+                                    anyhow::anyhow!("{}: bad queue limit `{val}`: {e}", ctx())
+                                })?;
+                                spec.queue_limit = Some(q);
+                            }
+                            other => anyhow::bail!("{}: unknown tenant key `{other}`", ctx()),
+                        }
+                    }
+                    spec.validate().map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?;
+                    mix.tenants.push(spec);
+                }
+                Some(other) => anyhow::bail!("{}: unknown directive `{other}`", ctx()),
+                None => unreachable!(),
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &mix.tenants {
+            anyhow::ensure!(seen.insert(t.name.clone()), "duplicate tenant name `{}`", t.name);
+        }
+        Ok(mix)
+    }
+
+    /// Validate every tenant spec plus mix-level invariants (duplicate
+    /// names).  `parse` already enforces this; programmatically built
+    /// mixes go through here at `ServerBuilder::build`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &self.tenants {
+            t.validate()?;
+            anyhow::ensure!(seen.insert(t.name.clone()), "duplicate tenant name `{}`", t.name);
+        }
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+}
+
+/// Scheduler tuning knobs (DESIGN.md §13).
+///
+/// `scheduler` names a constructor in the open `SchedulerRegistry`
+/// (`sched::registry`) — the same seam idiom as `PolicyConfig::policy`.
+/// `"fifo"` reproduces the legacy `Batcher` admission order exactly.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Registry name of the scheduler (`fifo`, `slo`, or anything
+    /// registered at runtime).
+    pub scheduler: String,
+    /// Deficit-round-robin replenishment quantum, tokens per visit
+    /// (multiplied by class/tenant weight before crediting).
+    pub quantum_tokens: u64,
+    /// A queued request counts as deadline-at-risk when less than
+    /// `preempt_margin_frac × deadline` of its window remains.
+    pub preempt_margin_frac: f64,
+    /// Max preemptions one session may suffer before it is pinned in
+    /// its slot (anti-livelock).
+    pub max_preemptions: u32,
+}
+
+impl SchedConfig {
+    pub fn new(scheduler: &str) -> Self {
+        SchedConfig {
+            scheduler: scheduler.to_string(),
+            quantum_tokens: 32,
+            preempt_margin_frac: 0.5,
+            max_preemptions: 2,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.quantum_tokens > 0, "sched quantum_tokens must be > 0");
+        anyhow::ensure!(
+            self.preempt_margin_frac.is_finite() && (0.0..=1.0).contains(&self.preempt_margin_frac),
+            "sched preempt_margin_frac must be in [0, 1] (got {})",
+            self.preempt_margin_frac
+        );
+        Ok(())
+    }
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self::new("fifo")
+    }
+}
+
 impl PolicyConfig {
     pub fn new(policy: &str, bits: u8, top_n: usize) -> Self {
         PolicyConfig {
@@ -315,5 +711,110 @@ impl PolicyConfig {
         self.restore_positions
             .clone()
             .unwrap_or_else(|| (0..self.top_n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_class_orders_and_weights() {
+        assert!(PriorityClass::Interactive > PriorityClass::Standard);
+        assert!(PriorityClass::Standard > PriorityClass::Batch);
+        assert_eq!(PriorityClass::Interactive.weight(), 4);
+        assert_eq!(PriorityClass::Batch.weight(), 1);
+        assert_eq!(PriorityClass::parse("interactive").unwrap(), PriorityClass::Interactive);
+        let err = PriorityClass::parse("gold").unwrap_err().to_string();
+        assert!(err.contains("gold"), "{err}");
+    }
+
+    #[test]
+    fn length_dist_parses_fixed_and_pareto() {
+        assert_eq!(LengthDist::parse("16").unwrap(), LengthDist::Fixed(16));
+        assert_eq!(
+            LengthDist::parse("pareto:1.2:8:64").unwrap(),
+            LengthDist::BoundedPareto { alpha: 1.2, lo: 8, hi: 64 }
+        );
+        assert!(LengthDist::parse("0").is_err());
+        assert!(LengthDist::parse("pareto:0:8:64").is_err());
+        assert!(LengthDist::parse("pareto:1.2:64:8").is_err());
+        assert!(LengthDist::parse("pareto:1.2:8").is_err());
+    }
+
+    #[test]
+    fn length_dist_mean_is_sane() {
+        assert_eq!(LengthDist::Fixed(10).mean(), 10.0);
+        let m = LengthDist::BoundedPareto { alpha: 1.2, lo: 8, hi: 64 }.mean();
+        assert!(m > 8.0 && m < 64.0, "mean {m} outside bounds");
+    }
+
+    #[test]
+    fn arrival_kind_parses_and_validates() {
+        assert_eq!(ArrivalKind::parse("80").unwrap(), ArrivalKind::Poisson { rate: 80.0 });
+        assert_eq!(
+            ArrivalKind::parse("mmpp:20:200:0.1").unwrap(),
+            ArrivalKind::Mmpp { calm_rate: 20.0, burst_rate: 200.0, p_flip: 0.1 }
+        );
+        assert_eq!(
+            ArrivalKind::parse("diurnal:10:100:2.0").unwrap(),
+            ArrivalKind::Diurnal { base_rate: 10.0, peak_rate: 100.0, period: 2.0 }
+        );
+        assert!(ArrivalKind::parse("0").is_err());
+        assert!(ArrivalKind::parse("-5").is_err());
+        assert!(ArrivalKind::parse("mmpp:20:200:1.5").is_err());
+        assert!(ArrivalKind::parse("diurnal:100:10:2.0").is_err());
+        let scaled = ArrivalKind::parse("mmpp:20:200:0.1").unwrap().scaled(2.0);
+        assert_eq!(scaled, ArrivalKind::Mmpp { calm_rate: 40.0, burst_rate: 400.0, p_flip: 0.1 });
+    }
+
+    #[test]
+    fn tenant_mix_parses_full_file() {
+        let text = "\
+# gold pays for latency
+seed 7
+tenant gold class=interactive rate=80 prompt=32 output=8 deadline=0.02 weight=4 queue=64 shed_expired
+tenant bulk class=batch rate=mmpp:20:200:0.1 prompt=pareto:1.2:8:64 output=pareto:1.2:4:32
+";
+        let mix = TenantMix::parse(text).unwrap();
+        assert_eq!(mix.seed, 7);
+        assert_eq!(mix.tenants.len(), 2);
+        let gold = &mix.tenants[0];
+        assert_eq!(gold.name, "gold");
+        assert_eq!(gold.class, PriorityClass::Interactive);
+        assert_eq!(gold.deadline_s, Some(0.02));
+        assert_eq!(gold.weight, 4.0);
+        assert_eq!(gold.queue_limit, Some(64));
+        assert!(gold.shed_expired);
+        let bulk = &mix.tenants[1];
+        assert_eq!(bulk.class, PriorityClass::Batch);
+        assert!(matches!(bulk.arrival, ArrivalKind::Mmpp { .. }));
+        assert!(matches!(bulk.prompt_len, LengthDist::BoundedPareto { .. }));
+        assert!(!bulk.shed_expired);
+    }
+
+    #[test]
+    fn tenant_mix_rejects_nonsense_with_line_context() {
+        let err = TenantMix::parse("tenant a class=vip\n").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("vip"), "{err}");
+        let err = TenantMix::parse("tenant a\ntenant a\n").unwrap_err().to_string();
+        assert!(err.contains("duplicate tenant name"), "{err}");
+        let err = TenantMix::parse("budget 5\n").unwrap_err().to_string();
+        assert!(err.contains("unknown directive"), "{err}");
+        let err = TenantMix::parse("tenant a rate=0\n").unwrap_err().to_string();
+        assert!(err.contains("> 0"), "{err}");
+        let err = TenantMix::parse("tenant a queue=0\n").unwrap_err().to_string();
+        assert!(err.contains("queue limit"), "{err}");
+    }
+
+    #[test]
+    fn sched_config_validates_knobs() {
+        assert!(SchedConfig::default().validate().is_ok());
+        let mut c = SchedConfig::new("slo");
+        c.quantum_tokens = 0;
+        assert!(c.validate().is_err());
+        let mut c = SchedConfig::new("slo");
+        c.preempt_margin_frac = 1.5;
+        assert!(c.validate().is_err());
     }
 }

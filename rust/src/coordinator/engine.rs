@@ -1093,14 +1093,18 @@ impl ServeEngine {
         Ok(())
     }
 
-    /// Prefill one request into `slot` (its own virtual step).
-    pub fn prefill(&mut self, slot: usize, req: &Request) -> Result<()> {
+    /// The full-sequence forward pass behind [`ServeEngine::prefill`]
+    /// and [`ServeEngine::resume`]: embed → per-layer attention/KV
+    /// install/router/MoE → head on the last position → `end_step`.
+    /// Returns the next token sampled for `slot`.  The caller owns slot
+    /// bookkeeping (admit/emit/counters) so both entry points share one
+    /// byte-identical op sequence.
+    fn prefill_pass(&mut self, slot: usize, tokens: &[i32]) -> Result<i32> {
         let m = self.model.manifest.model.clone();
-        let plen = req.prompt.len().min(m.t_prefill);
-        self.state.admit(slot, req, self.clock.now());
+        let plen = tokens.len().min(m.t_prefill);
         let step_t0 = self.clock.now();
 
-        let mut toks = req.prompt[..plen].to_vec();
+        let mut toks = tokens[..plen].to_vec();
         toks.resize(m.t_prefill, 0);
         let mut x = self.model.embed(&toks, true)?;
         self.devices[0].gpu.acquire(step_t0, self.cost.embed(plen).seconds);
@@ -1125,7 +1129,7 @@ impl ServeEngine {
             x = self.model.make_x(m.t_prefill, &xh)?;
         }
 
-        // First generated token from the last prompt position's hidden.
+        // Next token from the last position's hidden state.
         let xh = x.to_f32_vec()?;
         let mut batch_x = vec![0f32; m.b_max * m.d_model];
         batch_x[slot * m.d_model..(slot + 1) * m.d_model]
@@ -1135,9 +1139,15 @@ impl ServeEngine {
         self.devices[0].gpu.acquire(self.clock.now(), self.cost.head(1).seconds);
 
         self.end_step();
+        Ok(argmax(&logits[slot * m.vocab..(slot + 1) * m.vocab]) as i32)
+    }
+
+    /// Prefill one request into `slot` (its own virtual step).
+    pub fn prefill(&mut self, slot: usize, req: &Request) -> Result<()> {
+        self.state.admit(slot, req, self.clock.now());
+        let next = self.prefill_pass(slot, &req.prompt)?;
         let now = self.clock.now();
         let seq = self.state.slots[slot].as_mut().unwrap();
-        let next = argmax(&logits[slot * m.vocab..(slot + 1) * m.vocab]) as i32;
         seq.tokens.push(next);
         seq.first_token_at = Some(now);
         self.emitted.push(EmittedToken {
@@ -1146,6 +1156,33 @@ impl ServeEngine {
             index: 0,
             at: now,
             last: seq.done(),
+        });
+        self.total_generated += 1;
+        self.prefills += 1;
+        Ok(())
+    }
+
+    /// Re-admit a preempted sequence into `slot` (DESIGN.md §13): a
+    /// fresh prefill pass over prompt *plus* already-generated tokens
+    /// rebuilds the KV cache, then one more token is sampled and
+    /// emitted.  `first_token_at` is preserved — TTFT was already paid.
+    /// Like `prefill`, a sequence that completes here keeps its slot
+    /// until the next decode step releases it and records completion.
+    pub(crate) fn resume(&mut self, slot: usize, seq: ActiveSeq) -> Result<()> {
+        debug_assert!(self.state.slots[slot].is_none(), "resume into an occupied slot");
+        let tokens = seq.tokens.clone();
+        self.state.slots[slot] = Some(seq);
+        let next = self.prefill_pass(slot, &tokens)?;
+        let now = self.clock.now();
+        let seq = self.state.slots[slot].as_mut().unwrap();
+        seq.tokens.push(next);
+        let done = seq.done();
+        self.emitted.push(EmittedToken {
+            request_id: seq.request_id,
+            token: next,
+            index: seq.generated() - 1,
+            at: now,
+            last: done,
         });
         self.total_generated += 1;
         self.prefills += 1;
@@ -1451,6 +1488,10 @@ impl ServeEngine {
                 execs_per_device: self.devices.iter().map(|d| d.execs).collect(),
             }),
             fault: self.faults.as_ref().map(|f| f.report.clone()),
+            // The scheduling ledger is the Server's to attach (the
+            // engine has no tenancy notion); `None` here keeps the
+            // legacy report byte-identical.
+            sched: None,
         }
     }
 }

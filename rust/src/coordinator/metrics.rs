@@ -203,8 +203,94 @@ impl FaultReport {
     }
 }
 
+/// Per-tenant row of [`SchedReport`]: admission accounting, quota
+/// ledger, and tail latencies for one tenant of the mix.
+#[derive(Debug, Default, Clone)]
+pub struct TenantLat {
+    pub name: String,
+    /// Priority-class name (`batch`/`standard`/`interactive`).
+    pub class: String,
+    pub submitted: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    /// Requests that generated their full token budget.
+    pub completed: u64,
+    /// Completed requests whose TTFT met the tenant's deadline (always 0
+    /// when the tenant has no deadline).
+    pub deadline_hits: u64,
+    pub deadline_misses: u64,
+    /// DRR quota tokens credited to / debited from this tenant.
+    pub quota_granted: u64,
+    pub quota_spent: u64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+}
+
+impl TenantLat {
+    pub fn summary(&self) -> String {
+        // `{:?}` floats: the golden pins diff this as a raw string.
+        format!(
+            "{}[{}] sub={} adm={} shed={} done={} dl={}:{} quota={}/{} ttft p50/p99 {:?}/{:?} tpot {:?}/{:?}",
+            self.name,
+            self.class,
+            self.submitted,
+            self.admitted,
+            self.shed,
+            self.completed,
+            self.deadline_hits,
+            self.deadline_misses,
+            self.quota_spent,
+            self.quota_granted,
+            self.ttft_p50,
+            self.ttft_p99,
+            self.tpot_p50,
+            self.tpot_p99,
+        )
+    }
+}
+
+/// Scheduling outcome of a serve run (DESIGN.md §13); attached to
+/// [`Report::sched`] only by schedulers that track tenancy (the `slo`
+/// scheduler) — `fifo` runs report `None`, keeping legacy reports
+/// byte-identical.
+#[derive(Debug, Default, Clone)]
+pub struct SchedReport {
+    /// Registry name of the scheduler that produced this ledger.
+    pub scheduler: String,
+    pub submitted: u64,
+    pub admitted: u64,
+    /// Requests refused or dropped by load shedding (queue caps + expired
+    /// deadlines) — reported, never hidden.
+    pub shed: u64,
+    /// Decode-slot preemptions (sessions returned to the queue).
+    pub preemptions: u64,
+    /// Preempted sessions re-admitted into a slot.
+    pub resumes: u64,
+    pub deadline_hits: u64,
+    pub deadline_misses: u64,
+    pub per_tenant: Vec<TenantLat>,
+}
+
+impl SchedReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} sub={} adm={} shed={} preempt={} resume={} dl={}:{}",
+            self.scheduler,
+            self.submitted,
+            self.admitted,
+            self.shed,
+            self.preemptions,
+            self.resumes,
+            self.deadline_hits,
+            self.deadline_misses,
+        )
+    }
+}
+
 /// Nearest-rank percentile of an ascending-sorted sample (0 when empty).
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -239,6 +325,9 @@ pub struct Report {
     /// Fault-injection/recovery ledger (DESIGN.md §12); `None` unless a
     /// non-empty `FaultPlan` was installed.
     pub fault: Option<FaultReport>,
+    /// Scheduling/tenancy ledger (DESIGN.md §13); `None` for the legacy
+    /// `fifo` path, so pre-scheduler reports are unchanged.
+    pub sched: Option<SchedReport>,
 }
 
 impl Report {

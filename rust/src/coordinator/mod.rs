@@ -17,4 +17,4 @@ pub mod scheduler;
 pub mod state;
 
 pub use engine::{CacheView, EngineStats, ServeEngine};
-pub use metrics::{FaultReport, Report, ShardReport, StepBreakdown};
+pub use metrics::{FaultReport, Report, SchedReport, ShardReport, StepBreakdown, TenantLat};

@@ -1,0 +1,251 @@
+//! `beam bench` — the artifact-free synthetic benchmark suite.
+//!
+//! A pinned set of end-to-end and hot-path benchmarks over the built-in
+//! synthetic model: no artifacts, no network, deterministic work (the
+//! wall-clock is the only nondeterministic output).  `beam bench --json`
+//! emits one machine-readable record per benchmark for trend tracking;
+//! the committed baseline lives in `rust/benches/BENCH_7.json` and is
+//! refreshed with `beam bench --json --out rust/benches/BENCH_7.json`
+//! on a quiet machine.
+//!
+//! The suite is intentionally small and stable: names are part of the
+//! baseline schema, so add new benchmarks rather than renaming old ones.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, ReferenceBackend};
+use crate::config::{
+    ArrivalKind, LengthDist, PolicyConfig, PriorityClass, SchedConfig, SystemConfig, TenantMix,
+    TenantSpec,
+};
+use crate::jsonx::{self, Value};
+use crate::sched::{SchedDecision, Scheduler, SloScheduler};
+use crate::server::{ServerBuilder, SubmitError};
+use crate::synth;
+use crate::workload::{TrafficGen, WorkloadConfig, WorkloadGen};
+
+/// One benchmark's outcome: wall time over `iters` repetitions of the
+/// unit of work, plus an optional benchmark-specific throughput metric.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Units of work timed (requests generated, decisions made, tokens
+    /// served — see each benchmark).
+    pub iters: u64,
+    pub wall_s: f64,
+    /// `iters / wall_s`.
+    pub per_second: f64,
+    /// Benchmark-specific metric name + value (e.g. virtual tok/s).
+    pub metric: Option<(String, f64)>,
+}
+
+impl BenchRecord {
+    fn new(name: &str, iters: u64, wall_s: f64) -> Self {
+        BenchRecord {
+            name: name.to_string(),
+            iters,
+            wall_s,
+            per_second: iters as f64 / wall_s.max(1e-12),
+            metric: None,
+        }
+    }
+
+    fn with_metric(mut self, name: &str, value: f64) -> Self {
+        self.metric = Some((name.to_string(), value));
+        self
+    }
+
+    pub fn summary(&self) -> String {
+        let metric = match &self.metric {
+            Some((n, v)) => format!(" | {n} {v:.2}"),
+            None => String::new(),
+        };
+        format!(
+            "{:<24} {:>8} iters in {:>8.4}s = {:>12.1}/s{metric}",
+            self.name, self.iters, self.wall_s, self.per_second,
+        )
+    }
+}
+
+/// The two-tenant mix every scheduling benchmark uses (mirrors the
+/// `figure load` shape: an interactive deadline tenant over a bursty
+/// batch tenant).
+fn bench_mix() -> TenantMix {
+    let mut gold = TenantSpec::new("gold", 60.0, PriorityClass::Interactive);
+    gold.prompt_len = LengthDist::Fixed(24);
+    gold.output_len = LengthDist::Fixed(6);
+    gold.deadline_s = Some(0.5);
+    gold.weight = 4.0;
+    let mut bulk = TenantSpec::new("bulk", 1.0, PriorityClass::Batch);
+    bulk.arrival = ArrivalKind::Mmpp { calm_rate: 20.0, burst_rate: 120.0, p_flip: 0.2 };
+    bulk.prompt_len = LengthDist::BoundedPareto { alpha: 1.2, lo: 12, hi: 48 };
+    bulk.output_len = LengthDist::BoundedPareto { alpha: 1.3, lo: 3, hi: 12 };
+    TenantMix { tenants: vec![gold, bulk], seed: 0xBEA4 }
+}
+
+/// Tenant-tagged traffic generation throughput (requests/s wall).
+fn bench_traffic(n: usize) -> Result<BenchRecord> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let store = synth::tiny_eval_store(&dims)?;
+    let mix = bench_mix();
+    let start = Instant::now();
+    let reqs = TrafficGen::generate(&mix, n, &store)?;
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(reqs.len() == n, "traffic bench generated {} of {n}", reqs.len());
+    Ok(BenchRecord::new("traffic_gen", n as u64, wall))
+}
+
+/// `SloScheduler` decision throughput: push a tagged backlog, then drive
+/// `decide` against a synthetic slot picture until the queue drains
+/// (counts decisions/s — the per-tick scheduler overhead bound).
+fn bench_slo_decide(n: usize) -> Result<BenchRecord> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let store = synth::tiny_eval_store(&dims)?;
+    let mix = bench_mix();
+    let traffic = TrafficGen::generate(&mix, n, &store)?;
+    let cfg = SchedConfig::new("slo");
+    let mut sched = SloScheduler::new(&cfg, &mix)?;
+    let start = Instant::now();
+    for t in &traffic {
+        sched
+            .push(t.request.clone(), Some(t.tenant))
+            .ok()
+            .context("bench mix has no queue caps")?;
+    }
+    // Admit everything through free slot 0 at a late enough clock that
+    // every arrival is runnable; each admission is one decide call.
+    let mut decisions = 0u64;
+    let now = traffic.last().map(|t| t.request.arrival + 1.0).unwrap_or(1.0);
+    let mut admitted = 0usize;
+    while sched.pending() > 0 {
+        match sched.decide(now, Some(0), &[]) {
+            SchedDecision::Prefill(_, _) | SchedDecision::Shed(_) => admitted += 1,
+            other => anyhow::bail!("slo decide bench expected admissions, got {other:?}"),
+        }
+        decisions += 1;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(admitted == n, "slo decide bench drained {admitted} of {n}");
+    Ok(BenchRecord::new("slo_decide", decisions, wall))
+}
+
+/// End-to-end serve throughput on the synthetic model, untagged fifo:
+/// wall tokens/s, with virtual tok/s as the metric.
+fn bench_serve_fifo(n_req: usize, out_len: usize) -> Result<BenchRecord> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+    let eval = synth::tiny_eval_store(&dims)?;
+    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_req, 32, out_len), &eval)?;
+    let start = Instant::now();
+    for req in reqs {
+        server.submit(req)?;
+    }
+    let report = server.run_to_completion()?;
+    let wall = start.elapsed().as_secs_f64();
+    Ok(BenchRecord::new("serve_fifo", report.total_generated as u64, wall)
+        .with_metric("virtual_tok_per_s", report.tokens_per_second()))
+}
+
+/// End-to-end serve throughput through the `slo` discipline on tagged
+/// two-tenant traffic (exercises DRR, boosts, preemption and resume).
+fn bench_serve_slo(n_req: usize) -> Result<BenchRecord> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    let mix = bench_mix();
+    let mut server = ServerBuilder::new(model)
+        .policy(policy)
+        .system(sys)
+        .scheduler("slo")
+        .tenants(mix.clone())
+        .build()?;
+    let eval = synth::tiny_eval_store(&dims)?;
+    let traffic = TrafficGen::generate(&mix, n_req, &eval)?;
+    let start = Instant::now();
+    for t in traffic {
+        match server.submit_for_tenant(t.request, Some(t.tenant)) {
+            Ok(_) | Err(SubmitError::Overloaded(_)) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let report = server.run_to_completion()?;
+    let wall = start.elapsed().as_secs_f64();
+    Ok(BenchRecord::new("serve_slo", report.total_generated as u64, wall)
+        .with_metric("virtual_tok_per_s", report.tokens_per_second()))
+}
+
+/// Run the pinned suite.  `quick` shrinks every size (the test/CI
+/// configuration); the default sizes are the baseline configuration.
+pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
+    let (traffic_n, decide_n, serve_req, out_len, slo_req) =
+        if quick { (200, 50, 2, 4, 4) } else { (5000, 500, 6, 16, 12) };
+    Ok(vec![
+        bench_traffic(traffic_n)?,
+        bench_slo_decide(decide_n)?,
+        bench_serve_fifo(serve_req, out_len)?,
+        bench_serve_slo(slo_req)?,
+    ])
+}
+
+/// Render records as the `BENCH_*.json` schema.
+pub fn to_json(records: &[BenchRecord], quick: bool) -> Value {
+    let recs: Vec<Value> = records
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("name", Value::Str(r.name.clone())),
+                ("iters", Value::Num(r.iters as f64)),
+                ("wall_s", Value::Num(r.wall_s)),
+                ("per_second", Value::Num(r.per_second)),
+            ];
+            if let Some((n, v)) = &r.metric {
+                pairs.push(("metric_name", Value::Str(n.clone())));
+                pairs.push(("metric_value", Value::Num(*v)));
+            }
+            jsonx::obj(pairs)
+        })
+        .collect();
+    jsonx::obj(vec![
+        ("schema", Value::Str("beam-bench-v1".to_string())),
+        ("suite", Value::Str(if quick { "quick" } else { "default" }.to_string())),
+        ("records", Value::Arr(recs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_runs_and_serializes() {
+        let records = run_suite(true).unwrap();
+        let names: Vec<&str> = records.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["traffic_gen", "slo_decide", "serve_fifo", "serve_slo"]);
+        for r in &records {
+            assert!(r.iters > 0, "{}: no work timed", r.name);
+            assert!(r.wall_s >= 0.0 && r.per_second > 0.0, "{}: bad timing", r.name);
+            assert!(!r.summary().is_empty());
+        }
+        let json = to_json(&records, true).to_string();
+        let v = crate::jsonx::Value::parse(&json).unwrap();
+        assert_eq!(v.get("schema").unwrap().str().unwrap(), "beam-bench-v1");
+        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn serve_benches_carry_virtual_throughput() {
+        let r = bench_serve_fifo(1, 2).unwrap();
+        let (name, v) = r.metric.expect("serve bench must report virtual tok/s");
+        assert_eq!(name, "virtual_tok_per_s");
+        assert!(v > 0.0);
+    }
+}

@@ -1342,6 +1342,306 @@ pub fn fault(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Load sweep — SLO-aware scheduling vs fifo under overload (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Byte-identity check between two runs of the same workload: the full
+/// byte ledger, the stall breakdown scalar, virtual time, token count and
+/// every per-request record must coincide.
+fn reports_identical(a: &Report, b: &Report) -> bool {
+    a.bytes == b.bytes
+        && a.breakdown.transfer_stall_s == b.breakdown.transfer_stall_s
+        && a.virtual_seconds == b.virtual_seconds
+        && a.total_generated == b.total_generated
+        && a.requests.len() == b.requests.len()
+        && a.requests.iter().zip(&b.requests).all(|(x, y)| {
+            x.id == y.id
+                && x.generated == y.generated
+                && x.arrival == y.arrival
+                && x.first_token_at == y.first_token_at
+                && x.finished_at == y.finished_at
+        })
+}
+
+/// Not a paper figure: the SLO-aware multi-tenant scheduling sweep
+/// (DESIGN.md §13).  Two tenants — an interactive deadline tenant (gold)
+/// and a bursty best-effort batch tenant (bulk) — share one server at
+/// offered load 0.5×, 2× and 4× the calibrated service capacity, under
+/// both the legacy-pinned `fifo` discipline and the `slo` discipline.
+/// Reported per point: per-tenant TTFT tails, goodput (deadline-attaining
+/// completions per virtual second; no-deadline tenants count every
+/// completion) and the shed rate.
+///
+/// Three hard CI contracts ride along:
+/// 1. *fifo equivalence*: the default server, an explicit
+///    `.scheduler("fifo")` server and the legacy `scheduler::serve` loop
+///    produce byte-identical reports on the same untagged workload, and
+///    the fifo report carries no scheduling ledger;
+/// 2. at ≥2× overload, `slo` strictly improves the gold tenant's p99
+///    TTFT over `fifo`;
+/// 3. at ≥2× overload, `slo` goodput is equal or better.
+///
+/// With `--smoke` (or no artifacts) it runs on the built-in synthetic
+/// model with a tiny workload — the artifact-free CI path.
+pub fn load(h: &mut Harness) -> Result<()> {
+    use crate::config::{ArrivalKind, LengthDist, PriorityClass, TenantMix, TenantSpec};
+    use crate::coordinator::metrics::percentile;
+    use crate::server::SubmitError;
+    use crate::workload::TrafficGen;
+
+    let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
+    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
+        Box::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = h.artifacts.clone();
+        let backend = Arc::clone(&h.backend);
+        Box::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(Arc::clone(&backend), manifest)
+        })
+    };
+    let probe = mk_model()?;
+    let manifest = probe.manifest.clone();
+    let dims = manifest.model.clone();
+    let mut bits: Vec<u8> = manifest.quant.bits.clone();
+    bits.sort_unstable();
+    let floor_bits = *bits.first().context("manifest ships no quantized width")?;
+    let policy = PolicyConfig::new("static-quant", floor_bits, 0);
+    // Scheduling figure, not an offload figure: a roomy cache keeps the
+    // expert-transfer economics out of the latency signal.
+    let cache_bytes = 2 * manifest.transfer.fp16_expert_bytes;
+
+    let (n_req, prompt_len, out_len) =
+        if smoke { (12usize, 24usize, 6usize) } else { (2 * h.serve_requests, 64, 16) };
+    let factors: &[f64] = if smoke { &[0.5, 2.0] } else { &[0.5, 2.0, 4.0] };
+    let eval = if smoke {
+        synth::tiny_eval_store(&dims)?
+    } else {
+        crate::manifest::WeightStore::load(probe.manifest.eval_path())?
+    };
+
+    let mk_sys = |model: &StagedModel| {
+        let mut sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        sys.gpu_cache_bytes = cache_bytes;
+        sys
+    };
+
+    h.sink.line(format!(
+        "== Load sweep ({}, out={out_len}{}): fifo vs slo under tenant overload ==",
+        dims.name,
+        if smoke { ", smoke" } else { "" },
+    ));
+
+    // Contract 1 — fifo equivalence triple on one untagged workload: the
+    // scheduler seam must not have moved a single byte of the legacy path.
+    let eq_wl = WorkloadConfig::offline(4, prompt_len, out_len);
+    let eq_requests = WorkloadGen::generate(&eq_wl, &eval)?;
+    let serve_fifo = |name: Option<&str>| -> Result<Report> {
+        let model = mk_model()?;
+        let sys = mk_sys(&model);
+        let mut builder = ServerBuilder::new(model).policy(policy.clone()).system(sys);
+        if let Some(n) = name {
+            builder = builder.scheduler(n);
+        }
+        let mut server = builder.build()?;
+        for req in eq_requests.clone() {
+            server.submit(req)?;
+        }
+        server.run_to_completion()
+    };
+    let by_default = serve_fifo(None)?;
+    let by_name = serve_fifo(Some("fifo"))?;
+    let legacy = {
+        let model = mk_model()?;
+        let sys = mk_sys(&model);
+        let mut engine = crate::coordinator::ServeEngine::with_config(
+            model,
+            policy.clone(),
+            sys,
+            PrefetchConfig::off(),
+            None,
+        )?;
+        crate::coordinator::scheduler::serve(&mut engine, eq_requests.clone())?
+    };
+    let pinned = reports_identical(&by_default, &by_name)
+        && reports_identical(&by_default, &legacy)
+        && by_default.sched.is_none()
+        && by_name.sched.is_none();
+    h.sink.line(format!(
+        "  fifo equivalence: default = .scheduler(\"fifo\") = legacy serve, byte-identical = {pinned}"
+    ));
+    anyhow::ensure!(
+        pinned,
+        "fifo is no longer pinned to the legacy serve loop — the scheduler seam leaked"
+    );
+
+    // Capacity calibration: the fifo service rate on the uncongested
+    // workload, in requests per virtual second.
+    let mu_req = legacy.tokens_per_second() / out_len as f64;
+    anyhow::ensure!(mu_req > 0.0, "calibration run served no tokens");
+
+    // The tenant mix at one offered-load factor.  Deadlines only steer
+    // the `slo` discipline and the goodput metric — the traffic draws
+    // (arrivals, lengths, prompts) never depend on them.
+    let mix_for = |factor: f64, deadline: Option<f64>| -> TenantMix {
+        let mut gold = TenantSpec::new("gold", 1.0, PriorityClass::Interactive);
+        gold.arrival = ArrivalKind::Poisson { rate: 0.4 * factor * mu_req };
+        gold.prompt_len = LengthDist::Fixed(prompt_len);
+        gold.output_len = LengthDist::Fixed(out_len);
+        gold.deadline_s = deadline;
+        gold.weight = 4.0;
+        gold.shed_expired = deadline.is_some();
+        let mut bulk = TenantSpec::new("bulk", 1.0, PriorityClass::Batch);
+        bulk.arrival = ArrivalKind::Mmpp {
+            calm_rate: 0.3 * factor * mu_req,
+            burst_rate: 1.2 * factor * mu_req,
+            p_flip: 0.2,
+        };
+        bulk.prompt_len =
+            LengthDist::BoundedPareto { alpha: 1.2, lo: prompt_len / 2, hi: prompt_len * 2 };
+        bulk.output_len =
+            LengthDist::BoundedPareto { alpha: 1.3, lo: (out_len / 2).max(1), hi: out_len * 2 };
+        TenantMix { tenants: vec![gold, bulk], seed: 0xBEA4 }
+    };
+
+    // One scheduling point: tagged submits of a pre-generated stream.
+    // Door sheds (queue caps) are counted, not fatal.
+    let run_point = |sched: &str, mix: &TenantMix, traffic: &[crate::workload::TaggedRequest]|
+     -> Result<(Report, usize)> {
+        let model = mk_model()?;
+        let sys = mk_sys(&model);
+        let mut server = ServerBuilder::new(model)
+            .policy(policy.clone())
+            .system(sys)
+            .scheduler(sched)
+            .tenants(mix.clone())
+            .build()?;
+        let mut door_shed = 0usize;
+        for t in traffic {
+            match server.submit_for_tenant(t.request.clone(), Some(t.tenant)) {
+                Ok(_) => {}
+                Err(SubmitError::Overloaded(_)) => door_shed += 1,
+                Err(e) => anyhow::bail!("load sweep submit failed: {e}"),
+            }
+        }
+        Ok((server.run_to_completion()?, door_shed))
+    };
+
+    // Harness-side per-tenant TTFTs (sorted ascending) from the engine's
+    // completion records plus the stream's id → tenant map.
+    let tenant_ttfts = |r: &Report, tags: &HashMap<u64, usize>, ti: usize| -> Vec<f64> {
+        let mut v: Vec<f64> = r
+            .requests
+            .iter()
+            .filter(|rec| rec.generated > 0 && tags.get(&rec.id) == Some(&ti))
+            .map(|rec| rec.first_token_at - rec.arrival)
+            .collect();
+        v.sort_by(f64::total_cmp);
+        v
+    };
+
+    // Goodput: deadline-attaining completions per virtual second; a
+    // tenant without a deadline contributes every completion.
+    let goodput = |r: &Report, tags: &HashMap<u64, usize>, mix: &TenantMix| -> f64 {
+        let met = r
+            .requests
+            .iter()
+            .filter(|rec| rec.generated > 0)
+            .filter(|rec| match tags.get(&rec.id).and_then(|&ti| mix.tenants[ti].deadline_s) {
+                Some(d) => rec.first_token_at - rec.arrival <= d,
+                None => true,
+            })
+            .count();
+        met as f64 / r.virtual_seconds.max(1e-9)
+    };
+
+    // Deadline calibration: the gold tenant's p99 TTFT under fifo at the
+    // uncongested 0.5× point, doubled — generous when idle, hopeless for
+    // a fifo queue growing under ≥2× overload.
+    let calib_mix = mix_for(factors[0], None);
+    let calib_traffic = TrafficGen::generate(&calib_mix, n_req, &eval)?;
+    let calib_tags: HashMap<u64, usize> =
+        calib_traffic.iter().map(|t| (t.request.id, t.tenant)).collect();
+    let (calib_r, _) = run_point("fifo", &calib_mix, &calib_traffic)?;
+    let calib_gold = tenant_ttfts(&calib_r, &calib_tags, 0);
+    anyhow::ensure!(!calib_gold.is_empty(), "calibration run completed no gold requests");
+    let deadline = (2.0 * percentile(&calib_gold, 0.99)).max(1e-6);
+    h.sink.line(format!(
+        "  capacity {mu_req:.2} req/s | gold deadline {deadline:.4}s (2x uncongested p99 TTFT)"
+    ));
+
+    let mut rows = Vec::new();
+    for &factor in factors {
+        let mix = mix_for(factor, Some(deadline));
+        let traffic = TrafficGen::generate(&mix, n_req, &eval)?;
+        let tags: HashMap<u64, usize> =
+            traffic.iter().map(|t| (t.request.id, t.tenant)).collect();
+        let mut p99 = HashMap::new();
+        let mut gp = HashMap::new();
+        for sched in ["fifo", "slo"] {
+            let (r, door_shed) = run_point(sched, &mix, &traffic)?;
+            let (queue_shed, preempts) = match &r.sched {
+                Some(s) => (s.shed as usize, s.preemptions),
+                None => (0, 0),
+            };
+            let shed = door_shed + queue_shed;
+            let shed_rate = shed as f64 / traffic.len() as f64;
+            let g = goodput(&r, &tags, &mix);
+            gp.insert(sched, g);
+            for (ti, tname) in [(0usize, "gold"), (1, "bulk")] {
+                let ttfts = tenant_ttfts(&r, &tags, ti);
+                let (t50, t99) =
+                    (percentile(&ttfts, 0.50), percentile(&ttfts, 0.99));
+                if ti == 0 {
+                    p99.insert(sched, t99);
+                }
+                h.sink.line(format!(
+                    "    x{factor:<4} {sched:<5} {tname:<5} n={:<3} ttft p50 {t50:>8.4}s p99 {t99:>8.4}s | goodput {g:>7.3}/s | shed {shed:>2} ({:.0}%)",
+                    ttfts.len(),
+                    100.0 * shed_rate,
+                ));
+                rows.push(format!(
+                    "{factor},{sched},{tname},{},{t50},{t99},{g},{shed_rate},{preempts}",
+                    ttfts.len(),
+                ));
+            }
+            if let Some(s) = &r.sched {
+                h.sink.line(format!("    x{factor:<4} {sched:<5} sched: {}", s.summary()));
+            }
+        }
+        // Contracts 2 + 3: under ≥2× overload the slo discipline must
+        // strictly improve gold's p99 TTFT at equal-or-better goodput.
+        if factor >= 2.0 {
+            anyhow::ensure!(
+                p99["slo"] < p99["fifo"],
+                "x{factor}: slo gold p99 TTFT {:.4}s did not beat fifo {:.4}s",
+                p99["slo"],
+                p99["fifo"],
+            );
+            anyhow::ensure!(
+                gp["slo"] >= gp["fifo"],
+                "x{factor}: slo goodput {:.3}/s fell below fifo {:.3}/s",
+                gp["slo"],
+                gp["fifo"],
+            );
+        }
+    }
+    h.sink.csv(
+        "load_sweep.csv",
+        "factor,scheduler,tenant,completed,ttft_p50,ttft_p99,goodput,shed_rate,preemptions",
+        &rows,
+    )?;
+    h.sink.line(
+        "  (expected: at ≥2x overload slo holds gold's deadline by boosting, preempting \
+         batch slots and shedding expired gold; fifo's arrival order drowns gold in bulk)",
+    );
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -1377,12 +1677,13 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "adaptive" => adaptive(h),
         "shard" => shard(h),
         "fault" => fault(h),
+        "load" => load(h),
         "golden" => crate::harness::golden::run(h),
         "all" => all(h),
         other => {
             anyhow::bail!(
                 "unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, shard, \
-                 fault, golden, all)"
+                 fault, load, golden, all)"
             )
         }
     }

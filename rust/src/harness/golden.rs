@@ -31,13 +31,13 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::backend::{Backend, ReferenceBackend};
-use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
+use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig, TenantMix};
 use crate::coordinator::Report;
 use crate::harness::figures::Harness;
 use crate::server::{ServerBuilder, TokenEvent};
 use crate::sim::topology::FaultPlan;
 use crate::synth;
-use crate::workload::{WorkloadConfig, WorkloadGen};
+use crate::workload::{TrafficGen, WorkloadConfig, WorkloadGen};
 
 /// Names of the committed scenarios, in corpus order.
 pub fn scenario_names() -> Vec<&'static str> {
@@ -48,6 +48,7 @@ pub fn scenario_names() -> Vec<&'static str> {
         "shard2-replicated",
         "shard2-kill-dev1",
         "shard3-degraded-link",
+        "slo-two-tenants",
     ]
 }
 
@@ -75,6 +76,7 @@ pub fn render(name: &str) -> Result<String> {
     let mut prefetch = PrefetchConfig::off();
     let mut shard: Option<ShardConfig> = None;
     let mut faults: Option<FaultPlan> = None;
+    let mut tenants: Option<TenantMix> = None;
     let wl = match name {
         // The paper policy on the offload-regime single device — the
         // ledger every PR since the seed has been building on.
@@ -126,6 +128,20 @@ pub fn render(name: &str) -> Result<String> {
             faults = Some(FaultPlan::new().degrade(0, 2, 0.25).stall(1, 5, 2e-4).restore(0, 8));
             WorkloadConfig::offline(2, 32, 12)
         }
+        // §13 scheduling: two tenants through the `slo` discipline — an
+        // interactive deadline tenant over a bursty batch tenant (pins
+        // the scheduling ledger, per-tenant rows and the preempt/shed
+        // orderings).  No queue caps: every submit must land.
+        "slo-two-tenants" => {
+            policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+            sys.gpu_cache_bytes = 2 * manifest.transfer.fp16_expert_bytes;
+            tenants = Some(TenantMix::parse(
+                "seed 11\n\
+                 tenant gold class=interactive rate=60 prompt=24 output=4 deadline=0.5 weight=4 shed_expired\n\
+                 tenant bulk class=batch rate=mmpp:20:120:0.25 prompt=pareto:1.2:16:40 output=pareto:1.3:3:8\n",
+            )?);
+            WorkloadConfig::offline(1, 16, 4) // unused: tenant traffic below
+        }
         other => anyhow::bail!("unknown golden scenario `{other}`"),
     };
 
@@ -136,11 +152,24 @@ pub fn render(name: &str) -> Result<String> {
     if let Some(f) = faults {
         builder = builder.faults(f);
     }
+    if let Some(mix) = &tenants {
+        builder = builder.scheduler("slo").tenants(mix.clone());
+    }
     let mut server = builder.build()?;
     let eval = synth::tiny_eval_store(&dims)?;
     let mut ids = Vec::new();
-    for req in WorkloadGen::generate(&wl, &eval)? {
-        ids.push(server.submit(req).context("golden scenario submit")?);
+    if let Some(mix) = &tenants {
+        for t in TrafficGen::generate(mix, 10, &eval)? {
+            ids.push(
+                server
+                    .submit_for_tenant(t.request, Some(t.tenant))
+                    .context("golden tagged submit")?,
+            );
+        }
+    } else {
+        for req in WorkloadGen::generate(&wl, &eval)? {
+            ids.push(server.submit(req).context("golden scenario submit")?);
+        }
     }
     let report = server.run_to_completion()?;
 
@@ -203,6 +232,12 @@ fn render_report(w: &mut String, r: &Report) {
     }
     if let Some(f) = &r.fault {
         let _ = writeln!(w, "fault: {}", f.summary());
+    }
+    if let Some(s) = &r.sched {
+        let _ = writeln!(w, "sched: {}", s.summary());
+        for t in &s.per_tenant {
+            let _ = writeln!(w, "sched.tenant: {}", t.summary());
+        }
     }
     for rec in &r.requests {
         let _ = writeln!(

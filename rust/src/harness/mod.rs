@@ -6,6 +6,7 @@
 //! testbed); the *shape* — orderings, ratios, crossovers — is the
 //! reproduction target (EXPERIMENTS.md records both).
 
+pub mod bench;
 pub mod figures;
 pub mod golden;
 pub mod report;

@@ -36,7 +36,12 @@
 //!   the open `PredictorRegistry`
 //! * [`coordinator`]— continuous batcher, prefill/decode scheduler, KV state,
 //!   serving engine, metrics
-//! * [`workload`]   — request generators and traces
+//! * [`sched`]      — SLO-aware multi-tenant scheduling: the `Scheduler`
+//!   trait + open registry, the legacy-pinned `fifo` discipline and the
+//!   deadline/quota/preemption `slo` discipline (DESIGN.md §13)
+//! * [`workload`]   — request generators and traces, plus the tenant-tagged
+//!   production traffic engine (MMPP / diurnal arrivals, bounded-Pareto
+//!   lengths)
 //! * [`server`]     — the public serving surface: `ServerBuilder` →
 //!   `Server` → per-request `Session` token-event streams (DESIGN.md §9)
 //! * [`harness`]    — table/figure regeneration drivers (`rust/EXPERIMENTS.md`)
@@ -53,13 +58,17 @@ pub mod predict;
 pub mod quant;
 pub mod registry;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod sim;
 pub mod synth;
 pub mod workload;
 
 pub use backend::{default_backend, Backend, ReferenceBackend, Tensor};
-pub use config::{ModelDims, PolicyConfig, Precision, PrefetchConfig, ShardConfig, SystemConfig};
+pub use config::{
+    ModelDims, PolicyConfig, Precision, PrefetchConfig, PriorityClass, SchedConfig, ShardConfig,
+    SystemConfig, TenantMix, TenantSpec,
+};
 pub use coordinator::engine::ServeEngine;
 pub use manifest::{Manifest, WeightStore};
 pub use runtime::StagedModel;

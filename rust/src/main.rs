@@ -6,10 +6,12 @@
 //!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
 //!             [--lookahead N] [--max-pending N] [--alloc-budget BYTES]
 //!             [--devices D] [--replicate-budget BYTES] [--fault-plan FILE]
+//!             [--scheduler fifo|slo] [--tenants FILE]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|golden|all>
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|load|golden|all>
 //!             [--out DIR] [--full] [--smoke] [--bless]
+//! beam bench  [--json] [--out FILE] [--quick]
 //! beam info   --model mixtral-tiny
 //! ```
 //!
@@ -26,6 +28,19 @@
 //! `stall dev=1 secs=2e-4` — applied at decode-step boundaries.  `figure
 //! fault --smoke` sweeps recovery stall vs kill/revive MTBF × replica
 //! budget artifact-free.
+//!
+//! `--scheduler NAME` picks the serving discipline through the open
+//! scheduler registry (DESIGN.md §13): `fifo` (default) is pinned
+//! byte-identical to the legacy batcher; `slo` adds priority classes,
+//! per-tenant DRR quotas, deadline-aware preemption and load shedding.
+//! `--tenants FILE` loads a tenant-mix spec (`TenantMix::parse` format:
+//! `seed N` + one `tenant NAME class=.. rate=.. ...` per line) and
+//! switches `serve` to the tenant-tagged traffic engine — bursty MMPP /
+//! diurnal arrivals, bounded-Pareto lengths, deterministic per-tenant
+//! substreams.  `figure load --smoke` runs the overload sweep and checks
+//! the fifo-equivalence + SLO win contracts (the CI path); `beam bench`
+//! runs the pinned wall-clock micro/serving suite (baseline:
+//! `rust/benches/BENCH_7.json`).
 //!
 //! `--policy adaptive` serves the budgeted per-expert precision allocator
 //! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
@@ -49,15 +64,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig, TenantMix};
 use beam_moe::harness::figures::{self, Harness};
 use beam_moe::manifest::Manifest;
 use beam_moe::offload::MemoryTiers;
 use beam_moe::runtime::StagedModel;
 use beam_moe::server::{Server, ServerBuilder, SubmitError};
-use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
+use beam_moe::workload::{Request, TaggedRequest, TrafficGen, WorkloadConfig, WorkloadGen};
 
-const USAGE: &str = "usage: beam <serve|eval|figure|info> [--flags]  (see rust/src/main.rs docs)";
+const USAGE: &str =
+    "usage: beam <serve|eval|figure|bench|info> [--flags]  (see rust/src/main.rs docs)";
 
 /// Tiny flag parser: positional args + `--key value` + boolean `--key`.
 struct Args {
@@ -70,7 +86,7 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
-        let bools = ["ndp", "full", "raw-system", "smoke", "bless"];
+        let bools = ["ndp", "full", "raw-system", "smoke", "bless", "json", "quick"];
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
@@ -167,6 +183,15 @@ fn system(args: &Args, manifest: &Manifest) -> Result<SystemConfig> {
     Ok(sys)
 }
 
+/// `--tenants FILE` → parsed [`TenantMix`], `None` when the flag is
+/// absent (untagged legacy workload).
+fn tenant_mix(args: &Args) -> Result<Option<TenantMix>> {
+    let Some(path) = args.opt("tenants") else { return Ok(None) };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading tenant mix {path}"))?;
+    Ok(Some(TenantMix::parse(&text)?))
+}
+
 fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> {
     let model_name = args.get("model", "mixtral-tiny");
     let manifest = Manifest::load(artifacts.join(&model_name))?;
@@ -191,6 +216,11 @@ fn load_server(artifacts: &Path, args: &Args, prefetch: bool) -> Result<Server> 
             .with_context(|| format!("reading fault plan {path}"))?;
         builder = builder.faults(beam_moe::sim::topology::FaultPlan::parse(&text)?);
     }
+    // Serving discipline (DESIGN.md §13): registry name + tenant mix.
+    builder = builder.scheduler(&args.get("scheduler", "fifo"));
+    if let Some(mix) = tenant_mix(args)? {
+        builder = builder.tenants(mix);
+    }
     builder.build()
 }
 
@@ -212,6 +242,29 @@ fn submit_all(server: &mut Server, reqs: &[Request]) -> Result<()> {
     Ok(())
 }
 
+/// Tenant-tagged variant of [`submit_all`]: backpressure retries as
+/// usual, but a per-tenant load shed (`Overloaded`) is final — the
+/// request is counted and dropped, as a real gateway would.
+fn submit_all_tagged(server: &mut Server, traffic: &[TaggedRequest]) -> Result<u64> {
+    let mut shed = 0u64;
+    for t in traffic {
+        loop {
+            match server.submit_for_tenant(t.request.clone(), Some(t.tenant)) {
+                Ok(_) => break,
+                Err(SubmitError::Backpressure { .. }) => {
+                    server.tick()?;
+                }
+                Err(SubmitError::Overloaded(_)) => {
+                    shed += 1;
+                    break;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    Ok(shed)
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -223,29 +276,61 @@ fn main() -> Result<()> {
     match argv[0].as_str() {
         "serve" => {
             let mut server = load_server(&artifacts, &args, true)?;
-            let wl = WorkloadConfig {
-                n_requests: args.num("requests", 8usize)?,
-                prompt_len: args.num("prompt-len", 256usize)?,
-                output_len: args.num("output-len", 128usize)?,
-                arrival_rate: args.opt("arrival-rate").map(|v| v.parse()).transpose()?,
-                seed: args.num("seed", 0xBEA4u64)?,
-            };
             let eval_store =
                 beam_moe::manifest::WeightStore::load(server.model().manifest.eval_path())?;
-            let reqs = WorkloadGen::generate(&wl, &eval_store)?;
+            let n_requests = args.num("requests", 8usize)?;
+            // `--tenants FILE` switches to the tagged traffic engine; the
+            // legacy single-stream workload generator otherwise.
+            let traffic = match tenant_mix(&args)? {
+                Some(mix) => Some(TrafficGen::generate(&mix, n_requests, &eval_store)?),
+                None => None,
+            };
+            let reqs: Vec<Request> = match &traffic {
+                Some(t) => t.iter().map(|t| t.request.clone()).collect(),
+                None => {
+                    let wl = WorkloadConfig {
+                        n_requests,
+                        prompt_len: args.num("prompt-len", 256usize)?,
+                        output_len: args.num("output-len", 128usize)?,
+                        arrival_rate: args.opt("arrival-rate").map(|v| v.parse()).transpose()?,
+                        seed: args.num("seed", 0xBEA4u64)?,
+                    };
+                    WorkloadGen::generate(&wl, &eval_store)?
+                }
+            };
             if server.needs_recorded_trace() {
                 // Trace-replaying predictors (oracle) replay a demand-only
                 // recording of the same (deterministic) workload on an
                 // identical fresh server.
                 let mut recorder = load_server(&artifacts, &args, false)?;
                 recorder.record_trace();
-                submit_all(&mut recorder, &reqs)?;
+                match &traffic {
+                    Some(t) => {
+                        submit_all_tagged(&mut recorder, t)?;
+                    }
+                    None => submit_all(&mut recorder, &reqs)?,
+                }
                 recorder.run_to_completion()?;
                 server.install_oracle_trace(&recorder.take_trace()?);
             }
-            submit_all(&mut server, &reqs)?;
+            let door_shed = match &traffic {
+                Some(t) => submit_all_tagged(&mut server, t)?,
+                None => {
+                    submit_all(&mut server, &reqs)?;
+                    0
+                }
+            };
             let report = server.run_to_completion()?;
             println!("{}", report.summary_line());
+            if let Some(s) = &report.sched {
+                println!("  sched: {}", s.summary());
+                for t in &s.per_tenant {
+                    println!("  sched.tenant: {}", t.summary());
+                }
+                if door_shed > 0 {
+                    println!("  sched.door_shed: {door_shed}");
+                }
+            }
             println!("  tails: {}", report.tail_line());
             if server.speculation_active() {
                 println!(
@@ -312,6 +397,28 @@ fn main() -> Result<()> {
             h.bless = args.has("bless");
             figures::run(&name, &mut h)
         }
+        "bench" => {
+            // Artifact-free pinned suite (synthetic model only); the
+            // committed baseline lives in rust/benches/BENCH_7.json.
+            let quick = args.has("quick");
+            let records = beam_moe::harness::bench::run_suite(quick)?;
+            if args.has("json") {
+                let json = beam_moe::harness::bench::to_json(&records, quick).to_string();
+                match args.opt("out") {
+                    Some(path) => {
+                        std::fs::write(path, format!("{json}\n"))
+                            .with_context(|| format!("writing {path}"))?;
+                        eprintln!("wrote {path}");
+                    }
+                    None => println!("{json}"),
+                }
+            } else {
+                for r in &records {
+                    println!("{}", r.summary());
+                }
+            }
+            Ok(())
+        }
         "info" => {
             let model_name = args.get("model", "mixtral-tiny");
             let manifest = Manifest::load(artifacts.join(&model_name))?;
@@ -330,6 +437,7 @@ fn main() -> Result<()> {
             );
             println!("policies: {}", beam_moe::policies::registered_policies().join(", "));
             println!("predictors: {}", beam_moe::predict::registered_predictors().join(", "));
+            println!("schedulers: {}", beam_moe::sched::registered_schedulers().join(", "));
             Ok(())
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),

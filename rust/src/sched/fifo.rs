@@ -1,0 +1,133 @@
+//! The legacy admission order as a [`Scheduler`] (DESIGN.md §13).
+//!
+//! Wraps [`Batcher`] and delegates every decision to it verbatim, so a
+//! server built with `--scheduler fifo` (the default) is **byte-identical**
+//! to the pre-scheduler serve loop: same admission order, same virtual
+//! clock trajectory, same ledger.  `tests/sched.rs` pins this on offline,
+//! online and sharded configs; `figure load --smoke` enforces it in CI.
+
+use crate::coordinator::batcher::{Action, Batcher};
+use crate::coordinator::metrics::{RequestRecord, SchedReport};
+use crate::coordinator::state::ActiveSeq;
+use crate::sched::{Overloaded, SchedDecision, Scheduler, SlotView};
+use crate::sim::clock::VTime;
+use crate::workload::Request;
+
+#[derive(Debug, Default)]
+pub struct FifoScheduler {
+    batcher: Batcher,
+}
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        FifoScheduler { batcher: Batcher::new(Vec::new()) }
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &str {
+        "fifo"
+    }
+
+    fn push(&mut self, req: Request, _tenant: Option<usize>) -> Result<(), Overloaded> {
+        // Never sheds: admission control stays the server's max_pending
+        // counter, exactly as before.
+        self.batcher.push(req);
+        Ok(())
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        self.batcher.remove(id).is_some()
+    }
+
+    fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    fn decide(
+        &mut self,
+        now: VTime,
+        free_slot: Option<usize>,
+        slots: &[SlotView],
+    ) -> SchedDecision {
+        match self.batcher.next_action(now, free_slot, slots.len()) {
+            Action::Prefill(slot, req) => SchedDecision::Prefill(slot, req),
+            Action::Decode => SchedDecision::Decode,
+            Action::IdleUntil(t) => SchedDecision::IdleUntil(t),
+            Action::Done => SchedDecision::Done,
+        }
+    }
+
+    fn on_preempted(&mut self, _seq: ActiveSeq, _now: VTime) {
+        unreachable!("fifo never preempts");
+    }
+
+    fn report(&self, _records: &[RequestRecord]) -> Option<SchedReport> {
+        None // keeps legacy reports byte-identical
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: VTime) -> Request {
+        Request { id, prompt: vec![1, 2, 3], max_new_tokens: 4, arrival }
+    }
+
+    fn view(slot: usize) -> SlotView {
+        SlotView { slot, request_id: 99, generated: 1, remaining: 3 }
+    }
+
+    #[test]
+    fn mirrors_batcher_admission_order() {
+        let mut s = FifoScheduler::new();
+        // Same interleaving as the Batcher's push tie-order test.
+        for r in [req(3, 1.0), req(0, 2.0), req(1, 1.0), req(2, 0.5)] {
+            s.push(r, None).unwrap();
+        }
+        let mut b = Batcher::new(vec![req(3, 1.0), req(0, 2.0), req(1, 1.0), req(2, 0.5)]);
+        loop {
+            let expect = b.next_action(10.0, Some(0), 0);
+            let got = s.decide(10.0, Some(0), &[]);
+            match (expect, got) {
+                (Action::Prefill(es, er), SchedDecision::Prefill(gs, gr)) => {
+                    assert_eq!(es, gs);
+                    assert_eq!(er.id, gr.id);
+                }
+                (Action::Done, SchedDecision::Done) => break,
+                (e, g) => panic!("diverged: batcher {e:?} vs fifo {g:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn decodes_and_idles_like_the_batcher() {
+        let mut s = FifoScheduler::new();
+        s.push(req(0, 10.0), None).unwrap();
+        match s.decide(1.0, Some(0), &[]) {
+            SchedDecision::IdleUntil(t) => assert_eq!(t, 10.0),
+            other => panic!("{other:?}"),
+        }
+        match s.decide(1.0, None, &[view(0)]) {
+            SchedDecision::Decode => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.pending(), 1);
+        assert!(s.remove(0));
+        assert!(!s.remove(0));
+        match s.decide(1.0, Some(0), &[]) {
+            SchedDecision::Done => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn never_sheds_and_never_reports() {
+        let mut s = FifoScheduler::new();
+        for i in 0..1000 {
+            s.push(req(i, 0.0), None).unwrap();
+        }
+        assert!(s.report(&[]).is_none());
+    }
+}

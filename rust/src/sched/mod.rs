@@ -1,0 +1,131 @@
+//! SLO-aware multi-tenant scheduling (DESIGN.md §13).
+//!
+//! The [`Scheduler`] trait is the admission/ordering seam in front of the
+//! batch slots: the `Server` asks it what to do next (admit, resume a
+//! preempted session, preempt a decode slot, decode, idle, shed) and
+//! executes the decision against the engine.  Implementations are
+//! dispatched through the open name → constructor [`registry`] — the same
+//! seam idiom as `policies::registry` — so new disciplines register
+//! without touching the server, the CLI or the config surface:
+//!
+//! * [`fifo`] — wraps the legacy [`crate::coordinator::batcher::Batcher`]
+//!   verbatim; pinned byte-identical to the pre-scheduler serve loop.
+//! * [`slo`]  — priority classes, per-tenant deficit-round-robin token
+//!   quotas, deadline-aware preemption at decode-step boundaries, and
+//!   load shedding with a typed [`Overloaded`] refusal.
+//!
+//! Preemption lands *between* engine steps — next to the §10 precision
+//! replan, the §11 replica reconcile and the §12 fault application — so
+//! a preempted-and-resumed run stays deterministic: the saved sequence
+//! re-prefills through the same staged ops demand arrivals use.
+
+pub mod fifo;
+pub mod registry;
+pub mod slo;
+
+pub use fifo::FifoScheduler;
+pub use registry::{
+    make_scheduler, register_scheduler, registered_schedulers, resolve_scheduler, SchedulerCtor,
+    SchedulerRegistry,
+};
+pub use slo::SloScheduler;
+
+use crate::coordinator::metrics::{RequestRecord, SchedReport};
+use crate::coordinator::state::ActiveSeq;
+use crate::sim::clock::VTime;
+use crate::workload::Request;
+
+/// Read-only snapshot of one *active* batch slot, handed to
+/// [`Scheduler::decide`] so disciplines can pick preemption victims.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotView {
+    pub slot: usize,
+    pub request_id: u64,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Tokens still owed (`max_new_tokens - generated`).
+    pub remaining: usize,
+}
+
+/// A preempted session's sequence, parked for later resumption.  The
+/// engine rebuilds its KV cache with a fresh prefill pass on resume.
+#[derive(Debug, Clone)]
+pub struct SavedSeq {
+    pub seq: ActiveSeq,
+    /// Tenant index the session belongs to (`None` = untagged).
+    pub tenant: Option<usize>,
+    /// How many times this session has been preempted (anti-livelock:
+    /// schedulers stop picking a victim past their preemption cap).
+    pub preemptions: u32,
+}
+
+/// Typed load-shed refusal: the tenant's queue is at its configured cap.
+/// Carried inside [`crate::server::session::SubmitError::Overloaded`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Tenant index whose queue is full.
+    pub tenant: usize,
+    pub queued: usize,
+    pub limit: usize,
+}
+
+/// What the serve loop should do next — the scheduler-era superset of
+/// the legacy `batcher::Action`.
+#[derive(Debug)]
+pub enum SchedDecision {
+    /// Prefill this request into the given free slot.
+    Prefill(usize, Request),
+    /// Re-admit a previously preempted session into the free slot.
+    Resume(usize, SavedSeq),
+    /// Evict this active slot's session back to the scheduler (the
+    /// server calls [`Scheduler::on_preempted`] with the evicted
+    /// sequence).
+    Preempt(usize),
+    /// Run one decode step over the active batch.
+    Decode,
+    /// Drop this still-queued request (expired deadline under a
+    /// shed-expired tenant policy); its session transitions to `Shed`.
+    Shed(u64),
+    /// Nothing runnable: idle until this (strictly future) time.
+    IdleUntil(VTime),
+    /// All work drained.
+    Done,
+}
+
+/// The admission/ordering discipline in front of the batch slots.
+pub trait Scheduler: Send {
+    /// Registry name (diagnostics + report attribution).
+    fn name(&self) -> &str;
+
+    /// Enqueue one submitted request.  `tenant` indexes the mix the
+    /// scheduler was built with (`None` = untagged traffic).  Returns
+    /// the typed [`Overloaded`] refusal when the tenant's queue cap is
+    /// reached — the request is *not* enqueued.
+    fn push(&mut self, req: Request, tenant: Option<usize>) -> Result<(), Overloaded>;
+
+    /// Remove a not-currently-active request by id (cancellation): from
+    /// the queues *or* the preempted-session parking lot.  `false` if
+    /// unknown there.
+    fn remove(&mut self, id: u64) -> bool;
+
+    /// Requests queued (admission-control backpressure counts these;
+    /// parked preempted sessions are *not* pending — they hold no
+    /// admission budget).
+    fn pending(&self) -> usize;
+
+    /// Decide the next action.  `slots` snapshots the currently active
+    /// slots; `free_slot` is the lowest free slot index, if any.
+    fn decide(&mut self, now: VTime, free_slot: Option<usize>, slots: &[SlotView])
+        -> SchedDecision;
+
+    /// The server evicted a slot at this scheduler's request: park the
+    /// sequence for a later [`SchedDecision::Resume`] (the scheduler
+    /// already knows the session's tenant from its own submit metadata).
+    fn on_preempted(&mut self, seq: ActiveSeq, now: VTime);
+
+    /// Scheduling ledger for [`crate::coordinator::Report::sched`].
+    /// `records` are the engine's per-request completion records (for
+    /// per-tenant tail percentiles).  `None` keeps the report
+    /// byte-identical to the legacy path — `fifo` returns `None`.
+    fn report(&self, records: &[RequestRecord]) -> Option<SchedReport>;
+}

@@ -1,0 +1,177 @@
+//! Open scheduler registry: name → constructor (DESIGN.md §9, §13).
+//!
+//! The same seam idiom as `policies::registry`: an admission discipline
+//! becomes servable by registering a constructor under a name — no edits
+//! to the server, the CLI or the config surface.  `ServerBuilder`, the
+//! `beam` CLI and the harness all resolve schedulers here.  Ships two
+//! built-ins: `fifo` (alias `default`), pinned byte-identical to the
+//! legacy `Batcher` order, and `slo`, the deadline/quota/preemption
+//! discipline.  Table mechanics (aliases, sorted listings, the
+//! unknown-name error) are shared via [`crate::registry::NameTable`].
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::Result;
+
+use crate::config::{SchedConfig, TenantMix};
+use crate::registry::NameTable;
+use crate::sched::{FifoScheduler, Scheduler, SloScheduler};
+
+/// Constructs a scheduler from the knob set + tenant mix.  Constructors
+/// may reject a config (bad quantum, invalid tenant) with a contextful
+/// error.
+pub type SchedulerCtor =
+    Arc<dyn Fn(&SchedConfig, &TenantMix) -> Result<Box<dyn Scheduler>> + Send + Sync>;
+
+/// A name → constructor table for schedulers, with alias support.
+#[derive(Clone)]
+pub struct SchedulerRegistry {
+    table: NameTable<SchedulerCtor>,
+}
+
+impl SchedulerRegistry {
+    /// An empty registry (tests compose their own; serving code uses the
+    /// process-wide one via [`make_scheduler`]).
+    pub fn empty() -> Self {
+        SchedulerRegistry { table: NameTable::new("scheduler") }
+    }
+
+    /// The registry with every built-in scheduler registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("fifo", |_, _| Ok(Box::new(FifoScheduler::new())));
+        r.alias("default", "fifo");
+        r.register("slo", |cfg, mix| Ok(Box::new(SloScheduler::new(cfg, mix)?)));
+        r
+    }
+
+    /// Register `name`; a later registration under the same name wins.
+    pub fn register<F>(&mut self, name: &str, ctor: F)
+    where
+        F: Fn(&SchedConfig, &TenantMix) -> Result<Box<dyn Scheduler>> + Send + Sync + 'static,
+    {
+        self.table.register(name, Arc::new(ctor));
+    }
+
+    /// Register `alias` as another name for `canonical`.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.table.alias(alias, canonical);
+    }
+
+    /// Canonical names, sorted (CLI help and error messages).
+    pub fn names(&self) -> Vec<String> {
+        self.table.names()
+    }
+
+    /// Resolve a (possibly aliased) name to its canonical form; unknown
+    /// names fail with the registered-name list.
+    pub fn resolve(&self, name: &str) -> Result<String> {
+        self.table.resolve(name)
+    }
+
+    /// Clone out the constructor for a (possibly aliased) name.
+    pub fn ctor(&self, name: &str) -> Result<SchedulerCtor> {
+        self.table.ctor(name)
+    }
+
+    /// Instantiate the scheduler `cfg.scheduler` names.
+    pub fn create(&self, cfg: &SchedConfig, mix: &TenantMix) -> Result<Box<dyn Scheduler>> {
+        (self.ctor(&cfg.scheduler)?)(cfg, mix)
+    }
+}
+
+/// The process-wide registry every resolution path consults (server
+/// builder, CLI, harness).  Seeded with the built-ins on first touch;
+/// [`register_scheduler`] extends it at runtime.
+fn global() -> &'static RwLock<SchedulerRegistry> {
+    static REG: OnceLock<RwLock<SchedulerRegistry>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(SchedulerRegistry::builtin()))
+}
+
+/// Register a scheduler in the process-wide registry.
+pub fn register_scheduler<F>(name: &str, ctor: F)
+where
+    F: Fn(&SchedConfig, &TenantMix) -> Result<Box<dyn Scheduler>> + Send + Sync + 'static,
+{
+    global().write().expect("scheduler registry poisoned").register(name, ctor);
+}
+
+/// Sorted canonical names currently registered process-wide.
+pub fn registered_schedulers() -> Vec<String> {
+    global().read().expect("scheduler registry poisoned").names()
+}
+
+/// Resolve a name against the process-wide registry (validation seam for
+/// `ServerBuilder::build` and the CLI).
+pub fn resolve_scheduler(name: &str) -> Result<String> {
+    global().read().expect("scheduler registry poisoned").resolve(name)
+}
+
+/// Instantiate `cfg.scheduler` from the process-wide registry.  The ctor
+/// is cloned out and the lock released *before* it runs, so a
+/// constructor may itself call [`register_scheduler`] without
+/// deadlocking.
+pub fn make_scheduler(cfg: &SchedConfig, mix: &TenantMix) -> Result<Box<dyn Scheduler>> {
+    let ctor = global().read().expect("scheduler registry poisoned").ctor(&cfg.scheduler)?;
+    ctor(cfg, mix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_are_sorted_and_complete() {
+        let names = SchedulerRegistry::builtin().names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        for name in ["fifo", "slo"] {
+            assert!(names.contains(&name.to_string()), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn default_aliases_to_fifo() {
+        let r = SchedulerRegistry::builtin();
+        assert_eq!(r.resolve("default").unwrap(), "fifo");
+        let s = r.create(&SchedConfig::new("default"), &TenantMix::default()).unwrap();
+        assert_eq!(s.name(), "fifo");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let err = SchedulerRegistry::builtin().resolve("edf").unwrap_err().to_string();
+        assert!(err.contains("unknown scheduler `edf`"), "{err}");
+        assert!(err.contains("fifo") && err.contains("slo"), "{err}");
+    }
+
+    #[test]
+    fn bad_knobs_fail_at_construction_with_context() {
+        let r = SchedulerRegistry::builtin();
+        let mut cfg = SchedConfig::new("slo");
+        cfg.quantum_tokens = 0;
+        let err = r.create(&cfg, &TenantMix::default()).unwrap_err().to_string();
+        assert!(err.contains("quantum_tokens"), "{err}");
+    }
+
+    #[test]
+    fn runtime_registration_extends_process_wide() {
+        register_scheduler("custom-fifo", |_, _| Ok(Box::new(FifoScheduler::new())));
+        assert!(registered_schedulers().contains(&"custom-fifo".to_string()));
+        let s = make_scheduler(&SchedConfig::new("custom-fifo"), &TenantMix::default()).unwrap();
+        assert_eq!(s.name(), "fifo");
+    }
+
+    #[test]
+    fn reentrant_registration_from_a_ctor_does_not_deadlock() {
+        register_scheduler("reentrant-outer", |_, _| {
+            register_scheduler("reentrant-inner", |_, _| Ok(Box::new(FifoScheduler::new())));
+            Ok(Box::new(FifoScheduler::new()))
+        });
+        let s =
+            make_scheduler(&SchedConfig::new("reentrant-outer"), &TenantMix::default()).unwrap();
+        assert_eq!(s.name(), "fifo");
+        assert!(registered_schedulers().contains(&"reentrant-inner".to_string()));
+    }
+}

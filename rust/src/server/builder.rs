@@ -8,14 +8,16 @@
 
 use anyhow::{ensure, Result};
 
-use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig};
+use crate::config::{
+    PolicyConfig, PrefetchConfig, SchedConfig, ShardConfig, SystemConfig, TenantMix,
+};
 use crate::coordinator::ServeEngine;
 use crate::runtime::StagedModel;
 use crate::server::Server;
 use crate::sim::topology::FaultPlan;
 
 /// Builder for a [`Server`]: model + policy + testbed + sharding +
-/// prefetch + fault-plan + admission knobs, validated at
+/// prefetch + fault-plan + scheduling + admission knobs, validated at
 /// [`ServerBuilder::build`].
 pub struct ServerBuilder {
     model: StagedModel,
@@ -24,13 +26,16 @@ pub struct ServerBuilder {
     shard: Option<ShardConfig>,
     prefetch: PrefetchConfig,
     faults: Option<FaultPlan>,
+    sched: SchedConfig,
+    tenants: TenantMix,
     max_pending: usize,
 }
 
 impl ServerBuilder {
     /// Start from a loaded model.  Defaults: the paper's BEAM policy at
     /// 2-bit with the manifest's `top_n`, the GPU-only testbed scaled for
-    /// the model, prefetching off, and unbounded admission.
+    /// the model, prefetching off, the legacy-pinned `fifo` scheduler
+    /// with no tenant mix, and unbounded admission.
     pub fn new(model: StagedModel) -> Self {
         let top_n = model.manifest.model.top_n;
         ServerBuilder {
@@ -40,6 +45,8 @@ impl ServerBuilder {
             shard: None,
             prefetch: PrefetchConfig::off(),
             faults: None,
+            sched: SchedConfig::default(),
+            tenants: TenantMix::default(),
             max_pending: usize::MAX,
         }
     }
@@ -96,13 +103,40 @@ impl ServerBuilder {
         self
     }
 
+    /// Swap only the scheduler's registry name (`fifo`, `slo`, or any
+    /// runtime-registered discipline; DESIGN.md §13), keeping the other
+    /// scheduling knobs.
+    pub fn scheduler(mut self, name: &str) -> Self {
+        self.sched.scheduler = name.to_string();
+        self
+    }
+
+    /// Full scheduling knob set (name + quantum + preemption knobs).
+    pub fn sched_config(mut self, sched: SchedConfig) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Tenant mix for multi-tenant scheduling: per-tenant arrival
+    /// process, priority class, SLO deadline, DRR weight and queue cap.
+    /// Tenant-tagged submits (`Server::submit_for_tenant`) index into
+    /// this mix.
+    pub fn tenants(mut self, mix: TenantMix) -> Self {
+        self.tenants = mix;
+        self
+    }
+
     /// Validate every knob and construct the server.
     pub fn build(self) -> Result<Server> {
         // Registry resolution up front: unknown names fail with the
         // sorted registered-name list (the CLI's error surface).
         crate::policies::resolve_policy(&self.policy.policy)?;
         crate::predict::resolve_predictor(&self.prefetch.predictor)?;
+        crate::sched::resolve_scheduler(&self.sched.scheduler)?;
+        self.sched.validate()?;
+        self.tenants.validate()?;
         ensure!(self.max_pending > 0, "max_pending must be at least 1");
+        let sched = crate::sched::make_scheduler(&self.sched, &self.tenants)?;
         let mut system = self
             .system
             .unwrap_or_else(|| SystemConfig::scaled_for(&self.model.manifest.model, false));
@@ -112,6 +146,6 @@ impl ServerBuilder {
         }
         let engine =
             ServeEngine::with_config(self.model, self.policy, system, self.prefetch, self.faults)?;
-        Ok(Server::from_parts(engine, self.max_pending))
+        Ok(Server::from_parts(engine, sched, self.max_pending))
     }
 }

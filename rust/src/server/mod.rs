@@ -9,11 +9,16 @@
 //! and returns the run [`Report`].
 //!
 //! Construction goes through [`ServerBuilder`], which validates every
-//! knob (policy and predictor names resolve against the open registries —
-//! `policies::registry` / `predict::registry`) before any engine state
-//! exists.  `ServerBuilder::shard` selects the expert-parallel fleet
+//! knob (policy, predictor and scheduler names resolve against the open
+//! registries — `policies::registry` / `predict::registry` /
+//! `sched::registry`) before any engine state exists.
+//! `ServerBuilder::shard` selects the expert-parallel fleet
 //! (DESIGN.md §11) — `Report::shard` carries the resulting
-//! replication/balance ledger, `None` on single-device runs.  Behind the
+//! replication/balance ledger, `None` on single-device runs.
+//! `ServerBuilder::scheduler`/`::tenants` select the admission discipline
+//! (DESIGN.md §13) — the default `fifo` is pinned byte-identical to the
+//! legacy `Batcher` order, and `Report::sched` carries the scheduling
+//! ledger for SLO-aware disciplines.  Behind the
 //! façade the legacy `ServeEngine` is fully private:
 //! read-only [`EngineStats`] / [`CacheView`] snapshots replace its old
 //! `pub` fields, and `tests/server_api.rs` pins `run_to_completion` to be
@@ -30,9 +35,9 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use crate::config::PrefetchConfig;
-use crate::coordinator::batcher::{Action, Batcher};
 use crate::coordinator::{CacheView, EngineStats, Report, ServeEngine};
 use crate::runtime::StagedModel;
+use crate::sched::{SchedDecision, Scheduler, SlotView};
 use crate::sim::clock::VTime;
 use crate::workload::{DecodeTrace, Request};
 
@@ -41,8 +46,16 @@ use crate::workload::{DecodeTrace, Request};
 pub enum ServerTick {
     /// Admitted and prefilled one session.
     Prefilled(SessionId),
+    /// Re-admitted a previously preempted session (fresh prefill pass
+    /// over its prompt + generated tokens; DESIGN.md §13).
+    Resumed(SessionId),
+    /// Evicted an active session's slot back to the scheduler; it stays
+    /// `Active` and will be resumed.
+    Preempted(SessionId),
     /// Ran one decode step over the active batch.
     Decoded,
+    /// Load-shed a still-queued session (expired deadline); terminal.
+    Shed(SessionId),
     /// Nothing runnable: idled virtual time forward to the next arrival.
     Idled(VTime),
     /// Queue empty and no active sessions — the loop is drained.
@@ -52,66 +65,123 @@ pub enum ServerTick {
 /// Session-oriented serving façade over the (private) engine.
 pub struct Server {
     engine: ServeEngine,
-    batcher: Batcher,
+    sched: Box<dyn Scheduler>,
     sessions: HashMap<SessionId, Session>,
     max_pending: usize,
 }
 
 impl Server {
-    pub(crate) fn from_parts(engine: ServeEngine, max_pending: usize) -> Self {
-        Server { engine, batcher: Batcher::new(Vec::new()), sessions: HashMap::new(), max_pending }
+    pub(crate) fn from_parts(
+        engine: ServeEngine,
+        sched: Box<dyn Scheduler>,
+        max_pending: usize,
+    ) -> Self {
+        Server { engine, sched, sessions: HashMap::new(), max_pending }
     }
 
-    /// Submit one request; returns its session handle.  Fails with
-    /// [`SubmitError::Backpressure`] when `max_pending` requests are
+    /// Submit one untagged request; returns its session handle.  Fails
+    /// with [`SubmitError::Backpressure`] when `max_pending` requests are
     /// already queued (admission control) — the request is *not* enqueued
     /// and may be resubmitted after the loop makes progress.
     pub fn submit(&mut self, req: Request) -> Result<SessionId, SubmitError> {
+        self.submit_for_tenant(req, None)
+    }
+
+    /// Submit one request on behalf of a tenant (an index into the
+    /// `ServerBuilder::tenants` mix).  On top of the untagged failure
+    /// modes, fails with [`SubmitError::Overloaded`] when the tenant's
+    /// scheduler queue is at its configured cap (load shedding at the
+    /// door, DESIGN.md §13).
+    pub fn submit_for_tenant(
+        &mut self,
+        req: Request,
+        tenant: Option<usize>,
+    ) -> Result<SessionId, SubmitError> {
         let id = SessionId(req.id);
         if self.sessions.contains_key(&id) {
             return Err(SubmitError::DuplicateId(req.id));
         }
-        if self.batcher.pending() >= self.max_pending {
+        if self.sched.pending() >= self.max_pending {
             return Err(SubmitError::Backpressure {
-                pending: self.batcher.pending(),
+                pending: self.sched.pending(),
                 limit: self.max_pending,
             });
         }
-        self.sessions.insert(id, Session::new(id, req.prompt.len(), req.max_new_tokens));
-        self.batcher.push(req);
+        let (prompt_len, max_new) = (req.prompt.len(), req.max_new_tokens);
+        self.sched.push(req, tenant).map_err(SubmitError::Overloaded)?;
+        self.sessions.insert(id, Session::new(id, prompt_len, max_new));
         Ok(id)
     }
 
-    /// Perform exactly one scheduling action (admit-or-prefill, decode,
-    /// or idle) and route any generated tokens into their sessions.
+    /// Perform exactly one scheduling action (admit-or-prefill, resume,
+    /// preempt, decode, shed, or idle) and route any generated tokens
+    /// into their sessions.
     pub fn tick(&mut self) -> Result<ServerTick> {
-        let action = self.batcher.next_action(
-            self.engine.now(),
-            self.engine.state.free_slot(),
-            self.engine.state.n_active(),
-        );
-        let step = match action {
-            Action::Prefill(slot, req) => {
+        let now = self.engine.now();
+        let slots: Vec<SlotView> = self
+            .engine
+            .state
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref().map(|seq| SlotView {
+                    slot: i,
+                    request_id: seq.request_id,
+                    generated: seq.generated(),
+                    remaining: seq.max_new_tokens.saturating_sub(seq.generated()),
+                })
+            })
+            .collect();
+        let decision = self.sched.decide(now, self.engine.state.free_slot(), &slots);
+        let step = match decision {
+            SchedDecision::Prefill(slot, req) => {
                 let id = SessionId(req.id);
                 if let Some(s) = self.sessions.get_mut(&id) {
-                    s.mark_active(self.engine.now());
+                    s.mark_active(now);
                 }
                 self.engine.prefill(slot, &req)?;
                 ServerTick::Prefilled(id)
             }
-            Action::Decode => {
+            SchedDecision::Resume(slot, saved) => {
+                let id = SessionId(saved.seq.request_id);
+                if let Some(s) = self.sessions.get_mut(&id) {
+                    s.mark_resumed(now);
+                }
+                self.engine.resume(slot, saved.seq)?;
+                ServerTick::Resumed(id)
+            }
+            SchedDecision::Preempt(slot) => {
+                let Some(seq) = self.engine.cancel_slot(slot) else {
+                    bail!("scheduler preempted empty slot {slot}");
+                };
+                let id = SessionId(seq.request_id);
+                if let Some(s) = self.sessions.get_mut(&id) {
+                    s.mark_preempted(now);
+                }
+                self.sched.on_preempted(seq, now);
+                ServerTick::Preempted(id)
+            }
+            SchedDecision::Decode => {
                 self.engine.decode_step()?;
                 ServerTick::Decoded
             }
-            Action::IdleUntil(t) => {
+            SchedDecision::Shed(rid) => {
+                let id = SessionId(rid);
+                if let Some(s) = self.sessions.get_mut(&id) {
+                    s.mark_shed(now);
+                }
+                ServerTick::Shed(id)
+            }
+            SchedDecision::IdleUntil(t) => {
                 // A past/present target would make advance_to a no-op and
-                // spin forever; the batcher guarantees progress (see
+                // spin forever; every scheduler guarantees progress (see
                 // `idle_until_is_never_in_the_past`).
-                debug_assert!(t > self.engine.now(), "batcher idled into the past: {t}");
+                debug_assert!(t > now, "scheduler idled into the past: {t}");
                 self.engine.clock.advance_to(t);
                 ServerTick::Idled(t)
             }
-            Action::Done => ServerTick::Done,
+            SchedDecision::Done => ServerTick::Done,
         };
         self.route_emitted();
         Ok(step)
@@ -125,23 +195,29 @@ impl Server {
         Ok(self.report())
     }
 
-    /// Cancel a session: drops it from the queue (still pending) or frees
-    /// its batch slot (active).  `Ok(false)` if it already finished or was
-    /// already cancelled.
+    /// Cancel a session: drops it from the queue (still pending), frees
+    /// its batch slot (active), or pulls it from the preempted-session
+    /// parking lot (active but evicted).  `Ok(false)` if it already
+    /// finished, was shed, or was already cancelled.
     pub fn cancel(&mut self, id: SessionId) -> Result<bool> {
         let Some(session) = self.sessions.get_mut(&id) else {
             bail!("unknown session {id}");
         };
         match session.status() {
             SessionStatus::Queued => {
-                let _ = self.batcher.remove(id.0);
+                let _ = self.sched.remove(id.0);
             }
             SessionStatus::Active => {
                 if let Some(slot) = self.engine.slot_of(id.0) {
                     let _ = self.engine.cancel_slot(slot);
+                } else {
+                    // Preempted and parked inside the scheduler.
+                    let _ = self.sched.remove(id.0);
                 }
             }
-            SessionStatus::Finished | SessionStatus::Cancelled => return Ok(false),
+            SessionStatus::Finished | SessionStatus::Cancelled | SessionStatus::Shed => {
+                return Ok(false)
+            }
         }
         let at = self.engine.now();
         session.mark_cancelled(at);
@@ -158,20 +234,30 @@ impl Server {
         self.sessions.get(&id)
     }
 
-    /// Remove a *terminal* (finished or cancelled) session, returning it.
-    /// Long-lived servers call this to release the session's event history
-    /// and make its request id submittable again; `None` while the session
-    /// is still queued/active or was never submitted.
+    /// Remove a *terminal* (finished, cancelled, or shed) session,
+    /// returning it.  Long-lived servers call this to release the
+    /// session's event history and make its request id submittable again;
+    /// `None` while the session is still queued/active or was never
+    /// submitted.
     pub fn reap(&mut self, id: SessionId) -> Option<Session> {
         match self.sessions.get(&id)?.status() {
-            SessionStatus::Finished | SessionStatus::Cancelled => self.sessions.remove(&id),
+            SessionStatus::Finished | SessionStatus::Cancelled | SessionStatus::Shed => {
+                self.sessions.remove(&id)
+            }
             SessionStatus::Queued | SessionStatus::Active => None,
         }
     }
 
-    /// Requests submitted but not yet admitted to a slot.
+    /// Requests submitted but not yet admitted to a slot (parked
+    /// preempted sessions are not pending — they hold no admission
+    /// budget).
     pub fn pending(&self) -> usize {
-        self.batcher.pending()
+        self.sched.pending()
+    }
+
+    /// Registry name of the scheduling discipline in front of the slots.
+    pub fn scheduler_name(&self) -> &str {
+        self.sched.name()
     }
 
     /// Current virtual time.
@@ -180,9 +266,12 @@ impl Server {
     }
 
     /// Final (or interim) run report — byte ledger, stall breakdown,
-    /// per-request latencies.
+    /// per-request latencies, and (for SLO-aware disciplines) the
+    /// scheduling ledger in `Report::sched`.
     pub fn report(&self) -> Report {
-        self.engine.report()
+        let mut r = self.engine.report();
+        r.sched = self.sched.report(&r.requests);
+        r
     }
 
     /// Read-only snapshot of serve-loop progress.

@@ -4,7 +4,11 @@
 //!
 //! ```text
 //!   Queued ──admit──► Active ──last token──► Finished
-//!      │                 │
+//!      │                 │  ▲
+//!      │          preempt│  │resume   (slot evicted; DESIGN.md §13)
+//!      │                 ▼  │
+//!      │               (parked, still Active)
+//!      ├────shed──────────────────────────► Shed
 //!      └────cancel───────┴──────────────────► Cancelled
 //! ```
 //!
@@ -31,12 +35,16 @@ impl std::fmt::Display for SessionId {
 pub enum SessionStatus {
     /// Submitted, waiting for a batch slot.
     Queued,
-    /// Prefilled into a slot; decoding.
+    /// Prefilled into a slot; decoding (a preempted-but-resumable
+    /// session also reports `Active` — it still owes tokens).
     Active,
     /// All requested tokens generated.
     Finished,
     /// Cancelled by the client (queued or mid-decode).
     Cancelled,
+    /// Load-shed by the scheduler after queueing (expired deadline);
+    /// terminal, no tokens follow (DESIGN.md §13).
+    Shed,
 }
 
 /// One element of a session's incremental event stream.
@@ -51,6 +59,14 @@ pub enum TokenEvent {
     Finished { at: VTime },
     /// The session was cancelled; no further events follow.
     Cancelled { at: VTime },
+    /// The scheduler evicted this session's decode slot; it is parked
+    /// and will be resumed (DESIGN.md §13).
+    Preempted { at: VTime },
+    /// A preempted session re-entered a slot; token events continue.
+    Resumed { at: VTime },
+    /// The scheduler shed this queued session (deadline expired); no
+    /// further events follow.
+    Overloaded { at: VTime },
 }
 
 impl TokenEvent {
@@ -60,7 +76,10 @@ impl TokenEvent {
             TokenEvent::Admitted { at }
             | TokenEvent::Token { at, .. }
             | TokenEvent::Finished { at }
-            | TokenEvent::Cancelled { at } => *at,
+            | TokenEvent::Cancelled { at }
+            | TokenEvent::Preempted { at }
+            | TokenEvent::Resumed { at }
+            | TokenEvent::Overloaded { at } => *at,
         }
     }
 }
@@ -73,6 +92,11 @@ pub enum SubmitError {
     Backpressure { pending: usize, limit: usize },
     /// A session with this request id already exists.
     DuplicateId(u64),
+    /// Load shed at submit: the tenant's scheduler queue is at its
+    /// configured cap (DESIGN.md §13).  Unlike backpressure this is
+    /// per-tenant and intentional — resubmitting immediately will fail
+    /// again until the tenant's queue drains.
+    Overloaded(crate::sched::Overloaded),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -82,6 +106,11 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "admission refused: {pending} pending requests at limit {limit}")
             }
             SubmitError::DuplicateId(id) => write!(f, "request id {id} already has a session"),
+            SubmitError::Overloaded(o) => write!(
+                f,
+                "load shed: tenant {} queue at cap ({}/{})",
+                o.tenant, o.queued, o.limit
+            ),
         }
     }
 }
@@ -148,7 +177,10 @@ impl Session {
     }
 
     pub(crate) fn push_token(&mut self, token: i32, index: usize, at: VTime, last: bool) {
-        if matches!(self.status, SessionStatus::Finished | SessionStatus::Cancelled) {
+        if matches!(
+            self.status,
+            SessionStatus::Finished | SessionStatus::Cancelled | SessionStatus::Shed
+        ) {
             return;
         }
         self.events.push(TokenEvent::Token { token, index, at });
@@ -161,6 +193,23 @@ impl Session {
     pub(crate) fn mark_cancelled(&mut self, at: VTime) {
         self.status = SessionStatus::Cancelled;
         self.events.push(TokenEvent::Cancelled { at });
+    }
+
+    /// The scheduler shed this queued session; terminal.
+    pub(crate) fn mark_shed(&mut self, at: VTime) {
+        self.status = SessionStatus::Shed;
+        self.events.push(TokenEvent::Overloaded { at });
+    }
+
+    /// The scheduler evicted this session's slot; it stays `Active`
+    /// (resumable — it still owes tokens).
+    pub(crate) fn mark_preempted(&mut self, at: VTime) {
+        self.events.push(TokenEvent::Preempted { at });
+    }
+
+    /// A preempted session re-entered a slot.
+    pub(crate) fn mark_resumed(&mut self, at: VTime) {
+        self.events.push(TokenEvent::Resumed { at });
     }
 
     /// Events appended since the previous call (the incremental stream).
@@ -217,5 +266,38 @@ mod tests {
         let b = SubmitError::Backpressure { pending: 4, limit: 4 };
         assert!(b.to_string().contains("limit 4"));
         assert!(SubmitError::DuplicateId(9).to_string().contains('9'));
+        let o = SubmitError::Overloaded(crate::sched::Overloaded {
+            tenant: 2,
+            queued: 8,
+            limit: 8,
+        });
+        assert!(o.to_string().contains("tenant 2") && o.to_string().contains("8/8"), "{o}");
+    }
+
+    #[test]
+    fn shed_is_terminal_and_drops_tokens() {
+        let mut s = Session::new(SessionId(3), 4, 2);
+        s.mark_shed(1.5);
+        assert_eq!(s.status(), SessionStatus::Shed);
+        assert!(matches!(s.events().last(), Some(TokenEvent::Overloaded { at }) if *at == 1.5));
+        s.push_token(1, 0, 2.0, false);
+        assert_eq!(s.generated(), 0, "shed sessions accept no tokens");
+    }
+
+    #[test]
+    fn preempt_resume_keeps_session_active_and_streams_events() {
+        let mut s = Session::new(SessionId(4), 4, 3);
+        s.mark_active(0.1);
+        s.push_token(10, 0, 0.2, false);
+        s.mark_preempted(0.3);
+        assert_eq!(s.status(), SessionStatus::Active, "parked sessions stay Active");
+        s.mark_resumed(0.5);
+        s.push_token(11, 1, 0.6, false);
+        s.push_token(12, 2, 0.7, true);
+        assert_eq!(s.status(), SessionStatus::Finished);
+        let kinds: Vec<&TokenEvent> = s.events().iter().collect();
+        assert!(matches!(kinds[2], TokenEvent::Preempted { .. }));
+        assert!(matches!(kinds[3], TokenEvent::Resumed { .. }));
+        assert_eq!(s.generated(), 3);
     }
 }

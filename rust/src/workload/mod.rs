@@ -2,6 +2,8 @@
 
 pub mod reqgen;
 pub mod trace;
+pub mod traffic;
 
 pub use reqgen::{Request, WorkloadConfig, WorkloadGen};
 pub use trace::DecodeTrace;
+pub use traffic::{TaggedRequest, TrafficGen};

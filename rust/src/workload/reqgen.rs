@@ -46,6 +46,24 @@ impl WorkloadConfig {
             seed: 0xBEA4,
         }
     }
+
+    /// Reject configs that would silently generate a degenerate workload:
+    /// a non-finite or non-positive arrival rate hangs or panics the
+    /// arrival accumulator, and zero counts/lengths produce empty runs
+    /// that masquerade as instant ones.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_requests > 0, "workload: n_requests must be > 0");
+        anyhow::ensure!(self.prompt_len > 0, "workload: prompt_len must be > 0");
+        anyhow::ensure!(self.output_len > 0, "workload: output_len must be > 0");
+        if let Some(rate) = self.arrival_rate {
+            anyhow::ensure!(
+                rate.is_finite() && rate > 0.0,
+                "workload: arrival_rate must be finite and > 0 (got {rate}); \
+                 use offline mode (no rate) for all-at-t=0 arrivals"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Deterministic xorshift64* stream.
@@ -76,11 +94,32 @@ impl XorShift {
     }
 }
 
+/// Tile corpus rows from the calib-token dump to reach `prompt_len`
+/// tokens, consuming `rng` for the row picks.  Shared by the uniform
+/// generator below and the multi-tenant `TrafficGen`.
+pub(crate) fn tile_prompt(
+    data: &[i32],
+    n_seqs: usize,
+    seq_len: usize,
+    prompt_len: usize,
+    rng: &mut XorShift,
+) -> Vec<i32> {
+    let mut prompt = Vec::with_capacity(prompt_len);
+    while prompt.len() < prompt_len {
+        let row = (rng.next_u64() as usize) % n_seqs;
+        let start = row * seq_len;
+        let take = (prompt_len - prompt.len()).min(seq_len);
+        prompt.extend_from_slice(&data[start..start + take]);
+    }
+    prompt
+}
+
 pub struct WorkloadGen;
 
 impl WorkloadGen {
     /// Build the request set from the model's eval token dump.
     pub fn generate(cfg: &WorkloadConfig, store: &WeightStore) -> anyhow::Result<Vec<Request>> {
+        cfg.validate()?;
         let toks = store.get("calib_tokens")?;
         let (n_seqs, seq_len) = (toks.shape[0], toks.shape[1]);
         let data = toks.as_i32()?;
@@ -88,14 +127,7 @@ impl WorkloadGen {
         let mut arrival = 0.0;
         let mut out = Vec::with_capacity(cfg.n_requests);
         for id in 0..cfg.n_requests {
-            // Tile corpus rows to reach prompt_len.
-            let mut prompt = Vec::with_capacity(cfg.prompt_len);
-            while prompt.len() < cfg.prompt_len {
-                let row = (rng.next_u64() as usize) % n_seqs;
-                let start = row * seq_len;
-                let take = (cfg.prompt_len - prompt.len()).min(seq_len);
-                prompt.extend_from_slice(&data[start..start + take]);
-            }
+            let prompt = tile_prompt(data, n_seqs, seq_len, cfg.prompt_len, &mut rng);
             if let Some(rate) = cfg.arrival_rate {
                 arrival += rng.next_exp(rate);
             }
@@ -128,6 +160,27 @@ mod tests {
         let mut r = XorShift::new(7);
         for _ in 0..100 {
             assert!(r.next_exp(2.0) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(WorkloadConfig::offline(4, 16, 8).validate().is_ok());
+        assert!(WorkloadConfig::online(4, 16, 8, 10.0).validate().is_ok());
+
+        let err = WorkloadConfig::offline(0, 16, 8).validate().unwrap_err().to_string();
+        assert!(err.contains("n_requests"), "{err}");
+        let err = WorkloadConfig::offline(4, 0, 8).validate().unwrap_err().to_string();
+        assert!(err.contains("prompt_len"), "{err}");
+        let err = WorkloadConfig::offline(4, 16, 0).validate().unwrap_err().to_string();
+        assert!(err.contains("output_len"), "{err}");
+
+        for bad_rate in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = WorkloadConfig::online(4, 16, 8, bad_rate)
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("arrival_rate"), "rate {bad_rate}: {err}");
         }
     }
 

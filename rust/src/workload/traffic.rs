@@ -1,0 +1,274 @@
+//! Multi-tenant production traffic generation (DESIGN.md §13).
+//!
+//! `TrafficGen` turns a [`TenantMix`] into a single merged, tenant-tagged
+//! request stream.  Each tenant owns an independent deterministic xorshift
+//! substream (derived from the mix seed via splitmix64, so adding a tenant
+//! never perturbs another tenant's draws), its own arrival process
+//! (Poisson / 2-state MMPP / diurnal) and its own heavy-tailed length
+//! distributions.  Streams are merged by arrival time and global request
+//! ids are assigned in merged order, so every run replays bit-exact —
+//! the same property `WorkloadGen` guarantees for the uniform workload.
+
+use crate::config::{ArrivalKind, LengthDist, TenantMix};
+use crate::manifest::WeightStore;
+use crate::sim::clock::VTime;
+use crate::workload::reqgen::{tile_prompt, Request, XorShift};
+
+/// A request plus the index of the tenant (into `TenantMix::tenants`)
+/// that submitted it.  The `Request` itself is unchanged — tenancy flows
+/// beside it, through `Server::submit_for_tenant`.
+#[derive(Debug, Clone)]
+pub struct TaggedRequest {
+    pub tenant: usize,
+    pub request: Request,
+}
+
+/// splitmix64 finalizer — derives per-tenant substream seeds from the
+/// master seed so tenants are statistically independent but jointly
+/// deterministic.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Per-tenant arrival-process state.
+struct ArrivalState {
+    kind: ArrivalKind,
+    /// MMPP only: currently in the burst state?
+    burst: bool,
+}
+
+impl ArrivalState {
+    fn new(kind: ArrivalKind) -> Self {
+        ArrivalState { kind, burst: false }
+    }
+
+    /// Advance from `now` to the next arrival, consuming `rng`.
+    fn next_arrival(&mut self, now: VTime, rng: &mut XorShift) -> VTime {
+        match self.kind {
+            ArrivalKind::Poisson { rate } => now + rng.next_exp(rate),
+            ArrivalKind::Mmpp { calm_rate, burst_rate, p_flip } => {
+                let rate = if self.burst { burst_rate } else { calm_rate };
+                let t = now + rng.next_exp(rate);
+                if rng.next_f64() < p_flip {
+                    self.burst = !self.burst;
+                }
+                t
+            }
+            ArrivalKind::Diurnal { base_rate, peak_rate, period } => {
+                // Rate evaluated at the previous arrival — a standard
+                // piecewise-constant approximation that keeps the sampler
+                // a single exponential draw per arrival (bit-exact replay
+                // matters more here than thinning exactness).
+                let phase = (std::f64::consts::TAU * now / period).cos();
+                let rate = base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - phase);
+                now + rng.next_exp(rate)
+            }
+        }
+    }
+}
+
+/// Sample a length from `dist`.  Bounded Pareto uses the inverse CDF
+/// `x = (lo^-α − u·(lo^-α − hi^-α))^(−1/α)`, clamped to `[lo, hi]`.
+fn sample_len(dist: &LengthDist, rng: &mut XorShift) -> usize {
+    match *dist {
+        LengthDist::Fixed(n) => n,
+        LengthDist::BoundedPareto { alpha, lo, hi } => {
+            let u = rng.next_f64();
+            let (l, h) = (lo as f64, hi as f64);
+            let la = l.powf(-alpha);
+            let ha = h.powf(-alpha);
+            let x = (la - u * (la - ha)).powf(-1.0 / alpha);
+            (x.floor() as usize).clamp(lo, hi)
+        }
+    }
+}
+
+pub struct TrafficGen;
+
+impl TrafficGen {
+    /// Generate `n_requests` tenant-tagged requests from `mix`, prompts
+    /// tiled from the model's calib-token dump (same corpus discipline
+    /// as `WorkloadGen::generate`).
+    ///
+    /// Each tenant's stream is generated independently (its substream
+    /// seed depends only on the mix seed and the tenant's index), then
+    /// the earliest `n_requests` across all tenants are kept — so a
+    /// tenant's share of the merged stream is proportional to its
+    /// arrival rate, as in a real shared frontend.  Global ids are
+    /// assigned 0.. in merged arrival order.
+    pub fn generate(
+        mix: &TenantMix,
+        n_requests: usize,
+        store: &WeightStore,
+    ) -> anyhow::Result<Vec<TaggedRequest>> {
+        anyhow::ensure!(!mix.tenants.is_empty(), "traffic: tenant mix is empty");
+        anyhow::ensure!(n_requests > 0, "traffic: n_requests must be > 0");
+        for t in &mix.tenants {
+            t.validate()?;
+        }
+        let toks = store.get("calib_tokens")?;
+        let (n_seqs, seq_len) = (toks.shape[0], toks.shape[1]);
+        let data = toks.as_i32()?;
+
+        // Per-tenant streams: n_requests arrivals each is a safe upper
+        // bound on how many any one tenant can contribute to the merge.
+        let mut streams: Vec<Vec<TaggedRequest>> = Vec::with_capacity(mix.tenants.len());
+        for (ti, spec) in mix.tenants.iter().enumerate() {
+            let mut rng = XorShift::new(mix.seed ^ splitmix64(ti as u64 + 1));
+            let mut arrivals = ArrivalState::new(spec.arrival.clone());
+            let mut now: VTime = 0.0;
+            let mut reqs = Vec::with_capacity(n_requests);
+            for _ in 0..n_requests {
+                now = arrivals.next_arrival(now, &mut rng);
+                let prompt_len = sample_len(&spec.prompt_len, &mut rng);
+                let output_len = sample_len(&spec.output_len, &mut rng);
+                let prompt = tile_prompt(data, n_seqs, seq_len, prompt_len, &mut rng);
+                reqs.push(TaggedRequest {
+                    tenant: ti,
+                    request: Request {
+                        id: 0, // assigned after the merge
+                        prompt,
+                        max_new_tokens: output_len,
+                        arrival: now,
+                    },
+                });
+            }
+            streams.push(reqs);
+        }
+
+        // Merge by (arrival, tenant index, per-tenant order) — a total
+        // order independent of float ties, so the merge is deterministic.
+        let mut merged: Vec<TaggedRequest> = streams.into_iter().flatten().collect();
+        merged.sort_by(|a, b| {
+            a.request
+                .arrival
+                .total_cmp(&b.request.arrival)
+                .then(a.tenant.cmp(&b.tenant))
+        });
+        merged.truncate(n_requests);
+        for (id, tr) in merged.iter_mut().enumerate() {
+            tr.request.id = id as u64;
+        }
+        Ok(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PriorityClass, TenantSpec};
+    use crate::synth;
+
+    fn two_tenant_mix() -> TenantMix {
+        let mut gold = TenantSpec::new("gold", 40.0, PriorityClass::Interactive);
+        gold.prompt_len = LengthDist::Fixed(12);
+        gold.output_len = LengthDist::Fixed(4);
+        let mut bulk = TenantSpec::new("bulk", 10.0, PriorityClass::Batch);
+        bulk.arrival = ArrivalKind::Mmpp { calm_rate: 5.0, burst_rate: 80.0, p_flip: 0.2 };
+        bulk.prompt_len = LengthDist::BoundedPareto { alpha: 1.2, lo: 8, hi: 32 };
+        bulk.output_len = LengthDist::BoundedPareto { alpha: 1.5, lo: 2, hi: 16 };
+        TenantMix { tenants: vec![gold, bulk], seed: 0xBEA4 }
+    }
+
+    fn store() -> crate::manifest::WeightStore {
+        synth::tiny_eval_store(&synth::tiny_dims("synthetic-tiny")).unwrap()
+    }
+
+    #[test]
+    fn traffic_replays_bit_exact() {
+        let mix = two_tenant_mix();
+        let s = store();
+        let a = TrafficGen::generate(&mix, 24, &s).unwrap();
+        let b = TrafficGen::generate(&mix, 24, &s).unwrap();
+        assert_eq!(a.len(), 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.request.id, y.request.id);
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.request.max_new_tokens, y.request.max_new_tokens);
+            assert_eq!(x.request.arrival, y.request.arrival);
+        }
+    }
+
+    #[test]
+    fn merged_stream_is_sorted_with_sequential_ids() {
+        let reqs = TrafficGen::generate(&two_tenant_mix(), 24, &store()).unwrap();
+        let mut prev = 0.0;
+        for (i, tr) in reqs.iter().enumerate() {
+            assert_eq!(tr.request.id, i as u64);
+            assert!(tr.request.arrival >= prev, "arrivals out of order at {i}");
+            prev = tr.request.arrival;
+            assert!(tr.tenant < 2);
+        }
+        // Both tenants contribute — gold's higher rate dominates but the
+        // bursty bulk tenant still lands requests.
+        assert!(reqs.iter().any(|t| t.tenant == 0));
+        assert!(reqs.iter().any(|t| t.tenant == 1));
+    }
+
+    #[test]
+    fn pareto_lengths_stay_in_bounds() {
+        let mut rng = XorShift::new(7);
+        let dist = LengthDist::BoundedPareto { alpha: 1.2, lo: 8, hi: 32 };
+        let mut seen_lo = usize::MAX;
+        let mut seen_hi = 0;
+        for _ in 0..500 {
+            let n = sample_len(&dist, &mut rng);
+            assert!((8..=32).contains(&n), "sample {n} out of bounds");
+            seen_lo = seen_lo.min(n);
+            seen_hi = seen_hi.max(n);
+        }
+        // Heavy tail: the low end is common, the high end reachable.
+        assert!(seen_lo <= 10, "min sample {seen_lo} suspiciously high");
+        assert!(seen_hi >= 16, "max sample {seen_hi} suspiciously low");
+    }
+
+    #[test]
+    fn diurnal_arrivals_are_monotone_and_modulated() {
+        let mut st = ArrivalState::new(ArrivalKind::Diurnal {
+            base_rate: 5.0,
+            peak_rate: 200.0,
+            period: 1.0,
+        });
+        let mut rng = XorShift::new(11);
+        let mut now = 0.0;
+        for _ in 0..200 {
+            let next = st.next_arrival(now, &mut rng);
+            assert!(next > now);
+            now = next;
+        }
+    }
+
+    #[test]
+    fn mmpp_visits_both_states() {
+        let mut st = ArrivalState::new(ArrivalKind::Mmpp {
+            calm_rate: 5.0,
+            burst_rate: 100.0,
+            p_flip: 0.3,
+        });
+        let mut rng = XorShift::new(3);
+        let mut now = 0.0;
+        let mut flips = 0;
+        let mut prev_state = st.burst;
+        for _ in 0..200 {
+            now = st.next_arrival(now, &mut rng);
+            if st.burst != prev_state {
+                flips += 1;
+                prev_state = st.burst;
+            }
+        }
+        assert!(flips > 10, "MMPP never alternated states ({flips} flips)");
+        assert!(now.is_finite());
+    }
+
+    #[test]
+    fn empty_mix_is_rejected() {
+        let err = TrafficGen::generate(&TenantMix::default(), 4, &store())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+}

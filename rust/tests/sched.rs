@@ -1,0 +1,275 @@
+//! Scheduler subsystem integration tests (DESIGN.md §13), artifact-free
+//! on the synthetic model.
+//!
+//! * **The fifo pin** — the default build, an explicit
+//!   `.scheduler("fifo")` build, and the legacy
+//!   `coordinator::scheduler::serve` loop must produce byte-identical
+//!   reports (tokens, byte ledger, stall breakdown, per-request record
+//!   timings) on offline, online and sharded workloads, and neither
+//!   server build may grow a sched ledger.
+//! * **The slo discipline end-to-end** — tenant-tagged traffic through
+//!   `Server` must replay deterministically, conserve the scheduling
+//!   ledger, attribute every completion to its tenant, and keep the
+//!   deadline hit/miss split consistent with the per-request records.
+//! * **Registry integration** — runtime-registered disciplines serve
+//!   through `ServerBuilder` by name; unknown names fail at `build()`
+//!   with the registered-name list.
+
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{
+    PolicyConfig, PriorityClass, ShardConfig, SystemConfig, TenantMix, TenantSpec,
+};
+use beam_moe::coordinator::scheduler::serve;
+use beam_moe::coordinator::{Report, ServeEngine};
+use beam_moe::sched::FifoScheduler;
+use beam_moe::server::{Server, ServerBuilder, SessionStatus};
+use beam_moe::synth;
+use beam_moe::workload::{Request, TrafficGen, WorkloadConfig, WorkloadGen};
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+fn model() -> beam_moe::StagedModel {
+    synth::tiny_model(backend(), "synthetic-tiny").unwrap()
+}
+
+fn policy() -> PolicyConfig {
+    PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0)
+}
+
+/// The offload-pressured testbed (cache holds two experts), where
+/// admission order shows up in the byte ledger and the stall breakdown.
+fn sys_offload() -> SystemConfig {
+    let m = model();
+    let mut sys = SystemConfig::scaled_for(&m.manifest.model, false);
+    sys.gpu_cache_bytes = 2 * m.manifest.transfer.fp16_expert_bytes;
+    sys
+}
+
+fn requests(cfg: &WorkloadConfig) -> Vec<Request> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    WorkloadGen::generate(cfg, &eval).unwrap()
+}
+
+fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
+    assert_eq!(a.n_requests, b.n_requests, "{label}: n_requests");
+    assert_eq!(a.total_generated, b.total_generated, "{label}: tokens");
+    assert_eq!(a.decode_steps, b.decode_steps, "{label}: decode_steps");
+    assert_eq!(a.prefills, b.prefills, "{label}: prefills");
+    assert_eq!(a.virtual_seconds, b.virtual_seconds, "{label}: virtual time");
+    assert_eq!(a.bytes, b.bytes, "{label}: byte ledger");
+    let (x, y) = (&a.breakdown, &b.breakdown);
+    assert_eq!(x.transfer_weights_s, y.transfer_weights_s, "{label}: transfer_weights_s");
+    assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
+    assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(ra.id, rb.id, "{label}: record id");
+        assert_eq!(ra.generated, rb.generated, "{label}: generated of {}", ra.id);
+        assert_eq!(ra.arrival, rb.arrival, "{label}: arrival of {}", ra.id);
+        assert_eq!(ra.first_token_at, rb.first_token_at, "{label}: ttft of {}", ra.id);
+        assert_eq!(ra.finished_at, rb.finished_at, "{label}: finish of {}", ra.id);
+    }
+}
+
+/// Run one workload through the three fifo paths and pin them together.
+fn pin_fifo(label: &str, reqs: &[Request], shard: Option<ShardConfig>) {
+    let build = |scheduler: Option<&str>| -> Server {
+        let mut builder = ServerBuilder::new(model()).policy(policy()).system(sys_offload());
+        if let Some(s) = &shard {
+            builder = builder.shard(s.clone());
+        }
+        if let Some(name) = scheduler {
+            builder = builder.scheduler(name);
+        }
+        builder.build().unwrap()
+    };
+    let serve_through = |mut server: Server| -> Report {
+        for req in reqs {
+            server.submit(req.clone()).unwrap();
+        }
+        server.run_to_completion().unwrap();
+        server.report()
+    };
+
+    let default_run = serve_through(build(None));
+    let explicit_run = serve_through(build(Some("fifo")));
+    let aliased_run = serve_through(build(Some("default")));
+
+    let mut sys = sys_offload();
+    if let Some(s) = &shard {
+        sys.shard = s.clone();
+    }
+    let mut engine = ServeEngine::with_prefetch(
+        model(),
+        policy(),
+        sys,
+        beam_moe::config::PrefetchConfig::off(),
+    )
+    .unwrap();
+    let legacy = serve(&mut engine, reqs.to_vec()).unwrap();
+
+    assert_reports_identical(&legacy, &default_run, &format!("{label}: default vs legacy"));
+    assert_reports_identical(&legacy, &explicit_run, &format!("{label}: fifo vs legacy"));
+    assert_reports_identical(&legacy, &aliased_run, &format!("{label}: alias vs legacy"));
+    assert!(default_run.sched.is_none(), "{label}: default build grew a sched ledger");
+    assert!(explicit_run.sched.is_none(), "{label}: explicit fifo grew a sched ledger");
+}
+
+#[test]
+fn fifo_pin_offline() {
+    let reqs = requests(&WorkloadConfig::offline(6, 32, 8));
+    pin_fifo("offline", &reqs, None);
+}
+
+#[test]
+fn fifo_pin_online() {
+    let mut cfg = WorkloadConfig::offline(6, 32, 8);
+    cfg.arrival_rate = Some(300.0);
+    cfg.seed = 0xD1FF;
+    let reqs = requests(&cfg);
+    pin_fifo("online", &reqs, None);
+}
+
+#[test]
+fn fifo_pin_sharded() {
+    let pairs = {
+        let dims = synth::tiny_dims("synthetic-tiny");
+        dims.n_layers * dims.n_experts
+    };
+    let q = synth::tiny_manifest("synthetic-tiny").q_expert_bytes(synth::SYNTH_BITS);
+    let reqs = requests(&WorkloadConfig::offline(5, 24, 6));
+    pin_fifo("sharded", &reqs, Some(ShardConfig::new(2, pairs * q)));
+}
+
+/// The two-tenant mix the end-to-end slo tests use: an interactive
+/// deadline tenant (sheds expired work) over a bursty batch tenant.
+fn slo_mix() -> TenantMix {
+    TenantMix::parse(
+        "seed 77\n\
+         tenant gold class=interactive rate=120 prompt=24 output=4 deadline=0.4 weight=4 shed_expired\n\
+         tenant bulk class=batch rate=mmpp:40:200:0.25 prompt=pareto:1.2:12:40 output=pareto:1.3:3:8\n",
+    )
+    .unwrap()
+}
+
+fn run_slo(mix: &TenantMix, n: usize) -> Report {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    let traffic = TrafficGen::generate(mix, n, &eval).unwrap();
+    let mut server = ServerBuilder::new(model())
+        .policy(policy())
+        .system(sys_offload())
+        .scheduler("slo")
+        .tenants(mix.clone())
+        .build()
+        .unwrap();
+    let mut ids = Vec::new();
+    for t in &traffic {
+        ids.push(server.submit_for_tenant(t.request.clone(), Some(t.tenant)).unwrap());
+    }
+    server.run_to_completion().unwrap();
+    for id in ids {
+        let s = server.session(id).unwrap();
+        assert!(
+            matches!(s.status(), SessionStatus::Finished | SessionStatus::Shed),
+            "session {id} not terminal: {:?}",
+            s.status()
+        );
+    }
+    server.report()
+}
+
+#[test]
+fn slo_end_to_end_ledger_is_conserved_and_deterministic() {
+    let mix = slo_mix();
+    let report = run_slo(&mix, 14);
+    let replay = run_slo(&mix, 14);
+
+    let s = report.sched.as_ref().expect("slo run must report a sched ledger");
+    let r = replay.sched.as_ref().expect("slo replay must report a sched ledger");
+    assert_eq!(s.summary(), r.summary(), "sched ledger replays identically");
+    assert_eq!(report.total_generated, replay.total_generated, "tokens replay identically");
+    assert_eq!(report.virtual_seconds, replay.virtual_seconds, "time replays identically");
+
+    // Conservation: no cancels, no queue caps — everything submitted is
+    // either admitted (and completes) or shed as expired.
+    assert_eq!(s.scheduler, "slo");
+    assert_eq!(s.submitted, 14);
+    assert_eq!(s.admitted + s.shed, s.submitted, "ledger conservation");
+    assert_eq!(report.requests.len() as u64, s.admitted, "one record per admitted request");
+
+    // Per-tenant rows partition the totals, and the deadline split
+    // covers exactly the deadline tenant's completions.
+    let submitted: u64 = s.per_tenant.iter().map(|t| t.submitted).sum();
+    let admitted: u64 = s.per_tenant.iter().map(|t| t.admitted).sum();
+    let shed: u64 = s.per_tenant.iter().map(|t| t.shed).sum();
+    assert_eq!((submitted, admitted, shed), (s.submitted, s.admitted, s.shed));
+    let gold = s.per_tenant.iter().find(|t| t.name == "gold").expect("gold row");
+    assert_eq!(
+        s.deadline_hits + s.deadline_misses,
+        gold.completed,
+        "deadline split covers the deadline tenant's completions"
+    );
+    let bulk = s.per_tenant.iter().find(|t| t.name == "bulk").expect("bulk row");
+    assert_eq!(gold.completed + bulk.completed, report.requests.len() as u64);
+}
+
+#[test]
+fn slo_untagged_submissions_land_in_the_implicit_tenant() {
+    let mix = slo_mix();
+    let reqs = requests(&WorkloadConfig::offline(3, 24, 4));
+    let mut server = ServerBuilder::new(model())
+        .policy(policy())
+        .system(sys_offload())
+        .scheduler("slo")
+        .tenants(mix)
+        .build()
+        .unwrap();
+    for req in &reqs {
+        server.submit(req.clone()).unwrap();
+    }
+    server.run_to_completion().unwrap();
+    let report = server.report();
+    let s = report.sched.as_ref().unwrap();
+    let untagged =
+        s.per_tenant.iter().find(|t| t.name == "(untagged)").expect("implicit row");
+    assert_eq!(untagged.submitted, 3);
+    assert_eq!(untagged.completed, 3);
+}
+
+#[test]
+fn runtime_registered_discipline_serves_through_builder() {
+    beam_moe::sched::register_scheduler("test-fifo-clone", |_, _| {
+        Ok(Box::new(FifoScheduler::new()))
+    });
+    let reqs = requests(&WorkloadConfig::offline(4, 24, 4));
+    let mut server = ServerBuilder::new(model())
+        .policy(policy())
+        .system(sys_offload())
+        .scheduler("test-fifo-clone")
+        .build()
+        .unwrap();
+    for req in &reqs {
+        server.submit(req.clone()).unwrap();
+    }
+    server.run_to_completion().unwrap();
+    assert_eq!(server.scheduler_name(), "fifo", "clone delegates to FifoScheduler");
+    assert_eq!(server.report().requests.len(), 4);
+}
+
+#[test]
+fn unknown_scheduler_fails_at_build_with_name_list() {
+    let err = ServerBuilder::new(model())
+        .policy(policy())
+        .scheduler("edf")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown scheduler `edf`"), "{err}");
+    assert!(err.contains("fifo") && err.contains("slo"), "{err}");
+}
