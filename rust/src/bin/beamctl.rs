@@ -1,0 +1,8 @@
+//! `beamctl` — the control-plane client for a running `beamd`
+//! (DESIGN.md §14).  Thin wrapper over
+//! [`beam_moe::ctl::client::run_cli`]; also reachable as `beam ctl …`.
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    beam_moe::ctl::client::run_cli(&args)
+}

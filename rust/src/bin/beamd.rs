@@ -1,0 +1,9 @@
+//! `beamd` — the live-reconfigurable serving daemon (DESIGN.md §14).
+//!
+//! Thin wrapper over [`beam_moe::ctl::daemon::run_cli`]; also reachable
+//! as `beam daemon …`.  See the README's control-plane quickstart.
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    beam_moe::ctl::daemon::run_cli(&args)
+}

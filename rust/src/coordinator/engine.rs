@@ -431,6 +431,129 @@ impl ServeEngine {
         self.predictor.is_some() && self.prefetch_cfg.issuable()
     }
 
+    // -- live-reconfiguration seams (DESIGN.md §14): each setter changes
+    // exactly one knob and is only invoked between ticks — the same
+    // boundary the §10 replan / §11 reconcile / §12 fault-apply run at,
+    // so determinism and the per-step ledgers are preserved ----------------
+
+    /// A predictor was constructed, so the prefetch knobs are live (an
+    /// off-like predictor name builds none — retuning budgets then would
+    /// be a silent no-op, which the control plane rejects instead).
+    pub fn has_predictor(&self) -> bool {
+        self.predictor.is_some()
+    }
+
+    /// Current per-decode-step speculative transfer budget (bytes).
+    pub fn prefetch_budget(&self) -> usize {
+        self.prefetch_cfg.budget_bytes
+    }
+
+    /// Retarget the speculative budget.  Effective at the next decode
+    /// step: prefetches are only issued inside `decode_step`, and the
+    /// issue path re-reads both the config and the queue budget fresh.
+    pub fn set_prefetch_budget(&mut self, bytes: usize) {
+        self.prefetch_cfg.budget_bytes = bytes;
+        self.prefetch.step_budget = bytes;
+    }
+
+    /// Current prefetch lookahead (layers ahead predictions target).
+    pub fn prefetch_lookahead(&self) -> usize {
+        self.prefetch_cfg.lookahead
+    }
+
+    /// Retarget the lookahead (read fresh at every issue).
+    pub fn set_prefetch_lookahead(&mut self, lookahead: usize) {
+        self.prefetch_cfg.lookahead = lookahead;
+    }
+
+    /// The §10 precision allocator's byte budget; `None` when the policy
+    /// consumes no precision plan (no allocator was built).
+    pub fn alloc_budget(&self) -> Option<usize> {
+        self.alloc.as_ref().map(PrecisionAllocator::budget)
+    }
+
+    /// Retarget the allocator budget; the §10 replan at the next decode
+    /// boundary re-plans under it.  `false` when no allocator exists.
+    pub fn set_alloc_budget(&mut self, bytes: usize) -> bool {
+        match self.alloc.as_mut() {
+            Some(a) => {
+                a.set_budget(bytes);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The live per-device replica budget: what the replicator actually
+    /// plans under, `0` when replication is inactive.
+    pub fn replicate_budget(&self) -> usize {
+        self.replicator.as_ref().map_or(0, Replicator::budget_bytes)
+    }
+
+    /// Number of devices in the expert-parallel fleet.
+    pub fn n_devices(&self) -> usize {
+        self.topology.n_devices
+    }
+
+    /// Retarget the per-device replica budget (DESIGN.md §11).  The §11
+    /// reconcile at the next decode boundary re-plans under it — a shrunk
+    /// (or zeroed) budget empties the plan and unpins stale replicas; a
+    /// 0→nonzero change on a multi-device fleet constructs a fresh
+    /// replicator whose popularity EWMA warms over the following steps.
+    /// `false` on a single-device fleet, where replication cannot apply.
+    /// The cost model's view of the budget is kept in sync so
+    /// `cache_view` capacities and the shard report stay consistent.
+    pub fn set_replicate_budget(&mut self, bytes: usize) -> bool {
+        if self.topology.n_devices < 2 {
+            return false;
+        }
+        self.cost.sys.shard.replicate_budget_bytes = bytes;
+        match self.replicator.as_mut() {
+            Some(r) => r.set_budget_bytes(bytes),
+            None => {
+                if bytes > 0 {
+                    let dims = &self.model.manifest.model;
+                    self.replicator = Some(Replicator::new(
+                        dims.n_layers,
+                        dims.n_experts,
+                        self.topology.n_devices,
+                        bytes,
+                    ));
+                }
+            }
+        }
+        true
+    }
+
+    /// Per-device cache snapshots in fleet order (the `beamctl status`
+    /// surface; [`ServeEngine::cache_view`] is their aggregate).
+    pub fn device_cache_views(&self) -> Vec<CacheView> {
+        let replica_cap = if self.replicator.is_some() {
+            self.cost.sys.shard.replicate_budget_bytes
+        } else {
+            0
+        };
+        self.devices
+            .iter()
+            .map(|d| {
+                let (hits, misses) = (d.cache.hits, d.cache.misses);
+                CacheView {
+                    entries: d.cache.len(),
+                    used_bytes: d.cache.used_bytes() + d.cache.pinned_bytes(),
+                    capacity_bytes: d.cache.capacity() + replica_cap,
+                    hits,
+                    misses,
+                    evictions: d.cache.evictions,
+                    hit_rate: if hits + misses == 0 {
+                        0.0
+                    } else {
+                        hits as f64 / (hits + misses) as f64
+                    },
+                }
+            })
+            .collect()
+    }
+
     /// Tokens generated since the last drain (session-event seam).
     pub(crate) fn take_emitted(&mut self) -> Vec<EmittedToken> {
         std::mem::take(&mut self.emitted)

@@ -1,0 +1,253 @@
+//! The append-only reconfiguration audit ledger (DESIGN.md §14).
+//!
+//! Every change the control plane *applies or rejects* becomes one
+//! [`AuditRecord`]: a monotone sequence number, the virtual time and
+//! decode step it landed at, the knob, its old→new value, the origin
+//! label, and the outcome (with a reason when rejected).  Records live
+//! in memory and — when a ledger file is attached — are appended as one
+//! `jsonx` object per line, so the file replays losslessly through
+//! [`AuditLedger::load`] (the CI smoke job's "replays cleanly" check).
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{self, Value};
+
+/// Did the change land or was it refused?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuditOutcome {
+    Applied,
+    Rejected,
+}
+
+impl AuditOutcome {
+    fn as_str(self) -> &'static str {
+        match self {
+            AuditOutcome::Applied => "applied",
+            AuditOutcome::Rejected => "rejected",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "applied" => Ok(AuditOutcome::Applied),
+            "rejected" => Ok(AuditOutcome::Rejected),
+            other => bail!("unknown audit outcome `{other}`"),
+        }
+    }
+}
+
+/// One applied-or-rejected reconfiguration, as the ledger stores it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditRecord {
+    /// Monotone per-server sequence number (0-based).
+    pub seq: u64,
+    /// Virtual time the change was applied/rejected at.
+    pub virtual_time: f64,
+    /// Decode steps completed when it landed (the boundary index).
+    pub decode_step: u64,
+    /// Wire name of the knob (`prefetch-budget`, `scheduler`, …).
+    pub knob: String,
+    /// Value before the change (`none` when the knob had no live value).
+    pub old: String,
+    /// Requested value.
+    pub new: String,
+    /// Who asked: `beamctl`, a profile name, a test — free-form.
+    pub origin: String,
+    pub outcome: AuditOutcome,
+    /// Why a rejected change was refused; empty for applied ones.
+    pub reason: String,
+}
+
+impl AuditRecord {
+    /// Render as the JSONL wire/file object.
+    pub fn to_value(&self) -> Value {
+        let mut pairs = vec![
+            ("seq", Value::Num(self.seq as f64)),
+            ("virtual_time", Value::Num(self.virtual_time)),
+            ("decode_step", Value::Num(self.decode_step as f64)),
+            ("knob", Value::Str(self.knob.clone())),
+            ("old", Value::Str(self.old.clone())),
+            ("new", Value::Str(self.new.clone())),
+            ("origin", Value::Str(self.origin.clone())),
+            ("outcome", Value::Str(self.outcome.as_str().to_string())),
+        ];
+        if !self.reason.is_empty() {
+            pairs.push(("reason", Value::Str(self.reason.clone())));
+        }
+        jsonx::obj(pairs)
+    }
+
+    /// Parse one ledger object back into a record (the replay path).
+    pub fn from_value(v: &Value) -> Result<AuditRecord> {
+        Ok(AuditRecord {
+            seq: v.get("seq")?.usize()? as u64,
+            virtual_time: v.get("virtual_time")?.f64()?,
+            decode_step: v.get("decode_step")?.usize()? as u64,
+            knob: v.get("knob")?.str()?.to_string(),
+            old: v.get("old")?.str()?.to_string(),
+            new: v.get("new")?.str()?.to_string(),
+            origin: v.get("origin")?.str()?.to_string(),
+            outcome: AuditOutcome::parse(v.get("outcome")?.str()?)?,
+            reason: match v.opt("reason") {
+                Some(r) => r.str()?.to_string(),
+                None => String::new(),
+            },
+        })
+    }
+}
+
+/// The append-only ledger: in-memory records plus an optional JSONL file
+/// every append is mirrored to.
+#[derive(Default)]
+pub struct AuditLedger {
+    records: Vec<AuditRecord>,
+    file: Option<(PathBuf, File)>,
+}
+
+impl AuditLedger {
+    /// In-memory-only ledger (every server starts with one).
+    pub fn new() -> Self {
+        AuditLedger::default()
+    }
+
+    /// Mirror all *future* appends to `path` (append mode — an existing
+    /// ledger file keeps its history, matching "append-only").
+    pub fn attach_file(&mut self, path: &Path) -> Result<()> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening audit ledger {}", path.display()))?;
+        self.file = Some((path.to_path_buf(), file));
+        Ok(())
+    }
+
+    /// Path of the attached ledger file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.file.as_ref().map(|(p, _)| p.as_path())
+    }
+
+    /// Next sequence number (what the upcoming append will get).
+    pub fn next_seq(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Append one record (assigning it the next sequence number) and
+    /// mirror it to the attached file.
+    pub fn append(&mut self, mut record: AuditRecord) -> Result<&AuditRecord> {
+        record.seq = self.next_seq();
+        if let Some((path, file)) = self.file.as_mut() {
+            writeln!(file, "{}", record.to_value())
+                .with_context(|| format!("appending to audit ledger {}", path.display()))?;
+        }
+        self.records.push(record);
+        Ok(self.records.last().expect("just pushed"))
+    }
+
+    /// Every record, oldest first.
+    pub fn records(&self) -> &[AuditRecord] {
+        &self.records
+    }
+
+    /// The last `n` records, oldest first (`beamctl audit tail`).
+    pub fn tail(&self, n: usize) -> &[AuditRecord] {
+        &self.records[self.records.len().saturating_sub(n)..]
+    }
+
+    /// Parse a ledger file back into records — the "replays cleanly"
+    /// check: every line must parse and sequence numbers must be the
+    /// contiguous 0..n the appender wrote.
+    pub fn load(path: &Path) -> Result<Vec<AuditRecord>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading audit ledger {}", path.display()))?;
+        let mut records = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Value::parse(line)
+                .with_context(|| format!("audit ledger line {}", lineno + 1))?;
+            let rec = AuditRecord::from_value(&v)
+                .with_context(|| format!("audit ledger line {}", lineno + 1))?;
+            anyhow::ensure!(
+                rec.seq == records.len() as u64,
+                "audit ledger line {}: sequence gap (got seq {}, expected {})",
+                lineno + 1,
+                rec.seq,
+                records.len(),
+            );
+            records.push(rec);
+        }
+        Ok(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(knob: &str, outcome: AuditOutcome) -> AuditRecord {
+        AuditRecord {
+            seq: 0,
+            virtual_time: 1.25,
+            decode_step: 3,
+            knob: knob.to_string(),
+            old: "1024".to_string(),
+            new: "2048".to_string(),
+            origin: "test".to_string(),
+            outcome,
+            reason: match outcome {
+                AuditOutcome::Rejected => "nope".to_string(),
+                AuditOutcome::Applied => String::new(),
+            },
+        }
+    }
+
+    #[test]
+    fn record_round_trips_through_jsonx() {
+        for outcome in [AuditOutcome::Applied, AuditOutcome::Rejected] {
+            let r = rec("prefetch-budget", outcome);
+            let line = r.to_value().to_string();
+            assert!(!line.contains('\n'), "one line per record: {line}");
+            let back = AuditRecord::from_value(&Value::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn ledger_assigns_seq_and_tails() {
+        let mut l = AuditLedger::new();
+        for i in 0..5 {
+            let r = l.append(rec(&format!("k{i}"), AuditOutcome::Applied)).unwrap();
+            assert_eq!(r.seq, i);
+        }
+        assert_eq!(l.records().len(), 5);
+        let tail = l.tail(2);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0].knob, "k3");
+        assert_eq!(l.tail(99).len(), 5, "oversized tail clamps");
+    }
+
+    #[test]
+    fn file_ledger_replays_cleanly() {
+        let dir = std::env::temp_dir().join(format!("beam-audit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("audit.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut l = AuditLedger::new();
+        l.attach_file(&path).unwrap();
+        l.append(rec("lookahead", AuditOutcome::Applied)).unwrap();
+        l.append(rec("scheduler", AuditOutcome::Rejected)).unwrap();
+        let back = AuditLedger::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back, l.records());
+        // A corrupted line is an error, not a silent skip.
+        std::fs::write(&path, "{\"seq\":0\n").unwrap();
+        assert!(AuditLedger::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,217 @@
+//! `beamctl` — the control-plane client (DESIGN.md §14).
+//!
+//! A thin synchronous wrapper over the line protocol: connect to the
+//! daemon's Unix socket, write one request object per line, read one
+//! response object per line.  [`CtlClient`] is the programmatic
+//! surface (tests and the CI smoke job use it); [`run_cli`] is the
+//! `beamctl` binary's argument-to-request mapping:
+//!
+//! ```text
+//! beamctl --socket PATH status
+//! beamctl --socket PATH get <knob>
+//! beamctl --socket PATH set <knob> <value> [--origin NAME]
+//! beamctl --socket PATH profile load <file> [--origin NAME]
+//! beamctl --socket PATH audit tail [n]
+//! beamctl --socket PATH ping | shutdown
+//! ```
+
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ctl::daemon::parse_flags;
+use crate::jsonx::{self, Value};
+
+/// Flags `beamctl` accepts (both take a value).
+const BEAMCTL_FLAGS: &[&str] = &["origin", "socket"];
+
+/// One connection to a running `beamd`.
+pub struct CtlClient {
+    writer: UnixStream,
+    reader: BufReader<UnixStream>,
+}
+
+impl CtlClient {
+    /// Connect to the daemon's control socket.  Reads time out after
+    /// 30 s so a wedged daemon fails loudly instead of hanging the CI.
+    pub fn connect(socket: &Path) -> Result<Self> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to beamd at {}", socket.display()))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning control stream")?);
+        Ok(CtlClient { writer: stream, reader })
+    }
+
+    /// One request→response round trip.  Protocol-level failures
+    /// (`ok:false`) become contextful errors carrying the daemon's
+    /// reason; the full response object is returned otherwise.
+    pub fn request(&mut self, req: &Value) -> Result<Value> {
+        writeln!(self.writer, "{req}").context("writing to beamd")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading from beamd")?;
+        if n == 0 {
+            bail!("beamd closed the connection");
+        }
+        let resp = Value::parse(line.trim_end()).context("parsing beamd response")?;
+        match resp.get("ok")? {
+            Value::Bool(true) => Ok(resp),
+            _ => bail!("beamd refused: {}", resp.get("error").and_then(Value::str).unwrap_or("?")),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.request(&jsonx::obj(vec![("cmd", Value::Str("ping".into()))]))?;
+        Ok(())
+    }
+
+    /// The full `status` payload object.
+    pub fn status(&mut self) -> Result<Value> {
+        let resp = self.request(&jsonx::obj(vec![("cmd", Value::Str("status".into()))]))?;
+        Ok(resp.get("status")?.clone())
+    }
+
+    /// Current value of one knob.
+    pub fn get(&mut self, knob: &str) -> Result<String> {
+        let resp = self.request(&jsonx::obj(vec![
+            ("cmd", Value::Str("get".into())),
+            ("knob", Value::Str(knob.into())),
+        ]))?;
+        Ok(resp.get("value")?.str()?.to_string())
+    }
+
+    /// Queue one knob change (applied at the daemon's next tick).
+    pub fn set(&mut self, knob: &str, value: &str, origin: &str) -> Result<()> {
+        self.request(&jsonx::obj(vec![
+            ("cmd", Value::Str("set".into())),
+            ("knob", Value::Str(knob.into())),
+            ("value", Value::Str(value.into())),
+            ("origin", Value::Str(origin.into())),
+        ]))?;
+        Ok(())
+    }
+
+    /// Ship a serving-profile text for validated, all-or-nothing apply.
+    pub fn load_profile(&mut self, text: &str, origin: &str) -> Result<usize> {
+        let resp = self.request(&jsonx::obj(vec![
+            ("cmd", Value::Str("profile".into())),
+            ("text", Value::Str(text.into())),
+            ("origin", Value::Str(origin.into())),
+        ]))?;
+        resp.get("queued")?.usize()
+    }
+
+    /// The last `n` audit records, oldest first.
+    pub fn audit_tail(&mut self, n: usize) -> Result<Vec<Value>> {
+        let resp = self.request(&jsonx::obj(vec![
+            ("cmd", Value::Str("audit".into())),
+            ("n", Value::Num(n as f64)),
+        ]))?;
+        Ok(resp.get("records")?.arr()?.to_vec())
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.request(&jsonx::obj(vec![("cmd", Value::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+}
+
+/// Render the `status` payload as the human-readable report `beamctl
+/// status` prints (one `key: value` line per field, stable order).
+pub fn format_status(status: &Value) -> Result<String> {
+    let mut out = String::new();
+    let line = |out: &mut String, k: &str, v: String| {
+        out.push_str(k);
+        out.push_str(": ");
+        out.push_str(&v);
+        out.push('\n');
+    };
+    for key in ["scheduler", "virtual_now", "decode_steps", "prefills", "total_generated"] {
+        line(&mut out, key, status.get(key)?.to_string());
+    }
+    line(&mut out, "sessions", status.get("sessions")?.to_string());
+    for key in ["pending", "max_pending"] {
+        line(&mut out, key, status.get(key)?.to_string());
+    }
+    for (i, dev) in status.get("devices")?.arr()?.iter().enumerate() {
+        line(&mut out, &format!("device[{i}]"), dev.to_string());
+    }
+    line(&mut out, "bytes", status.get("bytes")?.to_string());
+    line(&mut out, "knobs", status.get("knobs")?.to_string());
+    if let Some(sched) = status.opt("sched") {
+        line(&mut out, "sched", sched.to_string());
+        for (i, t) in status.get("tenants")?.arr()?.iter().enumerate() {
+            line(&mut out, &format!("tenant[{i}]"), t.to_string());
+        }
+    }
+    Ok(out)
+}
+
+/// The `beamctl` entrypoint: split flags from the positional command,
+/// run it, print the result to stdout.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (flag_args, positional): (Vec<String>, Vec<String>) = {
+        let mut flags = Vec::new();
+        let mut pos = Vec::new();
+        let mut it = args.iter().cloned();
+        while let Some(a) = it.next() {
+            if a.starts_with("--") {
+                flags.push(a);
+                if let Some(v) = it.next() {
+                    flags.push(v);
+                }
+            } else {
+                pos.push(a);
+            }
+        }
+        (flags, pos)
+    };
+    let flags = parse_flags(&flag_args, BEAMCTL_FLAGS)?;
+    let socket = flags.get("socket").context("beamctl needs --socket PATH")?;
+    let origin = flags.get("origin").map(String::as_str).unwrap_or("beamctl");
+    let mut client = CtlClient::connect(Path::new(socket))?;
+    let pos: Vec<&str> = positional.iter().map(String::as_str).collect();
+    match pos.as_slice() {
+        ["ping"] => {
+            client.ping()?;
+            println!("pong");
+        }
+        ["status"] => print!("{}", format_status(&client.status()?)?),
+        ["get", knob] => println!("{}", client.get(knob)?),
+        ["set", knob, value] => {
+            client.set(knob, value, origin)?;
+            println!("queued: {knob} = {value}");
+        }
+        ["profile", "load", file] => {
+            let text = std::fs::read_to_string(file)
+                .with_context(|| format!("reading profile {file}"))?;
+            let n = client.load_profile(&text, origin)?;
+            println!("queued: {n} knob(s) from {file}");
+        }
+        ["audit", "tail"] => print_audit(&client.audit_tail(10)?),
+        ["audit", "tail", n] => {
+            let n = n.parse::<usize>().with_context(|| format!("bad tail count `{n}`"))?;
+            print_audit(&client.audit_tail(n)?)
+        }
+        ["shutdown"] => {
+            client.shutdown()?;
+            println!("shutdown requested");
+        }
+        other => bail!(
+            "unknown beamctl command `{}` — valid: status | get <knob> | set <knob> <value> | \
+             profile load <file> | audit tail [n] | ping | shutdown",
+            other.join(" "),
+        ),
+    }
+    Ok(())
+}
+
+/// One JSONL record per line — the same shape the ledger file stores,
+/// so CI can diff `audit tail` output against the file directly.
+fn print_audit(records: &[Value]) {
+    for r in records {
+        println!("{r}");
+    }
+}

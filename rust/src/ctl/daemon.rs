@@ -1,0 +1,303 @@
+//! `beamd` — the long-running serving daemon (DESIGN.md §14).
+//!
+//! Owns a [`Server`] and single-threadedly multiplexes two things:
+//! client lines arriving on a Unix domain socket (dispatched through
+//! [`crate::ctl::protocol::handle_line`]) and the serve loop itself
+//! (one [`Server::tick`] per iteration).  Because every reconfiguration
+//! lands at the *top* of `tick`, an idle daemon still applies queued
+//! changes — the boundary between ticks is a step boundary whether or
+//! not tokens are flowing.
+//!
+//! The daemon is deliberately synchronous and allocation-light: accepts
+//! and reads are nonblocking, writes retry briefly on a full socket
+//! buffer, and a fully idle iteration sleeps ~1 ms so the loop doesn't
+//! spin.  `beamctl shutdown` (or dropping every client after `--ticks`)
+//! exits cleanly and removes the socket file.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read as _, Write as _};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{Backend, ReferenceBackend};
+use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig, TenantMix};
+use crate::ctl::protocol;
+use crate::server::{Server, ServerBuilder, ServerTick};
+use crate::synth;
+
+/// Flags `beamd` accepts (all take a value; sorted for error output).
+const BEAMD_FLAGS: &[&str] = &[
+    "alloc-budget",
+    "audit",
+    "bits",
+    "devices",
+    "lookahead",
+    "max-pending",
+    "policy",
+    "prefetch",
+    "prefetch-budget",
+    "replicate-budget",
+    "scheduler",
+    "socket",
+    "tenants",
+    "top-n",
+];
+
+/// Strict `--flag value` parser: every flag must be in `allowed`, every
+/// flag takes exactly one value, and positional tokens are rejected
+/// (the satellite of DESIGN.md §14: typos never fall through to
+/// defaults).
+pub fn parse_flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        let Some(name) = arg.strip_prefix("--") else {
+            bail!("unexpected positional argument `{arg}`");
+        };
+        if !allowed.contains(&name) {
+            bail!("unknown flag `--{name}` — valid flags: --{}", allowed.join(", --"));
+        }
+        let Some(value) = it.next() else {
+            bail!("flag `--{name}` wants a value");
+        };
+        flags.insert(name.to_string(), value.clone());
+    }
+    Ok(flags)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, name: &str) -> Result<Option<usize>> {
+    flags
+        .get(name)
+        .map(|v| {
+            v.parse::<usize>()
+                .with_context(|| format!("flag `--{name}` wants an integer, got `{v}`"))
+        })
+        .transpose()
+}
+
+/// Build the daemon's server on the zero-artifact synthetic model from
+/// parsed flags (the same knobs `beam serve` exposes, minus artifacts —
+/// beamd's CI/ops niche is the dependency-free synth path).
+pub fn build_server(flags: &HashMap<String, String>) -> Result<Server> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let manifest = model.manifest.clone();
+    let dims = manifest.model.clone();
+    let bits = match flags.get("bits") {
+        Some(v) => v.parse::<u8>().with_context(|| format!("bad --bits `{v}`"))?,
+        None => synth::SYNTH_BITS,
+    };
+    let q = manifest.q_expert_bytes(bits);
+
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("static-quant");
+    let top_n = flag_usize(flags, "top-n")?.unwrap_or(dims.top_n);
+    let mut policy = PolicyConfig::new(policy_name, bits, top_n);
+    policy.alloc_budget_bytes = flag_usize(flags, "alloc-budget")?;
+
+    let predictor = flags.get("prefetch").map(String::as_str).unwrap_or("off");
+    let prefetch = if predictor == "off" {
+        PrefetchConfig::off()
+    } else {
+        let lookahead = flag_usize(flags, "lookahead")?.unwrap_or(1);
+        let budget =
+            flag_usize(flags, "prefetch-budget")?.unwrap_or(dims.top_k * dims.n_layers * q);
+        PrefetchConfig::new(predictor, lookahead, budget)
+    };
+
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let mut builder = ServerBuilder::new(model).policy(policy).system(sys).prefetch(prefetch);
+    let devices = flag_usize(flags, "devices")?.unwrap_or(1);
+    if devices > 1 {
+        let budget = flag_usize(flags, "replicate-budget")?.unwrap_or(0);
+        builder = builder.shard(ShardConfig::new(devices, budget));
+    }
+    if let Some(path) = flags.get("tenants") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tenants file {path}"))?;
+        builder = builder.tenants(TenantMix::parse(&text)?);
+    }
+    if let Some(name) = flags.get("scheduler") {
+        builder = builder.scheduler(name);
+    }
+    if let Some(mp) = flag_usize(flags, "max-pending")? {
+        builder = builder.max_pending(mp);
+    }
+    builder.build()
+}
+
+struct Conn {
+    stream: UnixStream,
+    buf: Vec<u8>,
+}
+
+/// Pull every available byte off a connection; returns the complete
+/// lines received and whether the peer closed its write side.
+fn drain_lines(conn: &mut Conn) -> std::io::Result<(Vec<String>, bool)> {
+    let mut eof = false;
+    let mut tmp = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => {
+                eof = true;
+                break;
+            }
+            Ok(n) => conn.buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut lines = Vec::new();
+    while let Some(pos) = conn.buf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = conn.buf.drain(..=pos).collect();
+        let s = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+        if !s.trim().is_empty() {
+            lines.push(s);
+        }
+    }
+    Ok((lines, eof))
+}
+
+/// Write one response line, retrying briefly when the (nonblocking)
+/// socket buffer is full.  Responses are small; a peer that stays
+/// unwritable for ~1 s is treated as gone.
+fn write_line(stream: &mut UnixStream, line: &str) -> std::io::Result<()> {
+    let mut data = Vec::with_capacity(line.len() + 1);
+    data.extend_from_slice(line.as_bytes());
+    data.push(b'\n');
+    let mut off = 0;
+    let mut spins = 0u32;
+    while off < data.len() {
+        match stream.write(&data[off..]) {
+            Ok(0) => return Err(std::io::Error::new(ErrorKind::WriteZero, "socket closed")),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                spins += 1;
+                if spins > 5000 {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Run the daemon loop until a client sends `shutdown`.  Multiplexes
+/// nonblocking socket I/O with `server.tick()`; a fully idle iteration
+/// (loop drained, no client traffic) sleeps ~1 ms.  The socket file is
+/// replaced on entry and removed on exit.
+pub fn serve(server: &mut Server, socket: &Path, audit: Option<&Path>) -> Result<()> {
+    if let Some(path) = audit {
+        server.attach_audit_file(path)?;
+    }
+    let _ = std::fs::remove_file(socket);
+    let listener = UnixListener::bind(socket)
+        .with_context(|| format!("binding control socket {}", socket.display()))?;
+    listener.set_nonblocking(true).context("control socket nonblocking")?;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut shutdown = false;
+    while !shutdown {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true).context("client nonblocking")?;
+                    conns.push(Conn { stream, buf: Vec::new() });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting control client"),
+            }
+        }
+        let mut handled = 0usize;
+        let mut closed: Vec<usize> = Vec::new();
+        for (i, conn) in conns.iter_mut().enumerate() {
+            let (lines, eof) = match drain_lines(conn) {
+                Ok(r) => r,
+                Err(_) => {
+                    closed.push(i);
+                    continue;
+                }
+            };
+            for line in lines {
+                let (resp, quit) = protocol::handle_line(server, &line);
+                handled += 1;
+                shutdown |= quit;
+                if write_line(&mut conn.stream, &resp).is_err() {
+                    closed.push(i);
+                    break;
+                }
+            }
+            if eof && !closed.contains(&i) {
+                closed.push(i);
+            }
+        }
+        for i in closed.into_iter().rev() {
+            conns.remove(i);
+        }
+        let tick = server.tick()?;
+        if tick == ServerTick::Done && handled == 0 && !shutdown {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    drop(listener);
+    let _ = std::fs::remove_file(socket);
+    Ok(())
+}
+
+/// The `beamd` entrypoint: parse flags, build the synth-model server,
+/// serve the control socket until shutdown.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, BEAMD_FLAGS)?;
+    let socket = flags.get("socket").context("beamd needs --socket PATH")?.clone();
+    let audit = flags.get("audit").cloned();
+    let mut server = build_server(&flags)?;
+    eprintln!(
+        "beamd: serving `{}` via `{}` on {socket}{}",
+        server.model().manifest.model.name,
+        server.scheduler_name(),
+        audit.as_deref().map(|a| format!(" (audit → {a})")).unwrap_or_default(),
+    );
+    serve(&mut server, Path::new(&socket), audit.as_deref().map(Path::new))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_rejects_unknown_and_positional() {
+        let ok = parse_flags(
+            &["--socket".to_string(), "/tmp/s".to_string()],
+            BEAMD_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(ok.get("socket").map(String::as_str), Some("/tmp/s"));
+        let err = parse_flags(&["--sockte".to_string(), "/tmp/s".to_string()], BEAMD_FLAGS)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag `--sockte`"), "{err}");
+        assert!(err.contains("--socket"), "error lists valid flags: {err}");
+        let err = parse_flags(&["serve".to_string()], BEAMD_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("positional"), "{err}");
+        let err = parse_flags(&["--socket".to_string()], BEAMD_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("wants a value"), "{err}");
+    }
+
+    #[test]
+    fn build_server_honours_knob_flags() {
+        let mut flags = HashMap::new();
+        flags.insert("prefetch".to_string(), "gate".to_string());
+        flags.insert("prefetch-budget".to_string(), "4096".to_string());
+        flags.insert("max-pending".to_string(), "8".to_string());
+        let server = build_server(&flags).unwrap();
+        assert_eq!(server.prefetch_config().budget_bytes, 4096);
+        assert_eq!(server.knob_value("max-pending").unwrap(), "8");
+        assert_eq!(server.scheduler_name(), "fifo");
+    }
+}

@@ -1,0 +1,28 @@
+//! Live-reconfigurable control plane (DESIGN.md §14).
+//!
+//! The serving stack is deterministic and boundary-driven: §10 replans,
+//! §11 reconciles and §12 applies faults only *between* decode steps.
+//! This module extends that discipline to operations: a long-running
+//! daemon ([`daemon`], the `beamd` bin) owns a [`crate::server::Server`]
+//! and multiplexes a line-oriented JSON protocol ([`protocol`], encoded
+//! with `jsonx` — zero new deps) over a Unix domain socket, and a client
+//! ([`client`], the `beamctl` bin) reads status, gets/sets live knobs,
+//! loads serving profiles ([`profile`]) and tails the audit ledger.
+//!
+//! Nothing mutates mid-step.  `set` enqueues a validated
+//! [`reconfig::ReconfigEvent`]; the server applies it at the next tick
+//! boundary — the same place the existing planners run — and every
+//! applied *or rejected* change lands in the append-only JSONL
+//! [`audit::AuditLedger`] with virtual time, decode step, old→new value
+//! and origin.  With no events enqueued the serve loop is byte-identical
+//! to a server that never heard of the control plane.
+
+pub mod audit;
+pub mod client;
+pub mod daemon;
+pub mod profile;
+pub mod protocol;
+pub mod reconfig;
+
+pub use audit::{AuditLedger, AuditOutcome, AuditRecord};
+pub use reconfig::{Knob, ReconfigEvent, KNOB_NAMES};

@@ -1,0 +1,131 @@
+//! Serving profiles: a text file of knob settings applied as one batch
+//! (DESIGN.md §14), in the `config.rs` tenant-grammar idiom.
+//!
+//! ```text
+//! # evening-peak serving profile
+//! profile evening-peak           # optional: names the audit origin
+//! set prefetch-budget 8192
+//! set lookahead 2
+//! set scheduler slo
+//! ```
+//!
+//! One directive per line, `#` starts a comment, blank lines are
+//! ignored.  Parsing is strict and *whole-file*: any unknown directive,
+//! unknown knob, malformed value or duplicate knob fails the entire
+//! profile with a line-numbered error — `beamctl profile load` then
+//! applies nothing (all-or-nothing, like `TenantMix::parse`).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+use crate::ctl::reconfig::Knob;
+
+/// A parsed serving profile: its name (audit origin) and knob settings
+/// in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// From the `profile NAME` directive; defaults to `profile`.
+    pub name: String,
+    pub knobs: Vec<Knob>,
+}
+
+impl Profile {
+    /// Parse the profile grammar above.  Strict: the whole text parses
+    /// or the whole profile is refused.
+    pub fn parse(text: &str) -> Result<Profile> {
+        let mut name = "profile".to_string();
+        let mut named = false;
+        let mut knobs: Vec<Knob> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("profile line {}", lineno + 1);
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("profile") => {
+                    let Some(n) = parts.next() else {
+                        bail!("{}: `profile` wants a name", ctx());
+                    };
+                    if named {
+                        bail!("{}: duplicate `profile` directive", ctx());
+                    }
+                    if parts.next().is_some() {
+                        bail!("{}: trailing tokens after profile name", ctx());
+                    }
+                    name = n.to_string();
+                    named = true;
+                }
+                Some("set") => {
+                    let (Some(knob), Some(value)) = (parts.next(), parts.next()) else {
+                        bail!("{}: `set` wants `set <knob> <value>`", ctx());
+                    };
+                    if parts.next().is_some() {
+                        bail!("{}: trailing tokens after `set {knob} {value}`", ctx());
+                    }
+                    let knob =
+                        Knob::parse(knob, value).map_err(|e| e.context(ctx()))?;
+                    knobs.push(knob);
+                }
+                Some(other) => {
+                    bail!("{}: unknown directive `{other}` (expected `profile` or `set`)", ctx())
+                }
+                None => unreachable!("empty lines are skipped"),
+            }
+        }
+        if knobs.is_empty() {
+            bail!("profile sets no knobs — nothing to apply");
+        }
+        let mut seen = BTreeSet::new();
+        for k in &knobs {
+            if !seen.insert(k.name()) {
+                bail!("profile sets knob `{}` more than once", k.name());
+            }
+        }
+        Ok(Profile { name, knobs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_name_comments_and_knobs_in_order() {
+        let p = Profile::parse(
+            "# evening peak\n\
+             profile evening-peak\n\
+             set prefetch-budget 8192   # bytes per step\n\
+             set lookahead 2\n\
+             set scheduler slo\n",
+        )
+        .unwrap();
+        assert_eq!(p.name, "evening-peak");
+        let names: Vec<&str> = p.knobs.iter().map(Knob::name).collect();
+        assert_eq!(names, ["prefetch-budget", "lookahead", "scheduler"]);
+        assert_eq!(p.knobs[2], Knob::Scheduler("slo".to_string()));
+    }
+
+    #[test]
+    fn defaults_name_when_unnamed() {
+        let p = Profile::parse("set max-pending 8\n").unwrap();
+        assert_eq!(p.name, "profile");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, want) in [
+            ("set lookahead 2\nboost everything\n", "profile line 2"),
+            ("set lookahead\n", "wants `set <knob> <value>`"),
+            ("set warp-factor 9\n", "unknown knob `warp-factor`"),
+            ("profile a\nprofile b\nset lookahead 1\n", "duplicate `profile`"),
+            ("set lookahead 1\nset lookahead 2\n", "more than once"),
+            ("# nothing\n", "sets no knobs"),
+            ("set lookahead 1 2\n", "trailing tokens"),
+        ] {
+            let err = format!("{:#}", Profile::parse(text).unwrap_err());
+            assert!(err.contains(want), "`{text}` → {err}");
+        }
+    }
+}

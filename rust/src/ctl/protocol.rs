@@ -1,0 +1,281 @@
+//! The beamd↔beamctl wire protocol (DESIGN.md §14).
+//!
+//! Line-oriented JSON over a Unix domain socket, encoded with the
+//! in-tree [`crate::jsonx`] — zero new dependencies.  One request object
+//! per line in, one response object per line out:
+//!
+//! ```text
+//! → {"cmd":"status"}
+//! → {"cmd":"get","knob":"prefetch-budget"}
+//! → {"cmd":"set","knob":"lookahead","value":"2","origin":"beamctl"}
+//! → {"cmd":"profile","text":"set lookahead 2\n","origin":"beamctl"}
+//! → {"cmd":"audit","n":10}
+//! → {"cmd":"ping"}        → {"cmd":"shutdown"}
+//! ← {"ok":true, ...}      ← {"ok":false,"error":"..."}
+//! ```
+//!
+//! [`handle_line`] is the daemon's entire dispatch — a pure function of
+//! (server, request line) with no socket in sight, so tests and the
+//! `ctl_roundtrip` benchmark drive it in-process.  `set`/`profile` never
+//! mutate directly: they validate and enqueue, and the server applies at
+//! its next tick boundary.  Invalid requests that name a knob are
+//! audited as rejected before the error response goes out.
+
+use anyhow::{bail, Result};
+
+use crate::ctl::profile::Profile;
+use crate::ctl::reconfig::{Knob, ReconfigEvent};
+use crate::jsonx::{self, Value};
+use crate::server::{Server, StatsSnapshot};
+
+/// One parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtlRequest {
+    Ping,
+    Status,
+    Get { knob: String },
+    Set { knob: String, value: String, origin: String },
+    Profile { text: String, origin: String },
+    Audit { n: usize },
+    Shutdown,
+}
+
+/// Parse one request line.  Strict: unknown commands and missing fields
+/// fail contextfully (the error text travels back to the client).
+pub fn parse_request(line: &str) -> Result<CtlRequest> {
+    let v = Value::parse(line)?;
+    let cmd = v.get("cmd")?.str()?;
+    Ok(match cmd {
+        "ping" => CtlRequest::Ping,
+        "status" => CtlRequest::Status,
+        "get" => CtlRequest::Get { knob: v.get("knob")?.str()?.to_string() },
+        "set" => CtlRequest::Set {
+            knob: v.get("knob")?.str()?.to_string(),
+            value: v.get("value")?.str()?.to_string(),
+            origin: origin_of(&v),
+        },
+        "profile" => {
+            CtlRequest::Profile { text: v.get("text")?.str()?.to_string(), origin: origin_of(&v) }
+        }
+        "audit" => CtlRequest::Audit { n: v.opt("n").map(|n| n.usize()).transpose()?.unwrap_or(10) },
+        "shutdown" => CtlRequest::Shutdown,
+        other => bail!(
+            "unknown command `{other}` — valid: audit, get, ping, profile, set, shutdown, status"
+        ),
+    })
+}
+
+fn origin_of(v: &Value) -> String {
+    v.opt("origin")
+        .and_then(|o| o.str().ok())
+        .unwrap_or("beamctl")
+        .to_string()
+}
+
+/// Render a [`StatsSnapshot`] as the `status` response payload.
+pub fn snapshot_to_value(s: &StatsSnapshot) -> Value {
+    let devices: Vec<Value> = s
+        .devices
+        .iter()
+        .map(|d| {
+            jsonx::obj(vec![
+                ("entries", Value::Num(d.entries as f64)),
+                ("used_bytes", Value::Num(d.used_bytes as f64)),
+                ("capacity_bytes", Value::Num(d.capacity_bytes as f64)),
+                ("hits", Value::Num(d.hits as f64)),
+                ("misses", Value::Num(d.misses as f64)),
+                ("evictions", Value::Num(d.evictions as f64)),
+                ("hit_rate", Value::Num(d.hit_rate)),
+            ])
+        })
+        .collect();
+    let bytes: Vec<(String, Value)> =
+        s.bytes.iter().map(|(k, v)| (k.clone(), Value::Num(*v as f64))).collect();
+    let knobs: Vec<(String, Value)> =
+        s.knobs.iter().map(|(k, v)| (k.clone(), Value::Str(v.clone()))).collect();
+    let mut pairs = vec![
+        ("virtual_now", Value::Num(s.engine.virtual_now)),
+        ("virtual_seconds", Value::Num(s.virtual_seconds)),
+        ("decode_steps", Value::Num(s.engine.decode_steps as f64)),
+        ("prefills", Value::Num(s.engine.prefills as f64)),
+        ("total_generated", Value::Num(s.engine.total_generated as f64)),
+        ("active_slots", Value::Num(s.engine.active_slots as f64)),
+        ("completed_requests", Value::Num(s.engine.completed_requests as f64)),
+        (
+            "sessions",
+            jsonx::obj(vec![
+                ("queued", Value::Num(s.sessions_queued as f64)),
+                ("active", Value::Num(s.sessions_active as f64)),
+                ("finished", Value::Num(s.sessions_finished as f64)),
+                ("cancelled", Value::Num(s.sessions_cancelled as f64)),
+                ("shed", Value::Num(s.sessions_shed as f64)),
+            ]),
+        ),
+        ("pending", Value::Num(s.pending as f64)),
+        ("max_pending", Value::Num(s.max_pending as f64)),
+        ("scheduler", Value::Str(s.scheduler.clone())),
+        ("devices", Value::Arr(devices)),
+        ("bytes", Value::Obj(bytes.into_iter().collect())),
+        ("knobs", Value::Obj(knobs.into_iter().collect())),
+    ];
+    if let Some(sched) = &s.sched_summary {
+        pairs.push(("sched", Value::Str(sched.clone())));
+        pairs.push((
+            "tenants",
+            Value::Arr(s.tenant_summaries.iter().cloned().map(Value::Str).collect()),
+        ));
+    }
+    jsonx::obj(pairs)
+}
+
+fn ok(mut pairs: Vec<(&str, Value)>) -> String {
+    pairs.insert(0, ("ok", Value::Bool(true)));
+    jsonx::obj(pairs).to_string()
+}
+
+fn err(msg: &str) -> String {
+    jsonx::obj(vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.to_string()))])
+        .to_string()
+}
+
+/// Dispatch one request line against a server; returns the response
+/// line and whether the daemon should shut down.  This is the entire
+/// daemon command surface — socket-free, so tests and benches call it
+/// directly.
+pub fn handle_line(server: &mut Server, line: &str) -> (String, bool) {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return (err(&format!("{e:#}")), false),
+    };
+    match req {
+        CtlRequest::Ping => (ok(vec![("pong", Value::Bool(true))]), false),
+        CtlRequest::Shutdown => (ok(vec![("shutdown", Value::Bool(true))]), true),
+        CtlRequest::Status => {
+            (ok(vec![("status", snapshot_to_value(&server.stats_snapshot()))]), false)
+        }
+        CtlRequest::Get { knob } => match server.knob_value(&knob) {
+            Ok(value) => (
+                ok(vec![("knob", Value::Str(knob)), ("value", Value::Str(value))]),
+                false,
+            ),
+            Err(e) => (err(&format!("{e:#}")), false),
+        },
+        CtlRequest::Set { knob, value, origin } => {
+            let parsed = match Knob::parse(&knob, &value) {
+                Ok(k) => k,
+                Err(e) => {
+                    // Unparseable sets are audited too: the ledger is the
+                    // complete record of everything operators asked for.
+                    let reason = format!("{e:#}");
+                    if let Err(audit_err) = server.audit_rejected(&knob, &value, &origin, &reason)
+                    {
+                        return (err(&format!("{audit_err:#}")), false);
+                    }
+                    return (err(&reason), false);
+                }
+            };
+            match server.enqueue_reconfig(ReconfigEvent { knob: parsed, origin }) {
+                Ok(()) => (
+                    ok(vec![
+                        ("queued", Value::Bool(true)),
+                        ("knob", Value::Str(knob)),
+                        ("value", Value::Str(value)),
+                    ]),
+                    false,
+                ),
+                Err(e) => (err(&format!("{e:#}")), false),
+            }
+        }
+        CtlRequest::Profile { text, origin } => {
+            let profile = match Profile::parse(&text) {
+                Ok(p) => p,
+                Err(e) => {
+                    let reason = format!("{e:#}");
+                    if let Err(audit_err) =
+                        server.audit_rejected("profile", "-", &origin, &reason)
+                    {
+                        return (err(&format!("{audit_err:#}")), false);
+                    }
+                    return (err(&reason), false);
+                }
+            };
+            // All-or-nothing: validate every knob before enqueuing any.
+            for knob in &profile.knobs {
+                if let Err(e) = server.validate_knob(knob) {
+                    let reason = format!("{e:#}");
+                    if let Err(audit_err) = server.audit_rejected(
+                        knob.name(),
+                        &knob.value_string(),
+                        &profile.name,
+                        &reason,
+                    ) {
+                        return (err(&format!("{audit_err:#}")), false);
+                    }
+                    return (err(&reason), false);
+                }
+            }
+            let n = profile.knobs.len();
+            for knob in profile.knobs {
+                if let Err(e) =
+                    server.enqueue_reconfig(ReconfigEvent { knob, origin: profile.name.clone() })
+                {
+                    // Unreachable after validation, but never half-apply.
+                    return (err(&format!("{e:#}")), false);
+                }
+            }
+            (
+                ok(vec![
+                    ("queued", Value::Num(n as f64)),
+                    ("profile", Value::Str(profile.name)),
+                ]),
+                false,
+            )
+        }
+        CtlRequest::Audit { n } => {
+            let records: Vec<Value> =
+                server.audit_tail(n).iter().map(|r| r.to_value()).collect();
+            (ok(vec![("records", Value::Arr(records))]), false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command() {
+        assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), CtlRequest::Ping);
+        assert_eq!(parse_request(r#"{"cmd":"status"}"#).unwrap(), CtlRequest::Status);
+        assert_eq!(
+            parse_request(r#"{"cmd":"get","knob":"lookahead"}"#).unwrap(),
+            CtlRequest::Get { knob: "lookahead".to_string() }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"set","knob":"lookahead","value":"2"}"#).unwrap(),
+            CtlRequest::Set {
+                knob: "lookahead".to_string(),
+                value: "2".to_string(),
+                origin: "beamctl".to_string(),
+            }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"audit"}"#).unwrap(),
+            CtlRequest::Audit { n: 10 },
+            "audit tail defaults to 10"
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"audit","n":3}"#).unwrap(),
+            CtlRequest::Audit { n: 3 }
+        );
+        assert_eq!(parse_request(r#"{"cmd":"shutdown"}"#).unwrap(), CtlRequest::Shutdown);
+    }
+
+    #[test]
+    fn unknown_command_and_garbage_fail() {
+        let err = parse_request(r#"{"cmd":"reboot"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown command `reboot`"), "{err}");
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"cmd":"set","knob":"x"}"#).is_err(), "set wants a value");
+    }
+}

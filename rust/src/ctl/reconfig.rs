@@ -1,0 +1,126 @@
+//! Reconfiguration events: the typed live knobs (DESIGN.md §14).
+//!
+//! A [`Knob`] names one runtime-tunable parameter together with its
+//! requested new value; a [`ReconfigEvent`] wraps it with the origin
+//! label that ends up in the audit ledger.  Parsing is strict: an
+//! unknown knob name fails with the sorted valid-name list (the same
+//! contract the policy/predictor/scheduler registries give), and a
+//! non-numeric value for a byte/count knob names the offending input.
+
+use anyhow::{bail, Context, Result};
+
+/// Every knob name the control plane accepts, sorted (error messages
+/// and `beamctl get` validation both quote this list).
+pub const KNOB_NAMES: &[&str] = &[
+    "alloc-budget",
+    "lookahead",
+    "max-pending",
+    "prefetch-budget",
+    "replicate-budget",
+    "scheduler",
+];
+
+/// One live-tunable serving knob and its requested value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Knob {
+    /// Per-decode-step speculative transfer budget, bytes (DESIGN.md §8).
+    PrefetchBudget(usize),
+    /// Layers ahead the predictor targets (DESIGN.md §8).
+    Lookahead(usize),
+    /// The §10 precision allocator's byte budget.
+    AllocBudget(usize),
+    /// Per-device pinned-replica budget, bytes (DESIGN.md §11).
+    ReplicateBudget(usize),
+    /// Admission-control cap on queued-but-unadmitted requests.
+    MaxPending(usize),
+    /// Swap the scheduling discipline (any registered name, §13).
+    Scheduler(String),
+}
+
+impl Knob {
+    /// The knob's wire name (the `beamctl get/set` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Knob::PrefetchBudget(_) => "prefetch-budget",
+            Knob::Lookahead(_) => "lookahead",
+            Knob::AllocBudget(_) => "alloc-budget",
+            Knob::ReplicateBudget(_) => "replicate-budget",
+            Knob::MaxPending(_) => "max-pending",
+            Knob::Scheduler(_) => "scheduler",
+        }
+    }
+
+    /// The requested value, rendered the way the audit ledger stores it.
+    pub fn value_string(&self) -> String {
+        match self {
+            Knob::PrefetchBudget(v)
+            | Knob::Lookahead(v)
+            | Knob::AllocBudget(v)
+            | Knob::ReplicateBudget(v)
+            | Knob::MaxPending(v) => v.to_string(),
+            Knob::Scheduler(s) => s.clone(),
+        }
+    }
+
+    /// Parse a `name value` pair into a typed knob.  Unknown names fail
+    /// with [`KNOB_NAMES`]; numeric knobs fail contextfully on
+    /// non-numeric values.
+    pub fn parse(name: &str, value: &str) -> Result<Knob> {
+        let num = || -> Result<usize> {
+            value.parse::<usize>().with_context(|| {
+                format!("knob `{name}` wants a non-negative integer, got `{value}`")
+            })
+        };
+        Ok(match name {
+            "prefetch-budget" => Knob::PrefetchBudget(num()?),
+            "lookahead" => Knob::Lookahead(num()?),
+            "alloc-budget" => Knob::AllocBudget(num()?),
+            "replicate-budget" => Knob::ReplicateBudget(num()?),
+            "max-pending" => Knob::MaxPending(num()?),
+            "scheduler" => Knob::Scheduler(value.to_string()),
+            other => bail!("unknown knob `{other}` — valid knobs: {}", KNOB_NAMES.join(", ")),
+        })
+    }
+}
+
+/// One enqueued reconfiguration: a knob change plus where it came from
+/// (`beamctl`, a profile name, a test — free-form, audited verbatim).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReconfigEvent {
+    pub knob: Knob,
+    pub origin: String,
+}
+
+impl ReconfigEvent {
+    pub fn new(knob: Knob, origin: &str) -> Self {
+        ReconfigEvent { knob, origin: origin.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_knob_name() {
+        for name in KNOB_NAMES {
+            let value = if *name == "scheduler" { "fifo" } else { "4096" };
+            let knob = Knob::parse(name, value).unwrap();
+            assert_eq!(knob.name(), *name);
+            assert_eq!(knob.value_string(), value);
+        }
+    }
+
+    #[test]
+    fn unknown_knob_lists_valid_names() {
+        let err = Knob::parse("prefetch-budgets", "1").unwrap_err().to_string();
+        assert!(err.contains("unknown knob `prefetch-budgets`"), "{err}");
+        assert!(err.contains("prefetch-budget, replicate-budget, scheduler"), "{err}");
+    }
+
+    #[test]
+    fn numeric_knob_rejects_garbage() {
+        let err = Knob::parse("lookahead", "two").unwrap_err();
+        assert!(format!("{err:#}").contains("non-negative integer"), "{err:#}");
+    }
+}

@@ -4,8 +4,8 @@
 //! synthetic model: no artifacts, no network, deterministic work (the
 //! wall-clock is the only nondeterministic output).  `beam bench --json`
 //! emits one machine-readable record per benchmark for trend tracking;
-//! the committed baseline lives in `rust/benches/BENCH_7.json` and is
-//! refreshed with `beam bench --json --out rust/benches/BENCH_7.json`
+//! the committed baseline lives in `rust/benches/BENCH_8.json` and is
+//! refreshed with `beam bench --json --out rust/benches/BENCH_8.json`
 //! on a quiet machine.
 //!
 //! The suite is intentionally small and stable: names are part of the
@@ -183,16 +183,67 @@ fn bench_serve_slo(n_req: usize) -> Result<BenchRecord> {
         .with_metric("virtual_tok_per_s", report.tokens_per_second()))
 }
 
+/// Gate-predictor synth server for the §14 control-plane benches.
+fn ctl_bench_server() -> Result<crate::server::Server> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let dims = model.manifest.model.clone();
+    let q = model.manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    let prefetch = PrefetchConfig::new("gate", 1, dims.top_k * dims.n_layers * q);
+    ServerBuilder::new(model).policy(policy).system(sys).prefetch(prefetch).build()
+}
+
+/// Control-plane request throughput: `protocol::handle_line` round
+/// trips (alternating `status` and `get`) against an idle server — the
+/// per-request daemon overhead bound, socket excluded (DESIGN.md §14).
+fn bench_ctl_roundtrip(n: usize) -> Result<BenchRecord> {
+    let mut server = ctl_bench_server()?;
+    let start = Instant::now();
+    for i in 0..n {
+        let line = if i % 2 == 0 {
+            r#"{"cmd":"status"}"#
+        } else {
+            r#"{"cmd":"get","knob":"prefetch-budget"}"#
+        };
+        let (resp, quit) = crate::ctl::protocol::handle_line(&mut server, line);
+        anyhow::ensure!(!quit && resp.starts_with(r#"{"ok":true"#), "ctl bench refused: {resp}");
+    }
+    let wall = start.elapsed().as_secs_f64();
+    Ok(BenchRecord::new("ctl_roundtrip", n as u64, wall))
+}
+
+/// Reconfiguration throughput: enqueue one prefetch-budget toggle and
+/// apply it at a tick boundary, per iteration — the end-to-end cost of
+/// one audited live retune (validate + queue + apply + ledger append).
+fn bench_reconfig_apply(n: usize) -> Result<BenchRecord> {
+    use crate::ctl::{Knob, ReconfigEvent};
+    let mut server = ctl_bench_server()?;
+    let base = server.prefetch_config().budget_bytes;
+    let start = Instant::now();
+    for i in 0..n {
+        let budget = if i % 2 == 0 { 2 * base } else { base };
+        server.enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(budget), "bench"))?;
+        server.tick()?;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(server.audit_records().len() == n, "every retune must be audited");
+    Ok(BenchRecord::new("reconfig_apply", n as u64, wall))
+}
+
 /// Run the pinned suite.  `quick` shrinks every size (the test/CI
 /// configuration); the default sizes are the baseline configuration.
 pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
-    let (traffic_n, decide_n, serve_req, out_len, slo_req) =
-        if quick { (200, 50, 2, 4, 4) } else { (5000, 500, 6, 16, 12) };
+    let (traffic_n, decide_n, serve_req, out_len, slo_req, ctl_n, reconfig_n) =
+        if quick { (200, 50, 2, 4, 4, 50, 50) } else { (5000, 500, 6, 16, 12, 2000, 500) };
     Ok(vec![
         bench_traffic(traffic_n)?,
         bench_slo_decide(decide_n)?,
         bench_serve_fifo(serve_req, out_len)?,
         bench_serve_slo(slo_req)?,
+        bench_ctl_roundtrip(ctl_n)?,
+        bench_reconfig_apply(reconfig_n)?,
     ])
 }
 
@@ -229,7 +280,11 @@ mod tests {
     fn quick_suite_runs_and_serializes() {
         let records = run_suite(true).unwrap();
         let names: Vec<&str> = records.iter().map(|r| r.name.as_str()).collect();
-        assert_eq!(names, ["traffic_gen", "slo_decide", "serve_fifo", "serve_slo"]);
+        assert_eq!(
+            names,
+            ["traffic_gen", "slo_decide", "serve_fifo", "serve_slo", "ctl_roundtrip",
+             "reconfig_apply"]
+        );
         for r in &records {
             assert!(r.iters > 0, "{}: no work timed", r.name);
             assert!(r.wall_s >= 0.0 && r.per_second > 0.0, "{}: bad timing", r.name);
@@ -238,7 +293,7 @@ mod tests {
         let json = to_json(&records, true).to_string();
         let v = crate::jsonx::Value::parse(&json).unwrap();
         assert_eq!(v.get("schema").unwrap().str().unwrap(), "beam-bench-v1");
-        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 4);
+        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 6);
     }
 
     #[test]

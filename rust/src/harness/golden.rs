@@ -33,6 +33,7 @@ use anyhow::{Context, Result};
 use crate::backend::{Backend, ReferenceBackend};
 use crate::config::{PolicyConfig, PrefetchConfig, ShardConfig, SystemConfig, TenantMix};
 use crate::coordinator::Report;
+use crate::ctl::{Knob, ReconfigEvent};
 use crate::harness::figures::Harness;
 use crate::server::{ServerBuilder, TokenEvent};
 use crate::sim::topology::FaultPlan;
@@ -49,6 +50,7 @@ pub fn scenario_names() -> Vec<&'static str> {
         "shard2-kill-dev1",
         "shard3-degraded-link",
         "slo-two-tenants",
+        "reconfig-live",
     ]
 }
 
@@ -77,6 +79,7 @@ pub fn render(name: &str) -> Result<String> {
     let mut shard: Option<ShardConfig> = None;
     let mut faults: Option<FaultPlan> = None;
     let mut tenants: Option<TenantMix> = None;
+    let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
     let wl = match name {
         // The paper policy on the offload-regime single device — the
         // ledger every PR since the seed has been building on.
@@ -142,6 +145,31 @@ pub fn render(name: &str) -> Result<String> {
             )?);
             WorkloadConfig::offline(1, 16, 4) // unused: tenant traffic below
         }
+        // §14 control plane: the adaptive+prefetch testbed retuned live at
+        // the first tick boundary — allocator budget raised to the
+        // compensate-everything headroom, prefetch budget doubled,
+        // lookahead deepened.  Pins the audit ledger lines *and* the
+        // retune's effect on the serving ledger.
+        "reconfig-live" => {
+            policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+            policy.alloc_budget_bytes = Some(pairs * q);
+            prefetch = PrefetchConfig::new("gate", 1, dims.top_k * dims.n_layers * q);
+            sys.gpu_cache_bytes = 5 * q;
+            reconfigs = vec![
+                ReconfigEvent::new(
+                    Knob::AllocBudget(
+                        pairs * q + manifest.comp_bytes_total("default", synth::SYNTH_BITS),
+                    ),
+                    "golden",
+                ),
+                ReconfigEvent::new(
+                    Knob::PrefetchBudget(2 * dims.top_k * dims.n_layers * q),
+                    "golden",
+                ),
+                ReconfigEvent::new(Knob::Lookahead(2), "golden"),
+            ];
+            WorkloadConfig::offline(2, 32, 6)
+        }
         other => anyhow::bail!("unknown golden scenario `{other}`"),
     };
 
@@ -156,6 +184,11 @@ pub fn render(name: &str) -> Result<String> {
         builder = builder.scheduler("slo").tenants(mix.clone());
     }
     let mut server = builder.build()?;
+    // §14: queued before the first tick, applied (and audited) at the
+    // first boundary — the audit lines below pin the old→new ledger.
+    for ev in reconfigs {
+        server.enqueue_reconfig(ev).context("golden reconfig enqueue")?;
+    }
     let eval = synth::tiny_eval_store(&dims)?;
     let mut ids = Vec::new();
     if let Some(mix) = &tenants {
@@ -187,6 +220,12 @@ pub fn render(name: &str) -> Result<String> {
             })
             .collect();
         let _ = writeln!(w, "tokens[{}]: {tokens:?}", id.0);
+    }
+    // The audit ledger is part of the deterministic surface: one JSONL
+    // line per applied/rejected reconfiguration (absent when no scenario
+    // reconfigures, so pre-§14 pins are unchanged).
+    for rec in server.audit_records() {
+        let _ = writeln!(w, "audit: {}", rec.to_value());
     }
     Ok(out)
 }

@@ -44,11 +44,15 @@
 //!   lengths)
 //! * [`server`]     — the public serving surface: `ServerBuilder` →
 //!   `Server` → per-request `Session` token-event streams (DESIGN.md §9)
+//! * [`ctl`]        — the live-reconfiguration control plane: `beamd`
+//!   daemon + `beamctl` client, Unix-socket JSON protocol, serving
+//!   profiles and the append-only audit ledger (DESIGN.md §14)
 //! * [`harness`]    — table/figure regeneration drivers (`rust/EXPERIMENTS.md`)
 
 pub mod backend;
 pub mod config;
 pub mod coordinator;
+pub mod ctl;
 pub mod harness;
 pub mod jsonx;
 pub mod manifest;

@@ -13,6 +13,8 @@
 //!             [--out DIR] [--full] [--smoke] [--bless]
 //! beam bench  [--json] [--out FILE] [--quick]
 //! beam info   --model mixtral-tiny
+//! beam daemon --socket PATH [--audit FILE] [beamd flags…]
+//! beam ctl    --socket PATH <status|get|set|profile load|audit tail|ping|shutdown>
 //! ```
 //!
 //! `--devices D` shards each layer's experts across `D` expert-parallel
@@ -40,7 +42,13 @@
 //! substreams.  `figure load --smoke` runs the overload sweep and checks
 //! the fifo-equivalence + SLO win contracts (the CI path); `beam bench`
 //! runs the pinned wall-clock micro/serving suite (baseline:
-//! `rust/benches/BENCH_7.json`).
+//! `rust/benches/BENCH_8.json`).
+//!
+//! `beam daemon` / `beam ctl` are the §14 live control plane — the
+//! `beamd`/`beamctl` bin targets reachable through the main CLI (same
+//! code paths; see `rust/src/ctl/`).  Flag parsing is *strict* on every
+//! command: an unknown `--flag` fails with that command's valid-flag
+//! list instead of silently falling through to defaults.
 //!
 //! `--policy adaptive` serves the budgeted per-expert precision allocator
 //! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
@@ -72,8 +80,53 @@ use beam_moe::runtime::StagedModel;
 use beam_moe::server::{Server, ServerBuilder, SubmitError};
 use beam_moe::workload::{Request, TaggedRequest, TrafficGen, WorkloadConfig, WorkloadGen};
 
-const USAGE: &str =
-    "usage: beam <serve|eval|figure|bench|info> [--flags]  (see rust/src/main.rs docs)";
+const USAGE: &str = "usage: beam <serve|eval|figure|bench|info|daemon|ctl> [--flags]  \
+                     (see rust/src/main.rs docs)";
+
+/// Valid flags per command (sorted; quoted in unknown-flag errors).
+/// `artifacts` and `backend` are accepted everywhere — they are read
+/// before command dispatch.
+const COMMON_FLAGS: &[&str] = &["artifacts", "backend"];
+const SERVE_FLAGS: &[&str] = &[
+    "alloc-budget",
+    "arrival-rate",
+    "bits",
+    "comp-tag",
+    "devices",
+    "fault-plan",
+    "lookahead",
+    "max-pending",
+    "method",
+    "model",
+    "ndp",
+    "output-len",
+    "policy",
+    "positions",
+    "prefetch",
+    "prefetch-budget",
+    "prompt-len",
+    "raw-system",
+    "replicate-budget",
+    "requests",
+    "scheduler",
+    "seed",
+    "tenants",
+    "top-n",
+];
+const EVAL_FLAGS: &[&str] = &[
+    "alloc-budget",
+    "bits",
+    "comp-tag",
+    "method",
+    "model",
+    "policy",
+    "positions",
+    "seqs",
+    "top-n",
+];
+const FIGURE_FLAGS: &[&str] = &["bless", "full", "out", "smoke"];
+const BENCH_FLAGS: &[&str] = &["json", "out", "quick"];
+const INFO_FLAGS: &[&str] = &["model"];
 
 /// Tiny flag parser: positional args + `--key value` + boolean `--key`.
 struct Args {
@@ -125,6 +178,31 @@ impl Args {
 
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
+    }
+
+    /// Reject flags outside `allowed` ∪ [`COMMON_FLAGS`] — the §14
+    /// satellite bugfix: a typo like `--prefetch-budgets` used to fall
+    /// through to the default silently; now it fails with the command's
+    /// valid-flag list.
+    fn ensure_known(&self, command: &str, allowed: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !allowed.contains(k) && !COMMON_FLAGS.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut valid: Vec<&str> = allowed.iter().chain(COMMON_FLAGS).copied().collect();
+        valid.sort_unstable();
+        bail!(
+            "unknown flag{} for `beam {command}`: --{}\nvalid flags: --{}",
+            if unknown.len() == 1 { "" } else { "s" },
+            unknown.join(", --"),
+            valid.join(", --"),
+        );
     }
 }
 
@@ -270,11 +348,19 @@ fn main() -> Result<()> {
     if argv.is_empty() {
         bail!("{USAGE}");
     }
+    // The control-plane subcommands own their argument grammar (strict
+    // `--flag value` + positionals for ctl) — dispatch before Args::parse.
+    match argv[0].as_str() {
+        "daemon" => return beam_moe::ctl::daemon::run_cli(&argv[1..]),
+        "ctl" => return beam_moe::ctl::client::run_cli(&argv[1..]),
+        _ => {}
+    }
     let args = Args::parse(&argv[1..])?;
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
 
     match argv[0].as_str() {
         "serve" => {
+            args.ensure_known("serve", SERVE_FLAGS)?;
             let mut server = load_server(&artifacts, &args, true)?;
             let eval_store =
                 beam_moe::manifest::WeightStore::load(server.model().manifest.eval_path())?;
@@ -372,6 +458,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "eval" => {
+            args.ensure_known("eval", EVAL_FLAGS)?;
             let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
             let h = Harness::with_backend(artifacts.clone(), None, false, backend)?;
             let model_name = args.get("model", "mixtral-tiny");
@@ -385,6 +472,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "figure" => {
+            args.ensure_known("figure", FIGURE_FLAGS)?;
             let name = args
                 .positional
                 .first()
@@ -399,7 +487,8 @@ fn main() -> Result<()> {
         }
         "bench" => {
             // Artifact-free pinned suite (synthetic model only); the
-            // committed baseline lives in rust/benches/BENCH_7.json.
+            // committed baseline lives in rust/benches/BENCH_8.json.
+            args.ensure_known("bench", BENCH_FLAGS)?;
             let quick = args.has("quick");
             let records = beam_moe::harness::bench::run_suite(quick)?;
             if args.has("json") {
@@ -420,6 +509,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "info" => {
+            args.ensure_known("info", INFO_FLAGS)?;
             let model_name = args.get("model", "mixtral-tiny");
             let manifest = Manifest::load(artifacts.join(&model_name))?;
             println!("{:#?}", manifest.model);
@@ -441,5 +531,45 @@ fn main() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Regression for the silent-typo bug: `--prefetch-budgets 1` used
+    /// to be ignored and the default budget served instead.
+    #[test]
+    fn unknown_flag_is_rejected_with_the_valid_flag_list() {
+        let args = Args::parse(&argv(&["--prefetch-budgets", "1"])).unwrap();
+        let err = args.ensure_known("serve", SERVE_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("unknown flag for `beam serve`: --prefetch-budgets"), "{err}");
+        assert!(err.contains("--prefetch-budget"), "error lists the valid spelling: {err}");
+        assert!(err.contains("--artifacts"), "common flags stay valid: {err}");
+    }
+
+    #[test]
+    fn known_flags_pass_per_command() {
+        let args = Args::parse(&argv(&["--model", "m", "--bits", "2", "--ndp"])).unwrap();
+        args.ensure_known("serve", SERVE_FLAGS).unwrap();
+        let args = Args::parse(&argv(&["--json", "--quick", "--out", "f.json"])).unwrap();
+        args.ensure_known("bench", BENCH_FLAGS).unwrap();
+        // A serve-only flag is NOT valid for bench.
+        let args = Args::parse(&argv(&["--scheduler", "slo"])).unwrap();
+        let err = args.ensure_known("bench", BENCH_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("for `beam bench`"), "{err}");
+        assert!(err.contains("--scheduler"), "{err}");
+    }
+
+    #[test]
+    fn multiple_unknown_flags_are_all_named_sorted() {
+        let args = Args::parse(&argv(&["--zz", "1", "--aa", "2", "--model", "m"])).unwrap();
+        let err = args.ensure_known("info", INFO_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("unknown flags for `beam info`: --aa, --zz"), "{err}");
     }
 }

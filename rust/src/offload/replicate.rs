@@ -74,6 +74,14 @@ impl Replicator {
         self.budget_bytes
     }
 
+    /// Retarget the per-device replica budget (the §14 live-
+    /// reconfiguration seam).  Plans are untouched until the next
+    /// reconcile, which walks the popularity ranking under the new
+    /// budget — a shrunk budget naturally unpins what no longer fits.
+    pub fn set_budget_bytes(&mut self, budget_bytes: usize) {
+        self.budget_bytes = budget_bytes;
+    }
+
     /// Desired replica set for the coming decode step: walk (layer,
     /// expert) pairs hottest-first (score ties break toward the lower
     /// (layer, expert) index) and give each at most one replica, on the

@@ -311,6 +311,13 @@ impl PrecisionAllocator {
         self.budget
     }
 
+    /// Retarget the byte budget (the §14 live-reconfiguration seam).
+    /// The plan is untouched until the next `replan`, which reads the
+    /// budget fresh — callers invoke this only at step boundaries.
+    pub fn set_budget(&mut self, budget: usize) {
+        self.budget = budget;
+    }
+
     pub fn report(&self) -> AllocReport {
         AllocReport {
             budget_bytes: self.budget,

@@ -146,6 +146,9 @@ impl ServerBuilder {
         }
         let engine =
             ServeEngine::with_config(self.model, self.policy, system, self.prefetch, self.faults)?;
-        Ok(Server::from_parts(engine, sched, self.max_pending))
+        // The scheduling knobs and tenant mix ride along so the §14
+        // control plane can rebuild a scheduler on a live swap through
+        // exactly this registry path.
+        Ok(Server::from_parts(engine, sched, self.max_pending, self.sched, self.tenants))
     }
 }

@@ -31,13 +31,16 @@ pub use builder::ServerBuilder;
 pub use session::{Session, SessionId, SessionStatus, SubmitError, TokenEvent};
 
 use std::collections::HashMap;
+use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::config::PrefetchConfig;
+use crate::config::{PrefetchConfig, SchedConfig, TenantMix};
 use crate::coordinator::{CacheView, EngineStats, Report, ServeEngine};
+use crate::ctl::audit::{AuditLedger, AuditOutcome, AuditRecord};
+use crate::ctl::reconfig::{Knob, ReconfigEvent, KNOB_NAMES};
 use crate::runtime::StagedModel;
-use crate::sched::{SchedDecision, Scheduler, SlotView};
+use crate::sched::{make_scheduler, resolve_scheduler, SchedDecision, Scheduler, SlotView};
 use crate::sim::clock::VTime;
 use crate::workload::{DecodeTrace, Request};
 
@@ -62,12 +65,50 @@ pub enum ServerTick {
     Done,
 }
 
+/// Point-in-time ops snapshot for the control plane (`beamctl status`,
+/// DESIGN.md §14): serve-loop progress, per-device cache economics,
+/// session/queue counts, the byte ledger (with virtual seconds, so
+/// clients can rate it) and every live knob's current value.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub engine: EngineStats,
+    /// Per-device cache views in fleet order (one entry when `D = 1`).
+    pub devices: Vec<CacheView>,
+    pub sessions_queued: usize,
+    pub sessions_active: usize,
+    pub sessions_finished: usize,
+    pub sessions_cancelled: usize,
+    pub sessions_shed: usize,
+    /// Requests submitted but not yet admitted (admission-control view).
+    pub pending: usize,
+    pub max_pending: usize,
+    pub scheduler: String,
+    pub virtual_seconds: f64,
+    /// The per-class byte ledger, sorted by class name.
+    pub bytes: Vec<(String, usize)>,
+    /// The §13 scheduling ledger summary, when an SLO-aware discipline
+    /// is active (plus one summary line per tenant).
+    pub sched_summary: Option<String>,
+    pub tenant_summaries: Vec<String>,
+    /// Current value of every live knob, in [`KNOB_NAMES`] order.
+    pub knobs: Vec<(String, String)>,
+}
+
 /// Session-oriented serving façade over the (private) engine.
 pub struct Server {
     engine: ServeEngine,
     sched: Box<dyn Scheduler>,
     sessions: HashMap<SessionId, Session>,
     max_pending: usize,
+    /// The scheduler/tenant knobs the server was built with, retained so
+    /// a live scheduler swap rebuilds through the same registry path the
+    /// builder used (DESIGN.md §14).
+    sched_cfg: SchedConfig,
+    tenants: TenantMix,
+    /// Reconfigurations validated and queued, applied in FIFO order at
+    /// the next tick boundary.
+    pending_reconfig: Vec<ReconfigEvent>,
+    audit: AuditLedger,
 }
 
 impl Server {
@@ -75,8 +116,19 @@ impl Server {
         engine: ServeEngine,
         sched: Box<dyn Scheduler>,
         max_pending: usize,
+        sched_cfg: SchedConfig,
+        tenants: TenantMix,
     ) -> Self {
-        Server { engine, sched, sessions: HashMap::new(), max_pending }
+        Server {
+            engine,
+            sched,
+            sessions: HashMap::new(),
+            max_pending,
+            sched_cfg,
+            tenants,
+            pending_reconfig: Vec::new(),
+            audit: AuditLedger::new(),
+        }
     }
 
     /// Submit one untagged request; returns its session handle.  Fails
@@ -117,6 +169,12 @@ impl Server {
     /// preempt, decode, shed, or idle) and route any generated tokens
     /// into their sessions.
     pub fn tick(&mut self) -> Result<ServerTick> {
+        // §14 boundary application: queued reconfigurations land here,
+        // between scheduling actions — never mid-step — right before the
+        // decode path's own §10 replan / §11 reconcile / §12 fault-apply
+        // points.  With nothing queued this is a no-op and the loop is
+        // byte-identical to a server without a control plane.
+        self.apply_pending_reconfig()?;
         let now = self.engine.now();
         let slots: Vec<SlotView> = self
             .engine
@@ -327,6 +385,241 @@ impl Server {
     /// (the eval path; see `scheduler::score_sequence`).
     pub fn score_sequence(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         crate::coordinator::scheduler::score_sequence(&mut self.engine, tokens)
+    }
+
+    // -- control plane (DESIGN.md §14) ------------------------------------
+
+    /// Point-in-time ops snapshot: the `beamctl status` surface.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        let report = self.report();
+        let mut bytes: Vec<(String, usize)> =
+            report.bytes.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        bytes.sort();
+        let (mut queued, mut active, mut finished, mut cancelled, mut shed) = (0, 0, 0, 0, 0);
+        for s in self.sessions.values() {
+            match s.status() {
+                SessionStatus::Queued => queued += 1,
+                SessionStatus::Active => active += 1,
+                SessionStatus::Finished => finished += 1,
+                SessionStatus::Cancelled => cancelled += 1,
+                SessionStatus::Shed => shed += 1,
+            }
+        }
+        StatsSnapshot {
+            engine: self.engine.stats(),
+            devices: self.engine.device_cache_views(),
+            sessions_queued: queued,
+            sessions_active: active,
+            sessions_finished: finished,
+            sessions_cancelled: cancelled,
+            sessions_shed: shed,
+            pending: self.sched.pending(),
+            max_pending: self.max_pending,
+            scheduler: self.sched.name().to_string(),
+            virtual_seconds: report.virtual_seconds,
+            bytes,
+            sched_summary: report.sched.as_ref().map(|s| s.summary()),
+            tenant_summaries: report
+                .sched
+                .as_ref()
+                .map(|s| s.per_tenant.iter().map(|t| t.summary()).collect())
+                .unwrap_or_default(),
+            knobs: KNOB_NAMES
+                .iter()
+                .map(|n| (n.to_string(), self.knob_value(n).expect("known knob")))
+                .collect(),
+        }
+    }
+
+    /// Current value of a live knob by wire name (`beamctl get`).
+    /// `alloc-budget` reads `none` when the policy built no allocator.
+    pub fn knob_value(&self, name: &str) -> Result<String> {
+        Ok(match name {
+            "prefetch-budget" => self.engine.prefetch_budget().to_string(),
+            "lookahead" => self.engine.prefetch_lookahead().to_string(),
+            "alloc-budget" => match self.engine.alloc_budget() {
+                Some(b) => b.to_string(),
+                None => "none".to_string(),
+            },
+            "replicate-budget" => self.engine.replicate_budget().to_string(),
+            "max-pending" => self.max_pending.to_string(),
+            "scheduler" => self.sched.name().to_string(),
+            other => {
+                bail!("unknown knob `{other}` — valid knobs: {}", KNOB_NAMES.join(", "))
+            }
+        })
+    }
+
+    /// Mirror all future audit appends to `path` (append-only JSONL).
+    pub fn attach_audit_file(&mut self, path: &Path) -> Result<()> {
+        self.audit.attach_file(path)
+    }
+
+    /// Every applied-or-rejected reconfiguration so far, oldest first.
+    pub fn audit_records(&self) -> &[AuditRecord] {
+        self.audit.records()
+    }
+
+    /// The last `n` audit records (`beamctl audit tail`).
+    pub fn audit_tail(&self, n: usize) -> &[AuditRecord] {
+        self.audit.tail(n)
+    }
+
+    /// Validate one reconfiguration against this server's configuration
+    /// (the builder's own rules) and queue it for the next tick
+    /// boundary.  On failure nothing is queued and the refusal is
+    /// audited as rejected — a change is never half-applied.
+    pub fn enqueue_reconfig(&mut self, ev: ReconfigEvent) -> Result<()> {
+        if let Err(e) = self.validate_knob(&ev.knob) {
+            let reason = format!("{e:#}");
+            let old = self.knob_value(ev.knob.name()).unwrap_or_else(|_| "none".to_string());
+            self.audit_append(
+                ev.knob.name(),
+                &old,
+                &ev.knob.value_string(),
+                &ev.origin,
+                AuditOutcome::Rejected,
+                &reason,
+            )?;
+            return Err(e);
+        }
+        self.pending_reconfig.push(ev);
+        Ok(())
+    }
+
+    /// Statically validate a knob change without queuing it — the same
+    /// checks `enqueue_reconfig` runs (profiles validate *every* line
+    /// through this before enqueuing *any*, for all-or-nothing apply).
+    pub fn validate_knob(&self, knob: &Knob) -> Result<()> {
+        match knob {
+            Knob::PrefetchBudget(_) | Knob::Lookahead(_) => ensure!(
+                self.engine.has_predictor(),
+                "prefetch knobs are inert: the server was built without a predictor \
+                 (`--prefetch off`)"
+            ),
+            Knob::AllocBudget(_) => ensure!(
+                self.engine.alloc_budget().is_some(),
+                "policy `{}` consumes no precision plan — there is no allocator to retune",
+                self.engine.policy_config().policy
+            ),
+            Knob::ReplicateBudget(_) => ensure!(
+                self.engine.n_devices() >= 2,
+                "replication needs a multi-device fleet (this server has 1 device)"
+            ),
+            Knob::MaxPending(v) => ensure!(*v > 0, "max_pending must be at least 1"),
+            Knob::Scheduler(name) => {
+                resolve_scheduler(name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Audit a change refused before it could even become an event
+    /// (unparseable knob name/value at the protocol layer).
+    pub fn audit_rejected(
+        &mut self,
+        knob: &str,
+        requested: &str,
+        origin: &str,
+        reason: &str,
+    ) -> Result<()> {
+        let old = self.knob_value(knob).unwrap_or_else(|_| "none".to_string());
+        self.audit_append(knob, &old, requested, origin, AuditOutcome::Rejected, reason)
+    }
+
+    fn audit_append(
+        &mut self,
+        knob: &str,
+        old: &str,
+        new: &str,
+        origin: &str,
+        outcome: AuditOutcome,
+        reason: &str,
+    ) -> Result<()> {
+        let stats = self.engine.stats();
+        self.audit.append(AuditRecord {
+            seq: 0, // assigned by the ledger
+            virtual_time: stats.virtual_now,
+            decode_step: stats.decode_steps,
+            knob: knob.to_string(),
+            old: old.to_string(),
+            new: new.to_string(),
+            origin: origin.to_string(),
+            outcome,
+            reason: reason.to_string(),
+        })?;
+        Ok(())
+    }
+
+    /// Apply every queued reconfiguration, in order, at this boundary.
+    /// Each application (or apply-time rejection — scheduler swaps have
+    /// a dynamic emptiness precondition) appends one audit record with
+    /// the old→new values at the moment it landed.
+    fn apply_pending_reconfig(&mut self) -> Result<()> {
+        if self.pending_reconfig.is_empty() {
+            return Ok(());
+        }
+        let events = std::mem::take(&mut self.pending_reconfig);
+        for ev in events {
+            let old = self.knob_value(ev.knob.name()).expect("queued knobs are known");
+            let new = ev.knob.value_string();
+            let mut outcome = AuditOutcome::Applied;
+            let mut reason = String::new();
+            match &ev.knob {
+                Knob::PrefetchBudget(b) => self.engine.set_prefetch_budget(*b),
+                Knob::Lookahead(l) => self.engine.set_prefetch_lookahead(*l),
+                // Validated at enqueue; the allocator/fleet cannot have
+                // disappeared since, so the `false` arms are unreachable.
+                Knob::AllocBudget(b) => {
+                    let _ = self.engine.set_alloc_budget(*b);
+                }
+                Knob::ReplicateBudget(b) => {
+                    let _ = self.engine.set_replicate_budget(*b);
+                }
+                Knob::MaxPending(m) => self.max_pending = *m,
+                Knob::Scheduler(name) => {
+                    if let Err(e) = self.swap_scheduler(name) {
+                        outcome = AuditOutcome::Rejected;
+                        reason = format!("{e:#}");
+                    }
+                }
+            }
+            self.audit_append(ev.knob.name(), &old, &new, &ev.origin, outcome, &reason)?;
+        }
+        Ok(())
+    }
+
+    /// Swap the scheduling discipline in place.  Only legal while the
+    /// scheduler holds no migratable state: zero pending requests and no
+    /// parked preempted sessions (there is no cross-discipline drain
+    /// API).  In-slot active sessions are untouched — a swap never drops
+    /// a session.
+    fn swap_scheduler(&mut self, name: &str) -> Result<()> {
+        ensure!(
+            self.sched.pending() == 0,
+            "scheduler swap refused: {} request(s) still queued in `{}` — drain first",
+            self.sched.pending(),
+            self.sched.name(),
+        );
+        let parked = self
+            .sessions
+            .iter()
+            .filter(|(id, s)| {
+                s.status() == SessionStatus::Active && self.engine.slot_of(id.0).is_none()
+            })
+            .count();
+        ensure!(
+            parked == 0,
+            "scheduler swap refused: {parked} preempted session(s) parked in `{}`",
+            self.sched.name(),
+        );
+        let canonical = resolve_scheduler(name)?;
+        let mut cfg = self.sched_cfg.clone();
+        cfg.scheduler = canonical;
+        cfg.validate()?;
+        self.sched = make_scheduler(&cfg, &self.tenants)?;
+        self.sched_cfg = cfg;
+        Ok(())
     }
 
     /// Route tokens the engine emitted this tick into their sessions.

@@ -1,0 +1,487 @@
+//! Control-plane integration tests (DESIGN.md §14), artifact-free on
+//! the synthetic model.
+//!
+//! * **Boundary equivalence** — a knob retuned live through
+//!   `enqueue_reconfig` lands at the next tick boundary and from that
+//!   step onward the server is byte-identical to a twin *built* with
+//!   the new value.  Both §10 (alloc budget) and §8 (prefetch budget)
+//!   hold this exactly when the change lands before the first decode
+//!   step: the allocator's initial plan is always the floor plan (the
+//!   budget is only read at the per-decode-step replan) and prefetches
+//!   are only issued inside decode steps — so prefill ticks that have
+//!   already happened don't break the equivalence.
+//! * **Mid-run semantics** — a same-value `set` applied at an arbitrary
+//!   decode step is byte-identical to never setting it, and an
+//!   arbitrary retune schedule replays deterministically (identical
+//!   reports, token streams *and* audit ledgers on a second run).
+//! * **Rejections** — every statically invalid knob is refused at
+//!   enqueue, audited as rejected, and leaves the server byte-identical
+//!   to an untouched twin (never half-applied).  Scheduler swaps with
+//!   queued work are refused at *apply* time and audited the same way.
+//! * **The wire** — `protocol::handle_line` in-process (profiles are
+//!   all-or-nothing), the JSONL audit file replays cleanly through
+//!   `AuditLedger::load`, and a real daemon thread serves `CtlClient`
+//!   over a Unix socket end-to-end.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use beam_moe::backend::{Backend, ReferenceBackend};
+use beam_moe::config::{PolicyConfig, PrefetchConfig, SystemConfig};
+use beam_moe::coordinator::Report;
+use beam_moe::ctl::audit::AuditLedger;
+use beam_moe::ctl::client::CtlClient;
+use beam_moe::ctl::protocol::handle_line;
+use beam_moe::ctl::{AuditOutcome, Knob, ReconfigEvent};
+use beam_moe::server::{Server, ServerBuilder, ServerTick, SessionId};
+use beam_moe::synth;
+use beam_moe::workload::{Request, WorkloadConfig, WorkloadGen};
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(ReferenceBackend::new())
+}
+
+fn model() -> beam_moe::StagedModel {
+    synth::tiny_model(backend(), "synthetic-tiny").unwrap()
+}
+
+/// The offload-pressured testbed: the cache holds five quantized
+/// experts, so budget knobs show up in the byte ledger.
+fn sys_offload() -> SystemConfig {
+    let m = model();
+    let mut sys = SystemConfig::scaled_for(&m.manifest.model, false);
+    sys.gpu_cache_bytes = 5 * m.manifest.q_expert_bytes(synth::SYNTH_BITS);
+    sys
+}
+
+fn requests(n: usize) -> Vec<Request> {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let eval = synth::tiny_eval_store(&dims).unwrap();
+    let cfg = WorkloadConfig::offline(n, 24, 8);
+    WorkloadGen::generate(&cfg, &eval).unwrap()
+}
+
+/// An `--policy adaptive` server whose §10 allocator runs under `budget`.
+fn adaptive_server(budget: usize) -> Server {
+    let mut policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+    policy.alloc_budget_bytes = Some(budget);
+    ServerBuilder::new(model()).policy(policy).system(sys_offload()).build().unwrap()
+}
+
+/// A gate-predictor server whose §8 prefetcher runs under `budget`.
+fn gate_server(budget: usize) -> Server {
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    ServerBuilder::new(model())
+        .policy(policy)
+        .system(sys_offload())
+        .prefetch(PrefetchConfig::new("gate", 1, budget))
+        .build()
+        .unwrap()
+}
+
+/// A plain server with no predictor, no allocator, one device.
+fn plain_server() -> Server {
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    ServerBuilder::new(model()).policy(policy).system(sys_offload()).build().unwrap()
+}
+
+fn submit_all(server: &mut Server, reqs: &[Request]) -> Vec<SessionId> {
+    reqs.iter().map(|r| server.submit(r.clone()).unwrap()).collect()
+}
+
+fn run(server: &mut Server, reqs: &[Request]) -> (Report, Vec<SessionId>) {
+    let ids = submit_all(server, reqs);
+    let report = server.run_to_completion().unwrap();
+    (report, ids)
+}
+
+fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
+    assert_eq!(a.n_requests, b.n_requests, "{label}: n_requests");
+    assert_eq!(a.total_generated, b.total_generated, "{label}: tokens");
+    assert_eq!(a.decode_steps, b.decode_steps, "{label}: decode_steps");
+    assert_eq!(a.prefills, b.prefills, "{label}: prefills");
+    assert_eq!(a.virtual_seconds, b.virtual_seconds, "{label}: virtual time");
+    assert_eq!(a.bytes, b.bytes, "{label}: byte ledger");
+    let (x, y) = (&a.breakdown, &b.breakdown);
+    assert_eq!(x.transfer_weights_s, y.transfer_weights_s, "{label}: transfer_weights_s");
+    assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
+    assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
+    assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
+    for (ra, rb) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(ra.id, rb.id, "{label}: record id");
+        assert_eq!(ra.generated, rb.generated, "{label}: generated of {}", ra.id);
+        assert_eq!(ra.first_token_at, rb.first_token_at, "{label}: ttft of {}", ra.id);
+        assert_eq!(ra.finished_at, rb.finished_at, "{label}: finish of {}", ra.id);
+    }
+}
+
+/// Token/event streams, session by session — the "zero dropped
+/// sessions, zero perturbed tokens" check.
+fn assert_sessions_identical(a: &Server, b: &Server, ids_a: &[SessionId], ids_b: &[SessionId]) {
+    assert_eq!(ids_a.len(), ids_b.len(), "session count");
+    for (ia, ib) in ids_a.iter().zip(ids_b) {
+        let sa = a.session(*ia).expect("session a");
+        let sb = b.session(*ib).expect("session b");
+        assert_eq!(sa.status(), sb.status(), "status of {ia:?}");
+        assert_eq!(sa.events(), sb.events(), "event stream of {ia:?}");
+    }
+}
+
+// -- boundary equivalence -------------------------------------------------
+
+/// `set alloc-budget B` queued before the first tick ≡ a twin built
+/// with budget B: byte-identical report and token streams, and the
+/// audit ledger pins the old→new transition at decode step 0.
+#[test]
+fn alloc_budget_retune_at_first_boundary_equals_built_with() {
+    let m = model();
+    let generous = m.manifest.transfer.fp16_expert_bytes
+        * m.manifest.model.n_layers
+        * m.manifest.model.n_experts;
+    let reqs = requests(3);
+
+    let mut live = adaptive_server(0);
+    let old = live.knob_value("alloc-budget").unwrap();
+    live.enqueue_reconfig(ReconfigEvent::new(Knob::AllocBudget(generous), "test")).unwrap();
+    let (report_live, ids_live) = run(&mut live, &reqs);
+
+    let mut built = adaptive_server(generous);
+    let (report_built, ids_built) = run(&mut built, &reqs);
+
+    assert_reports_identical(&report_live, &report_built, "alloc retune vs built-with");
+    assert_sessions_identical(&live, &built, &ids_live, &ids_built);
+    assert_eq!(live.knob_value("alloc-budget").unwrap(), generous.to_string());
+
+    let audit = live.audit_records();
+    assert_eq!(audit.len(), 1, "exactly one audited change");
+    assert_eq!(audit[0].knob, "alloc-budget");
+    assert_eq!(audit[0].old, old);
+    assert_eq!(audit[0].new, generous.to_string());
+    assert_eq!(audit[0].origin, "test");
+    assert_eq!(audit[0].outcome, AuditOutcome::Applied);
+    assert_eq!(audit[0].decode_step, 0, "landed at the first boundary");
+    assert!(built.audit_records().is_empty(), "twin never reconfigured");
+}
+
+/// The prefetch budget retuned at a *live* boundary — after prefill
+/// ticks have already run, with active sessions holding slots — is
+/// byte-identical to a twin built with the new budget (prefetches are
+/// only issued inside decode steps, so the elapsed prefill ticks agree
+/// under both budgets).  Sessions survive the retune untouched.
+#[test]
+fn prefetch_budget_retune_at_live_boundary_equals_built_with() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let reqs = requests(2);
+
+    let mut live = gate_server(q);
+    let ids_live = submit_all(&mut live, &reqs);
+    // Drive the admission ticks by hand: both requests enter slots
+    // before any decode step, so the queue has live sessions when the
+    // retune lands.
+    for _ in 0..2 {
+        assert!(matches!(live.tick().unwrap(), ServerTick::Prefilled(_)));
+    }
+    live.enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(4 * q), "test")).unwrap();
+    let report_live = live.run_to_completion().unwrap();
+
+    let mut built = gate_server(4 * q);
+    let (report_built, ids_built) = run(&mut built, &reqs);
+
+    assert_reports_identical(&report_live, &report_built, "prefetch retune vs built-with");
+    assert_sessions_identical(&live, &built, &ids_live, &ids_built);
+    let audit = live.audit_records();
+    assert_eq!(audit.len(), 1);
+    assert_eq!(audit[0].outcome, AuditOutcome::Applied);
+    assert_eq!(audit[0].decode_step, 0, "applied before the first decode step");
+    assert_eq!((audit[0].old.as_str(), audit[0].new.as_str()), (
+        q.to_string().as_str(),
+        (4 * q).to_string().as_str(),
+    ));
+}
+
+/// A same-value `set` landing at an arbitrary mid-run decode step is a
+/// semantic no-op: byte-identical to never touching the server, with
+/// the non-event still honestly recorded in the ledger.
+#[test]
+fn same_value_set_mid_run_is_byte_identical_to_no_set() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let reqs = requests(3);
+
+    let mut touched = gate_server(2 * q);
+    let ids_t = submit_all(&mut touched, &reqs);
+    for _ in 0..6 {
+        touched.tick().unwrap();
+    }
+    let mid_step = touched.stats().decode_steps;
+    assert!(mid_step > 0, "retune lands mid-decode, not at the start");
+    touched
+        .enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(2 * q), "noop-test"))
+        .unwrap();
+    let report_t = touched.run_to_completion().unwrap();
+
+    let mut untouched = gate_server(2 * q);
+    let (report_u, ids_u) = run(&mut untouched, &reqs);
+
+    assert_reports_identical(&report_t, &report_u, "same-value set vs untouched");
+    assert_sessions_identical(&touched, &untouched, &ids_t, &ids_u);
+    let audit = touched.audit_records();
+    assert_eq!(audit.len(), 1);
+    assert_eq!(audit[0].old, audit[0].new, "no-op recorded with old == new");
+    assert_eq!(audit[0].decode_step, mid_step, "stamped with the boundary it landed at");
+    assert!(untouched.audit_records().is_empty());
+}
+
+/// An arbitrary mid-run retune schedule replays deterministically:
+/// identical reports, token streams and audit ledgers (seq, virtual
+/// time, decode step, old→new) on a second run.
+#[test]
+fn retune_schedule_replays_deterministically() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let reqs = requests(3);
+    let mut run_once = || {
+        let mut server = gate_server(q);
+        let ids = submit_all(&mut server, &reqs);
+        for _ in 0..4 {
+            server.tick().unwrap();
+        }
+        server
+            .enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(3 * q), "sched"))
+            .unwrap();
+        server.enqueue_reconfig(ReconfigEvent::new(Knob::Lookahead(2), "sched")).unwrap();
+        for _ in 0..4 {
+            server.tick().unwrap();
+        }
+        server.enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(q), "sched")).unwrap();
+        let report = server.run_to_completion().unwrap();
+        (server, report, ids)
+    };
+    let (server_a, report_a, ids_a) = run_once();
+    let (server_b, report_b, ids_b) = run_once();
+    assert_reports_identical(&report_a, &report_b, "replayed retune schedule");
+    assert_sessions_identical(&server_a, &server_b, &ids_a, &ids_b);
+    let (aa, ab) = (server_a.audit_records(), server_b.audit_records());
+    assert_eq!(aa.len(), 3);
+    assert_eq!(aa.len(), ab.len());
+    for (ra, rb) in aa.iter().zip(ab) {
+        assert_eq!(ra.seq, rb.seq);
+        assert_eq!(ra.virtual_time, rb.virtual_time);
+        assert_eq!(ra.decode_step, rb.decode_step);
+        assert_eq!((&ra.knob, &ra.old, &ra.new), (&rb.knob, &rb.old, &rb.new));
+        assert_eq!(ra.outcome, rb.outcome);
+    }
+}
+
+// -- rejections: audited, never half-applied ------------------------------
+
+/// Every statically invalid knob is refused at enqueue with a
+/// contextful reason, audited as rejected, and perturbs nothing: the
+/// server then serves byte-identically to an untouched twin.
+#[test]
+fn invalid_knobs_are_rejected_audited_and_side_effect_free() {
+    let reqs = requests(2);
+    let mut server = plain_server();
+    let cases: Vec<(Knob, &str)> = vec![
+        (Knob::PrefetchBudget(4096), "without a predictor"),
+        (Knob::Lookahead(2), "without a predictor"),
+        (Knob::AllocBudget(4096), "no allocator to retune"),
+        (Knob::ReplicateBudget(4096), "multi-device fleet"),
+        (Knob::MaxPending(0), "at least 1"),
+        (Knob::Scheduler("warp-speed".to_string()), "warp-speed"),
+    ];
+    for (knob, want) in &cases {
+        let err = server
+            .enqueue_reconfig(ReconfigEvent::new(knob.clone(), "test"))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(want), "`{}` → {msg}", knob.name());
+    }
+    let audit = server.audit_records();
+    assert_eq!(audit.len(), cases.len(), "every refusal is audited");
+    for (record, (knob, want)) in audit.iter().zip(&cases) {
+        assert_eq!(record.knob, knob.name());
+        assert_eq!(record.outcome, AuditOutcome::Rejected);
+        assert!(record.reason.contains(want), "{}: {}", record.knob, record.reason);
+    }
+
+    let (report_a, ids_a) = run(&mut server, &reqs);
+    let mut twin = plain_server();
+    let (report_b, ids_b) = run(&mut twin, &reqs);
+    assert_reports_identical(&report_a, &report_b, "rejected knobs perturb nothing");
+    assert_sessions_identical(&server, &twin, &ids_a, &ids_b);
+    assert_eq!(server.audit_records().len(), cases.len(), "no apply-time records appeared");
+}
+
+/// Scheduler swaps have a *dynamic* precondition: with requests still
+/// queued the swap is refused at apply time (audited as rejected) and
+/// serving continues under the old discipline; on an idle server the
+/// swap applies and is audited with the old→new discipline names.
+#[test]
+fn scheduler_swap_applies_idle_and_rejects_with_queued_work() {
+    // Idle: the swap lands at the next (empty) tick boundary.
+    let mut idle = plain_server();
+    idle.enqueue_reconfig(ReconfigEvent::new(Knob::Scheduler("slo".to_string()), "ops"))
+        .unwrap();
+    assert_eq!(idle.scheduler_name(), "fifo", "nothing mutates before the boundary");
+    idle.tick().unwrap();
+    assert_eq!(idle.scheduler_name(), "slo");
+    let audit = idle.audit_records();
+    assert_eq!(audit.len(), 1);
+    assert_eq!((audit[0].old.as_str(), audit[0].new.as_str()), ("fifo", "slo"));
+    assert_eq!(audit[0].outcome, AuditOutcome::Applied);
+
+    // Queued work: enqueue passes static validation, the apply refuses.
+    let reqs = requests(3);
+    let mut busy = plain_server();
+    submit_all(&mut busy, &reqs);
+    busy.enqueue_reconfig(ReconfigEvent::new(Knob::Scheduler("slo".to_string()), "ops"))
+        .unwrap();
+    let report = busy.run_to_completion().unwrap();
+    assert_eq!(busy.scheduler_name(), "fifo", "refused swap leaves the discipline alone");
+    assert_eq!(report.n_requests, reqs.len());
+    let audit = busy.audit_records();
+    assert_eq!(audit.len(), 1);
+    assert_eq!(audit[0].outcome, AuditOutcome::Rejected);
+    assert!(audit[0].reason.contains("drain first"), "{}", audit[0].reason);
+}
+
+// -- the wire: protocol, profiles, audit file, socket ---------------------
+
+/// `handle_line` end-to-end: set → tick → get reflects the new value,
+/// and the status payload carries the knob table.
+#[test]
+fn protocol_set_applies_at_tick_and_get_reflects_it() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let mut server = gate_server(q);
+    let line = format!(r#"{{"cmd":"set","knob":"prefetch-budget","value":"{}"}}"#, 3 * q);
+    let (resp, quit) = handle_line(&mut server, &line);
+    assert!(!quit);
+    assert!(resp.contains(r#""ok":true"#), "{resp}");
+    assert!(resp.contains(r#""queued":true"#), "{resp}");
+    // Queued, not applied: get still reports the old value.
+    let (resp, _) = handle_line(&mut server, r#"{"cmd":"get","knob":"prefetch-budget"}"#);
+    assert!(resp.contains(&format!(r#""value":"{q}""#)), "{resp}");
+    server.tick().unwrap();
+    let (resp, _) = handle_line(&mut server, r#"{"cmd":"get","knob":"prefetch-budget"}"#);
+    assert!(resp.contains(&format!(r#""value":"{}""#, 3 * q)), "{resp}");
+    let (resp, _) = handle_line(&mut server, r#"{"cmd":"status"}"#);
+    assert!(resp.contains(r#""knobs":{"#), "{resp}");
+    assert!(resp.contains(r#""scheduler":"fifo""#), "{resp}");
+}
+
+/// Profiles are all-or-nothing: one invalid line (an allocator knob on
+/// a server with no allocator) refuses the whole batch — the valid
+/// knobs in the same profile must NOT apply.
+#[test]
+fn profile_apply_is_all_or_nothing() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let mut server = gate_server(q);
+    let bad = r#"{"cmd":"profile","text":"profile mixed\nset lookahead 3\nset alloc-budget 1\n"}"#;
+    let (resp, _) = handle_line(&mut server, bad);
+    assert!(resp.contains(r#""ok":false"#), "{resp}");
+    assert!(resp.contains("no allocator"), "{resp}");
+    server.tick().unwrap();
+    assert_eq!(server.knob_value("lookahead").unwrap(), "1", "valid line must not leak through");
+    let audit = server.audit_records();
+    assert_eq!(audit.len(), 1, "one rejection record for the refused batch");
+    assert_eq!(audit[0].outcome, AuditOutcome::Rejected);
+    assert_eq!(audit[0].origin, "mixed", "profile name is the audit origin");
+
+    // The all-valid profile applies atomically at the next boundary.
+    let good = r#"{"cmd":"profile","text":"profile peak\nset lookahead 3\nset prefetch-budget 8192\n"}"#;
+    let (resp, _) = handle_line(&mut server, good);
+    assert!(resp.contains(r#""queued":2"#), "{resp}");
+    server.tick().unwrap();
+    assert_eq!(server.knob_value("lookahead").unwrap(), "3");
+    assert_eq!(server.knob_value("prefetch-budget").unwrap(), "8192");
+    let applied: Vec<_> = server
+        .audit_records()
+        .iter()
+        .filter(|r| r.outcome == AuditOutcome::Applied)
+        .collect();
+    assert_eq!(applied.len(), 2);
+    assert!(applied.iter().all(|r| r.origin == "peak"));
+}
+
+/// The JSONL audit file replays cleanly: `AuditLedger::load` returns
+/// exactly the in-memory records, applied and rejected alike.
+#[test]
+fn audit_file_replays_cleanly() {
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let path = test_path("ctl_audit_replay.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let mut server = gate_server(q);
+    server.attach_audit_file(&path).unwrap();
+    server.enqueue_reconfig(ReconfigEvent::new(Knob::PrefetchBudget(2 * q), "ops")).unwrap();
+    server
+        .enqueue_reconfig(ReconfigEvent::new(Knob::AllocBudget(1), "ops"))
+        .unwrap_err();
+    server.tick().unwrap();
+    let (report, _) = run(&mut server, &requests(2));
+    assert_eq!(report.n_requests, 2);
+
+    let replayed = AuditLedger::load(&path).unwrap();
+    assert_eq!(replayed.len(), server.audit_records().len());
+    for (file, live) in replayed.iter().zip(server.audit_records()) {
+        assert_eq!(file, live, "file record {} drifted from memory", file.seq);
+    }
+    let outcomes: Vec<_> = replayed.iter().map(|r| r.outcome).collect();
+    assert_eq!(outcomes, [AuditOutcome::Rejected, AuditOutcome::Applied]);
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Full daemon↔client round trip over a real Unix socket: status, get,
+/// set (audited), profile load, audit tail, shutdown.
+#[test]
+fn daemon_serves_ctl_client_over_unix_socket() {
+    let socket = test_path("ctl_socket_roundtrip.sock");
+    let _ = std::fs::remove_file(&socket);
+    let q = model().manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let server = gate_server(q);
+    let daemon_socket = socket.clone();
+    let daemon = std::thread::spawn(move || {
+        let mut server = server;
+        beam_moe::ctl::daemon::serve(&mut server, &daemon_socket, None).unwrap();
+        server
+    });
+    // The daemon binds after spawn; retry the connect briefly.
+    let mut client = None;
+    for _ in 0..500 {
+        match CtlClient::connect(&socket) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    let mut client = client.expect("daemon never bound its socket");
+
+    client.ping().unwrap();
+    let status = client.status().unwrap();
+    assert_eq!(status.get("scheduler").unwrap().str().unwrap(), "fifo");
+    assert_eq!(client.get("prefetch-budget").unwrap(), q.to_string());
+    client.set("prefetch-budget", &(2 * q).to_string(), "smoke").unwrap();
+    let n = client
+        .load_profile("profile socket-test\nset lookahead 4\n", "unused")
+        .unwrap();
+    assert_eq!(n, 1);
+    // The daemon ticks between requests, so the changes have applied by
+    // the time the next round trip completes.
+    assert_eq!(client.get("prefetch-budget").unwrap(), (2 * q).to_string());
+    assert_eq!(client.get("lookahead").unwrap(), "4");
+    let records = client.audit_tail(10).unwrap();
+    assert_eq!(records.len(), 2);
+    assert_eq!(records[0].get("knob").unwrap().str().unwrap(), "prefetch-budget");
+    assert_eq!(records[0].get("origin").unwrap().str().unwrap(), "smoke");
+    assert_eq!(records[1].get("knob").unwrap().str().unwrap(), "lookahead");
+    assert_eq!(records[1].get("origin").unwrap().str().unwrap(), "socket-test");
+    client.shutdown().unwrap();
+    let server = daemon.join().unwrap();
+    assert_eq!(server.audit_records().len(), 2);
+    assert!(!socket.exists(), "daemon removes its socket on exit");
+}
+
+fn test_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("beam_{}_{name}", std::process::id()))
+}
