@@ -70,16 +70,16 @@ fn main() -> anyhow::Result<()> {
     // 4. Cache ops.
     let mut cache = ExpertCache::new(1 << 20);
     common::time("cache insert+get", 10_000, || {
-        let key = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Quant(2) };
-        cache.insert(key, Arc::new(Vec::new()), 1024);
-        let _ = cache.get(&key);
+        let key = PayloadKey { layer: 0, expert: 0 };
+        cache.insert(key, PayloadKind::Quant(2), Arc::new(Vec::new()), 1024);
+        let _ = cache.get(&key, PayloadKind::Quant(2));
     });
     // Eviction-heavy path: the BTreeMap recency index must keep this O(log n).
     let mut small = ExpertCache::new(8 * 1024);
     common::time("cache insert w/ eviction", 10_000, || {
         for e in 0..16 {
-            let key = PayloadKey { layer: 0, expert: e, kind: PayloadKind::Quant(2) };
-            small.insert(key, Arc::new(Vec::new()), 1024);
+            let key = PayloadKey { layer: 0, expert: e };
+            small.insert(key, PayloadKind::Quant(2), Arc::new(Vec::new()), 1024);
         }
     });
 

@@ -293,6 +293,12 @@ pub struct PolicyConfig {
     /// may spend across all layer×expert payloads (DESIGN.md §10).
     /// `None` = the floor plan plus compensate-everything headroom.
     pub alloc_budget_bytes: Option<usize>,
+    /// `adaptive`: elastic residency demote/promote byte budget per replan
+    /// boundary (DESIGN.md §15) — the cap on *promotion delta* bytes moved
+    /// each decode step (demotions are free: they drop resident levels in
+    /// place).  `0` (the default) disables elastic residency entirely; the
+    /// serve is then byte-identical to the pre-elastic cache.
+    pub requant_budget_bytes: usize,
 }
 
 /// Priority class of a tenant (DESIGN.md §13).  Ordering is meaningful:
@@ -703,6 +709,7 @@ impl PolicyConfig {
             hobbit_hi_threshold: 0.8,
             hobbit_lo_bits: 4,
             alloc_budget_bytes: None,
+            requant_budget_bytes: 0,
         }
     }
 

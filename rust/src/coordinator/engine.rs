@@ -51,7 +51,7 @@ use crate::backend::Tensor;
 use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
 use crate::coordinator::metrics::{
-    FaultReport, PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
+    ElasticReport, FaultReport, PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
 };
 use crate::coordinator::state::{ActiveSeq, BatchState, LayerKv};
 use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
@@ -62,7 +62,7 @@ use crate::offload::transfer::{Link, TransferClass, TransferLog};
 use crate::policies::make_policy;
 use crate::policies::plan::{LayerPlacement, LayerPlan, Location, PlanCtx, Policy};
 use crate::predict::{make_predictor, EwmaPopularity, ExpertPredictor, LayerObservation, PredictCtx};
-use crate::quant::alloc::PrecisionAllocator;
+use crate::quant::alloc::{ElasticAction, PrecisionAllocator};
 use crate::runtime::StagedModel;
 use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::topology::{FaultEvent, FaultKind, FaultPlan, LinkSpec, Topology};
@@ -185,6 +185,13 @@ pub struct ServeEngine {
     /// Re-plans at decode-step boundaries; its per-layer map reaches the
     /// policy through `PlanCtx::precisions`.
     alloc: Option<PrecisionAllocator>,
+    /// Boundary promotions issued under the requant budget (elastic
+    /// residency, DESIGN.md §15); all zero when the budget is zero.
+    elastic_promotions: u64,
+    elastic_promoted_bytes: usize,
+    /// Decode-time demand fetches that paid only a delta over a landed
+    /// lower-rung resident copy instead of the full payload.
+    elastic_demand_promotions: u64,
     /// The MoE layer currently executing belongs to a prefill step
     /// (prefetch stats track the decode critical path only).
     in_prefill: bool,
@@ -316,6 +323,9 @@ impl ServeEngine {
             predictor,
             predicted_scores: HashMap::new(),
             alloc,
+            elastic_promotions: 0,
+            elastic_promoted_bytes: 0,
+            elastic_demand_promotions: 0,
             in_prefill: false,
             decode_steps: 0,
             prefills: 0,
@@ -325,6 +335,11 @@ impl ServeEngine {
             started: Instant::now(),
             model,
         };
+        if engine.elastic_active() {
+            for d in engine.devices.iter_mut() {
+                d.cache.set_elastic(true);
+            }
+        }
         engine.prewarm()?;
         Ok(engine)
     }
@@ -484,6 +499,39 @@ impl ServeEngine {
         }
     }
 
+    /// The elastic-residency requant budget (DESIGN.md §15): promotion
+    /// delta bytes allowed per replan boundary.  `None` when the policy
+    /// consumes no precision plan — without an allocator there is no
+    /// target rung to promote toward, so the knob is meaningless.
+    pub fn requant_budget(&self) -> Option<usize> {
+        self.alloc.as_ref().map(|_| self.policy_cfg.requant_budget_bytes)
+    }
+
+    /// Retarget the requant budget; the elastic pass at the next decode
+    /// boundary runs under it.  `0 → nonzero` arms the elastic machinery
+    /// live (demote-first eviction included); `nonzero → 0` disarms it,
+    /// returning the serve to the plain demand/evict path.  `false` when
+    /// no allocator exists.
+    pub fn set_requant_budget(&mut self, bytes: usize) -> bool {
+        if self.alloc.is_none() {
+            return false;
+        }
+        self.policy_cfg.requant_budget_bytes = bytes;
+        let on = bytes > 0;
+        for d in self.devices.iter_mut() {
+            d.cache.set_elastic(on);
+        }
+        true
+    }
+
+    /// Is the elastic-residency machinery live?  Requires both a precision
+    /// allocator (the target rungs) and a nonzero requant budget; at zero
+    /// budget none of the elastic wiring runs and the serve is
+    /// byte-identical to the pre-elastic engine.
+    fn elastic_active(&self) -> bool {
+        self.alloc.is_some() && self.policy_cfg.requant_budget_bytes > 0
+    }
+
     /// The live per-device replica budget: what the replicator actually
     /// plans under, `0` when replication is inactive.
     pub fn replicate_budget(&self) -> usize {
@@ -597,10 +645,10 @@ impl ServeEngine {
                 if cache.used_bytes() + bytes > cache.capacity() {
                     continue;
                 }
-                let key = PayloadKey { layer, expert, kind: PayloadKind::Fp16 };
+                let key = PayloadKey { layer, expert };
                 let lits =
                     Arc::new(self.model.payload_base(layer, expert, Precision::Fp16, "hqq")?);
-                self.devices[dev].cache.insert(key, lits, bytes);
+                self.devices[dev].cache.insert(key, PayloadKind::Fp16, lits, bytes);
             }
         }
         Ok(())
@@ -645,7 +693,11 @@ impl ServeEngine {
     /// ready time).  A cache entry whose transfer is still in flight (a
     /// prefetch, a replica copy, or a demand fetch another exec issued) is
     /// *joined*: no second transfer, but the requester inherits the
-    /// in-flight completion time.  Misses fetch over `dev`'s host link.
+    /// in-flight completion time.  Misses fetch over `dev`'s host link —
+    /// except under elastic residency (DESIGN.md §15), where a landed
+    /// sibling level of the same expert shortcuts the wire: a *lower*
+    /// resident rung pays only the delta bytes (demand promotion) and a
+    /// *higher* one requantizes in place for free (demote-serve).
     fn acquire_base(
         &mut self,
         dev: usize,
@@ -654,8 +706,9 @@ impl ServeEngine {
         precision: Precision,
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
-        let key = PayloadKey { layer, expert, kind: Self::payload_kind(precision) };
-        if let Some(hit) = self.devices[dev].cache.get_at(&key, ready) {
+        let key = PayloadKey { layer, expert };
+        let kind = Self::payload_kind(precision);
+        if let Some(hit) = self.devices[dev].cache.get_at(&key, kind, ready) {
             // First use of a speculative entry consumes its one-shot flag,
             // so credit coverage regardless of prefill/decode — the
             // prefetch saved a real link fetch either way.
@@ -666,13 +719,45 @@ impl ServeEngine {
         }
         let lits = Arc::new(self.model.payload_base(layer, expert, precision, &self.method())?);
         let bytes = self.base_bytes(precision);
+        let (wire_bytes, demand_promo) = if self.elastic_active() {
+            // Largest landed base level of this expert (compensators can't
+            // seed a base); in-flight levels can't be reused — their data
+            // isn't on-device yet.
+            let best = self.devices[dev]
+                .cache
+                .level_info(&key)
+                .into_iter()
+                .filter(|&(k, _, r)| !matches!(k, PayloadKind::Comp(_)) && r <= ready)
+                .map(|(_, b, _)| b)
+                .max();
+            match best {
+                Some(b) if b >= bytes => (0, false), // requantize down in place
+                Some(b) => (bytes - b, true),        // pay only the delta up
+                None => (bytes, false),
+            }
+        } else {
+            (bytes, false)
+        };
         let done =
-            self.devices[dev].host_link.transfer(ready, bytes, TransferClass::ExpertWeights);
-        if !self.in_prefill {
+            self.devices[dev].host_link.transfer(ready, wire_bytes, TransferClass::ExpertWeights);
+        // A zero-wire serve (requantize-on-device) never hit the link, so
+        // it is not a demand fetch; with elastic off `wire_bytes == bytes
+        // > 0` always, so this is exactly the legacy counting.
+        if !self.in_prefill && wire_bytes > 0 {
             self.prefetch.demand_fetches += 1;
             self.devices[dev].demand_fetches += 1;
         }
-        self.devices[dev].cache.insert_ready(key, Arc::clone(&lits), bytes, done);
+        if demand_promo {
+            self.elastic_demand_promotions += 1;
+        }
+        self.devices[dev].cache.insert_ready(key, kind, Arc::clone(&lits), bytes, done);
+        // Allocator-driven serves supersede stale sibling precisions of
+        // the same expert (the replan-leaves-dead-bytes fix); policies
+        // without a precision plan may hold several precisions at once
+        // legitimately (HOBBIT's hi/lo pair) and are left alone.
+        if self.alloc.is_some() {
+            self.devices[dev].cache.supersede(&key, kind);
+        }
         Ok((lits, done))
     }
 
@@ -686,8 +771,9 @@ impl ServeEngine {
         bits: u8,
         ready: VTime,
     ) -> Result<(Arc<Vec<Tensor>>, VTime)> {
-        let key = PayloadKey { layer, expert, kind: PayloadKind::Comp(bits) };
-        if let Some(hit) = self.devices[dev].cache.get_at(&key, ready) {
+        let key = PayloadKey { layer, expert };
+        let kind = PayloadKind::Comp(bits);
+        if let Some(hit) = self.devices[dev].cache.get_at(&key, kind, ready) {
             return Ok((hit.payload, ready.max(hit.ready_at)));
         }
         let tag = self.policy_cfg.comp_tag.clone();
@@ -695,7 +781,7 @@ impl ServeEngine {
         let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
         let done =
             self.devices[dev].host_link.transfer(ready, bytes, TransferClass::Compensator);
-        self.devices[dev].cache.insert_ready(key, Arc::clone(&lits), bytes, done);
+        self.devices[dev].cache.insert_ready(key, kind, Arc::clone(&lits), bytes, done);
         Ok((lits, done))
     }
 
@@ -719,7 +805,7 @@ impl ServeEngine {
     /// index), falling back to the owner — who then demand-fetches over
     /// its host link.  The probe is economics-free (`peek_ready_at`), so
     /// `D = 1` routing (always device 0) perturbs nothing.
-    fn choose_device(&self, key: &PayloadKey, owner: usize, now: VTime) -> usize {
+    fn choose_device(&self, key: &PayloadKey, kind: PayloadKind, owner: usize, now: VTime) -> usize {
         if self.devices.len() == 1 {
             return 0;
         }
@@ -728,7 +814,7 @@ impl ServeEngine {
             if !self.device_alive(d) {
                 continue;
             }
-            if dev.cache.peek_ready_at(key).is_some_and(|t| t <= now) {
+            if dev.cache.peek_ready_at(key, kind).is_some_and(|t| t <= now) {
                 let free = dev.gpu.free_at();
                 let better = match best {
                     None => true,
@@ -875,8 +961,8 @@ impl ServeEngine {
         let m = &self.model.manifest.model;
         let devices = &self.devices;
         let probe = move |e: usize| {
-            let key = PayloadKey { layer, expert: e, kind: PayloadKind::Fp16 };
-            devices.iter().any(|d| d.cache.contains(&key))
+            let key = PayloadKey { layer, expert: e };
+            devices.iter().any(|d| d.cache.contains(&key, PayloadKind::Fp16))
         };
         // The placement view exists only on fleets — `D = 1` planning
         // inputs are exactly the pre-sharding ones (the §11 equivalence
@@ -890,11 +976,11 @@ impl ServeEngine {
             // dead device is no copy at all.
             let replicated = (0..m.n_experts)
                 .map(|e| {
-                    let key = PayloadKey { layer, expert: e, kind: bulk };
+                    let key = PayloadKey { layer, expert: e };
                     devices.iter().enumerate().any(|(d, dev)| {
                         d != owner[e]
                             && self.device_alive(d)
-                            && dev.cache.peek_ready_at(&key).is_some_and(|t| t <= now)
+                            && dev.cache.peek_ready_at(&key, bulk).is_some_and(|t| t <= now)
                     })
                 })
                 .collect();
@@ -958,13 +1044,10 @@ impl ServeEngine {
             let n_tok = exec.tokens.len();
             match exec.location {
                 Location::Gpu => {
-                    let key = PayloadKey {
-                        layer,
-                        expert: exec.expert,
-                        kind: Self::payload_kind(exec.precision),
-                    };
+                    let key = PayloadKey { layer, expert: exec.expert };
+                    let kind = Self::payload_kind(exec.precision);
                     let owner = self.effective_owner(exec.expert);
-                    let dev = self.choose_device(&key, owner, router_done);
+                    let dev = self.choose_device(&key, kind, owner, router_done);
                     // Cross-device dispatch: the hidden state lives on
                     // device 0; a remote exec ships activations out (and,
                     // below, back) on the peer links.  The weight fetch
@@ -1118,6 +1201,12 @@ impl ServeEngine {
         if let Some(a) = self.alloc.as_mut() {
             a.replan();
         }
+        // Elastic residency (DESIGN.md §15): reconcile resident rungs
+        // against the fresh precision plan — demote in place for free,
+        // promote hottest-first under the requant budget.  Runs after the
+        // replan (it consumes the new plan) and before the replica
+        // reconcile (replicas are priced at the bulk rung regardless).
+        self.elastic_step()?;
         self.replicate_step()?;
 
         let mut x = self.model.embed(&tokens, false)?;
@@ -1402,11 +1491,11 @@ impl ServeEngine {
             self.predicted_scores.insert(t_layer, dense);
 
             for p in ranked.into_iter().take(cap) {
-                let key = PayloadKey { layer: t_layer, expert: p.expert, kind };
+                let key = PayloadKey { layer: t_layer, expert: p.expert };
                 // Dedup against resident payloads and in-flight fetches
                 // anywhere in the fleet (a landed replica is as good as a
                 // local copy — the router will pick it).
-                if self.devices.iter().any(|d| d.cache.contains(&key)) {
+                if self.devices.iter().any(|d| d.cache.contains(&key, kind)) {
                     continue;
                 }
                 if !self.prefetch.try_spend(bytes_each) {
@@ -1422,7 +1511,7 @@ impl ServeEngine {
                     bytes_each,
                     TransferClass::Speculative,
                 );
-                self.devices[dev].cache.insert_speculative(key, lits, bytes_each, done);
+                self.devices[dev].cache.insert_speculative(key, kind, lits, bytes_each, done);
                 self.prefetch.issued += 1;
             }
         }
@@ -1457,15 +1546,15 @@ impl ServeEngine {
         let alive: Vec<bool> = (0..n_devices).map(|d| self.device_alive(d)).collect();
         let plan = rep.plan_alive(bulk, |e| self.effective_owner(e), &alive);
 
-        let mut desired: Vec<HashSet<PayloadKey>> = vec![HashSet::new(); n_devices];
+        let mut desired: Vec<HashSet<(PayloadKey, PayloadKind)>> = vec![HashSet::new(); n_devices];
         for t in &plan {
-            desired[t.device].insert(PayloadKey { layer: t.layer, expert: t.expert, kind });
+            desired[t.device].insert((PayloadKey { layer: t.layer, expert: t.expert }, kind));
         }
         // Stale replicas are discards — no link traffic to free HBM.
         for (dev, want) in desired.iter().enumerate() {
-            for key in self.devices[dev].cache.pinned_keys() {
-                if !want.contains(&key) {
-                    self.devices[dev].cache.unpin(&key);
+            for (key, k) in self.devices[dev].cache.pinned_keys() {
+                if !want.contains(&(key, k)) {
+                    self.devices[dev].cache.unpin(&key, k);
                 }
             }
         }
@@ -1473,14 +1562,14 @@ impl ServeEngine {
         // already resident on the target — pinned from an earlier step, or
         // demand-cached — is sticky: no re-transfer while it lives.
         for t in &plan {
-            let key = PayloadKey { layer: t.layer, expert: t.expert, kind };
-            if self.devices[t.device].cache.contains(&key) {
+            let key = PayloadKey { layer: t.layer, expert: t.expert };
+            if self.devices[t.device].cache.contains(&key, kind) {
                 continue;
             }
             let owner = self.effective_owner(t.expert);
             let lits = Arc::new(self.model.payload_base(t.layer, t.expert, prec, &self.method())?);
             let owner_has_landed = owner != t.device
-                && self.devices[owner].cache.peek_ready_at(&key).is_some_and(|r| r <= now);
+                && self.devices[owner].cache.peek_ready_at(&key, kind).is_some_and(|r| r <= now);
             // Peer-sourced copies record their source device so that, if
             // the source dies mid-copy, the in-flight entry is dropped and
             // requeued instead of advertising a landing the dead wire can
@@ -1497,10 +1586,153 @@ impl ServeEngine {
                 );
                 (t_done, None)
             };
-            self.devices[t.device].cache.insert_pinned_from(key, lits, bulk, done, src);
+            self.devices[t.device].cache.insert_pinned_from(key, kind, lits, bulk, done, src);
             rep.issued += 1;
             rep.bytes_moved += bulk;
         }
+        Ok(())
+    }
+
+    /// Decode-step-boundary elastic reconcile (DESIGN.md §15): diff each
+    /// expert's resident rung on its owner device against the allocator's
+    /// fresh plan, demote over-provisioned residents in place (free — a
+    /// requantize-on-device, no link traffic) and promote under-provisioned
+    /// ones hottest-first, paying only the delta bytes between rungs on the
+    /// owner's host link under `TransferClass::Promotion`, capped by the
+    /// requant budget.  No-op at zero budget or without an allocator —
+    /// none of this wiring runs then, keeping the legacy serve
+    /// byte-identical.
+    fn elastic_step(&mut self) -> Result<()> {
+        if !self.elastic_active() {
+            return Ok(());
+        }
+        let m = self.model.manifest.model.clone();
+        let now = self.clock.now();
+        let mut resident = vec![vec![None; m.n_experts]; m.n_layers];
+        for (layer, row) in resident.iter_mut().enumerate() {
+            for (expert, slot) in row.iter_mut().enumerate() {
+                let owner = self.effective_owner(expert);
+                if !self.device_alive(owner) {
+                    continue;
+                }
+                let key = PayloadKey { layer, expert };
+                *slot =
+                    Self::resident_precision(&self.devices[owner].cache.level_info(&key), now);
+            }
+        }
+        let alloc = self.alloc.as_ref().expect("elastic_active implies allocator");
+        let actions = alloc.elastic_actions(&resident, self.policy_cfg.requant_budget_bytes);
+        for act in actions {
+            match act {
+                ElasticAction::Demote { layer, expert, to, .. } => {
+                    self.demote_resident(layer, expert, to, now)?;
+                }
+                ElasticAction::Promote { layer, expert, to, delta, .. } => {
+                    self.promote_resident(layer, expert, to, delta, now)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The precision rung an entry's *landed* levels currently serve:
+    /// fp16 wins outright; otherwise the widest quant base, compensated
+    /// when its same-width factors landed too.  In-flight levels don't
+    /// count — their data isn't on-device yet.
+    fn resident_precision(levels: &[(PayloadKind, usize, VTime)], now: VTime) -> Option<Precision> {
+        let landed = |k: PayloadKind| levels.iter().any(|&(lk, _, r)| lk == k && r <= now);
+        if landed(PayloadKind::Fp16) {
+            return Some(Precision::Fp16);
+        }
+        let widest = levels
+            .iter()
+            .filter_map(|&(k, _, r)| match k {
+                PayloadKind::Quant(b) if r <= now => Some(b),
+                _ => None,
+            })
+            .max()?;
+        if landed(PayloadKind::Comp(widest)) {
+            Some(Precision::IntComp(widest))
+        } else {
+            Some(Precision::Int(widest))
+        }
+    }
+
+    /// Apply one planned demotion on `expert`'s owner device: drop every
+    /// level outside the target rung (counted in the cache's demotion
+    /// ledger) and materialize the target's missing levels at zero link
+    /// cost — requantizing the resident higher-precision copy on-device.
+    fn demote_resident(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        to: Precision,
+        now: VTime,
+    ) -> Result<()> {
+        let dev = self.effective_owner(expert);
+        let key = PayloadKey { layer, expert };
+        let base_kind = Self::payload_kind(to);
+        let comp_kind = match to {
+            Precision::IntComp(b) => Some(PayloadKind::Comp(b)),
+            _ => None,
+        };
+        // Drop first, so the zero-cost materialization below never trips
+        // eviction pressure against other experts.
+        for (kind, _, _) in self.devices[dev].cache.level_info(&key) {
+            if kind != base_kind && Some(kind) != comp_kind {
+                self.devices[dev].cache.drop_level(&key, kind);
+            }
+        }
+        if !self.devices[dev].cache.contains(&key, base_kind) {
+            let lits = Arc::new(self.model.payload_base(layer, expert, to, &self.method())?);
+            let bytes = self.base_bytes(to);
+            self.devices[dev].cache.insert_ready(key, base_kind, lits, bytes, now);
+        }
+        if let (Some(kind), Precision::IntComp(bits)) = (comp_kind, to) {
+            if !self.devices[dev].cache.contains(&key, kind) {
+                let tag = self.policy_cfg.comp_tag.clone();
+                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
+                let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+                self.devices[dev].cache.insert_ready(key, kind, lits, bytes, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one planned promotion on `expert`'s owner device: move only
+    /// the delta bytes between the resident and target rungs over the
+    /// owner's host link (`TransferClass::Promotion`), install the target
+    /// levels landing when the delta does, and fold the now-stale lower
+    /// levels (the cache's supersede ledger).
+    fn promote_resident(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        to: Precision,
+        delta: usize,
+        now: VTime,
+    ) -> Result<()> {
+        let dev = self.effective_owner(expert);
+        let key = PayloadKey { layer, expert };
+        let base_kind = Self::payload_kind(to);
+        let done = self.devices[dev].host_link.transfer(now, delta, TransferClass::Promotion);
+        if !self.devices[dev].cache.contains(&key, base_kind) {
+            let lits = Arc::new(self.model.payload_base(layer, expert, to, &self.method())?);
+            let bytes = self.base_bytes(to);
+            self.devices[dev].cache.insert_ready(key, base_kind, lits, bytes, done);
+        }
+        if let Precision::IntComp(bits) = to {
+            let kind = PayloadKind::Comp(bits);
+            if !self.devices[dev].cache.contains(&key, kind) {
+                let tag = self.policy_cfg.comp_tag.clone();
+                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
+                let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+                self.devices[dev].cache.insert_ready(key, kind, lits, bytes, done);
+            }
+        }
+        self.devices[dev].cache.supersede(&key, base_kind);
+        self.elastic_promotions += 1;
+        self.elastic_promoted_bytes += delta;
         Ok(())
     }
 
@@ -1544,6 +1776,7 @@ impl ServeEngine {
             ("activations", TransferClass::Activations),
             ("speculative_weights", TransferClass::Speculative),
             ("replication", TransferClass::Replication),
+            ("promotion", TransferClass::Promotion),
         ] {
             let total: usize = logs.iter().map(|log| log.bytes_of(class)).sum();
             bytes.insert(name.to_string(), total);
@@ -1559,6 +1792,7 @@ impl ServeEngine {
         breakdown.transfer_comp_s = busy(TransferClass::Compensator);
         breakdown.transfer_spec_s = busy(TransferClass::Speculative);
         breakdown.transfer_repl_s = busy(TransferClass::Replication);
+        breakdown.transfer_promo_s = busy(TransferClass::Promotion);
         breakdown.transfer_act_s = busy(TransferClass::Activations);
 
         Report {
@@ -1615,6 +1849,16 @@ impl ServeEngine {
             // engine has no tenancy notion); `None` here keeps the
             // legacy report byte-identical.
             sched: None,
+            elastic: self.elastic_active().then(|| ElasticReport {
+                requant_budget_bytes: self.policy_cfg.requant_budget_bytes,
+                demotions: self.devices.iter().map(|d| d.cache.demotions).sum(),
+                demoted_bytes: self.devices.iter().map(|d| d.cache.demoted_bytes).sum(),
+                promotions: self.elastic_promotions,
+                promoted_bytes: self.elastic_promoted_bytes,
+                demand_promotions: self.elastic_demand_promotions,
+                superseded: self.devices.iter().map(|d| d.cache.superseded).sum(),
+                superseded_bytes: self.devices.iter().map(|d| d.cache.superseded_bytes).sum(),
+            }),
         }
     }
 }

@@ -21,6 +21,10 @@ pub struct StepBreakdown {
     /// Link busy-time of hot-expert replica copies across the sharded
     /// fleet (DESIGN.md §11); 0 on single-device runs.
     pub transfer_repl_s: f64,
+    /// Link busy-time of elastic promotion deltas (DESIGN.md §15); 0
+    /// whenever the requant budget is zero, so legacy breakdowns are
+    /// unchanged.  Demotions never appear here — they cross no link.
+    pub transfer_promo_s: f64,
     /// Decode critical-path stall: virtual time expert compute waited on
     /// weight/compensator transfers beyond GPU availability.  A *view* of
     /// where transfer time landed, not extra busy time — excluded from
@@ -39,6 +43,7 @@ impl StepBreakdown {
         self.transfer_act_s += other.transfer_act_s;
         self.transfer_spec_s += other.transfer_spec_s;
         self.transfer_repl_s += other.transfer_repl_s;
+        self.transfer_promo_s += other.transfer_promo_s;
         self.transfer_stall_s += other.transfer_stall_s;
         self.head_s += other.head_s;
     }
@@ -47,6 +52,7 @@ impl StepBreakdown {
         self.transfer_weights_s + self.transfer_comp_s + self.transfer_act_s
             + self.transfer_spec_s
             + self.transfer_repl_s
+            + self.transfer_promo_s
     }
 
     pub fn total_compute(&self) -> f64 {
@@ -203,6 +209,52 @@ impl FaultReport {
     }
 }
 
+/// Elastic precision-residency outcome of a serve run (DESIGN.md §15);
+/// attached to [`Report::elastic`] only when a non-zero requant budget
+/// made the elastic machinery live, so zero-budget and fixed-precision
+/// reports are unchanged.  `PartialEq` so differential tests can diff
+/// the whole demote/promote ledger at once.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ElasticReport {
+    /// Promotion-delta byte budget per replan boundary.
+    pub requant_budget_bytes: usize,
+    /// Resident levels dropped in place (eviction-pressure demote-first
+    /// plus replan-driven demotions) — zero link bytes by construction.
+    pub demotions: u64,
+    /// HBM bytes freed by those demotions.
+    pub demoted_bytes: usize,
+    /// Replan-boundary promotions issued (delta transfers under
+    /// `TransferClass::Promotion`).
+    pub promotions: u64,
+    /// Delta bytes moved by boundary promotions.
+    pub promoted_bytes: usize,
+    /// Decode-time demand fetches that upgraded a resident lower rung by
+    /// paying only the delta instead of the full payload.
+    pub demand_promotions: u64,
+    /// Stale-precision levels retired when a fresh precision landed
+    /// (the supersede-on-insert fix; counted even at zero budget when an
+    /// allocator is live, but the ledger only surfaces when elastic is).
+    pub superseded: u64,
+    /// Dead bytes reclaimed by superseding stale-precision copies.
+    pub superseded_bytes: usize,
+}
+
+impl ElasticReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "requant-budget={}B demotions={} ({}B) promotions={} ({}B) demand-promos={} superseded={} ({}B)",
+            self.requant_budget_bytes,
+            self.demotions,
+            self.demoted_bytes,
+            self.promotions,
+            self.promoted_bytes,
+            self.demand_promotions,
+            self.superseded,
+            self.superseded_bytes,
+        )
+    }
+}
+
 /// Per-tenant row of [`SchedReport`]: admission accounting, quota
 /// ledger, and tail latencies for one tenant of the mix.
 #[derive(Debug, Default, Clone)]
@@ -328,6 +380,9 @@ pub struct Report {
     /// Scheduling/tenancy ledger (DESIGN.md §13); `None` for the legacy
     /// `fifo` path, so pre-scheduler reports are unchanged.
     pub sched: Option<SchedReport>,
+    /// Elastic precision-residency ledger (DESIGN.md §15); `None` unless
+    /// a non-zero requant budget was set, so legacy reports are unchanged.
+    pub elastic: Option<ElasticReport>,
 }
 
 impl Report {

@@ -17,6 +17,7 @@ pub const KNOB_NAMES: &[&str] = &[
     "max-pending",
     "prefetch-budget",
     "replicate-budget",
+    "requant-budget",
     "scheduler",
 ];
 
@@ -31,6 +32,9 @@ pub enum Knob {
     AllocBudget(usize),
     /// Per-device pinned-replica budget, bytes (DESIGN.md §11).
     ReplicateBudget(usize),
+    /// Elastic-residency promotion-delta budget per replan boundary,
+    /// bytes (DESIGN.md §15); `0` disarms the elastic machinery live.
+    RequantBudget(usize),
     /// Admission-control cap on queued-but-unadmitted requests.
     MaxPending(usize),
     /// Swap the scheduling discipline (any registered name, §13).
@@ -45,6 +49,7 @@ impl Knob {
             Knob::Lookahead(_) => "lookahead",
             Knob::AllocBudget(_) => "alloc-budget",
             Knob::ReplicateBudget(_) => "replicate-budget",
+            Knob::RequantBudget(_) => "requant-budget",
             Knob::MaxPending(_) => "max-pending",
             Knob::Scheduler(_) => "scheduler",
         }
@@ -57,6 +62,7 @@ impl Knob {
             | Knob::Lookahead(v)
             | Knob::AllocBudget(v)
             | Knob::ReplicateBudget(v)
+            | Knob::RequantBudget(v)
             | Knob::MaxPending(v) => v.to_string(),
             Knob::Scheduler(s) => s.clone(),
         }
@@ -76,6 +82,7 @@ impl Knob {
             "lookahead" => Knob::Lookahead(num()?),
             "alloc-budget" => Knob::AllocBudget(num()?),
             "replicate-budget" => Knob::ReplicateBudget(num()?),
+            "requant-budget" => Knob::RequantBudget(num()?),
             "max-pending" => Knob::MaxPending(num()?),
             "scheduler" => Knob::Scheduler(value.to_string()),
             other => bail!("unknown knob `{other}` — valid knobs: {}", KNOB_NAMES.join(", ")),
@@ -115,7 +122,7 @@ mod tests {
     fn unknown_knob_lists_valid_names() {
         let err = Knob::parse("prefetch-budgets", "1").unwrap_err().to_string();
         assert!(err.contains("unknown knob `prefetch-budgets`"), "{err}");
-        assert!(err.contains("prefetch-budget, replicate-budget, scheduler"), "{err}");
+        assert!(err.contains("prefetch-budget, replicate-budget, requant-budget, scheduler"), "{err}");
     }
 
     #[test]

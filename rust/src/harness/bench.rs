@@ -4,8 +4,8 @@
 //! synthetic model: no artifacts, no network, deterministic work (the
 //! wall-clock is the only nondeterministic output).  `beam bench --json`
 //! emits one machine-readable record per benchmark for trend tracking;
-//! the committed baseline lives in `rust/benches/BENCH_8.json` and is
-//! refreshed with `beam bench --json --out rust/benches/BENCH_8.json`
+//! the committed baseline lives in `rust/benches/BENCH_9.json` and is
+//! refreshed with `beam bench --json --out rust/benches/BENCH_9.json`
 //! on a quiet machine.
 //!
 //! The suite is intentionally small and stable: names are part of the
@@ -232,11 +232,68 @@ fn bench_reconfig_apply(n: usize) -> Result<BenchRecord> {
     Ok(BenchRecord::new("reconfig_apply", n as u64, wall))
 }
 
+/// End-to-end serve with the elastic allocator armed (DESIGN.md §15):
+/// adaptive policy at the compensate-everything budget, a thrash-sized
+/// cache and a non-zero requant budget, so every decode boundary runs
+/// the elastic replan — demote/promote planning plus delta transfers.
+/// Iters are decode steps (the unit the replan runs per).
+fn bench_elastic_replan(n_req: usize, out_len: usize) -> Result<BenchRecord> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let dims = model.manifest.model.clone();
+    let q = model.manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let pairs = dims.n_layers * dims.n_experts;
+    let comp_total = model.manifest.comp_bytes_total("default", synth::SYNTH_BITS);
+    let mut sys = SystemConfig::scaled_for(&dims, false);
+    sys.gpu_cache_bytes = 4 * q;
+    let mut policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+    policy.comp_tag = "default".to_string();
+    policy.alloc_budget_bytes = Some(pairs * q + comp_total);
+    policy.requant_budget_bytes = 2 * q;
+    let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+    let eval = synth::tiny_eval_store(&dims)?;
+    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_req, 32, out_len), &eval)?;
+    let start = Instant::now();
+    for req in reqs {
+        server.submit(req)?;
+    }
+    let report = server.run_to_completion()?;
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(report.elastic.is_some(), "elastic bench must arm the elastic ledger");
+    Ok(BenchRecord::new("elastic_replan", report.decode_steps as u64, wall)
+        .with_metric("virtual_tok_per_s", report.tokens_per_second()))
+}
+
+/// Elastic cache micro-bench: a layered entry is built and its top
+/// level demoted in place, per iteration — the per-eviction cost bound
+/// of the demote-first path (no transfer, pure bookkeeping).
+fn bench_demote_in_place(n: usize) -> Result<BenchRecord> {
+    use crate::offload::cache::{ExpertCache, PayloadKey, PayloadKind};
+    let mut cache = ExpertCache::new(1 << 20);
+    cache.set_elastic(true);
+    let payload = Arc::new(Vec::new());
+    let start = Instant::now();
+    for i in 0..n {
+        let key = PayloadKey { layer: 0, expert: i % 8 };
+        cache.insert(key, PayloadKind::Quant(2), Arc::clone(&payload), 1024);
+        cache.insert(key, PayloadKind::Fp16, Arc::clone(&payload), 4096);
+        let dropped = cache.drop_level(&key, PayloadKind::Fp16);
+        anyhow::ensure!(dropped == Some(4096), "demote bench dropped {dropped:?}");
+    }
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(cache.demotions == n as u64, "every iteration must count one demotion");
+    Ok(BenchRecord::new("demote_in_place", n as u64, wall))
+}
+
 /// Run the pinned suite.  `quick` shrinks every size (the test/CI
 /// configuration); the default sizes are the baseline configuration.
 pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
-    let (traffic_n, decide_n, serve_req, out_len, slo_req, ctl_n, reconfig_n) =
-        if quick { (200, 50, 2, 4, 4, 50, 50) } else { (5000, 500, 6, 16, 12, 2000, 500) };
+    let (traffic_n, decide_n, serve_req, out_len, slo_req, ctl_n, reconfig_n, ela_req, demote_n) =
+        if quick {
+            (200, 50, 2, 4, 4, 50, 50, 2, 200)
+        } else {
+            (5000, 500, 6, 16, 12, 2000, 500, 6, 20_000)
+        };
     Ok(vec![
         bench_traffic(traffic_n)?,
         bench_slo_decide(decide_n)?,
@@ -244,6 +301,8 @@ pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
         bench_serve_slo(slo_req)?,
         bench_ctl_roundtrip(ctl_n)?,
         bench_reconfig_apply(reconfig_n)?,
+        bench_elastic_replan(ela_req, out_len)?,
+        bench_demote_in_place(demote_n)?,
     ])
 }
 
@@ -283,7 +342,7 @@ mod tests {
         assert_eq!(
             names,
             ["traffic_gen", "slo_decide", "serve_fifo", "serve_slo", "ctl_roundtrip",
-             "reconfig_apply"]
+             "reconfig_apply", "elastic_replan", "demote_in_place"]
         );
         for r in &records {
             assert!(r.iters > 0, "{}: no work timed", r.name);
@@ -293,7 +352,7 @@ mod tests {
         let json = to_json(&records, true).to_string();
         let v = crate::jsonx::Value::parse(&json).unwrap();
         assert_eq!(v.get("schema").unwrap().str().unwrap(), "beam-bench-v1");
-        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 6);
+        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 8);
     }
 
     #[test]

@@ -1642,6 +1642,181 @@ pub fn load(h: &mut Harness) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Elastic residency sweep — layered precision vs pure eviction (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// Not a paper figure: the elastic precision-residency sweep (DESIGN.md
+/// §15).  On a capacity-constrained testbed it serves one workload three
+/// ways at one accuracy budget:
+///
+/// * `lru` — the budgeted adaptive allocator with a zero requant budget:
+///   the pure-eviction path (whole entries leave the cache, every
+///   refetch pays full payload bytes);
+/// * `uniform` — the best uniform `static-quant` width that fits the
+///   same byte budget;
+/// * `elastic` — the same adaptive allocator with a non-zero requant
+///   budget: eviction demotes in place (zero wire bytes) and promotions
+///   pay only the rung delta.
+///
+/// Hard CI contracts:
+/// 1. *off-switch byte-identity*: two zero-requant serves are
+///    byte-identical, carry no elastic ledger and move zero promotion
+///    bytes — the elastic machinery is invisible until armed;
+/// 2. elastic strictly beats its pure-eviction lru twin on decode
+///    weight stall (same allocator plan, so equal accuracy by
+///    construction);
+/// 3. elastic strictly beats the equal-budget uniform width on stall.
+///
+/// With `--smoke` (or no artifacts) it runs on the built-in synthetic
+/// model with a tiny workload — the artifact-free CI path.
+pub fn elastic(h: &mut Harness) -> Result<()> {
+    let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
+    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
+        Box::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = h.artifacts.clone();
+        let backend = Arc::clone(&h.backend);
+        Box::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(Arc::clone(&backend), manifest)
+        })
+    };
+    let probe = mk_model()?;
+    let manifest = probe.manifest.clone();
+    let dims = manifest.model.clone();
+    let mut bits: Vec<u8> = manifest.quant.bits.clone();
+    bits.sort_unstable();
+    bits.dedup();
+    let floor_bits = bits[0];
+    let tag = "default";
+    let pairs = dims.n_layers * dims.n_experts;
+    let q = manifest.q_expert_bytes(floor_bits);
+    // One accuracy budget binds all three variants: the floor plan with
+    // compensate-everything headroom (the §10 sweep's heterogeneity point).
+    let budget = pairs * q + manifest.comp_bytes_total(tag, floor_bits);
+    let uniform_bits = bits
+        .iter()
+        .copied()
+        .filter(|&b| pairs * manifest.q_expert_bytes(b) <= budget)
+        .max()
+        .unwrap_or(floor_bits);
+
+    let (n_req, prompt_len, out_len) =
+        if smoke { (2, 32, 10) } else { (h.serve_requests, 256, 64) };
+    let eval = if smoke {
+        synth::tiny_eval_store(&dims)?
+    } else {
+        crate::manifest::WeightStore::load(probe.manifest.eval_path())?
+    };
+    let requests =
+        WorkloadGen::generate(&WorkloadConfig::offline(n_req, prompt_len, out_len), &eval)?;
+    // Thrash regime: the cache holds a handful of floor payloads, so
+    // residency churn — not compute — dominates the decode stall.
+    let cache_bytes = 4 * q;
+    // Per-boundary promotion-delta allowance: a couple of floor payloads.
+    let requant = 2 * q;
+
+    let serve = |policy: PolicyConfig| -> Result<Report> {
+        let model = mk_model()?;
+        let mut sys = SystemConfig::scaled_for(&model.manifest.model, false);
+        sys.gpu_cache_bytes = cache_bytes;
+        let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+        for req in &requests {
+            server.submit(req.clone())?;
+        }
+        server.run_to_completion()
+    };
+
+    let mut lru_cfg = PolicyConfig::new("adaptive", floor_bits, 0);
+    lru_cfg.comp_tag = tag.to_string();
+    lru_cfg.alloc_budget_bytes = Some(budget);
+    let mut ela_cfg = lru_cfg.clone();
+    ela_cfg.requant_budget_bytes = requant;
+
+    let lru = serve(lru_cfg.clone())?;
+    let lru_again = serve(lru_cfg)?;
+    let uni = serve(PolicyConfig::new("static-quant", uniform_bits, 0))?;
+    let ela = serve(ela_cfg)?;
+
+    h.sink.line(format!(
+        "== Elastic residency sweep ({}, out={out_len}{}): layered precision vs pure eviction ==",
+        dims.name,
+        if smoke { ", smoke" } else { "" },
+    ));
+    h.sink.line(format!(
+        "  budget {budget}B (uniform fit: int{uniform_bits}) | cache {cache_bytes}B | requant {requant}B/boundary",
+    ));
+
+    // Contract 1 — the off-switch: a zero requant budget must leave the
+    // serve byte-identical run to run, with no elastic ledger and no
+    // promotion traffic.
+    let off = reports_identical(&lru, &lru_again)
+        && lru.elastic.is_none()
+        && lru.bytes.get("promotion").copied().unwrap_or(0) == 0;
+    h.sink.line(format!("  zero-requant off-switch: byte-identical, no elastic ledger = {off}"));
+    anyhow::ensure!(off, "zero requant budget must be byte-identical to the pure-eviction serve");
+    anyhow::ensure!(
+        ela.elastic.is_some(),
+        "armed elastic run must carry the elastic ledger"
+    );
+
+    let mut rows = Vec::new();
+    let variants = [
+        ("lru".to_string(), &lru),
+        (format!("uniform-int{uniform_bits}"), &uni),
+        ("elastic".to_string(), &ela),
+    ];
+    for (name, r) in &variants {
+        h.sink.line(format!(
+            "    {name:<15} {:>8.2} tok/s | stall {:>8.5}s | promo {:>9}B | xfer {:>9}B",
+            r.tokens_per_second(),
+            r.breakdown.transfer_stall_s,
+            r.bytes.get("promotion").copied().unwrap_or(0),
+            r.bytes.values().sum::<usize>(),
+        ));
+        rows.push(format!(
+            "{name},{},{},{},{}",
+            r.tokens_per_second(),
+            r.breakdown.transfer_stall_s,
+            r.bytes.get("promotion").copied().unwrap_or(0),
+            r.bytes.values().sum::<usize>(),
+        ));
+    }
+    if let Some(e) = &ela.elastic {
+        h.sink.line(format!("    {:<15} {}", "elastic ledger", e.summary()));
+    }
+
+    // Contracts 2 + 3 — at the same accuracy budget, demote-in-place plus
+    // delta promotion must strictly beat both full-refetch baselines on
+    // decode weight stall.
+    anyhow::ensure!(
+        ela.breakdown.transfer_stall_s < lru.breakdown.transfer_stall_s,
+        "elastic stall {:.5}s did not beat the pure-eviction twin {:.5}s",
+        ela.breakdown.transfer_stall_s,
+        lru.breakdown.transfer_stall_s,
+    );
+    anyhow::ensure!(
+        ela.breakdown.transfer_stall_s < uni.breakdown.transfer_stall_s,
+        "elastic stall {:.5}s did not beat uniform int{uniform_bits} {:.5}s",
+        ela.breakdown.transfer_stall_s,
+        uni.breakdown.transfer_stall_s,
+    );
+    h.sink.csv(
+        "elastic_sweep.csv",
+        "variant,tokens_per_s,stall_s,promotion_bytes,total_bytes",
+        &rows,
+    )?;
+    h.sink.line(
+        "  (expected: demotions free capacity without wire traffic, so refetches shrink to \
+         rung deltas; both full-refetch baselines pay whole payloads per miss)",
+    );
+    Ok(())
+}
+
 /// Run every figure (the `figure all` command).
 pub fn all(h: &mut Harness) -> Result<()> {
     fig1(h)?;
@@ -1678,12 +1853,13 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
         "shard" => shard(h),
         "fault" => fault(h),
         "load" => load(h),
+        "elastic" => elastic(h),
         "golden" => crate::harness::golden::run(h),
         "all" => all(h),
         other => {
             anyhow::bail!(
                 "unknown figure `{other}` (fig1-4, fig6-8, tab2, prefetch, adaptive, shard, \
-                 fault, load, golden, all)"
+                 fault, load, elastic, golden, all)"
             )
         }
     }

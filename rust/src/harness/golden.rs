@@ -51,6 +51,7 @@ pub fn scenario_names() -> Vec<&'static str> {
         "shard3-degraded-link",
         "slo-two-tenants",
         "reconfig-live",
+        "elastic-capacity",
     ]
 }
 
@@ -170,6 +171,19 @@ pub fn render(name: &str) -> Result<String> {
             ];
             WorkloadConfig::offline(2, 32, 6)
         }
+        // §15 elastic residency: the budgeted allocator under a cache
+        // small enough to force demote-first eviction, with a per-boundary
+        // requant budget so promotions pay only rung deltas.  Pins the
+        // elastic ledger (demotions, delta promotions, supersede counts)
+        // and the `promotion` byte class end to end.
+        "elastic-capacity" => {
+            policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+            policy.alloc_budget_bytes =
+                Some(pairs * q + manifest.comp_bytes_total("default", synth::SYNTH_BITS));
+            policy.requant_budget_bytes = 2 * q;
+            sys.gpu_cache_bytes = 4 * q;
+            WorkloadConfig::offline(2, 32, 8)
+        }
         other => anyhow::bail!("unknown golden scenario `{other}`"),
     };
 
@@ -253,6 +267,7 @@ fn render_report(w: &mut String, r: &Report) {
     let _ = writeln!(w, "breakdown.transfer_act_s: {:?}", b.transfer_act_s);
     let _ = writeln!(w, "breakdown.transfer_spec_s: {:?}", b.transfer_spec_s);
     let _ = writeln!(w, "breakdown.transfer_repl_s: {:?}", b.transfer_repl_s);
+    let _ = writeln!(w, "breakdown.transfer_promo_s: {:?}", b.transfer_promo_s);
     let _ = writeln!(w, "breakdown.transfer_stall_s: {:?}", b.transfer_stall_s);
     let _ = writeln!(w, "breakdown.head_s: {:?}", b.head_s);
     let _ = writeln!(w, "cache_hit_rate: {:?}", r.cache_hit_rate);
@@ -271,6 +286,9 @@ fn render_report(w: &mut String, r: &Report) {
     }
     if let Some(f) = &r.fault {
         let _ = writeln!(w, "fault: {}", f.summary());
+    }
+    if let Some(e) = &r.elastic {
+        let _ = writeln!(w, "elastic: {}", e.summary());
     }
     if let Some(s) = &r.sched {
         let _ = writeln!(w, "sched: {}", s.summary());

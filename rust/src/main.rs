@@ -5,11 +5,11 @@
 //!             [--requests N] [--prompt-len P] [--output-len O] [--arrival-rate R]
 //!             [--prefetch off|ewma|gate|oracle|...] [--prefetch-budget BYTES]
 //!             [--lookahead N] [--max-pending N] [--alloc-budget BYTES]
-//!             [--devices D] [--replicate-budget BYTES] [--fault-plan FILE]
-//!             [--scheduler fifo|slo] [--tenants FILE]
+//!             [--requant-budget BYTES] [--devices D] [--replicate-budget BYTES]
+//!             [--fault-plan FILE] [--scheduler fifo|slo] [--tenants FILE]
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
-//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|load|golden|all>
+//! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|load|elastic|golden|all>
 //!             [--out DIR] [--full] [--smoke] [--bless]
 //! beam bench  [--json] [--out FILE] [--quick]
 //! beam info   --model mixtral-tiny
@@ -54,6 +54,11 @@
 //! (DESIGN.md §10): `--bits` is the floor width, `--alloc-budget` the total
 //! byte budget across all layer×expert payloads.  `figure adaptive --smoke`
 //! runs the sweep artifact-free on the synthetic model (the CI path).
+//! `--requant-budget BYTES` arms elastic precision residency on top of the
+//! allocator (DESIGN.md §15): eviction demotes resident experts in place
+//! (zero wire bytes) and promotions pay only the rung delta, capped at
+//! BYTES per decode-step boundary.  `figure elastic --smoke` checks the
+//! stall-win and off-switch byte-identity contracts artifact-free.
 //!
 //! `--policy` and `--prefetch` resolve through the open policy/predictor
 //! registries (DESIGN.md §9): `beam serve --policy biglittle` works even
@@ -107,6 +112,7 @@ const SERVE_FLAGS: &[&str] = &[
     "prompt-len",
     "raw-system",
     "replicate-budget",
+    "requant-budget",
     "requests",
     "scheduler",
     "seed",
@@ -217,6 +223,7 @@ fn policy_config(args: &Args, manifest: &Manifest) -> Result<PolicyConfig> {
     if let Some(b) = args.opt("alloc-budget") {
         p.alloc_budget_bytes = Some(b.parse().context("--alloc-budget")?);
     }
+    p.requant_budget_bytes = args.num("requant-budget", 0usize)?;
     if let Some(pos) = args.opt("positions") {
         p.restore_positions = Some(
             pos.split(',')
@@ -437,6 +444,9 @@ fn main() -> Result<()> {
             }
             if let Some(f) = &report.fault {
                 println!("  fault: {}", f.summary());
+            }
+            if let Some(e) = &report.elastic {
+                println!("  elastic: {}", e.summary());
             }
             println!(
                 "  virtual {:.4}s | wall {:.1}s | ttft {:.4}s | req latency {:.4}s | backend execs {}",

@@ -1,4 +1,5 @@
-//! On-GPU expert payload cache (LRU by bytes) with in-flight entries.
+//! On-GPU expert payload cache (LRU by bytes) with in-flight entries and
+//! layered precision residency.
 //!
 //! Caching is both *numeric* and *economic*: a hit reuses the already-built
 //! payload tensors (no host work) and, in virtual time, skips the link
@@ -6,18 +7,31 @@
 //! real system.  Capacity is the HBM headroom left after the dense weights
 //! and KV cache (`SystemConfig::gpu_cache_bytes`).
 //!
+//! **Layered residency** (DESIGN.md §15): one expert has one entry, keyed
+//! `(layer, expert)`; the entry holds *levels* — a quantized base body,
+//! optional low-rank compensator factors, an optional fp16 top
+//! ([`PayloadKind`]).  Each level keeps its own bytes, recency and
+//! in-flight state, so with elastic mode off the cache is level-for-level
+//! isomorphic to the old per-(key, precision) design — the
+//! zero-requant-budget byte-identity pin.  With elastic mode on
+//! ([`ExpertCache::set_elastic`]), eviction pressure first *demotes*:
+//! droppable top levels (fp16 above a quant base, a compensator above its
+//! base, a wide quant above a narrow one) are freed in place — no link
+//! traffic, counted in the demotion ledger — before any expert is fully
+//! evicted, turning evict-or-keep into a precision/coverage continuum.
+//!
 //! Entries carry the virtual time their transfer lands (`ready_at`): a
 //! payload whose copy is still *in flight* — a speculative prefetch, or a
 //! demand fetch another exec already issued this step — can be joined (no
 //! second transfer) but is **not** a hit until the wire delivers it; the
 //! requester inherits the in-flight completion time (DESIGN.md §8).
 //!
-//! Recency is an ordered `BTreeMap<tick, key>` (ticks are unique), so
-//! eviction pops the least-recent entry in O(log n) instead of the old
+//! Recency is an ordered `BTreeMap<tick, (key, kind)>` (ticks are unique),
+//! so eviction pops the least-recent level in O(log n) instead of the old
 //! full-scan `min_by_key` over every entry.
 //!
 //! Under expert-parallel sharding (DESIGN.md §11) a device may also hold
-//! **pinned replicas** of hot remote experts: entries placed by the
+//! **pinned replicas** of hot remote experts: levels placed by the
 //! popularity-driven replicator into a *reserved* byte region
 //! (`ShardConfig::replicate_budget_bytes`) that sits outside the LRU
 //! capacity — demand traffic can never evict a replica; only the
@@ -30,8 +44,8 @@ use std::sync::Arc;
 use crate::backend::Tensor;
 use crate::sim::clock::VTime;
 
-/// Which payload variant of an expert is cached.  Base weights and
-/// compensators are separate entries: BEAM fetches compensators only for
+/// Which payload component of an expert a level holds.  Base weights and
+/// compensators are separate levels: BEAM fetches compensators only for
 /// top-n experts, so they have their own locality.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PayloadKind {
@@ -41,18 +55,20 @@ pub enum PayloadKind {
     Comp(u8),
 }
 
+/// One cached expert: `(layer, expert)`.  Precision lives in the entry's
+/// levels, not the key — one expert has one entry (DESIGN.md §15).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PayloadKey {
     pub layer: usize,
     pub expert: usize,
-    pub kind: PayloadKind,
 }
 
-struct Entry {
+struct Level {
+    kind: PayloadKind,
     payload: Arc<Vec<Tensor>>,
     bytes: usize,
     last_use: u64,
-    /// Virtual time the payload's transfer completes (0 for prewarmed).
+    /// Virtual time the payload's transfer lands (0 for prewarmed).
     ready_at: VTime,
     /// Inserted by the prefetcher rather than a demand miss.
     speculative: bool,
@@ -62,7 +78,7 @@ struct Entry {
     /// replica region, absent from the recency index, never LRU-evicted.
     pinned: bool,
     /// Source *device* of an in-flight peer transfer (`None` for host
-    /// sourced or local inserts).  When that device dies the entry's
+    /// sourced or local inserts).  When that device dies the level's
     /// `ready_at` is a lie — the wire went dark mid-copy — so the fault
     /// path drops it via [`ExpertCache::drop_in_flight_from`].
     src: Option<usize>,
@@ -84,16 +100,29 @@ pub struct ExpertCache {
     /// Bytes held by pinned replicas (the reserved region, outside `used`).
     pinned_used: usize,
     tick: u64,
-    entries: HashMap<PayloadKey, Entry>,
-    /// last-use tick → key; ticks are unique so this is a total LRU order.
-    /// Pinned entries are deliberately absent (never eviction candidates).
-    recency: BTreeMap<u64, PayloadKey>,
+    /// Elastic residency on: eviction pressure demotes before it evicts.
+    elastic: bool,
+    entries: HashMap<PayloadKey, Vec<Level>>,
+    /// last-use tick → (key, kind); ticks are unique so this is a total
+    /// LRU order over levels.  Pinned levels are deliberately absent
+    /// (never eviction candidates).
+    recency: BTreeMap<u64, (PayloadKey, PayloadKind)>,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
     /// Speculative bytes evicted (or overwritten) without ever serving a
     /// demand access — the prefetcher's sunk cost.
     pub wasted_speculative_bytes: usize,
+    /// Levels dropped in place by elastic demotion — HBM bytes freed that
+    /// crossed no link (the demote-first eviction pass plus explicit
+    /// [`ExpertCache::drop_level`] calls at replan boundaries).
+    pub demotions: u64,
+    pub demoted_bytes: usize,
+    /// Stale sibling levels dropped because a fresh insert superseded them
+    /// (the ISSUE 9 satellite bugfix: after a precision replan, the old
+    /// precision's copy must not linger as dead bytes against capacity).
+    pub superseded: u64,
+    pub superseded_bytes: usize,
 }
 
 impl ExpertCache {
@@ -103,103 +132,142 @@ impl ExpertCache {
             used: 0,
             pinned_used: 0,
             tick: 0,
+            elastic: false,
             entries: HashMap::new(),
             recency: BTreeMap::new(),
             hits: 0,
             misses: 0,
             evictions: 0,
             wasted_speculative_bytes: 0,
+            demotions: 0,
+            demoted_bytes: 0,
+            superseded: 0,
+            superseded_bytes: 0,
         }
     }
 
-    pub fn contains(&self, key: &PayloadKey) -> bool {
+    /// Enable elastic residency: under insert pressure, droppable top
+    /// levels are demoted in place (no transfer) before any full LRU
+    /// eviction.  Off (the default) the cache is exactly the legacy
+    /// per-level LRU — the zero-requant-budget byte-identity pin.
+    pub fn set_elastic(&mut self, on: bool) {
+        self.elastic = on;
+    }
+
+    pub fn contains(&self, key: &PayloadKey, kind: PayloadKind) -> bool {
+        self.entries.get(key).is_some_and(|ls| ls.iter().any(|l| l.kind == kind))
+    }
+
+    /// Any component of the expert resident — the elastic prefetch dedup
+    /// probe (a low-bit body already present means the promote path, not a
+    /// fresh speculative body, is the cheaper move).
+    pub fn contains_any(&self, key: &PayloadKey) -> bool {
         self.entries.contains_key(key)
     }
 
-    /// Non-mutating residency probe: the entry's `ready_at` if present.
+    /// Non-mutating residency probe: the level's `ready_at` if present.
     /// Unlike [`ExpertCache::get_at`] this touches neither recency nor the
     /// hit/miss counters — it is the device-routing peek (`D > 1` chooses
     /// the cheapest *landed* copy without perturbing any cache economics),
     /// so the `D = 1` ledger is untouched by routing probes.
-    pub fn peek_ready_at(&self, key: &PayloadKey) -> Option<VTime> {
-        self.entries.get(key).map(|e| e.ready_at)
+    pub fn peek_ready_at(&self, key: &PayloadKey, kind: PayloadKind) -> Option<VTime> {
+        self.entries
+            .get(key)?
+            .iter()
+            .find(|l| l.kind == kind)
+            .map(|l| l.ready_at)
+    }
+
+    /// Resident components of `key` with their bytes and landing times,
+    /// sorted by kind — the elastic planner's residency view.
+    pub fn level_info(&self, key: &PayloadKey) -> Vec<(PayloadKind, usize, VTime)> {
+        let mut v: Vec<(PayloadKind, usize, VTime)> = self
+            .entries
+            .get(key)
+            .map(|ls| ls.iter().map(|l| (l.kind, l.bytes, l.ready_at)).collect())
+            .unwrap_or_default();
+        v.sort_unstable_by_key(|&(k, _, _)| k);
+        v
     }
 
     /// Look up a payload ignoring transfer completion (resident == hit).
     /// Kept for callers outside the virtual timeline (prewarm, benches).
-    pub fn get(&mut self, key: &PayloadKey) -> Option<Arc<Vec<Tensor>>> {
-        self.get_at(key, VTime::INFINITY).map(|h| h.payload)
+    pub fn get(&mut self, key: &PayloadKey, kind: PayloadKind) -> Option<Arc<Vec<Tensor>>> {
+        self.get_at(key, kind, VTime::INFINITY).map(|h| h.payload)
     }
 
     /// Look up a payload at virtual time `now`, updating recency and
-    /// hit/miss counters.  An entry whose transfer has not landed
+    /// hit/miss counters.  A level whose transfer has not landed
     /// (`ready_at > now`) is returned — the caller joins the in-flight
     /// copy instead of re-transferring — but counts as a *miss*: the
     /// requester still waits on the wire.
-    pub fn get_at(&mut self, key: &PayloadKey, now: VTime) -> Option<CacheHit> {
+    pub fn get_at(&mut self, key: &PayloadKey, kind: PayloadKind, now: VTime) -> Option<CacheHit> {
         self.tick += 1;
         let tick = self.tick;
-        match self.entries.get_mut(key) {
-            Some(e) => {
-                // Pinned replicas live outside the recency index: touching
-                // one must not make it an eviction candidate.
-                if !e.pinned {
-                    self.recency.remove(&e.last_use);
-                    e.last_use = tick;
-                    self.recency.insert(tick, *key);
-                }
-                let first_spec_use = e.speculative && !e.used;
-                e.used = true;
-                if e.ready_at <= now {
-                    self.hits += 1;
-                } else {
-                    self.misses += 1;
-                }
-                Some(CacheHit {
-                    payload: Arc::clone(&e.payload),
-                    ready_at: e.ready_at,
-                    first_spec_use,
-                })
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
+        let Some(l) = self
+            .entries
+            .get_mut(key)
+            .and_then(|ls| ls.iter_mut().find(|l| l.kind == kind))
+        else {
+            self.misses += 1;
+            return None;
+        };
+        // Pinned replicas live outside the recency index: touching one
+        // must not make it an eviction candidate.
+        if !l.pinned {
+            self.recency.remove(&l.last_use);
+            l.last_use = tick;
+            self.recency.insert(tick, (*key, kind));
         }
+        let first_spec_use = l.speculative && !l.used;
+        l.used = true;
+        if l.ready_at <= now {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        Some(CacheHit {
+            payload: Arc::clone(&l.payload),
+            ready_at: l.ready_at,
+            first_spec_use,
+        })
     }
 
     /// Insert a payload of `bytes` (wire size — the HBM cost we account),
-    /// immediately usable.  Evicts LRU entries until it fits; payloads
+    /// immediately usable.  Evicts LRU levels until it fits; payloads
     /// larger than the whole cache are passed through uncached.
-    pub fn insert(&mut self, key: PayloadKey, payload: Arc<Vec<Tensor>>, bytes: usize) {
-        self.insert_full(key, payload, bytes, 0.0, false);
+    pub fn insert(&mut self, key: PayloadKey, kind: PayloadKind, payload: Arc<Vec<Tensor>>, bytes: usize) {
+        self.insert_full(key, kind, payload, bytes, 0.0, false);
     }
 
     /// Insert a demand-fetched payload whose transfer lands at `ready_at`.
     pub fn insert_ready(
         &mut self,
         key: PayloadKey,
+        kind: PayloadKind,
         payload: Arc<Vec<Tensor>>,
         bytes: usize,
         ready_at: VTime,
     ) {
-        self.insert_full(key, payload, bytes, ready_at, false);
+        self.insert_full(key, kind, payload, bytes, ready_at, false);
     }
 
     /// Insert a speculative (prefetched) payload landing at `ready_at`.
     pub fn insert_speculative(
         &mut self,
         key: PayloadKey,
+        kind: PayloadKind,
         payload: Arc<Vec<Tensor>>,
         bytes: usize,
         ready_at: VTime,
     ) {
-        self.insert_full(key, payload, bytes, ready_at, true);
+        self.insert_full(key, kind, payload, bytes, ready_at, true);
     }
 
     fn insert_full(
         &mut self,
         key: PayloadKey,
+        kind: PayloadKind,
         payload: Arc<Vec<Tensor>>,
         bytes: usize,
         ready_at: VTime,
@@ -211,46 +279,144 @@ impl ExpertCache {
             }
             return;
         }
-        self.remove_entry(&key);
+        self.remove_level(&key, kind);
+        if self.elastic && self.used + bytes > self.capacity {
+            self.demote_for(bytes);
+        }
         while self.used + bytes > self.capacity {
-            let (_, lru) = self.recency.pop_first().expect("cache accounting out of sync");
-            let e = self.entries.remove(&lru).unwrap();
-            self.used -= e.bytes;
+            let (_, (lru, lk)) = self.recency.pop_first().expect("cache accounting out of sync");
+            let l = self.take_level(&lru, lk).unwrap();
+            self.used -= l.bytes;
             self.evictions += 1;
-            if e.speculative && !e.used {
-                self.wasted_speculative_bytes += e.bytes;
+            if l.speculative && !l.used {
+                self.wasted_speculative_bytes += l.bytes;
             }
         }
         self.tick += 1;
-        self.entries.insert(
-            key,
-            Entry {
-                payload,
-                bytes,
-                last_use: self.tick,
-                ready_at,
-                speculative,
-                used: false,
-                pinned: false,
-                src: None,
-            },
-        );
-        self.recency.insert(self.tick, key);
+        self.entries.entry(key).or_default().push(Level {
+            kind,
+            payload,
+            bytes,
+            last_use: self.tick,
+            ready_at,
+            speculative,
+            used: false,
+            pinned: false,
+            src: None,
+        });
+        self.recency.insert(self.tick, (key, kind));
         self.used += bytes;
     }
 
-    /// Drop an entry (pinned or not), fixing whichever byte pool held it.
-    fn remove_entry(&mut self, key: &PayloadKey) -> bool {
-        let Some(old) = self.entries.remove(key) else {
+    /// Demote-first pass (elastic only): walk unpinned levels oldest-first
+    /// and drop the ones whose removal leaves a lower usable body of the
+    /// same expert resident — freeing bytes in place, no transfer — until
+    /// `incoming` fits.  Runs before LRU eviction, so under pressure a
+    /// cold expert degrades before any expert disappears.
+    fn demote_for(&mut self, incoming: usize) {
+        let candidates: Vec<(PayloadKey, PayloadKind)> = self.recency.values().copied().collect();
+        for (key, kind) in candidates {
+            if self.used + incoming <= self.capacity {
+                break;
+            }
+            if self.demotable(&key, kind) {
+                self.drop_level(&key, kind);
+            }
+        }
+    }
+
+    /// A level is demotable when dropping it leaves a lower usable body of
+    /// the same expert resident: an fp16 top above any quant base, a
+    /// compensator above its base, or a wide quant above a narrower one.
+    fn demotable(&self, key: &PayloadKey, kind: PayloadKind) -> bool {
+        let Some(levels) = self.entries.get(key) else {
             return false;
         };
-        if old.pinned {
-            self.pinned_used -= old.bytes;
+        match kind {
+            PayloadKind::Fp16 => levels.iter().any(|l| matches!(l.kind, PayloadKind::Quant(_))),
+            PayloadKind::Comp(b) => levels.iter().any(|l| l.kind == PayloadKind::Quant(b)),
+            PayloadKind::Quant(b) => levels
+                .iter()
+                .any(|l| matches!(l.kind, PayloadKind::Quant(b2) if b2 < b)),
+        }
+    }
+
+    /// Drop one level in place — the elastic demotion primitive: bytes are
+    /// freed, no link traffic, counted in the demotion ledger (never as an
+    /// eviction).  Pinned replicas are the replicator's domain and are
+    /// refused.  Returns the freed bytes, `None` if the level is absent.
+    pub fn drop_level(&mut self, key: &PayloadKey, kind: PayloadKind) -> Option<usize> {
+        let bytes =
+            self.entries.get(key)?.iter().find(|l| l.kind == kind && !l.pinned)?.bytes;
+        self.remove_level(key, kind);
+        self.demotions += 1;
+        self.demoted_bytes += bytes;
+        Some(bytes)
+    }
+
+    /// Drop stale sibling levels a fresh demand insert supersedes
+    /// (DESIGN.md §15 — the replan-leaves-dead-bytes bugfix): a new quant
+    /// base or compensator at width `b` retires every other-width base,
+    /// every other-width compensator, and the fp16 top; a new fp16 top
+    /// folds every quant/comp level under it.  Pinned replicas are the
+    /// replicator's domain and are never touched.  Only the engine's
+    /// allocator-driven demand path calls this — policies that
+    /// legitimately hold several precisions of one expert at once
+    /// (HOBBIT's hi/lo pair) never do.  Returns the total bytes freed.
+    pub fn supersede(&mut self, key: &PayloadKey, keep: PayloadKind) -> usize {
+        let Some(levels) = self.entries.get(key) else {
+            return 0;
+        };
+        let kept_width = match keep {
+            PayloadKind::Fp16 => None,
+            PayloadKind::Quant(b) | PayloadKind::Comp(b) => Some(b),
+        };
+        let stale: Vec<(PayloadKind, usize)> = levels
+            .iter()
+            .filter(|l| !l.pinned && l.kind != keep)
+            .filter(|l| match (kept_width, l.kind) {
+                // A fresh fp16 top subsumes every lower level.
+                (None, _) => true,
+                // A fresh width-b level keeps its own base/comp pair and
+                // retires everything else.
+                (Some(b), PayloadKind::Quant(lb)) | (Some(b), PayloadKind::Comp(lb)) => lb != b,
+                (Some(_), PayloadKind::Fp16) => true,
+            })
+            .map(|l| (l.kind, l.bytes))
+            .collect();
+        let mut freed = 0;
+        for (kind, bytes) in stale {
+            self.remove_level(key, kind);
+            self.superseded += 1;
+            self.superseded_bytes += bytes;
+            freed += bytes;
+        }
+        freed
+    }
+
+    /// Remove a level from the entry map only — callers fix the pools.
+    fn take_level(&mut self, key: &PayloadKey, kind: PayloadKind) -> Option<Level> {
+        let levels = self.entries.get_mut(key)?;
+        let i = levels.iter().position(|l| l.kind == kind)?;
+        let l = levels.remove(i);
+        if levels.is_empty() {
+            self.entries.remove(key);
+        }
+        Some(l)
+    }
+
+    /// Drop a level (pinned or not), fixing whichever byte pool held it.
+    fn remove_level(&mut self, key: &PayloadKey, kind: PayloadKind) -> bool {
+        let Some(l) = self.take_level(key, kind) else {
+            return false;
+        };
+        if l.pinned {
+            self.pinned_used -= l.bytes;
         } else {
-            self.recency.remove(&old.last_use);
-            self.used -= old.bytes;
-            if old.speculative && !old.used {
-                self.wasted_speculative_bytes += old.bytes;
+            self.recency.remove(&l.last_use);
+            self.used -= l.bytes;
+            if l.speculative && !l.used {
+                self.wasted_speculative_bytes += l.bytes;
             }
         }
         true
@@ -259,16 +425,17 @@ impl ExpertCache {
     /// Pin a replica of a hot remote expert into the reserved replica
     /// region (outside LRU capacity), landing at `ready_at`.  The caller
     /// (the sharding replicator) enforces the region's byte budget; an
-    /// existing entry under `key` — demand-cached or an older replica — is
-    /// replaced.
+    /// existing level under `(key, kind)` — demand-cached or an older
+    /// replica — is replaced.
     pub fn insert_pinned(
         &mut self,
         key: PayloadKey,
+        kind: PayloadKind,
         payload: Arc<Vec<Tensor>>,
         bytes: usize,
         ready_at: VTime,
     ) {
-        self.insert_pinned_from(key, payload, bytes, ready_at, None);
+        self.insert_pinned_from(key, kind, payload, bytes, ready_at, None);
     }
 
     /// [`ExpertCache::insert_pinned`] with the transfer's source device
@@ -277,77 +444,85 @@ impl ExpertCache {
     pub fn insert_pinned_from(
         &mut self,
         key: PayloadKey,
+        kind: PayloadKind,
         payload: Arc<Vec<Tensor>>,
         bytes: usize,
         ready_at: VTime,
         src: Option<usize>,
     ) {
-        self.remove_entry(&key);
+        self.remove_level(&key, kind);
         self.tick += 1;
-        self.entries.insert(
-            key,
-            Entry {
-                payload,
-                bytes,
-                last_use: self.tick,
-                ready_at,
-                speculative: false,
-                used: false,
-                pinned: true,
-                src,
-            },
-        );
+        self.entries.entry(key).or_default().push(Level {
+            kind,
+            payload,
+            bytes,
+            last_use: self.tick,
+            ready_at,
+            speculative: false,
+            used: false,
+            pinned: true,
+            src,
+        });
         self.pinned_used += bytes;
     }
 
-    /// Drop every entry whose transfer is still in flight (`ready_at >
-    /// now`) from a source device that just died.  Without this, the entry
+    /// Drop every level whose transfer is still in flight (`ready_at >
+    /// now`) from a source device that just died.  Without this, the level
     /// would keep advertising a `ready_at` the dead wire can never honor —
     /// and once virtual time passed it, a *stale miss* would turn into a
-    /// phantom hit.  Returns how many entries were dropped (the engine
+    /// phantom hit.  Returns how many levels were dropped (the engine
     /// requeues them as demand fetches).
     pub fn drop_in_flight_from(&mut self, src: usize, now: VTime) -> usize {
-        let doomed: Vec<PayloadKey> = self
+        let doomed: Vec<(PayloadKey, PayloadKind)> = self
             .entries
             .iter()
-            .filter(|(_, e)| e.src == Some(src) && e.ready_at > now)
-            .map(|(k, _)| *k)
+            .flat_map(|(k, ls)| {
+                ls.iter()
+                    .filter(|l| l.src == Some(src) && l.ready_at > now)
+                    .map(|l| (*k, l.kind))
+                    .collect::<Vec<_>>()
+            })
             .collect();
-        for key in &doomed {
-            self.remove_entry(key);
+        for (key, kind) in &doomed {
+            self.remove_level(key, *kind);
         }
         doomed.len()
     }
 
-    /// Drop every entry — the device-death path.  Unlike
+    /// Drop every level — the device-death path.  Unlike
     /// [`ExpertCache::clear`] the run's hit/miss/eviction economics are
     /// preserved (the run continues; only the HBM contents are gone).
     /// Still-unused speculative bytes are charged as wasted.
     pub fn purge(&mut self) {
-        let keys: Vec<PayloadKey> = self.entries.keys().copied().collect();
-        for key in &keys {
-            self.remove_entry(key);
+        let doomed: Vec<(PayloadKey, PayloadKind)> = self
+            .entries
+            .iter()
+            .flat_map(|(k, ls)| ls.iter().map(|l| (*k, l.kind)).collect::<Vec<_>>())
+            .collect();
+        for (key, kind) in &doomed {
+            self.remove_level(key, *kind);
         }
         debug_assert_eq!(self.used + self.pinned_used, 0);
     }
 
-    /// Drop a pinned replica (the replicator's reconcile path — freeing a
-    /// replica is a discard, no link traffic).  `false` if `key` is absent
-    /// or not pinned.
-    pub fn unpin(&mut self, key: &PayloadKey) -> bool {
-        match self.entries.get(key) {
-            Some(e) if e.pinned => self.remove_entry(key),
+    /// Drop a pinned replica level (the replicator's reconcile path —
+    /// freeing a replica is a discard, no link traffic).  `false` if the
+    /// level is absent or not pinned.
+    pub fn unpin(&mut self, key: &PayloadKey, kind: PayloadKind) -> bool {
+        match self.entries.get(key).and_then(|ls| ls.iter().find(|l| l.kind == kind)) {
+            Some(l) if l.pinned => self.remove_level(key, kind),
             _ => false,
         }
     }
 
-    /// Keys of every pinned replica, sorted for deterministic reconcile.
-    pub fn pinned_keys(&self) -> Vec<PayloadKey> {
-        let mut keys: Vec<PayloadKey> = self
+    /// Every pinned replica level, sorted for deterministic reconcile.
+    pub fn pinned_keys(&self) -> Vec<(PayloadKey, PayloadKind)> {
+        let mut keys: Vec<(PayloadKey, PayloadKind)> = self
             .entries
             .iter()
-            .filter(|(_, e)| e.pinned)
-            .map(|(k, _)| *k)
+            .flat_map(|(k, ls)| {
+                ls.iter().filter(|l| l.pinned).map(|l| (*k, l.kind)).collect::<Vec<_>>()
+            })
             .collect();
         keys.sort_unstable();
         keys
@@ -363,8 +538,9 @@ impl ExpertCache {
     pub fn resident_unused_speculative_bytes(&self) -> usize {
         self.entries
             .values()
-            .filter(|e| e.speculative && !e.used)
-            .map(|e| e.bytes)
+            .flatten()
+            .filter(|l| l.speculative && !l.used)
+            .map(|l| l.bytes)
             .sum()
     }
 
@@ -376,8 +552,9 @@ impl ExpertCache {
         self.capacity
     }
 
+    /// Resident level count (one expert may hold several levels).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.values().map(|ls| ls.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -393,8 +570,9 @@ impl ExpertCache {
         }
     }
 
-    /// Drop every entry *and* reset all counters — a cleared cache must not
-    /// leak hit/miss/eviction stats across harness runs.
+    /// Drop every level *and* reset all counters — a cleared cache must not
+    /// leak hit/miss/eviction stats across harness runs.  The elastic flag
+    /// is configuration, not stats, and survives.
     pub fn clear(&mut self) {
         self.entries.clear();
         self.recency.clear();
@@ -405,6 +583,10 @@ impl ExpertCache {
         self.misses = 0;
         self.evictions = 0;
         self.wasted_speculative_bytes = 0;
+        self.demotions = 0;
+        self.demoted_bytes = 0;
+        self.superseded = 0;
+        self.superseded_bytes = 0;
     }
 }
 
@@ -413,8 +595,10 @@ mod tests {
     use super::*;
 
     fn key(e: usize) -> PayloadKey {
-        PayloadKey { layer: 0, expert: e, kind: PayloadKind::Quant(2) }
+        PayloadKey { layer: 0, expert: e }
     }
+
+    const Q2: PayloadKind = PayloadKind::Quant(2);
 
     fn payload() -> Arc<Vec<Tensor>> {
         Arc::new(Vec::new())
@@ -423,29 +607,29 @@ mod tests {
     #[test]
     fn lru_eviction_order() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 40);
-        c.insert(key(1), payload(), 40);
-        assert!(c.get(&key(0)).is_some()); // 0 is now MRU
-        c.insert(key(2), payload(), 40); // evicts 1 (LRU)
-        assert!(c.contains(&key(0)));
-        assert!(!c.contains(&key(1)));
-        assert!(c.contains(&key(2)));
+        c.insert(key(0), Q2, payload(), 40);
+        c.insert(key(1), Q2, payload(), 40);
+        assert!(c.get(&key(0), Q2).is_some()); // 0 is now MRU
+        c.insert(key(2), Q2, payload(), 40); // evicts 1 (LRU)
+        assert!(c.contains(&key(0), Q2));
+        assert!(!c.contains(&key(1), Q2));
+        assert!(c.contains(&key(2), Q2));
         assert_eq!(c.evictions, 1);
     }
 
     #[test]
     fn oversized_payload_passes_through() {
         let mut c = ExpertCache::new(10);
-        c.insert(key(0), payload(), 100);
-        assert!(!c.contains(&key(0)));
+        c.insert(key(0), Q2, payload(), 100);
+        assert!(!c.contains(&key(0), Q2));
         assert_eq!(c.used_bytes(), 0);
     }
 
     #[test]
     fn reinsert_updates_bytes() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 60);
-        c.insert(key(0), payload(), 30);
+        c.insert(key(0), Q2, payload(), 60);
+        c.insert(key(0), Q2, payload(), 30);
         assert_eq!(c.used_bytes(), 30);
         assert_eq!(c.len(), 1);
     }
@@ -453,36 +637,40 @@ mod tests {
     #[test]
     fn hit_rate_counts() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 10);
-        assert!(c.get(&key(0)).is_some());
-        assert!(c.get(&key(1)).is_none());
+        c.insert(key(0), Q2, payload(), 10);
+        assert!(c.get(&key(0), Q2).is_some());
+        assert!(c.get(&key(1), Q2).is_none());
         assert_eq!(c.hits, 1);
         assert_eq!(c.misses, 1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
-    fn comp_and_base_are_distinct_entries() {
+    fn comp_and_base_are_distinct_levels_of_one_entry() {
         let mut c = ExpertCache::new(100);
-        let base = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Quant(2) };
-        let comp = PayloadKey { layer: 0, expert: 0, kind: PayloadKind::Comp(2) };
-        c.insert(base, payload(), 10);
-        assert!(!c.contains(&comp));
-        c.insert(comp, payload(), 5);
-        assert_eq!(c.len(), 2);
+        c.insert(key(0), Q2, payload(), 10);
+        assert!(!c.contains(&key(0), PayloadKind::Comp(2)));
+        c.insert(key(0), PayloadKind::Comp(2), payload(), 5);
+        assert_eq!(c.len(), 2, "two levels");
+        assert!(c.contains_any(&key(0)));
+        assert_eq!(
+            c.level_info(&key(0)).iter().map(|&(k, b, _)| (k, b)).collect::<Vec<_>>(),
+            vec![(Q2, 10), (PayloadKind::Comp(2), 5)],
+            "level_info is sorted by kind"
+        );
     }
 
     #[test]
     fn in_flight_entry_is_not_a_hit_before_ready() {
         let mut c = ExpertCache::new(100);
-        c.insert_speculative(key(0), payload(), 10, 10.0);
+        c.insert_speculative(key(0), Q2, payload(), 10, 10.0);
         // Before the transfer lands: joinable, but a miss.
-        let h = c.get_at(&key(0), 5.0).unwrap();
+        let h = c.get_at(&key(0), Q2, 5.0).unwrap();
         assert_eq!(h.ready_at, 10.0);
         assert!(h.first_spec_use);
         assert_eq!((c.hits, c.misses), (0, 1));
         // After landing: a plain hit, and no longer a first speculative use.
-        let h = c.get_at(&key(0), 15.0).unwrap();
+        let h = c.get_at(&key(0), Q2, 15.0).unwrap();
         assert!(!h.first_spec_use);
         assert_eq!((c.hits, c.misses), (1, 1));
     }
@@ -490,33 +678,33 @@ mod tests {
     #[test]
     fn unused_speculative_eviction_counts_wasted_bytes() {
         let mut c = ExpertCache::new(100);
-        c.insert_speculative(key(0), payload(), 60, 1.0);
-        c.insert(key(1), payload(), 60); // evicts the unused prefetch
+        c.insert_speculative(key(0), Q2, payload(), 60, 1.0);
+        c.insert(key(1), Q2, payload(), 60); // evicts the unused prefetch
         assert_eq!(c.wasted_speculative_bytes, 60);
         // A *used* speculative entry is not wasted when evicted.
         c.clear();
-        c.insert_speculative(key(0), payload(), 60, 1.0);
-        let _ = c.get_at(&key(0), 2.0);
-        c.insert(key(1), payload(), 60);
+        c.insert_speculative(key(0), Q2, payload(), 60, 1.0);
+        let _ = c.get_at(&key(0), Q2, 2.0);
+        c.insert(key(1), Q2, payload(), 60);
         assert_eq!(c.wasted_speculative_bytes, 0);
     }
 
     #[test]
     fn resident_unused_speculative_is_reported() {
         let mut c = ExpertCache::new(100);
-        c.insert_speculative(key(0), payload(), 30, 1.0);
-        c.insert_speculative(key(1), payload(), 20, 1.0);
-        let _ = c.get_at(&key(1), 5.0);
+        c.insert_speculative(key(0), Q2, payload(), 30, 1.0);
+        c.insert_speculative(key(1), Q2, payload(), 20, 1.0);
+        let _ = c.get_at(&key(1), Q2, 5.0);
         assert_eq!(c.resident_unused_speculative_bytes(), 30);
     }
 
     #[test]
     fn clear_resets_stats() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 60);
-        c.insert(key(1), payload(), 60); // evicts 0
-        let _ = c.get(&key(1));
-        let _ = c.get(&key(2));
+        c.insert(key(0), Q2, payload(), 60);
+        c.insert(key(1), Q2, payload(), 60); // evicts 0
+        let _ = c.get(&key(1), Q2);
+        let _ = c.get(&key(2), Q2);
         assert!(c.hits + c.misses + c.evictions > 0);
         c.clear();
         assert_eq!((c.hits, c.misses, c.evictions), (0, 0, 0));
@@ -528,55 +716,55 @@ mod tests {
     #[test]
     fn pinned_replicas_survive_lru_pressure() {
         let mut c = ExpertCache::new(100);
-        c.insert_pinned(key(9), payload(), 50, 1.0);
+        c.insert_pinned(key(9), Q2, payload(), 50, 1.0);
         assert_eq!(c.pinned_bytes(), 50);
         assert_eq!(c.used_bytes(), 0, "replica region sits outside LRU capacity");
         // Fill and churn the LRU region: the pin must never be evicted.
         for e in 0..10 {
-            c.insert(key(e), payload(), 50);
+            c.insert(key(e), Q2, payload(), 50);
         }
-        assert!(c.contains(&key(9)));
+        assert!(c.contains(&key(9), Q2));
         assert_eq!(c.pinned_bytes(), 50);
         assert!(c.evictions > 0);
         // Touching the pin must not make it an eviction candidate.
-        let _ = c.get_at(&key(9), 5.0);
-        c.insert(key(20), payload(), 50);
-        c.insert(key(21), payload(), 50);
-        assert!(c.contains(&key(9)), "a touched pin still cannot be evicted");
+        let _ = c.get_at(&key(9), Q2, 5.0);
+        c.insert(key(20), Q2, payload(), 50);
+        c.insert(key(21), Q2, payload(), 50);
+        assert!(c.contains(&key(9), Q2), "a touched pin still cannot be evicted");
     }
 
     #[test]
     fn unpin_frees_only_pinned_entries() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 30);
-        c.insert_pinned(key(1), payload(), 40, 0.0);
-        assert!(!c.unpin(&key(0)), "demand entries are not unpinnable");
-        assert!(c.unpin(&key(1)));
-        assert!(!c.unpin(&key(1)), "already gone");
+        c.insert(key(0), Q2, payload(), 30);
+        c.insert_pinned(key(1), Q2, payload(), 40, 0.0);
+        assert!(!c.unpin(&key(0), Q2), "demand entries are not unpinnable");
+        assert!(c.unpin(&key(1), Q2));
+        assert!(!c.unpin(&key(1), Q2), "already gone");
         assert_eq!(c.pinned_bytes(), 0);
         assert_eq!(c.used_bytes(), 30);
-        assert!(c.contains(&key(0)));
+        assert!(c.contains(&key(0), Q2));
     }
 
     #[test]
     fn peek_does_not_touch_stats_or_recency() {
         let mut c = ExpertCache::new(100);
-        c.insert_ready(key(0), payload(), 40, 7.0);
-        c.insert(key(1), payload(), 40);
-        assert_eq!(c.peek_ready_at(&key(0)), Some(7.0));
-        assert_eq!(c.peek_ready_at(&key(2)), None);
+        c.insert_ready(key(0), Q2, payload(), 40, 7.0);
+        c.insert(key(1), Q2, payload(), 40);
+        assert_eq!(c.peek_ready_at(&key(0), Q2), Some(7.0));
+        assert_eq!(c.peek_ready_at(&key(2), Q2), None);
         assert_eq!((c.hits, c.misses), (0, 0), "peek is economics-free");
         // Recency untouched by the peek: key(0) is still LRU and evicts.
-        c.insert(key(3), payload(), 40);
-        assert!(!c.contains(&key(0)));
-        assert!(c.contains(&key(1)));
+        c.insert(key(3), Q2, payload(), 40);
+        assert!(!c.contains(&key(0), Q2));
+        assert!(c.contains(&key(1), Q2));
     }
 
     #[test]
     fn insert_pinned_replaces_a_demand_copy() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 60);
-        c.insert_pinned(key(0), payload(), 60, 2.0);
+        c.insert(key(0), Q2, payload(), 60);
+        c.insert_pinned(key(0), Q2, payload(), 60, 2.0);
         assert_eq!(c.used_bytes(), 0, "the demand copy's bytes were released");
         assert_eq!(c.pinned_bytes(), 60);
         assert_eq!(c.len(), 1);
@@ -589,11 +777,11 @@ mod tests {
     fn pinned_keys_are_sorted() {
         let mut c = ExpertCache::new(100);
         for e in [3usize, 0, 2] {
-            c.insert_pinned(key(e), payload(), 10, 0.0);
+            c.insert_pinned(key(e), Q2, payload(), 10, 0.0);
         }
-        c.insert(key(1), payload(), 10);
+        c.insert(key(1), Q2, payload(), 10);
         let pins = c.pinned_keys();
-        assert_eq!(pins.iter().map(|k| k.expert).collect::<Vec<_>>(), vec![0, 2, 3]);
+        assert_eq!(pins.iter().map(|(k, _)| k.expert).collect::<Vec<_>>(), vec![0, 2, 3]);
     }
 
     #[test]
@@ -602,28 +790,28 @@ mod tests {
         // link died must not report a `ready_at` in the past once virtual
         // time passes it — it must be a miss until requeued.
         let mut c = ExpertCache::new(100);
-        c.insert_pinned_from(key(0), payload(), 10, 9.0, Some(1)); // on the wire from dev 1
-        c.insert_pinned_from(key(1), payload(), 10, 2.0, Some(1)); // already landed
-        c.insert_ready(key(2), payload(), 10, 9.0); // host-sourced, unaffected
+        c.insert_pinned_from(key(0), Q2, payload(), 10, 9.0, Some(1)); // on the wire from dev 1
+        c.insert_pinned_from(key(1), Q2, payload(), 10, 2.0, Some(1)); // already landed
+        c.insert_ready(key(2), Q2, payload(), 10, 9.0); // host-sourced, unaffected
         // Device 1 dies at t=4: only its still-in-flight entry is dropped.
         assert_eq!(c.drop_in_flight_from(1, 4.0), 1);
-        assert!(!c.contains(&key(0)), "dead-link in-flight entry is gone");
-        assert!(c.contains(&key(1)), "a landed replica survives its source");
-        assert!(c.contains(&key(2)), "host transfers don't ride the dead link");
+        assert!(!c.contains(&key(0), Q2), "dead-link in-flight entry is gone");
+        assert!(c.contains(&key(1), Q2), "a landed replica survives its source");
+        assert!(c.contains(&key(2), Q2), "host transfers don't ride the dead link");
         assert_eq!(c.pinned_bytes(), 10);
         // The doomed key is now a plain miss — no phantom hit at t=10.
-        assert!(c.get_at(&key(0), 10.0).is_none());
+        assert!(c.get_at(&key(0), Q2, 10.0).is_none());
     }
 
     #[test]
     fn purge_empties_hbm_but_keeps_the_runs_economics() {
         let mut c = ExpertCache::new(100);
-        c.insert(key(0), payload(), 60);
-        c.insert(key(1), payload(), 60); // evicts 0
-        c.insert_speculative(key(2), payload(), 20, 1.0); // never used
-        c.insert_pinned(key(3), payload(), 30, 0.0);
-        let _ = c.get(&key(1));
-        let _ = c.get(&key(4));
+        c.insert(key(0), Q2, payload(), 60);
+        c.insert(key(1), Q2, payload(), 60); // evicts 0
+        c.insert_speculative(key(2), Q2, payload(), 20, 1.0); // never used
+        c.insert_pinned(key(3), Q2, payload(), 30, 0.0);
+        let _ = c.get(&key(1), Q2);
+        let _ = c.get(&key(4), Q2);
         let (hits, misses, evictions) = (c.hits, c.misses, c.evictions);
         assert!(hits + misses + evictions > 0);
         c.purge();
@@ -646,13 +834,127 @@ mod tests {
         for round in 0..20 {
             for e in 0..6 {
                 if (round + e) % 3 == 0 {
-                    c.insert(key(e), payload(), 30);
+                    c.insert(key(e), Q2, payload(), 30);
                 } else {
-                    let _ = c.get(&key(e));
+                    let _ = c.get(&key(e), Q2);
                 }
                 assert!(c.used_bytes() <= 100);
             }
         }
         assert_eq!(c.len(), c.used_bytes() / 30);
+    }
+
+    // ---- elastic residency (DESIGN.md §15) ----
+
+    #[test]
+    fn elastic_off_evicts_never_demotes() {
+        // The zero-requant-budget pin at the cache level: without
+        // set_elastic(true), pressure is resolved purely by LRU eviction.
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), PayloadKind::Fp16, payload(), 60);
+        c.insert(key(0), Q2, payload(), 20);
+        c.insert(key(1), Q2, payload(), 60); // needs 40 bytes: evicts fp16 (LRU)
+        assert_eq!(c.demotions, 0);
+        assert_eq!(c.evictions, 1);
+        assert!(!c.contains(&key(0), PayloadKind::Fp16));
+    }
+
+    #[test]
+    fn demote_first_eviction_degrades_before_it_evicts() {
+        let mut c = ExpertCache::new(100);
+        c.set_elastic(true);
+        c.insert(key(0), Q2, payload(), 20);
+        c.insert(key(0), PayloadKind::Fp16, payload(), 60);
+        c.insert(key(1), Q2, payload(), 60); // pressure: drop fp16 top in place
+        assert_eq!(c.demotions, 1);
+        assert_eq!(c.demoted_bytes, 60);
+        assert_eq!(c.evictions, 0, "nobody was fully evicted");
+        assert!(c.contains(&key(0), Q2), "the low-bit body survives");
+        assert!(!c.contains(&key(0), PayloadKind::Fp16));
+        assert!(c.contains(&key(1), Q2));
+    }
+
+    #[test]
+    fn demote_first_drops_oldest_droppable_levels_first() {
+        let mut c = ExpertCache::new(200);
+        c.set_elastic(true);
+        // Expert 0's comp is older than expert 1's comp; both are droppable.
+        c.insert(key(0), Q2, payload(), 40);
+        c.insert(key(0), PayloadKind::Comp(2), payload(), 30);
+        c.insert(key(1), Q2, payload(), 40);
+        c.insert(key(1), PayloadKind::Comp(2), payload(), 30);
+        c.insert(key(2), Q2, payload(), 90); // needs 30: one demotion suffices
+        assert_eq!(c.demotions, 1);
+        assert!(!c.contains(&key(0), PayloadKind::Comp(2)), "oldest droppable went first");
+        assert!(c.contains(&key(1), PayloadKind::Comp(2)));
+        assert_eq!(c.evictions, 0);
+    }
+
+    #[test]
+    fn demote_first_falls_back_to_eviction_when_nothing_is_droppable() {
+        let mut c = ExpertCache::new(100);
+        c.set_elastic(true);
+        c.insert(key(0), Q2, payload(), 50); // bare base: nothing to demote
+        c.insert(key(1), Q2, payload(), 50);
+        c.insert(key(2), Q2, payload(), 50); // must evict key(0)
+        assert_eq!(c.demotions, 0);
+        assert_eq!(c.evictions, 1);
+        assert!(!c.contains_any(&key(0)));
+    }
+
+    #[test]
+    fn drop_level_frees_bytes_with_demotion_ledger() {
+        let mut c = ExpertCache::new(100);
+        c.insert(key(0), Q2, payload(), 20);
+        c.insert(key(0), PayloadKind::Comp(2), payload(), 10);
+        assert_eq!(c.drop_level(&key(0), PayloadKind::Comp(2)), Some(10));
+        assert_eq!(c.drop_level(&key(0), PayloadKind::Comp(2)), None, "already gone");
+        assert_eq!((c.demotions, c.demoted_bytes), (1, 10));
+        assert_eq!(c.used_bytes(), 20);
+        assert_eq!(c.evictions, 0, "a demotion is not an eviction");
+    }
+
+    #[test]
+    fn supersede_retires_stale_precision_copies() {
+        // Regression (ISSUE 9 satellite): after a replan, the demand fetch
+        // at the new width must not leave the old width's dead bytes
+        // resident — `used_bytes` is pinned after the supersede.
+        let mut c = ExpertCache::new(200);
+        c.insert(key(0), Q2, payload(), 20);
+        c.insert(key(0), PayloadKind::Comp(2), payload(), 10);
+        c.insert(key(0), PayloadKind::Quant(4), payload(), 40);
+        assert_eq!(c.used_bytes(), 70, "pre-fix: stale 2-bit pair still counted");
+        let freed = c.supersede(&key(0), PayloadKind::Quant(4));
+        assert_eq!(freed, 30);
+        assert_eq!(c.used_bytes(), 40, "only the new width remains");
+        assert_eq!((c.superseded, c.superseded_bytes), (2, 30));
+        assert!(c.contains(&key(0), PayloadKind::Quant(4)));
+        assert!(!c.contains(&key(0), Q2));
+        assert!(!c.contains(&key(0), PayloadKind::Comp(2)));
+    }
+
+    #[test]
+    fn supersede_fp16_folds_everything_but_keeps_width_pair_otherwise() {
+        let mut c = ExpertCache::new(200);
+        c.insert(key(0), Q2, payload(), 20);
+        c.insert(key(0), PayloadKind::Comp(2), payload(), 10);
+        // Width-2 comp insert keeps its own base.
+        assert_eq!(c.supersede(&key(0), PayloadKind::Comp(2)), 0);
+        assert!(c.contains(&key(0), Q2));
+        // An fp16 top folds the whole quant/comp stack.
+        c.insert(key(0), PayloadKind::Fp16, payload(), 60);
+        assert_eq!(c.supersede(&key(0), PayloadKind::Fp16), 30);
+        assert_eq!(c.used_bytes(), 60);
+        assert_eq!(c.level_info(&key(0)).len(), 1);
+    }
+
+    #[test]
+    fn supersede_never_touches_pinned_replicas() {
+        let mut c = ExpertCache::new(200);
+        c.insert_pinned(key(0), Q2, payload(), 20, 0.0);
+        c.insert(key(0), PayloadKind::Quant(4), payload(), 40);
+        assert_eq!(c.supersede(&key(0), PayloadKind::Quant(4)), 0);
+        assert!(c.contains(&key(0), Q2), "the replica is the replicator's domain");
+        assert_eq!(c.pinned_bytes(), 20);
     }
 }

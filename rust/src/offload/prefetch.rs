@@ -19,6 +19,14 @@
 //! the ledger like any other transfer and surface as `wasted_bytes` in the
 //! report.
 //!
+//! Under elastic residency (DESIGN.md §15) the cache is layered by
+//! precision: the coordinator dedups and lands speculative entries at a
+//! specific [`PayloadKind`] level of the `(layer, expert)` entry, so a
+//! prefetched base can later be promoted by a rung delta instead of
+//! refetched — the queue itself stays kind-agnostic byte bookkeeping.
+//!
+//! [`PayloadKind`]: crate::offload::cache::PayloadKind
+//!
 //! [`TransferClass::Speculative`]: crate::offload::transfer::TransferClass
 
 /// Budget and coverage accounting for speculative expert transfers.

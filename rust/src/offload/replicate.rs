@@ -27,6 +27,14 @@
 //! the budget — never on link state — so identical runs re-plan
 //! identically (the differential tests lean on this).
 //!
+//! Elastic residency (DESIGN.md §15) and replication deliberately stay
+//! orthogonal: replicas are priced and pinned at the replica's own rung
+//! (the bulk payload kind), pinned levels are invisible to demotion
+//! (`ExpertCache::demotable` skips them and `drop_level` refuses them),
+//! and the elastic planner only ever retunes *owner* residency — so a
+//! replica-budget sweep and a requant-budget sweep compose without
+//! fighting over the same bytes.
+//!
 //! [`TransferClass::Replication`]: crate::offload::transfer::TransferClass
 
 use crate::predict::{EwmaPopularity, ExpertPredictor, LayerObservation};

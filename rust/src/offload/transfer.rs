@@ -20,6 +20,12 @@ pub enum TransferClass {
     /// replicator under expert-parallel sharding (DESIGN.md §11) — rides
     /// host→dev or dev→dev links, never mixed with demand or speculation.
     Replication,
+    /// Delta bytes promoting a resident expert to a higher precision rung
+    /// at a replan boundary (elastic residency, DESIGN.md §15).  Demotions
+    /// are the dual and deliberately have **no** class: dropping a top
+    /// level frees HBM without crossing any link, so they appear only in
+    /// the cache's demotion ledger, never here.
+    Promotion,
 }
 
 #[derive(Debug, Clone, Copy)]

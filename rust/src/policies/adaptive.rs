@@ -13,6 +13,14 @@
 //! GPU placement — so a floor-only budget reproduces the uniform policy's
 //! byte ledger bit-for-bit (the degenerate case `tests/adaptive.rs` pins).
 //!
+//! With elastic residency armed (DESIGN.md §15, `requant_budget_bytes >
+//! 0`) the same plan additionally drives *residency*: at each replan
+//! boundary the engine demotes resident experts the plan no longer wants
+//! high (in place, zero wire bytes) and promotes the hottest under-rung
+//! residents by transferring only the rung delta — the policy itself is
+//! unchanged; it keeps reading the per-layer map off
+//! [`PlanCtx::precisions`].
+//!
 //! Related work this subsystem deliberately echoes: Dynamic Expert
 //! Quantization (arXiv:2511.15015) drives per-expert precision from
 //! routing statistics; MoBiLE (arXiv:2510.12357) switches hot experts to

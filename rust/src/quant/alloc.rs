@@ -127,6 +127,29 @@ impl PrecisionLadder {
             .sum()
     }
 
+    /// Wire bytes a resident expert must move to climb `from → to` — a
+    /// promotion transfers only the *delta* between rung costs, never the
+    /// full target payload (elastic residency, DESIGN.md §15).  `None`
+    /// when either precision is not a rung of this expert's ladder or
+    /// `to` is not strictly costlier than `from`.
+    pub fn delta_bytes(
+        &self,
+        layer: usize,
+        expert: usize,
+        from: Precision,
+        to: Precision,
+    ) -> Option<usize> {
+        let ladder = &self.rungs[layer][expert];
+        let fb = ladder.iter().find(|r| r.precision == from)?.bytes;
+        let tb = ladder.iter().find(|r| r.precision == to)?.bytes;
+        (tb > fb).then(|| tb - fb)
+    }
+
+    /// Rung index of `p` on this expert's ladder (`None` if not shipped).
+    fn rung_index(&self, layer: usize, expert: usize, p: Precision) -> Option<usize> {
+        self.rungs[layer][expert].iter().position(|r| r.precision == p)
+    }
+
     /// Extra bytes of moving to the `tag` compensated floor everywhere —
     /// the default headroom [`PrecisionAllocator::new`] grants.
     fn floor_comp_slack(&self) -> usize {
@@ -211,6 +234,20 @@ pub fn allocate(ladder: &PrecisionLadder, scores: &[Vec<f64>], budget: usize) ->
         assignment.push(row);
     }
     PrecisionPlan { assignment, rung, plan_bytes: spent }
+}
+
+/// One elastic residency action the engine applies at a replan boundary
+/// (DESIGN.md §15): close the gap between an expert's *resident* rung and
+/// the plan's *target* rung.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElasticAction {
+    /// Drop the resident precision to the plan's rung in place — frees
+    /// `freed` HBM bytes, zero link traffic (requantization happens on
+    /// device; only the cache's demotion ledger records it).
+    Demote { layer: usize, expert: usize, from: Precision, to: Precision, freed: usize },
+    /// Climb a resident expert to the plan's rung by transferring only
+    /// the `delta` bytes between the rungs (`TransferClass::Promotion`).
+    Promote { layer: usize, expert: usize, from: Precision, to: Precision, delta: usize },
 }
 
 /// Snapshot of the allocator's final state for the run [`Report`]
@@ -316,6 +353,78 @@ impl PrecisionAllocator {
     /// budget fresh — callers invoke this only at step boundaries.
     pub fn set_budget(&mut self, budget: usize) {
         self.budget = budget;
+    }
+
+    pub fn ladder(&self) -> &PrecisionLadder {
+        &self.ladder
+    }
+
+    /// Actions reconciling resident rungs against the freshly replanned
+    /// target rungs (elastic residency, DESIGN.md §15).  `resident` is the
+    /// `[layer][expert]` rung each expert currently holds on its owner
+    /// device (`None` = not resident — absence is the demand-fetch path's
+    /// business, not elasticity's).
+    ///
+    /// Demotions come first, in (layer, expert) order: they free bytes and
+    /// cost no wire, so they are never budget-limited.  Promotions follow
+    /// in descending `score / Δbytes` order (the [`allocate`] ordering;
+    /// ties break toward the lower (layer, expert) index) under the
+    /// per-replan `requant_budget` over delta bytes — stopping at the
+    /// first promotion that no longer fits, never skipping to a cheaper
+    /// one, so the applied set is a prefix of the same deterministic
+    /// sequence regardless of budget.
+    pub fn elastic_actions(
+        &self,
+        resident: &[Vec<Option<Precision>>],
+        requant_budget: usize,
+    ) -> Vec<ElasticAction> {
+        let (nl, ne) = (self.ladder.n_layers, self.ladder.n_experts);
+        let mut actions = Vec::new();
+        let mut promos: Vec<(f64, usize, usize, Precision, Precision, usize)> = Vec::new();
+        for li in 0..nl {
+            for ei in 0..ne {
+                let Some(cur) = resident[li][ei] else { continue };
+                let target = self.plan.assignment[li][ei];
+                let ladder = &self.ladder.rungs[li][ei];
+                let (Some(ci), Some(ti)) = (
+                    self.ladder.rung_index(li, ei, cur),
+                    self.ladder.rung_index(li, ei, target),
+                ) else {
+                    continue;
+                };
+                if ci > ti {
+                    actions.push(ElasticAction::Demote {
+                        layer: li,
+                        expert: ei,
+                        from: cur,
+                        to: target,
+                        freed: ladder[ci].bytes - ladder[ti].bytes,
+                    });
+                } else if ci < ti {
+                    let delta = ladder[ti].bytes - ladder[ci].bytes;
+                    promos.push((
+                        self.plan_scores[li][ei] / delta as f64,
+                        li,
+                        ei,
+                        cur,
+                        target,
+                        delta,
+                    ));
+                }
+            }
+        }
+        promos.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then_with(|| (a.1, a.2).cmp(&(b.1, b.2)))
+        });
+        let mut spent = 0usize;
+        for (_, li, ei, from, to, delta) in promos {
+            if spent + delta > requant_budget {
+                break; // stop (never skip): the applied set stays a prefix
+            }
+            spent += delta;
+            actions.push(ElasticAction::Promote { layer: li, expert: ei, from, to, delta });
+        }
+        actions
     }
 
     pub fn report(&self) -> AllocReport {
@@ -472,6 +581,104 @@ mod tests {
             }
         }
         assert!(l.floor_bytes() < l.top_bytes());
+    }
+
+    #[test]
+    fn delta_bytes_prices_the_gap_between_rungs() {
+        let l = toy_ladder();
+        assert_eq!(l.delta_bytes(0, 0, Precision::Int(2), Precision::Int(4)), Some(100));
+        assert_eq!(l.delta_bytes(0, 0, Precision::Int(4), Precision::Fp16), Some(600));
+        assert_eq!(l.delta_bytes(0, 0, Precision::Int(2), Precision::Fp16), Some(700));
+        // Not a promotion: equal or descending rungs price as None.
+        assert_eq!(l.delta_bytes(0, 0, Precision::Int(4), Precision::Int(4)), None);
+        assert_eq!(l.delta_bytes(0, 0, Precision::Fp16, Precision::Int(2)), None);
+        // Rungs the ladder does not ship price as None, not zero.
+        assert_eq!(l.delta_bytes(0, 0, Precision::IntComp(2), Precision::Fp16), None);
+    }
+
+    #[test]
+    fn elastic_actions_demote_in_index_order_at_zero_budget() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let ladder = PrecisionLadder::from_manifest(&manifest, "default", 2).unwrap();
+        let floor = ladder.floor_bytes();
+        // Budget pinned to the floor: the plan targets Int(2) everywhere.
+        let mut a = PrecisionAllocator::new(&manifest, "default", 2, Some(floor)).unwrap();
+        a.replan();
+        let mut resident = vec![vec![None; 4]; 2];
+        resident[1][2] = Some(Precision::Fp16);
+        resident[0][1] = Some(Precision::Fp16);
+        resident[0][3] = Some(Precision::Int(2)); // already at target: no action
+        let acts = a.elastic_actions(&resident, 0);
+        let fp16 = manifest.transfer.fp16_expert_bytes;
+        let q = manifest.q_expert_bytes(2);
+        assert_eq!(
+            acts,
+            vec![
+                ElasticAction::Demote {
+                    layer: 0,
+                    expert: 1,
+                    from: Precision::Fp16,
+                    to: Precision::Int(2),
+                    freed: fp16 - q,
+                },
+                ElasticAction::Demote {
+                    layer: 1,
+                    expert: 2,
+                    from: Precision::Fp16,
+                    to: Precision::Int(2),
+                    freed: fp16 - q,
+                },
+            ],
+            "demotions in (layer, expert) order, unthrottled by a zero requant budget"
+        );
+    }
+
+    #[test]
+    fn elastic_promotions_are_hottest_first_and_stop_dont_skip() {
+        let manifest = crate::synth::tiny_manifest("t");
+        let ladder = PrecisionLadder::from_manifest(&manifest, "default", 2).unwrap();
+        // Top budget: the plan targets Fp16 everywhere.
+        let mut a =
+            PrecisionAllocator::new(&manifest, "default", 2, Some(ladder.top_bytes())).unwrap();
+        // Heat layer 0's expert 2 so its promotion outranks the others.
+        let probs = vec![0.05f32, 0.05, 0.8, 0.1];
+        let active = vec![true];
+        a.observe(&crate::predict::LayerObservation {
+            step: 0,
+            layer: 0,
+            n_experts: 4,
+            top_k: 2,
+            probs: &probs,
+            active: &active,
+        });
+        a.replan();
+        let q = manifest.q_expert_bytes(2);
+        let fp16 = manifest.transfer.fp16_expert_bytes;
+        let delta = fp16 - q;
+        let resident = vec![vec![Some(Precision::Int(2)); 4]; 2];
+        // Budget for exactly one full promotion: the hottest expert gets
+        // it; the next candidate does not fit and nothing cheaper sneaks in.
+        let acts = a.elastic_actions(&resident, delta);
+        assert_eq!(
+            acts,
+            vec![ElasticAction::Promote {
+                layer: 0,
+                expert: 2,
+                from: Precision::Int(2),
+                to: Precision::Fp16,
+                delta,
+            }],
+            "one budgeted promotion, hottest expert first"
+        );
+        // One byte short of the hottest promotion: stop, don't skip.
+        assert!(a.elastic_actions(&resident, delta - 1).is_empty());
+        // Double the budget: the second promotion is the next-hottest.
+        let acts = a.elastic_actions(&resident, 2 * delta);
+        assert_eq!(acts.len(), 2);
+        assert!(matches!(
+            acts[1],
+            ElasticAction::Promote { layer: 0, expert: 3, .. }
+        ));
     }
 
     #[test]

@@ -432,7 +432,8 @@ impl Server {
     }
 
     /// Current value of a live knob by wire name (`beamctl get`).
-    /// `alloc-budget` reads `none` when the policy built no allocator.
+    /// `alloc-budget` and `requant-budget` read `none` when the policy
+    /// built no allocator.
     pub fn knob_value(&self, name: &str) -> Result<String> {
         Ok(match name {
             "prefetch-budget" => self.engine.prefetch_budget().to_string(),
@@ -442,6 +443,10 @@ impl Server {
                 None => "none".to_string(),
             },
             "replicate-budget" => self.engine.replicate_budget().to_string(),
+            "requant-budget" => match self.engine.requant_budget() {
+                Some(b) => b.to_string(),
+                None => "none".to_string(),
+            },
             "max-pending" => self.max_pending.to_string(),
             "scheduler" => self.sched.name().to_string(),
             other => {
@@ -505,6 +510,12 @@ impl Server {
             Knob::ReplicateBudget(_) => ensure!(
                 self.engine.n_devices() >= 2,
                 "replication needs a multi-device fleet (this server has 1 device)"
+            ),
+            Knob::RequantBudget(_) => ensure!(
+                self.engine.requant_budget().is_some(),
+                "policy `{}` consumes no precision plan — there are no rungs to \
+                 requantize between",
+                self.engine.policy_config().policy
             ),
             Knob::MaxPending(v) => ensure!(*v > 0, "max_pending must be at least 1"),
             Knob::Scheduler(name) => {
@@ -575,6 +586,9 @@ impl Server {
                 }
                 Knob::ReplicateBudget(b) => {
                     let _ = self.engine.set_replicate_budget(*b);
+                }
+                Knob::RequantBudget(b) => {
+                    let _ = self.engine.set_requant_budget(*b);
                 }
                 Knob::MaxPending(m) => self.max_pending = *m,
                 Knob::Scheduler(name) => {

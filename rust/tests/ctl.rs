@@ -68,6 +68,15 @@ fn adaptive_server(budget: usize) -> Server {
     ServerBuilder::new(model()).policy(policy).system(sys_offload()).build().unwrap()
 }
 
+/// An adaptive server with the §15 elastic machinery armed: alloc
+/// budget `budget`, promotion-delta budget `requant` per boundary.
+fn elastic_server(budget: usize, requant: usize) -> Server {
+    let mut policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+    policy.alloc_budget_bytes = Some(budget);
+    policy.requant_budget_bytes = requant;
+    ServerBuilder::new(model()).policy(policy).system(sys_offload()).build().unwrap()
+}
+
 /// A gate-predictor server whose §8 prefetcher runs under `budget`.
 fn gate_server(budget: usize) -> Server {
     let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
@@ -107,6 +116,7 @@ fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
     assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
     assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
     assert_eq!(x.expert_compute_s, y.expert_compute_s, "{label}: expert_compute_s");
+    assert_eq!(a.elastic, b.elastic, "{label}: elastic ledger");
     assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
     for (ra, rb) in a.requests.iter().zip(&b.requests) {
         assert_eq!(ra.id, rb.id, "{label}: record id");
@@ -159,6 +169,47 @@ fn alloc_budget_retune_at_first_boundary_equals_built_with() {
     assert_eq!(audit[0].old, old);
     assert_eq!(audit[0].new, generous.to_string());
     assert_eq!(audit[0].origin, "test");
+    assert_eq!(audit[0].outcome, AuditOutcome::Applied);
+    assert_eq!(audit[0].decode_step, 0, "landed at the first boundary");
+    assert!(built.audit_records().is_empty(), "twin never reconfigured");
+}
+
+/// `set requant-budget B` queued before the first tick ≡ a twin built
+/// with requant budget B (DESIGN.md §15): the elastic pass only runs at
+/// decode-step boundaries, so a retune landing before the first decode
+/// step is indistinguishable from construction-time configuration —
+/// byte-identical report (elastic ledger included) and token streams.
+#[test]
+fn requant_budget_retune_at_first_boundary_equals_built_with() {
+    let m = model();
+    let generous = m.manifest.transfer.fp16_expert_bytes
+        * m.manifest.model.n_layers
+        * m.manifest.model.n_experts;
+    let requant = m.manifest.transfer.fp16_expert_bytes;
+    let reqs = requests(3);
+
+    let mut live = elastic_server(generous, 0);
+    let old = live.knob_value("requant-budget").unwrap();
+    assert_eq!(old, "0", "elastic disarmed until the retune lands");
+    live.enqueue_reconfig(ReconfigEvent::new(Knob::RequantBudget(requant), "test")).unwrap();
+    let (report_live, ids_live) = run(&mut live, &reqs);
+
+    let mut built = elastic_server(generous, requant);
+    let (report_built, ids_built) = run(&mut built, &reqs);
+
+    assert_reports_identical(&report_live, &report_built, "requant retune vs built-with");
+    assert_sessions_identical(&live, &built, &ids_live, &ids_built);
+    assert_eq!(live.knob_value("requant-budget").unwrap(), requant.to_string());
+    assert!(
+        report_live.elastic.is_some(),
+        "nonzero requant budget surfaces the elastic ledger"
+    );
+
+    let audit = live.audit_records();
+    assert_eq!(audit.len(), 1, "exactly one audited change");
+    assert_eq!(audit[0].knob, "requant-budget");
+    assert_eq!(audit[0].old, "0");
+    assert_eq!(audit[0].new, requant.to_string());
     assert_eq!(audit[0].outcome, AuditOutcome::Applied);
     assert_eq!(audit[0].decode_step, 0, "landed at the first boundary");
     assert!(built.audit_records().is_empty(), "twin never reconfigured");
@@ -286,6 +337,7 @@ fn invalid_knobs_are_rejected_audited_and_side_effect_free() {
         (Knob::Lookahead(2), "without a predictor"),
         (Knob::AllocBudget(4096), "no allocator to retune"),
         (Knob::ReplicateBudget(4096), "multi-device fleet"),
+        (Knob::RequantBudget(4096), "no rungs to requantize between"),
         (Knob::MaxPending(0), "at least 1"),
         (Knob::Scheduler("warp-speed".to_string()), "warp-speed"),
     ];

@@ -26,6 +26,12 @@
 //!   plain replay's full ledger, fault ledger, and token streams, and
 //!   generate exactly as many tokens as the fault-free fleet
 //!   (DESIGN.md §12: faults move virtual time, never numerics).
+//! * **Elastic** (`elastic_interleavings_match_plain_replay`) — an
+//!   elastic-residency server (adaptive allocator, thrash-sized cache,
+//!   seeded requant budget — zero half the time) under the randomized
+//!   drive must reproduce a plain replay byte-for-byte including the
+//!   elastic ledger, which exists iff the budget is non-zero
+//!   (DESIGN.md §15).
 //! * **Scheduler** (`scheduler_interleavings_replay_and_conserve`,
 //!   `fifo_discipline_matches_default_under_random_drive`) — tenant-
 //!   tagged interleavings through the `slo` discipline must replay
@@ -159,6 +165,7 @@ fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
     assert_eq!(x.transfer_act_s, y.transfer_act_s, "{label}: transfer_act_s");
     assert_eq!(x.transfer_spec_s, y.transfer_spec_s, "{label}: transfer_spec_s");
     assert_eq!(x.transfer_repl_s, y.transfer_repl_s, "{label}: transfer_repl_s");
+    assert_eq!(x.transfer_promo_s, y.transfer_promo_s, "{label}: transfer_promo_s");
     assert_eq!(x.transfer_stall_s, y.transfer_stall_s, "{label}: transfer_stall_s");
     assert_eq!(x.head_s, y.head_s, "{label}: head_s");
     assert_eq!(a.requests.len(), b.requests.len(), "{label}: record count");
@@ -173,6 +180,7 @@ fn assert_reports_identical(a: &Report, b: &Report, label: &str) {
     assert_eq!(a.prefetch.covered, b.prefetch.covered, "{label}: prefetch covered");
     assert_eq!(a.prefetch.demand_fetches, b.prefetch.demand_fetches, "{label}: demand");
     assert_eq!(a.fault, b.fault, "{label}: fault ledger");
+    assert_eq!(a.elastic, b.elastic, "{label}: elastic ledger");
 }
 
 /// Drive the server with a randomized tick/poll/reap interleaving until
@@ -416,6 +424,77 @@ fn fault_interleavings_match_plain_replay() {
         assert!(clean.fault.is_none(), "{label}: twin carries no fault ledger");
         assert_eq!(clean.total_generated, fuzzed.total_generated, "{label}: zero token loss");
         assert_eq!(clean.prefills, fuzzed.prefills, "{label}: prefills");
+    }
+}
+
+/// Elastic layer (DESIGN.md §15): randomized tick/poll/reap drives of an
+/// elastic-residency server — the adaptive allocator over a thrash-sized
+/// cache with a seeded requant budget (zero half the time: the
+/// off-switch) — must reproduce a plain replay byte-for-byte, including
+/// the elastic ledger, which exists iff the budget is non-zero.
+#[test]
+fn elastic_interleavings_match_plain_replay() {
+    let dims = synth::tiny_dims("synthetic-tiny");
+    let pairs = dims.n_layers * dims.n_experts;
+    let manifest = synth::tiny_manifest("synthetic-tiny");
+    let q = manifest.q_expert_bytes(synth::SYNTH_BITS);
+    let comp_total = manifest.comp_bytes_total("default", synth::SYNTH_BITS);
+    for seed in seeds() {
+        eprintln!("fuzz_server elastic seed = {seed:#x}");
+        let mut rng = XorShift::new(seed);
+        let sc = scenario(&mut rng);
+        let label = format!("elastic seed {seed:#x}");
+
+        // Seeded requant budget: disarmed half the time, otherwise one to
+        // three floor payloads of promotion delta per boundary.
+        let requant =
+            if rng.next_f64() < 0.5 { 0 } else { (1 + rng.next_u64() % 3) as usize * q };
+
+        let build = || -> Server {
+            let mut policy = PolicyConfig::new("adaptive", synth::SYNTH_BITS, 0);
+            policy.comp_tag = "default".to_string();
+            policy.alloc_budget_bytes = Some(pairs * q + comp_total);
+            policy.requant_budget_bytes = requant;
+            let m = model();
+            let mut sys = SystemConfig::scaled_for(&m.manifest.model, false);
+            sys.gpu_cache_bytes = 4 * q;
+            ServerBuilder::new(m)
+                .policy(policy)
+                .system(sys)
+                .prefetch(sc.prefetch.clone())
+                .build()
+                .unwrap()
+        };
+
+        // Randomized drive (no cancels: every request runs to the end).
+        let mut server = build();
+        let mut ids = Vec::new();
+        for req in &sc.requests {
+            ids.push(server.submit(req.clone()).unwrap());
+        }
+        let reaped = drive_randomized(&mut server, &ids, &mut rng);
+        let fuzzed = server.report();
+        assert_eq!(
+            fuzzed.elastic.is_some(),
+            requant > 0,
+            "{label}: elastic ledger exists iff the requant budget is armed"
+        );
+
+        // Plain replay with the same knobs: byte-identical everything.
+        let mut plain = build();
+        for req in &sc.requests {
+            plain.submit(req.clone()).unwrap();
+        }
+        plain.run_to_completion().unwrap();
+        assert_reports_identical(&plain.report(), &fuzzed, &label);
+        for id in &ids {
+            let events = match reaped.iter().find(|(r, _, _)| r == id) {
+                Some((_, e, _)) => e.clone(),
+                None => server.session(*id).unwrap().events().to_vec(),
+            };
+            let b = plain.session(*id).unwrap();
+            assert_eq!(events.as_slice(), b.events(), "{label}: token stream of {id}");
+        }
     }
 }
 

@@ -162,17 +162,17 @@ fn prop_cache_accounting_invariants() {
             let key = PayloadKey {
                 layer: (rng.next_u64() % 4) as usize,
                 expert: (rng.next_u64() % 8) as usize,
-                kind: if rng.next_f64() < 0.5 {
-                    PayloadKind::Quant(2)
-                } else {
-                    PayloadKind::Comp(2)
-                },
+            };
+            let kind = if rng.next_f64() < 0.5 {
+                PayloadKind::Quant(2)
+            } else {
+                PayloadKind::Comp(2)
             };
             if rng.next_f64() < 0.5 {
                 let bytes = 100 + (rng.next_u64() % 900) as usize;
-                cache.insert(key, std::sync::Arc::new(Vec::new()), bytes);
+                cache.insert(key, kind, std::sync::Arc::new(Vec::new()), bytes);
             } else {
-                let _ = cache.get(&key);
+                let _ = cache.get(&key, kind);
                 gets += 1;
             }
             assert!(cache.used_bytes() <= cap, "over capacity");
