@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::backend::{Backend, StagedExec, Tensor};
 use crate::config::ModelDims;
 use crate::manifest::Manifest;
-use crate::quant::dequant::{dequantize_grouped, unpack_container};
+use crate::quant::dequant::{dequantize_grouped, dequantize_rows_into, unpack_container};
 
 /// RMS-norm epsilon (`model.py::RMS_EPS`).
 const RMS_EPS: f32 = 1e-5;
@@ -279,6 +279,55 @@ fn dequant_mat(
     Ok(dequantize_grouped(&codes, sc.as_f32()?, zp.as_f32()?, d_in, d_out, group_size))
 }
 
+/// k-strip height of the tiled dequant + GEMM (`dequant_matmul`).
+const TILE_K: usize = 64;
+
+/// Tiled dequant-then-GEMM: `x (n, k) @ deq(W) (k, m) -> (n, m)` for one
+/// packed matrix, dequantizing `TILE_K`-row strips into `strip` (a scratch
+/// reused across calls) instead of materializing the full `(k, m)` f32
+/// matrix first.  Per output element the additions run in globally
+/// ascending `kk` order — exactly `matmul`'s order over `dequant_mat`'s
+/// values — so the result is bit-identical to the unfused pair while peak
+/// extra memory drops from `k * m` to `TILE_K * m` floats.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dequant_matmul(
+    x: &[f32],
+    pk: &Tensor,
+    sc: &Tensor,
+    zp: &Tensor,
+    n: usize,
+    k: usize,
+    m: usize,
+    cbits: u8,
+    group_size: usize,
+    strip: &mut Vec<f32>,
+) -> Result<Vec<f32>> {
+    let nbytes = *pk.shape.last().context("packed tensor has no shape")?;
+    let codes = unpack_container(pk.as_u8()?, k, nbytes, cbits, m);
+    let (scale, zero) = (sc.as_f32()?, zp.as_f32()?);
+    let mut y = vec![0f32; n * m];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        dequantize_rows_into(&codes, scale, zero, k, m, group_size, k0, k1, strip);
+        for i in 0..n {
+            for kk in k0..k1 {
+                let xv = x[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &strip[(kk - k0) * m..(kk - k0 + 1) * m];
+                let yrow = &mut y[i * m..(i + 1) * m];
+                for (yy, ww) in yrow.iter_mut().zip(wrow) {
+                    *yy += xv * ww;
+                }
+            }
+        }
+        k0 = k1;
+    }
+    Ok(y)
+}
+
 /// Reconstruct the low-rank delta `U·V` from one compensator factor set
 /// (up, us, uz, vp, vs, vz).  Factors are INT3 codes in 4-bit containers
 /// regardless of the base weight width (paper §3.1 / kernels/ref.py).
@@ -368,15 +417,20 @@ impl RefStage {
         Ok(vec![Tensor::from_f32(&[n, d], y)?])
     }
 
-    /// (xn, (pk, sc, zp) × w1/w2/w3) -> (y (N, d)).
+    /// (xn, (pk, sc, zp) × w1/w2/w3) -> (y (N, d)).  Tiled: each projection
+    /// runs dequant + GEMM strip-by-strip (`dequant_matmul`) — bit-identical
+    /// to the old materialize-then-`swiglu` path, minus three full `(k, m)`
+    /// dequantized matrices per exec.
     fn expert_quant(&self, args: &[&Tensor], cbits: u8) -> Result<Vec<Tensor>> {
         self.argc(args, 10)?;
         let (n, d, f, g) =
             (args[0].shape[0], self.dims.d_model, self.dims.d_ff, self.dims.group_size);
-        let w1 = dequant_mat(args[1], args[2], args[3], d, f, cbits, g)?;
-        let w2 = dequant_mat(args[4], args[5], args[6], f, d, cbits, g)?;
-        let w3 = dequant_mat(args[7], args[8], args[9], d, f, cbits, g)?;
-        let y = swiglu(args[0].as_f32()?, &w1, &w2, &w3, n, d, f);
+        let xn = args[0].as_f32()?;
+        let mut strip = Vec::new();
+        let gate = dequant_matmul(xn, args[1], args[2], args[3], n, d, f, cbits, g, &mut strip)?;
+        let up = dequant_matmul(xn, args[7], args[8], args[9], n, d, f, cbits, g, &mut strip)?;
+        let h: Vec<f32> = gate.iter().zip(&up).map(|(gv, u)| silu(*gv) * u).collect();
+        let y = dequant_matmul(&h, args[4], args[5], args[6], n, f, d, cbits, g, &mut strip)?;
         Ok(vec![Tensor::from_f32(&[n, d], y)?])
     }
 
@@ -552,6 +606,29 @@ mod tests {
         // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
         let y = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
         assert_eq!(y, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn dequant_matmul_matches_the_unfused_pair_bitwise() {
+        // k > TILE_K so the loop crosses a strip boundary and ends on a
+        // ragged tail; zeros in x exercise the skip path both ways.
+        let (n, k, m, g) = (2usize, TILE_K + 16, 4usize, 16usize);
+        let groups = k / g;
+        let nbytes = m * 4 / 8;
+        let packed: Vec<u8> = (0..k * nbytes).map(|v| (v * 37 % 256) as u8).collect();
+        let pk = Tensor::from_u8(&[k, nbytes], packed).unwrap();
+        let scale: Vec<f32> = (0..groups * m).map(|v| 0.25 + (v % 7) as f32 * 0.5).collect();
+        let zero: Vec<f32> = (0..groups * m).map(|v| (v % 5) as f32 * 0.75).collect();
+        let sc = Tensor::from_f32(&[groups, m], scale).unwrap();
+        let zp = Tensor::from_f32(&[groups, m], zero).unwrap();
+        let x: Vec<f32> = (0..n * k)
+            .map(|v| if v % 9 == 0 { 0.0 } else { (v as f32 * 0.3).sin() })
+            .collect();
+        let w = dequant_mat(&pk, &sc, &zp, k, m, 4, g).unwrap();
+        let want = matmul(&x, &w, n, k, m);
+        let mut strip = Vec::new();
+        let got = dequant_matmul(&x, &pk, &sc, &zp, n, k, m, 4, g, &mut strip).unwrap();
+        assert_eq!(got, want, "tiled dequant+GEMM must be bit-identical");
     }
 
     #[test]

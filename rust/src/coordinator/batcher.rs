@@ -6,14 +6,21 @@
 //! like Mixtral-Offloading's serving loop), otherwise the active slots take
 //! a decode step together.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::sim::clock::VTime;
 use crate::workload::Request;
 
 #[derive(Debug, Default)]
 pub struct Batcher {
-    queue: VecDeque<Request>,
+    /// Arrival-ordered admission order as `(arrival, id)`.  An entry whose
+    /// id has left [`Batcher::live`] (cancelled) is a lazy tombstone,
+    /// skipped at the next front access — so [`Batcher::remove`] is O(1)
+    /// instead of the old O(n) position scan over full `Request`s.
+    order: VecDeque<(VTime, u64)>,
+    /// id → queued request.  Ids are unique (the server refuses duplicate
+    /// submissions; the generators number requests densely).
+    live: HashMap<u64, Request>,
     pub admitted: usize,
 }
 
@@ -35,7 +42,9 @@ impl Batcher {
         // Stable sort: equal arrivals keep submission order (`total_cmp`
         // so a NaN arrival cannot panic admission).
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
-        Batcher { queue: requests.into(), admitted: 0 }
+        let order = requests.iter().map(|r| (r.arrival, r.id)).collect();
+        let live = requests.into_iter().map(|r| (r.id, r)).collect();
+        Batcher { order, live, admitted: 0 }
     }
 
     /// Insert an incrementally-submitted request, keeping arrival order.
@@ -43,31 +52,43 @@ impl Batcher {
     /// [`Batcher::new`]'s stable sort produces, so a `Server` fed one
     /// request at a time schedules identically to the up-front `Vec` path.
     pub fn push(&mut self, req: Request) {
-        let pos = self
-            .queue
-            .iter()
-            .position(|r| r.arrival.total_cmp(&req.arrival).is_gt())
-            .unwrap_or(self.queue.len());
-        self.queue.insert(pos, req);
+        // `order` is arrival-sorted, so the first strictly-greater arrival
+        // is a partition point — the same slot the old linear scan found.
+        let pos = self.order.partition_point(|(arr, _)| arr.total_cmp(&req.arrival).is_le());
+        self.order.insert(pos, (req.arrival, req.id));
+        self.live.insert(req.id, req);
     }
 
     /// Remove a still-queued request by id (session cancel before
     /// admission); `None` if it was already admitted or never queued.
+    /// O(1): the order entry stays behind as a tombstone.
     pub fn remove(&mut self, id: u64) -> Option<Request> {
-        let pos = self.queue.iter().position(|r| r.id == id)?;
-        self.queue.remove(pos)
+        self.live.remove(&id)
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.live.len()
+    }
+
+    /// Drop cancelled (tombstoned) entries off the front of the order so
+    /// `front` is always a live request.
+    fn skip_cancelled(&mut self) {
+        while let Some((_, id)) = self.order.front() {
+            if self.live.contains_key(id) {
+                break;
+            }
+            self.order.pop_front();
+        }
     }
 
     /// Decide the next action given the current virtual time and slot state.
     pub fn next_action(&mut self, now: VTime, free_slot: Option<usize>, n_active: usize) -> Action {
-        let next_arrival = self.queue.front().map(|r| r.arrival);
+        self.skip_cancelled();
+        let next_arrival = self.order.front().map(|&(arr, _)| arr);
         match (free_slot, next_arrival) {
             (Some(slot), Some(arr)) if arr <= now => {
-                let req = self.queue.pop_front().unwrap();
+                let (_, id) = self.order.pop_front().unwrap();
+                let req = self.live.remove(&id).unwrap();
                 self.admitted += 1;
                 Action::Prefill(slot, req)
             }
@@ -143,6 +164,35 @@ mod tests {
         assert_eq!(b.pending(), 1);
         match b.next_action(5.0, Some(0), 0) {
             Action::Prefill(_, r) => assert_eq!(r.id, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancelled_head_tombstone_never_blocks_admission() {
+        let mut b = Batcher::new(vec![req(0, 1.0), req(1, 2.0), req(2, 3.0)]);
+        assert!(b.remove(0).is_some());
+        assert_eq!(b.pending(), 2);
+        // The tombstoned head is skipped: the next live request admits.
+        match b.next_action(5.0, Some(0), 0) {
+            Action::Prefill(_, r) => assert_eq!(r.id, 1),
+            other => panic!("{other:?}"),
+        }
+        assert!(b.remove(2).is_some());
+        match b.next_action(5.0, Some(0), 0) {
+            Action::Done => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_until_skips_a_cancelled_future_head() {
+        // IdleUntil must name the next *live* arrival, never a tombstone's
+        // — idling toward a cancelled request would wake to a no-op.
+        let mut b = Batcher::new(vec![req(0, 10.0), req(1, 20.0)]);
+        assert!(b.remove(0).is_some());
+        match b.next_action(1.0, Some(0), 0) {
+            Action::IdleUntil(t) => assert_eq!(t, 20.0),
             other => panic!("{other:?}"),
         }
     }

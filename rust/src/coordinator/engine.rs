@@ -48,7 +48,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::backend::Tensor;
-use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
+use crate::config::{ModelDims, PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::combine;
 use crate::coordinator::metrics::{
     ElasticReport, FaultReport, PrefetchReport, Report, RequestRecord, ShardReport, StepBreakdown,
@@ -68,6 +68,38 @@ use crate::sim::clock::{Resource, VTime, VirtualClock};
 use crate::sim::topology::{FaultEvent, FaultKind, FaultPlan, LinkSpec, Topology};
 use crate::sim::CostModel;
 use crate::workload::{DecodeTrace, Request};
+
+/// `Copy` snapshot of the manifest dims the hot paths read every step.
+/// The serve loop used to `manifest.model.clone()` (heap `name` clone
+/// included) once per decode step, prefill pass, MoE layer and prefetch
+/// issue just to end the borrow of `self.model`; a scalar snapshot makes
+/// that free.
+#[derive(Clone, Copy)]
+struct HotDims {
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    n_shared: usize,
+    t_prefill: usize,
+    b_max: usize,
+    d_model: usize,
+    vocab: usize,
+}
+
+impl HotDims {
+    fn of(m: &ModelDims) -> Self {
+        HotDims {
+            n_layers: m.n_layers,
+            n_experts: m.n_experts,
+            top_k: m.top_k,
+            n_shared: m.n_shared,
+            t_prefill: m.t_prefill,
+            b_max: m.b_max,
+            d_model: m.d_model,
+            vocab: m.vocab,
+        }
+    }
+}
 
 /// One expert-parallel device: compute stream, host link, payload cache
 /// (DESIGN.md §11).  Device 0 additionally runs the dense stages (embed,
@@ -144,6 +176,8 @@ pub struct CacheView {
 
 pub struct ServeEngine {
     model: StagedModel,
+    /// Scalar copy of `model.manifest.model` for the per-step paths.
+    dims: HotDims,
     policy_cfg: PolicyConfig,
     policy: Box<dyn Policy>,
     cost: CostModel,
@@ -202,6 +236,18 @@ pub struct ServeEngine {
     /// Tokens generated since the session layer last drained.
     emitted: Vec<EmittedToken>,
     started: Instant,
+    // -- scratch buffers (perf): reused across decode-step boundaries so
+    // the hot loop stops reallocating them every step.  Each is taken
+    // (`mem::take`), cleared/refilled, and put back — never observed
+    // between uses, so they carry no state across steps.
+    /// MoE accumulator `run_moe_layer` fills per layer.
+    scratch_moe: Vec<f32>,
+    /// Per-device desired replica sets (the §11 reconcile diff).
+    scratch_desired: Vec<HashSet<(PayloadKey, PayloadKind)>>,
+    /// Pinned-key listing for the reconcile's stale-replica sweep.
+    scratch_pinned: Vec<(PayloadKey, PayloadKind)>,
+    /// `[layer][expert]` resident-rung table the elastic step diffs.
+    scratch_resident: Vec<Vec<Option<Precision>>>,
 }
 
 impl ServeEngine {
@@ -301,6 +347,7 @@ impl ServeEngine {
             None
         };
         let mut engine = ServeEngine {
+            dims: HotDims::of(&dims),
             policy,
             policy_cfg,
             cost,
@@ -333,6 +380,10 @@ impl ServeEngine {
             records: Vec::new(),
             emitted: Vec::new(),
             started: Instant::now(),
+            scratch_moe: Vec::new(),
+            scratch_desired: Vec::new(),
+            scratch_pinned: Vec::new(),
+            scratch_resident: Vec::new(),
             model,
         };
         if engine.elastic_active() {
@@ -636,7 +687,7 @@ impl ServeEngine {
         if !self.policy.prewarm_fp16() {
             return Ok(());
         }
-        let dims = self.model.manifest.model.clone();
+        let dims = self.dims;
         let bytes = self.model.manifest.transfer.fp16_expert_bytes;
         for layer in 0..dims.n_layers {
             for expert in 0..dims.n_experts {
@@ -670,8 +721,8 @@ impl ServeEngine {
 
     /// Quantizer family for payloads: GPTQ only when explicitly selected
     /// via the comp-free accuracy baselines; BEAM ships HQQ (paper §3.1).
-    fn method(&self) -> String {
-        self.policy_cfg.method.clone()
+    fn method(&self) -> &str {
+        &self.policy_cfg.method
     }
 
     fn payload_kind(precision: Precision) -> PayloadKind {
@@ -717,7 +768,7 @@ impl ServeEngine {
             }
             return Ok((hit.payload, ready.max(hit.ready_at)));
         }
-        let lits = Arc::new(self.model.payload_base(layer, expert, precision, &self.method())?);
+        let lits = Arc::new(self.model.payload_base(layer, expert, precision, self.method())?);
         let bytes = self.base_bytes(precision);
         let (wire_bytes, demand_promo) = if self.elastic_active() {
             // Largest landed base level of this expert (compensators can't
@@ -776,9 +827,9 @@ impl ServeEngine {
         if let Some(hit) = self.devices[dev].cache.get_at(&key, kind, ready) {
             return Ok((hit.payload, ready.max(hit.ready_at)));
         }
-        let tag = self.policy_cfg.comp_tag.clone();
-        let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
-        let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+        let tag = &self.policy_cfg.comp_tag;
+        let lits = Arc::new(self.model.payload_comp(layer, expert, bits, tag)?);
+        let bytes = self.model.manifest.comp_bytes(tag, bits, layer, expert);
         let done =
             self.devices[dev].host_link.transfer(ready, bytes, TransferClass::Compensator);
         self.devices[dev].cache.insert_ready(key, kind, Arc::clone(&lits), bytes, done);
@@ -1031,10 +1082,14 @@ impl ServeEngine {
         prefill: bool,
         router_done: VTime,
     ) -> Result<Vec<f32>> {
-        let m = self.model.manifest.model.clone();
+        let m = self.dims;
         let n_rows = if prefill { m.t_prefill } else { m.b_max };
         let d = m.d_model;
-        let mut moe = vec![0f32; n_rows * d];
+        // Reuse the step-scratch accumulator (callers hand it back); a
+        // clear + zero-fill resize is the old `vec![0f32; _]` semantics.
+        let mut moe = std::mem::take(&mut self.scratch_moe);
+        moe.clear();
+        moe.resize(n_rows * d, 0f32);
         // Device 0's next dense stage waits on NDP round trips *and* on
         // remote devices shipping their expert outputs back.
         let mut combine_barrier = router_done;
@@ -1116,11 +1171,7 @@ impl ServeEngine {
                     let link = self.ndp_link.as_mut().expect("ndp exec without ndp link");
                     let t_in = link.transfer(router_done, act, TransferClass::Activations);
                     let dev = self.ndp.as_mut().expect("ndp exec without device");
-                    let op = self.cost.expert_ndp(
-                        n_tok,
-                        exec.precision,
-                        &dev.cfg.clone(),
-                    );
+                    let op = self.cost.expert_ndp(n_tok, exec.precision, &dev.cfg);
                     let t_done = dev.execute_expert(&self.cost, t_in, n_tok, exec.precision);
                     self.breakdown.ndp_compute_s += op.seconds;
                     let link = self.ndp_link.as_mut().unwrap();
@@ -1130,7 +1181,7 @@ impl ServeEngine {
                     // resident near-data; no PCIe charge).
                     let lits =
                         self.model
-                            .payload_base(layer, exec.expert, exec.precision, &self.method())?;
+                            .payload_base(layer, exec.expert, exec.precision, self.method())?;
                     let refs: Vec<&Tensor> = lits.iter().collect();
                     let y = self.model.run_expert(exec.precision, prefill, xn, &refs)?;
                     combine::accumulate(&mut moe, &y.y, exec, d);
@@ -1140,8 +1191,8 @@ impl ServeEngine {
 
         // Shared experts (DeepSeek-style): resident on device 0, fp16,
         // every token.
+        let n_live = active.iter().filter(|&&a| a).count();
         for s in 0..m.n_shared {
-            let n_live = active.iter().filter(|&&a| a).count();
             let op = self.cost.expert_gpu(n_live, Precision::Fp16, 0.0);
             self.devices[0].gpu.acquire(router_done, op.seconds);
             self.breakdown.expert_compute_s += op.seconds;
@@ -1181,7 +1232,7 @@ impl ServeEngine {
 
     /// One decode step over all active slots.
     pub fn decode_step(&mut self) -> Result<()> {
-        let m = self.model.manifest.model.clone();
+        let m = self.dims;
         let (tokens, pos) = self.state.decode_inputs();
         let active = self.state.active_rows();
         let n_active = active.iter().filter(|&&a| a).count();
@@ -1248,6 +1299,7 @@ impl ServeEngine {
             for (a, b) in xh.iter_mut().zip(&moe) {
                 *a += b;
             }
+            self.scratch_moe = moe;
             x = self.model.make_x(m.b_max, &xh)?;
 
             // Speculate on upcoming layers now that this layer's demand
@@ -1312,7 +1364,7 @@ impl ServeEngine {
     /// bookkeeping (admit/emit/counters) so both entry points share one
     /// byte-identical op sequence.
     fn prefill_pass(&mut self, slot: usize, tokens: &[i32]) -> Result<i32> {
-        let m = self.model.manifest.model.clone();
+        let m = self.dims;
         let plen = tokens.len().min(m.t_prefill);
         let step_t0 = self.clock.now();
 
@@ -1338,6 +1390,7 @@ impl ServeEngine {
             for (a, b) in xh.iter_mut().zip(&moe) {
                 *a += b;
             }
+            self.scratch_moe = moe;
             x = self.model.make_x(m.t_prefill, &xh)?;
         }
 
@@ -1431,7 +1484,7 @@ impl ServeEngine {
         active: &[bool],
         router_done: VTime,
     ) -> Result<()> {
-        let m = self.model.manifest.model.clone();
+        let m = self.dims;
         pred.observe(&LayerObservation {
             step: self.decode_steps,
             layer,
@@ -1451,7 +1504,9 @@ impl ServeEngine {
         let kind = Self::payload_kind(prec);
         let bytes_each = self.base_bytes(prec);
         let n_active = active.iter().filter(|&&a| a).count();
-        let cap = (n_active * m.top_k).clamp(m.top_k, m.n_experts);
+        // max-then-min, not `clamp` — the same latent panic the EWMA
+        // predictor's cap had when a dense config routes top_k > n_experts.
+        let cap = (n_active * m.top_k).max(m.top_k).min(m.n_experts);
 
         for depth in 1..=self.prefetch_cfg.lookahead.min(m.n_layers) {
             // Budget gone: don't burn router stages on predictions we
@@ -1484,7 +1539,11 @@ impl ServeEngine {
                 lookahead_probs: la_probs.as_deref(),
             };
             let ranked = pred.predict(&ctx);
-            let mut dense = vec![0f64; m.n_experts];
+            // Recycle the layer's previous score Vec instead of allocating
+            // a fresh dense table every lookahead depth of every layer.
+            let mut dense = self.predicted_scores.remove(&t_layer).unwrap_or_default();
+            dense.clear();
+            dense.resize(m.n_experts, 0f64);
             for p in &ranked {
                 dense[p.expert] = p.score;
             }
@@ -1505,7 +1564,7 @@ impl ServeEngine {
                 // device, over its own host link — never on a dead device.
                 let dev = self.effective_owner(p.expert);
                 let lits =
-                    Arc::new(self.model.payload_base(t_layer, p.expert, prec, &self.method())?);
+                    Arc::new(self.model.payload_base(t_layer, p.expert, prec, self.method())?);
                 let done = self.devices[dev].host_link.transfer(
                     router_done,
                     bytes_each,
@@ -1546,18 +1605,28 @@ impl ServeEngine {
         let alive: Vec<bool> = (0..n_devices).map(|d| self.device_alive(d)).collect();
         let plan = rep.plan_alive(bulk, |e| self.effective_owner(e), &alive);
 
-        let mut desired: Vec<HashSet<(PayloadKey, PayloadKind)>> = vec![HashSet::new(); n_devices];
+        // Scratch-backed desired sets: the reconcile runs every decode
+        // step, so the per-device `HashSet`s (and the pinned listing
+        // below) reuse their previous step's allocations.
+        let mut desired = std::mem::take(&mut self.scratch_desired);
+        desired.resize_with(n_devices, HashSet::new);
+        for want in desired.iter_mut() {
+            want.clear();
+        }
         for t in &plan {
             desired[t.device].insert((PayloadKey { layer: t.layer, expert: t.expert }, kind));
         }
         // Stale replicas are discards — no link traffic to free HBM.
+        let mut pinned = std::mem::take(&mut self.scratch_pinned);
         for (dev, want) in desired.iter().enumerate() {
-            for (key, k) in self.devices[dev].cache.pinned_keys() {
+            self.devices[dev].cache.pinned_keys_into(&mut pinned);
+            for &(key, k) in &pinned {
                 if !want.contains(&(key, k)) {
                     self.devices[dev].cache.unpin(&key, k);
                 }
             }
         }
+        self.scratch_pinned = pinned;
         // Place missing replicas hottest-first (the plan's order).  A key
         // already resident on the target — pinned from an earlier step, or
         // demand-cached — is sticky: no re-transfer while it lives.
@@ -1567,7 +1636,7 @@ impl ServeEngine {
                 continue;
             }
             let owner = self.effective_owner(t.expert);
-            let lits = Arc::new(self.model.payload_base(t.layer, t.expert, prec, &self.method())?);
+            let lits = Arc::new(self.model.payload_base(t.layer, t.expert, prec, self.method())?);
             let owner_has_landed = owner != t.device
                 && self.devices[owner].cache.peek_ready_at(&key, kind).is_some_and(|r| r <= now);
             // Peer-sourced copies record their source device so that, if
@@ -1590,6 +1659,7 @@ impl ServeEngine {
             rep.issued += 1;
             rep.bytes_moved += bulk;
         }
+        self.scratch_desired = desired;
         Ok(())
     }
 
@@ -1606,9 +1676,16 @@ impl ServeEngine {
         if !self.elastic_active() {
             return Ok(());
         }
-        let m = self.model.manifest.model.clone();
+        let m = self.dims;
         let now = self.clock.now();
-        let mut resident = vec![vec![None; m.n_experts]; m.n_layers];
+        // Scratch-backed rung table: cleared and refilled each boundary
+        // instead of reallocating `n_layers` fresh rows.
+        let mut resident = std::mem::take(&mut self.scratch_resident);
+        resident.resize_with(m.n_layers, Vec::new);
+        for row in resident.iter_mut() {
+            row.clear();
+            row.resize(m.n_experts, None);
+        }
         for (layer, row) in resident.iter_mut().enumerate() {
             for (expert, slot) in row.iter_mut().enumerate() {
                 let owner = self.effective_owner(expert);
@@ -1632,6 +1709,7 @@ impl ServeEngine {
                 }
             }
         }
+        self.scratch_resident = resident;
         Ok(())
     }
 
@@ -1684,15 +1762,15 @@ impl ServeEngine {
             }
         }
         if !self.devices[dev].cache.contains(&key, base_kind) {
-            let lits = Arc::new(self.model.payload_base(layer, expert, to, &self.method())?);
+            let lits = Arc::new(self.model.payload_base(layer, expert, to, self.method())?);
             let bytes = self.base_bytes(to);
             self.devices[dev].cache.insert_ready(key, base_kind, lits, bytes, now);
         }
         if let (Some(kind), Precision::IntComp(bits)) = (comp_kind, to) {
             if !self.devices[dev].cache.contains(&key, kind) {
-                let tag = self.policy_cfg.comp_tag.clone();
-                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
-                let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+                let tag = &self.policy_cfg.comp_tag;
+                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, tag)?);
+                let bytes = self.model.manifest.comp_bytes(tag, bits, layer, expert);
                 self.devices[dev].cache.insert_ready(key, kind, lits, bytes, now);
             }
         }
@@ -1717,16 +1795,16 @@ impl ServeEngine {
         let base_kind = Self::payload_kind(to);
         let done = self.devices[dev].host_link.transfer(now, delta, TransferClass::Promotion);
         if !self.devices[dev].cache.contains(&key, base_kind) {
-            let lits = Arc::new(self.model.payload_base(layer, expert, to, &self.method())?);
+            let lits = Arc::new(self.model.payload_base(layer, expert, to, self.method())?);
             let bytes = self.base_bytes(to);
             self.devices[dev].cache.insert_ready(key, base_kind, lits, bytes, done);
         }
         if let Precision::IntComp(bits) = to {
             let kind = PayloadKind::Comp(bits);
             if !self.devices[dev].cache.contains(&key, kind) {
-                let tag = self.policy_cfg.comp_tag.clone();
-                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, &tag)?);
-                let bytes = self.model.manifest.comp_bytes(&tag, bits, layer, expert);
+                let tag = &self.policy_cfg.comp_tag;
+                let lits = Arc::new(self.model.payload_comp(layer, expert, bits, tag)?);
+                let bytes = self.model.manifest.comp_bytes(tag, bits, layer, expert);
                 self.devices[dev].cache.insert_ready(key, kind, lits, bytes, done);
             }
         }

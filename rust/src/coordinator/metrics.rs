@@ -459,10 +459,30 @@ impl Report {
 
     /// One-line tail-latency summary (companion to [`Report::summary_line`]
     /// so load sweeps carry tail signal, not just means).
+    ///
+    /// One filter pass over the records builds all three sample families,
+    /// each sorted once — the old path re-filtered, re-cloned and
+    /// re-sorted the full record list per family, three times per report.
+    /// The filter and the per-family formulas are exactly those of
+    /// [`Report::ttft_percentiles`]/[`Report::tpot_percentiles`]/
+    /// [`Report::latency_percentiles`], so the line stays byte-identical
+    /// (pinned by `tail_line_matches_the_three_family_percentiles`).
     pub fn tail_line(&self) -> String {
-        let t = self.ttft_percentiles();
-        let p = self.tpot_percentiles();
-        let l = self.latency_percentiles();
+        let n = self.requests.len();
+        let (mut ttft, mut tpot, mut e2e) =
+            (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+        for r in self.requests.iter().filter(|r| r.generated > 0) {
+            ttft.push(r.first_token_at - r.arrival);
+            tpot.push(
+                (r.finished_at - r.first_token_at) / (r.generated.saturating_sub(1)).max(1) as f64,
+            );
+            e2e.push(r.finished_at - r.arrival);
+        }
+        for v in [&mut ttft, &mut tpot, &mut e2e] {
+            v.sort_by(|a, b| a.total_cmp(b));
+        }
+        let p3 = |v: &[f64]| [percentile(v, 0.50), percentile(v, 0.95), percentile(v, 0.99)];
+        let (t, p, l) = (p3(&ttft), p3(&tpot), p3(&e2e));
         format!(
             "ttft p50/p95/p99 {:.4}/{:.4}/{:.4}s | tpot {:.5}/{:.5}/{:.5}s | e2e {:.4}/{:.4}/{:.4}s",
             t[0], t[1], t[2], p[0], p[1], p[2], l[0], l[1], l[2],
@@ -541,6 +561,27 @@ mod tests {
         assert_eq!(r.mean_ttft(), mean_t, "means are filtered too");
         assert_eq!(r.mean_request_latency(), mean_l);
         assert!(r.mean_ttft() > 0.0);
+    }
+
+    #[test]
+    fn tail_line_matches_the_three_family_percentiles() {
+        // Byte-identity pin for the single-pass rewrite: the line must be
+        // exactly what three independent sorted_metric passes produced.
+        let mut r = Report::default();
+        for i in 0..13 {
+            let a = 0.3 * i as f64;
+            r.requests.push(req(a, a + 0.7 + 0.05 * i as f64, a + 4.0 + 0.2 * i as f64, 2 + i));
+        }
+        r.requests.push(RequestRecord { id: 99, arrival: 9.0, ..Default::default() });
+        let t = r.ttft_percentiles();
+        let p = r.tpot_percentiles();
+        let l = r.latency_percentiles();
+        let reference = format!(
+            "ttft p50/p95/p99 {:.4}/{:.4}/{:.4}s | tpot {:.5}/{:.5}/{:.5}s | e2e {:.4}/{:.4}/{:.4}s",
+            t[0], t[1], t[2], p[0], p[1], p[2], l[0], l[1], l[2],
+        );
+        assert_eq!(r.tail_line(), reference);
+        assert_eq!(Report::default().tail_line(), Report::default().tail_line());
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! synthetic model: no artifacts, no network, deterministic work (the
 //! wall-clock is the only nondeterministic output).  `beam bench --json`
 //! emits one machine-readable record per benchmark for trend tracking;
-//! the committed baseline lives in `rust/benches/BENCH_9.json` and is
-//! refreshed with `beam bench --json --out rust/benches/BENCH_9.json`
-//! on a quiet machine.
+//! the committed baseline lives in `rust/benches/BENCH_10.json` and is
+//! refreshed with `beam bench --json --out rust/benches/BENCH_10.json`
+//! on a quiet machine (earlier `BENCH_*.json` files are the perf
+//! trajectory — see EXPERIMENTS.md).
 //!
 //! The suite is intentionally small and stable: names are part of the
 //! baseline schema, so add new benchmarks rather than renaming old ones.
@@ -16,11 +17,12 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::backend::{Backend, ReferenceBackend};
+use crate::backend::{Backend, ReferenceBackend, Tensor};
 use crate::config::{
-    ArrivalKind, LengthDist, PolicyConfig, PriorityClass, SchedConfig, SystemConfig, TenantMix,
-    TenantSpec,
+    ArrivalKind, LengthDist, PolicyConfig, PrefetchConfig, PriorityClass, SchedConfig,
+    SystemConfig, TenantMix, TenantSpec,
 };
+use crate::harness::par;
 use crate::jsonx::{self, Value};
 use crate::sched::{SchedDecision, Scheduler, SloScheduler};
 use crate::server::{ServerBuilder, SubmitError};
@@ -285,6 +287,90 @@ fn bench_demote_in_place(n: usize) -> Result<BenchRecord> {
     Ok(BenchRecord::new("demote_in_place", n as u64, wall))
 }
 
+/// One figure-sweep cell, end to end, through the same pool the
+/// parallel sweeps use: each cell stages the synthetic model on a
+/// fresh backend (backends are `!Sync`) and serves a smoke-sized
+/// workload, fanned out with [`par::run_cells`] at the default width.
+/// Iters are cells — the unit `figure * --workers N` scales by.
+fn bench_figure_cell(n_cells: usize) -> Result<BenchRecord> {
+    let workers = par::default_workers();
+    let cell = || -> Result<u64> {
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+        let model = synth::tiny_model(backend, "synthetic-tiny")?;
+        let dims = model.manifest.model.clone();
+        let sys = SystemConfig::scaled_for(&dims, false);
+        let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+        let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+        let eval = synth::tiny_eval_store(&dims)?;
+        let reqs = WorkloadGen::generate(&WorkloadConfig::offline(1, 32, 4), &eval)?;
+        for req in reqs {
+            server.submit(req)?;
+        }
+        Ok(server.run_to_completion()?.total_generated as u64)
+    };
+    let jobs: Vec<_> = (0..n_cells).map(|_| cell).collect();
+    let start = Instant::now();
+    let generated = par::run_cells(workers, jobs)?;
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(generated.iter().all(|&g| g > 0), "every figure cell must generate tokens");
+    Ok(BenchRecord::new("figure_cell", n_cells as u64, wall)
+        .with_metric("workers", workers as f64))
+}
+
+/// Decode-step cost on the synthetic model: a fifo serve sized so
+/// decode dominates prefill, reported per decode step — the hot path
+/// the engine's reusable scratch buffers serve (DESIGN.md §Perf).
+fn bench_engine_decode_step(n_req: usize, out_len: usize) -> Result<BenchRecord> {
+    let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+    let model = synth::tiny_model(backend, "synthetic-tiny")?;
+    let dims = model.manifest.model.clone();
+    let sys = SystemConfig::scaled_for(&dims, false);
+    let policy = PolicyConfig::new("static-quant", synth::SYNTH_BITS, 0);
+    let mut server = ServerBuilder::new(model).policy(policy).system(sys).build()?;
+    let eval = synth::tiny_eval_store(&dims)?;
+    let reqs = WorkloadGen::generate(&WorkloadConfig::offline(n_req, 32, out_len), &eval)?;
+    let start = Instant::now();
+    for req in reqs {
+        server.submit(req)?;
+    }
+    let report = server.run_to_completion()?;
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(report.decode_steps > 0, "decode bench took no decode steps");
+    Ok(BenchRecord::new("engine_decode_step", report.decode_steps, wall)
+        .with_metric("virtual_tok_per_s", report.tokens_per_second()))
+}
+
+/// The tiled dequant+GEMM micro-path (`reference::dequant_matmul`): one
+/// packed INT4 `(k, m)` matrix applied to an `(n, k)` activation per
+/// iteration, with the strip scratch reused across calls exactly as the
+/// expert stages reuse it.  The metric is dense-GEMM GFLOP/s.
+fn bench_dequant_gemm(iters: usize) -> Result<BenchRecord> {
+    let (n, k, m, g) = (4usize, 256usize, 64usize, 32usize);
+    let groups = k / g;
+    let nbytes = m * 4 / 8;
+    let packed: Vec<u8> = (0..k * nbytes).map(|v| (v * 37 % 256) as u8).collect();
+    let pk = Tensor::from_u8(&[k, nbytes], packed)?;
+    let scale: Vec<f32> = (0..groups * m).map(|v| 0.25 + (v % 7) as f32 * 0.5).collect();
+    let zero: Vec<f32> = (0..groups * m).map(|v| (v % 5) as f32 * 0.75).collect();
+    let sc = Tensor::from_f32(&[groups, m], scale)?;
+    let zp = Tensor::from_f32(&[groups, m], zero)?;
+    let x: Vec<f32> = (0..n * k).map(|v| (v as f32 * 0.3).sin()).collect();
+    let mut strip = Vec::new();
+    let mut sink = 0f32;
+    let start = Instant::now();
+    for _ in 0..iters {
+        let y = crate::backend::reference::dequant_matmul(
+            &x, &pk, &sc, &zp, n, k, m, 4, g, &mut strip,
+        )?;
+        sink += y[0];
+    }
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(sink.is_finite(), "dequant bench produced non-finite output");
+    let flops = (2 * n * k * m * iters) as f64;
+    Ok(BenchRecord::new("dequant_gemm", iters as u64, wall)
+        .with_metric("gflop_per_s", flops / wall.max(1e-12) / 1e9))
+}
+
 /// Run the pinned suite.  `quick` shrinks every size (the test/CI
 /// configuration); the default sizes are the baseline configuration.
 pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
@@ -294,6 +380,11 @@ pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
         } else {
             (5000, 500, 6, 16, 12, 2000, 500, 6, 20_000)
         };
+    let (cell_n, dec_req, dec_out, dq_n) = if quick {
+        (4, 2, 8, 50)
+    } else {
+        (16, 4, 64, 2000)
+    };
     Ok(vec![
         bench_traffic(traffic_n)?,
         bench_slo_decide(decide_n)?,
@@ -303,6 +394,9 @@ pub fn run_suite(quick: bool) -> Result<Vec<BenchRecord>> {
         bench_reconfig_apply(reconfig_n)?,
         bench_elastic_replan(ela_req, out_len)?,
         bench_demote_in_place(demote_n)?,
+        bench_figure_cell(cell_n)?,
+        bench_engine_decode_step(dec_req, dec_out)?,
+        bench_dequant_gemm(dq_n)?,
     ])
 }
 
@@ -324,9 +418,14 @@ pub fn to_json(records: &[BenchRecord], quick: bool) -> Value {
             jsonx::obj(pairs)
         })
         .collect();
+    // `cases` pins the record-name set on its own: CI diffs it against
+    // the committed baseline, which stays meaningful even when the
+    // baseline's wall-clock records are unpopulated.
+    let cases: Vec<Value> = records.iter().map(|r| Value::Str(r.name.clone())).collect();
     jsonx::obj(vec![
         ("schema", Value::Str("beam-bench-v1".to_string())),
         ("suite", Value::Str(if quick { "quick" } else { "default" }.to_string())),
+        ("cases", Value::Arr(cases)),
         ("records", Value::Arr(recs)),
     ])
 }
@@ -342,7 +441,8 @@ mod tests {
         assert_eq!(
             names,
             ["traffic_gen", "slo_decide", "serve_fifo", "serve_slo", "ctl_roundtrip",
-             "reconfig_apply", "elastic_replan", "demote_in_place"]
+             "reconfig_apply", "elastic_replan", "demote_in_place", "figure_cell",
+             "engine_decode_step", "dequant_gemm"]
         );
         for r in &records {
             assert!(r.iters > 0, "{}: no work timed", r.name);
@@ -352,7 +452,11 @@ mod tests {
         let json = to_json(&records, true).to_string();
         let v = crate::jsonx::Value::parse(&json).unwrap();
         assert_eq!(v.get("schema").unwrap().str().unwrap(), "beam-bench-v1");
-        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 8);
+        assert_eq!(v.get("records").unwrap().arr().unwrap().len(), 11);
+        // The `cases` array is the CI drift gate: names, in suite order.
+        let cases: Vec<&str> =
+            v.get("cases").unwrap().arr().unwrap().iter().map(|c| c.str().unwrap()).collect();
+        assert_eq!(cases, names);
     }
 
     #[test]

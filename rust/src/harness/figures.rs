@@ -1,7 +1,7 @@
 //! One driver per paper table/figure (DESIGN.md §5).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -10,6 +10,7 @@ use crate::backend::{default_backend, Backend, ReferenceBackend};
 use crate::config::{PolicyConfig, Precision, PrefetchConfig, SystemConfig};
 use crate::coordinator::scheduler::score_metrics;
 use crate::coordinator::Report;
+use crate::harness::par;
 use crate::harness::report::ReportSink;
 use crate::manifest::Manifest;
 use crate::quant::alloc::PrecisionLadder;
@@ -37,6 +38,15 @@ pub struct Harness {
     /// `--bless`: the `golden` driver rewrites the pinned report
     /// snapshots under `rust/tests/golden/` instead of diffing them.
     pub bless: bool,
+    /// Worker threads for the parallel grid sweeps (`--workers`); `1`
+    /// runs every cell inline on the caller's thread.  Sweep output is
+    /// byte-identical at any width — cells are collected by index and
+    /// rendered in grid order (see [`par::run_cells`]).
+    pub workers: usize,
+    /// The `--backend` name, kept alongside the resolved [`Backend`]:
+    /// backends are `!Sync`, so parallel sweep cells rebuild their own
+    /// instance from this name instead of sharing `backend`.
+    pub backend_name: String,
 }
 
 impl Harness {
@@ -58,6 +68,8 @@ impl Harness {
             serve_requests: if full { 16 } else { 8 },
             smoke: false,
             bless: false,
+            workers: 1,
+            backend_name: "default".to_string(),
         })
     }
 
@@ -141,25 +153,81 @@ impl Harness {
         output_len: usize,
         prefetch: PrefetchConfig,
     ) -> Result<crate::coordinator::Report> {
-        let manifest = Manifest::load(self.model_dir(model))?;
-        let sys = SystemConfig::scaled_for(&manifest.model, ndp);
-        let mut server = self.server(model, policy.clone(), sys.clone(), prefetch)?;
-        let wl = WorkloadConfig::offline(self.serve_requests, 256, output_len);
-        let eval_store = crate::manifest::WeightStore::load(server.model().manifest.eval_path())?;
-        let requests = WorkloadGen::generate(&wl, &eval_store)?;
-        if server.needs_recorded_trace() {
-            let mut recorder = self.server(model, policy, sys, PrefetchConfig::off())?;
-            recorder.record_trace();
-            for req in requests.clone() {
-                recorder.submit(req)?;
-            }
-            recorder.run_to_completion()?;
-            server.install_oracle_trace(&recorder.take_trace()?);
+        serve_prefetch_point(
+            &self.backend,
+            &self.artifacts,
+            self.serve_requests,
+            model,
+            policy,
+            ndp,
+            output_len,
+            prefetch,
+        )
+    }
+}
+
+/// The body of [`Harness::serve_point_prefetch`] with every input
+/// explicit, so the parallel prefetch sweep can run one cell per worker
+/// thread (each worker passes a freshly-built backend — `Backend` is
+/// `!Sync` by design).
+#[allow(clippy::too_many_arguments)]
+fn serve_prefetch_point(
+    backend: &Arc<dyn Backend>,
+    artifacts: &Path,
+    serve_requests: usize,
+    model: &str,
+    policy: PolicyConfig,
+    ndp: bool,
+    output_len: usize,
+    prefetch: PrefetchConfig,
+) -> Result<Report> {
+    let manifest = Manifest::load(artifacts.join(model))?;
+    let sys = SystemConfig::scaled_for(&manifest.model, ndp);
+    let build = |policy: PolicyConfig, prefetch: PrefetchConfig| -> Result<Server> {
+        let staged =
+            StagedModel::load(Arc::clone(backend), Manifest::load(artifacts.join(model))?)?;
+        ServerBuilder::new(staged).policy(policy).system(sys.clone()).prefetch(prefetch).build()
+    };
+    let mut server = build(policy.clone(), prefetch)?;
+    let wl = WorkloadConfig::offline(serve_requests, 256, output_len);
+    let eval_store = crate::manifest::WeightStore::load(server.model().manifest.eval_path())?;
+    let requests = WorkloadGen::generate(&wl, &eval_store)?;
+    if server.needs_recorded_trace() {
+        let mut recorder = build(policy, PrefetchConfig::off())?;
+        recorder.record_trace();
+        for req in requests.clone() {
+            recorder.submit(req)?;
         }
-        for req in requests {
-            server.submit(req)?;
-        }
-        server.run_to_completion()
+        recorder.run_to_completion()?;
+        server.install_oracle_trace(&recorder.take_trace()?);
+    }
+    for req in requests {
+        server.submit(req)?;
+    }
+    server.run_to_completion()
+}
+
+/// A model factory the parallel sweeps share across worker threads:
+/// every call stages a fresh model on a freshly-built backend (backends
+/// keep single-threaded stage caches, so one instance must never cross
+/// threads).  `smoke` swaps in the artifact-free synthetic model.
+fn shared_mk_model(
+    artifacts: &Path,
+    backend_name: &str,
+    smoke: bool,
+) -> Arc<dyn Fn() -> Result<StagedModel> + Send + Sync> {
+    if smoke {
+        Arc::new(|| {
+            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
+            synth::tiny_model(backend, "synthetic-tiny")
+        })
+    } else {
+        let artifacts = artifacts.to_path_buf();
+        let backend_name = backend_name.to_string();
+        Arc::new(move || {
+            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
+            StagedModel::load(crate::backend::by_name(&backend_name)?, manifest)
+        })
     }
 }
 
@@ -730,12 +798,19 @@ pub fn prefetch(h: &mut Harness) -> Result<()> {
     h.sink.line(format!(
         "== Prefetch sweep ({model}, out={out_len}): tok/s + stall + wasted bytes vs predictor × budget =="
     ));
-    let mut rows = Vec::new();
-
+    // Enumerate the grid in render order.  Every cell is an independent
+    // virtual-clock sim — nothing downstream depends on the order they
+    // *compute* in, only the order they *render* in.
+    struct Cell {
+        ndp: bool,
+        pname: &'static str,
+        kname: &'static str,
+        budget: usize,
+        policy: PolicyConfig,
+    }
+    let mut cells = Vec::new();
     for ndp in [false, true] {
-        let testbed = if ndp { "gpu-ndp" } else { "gpu" };
-        h.sink.line(format!("  -- testbed: {testbed} --"));
-        let policies: Vec<(&str, PolicyConfig)> = if ndp {
+        let policies: Vec<(&'static str, PolicyConfig)> = if ndp {
             vec![
                 ("monde", PolicyConfig::new("monde", 16, 0)),
                 ("beam-2bit", PolicyConfig::new("beam", 2, dims.top_n)),
@@ -752,8 +827,7 @@ pub fn prefetch(h: &mut Harness) -> Result<()> {
             // "Full" budget = one decode step's worth of bulk payloads.
             let bulk = crate::policies::bulk_expert_bytes(&manifest, &policy)?;
             let full = dims.top_k * dims.n_layers * bulk;
-            let predictors = ["off", "ewma", "gate", "oracle"];
-            for kname in predictors {
+            for kname in ["off", "ewma", "gate", "oracle"] {
                 let budgets: &[usize] = if kname == "off" {
                     &[0]
                 } else {
@@ -761,27 +835,59 @@ pub fn prefetch(h: &mut Harness) -> Result<()> {
                 };
                 for &bx in budgets {
                     let budget = bx * full / 2;
-                    let pf = PrefetchConfig::new(kname, 1, budget);
-                    let r = h.serve_point_prefetch(model, policy.clone(), ndp, out_len, pf)?;
-                    h.sink.line(format!(
-                        "    {pname:<16} {kname:<7} budget={budget:<8} {:>8.2} tok/s | stall {:>7.4}s | cover {:>5.1}% | spec {:>9}B wasted {:>9}B",
-                        r.tokens_per_second(),
-                        r.breakdown.transfer_stall_s,
-                        100.0 * r.prefetch.coverage(),
-                        r.prefetch.speculative_bytes,
-                        r.prefetch.wasted_bytes,
-                    ));
-                    rows.push(format!(
-                        "{testbed},{pname},{kname},{budget},{},{},{},{},{}",
-                        r.tokens_per_second(),
-                        r.breakdown.transfer_stall_s,
-                        r.prefetch.coverage(),
-                        r.prefetch.speculative_bytes,
-                        r.prefetch.wasted_bytes,
-                    ));
+                    cells.push(Cell { ndp, pname, kname, budget, policy: policy.clone() });
                 }
             }
         }
+    }
+
+    // Compute every cell, fanned across workers; results come back
+    // indexed, so the render below is byte-identical at any pool width.
+    let (artifacts, backend_name, serve_requests) =
+        (h.artifacts.clone(), h.backend_name.clone(), h.serve_requests);
+    let jobs: Vec<_> = cells
+        .iter()
+        .map(|c| {
+            let (artifacts, backend_name) = (&artifacts, &backend_name);
+            let policy = c.policy.clone();
+            let pf = PrefetchConfig::new(c.kname, 1, c.budget);
+            let ndp = c.ndp;
+            move || {
+                let backend = crate::backend::by_name(backend_name)?;
+                serve_prefetch_point(
+                    &backend, artifacts, serve_requests, model, policy, ndp, out_len, pf,
+                )
+            }
+        })
+        .collect();
+    let reports = par::run_cells(h.workers, jobs)?;
+
+    // Sequential render in the exact grid order of the old nested loops.
+    let mut rows = Vec::new();
+    let mut last_testbed = "";
+    for (c, r) in cells.iter().zip(&reports) {
+        let (pname, kname, budget) = (c.pname, c.kname, c.budget);
+        let testbed = if c.ndp { "gpu-ndp" } else { "gpu" };
+        if testbed != last_testbed {
+            h.sink.line(format!("  -- testbed: {testbed} --"));
+            last_testbed = testbed;
+        }
+        h.sink.line(format!(
+            "    {pname:<16} {kname:<7} budget={budget:<8} {:>8.2} tok/s | stall {:>7.4}s | cover {:>5.1}% | spec {:>9}B wasted {:>9}B",
+            r.tokens_per_second(),
+            r.breakdown.transfer_stall_s,
+            100.0 * r.prefetch.coverage(),
+            r.prefetch.speculative_bytes,
+            r.prefetch.wasted_bytes,
+        ));
+        rows.push(format!(
+            "{testbed},{pname},{kname},{budget},{},{},{},{},{}",
+            r.tokens_per_second(),
+            r.breakdown.transfer_stall_s,
+            r.prefetch.coverage(),
+            r.prefetch.speculative_bytes,
+            r.prefetch.wasted_bytes,
+        ));
     }
     h.sink.csv(
         "prefetch_sweep.csv",
@@ -882,19 +988,7 @@ pub fn demand_weighted_error(
 /// model with a tiny workload — the artifact-free CI path.
 pub fn adaptive(h: &mut Harness) -> Result<()> {
     let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
-    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
-        Box::new(|| {
-            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
-            synth::tiny_model(backend, "synthetic-tiny")
-        })
-    } else {
-        let artifacts = h.artifacts.clone();
-        let backend = Arc::clone(&h.backend);
-        Box::new(move || {
-            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
-            StagedModel::load(Arc::clone(&backend), manifest)
-        })
-    };
+    let mk_model = shared_mk_model(&h.artifacts, &h.backend_name, smoke);
     // One resident copy for the manifest, ladder and weight-error probes.
     let probe = mk_model()?;
     let manifest = probe.manifest.clone();
@@ -960,6 +1054,32 @@ pub fn adaptive(h: &mut Harness) -> Result<()> {
             .collect::<Vec<_>>()
             .join(" "),
     ));
+    // Compute phase: one job per (testbed × budget point), each serving
+    // the uniform baseline and its equal-budget adaptive twin.  Cells
+    // fan out across workers and come back in grid order.
+    let mut jobs = Vec::new();
+    for ndp in [false, true] {
+        for (_, budget) in &points {
+            let uniform_bits = bits
+                .iter()
+                .copied()
+                .filter(|&b| uniform_cost(b) <= *budget)
+                .max()
+                .unwrap_or(floor_bits);
+            let budget = *budget;
+            let serve = &serve;
+            jobs.push(move || -> Result<(Report, Report)> {
+                let uni = serve(PolicyConfig::new("static-quant", uniform_bits, 0), ndp)?;
+                let mut ada_cfg = PolicyConfig::new("adaptive", floor_bits, 0);
+                ada_cfg.comp_tag = tag.to_string();
+                ada_cfg.alloc_budget_bytes = Some(budget);
+                let ada = serve(ada_cfg, ndp)?;
+                Ok((uni, ada))
+            });
+        }
+    }
+    let mut results = par::run_cells(h.workers, jobs)?.into_iter();
+
     let mut rows = Vec::new();
     // Per-(layer, expert, precision) weight errors are model-fixed: one
     // memo serves every budget point and both testbeds.
@@ -974,11 +1094,7 @@ pub fn adaptive(h: &mut Harness) -> Result<()> {
                 .filter(|&b| uniform_cost(b) <= *budget)
                 .max()
                 .unwrap_or(floor_bits);
-            let uni = serve(PolicyConfig::new("static-quant", uniform_bits, 0), ndp)?;
-            let mut ada_cfg = PolicyConfig::new("adaptive", floor_bits, 0);
-            ada_cfg.comp_tag = tag.to_string();
-            ada_cfg.alloc_budget_bytes = Some(*budget);
-            let ada = serve(ada_cfg, ndp)?;
+            let (uni, ada) = results.next().context("adaptive sweep cell count mismatch")?;
             let alloc = ada
                 .alloc
                 .as_ref()
@@ -1058,19 +1174,7 @@ pub fn shard(h: &mut Harness) -> Result<()> {
     use crate::config::ShardConfig;
 
     let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
-    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
-        Box::new(|| {
-            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
-            synth::tiny_model(backend, "synthetic-tiny")
-        })
-    } else {
-        let artifacts = h.artifacts.clone();
-        let backend = Arc::clone(&h.backend);
-        Box::new(move || {
-            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
-            StagedModel::load(Arc::clone(&backend), manifest)
-        })
-    };
+    let mk_model = shared_mk_model(&h.artifacts, &h.backend_name, smoke);
     let probe = mk_model()?;
     let manifest = probe.manifest.clone();
     let dims = manifest.model.clone();
@@ -1127,13 +1231,39 @@ pub fn shard(h: &mut Harness) -> Result<()> {
             PolicyConfig::new("beam", floor_bits, dims.top_n),
         ),
     ];
+    // Compute phase: enumerate every serve in render order — per policy
+    // the two §11 equivalence runs, then the D × budget grid — and fan
+    // the cells across workers.
+    let mut cells: Vec<(PolicyConfig, Option<ShardConfig>)> = Vec::new();
+    for (_, policy) in &policies {
+        cells.push((policy.clone(), None));
+        cells.push((policy.clone(), Some(ShardConfig::new(1, full_budget))));
+        for devices in [1usize, 2, 4] {
+            for budget in [0usize, full_budget] {
+                if devices == 1 && budget > 0 {
+                    continue; // replication needs peers
+                }
+                cells.push((policy.clone(), Some(ShardConfig::new(devices, budget))));
+            }
+        }
+    }
+    let jobs: Vec<_> = cells
+        .into_iter()
+        .map(|(policy, shard)| {
+            let serve = &serve;
+            move || serve(policy, shard)
+        })
+        .collect();
+    let mut results = par::run_cells(h.workers, jobs)?.into_iter();
+    let mut next = || results.next().context("shard sweep cell count mismatch");
+
     let mut rows = Vec::new();
-    for (pname, policy) in &policies {
+    for (pname, _) in &policies {
         // §11 equivalence rule: an explicit D=1 shard config serves the
         // identical byte ledger and stall breakdown as the plain
         // single-device server.
-        let plain = serve(policy.clone(), None)?;
-        let d1 = serve(policy.clone(), Some(ShardConfig::new(1, full_budget)))?;
+        let plain = next()?;
+        let d1 = next()?;
         let identical = plain.bytes == d1.bytes
             && plain.breakdown.transfer_stall_s == d1.breakdown.transfer_stall_s
             && plain.virtual_seconds == d1.virtual_seconds;
@@ -1151,7 +1281,7 @@ pub fn shard(h: &mut Harness) -> Result<()> {
                 if devices == 1 && budget > 0 {
                     continue; // replication needs peers
                 }
-                let r = serve(policy.clone(), Some(ShardConfig::new(devices, budget)))?;
+                let r = next()?;
                 let (repl_bytes, serves, balance) = match &r.shard {
                     Some(s) => (
                         s.replication_bytes,
@@ -1208,19 +1338,7 @@ pub fn fault(h: &mut Harness) -> Result<()> {
     use crate::sim::topology::FaultPlan;
 
     let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
-    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
-        Box::new(|| {
-            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
-            synth::tiny_model(backend, "synthetic-tiny")
-        })
-    } else {
-        let artifacts = h.artifacts.clone();
-        let backend = Arc::clone(&h.backend);
-        Box::new(move || {
-            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
-            StagedModel::load(Arc::clone(&backend), manifest)
-        })
-    };
+    let mk_model = shared_mk_model(&h.artifacts, &h.backend_name, smoke);
     let probe = mk_model()?;
     let manifest = probe.manifest.clone();
     let dims = manifest.model.clone();
@@ -1260,6 +1378,40 @@ pub fn fault(h: &mut Harness) -> Result<()> {
         server.run_to_completion()
     };
 
+    // Compute phase: the two §12 equivalence runs, the zero-budget
+    // healthy twin, then the MTBF × budget grid — independent sims,
+    // fanned across workers, collected in render order.
+    let plan_for = |mtbf: u64| {
+        // Alternate kill/revive of device 1 every `mtbf` decode steps.
+        let mut plan = FaultPlan::new();
+        let mut k = 1u64;
+        while k * mtbf < out_len as u64 {
+            plan = if k % 2 == 1 { plan.kill(1, k * mtbf) } else { plan.revive(1, k * mtbf) };
+            k += 1;
+        }
+        plan
+    };
+    let mut cells: Vec<(ShardConfig, Option<FaultPlan>)> = vec![
+        (ShardConfig::new(2, full_budget), None),
+        (ShardConfig::new(2, full_budget), Some(FaultPlan::new())),
+        (ShardConfig::new(2, 0), None),
+    ];
+    for mtbf in [out_len / 2, out_len / 4, out_len / 8] {
+        let plan = plan_for(mtbf.max(1) as u64);
+        for budget in [0usize, full_budget] {
+            cells.push((ShardConfig::new(2, budget), Some(plan.clone())));
+        }
+    }
+    let jobs: Vec<_> = cells
+        .into_iter()
+        .map(|(shard, faults)| {
+            let serve = &serve;
+            move || serve(shard, faults)
+        })
+        .collect();
+    let mut results = par::run_cells(h.workers, jobs)?.into_iter();
+    let mut next = || results.next().context("fault sweep cell count mismatch");
+
     h.sink.line(format!(
         "== Fault sweep ({}, out={out_len}{}): kill/revive MTBF × replica budget ==",
         dims.name,
@@ -1271,8 +1423,8 @@ pub fn fault(h: &mut Harness) -> Result<()> {
 
     // §12 equivalence rule: an *empty* FaultPlan installs nothing — the
     // ledger is byte-identical to the plan-free fleet.  Hard CI contract.
-    let clean = serve(ShardConfig::new(2, full_budget), None)?;
-    let empty = serve(ShardConfig::new(2, full_budget), Some(FaultPlan::new()))?;
+    let clean = next()?;
+    let empty = next()?;
     let identical = clean.bytes == empty.bytes
         && clean.breakdown.transfer_stall_s == empty.breakdown.transfer_stall_s
         && clean.virtual_seconds == empty.virtual_seconds
@@ -1282,20 +1434,13 @@ pub fn fault(h: &mut Harness) -> Result<()> {
         identical,
         "an empty FaultPlan perturbed the ledger — the no-fault path must stay byte-identical"
     );
-    let clean_zero = serve(ShardConfig::new(2, 0), None)?;
+    let clean_zero = next()?;
 
     let mut rows = Vec::new();
     for mtbf in [out_len / 2, out_len / 4, out_len / 8] {
         let mtbf = mtbf.max(1) as u64;
-        // Alternate kill/revive of device 1 every `mtbf` decode steps.
-        let mut plan = FaultPlan::new();
-        let mut k = 1u64;
-        while k * mtbf < out_len as u64 {
-            plan = if k % 2 == 1 { plan.kill(1, k * mtbf) } else { plan.revive(1, k * mtbf) };
-            k += 1;
-        }
         for (blabel, budget) in [("none", 0usize), ("full", full_budget)] {
-            let r = serve(ShardConfig::new(2, budget), Some(plan.clone()))?;
+            let r = next()?;
             let f = r.fault.clone().context("faulted run rendered no fault report")?;
             anyhow::ensure!(
                 f.device_losses >= 1,
@@ -1391,19 +1536,7 @@ pub fn load(h: &mut Harness) -> Result<()> {
     use crate::workload::TrafficGen;
 
     let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
-    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
-        Box::new(|| {
-            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
-            synth::tiny_model(backend, "synthetic-tiny")
-        })
-    } else {
-        let artifacts = h.artifacts.clone();
-        let backend = Arc::clone(&h.backend);
-        Box::new(move || {
-            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
-            StagedModel::load(Arc::clone(&backend), manifest)
-        })
-    };
+    let mk_model = shared_mk_model(&h.artifacts, &h.backend_name, smoke);
     let probe = mk_model()?;
     let manifest = probe.manifest.clone();
     let dims = manifest.model.clone();
@@ -1453,20 +1586,26 @@ pub fn load(h: &mut Harness) -> Result<()> {
         }
         server.run_to_completion()
     };
-    let by_default = serve_fifo(None)?;
-    let by_name = serve_fifo(Some("fifo"))?;
-    let legacy = {
-        let model = mk_model()?;
-        let sys = mk_sys(&model);
-        let mut engine = crate::coordinator::ServeEngine::with_config(
-            model,
-            policy.clone(),
-            sys,
-            PrefetchConfig::off(),
-            None,
-        )?;
-        crate::coordinator::scheduler::serve(&mut engine, eq_requests.clone())?
-    };
+    // The three equivalence serves are independent — fan them out too.
+    let eq_jobs: Vec<Box<dyn FnOnce() -> Result<Report> + Send + '_>> = vec![
+        Box::new(|| serve_fifo(None)),
+        Box::new(|| serve_fifo(Some("fifo"))),
+        Box::new(|| {
+            let model = mk_model()?;
+            let sys = mk_sys(&model);
+            let mut engine = crate::coordinator::ServeEngine::with_config(
+                model,
+                policy.clone(),
+                sys,
+                PrefetchConfig::off(),
+                None,
+            )?;
+            crate::coordinator::scheduler::serve(&mut engine, eq_requests.clone())
+        }),
+    ];
+    let mut eq = par::run_cells(h.workers, eq_jobs)?.into_iter();
+    let mut eq_next = || eq.next().context("fifo equivalence cell count mismatch");
+    let (by_default, by_name, legacy) = (eq_next()?, eq_next()?, eq_next()?);
     let pinned = reports_identical(&by_default, &by_name)
         && reports_identical(&by_default, &legacy)
         && by_default.sched.is_none()
@@ -1574,26 +1713,43 @@ pub fn load(h: &mut Harness) -> Result<()> {
         "  capacity {mu_req:.2} req/s | gold deadline {deadline:.4}s (2x uncongested p99 TTFT)"
     ));
 
-    let mut rows = Vec::new();
+    // Grid compute: traffic per factor is drawn once up front (the
+    // draws never depend on the scheduler), then every (factor, sched)
+    // point runs as an independent cell across the worker pool.
+    let mut factor_data = Vec::new();
     for &factor in factors {
         let mix = mix_for(factor, Some(deadline));
         let traffic = TrafficGen::generate(&mix, n_req, &eval)?;
         let tags: HashMap<u64, usize> =
             traffic.iter().map(|t| (t.request.id, t.tenant)).collect();
+        factor_data.push((factor, mix, traffic, tags));
+    }
+    let mut jobs = Vec::new();
+    for (_, mix, traffic, _) in &factor_data {
+        for sched in ["fifo", "slo"] {
+            let run_point = &run_point;
+            jobs.push(move || run_point(sched, mix, traffic));
+        }
+    }
+    let mut grid = par::run_cells(h.workers, jobs)?.into_iter();
+
+    let mut rows = Vec::new();
+    for (factor, mix, traffic, tags) in &factor_data {
+        let factor = *factor;
         let mut p99 = HashMap::new();
         let mut gp = HashMap::new();
         for sched in ["fifo", "slo"] {
-            let (r, door_shed) = run_point(sched, &mix, &traffic)?;
+            let (r, door_shed) = grid.next().context("load sweep cell count mismatch")?;
             let (queue_shed, preempts) = match &r.sched {
                 Some(s) => (s.shed as usize, s.preemptions),
                 None => (0, 0),
             };
             let shed = door_shed + queue_shed;
             let shed_rate = shed as f64 / traffic.len() as f64;
-            let g = goodput(&r, &tags, &mix);
+            let g = goodput(&r, tags, mix);
             gp.insert(sched, g);
             for (ti, tname) in [(0usize, "gold"), (1, "bulk")] {
-                let ttfts = tenant_ttfts(&r, &tags, ti);
+                let ttfts = tenant_ttfts(&r, tags, ti);
                 let (t50, t99) =
                     (percentile(&ttfts, 0.50), percentile(&ttfts, 0.99));
                 if ti == 0 {
@@ -1672,19 +1828,7 @@ pub fn load(h: &mut Harness) -> Result<()> {
 /// model with a tiny workload — the artifact-free CI path.
 pub fn elastic(h: &mut Harness) -> Result<()> {
     let smoke = h.smoke || !h.model_dir("mixtral-tiny").join("manifest.json").exists();
-    let mk_model: Box<dyn Fn() -> Result<StagedModel>> = if smoke {
-        Box::new(|| {
-            let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new());
-            synth::tiny_model(backend, "synthetic-tiny")
-        })
-    } else {
-        let artifacts = h.artifacts.clone();
-        let backend = Arc::clone(&h.backend);
-        Box::new(move || {
-            let manifest = Manifest::load(artifacts.join("mixtral-tiny"))?;
-            StagedModel::load(Arc::clone(&backend), manifest)
-        })
-    };
+    let mk_model = shared_mk_model(&h.artifacts, &h.backend_name, smoke);
     let probe = mk_model()?;
     let manifest = probe.manifest.clone();
     let dims = manifest.model.clone();
@@ -1737,10 +1881,24 @@ pub fn elastic(h: &mut Harness) -> Result<()> {
     let mut ela_cfg = lru_cfg.clone();
     ela_cfg.requant_budget_bytes = requant;
 
-    let lru = serve(lru_cfg.clone())?;
-    let lru_again = serve(lru_cfg)?;
-    let uni = serve(PolicyConfig::new("static-quant", uniform_bits, 0))?;
-    let ela = serve(ela_cfg)?;
+    // Four independent sims; the two zero-requant runs land in slots 0
+    // and 1, so the off-switch check diffs the same pair at any width.
+    let cells = vec![
+        lru_cfg.clone(),
+        lru_cfg,
+        PolicyConfig::new("static-quant", uniform_bits, 0),
+        ela_cfg,
+    ];
+    let jobs: Vec<_> = cells
+        .into_iter()
+        .map(|policy| {
+            let serve = &serve;
+            move || serve(policy)
+        })
+        .collect();
+    let mut results = par::run_cells(h.workers, jobs)?.into_iter();
+    let mut next = || results.next().context("elastic sweep cell count mismatch");
+    let (lru, lru_again, uni, ela) = (next()?, next()?, next()?, next()?);
 
     h.sink.line(format!(
         "== Elastic residency sweep ({}, out={out_len}{}): layered precision vs pure eviction ==",
@@ -1875,6 +2033,35 @@ pub fn run(name: &str, h: &mut Harness) -> Result<()> {
 mod tests {
     use super::*;
     use crate::synth;
+
+    /// Run one `--smoke` sweep at a given worker count and return the
+    /// full sink buffer.
+    fn smoke_sweep_buffer(name: &str, workers: usize) -> String {
+        let mut h = Harness::with_backend(
+            PathBuf::from("artifacts-that-do-not-exist"),
+            None,
+            false,
+            Arc::new(ReferenceBackend::new()),
+        )
+        .unwrap();
+        h.smoke = true;
+        h.workers = workers;
+        run(name, &mut h).unwrap();
+        h.sink.buffer().to_string()
+    }
+
+    #[test]
+    fn parallel_sweeps_match_sequential_byte_for_byte() {
+        // The parallel-sweep determinism contract: cells are collected
+        // by index and rendered in grid order, so a fanned-out run must
+        // reproduce the sequential report byte-for-byte — sink lines,
+        // contract checks, everything.
+        for name in ["elastic", "shard", "load"] {
+            let seq = smoke_sweep_buffer(name, 1);
+            let par4 = smoke_sweep_buffer(name, 4);
+            assert_eq!(seq, par4, "figure {name} --smoke diverged between --workers 1 and 4");
+        }
+    }
 
     #[test]
     fn parse_mat_key_roundtrips_and_rejects_malformed() {

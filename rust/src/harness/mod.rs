@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod figures;
 pub mod golden;
+pub mod par;
 pub mod report;
 
 pub use report::ReportSink;

@@ -1,0 +1,136 @@
+//! Deterministic fan-out for the figure sweeps.
+//!
+//! [`run_cells`] runs a vector of independent jobs across a small pool of
+//! scoped worker threads and returns their results **in submission
+//! order**.  Determinism is the contract: a sweep enumerates its grid
+//! cells sequentially, computes them here, then renders from the ordered
+//! results — so sink lines, CSV rows and every enforcing `ensure!` are
+//! byte-identical to a `--workers 1` run (pinned by figures.rs'
+//! `parallel_sweeps_match_sequential_byte_for_byte`).
+//!
+//! Jobs may borrow stack data (workloads, model factories): the pool is
+//! [`std::thread::scope`]d, so no `'static` bound is needed.  What they
+//! may *not* share is a backend — [`crate::backend::Backend`] is
+//! deliberately `!Sync` (stage caches are single-threaded), so each cell
+//! stages its model on a backend built inside the job.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Pool width when `--workers` is not given: the machine's available
+/// parallelism, capped — every cell stages its own model, so memory (not
+/// cores) bounds useful width.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Run `jobs` across `workers` threads; return results in job order.
+///
+/// * `workers <= 1` (or fewer than two jobs) runs everything inline on
+///   the caller's thread — the exact sequential path, no pool.
+/// * Workers claim jobs FIFO off a shared queue and write results into
+///   per-index slots, so the returned order never depends on thread
+///   scheduling.
+/// * On failure the **lowest-indexed** error is returned — the same one
+///   the sequential run would have surfaced.  Jobs still queued when an
+///   error lands are skipped; already-running cells finish.
+pub fn run_cells<T, F>(workers: usize, jobs: Vec<F>) -> Result<Vec<T>>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let n = jobs.len();
+    if workers <= 1 || n <= 1 {
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().collect());
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let failed = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Hold the lock only to claim; cells run unlocked.
+                let next = queue.lock().expect("cell queue poisoned").pop_front();
+                let Some((i, job)) = next else { break };
+                let r = job();
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("cell slot poisoned") = Some(r);
+            });
+        }
+    });
+    // Claims are FIFO, so every index below the first error was claimed
+    // and filled its slot — an empty slot can only sit above the error
+    // the loop returns first.
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().expect("cell slot poisoned") {
+            Some(r) => out.push(r?),
+            None => anyhow::bail!("sweep cell {i} was skipped after an earlier cell failed"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        // Later jobs finish first (they sleep less); order must not care.
+        let jobs: Vec<_> = (0..32)
+            .map(|i| {
+                move || -> Result<usize> {
+                    std::thread::sleep(std::time::Duration::from_micros((32 - i) as u64 * 50));
+                    Ok(i)
+                }
+            })
+            .collect();
+        let got = run_cells(4, jobs).unwrap();
+        assert_eq!(got, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let jobs: Vec<_> = (0..4).map(|i| move || -> Result<usize> { Ok(i * i) }).collect();
+        assert_eq!(run_cells(1, jobs).unwrap(), vec![0, 1, 4, 9]);
+    }
+
+    #[test]
+    fn the_lowest_indexed_error_wins() {
+        // Two failures land; the caller must see the one the sequential
+        // run would have hit first.  FIFO claiming guarantees cell 3 ran.
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || -> Result<usize> {
+                    if i == 3 || i == 11 {
+                        anyhow::bail!("cell {i} failed")
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = run_cells(4, jobs).unwrap_err().to_string();
+        assert_eq!(err, "cell 3 failed");
+    }
+
+    #[test]
+    fn jobs_may_borrow_stack_data() {
+        let data: Vec<usize> = (0..100).collect();
+        let jobs: Vec<_> = data
+            .chunks(10)
+            .map(|c| move || -> Result<usize> { Ok(c.iter().sum()) })
+            .collect();
+        let got = run_cells(3, jobs).unwrap();
+        assert_eq!(got.iter().sum::<usize>(), 4950);
+        assert_eq!(got.len(), 10);
+    }
+}

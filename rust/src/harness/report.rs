@@ -43,6 +43,12 @@ impl ReportSink {
         Ok(())
     }
 
+    /// Everything `line` has emitted so far — the parallel-sweep
+    /// differential test diffs two of these byte-for-byte.
+    pub fn buffer(&self) -> &str {
+        &self.buffer
+    }
+
     /// Flush the accumulated text report.
     pub fn flush(&self, name: &str) -> Result<()> {
         if let Some(d) = &self.out_dir {

@@ -10,7 +10,7 @@
 //! beam eval   --model mixtral-tiny --policy beam --bits 2 [--seqs N]
 //!             [--comp-tag TAG] [--method hqq|gptq] [--positions 0,1]
 //! beam figure <fig1|fig2|fig3|fig4|fig6|fig7|fig8|tab2|prefetch|adaptive|shard|fault|load|elastic|golden|all>
-//!             [--out DIR] [--full] [--smoke] [--bless]
+//!             [--out DIR] [--full] [--smoke] [--bless] [--workers N]
 //! beam bench  [--json] [--out FILE] [--quick]
 //! beam info   --model mixtral-tiny
 //! beam daemon --socket PATH [--audit FILE] [beamd flags…]
@@ -42,7 +42,7 @@
 //! substreams.  `figure load --smoke` runs the overload sweep and checks
 //! the fifo-equivalence + SLO win contracts (the CI path); `beam bench`
 //! runs the pinned wall-clock micro/serving suite (baseline:
-//! `rust/benches/BENCH_8.json`).
+//! `rust/benches/BENCH_10.json`).
 //!
 //! `beam daemon` / `beam ctl` are the §14 live control plane — the
 //! `beamd`/`beamctl` bin targets reachable through the main CLI (same
@@ -130,7 +130,7 @@ const EVAL_FLAGS: &[&str] = &[
     "seqs",
     "top-n",
 ];
-const FIGURE_FLAGS: &[&str] = &["bless", "full", "out", "smoke"];
+const FIGURE_FLAGS: &[&str] = &["bless", "full", "out", "smoke", "workers"];
 const BENCH_FLAGS: &[&str] = &["json", "out", "quick"];
 const INFO_FLAGS: &[&str] = &["model"];
 
@@ -489,15 +489,20 @@ fn main() -> Result<()> {
                 .context("figure name required (fig1..fig8, tab2, all)")?
                 .clone();
             let out = args.opt("out").map(PathBuf::from);
-            let backend = beam_moe::backend::by_name(&args.get("backend", "default"))?;
+            let backend_name = args.get("backend", "default");
+            let backend = beam_moe::backend::by_name(&backend_name)?;
             let mut h = Harness::with_backend(artifacts, out, args.has("full"), backend)?;
             h.smoke = args.has("smoke");
             h.bless = args.has("bless");
+            // Grid sweeps fan cells across this many threads; output is
+            // byte-identical at any width (`--workers 1` = sequential).
+            h.workers = args.num("workers", beam_moe::harness::par::default_workers())?;
+            h.backend_name = backend_name;
             figures::run(&name, &mut h)
         }
         "bench" => {
             // Artifact-free pinned suite (synthetic model only); the
-            // committed baseline lives in rust/benches/BENCH_8.json.
+            // committed baseline lives in rust/benches/BENCH_10.json.
             args.ensure_known("bench", BENCH_FLAGS)?;
             let quick = args.has("quick");
             let records = beam_moe::harness::bench::run_suite(quick)?;

@@ -473,16 +473,12 @@ impl ExpertCache {
     /// phantom hit.  Returns how many levels were dropped (the engine
     /// requeues them as demand fetches).
     pub fn drop_in_flight_from(&mut self, src: usize, now: VTime) -> usize {
-        let doomed: Vec<(PayloadKey, PayloadKind)> = self
-            .entries
-            .iter()
-            .flat_map(|(k, ls)| {
-                ls.iter()
-                    .filter(|l| l.src == Some(src) && l.ready_at > now)
-                    .map(|l| (*k, l.kind))
-                    .collect::<Vec<_>>()
-            })
-            .collect();
+        let mut doomed: Vec<(PayloadKey, PayloadKind)> = Vec::new();
+        for (k, ls) in &self.entries {
+            for l in ls.iter().filter(|l| l.src == Some(src) && l.ready_at > now) {
+                doomed.push((*k, l.kind));
+            }
+        }
         for (key, kind) in &doomed {
             self.remove_level(key, *kind);
         }
@@ -494,11 +490,13 @@ impl ExpertCache {
     /// preserved (the run continues; only the HBM contents are gone).
     /// Still-unused speculative bytes are charged as wasted.
     pub fn purge(&mut self) {
-        let doomed: Vec<(PayloadKey, PayloadKind)> = self
-            .entries
-            .iter()
-            .flat_map(|(k, ls)| ls.iter().map(|l| (*k, l.kind)).collect::<Vec<_>>())
-            .collect();
+        let mut doomed: Vec<(PayloadKey, PayloadKind)> =
+            Vec::with_capacity(self.entries.values().map(Vec::len).sum());
+        for (k, ls) in &self.entries {
+            for l in ls {
+                doomed.push((*k, l.kind));
+            }
+        }
         for (key, kind) in &doomed {
             self.remove_level(key, *kind);
         }
@@ -517,15 +515,24 @@ impl ExpertCache {
 
     /// Every pinned replica level, sorted for deterministic reconcile.
     pub fn pinned_keys(&self) -> Vec<(PayloadKey, PayloadKind)> {
-        let mut keys: Vec<(PayloadKey, PayloadKind)> = self
-            .entries
-            .iter()
-            .flat_map(|(k, ls)| {
-                ls.iter().filter(|l| l.pinned).map(|l| (*k, l.kind)).collect::<Vec<_>>()
-            })
-            .collect();
-        keys.sort_unstable();
+        let mut keys = Vec::new();
+        self.pinned_keys_into(&mut keys);
         keys
+    }
+
+    /// [`ExpertCache::pinned_keys`] into a caller-owned scratch Vec — the
+    /// replica-reconcile path runs once per decode-step boundary per
+    /// device, and the old `flat_map(... .collect::<Vec<_>>())` shape
+    /// allocated one inner Vec per cache entry on top of the result Vec.
+    /// The scratch is cleared, filled flat (no inner collects) and sorted.
+    pub fn pinned_keys_into(&self, out: &mut Vec<(PayloadKey, PayloadKind)>) {
+        out.clear();
+        for (k, ls) in &self.entries {
+            for l in ls.iter().filter(|l| l.pinned) {
+                out.push((*k, l.kind));
+            }
+        }
+        out.sort_unstable();
     }
 
     /// Bytes held by pinned replicas (the reserved region).
@@ -782,6 +789,29 @@ mod tests {
         c.insert(key(1), Q2, payload(), 10);
         let pins = c.pinned_keys();
         assert_eq!(pins.iter().map(|(k, _)| k.expert).collect::<Vec<_>>(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn pinned_keys_into_reuses_scratch_and_matches() {
+        // Pin for the flat_map-without-inner-collect rewrite: the scratch
+        // variant must produce exactly the allocating variant's sorted
+        // output, including clearing whatever the scratch held before.
+        let mut c = ExpertCache::new(1000);
+        for e in [5usize, 1, 4] {
+            c.insert_pinned(key(e), Q2, payload(), 10, 0.0);
+        }
+        c.insert_pinned(key(1), PayloadKind::Comp(2), payload(), 10, 0.0);
+        c.insert(key(2), Q2, payload(), 10); // unpinned: excluded
+        let mut scratch = vec![(key(99), PayloadKind::Fp16)]; // stale junk
+        c.pinned_keys_into(&mut scratch);
+        assert_eq!(scratch, c.pinned_keys());
+        assert_eq!(scratch.len(), 4);
+        assert!(scratch.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // And again after an unpin — the scratch resets, never accumulates.
+        assert!(c.unpin(&key(5), Q2));
+        c.pinned_keys_into(&mut scratch);
+        assert_eq!(scratch, c.pinned_keys());
+        assert_eq!(scratch.len(), 3);
     }
 
     #[test]

@@ -66,7 +66,14 @@ impl ExpertPredictor for EwmaPopularity {
             return Vec::new();
         }
         let n_active = ctx.active.iter().filter(|&&a| a).count();
-        let cap = (n_active * ctx.top_k).clamp(ctx.top_k, ctx.n_experts);
+        // Zero active rows route nothing next step — predicting anyway
+        // would speculate top_k payloads no slot will touch.
+        if n_active == 0 {
+            return Vec::new();
+        }
+        // max-then-min, not `clamp`: a dense config can route
+        // top_k > n_experts, where clamp's min ≤ max precondition panics.
+        let cap = (n_active * ctx.top_k).max(ctx.top_k).min(ctx.n_experts);
         rank_scores(&self.scores[ctx.layer], cap)
     }
 }
@@ -117,6 +124,51 @@ mod tests {
         for e in 0..4 {
             assert_eq!(a.score(0, e), b.score(0, e));
         }
+    }
+
+    #[test]
+    fn top_k_beyond_n_experts_does_not_panic() {
+        // Regression: `(n_active * top_k).clamp(top_k, n_experts)` panicked
+        // (clamp requires min ≤ max) whenever top_k > n_experts.
+        let mut p = EwmaPopularity::new(1, 2, 0.5);
+        let probs = vec![0.7f32, 0.3];
+        let active = vec![true];
+        p.observe(&LayerObservation {
+            step: 0,
+            layer: 0,
+            n_experts: 2,
+            top_k: 2,
+            probs: &probs,
+            active: &active,
+        });
+        let ranked = p.predict(&PredictCtx {
+            step: 1,
+            layer: 0,
+            n_experts: 2,
+            top_k: 4,
+            active: &active,
+            lookahead_probs: None,
+        });
+        assert_eq!(ranked.len(), 2, "prediction caps at n_experts");
+        assert_eq!(ranked[0].expert, 0);
+    }
+
+    #[test]
+    fn zero_active_rows_predict_nothing() {
+        // Regression: with every row drained the old cap degenerated to
+        // top_k, speculating payloads no slot would ever touch.
+        let mut p = EwmaPopularity::new(1, 4, 0.5);
+        let probs = vec![0.7f32, 0.1, 0.1, 0.1];
+        p.observe(&obs(0, &probs, &[true]));
+        let ranked = p.predict(&PredictCtx {
+            step: 1,
+            layer: 0,
+            n_experts: 4,
+            top_k: 2,
+            active: &[false, false],
+            lookahead_probs: None,
+        });
+        assert!(ranked.is_empty(), "no active rows ⇒ no prediction");
     }
 
     #[test]

@@ -36,19 +36,44 @@ pub fn dequantize_grouped(
     d_out: usize,
     group_size: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    dequantize_rows_into(codes, scale, zero, d_in, d_out, group_size, 0, d_in, &mut out);
+    out
+}
+
+/// Dequantize rows `[row0, row1)` of a `(d_in, d_out)` code matrix into
+/// `out` (cleared and resized to `(row1 - row0) * d_out`).  The strip form
+/// of [`dequantize_grouped`] — per-element math is identical, so a
+/// strip-by-strip sweep reproduces the full matrix bit-for-bit — letting
+/// the reference backend tile dequant-then-GEMM without materializing all
+/// `d_in * d_out` floats at once.
+#[allow(clippy::too_many_arguments)]
+pub fn dequantize_rows_into(
+    codes: &[u8],
+    scale: &[f32],
+    zero: &[f32],
+    d_in: usize,
+    d_out: usize,
+    group_size: usize,
+    row0: usize,
+    row1: usize,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(codes.len(), d_in * d_out);
     let groups = d_in / group_size;
     assert_eq!(scale.len(), groups * d_out);
     assert_eq!(zero.len(), groups * d_out);
-    let mut out = vec![0f32; d_in * d_out];
-    for i in 0..d_in {
+    assert!(row0 <= row1 && row1 <= d_in, "strip [{row0}, {row1}) out of {d_in} rows");
+    out.clear();
+    out.resize((row1 - row0) * d_out, 0f32);
+    for i in row0..row1 {
         let g = i / group_size;
-        for j in 0..d_out {
+        let dst = &mut out[(i - row0) * d_out..(i - row0 + 1) * d_out];
+        for (j, o) in dst.iter_mut().enumerate() {
             let c = codes[i * d_out + j] as f32;
-            out[i * d_out + j] = (c - zero[g * d_out + j]) * scale[g * d_out + j];
+            *o = (c - zero[g * d_out + j]) * scale[g * d_out + j];
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -91,6 +116,24 @@ mod tests {
         let codes = vec![0u8, 1, 2, 3];
         let out = dequantize_grouped(&codes, &[1.0, 1.0], &[0.0, 0.0], 2, 2, 2);
         assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn strips_concatenate_to_the_full_matrix() {
+        // Any strip partition must reproduce dequantize_grouped exactly —
+        // the invariant the backend's tiled GEMM rests on.
+        let codes: Vec<u8> = (0..24).map(|v| v % 4).collect(); // (6, 4)
+        let scale = vec![0.5f32, 1.0, 2.0, 4.0, 0.25, 3.0, 1.5, 0.75];
+        let zero = vec![1.0f32, 0.0, 2.0, 1.0, 0.5, 1.5, 0.0, 2.0];
+        let full = dequantize_grouped(&codes, &scale, &zero, 6, 4, 3);
+        let mut strip = Vec::new();
+        for (row0, row1) in [(0, 2), (2, 5), (5, 6)] {
+            dequantize_rows_into(&codes, &scale, &zero, 6, 4, 3, row0, row1, &mut strip);
+            assert_eq!(strip, full[row0 * 4..row1 * 4], "strip [{row0}, {row1})");
+        }
+        // Scratch reuse across differently-sized strips leaves no stale tail.
+        dequantize_rows_into(&codes, &scale, &zero, 6, 4, 3, 0, 1, &mut strip);
+        assert_eq!(strip.len(), 4);
     }
 
     #[test]
